@@ -1,0 +1,146 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   A1  NMS restarts on/off (TensorTuner-style vs modernised)
+//!   A2  BO acquisition optimism alpha (pure exploit -> pure explore)
+//!   A3  BO candidate-pool size
+//!   A4  extension baselines (SA, coordinate descent) vs the paper's three
+//!   A5  measurement-noise sensitivity of each algorithm
+//!
+//! Each table reports best-found throughput (median over seeds) after the
+//! paper's 50-iteration budget on ResNet50-INT8 + BERT-FP32.
+//!
+//!     cargo bench --bench ablations
+
+use tftune::algorithms::{Algorithm, BayesOpt, NelderMead, Tuner};
+use tftune::evaluator::{tune, SimEvaluator};
+use tftune::figures::print_table;
+use tftune::sim::ModelId;
+use tftune::util::stats;
+
+const ITERS: usize = 50;
+const SEEDS: [u64; 5] = [0, 1, 2, 3, 4];
+
+fn run_with(mk: impl Fn(u64) -> Box<dyn Tuner>, model: ModelId, sigma: f64) -> f64 {
+    let bests: Vec<f64> = SEEDS
+        .iter()
+        .map(|&seed| {
+            let mut t = mk(seed);
+            let mut eval = SimEvaluator::with_sigma(model, seed, sigma);
+            let h = tune(t.as_mut(), &mut eval, ITERS).unwrap();
+            h.best().unwrap().value
+        })
+        .collect();
+    stats::median(&bests)
+}
+
+fn main() -> anyhow::Result<()> {
+    let models = [ModelId::Resnet50Int8, ModelId::BertFp32];
+    let sigma = tftune::sim::noise::DEFAULT_SIGMA;
+
+    // A1: NMS restarts.
+    let mut rows = Vec::new();
+    for model in models {
+        let space = model.space();
+        let plain = run_with(
+            |s| Box::new(NelderMead::new(space.clone(), s)),
+            model,
+            sigma,
+        );
+        let restart = run_with(
+            |s| Box::new(NelderMead::new(space.clone(), s).with_restarts(true)),
+            model,
+            sigma,
+        );
+        rows.push(vec![
+            model.name().to_string(),
+            format!("{plain:.1}"),
+            format!("{restart:.1}"),
+            format!("{:+.2}%", (restart / plain - 1.0) * 100.0),
+        ]);
+    }
+    print_table(
+        "A1 — NMS restart ablation (best ex/s, median over seeds)",
+        &["model", "TensorTuner-style (no restart)", "with restarts", "delta"],
+        &rows,
+    );
+
+    // A2: BO acquisition alpha. Uses the public with_acq_alpha knob.
+    let mut rows = Vec::new();
+    for model in models {
+        let space = model.space();
+        let mut row = vec![model.name().to_string()];
+        for alpha in [0.0, 0.5, 1.5, 3.0] {
+            let v = run_with(
+                |s| Box::new(BayesOpt::new(space.clone(), s).with_acq_alpha(alpha)),
+                model,
+                sigma,
+            );
+            row.push(format!("{v:.1}"));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "A2 — BO acquisition optimism (best ex/s by alpha)",
+        &["model", "alpha=0 (exploit)", "alpha=0.5", "alpha=1.5 (default)", "alpha=3 (explore)"],
+        &rows,
+    );
+
+    // A3: BO candidate-pool size.
+    let mut rows = Vec::new();
+    for model in models {
+        let space = model.space();
+        let mut row = vec![model.name().to_string()];
+        for cands in [32usize, 128, 512] {
+            let v = run_with(
+                |s| Box::new(BayesOpt::new(space.clone(), s).with_candidates(cands)),
+                model,
+                sigma,
+            );
+            row.push(format!("{v:.1}"));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "A3 — BO candidate-pool size (best ex/s)",
+        &["model", "32", "128", "512 (default)"],
+        &rows,
+    );
+
+    // A4: extension baselines vs the paper's algorithms.
+    let mut rows = Vec::new();
+    for model in models {
+        let space = model.space();
+        let mut row = vec![model.name().to_string()];
+        for alg in [Algorithm::Bo, Algorithm::Ga, Algorithm::Nms, Algorithm::Sa, Algorithm::Coord, Algorithm::Random] {
+            let v = run_with(|s| alg.build(&space, s), model, sigma);
+            row.push(format!("{v:.1}"));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "A4 — extension baselines (best ex/s, median over seeds)",
+        &["model", "BO", "GA", "NMS", "SA", "CoordDesc", "Random"],
+        &rows,
+    );
+
+    // A5: noise sensitivity.
+    let mut rows = Vec::new();
+    for model in [ModelId::Resnet50Int8] {
+        let space = model.space();
+        for alg in Algorithm::all_paper() {
+            let mut row = vec![format!("{} / {}", model.name(), alg.name())];
+            for s in [0.0, 0.015, 0.05] {
+                let v = run_with(|seed| alg.build(&space, seed), model, s);
+                row.push(format!("{v:.1}"));
+            }
+            rows.push(row);
+        }
+    }
+    print_table(
+        "A5 — measurement-noise sensitivity (best ex/s by noise sigma)",
+        &["model / algorithm", "sigma=0", "sigma=1.5% (paper-ish)", "sigma=5%"],
+        &rows,
+    );
+
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Bench: regenerate Fig. 5 (tuning curves for 6 models × {BO, GA, NMS})
+//! and report per-algorithm engine overhead (time per tuning iteration,
+//! excluding the system under test — on the real testbed each evaluation
+//! costs ~1 minute, so engine overhead must be negligible).
+//!
+//!     cargo bench --bench fig5_tuning_curves
+
+use tftune::algorithms::Algorithm;
+use tftune::config::SurrogateKind;
+use tftune::evaluator::SimEvaluator;
+use tftune::figures::{fig5, OUT_DIR};
+use tftune::sim::ModelId;
+use tftune::util::bench::Bencher;
+
+fn main() -> anyhow::Result<()> {
+    let iters = 50;
+    let seeds = [0u64, 1, 2];
+
+    println!(
+        "== Fig. 5 regeneration: 6 models x 3 algorithms x {} seeds x {iters} iters ==",
+        seeds.len()
+    );
+    let t0 = std::time::Instant::now();
+    let curves = fig5::run_figure(iters, &seeds, SurrogateKind::Native, OUT_DIR.as_ref())?;
+    let wall = t0.elapsed().as_secs_f64();
+    fig5::print_summary(&curves);
+    println!("\nregenerated in {wall:.2}s; CSVs under {OUT_DIR}/");
+
+    // Engine overhead per iteration (propose+observe with sim evaluation).
+    println!("\n== engine overhead per tuning iteration (ResNet50-INT8) ==");
+    let model = ModelId::Resnet50Int8;
+    let space = model.space();
+    let mut b = Bencher::new(200, 1200);
+    for alg in [Algorithm::Bo, Algorithm::Ga, Algorithm::Nms, Algorithm::Random] {
+        let mut tuner = alg.build(&space, 5);
+        let mut eval = SimEvaluator::new(model, 5);
+        use tftune::evaluator::Evaluator;
+        b.bench(&format!("iteration/{}", alg.name()), || {
+            let cfg = tuner.propose();
+            let v = eval.evaluate(&cfg).unwrap();
+            tuner.observe(&cfg, v);
+            v
+        });
+    }
+    println!("\n(paper context: a real evaluation is ~60 s; all engines are <1e-3 of that)");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Bench: regenerate Fig. 6 (exhaustive 5-parameter sweep of
+//! ResNet50-INT8), validate the paper's four qualitative observations, and
+//! measure simulator evaluation throughput (the substrate's hot path).
+//!
+//!     cargo bench --bench fig6_exhaustive_sweep
+
+use tftune::figures::{fig6, OUT_DIR};
+use tftune::sim::{ModelId, SimWorkload};
+use tftune::util::bench::Bencher;
+use tftune::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== Fig. 6 regeneration: coarsened ~50k-point sweep ==");
+    let t0 = std::time::Instant::now();
+    let points = fig6::run_sweep(ModelId::Resnet50Int8, false);
+    let wall = t0.elapsed().as_secs_f64();
+    let findings = fig6::analyze(&points);
+    fig6::print_findings(&findings);
+    println!(
+        "\nsweep: {} points in {wall:.2}s ({:.0} evaluations/s)",
+        points.len(),
+        points.len() as f64 / wall
+    );
+    fig6::write_csv(&points, OUT_DIR.as_ref())?;
+
+    // Paper-shape assertions, loudly.
+    assert!(findings.blocktime0_best, "FAIL: blocktime=0 not the best marginal");
+    assert!(
+        findings.omp_influence > 5.0 * findings.intra_influence,
+        "FAIL: intra_op influence not negligible vs OMP"
+    );
+    assert!(
+        findings.omp_influence > 2.0 * findings.batch_influence,
+        "FAIL: batch influence not second-order vs OMP"
+    );
+    println!("paper observations: blocktime0_best ok, omp >> intra ok, omp >> batch ok");
+
+    // Per-model single-evaluation latency (the L3 §Perf target: <= 10 µs).
+    println!("\n== simulator evaluation latency per model ==");
+    let mut b = Bencher::new(200, 1000);
+    for model in ModelId::all() {
+        let w = SimWorkload::noiseless(model);
+        let space = model.space();
+        let mut rng = Rng::new(1);
+        let cfgs: Vec<_> = (0..64).map(|_| space.random(&mut rng)).collect();
+        let mut i = 0;
+        b.bench(&format!("sim-eval/{}", model.short_name()), || {
+            i = (i + 1) % cfgs.len();
+            w.true_throughput(&cfgs[i])
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Bench: every hot path in the stack, for the §Perf pass (DESIGN.md §9):
+//!
+//!   - simulator evaluation (L3 substrate)
+//!   - native GP fit+score vs the AOT HLO GP via PJRT (L2+L1), by history size
+//!   - BO / GA / NMS propose cost
+//!   - candidate generation + argmax
+//!   - host/target TCP round trip
+//!   - history bookkeeping & JSONL encode
+//!
+//!     cargo bench --bench hot_paths
+
+use tftune::algorithms::{Algorithm, BayesOpt, Tuner};
+use tftune::evaluator::{Evaluator, RemoteEvaluator, SimEvaluator};
+use tftune::gp::{GpHyper, NativeSurrogate, Surrogate};
+use tftune::history::random_history;
+use tftune::runtime::GpSurrogate;
+use tftune::server::TargetServer;
+use tftune::sim::{ModelId, SimWorkload};
+use tftune::util::bench::Bencher;
+use tftune::util::Rng;
+
+fn gp_problem(rng: &mut Rng, n: usize, c: usize) -> (Vec<Vec<f64>>, Vec<f64>, Vec<Vec<f64>>) {
+    let x: Vec<Vec<f64>> = (0..n).map(|_| (0..5).map(|_| rng.f64()).collect()).collect();
+    let y: Vec<f64> = x.iter().map(|p| p[0] - p[1]).collect();
+    let cand: Vec<Vec<f64>> = (0..c).map(|_| (0..5).map(|_| rng.f64()).collect()).collect();
+    (x, y, cand)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new(300, 1500);
+    let mut rng = Rng::new(0xBEEF);
+
+    println!("== L3 simulator ==");
+    let model = ModelId::Resnet50Int8;
+    let space = model.space();
+    let w = SimWorkload::noiseless(model);
+    let cfgs: Vec<_> = (0..128).map(|_| space.random(&mut rng)).collect();
+    let mut i = 0;
+    b.bench("sim/true_throughput(resnet50-int8)", || {
+        i = (i + 1) % cfgs.len();
+        w.true_throughput(&cfgs[i])
+    });
+
+    println!("\n== GP surrogate: native vs AOT HLO (PJRT), 512 candidates ==");
+    for n in [8usize, 32, 64] {
+        let (x, y, cand) = gp_problem(&mut rng, n, 512);
+        let mut native = NativeSurrogate;
+        b.bench(&format!("gp-native/fit_score n={n}"), || {
+            native.fit_score(&x, &y, &cand, GpHyper::default(), 1.5, 1.0).unwrap().gain[0]
+        });
+        match GpSurrogate::open_default() {
+            Ok(mut hlo) => {
+                b.bench(&format!("gp-hlo-pjrt/fit_score n={n}"), || {
+                    hlo.fit_score(&x, &y, &cand, GpHyper::default(), 1.5, 1.0).unwrap().gain[0]
+                });
+            }
+            Err(e) => println!("  (skipping HLO surrogate: {e})"),
+        }
+    }
+
+    println!("\n== engine propose/observe ==");
+    for alg in [Algorithm::Bo, Algorithm::Ga, Algorithm::Nms, Algorithm::Random] {
+        let mut tuner = alg.build(&space, 1);
+        let mut eval = SimEvaluator::new(model, 1);
+        b.bench(&format!("engine/{}", alg.name()), || {
+            let cfg = tuner.propose();
+            let v = eval.evaluate(&cfg).unwrap();
+            tuner.observe(&cfg, v);
+            v
+        });
+    }
+    if let Ok(hlo) = GpSurrogate::open_default() {
+        let mut bo = BayesOpt::with_surrogate(space.clone(), 2, hlo);
+        let mut eval = SimEvaluator::new(model, 2);
+        b.bench("engine/bo-hlo-surrogate", || {
+            let cfg = bo.propose();
+            let v = eval.evaluate(&cfg).unwrap();
+            bo.observe(&cfg, v);
+            v
+        });
+    }
+
+    println!("\n== host/target protocol round trip (localhost TCP) ==");
+    {
+        let server = TargetServer::bind(
+            "127.0.0.1:0",
+            space.clone(),
+            Box::new(SimEvaluator::new(model, 3)),
+        )?;
+        let (addr, handle) = server.spawn()?;
+        let mut remote = RemoteEvaluator::connect(&addr.to_string(), space.clone())?;
+        let cfg = space.random(&mut rng);
+        b.bench("protocol/evaluate-round-trip", || remote.evaluate(&cfg).unwrap());
+        remote.shutdown()?;
+        let _ = handle.join();
+    }
+
+    println!("\n== bookkeeping ==");
+    let h = random_history(&space, 50, 1);
+    b.bench("history/best_curve(50)", || h.best_curve().len());
+    b.bench("history/to_jsonl(50)", || h.to_jsonl(&space).len());
+    b.bench("space/random+to_unit+from_unit", || {
+        let c = space.random(&mut rng);
+        let u = space.to_unit(&c);
+        space.from_unit(&u)[0]
+    });
+
+    println!("\ndone; see EXPERIMENTS.md §Perf for targets and history.");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! The paper's Fig. 4 deployment: the optimization framework (host) and
+//! the system under test (target) are separate processes talking over
+//! TCP, so the tuner's compute cannot perturb the measurements.
+//!
+//! This example runs the target daemon on a background thread, then tunes
+//! BERT-FP32 over the wire with all three paper algorithms.
+//!
+//!     cargo run --release --example distributed_tuning
+
+use anyhow::Result;
+use tftune::algorithms::Algorithm;
+use tftune::evaluator::{tune, Evaluator, RemoteEvaluator, SimEvaluator};
+use tftune::server::TargetServer;
+use tftune::sim::ModelId;
+
+fn main() -> Result<()> {
+    let model = ModelId::BertFp32;
+    let space = model.space();
+
+    // Target side: the daemon that applies configs and measures.
+    let server = TargetServer::bind(
+        "127.0.0.1:0",
+        space.clone(),
+        Box::new(SimEvaluator::new(model, 42)),
+    )?;
+    let (addr, handle) = server.spawn()?;
+    println!("target daemon listening on {addr} ({})", model.name());
+
+    // Host side: one connection per algorithm engine.
+    let mut last = None;
+    for alg in Algorithm::all_paper() {
+        let mut remote = RemoteEvaluator::connect(&addr.to_string(), space.clone())?;
+        println!("\nhost connected to {}", remote.describe());
+        let mut tuner = alg.build(&space, 7);
+        let t0 = std::time::Instant::now();
+        let history = tune(tuner.as_mut(), &mut remote, 25)?;
+        let best = history.best().unwrap();
+        println!(
+            "{:<24} best {:>7.1} examples/s at iter {:>2}  ({} evals over TCP in {:.2}s)",
+            alg.name(),
+            best.value,
+            best.iteration,
+            history.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        println!("  best config: {}", space.config_to_json(&best.config));
+        last = Some(remote);
+    }
+
+    // Shut the daemon down cleanly and report its evaluation count.
+    last.unwrap().shutdown()?;
+    let served = handle.join().expect("server thread")?;
+    println!("\ntarget daemon served {served} evaluations total");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Fig. 6 exhaustive sweep of ResNet50-INT8 across all five parameters —
+//! the ~50k-point grid the paper says took "close to a month of CPU time"
+//! on the real testbed. On the simulator substrate it takes seconds, which
+//! is exactly why the paper needs sample-efficient tuners for the real
+//! system (each real evaluation costs ~1 minute).
+//!
+//!     cargo run --release --example exhaustive_sweep [--fine]
+
+use anyhow::Result;
+use tftune::figures::{fig6, OUT_DIR};
+use tftune::sim::ModelId;
+use tftune::space;
+
+fn main() -> Result<()> {
+    let fine = std::env::args().any(|a| a == "--fine");
+    let grid = fig6::sweep_space(fine);
+    println!(
+        "sweeping ResNet50-INT8 over {} grid points ({})",
+        grid.size(),
+        if fine { "full Table-1 grid" } else { "paper-scale coarsened grid" }
+    );
+
+    let t0 = std::time::Instant::now();
+    let points = fig6::run_sweep(ModelId::Resnet50Int8, fine);
+    let secs = t0.elapsed().as_secs_f64();
+
+    let findings = fig6::analyze(&points);
+    fig6::print_findings(&findings);
+
+    // The marginal curves behind the paper's Fig. 6 reading.
+    println!("\nOMP_NUM_THREADS marginal (mean throughput):");
+    for (v, t) in fig6::marginal(&points, space::OMP_THREADS).iter().step_by(4) {
+        println!("  omp={v:>2}: {t:>8.1} ex/s");
+    }
+    println!("KMP_BLOCKTIME marginal:");
+    for (v, t) in fig6::marginal(&points, space::BLOCKTIME) {
+        println!("  blocktime={v:>3}: {t:>8.1} ex/s");
+    }
+
+    let path = fig6::write_csv(&points, OUT_DIR.as_ref())?;
+    println!(
+        "\n{} points in {secs:.2}s here ({:.0} evals/s) vs ~{:.0} days on the paper's testbed",
+        points.len(),
+        points.len() as f64 / secs,
+        findings.paper_equiv_days
+    );
+    println!("csv: {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: tune ResNet50-INT8's five threading parameters with
+//! Bayesian optimization in 30 evaluations and compare against the
+//! TensorFlow-style default configuration.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the AOT HLO GP artifact when `artifacts/` exists (the production
+//! path: L1 Pallas kernel + L2 JAX graph via PJRT), the native GP
+//! otherwise.
+
+use anyhow::Result;
+use tftune::algorithms::Algorithm;
+use tftune::config::{SurrogateKind, TuneConfig};
+use tftune::sim::{ModelId, SimWorkload};
+
+fn main() -> Result<()> {
+    let model = ModelId::Resnet50Int8;
+    let space = model.space();
+
+    // The baseline a non-savvy user gets: TF defaults (inter=2,
+    // intra=#cores) with the OpenMP guide's blocktime recommendation.
+    let default_cfg = vec![2, 48, 64, 200, 48];
+    let baseline = SimWorkload::noiseless(model).true_throughput(&default_cfg);
+    println!("model: {}", model.name());
+    println!("default config {:?} -> {baseline:.1} examples/s", default_cfg);
+
+    let surrogate = if tftune::runtime::find_artifacts_dir().is_some() {
+        println!("using the AOT HLO GP surrogate (PJRT)");
+        SurrogateKind::Hlo
+    } else {
+        println!("artifacts/ not found; using the native GP surrogate");
+        SurrogateKind::Native
+    };
+
+    let cfg = TuneConfig {
+        model,
+        algorithm: Algorithm::Bo,
+        iterations: 30,
+        seed: 0,
+        surrogate,
+        ..Default::default()
+    };
+    let history = cfg.run()?;
+
+    println!("\niter  measured(ex/s)  best-so-far");
+    let best_curve = history.best_curve();
+    for (e, b) in history.iter().zip(&best_curve) {
+        println!("{:>4}  {:>14.1}  {:>11.1}", e.iteration, e.value, b);
+    }
+
+    let best = history.best().unwrap();
+    println!("\nbest config: {}", space.config_to_json(&best.config));
+    println!(
+        "tuned {:.1} vs default {baseline:.1} examples/s  ({:.2}x speedup in {} evaluations)",
+        best.value,
+        best.value / baseline,
+        history.len()
+    );
+    Ok(())
+}

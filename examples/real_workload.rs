@@ -1,0 +1,73 @@
+//! End-to-end validation on a REAL workload (DESIGN.md §2): the system
+//! under test is the AOT-compiled MLP executed via PJRT, and the objective
+//! is *measured* examples/second — every layer of the stack composes:
+//!
+//!   L1 Pallas RBF kernel ─┐
+//!   L2 JAX GP graph      ─┴─> gp.hlo.txt ──> PJRT ──> BO engine (L3)
+//!   L2 JAX MLP workload  ───> workload_b*.hlo.txt ─> PJRT ─> evaluator
+//!
+//! The tuner picks the batch size; the evaluator times real executions.
+//! Reports the tuning trace, the measured per-batch throughput table, the
+//! achieved FLOP/s, and the result is recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example real_workload
+
+use anyhow::Result;
+use tftune::algorithms::BayesOpt;
+use tftune::evaluator::{tune, Evaluator, RealWorkloadEvaluator};
+use tftune::runtime::{GpSurrogate, Runtime, WorkloadRunner};
+
+fn main() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let runner = WorkloadRunner::load(&rt)?;
+    println!("loaded real workload: MLP {}→…→{} at batches {:?}", runner.d_in, runner.d_out, runner.batches);
+
+    // Sanity: outputs are a probability simplex.
+    let out = runner.run_once(runner.batches[0])?;
+    let s: f32 = out[..runner.d_out].iter().sum();
+    anyhow::ensure!((s - 1.0).abs() < 1e-3, "workload output not a simplex (sum {s})");
+
+    // Ground truth: measure every batch variant directly.
+    println!("\nmeasured throughput per compiled batch size (20 reps each):");
+    let mut evaluator = RealWorkloadEvaluator::new(runner, 20);
+    let space = evaluator.space();
+    let mut truth = Vec::new();
+    for idx in 0..space.params[0].n_values() as i64 {
+        let t = evaluator.evaluate(&vec![idx])?;
+        let batch = evaluator.batch_for(&vec![idx]);
+        let gflops = t * evaluator.flops_per_example() / 1e9;
+        println!("  batch {batch:>4}: {t:>12.0} examples/s  ({gflops:.2} GFLOP/s achieved)");
+        truth.push((batch, t));
+    }
+
+    // Now tune it like a black box with BO on the HLO GP surrogate.
+    println!("\ntuning batch size with BO (HLO GP surrogate, 8 evaluations):");
+    let gp = GpSurrogate::load(&rt)?;
+    let mut bo = BayesOpt::with_surrogate(space.clone(), 7, gp);
+    let history = tune(&mut bo, &mut evaluator, 8)?;
+    for e in history.iter() {
+        println!(
+            "  iter {:>2}: batch {:>4} -> {:>12.0} examples/s",
+            e.iteration,
+            evaluator.batch_for(&e.config),
+            e.value
+        );
+    }
+    let best = history.best().unwrap();
+    let best_batch = evaluator.batch_for(&best.config);
+    let (true_best_batch, true_best) = truth
+        .iter()
+        .cloned()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!(
+        "\ntuner found batch {best_batch} at {:.0} ex/s; ground-truth best is batch {true_best_batch} at {true_best:.0} ex/s",
+        best.value
+    );
+    anyhow::ensure!(
+        best_batch == true_best_batch || best.value > 0.8 * true_best,
+        "tuner missed the ground-truth optimum badly"
+    );
+    println!("end-to-end OK: tuner + PJRT runtime + AOT artifacts compose on a real workload");
+    Ok(())
+}

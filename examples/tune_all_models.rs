@@ -1,0 +1,28 @@
+//! Fig. 5 driver: tune all six models with BO, GA and NMS (50 iterations,
+//! 3 seeds) and print the per-model winner table — the paper's headline
+//! comparison.
+//!
+//!     cargo run --release --example tune_all_models [iters] [seeds]
+
+use anyhow::Result;
+use tftune::config::SurrogateKind;
+use tftune::figures::{fig5, OUT_DIR};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let iters: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(50);
+    let n_seeds: u64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let seeds: Vec<u64> = (0..n_seeds).collect();
+
+    println!("running Fig. 5: 6 models x {{BO, GA, NMS}} x {n_seeds} seeds x {iters} iterations");
+    let t0 = std::time::Instant::now();
+    let curves = fig5::run_figure(iters, &seeds, SurrogateKind::Native, OUT_DIR.as_ref())?;
+    fig5::print_summary(&curves);
+    println!(
+        "\n{} tuning runs ({} evaluations) in {:.2}s; CSV series under {OUT_DIR}/",
+        curves.len(),
+        curves.len() * iters,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,117 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts for Rust.
+
+`make artifacts` runs this once; the Rust coordinator then loads the HLO
+text via `HloModuleProto::from_text_file` and compiles it on the PJRT CPU
+client. Python never runs again after this step.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  gp.hlo.txt            the fused GP fit+predict+acquisition graph
+  workload_b{B}.hlo.txt the real-workload MLP at each batch size B
+  meta.json             the shape contract the Rust side asserts against
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gp() -> str:
+    def fn(xtr, ytr, mask, xcand, hyper):
+        return model.gp_fit_predict(xtr, ytr, mask, xcand, hyper)
+
+    lowered = jax.jit(fn).lower(*model.gp_example_args())
+    return to_hlo_text(lowered)
+
+
+def lower_workload(batch: int) -> str:
+    def fn(*args):
+        return (model.workload_mlp(*args),)
+
+    lowered = jax.jit(fn).lower(*model.workload_example_args(batch))
+    return to_hlo_text(lowered)
+
+
+def build_meta() -> dict:
+    return {
+        "gp": {
+            "n_pad": model.N_PAD,
+            "d_feat": model.D_FEAT,
+            "c_cand": model.C_CAND,
+            "cg_iters": model.CG_ITERS,
+            "inputs": ["xtr", "ytr", "mask", "xcand", "hyper"],
+            "hyper": ["lengthscale", "signal_var", "noise_var", "acq_alpha", "y_best"],
+            "outputs": ["mu", "sigma", "gain"],
+            "file": "gp.hlo.txt",
+        },
+        "workload": {
+            "batches": list(model.WORKLOAD_BATCHES),
+            "d_in": model.WORKLOAD_IN,
+            "d_hidden": model.WORKLOAD_HIDDEN,
+            "d_out": model.WORKLOAD_OUT,
+            "flops_per_example": model.workload_flops_per_example(),
+            "file_pattern": "workload_b{batch}.hlo.txt",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--only",
+        choices=["gp", "workload", "all"],
+        default="all",
+        help="restrict what gets lowered (for faster iteration)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    written = []
+    if args.only in ("gp", "all"):
+        path = os.path.join(args.out_dir, "gp.hlo.txt")
+        text = lower_gp()
+        with open(path, "w") as f:
+            f.write(text)
+        written.append((path, len(text)))
+
+    if args.only in ("workload", "all"):
+        for batch in model.WORKLOAD_BATCHES:
+            path = os.path.join(args.out_dir, f"workload_b{batch}.hlo.txt")
+            text = lower_workload(batch)
+            with open(path, "w") as f:
+                f.write(text)
+            written.append((path, len(text)))
+
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(build_meta(), f, indent=2)
+        f.write("\n")
+    written.append((meta_path, os.path.getsize(meta_path)))
+
+    for path, size in written:
+        print(f"wrote {size:>9} bytes  {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""L1 — Pallas RBF kernel-matrix kernel.
+
+The Gaussian-process surrogate at the heart of the Bayesian-optimization
+engine spends its O(n·m·d) inner loop building RBF kernel matrices
+
+    K[i, j] = variance * exp(-0.5 * ||a_i - b_j||^2 / lengthscale^2)
+
+This module implements that computation as a tiled Pallas kernel. It is
+invoked from the L2 GP graph (python/compile/model.py) so that it lowers
+into the single AOT HLO artifact executed by the Rust coordinator.
+
+TPU-idiomatic structure (see DESIGN.md §Hardware-Adaptation):
+  * the (n, m) output is tiled into (TILE_N, TILE_M) blocks; BlockSpec
+    expresses the HBM->VMEM schedule,
+  * the squared distance uses the matmul form ||a||^2 + ||b||^2 - 2 a.b^T
+    so the dominant term maps onto the MXU systolic array,
+  * the feature dimension d stays resident in VMEM (d is small for this
+    workload: 5 tuning parameters padded to 8).
+
+interpret=True is mandatory on this image: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 64x64 keeps the VMEM footprint per grid step at
+# (TILE_N + TILE_M) * d * 4 + TILE_N * TILE_M * 4 bytes ~= 20 KiB for d=8,
+# far below the ~16 MiB VMEM budget; larger tiles would raise MXU
+# utilisation for big n,m but n,m <= 512 in this system.
+TILE_N = 64
+TILE_M = 64
+
+
+def _rbf_block_kernel(a_ref, b_ref, ls2_ref, var_ref, out_ref):
+    """Compute one (TILE_N, TILE_M) block of the RBF kernel matrix.
+
+    a_ref:   (TILE_N, d) block of the left point set.
+    b_ref:   (TILE_M, d) block of the right point set.
+    ls2_ref: (1, 1) squared lengthscale.
+    var_ref: (1, 1) signal variance.
+    out_ref: (TILE_N, TILE_M) output block.
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    # ||a_i - b_j||^2 = ||a_i||^2 + ||b_j||^2 - 2 a_i . b_j  (MXU-friendly).
+    a2 = jnp.sum(a * a, axis=1, keepdims=True)            # (TILE_N, 1)
+    b2 = jnp.sum(b * b, axis=1, keepdims=True).T          # (1, TILE_M)
+    cross = jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                      # (TILE_N, TILE_M)
+    sq = a2 + b2 - 2.0 * cross
+    # Floating-point cancellation can push tiny distances negative.
+    sq = jnp.maximum(sq, 0.0)
+    ls2 = ls2_ref[0, 0]
+    var = var_ref[0, 0]
+    out_ref[...] = var * jnp.exp(-0.5 * sq / ls2)
+
+
+def _ceil_to(x: int, tile: int) -> int:
+    return ((x + tile - 1) // tile) * tile
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_m", "interpret"))
+def rbf_kernel_matrix(
+    a: jax.Array,
+    b: jax.Array,
+    lengthscale: jax.Array | float,
+    variance: jax.Array | float,
+    *,
+    tile_n: int = TILE_N,
+    tile_m: int = TILE_M,
+    interpret: bool = True,
+) -> jax.Array:
+    """RBF (squared-exponential) kernel matrix via the Pallas kernel.
+
+    a: (n, d) float32, b: (m, d) float32. Returns (n, m) float32 with
+    K[i, j] = variance * exp(-0.5 * ||a_i - b_j||^2 / lengthscale^2).
+
+    Shapes that are not multiples of the tile are zero-padded; the padding
+    rows/cols are sliced away from the result, so any (n, m, d) works.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"expected 2-D point sets, got {a.shape} and {b.shape}")
+    if a.shape[1] != b.shape[1]:
+        raise ValueError(f"feature dims differ: {a.shape[1]} vs {b.shape[1]}")
+    n, d = a.shape
+    m = b.shape[0]
+    tile_n = min(tile_n, _ceil_to(n, 8))
+    tile_m = min(tile_m, _ceil_to(m, 8))
+
+    np_, mp = _ceil_to(n, tile_n), _ceil_to(m, tile_m)
+    a_pad = jnp.pad(a, ((0, np_ - n), (0, 0)))
+    b_pad = jnp.pad(b, ((0, mp - m), (0, 0)))
+    ls2 = jnp.asarray(lengthscale, jnp.float32).reshape(1, 1) ** 2
+    var = jnp.asarray(variance, jnp.float32).reshape(1, 1)
+
+    grid = (np_ // tile_n, mp // tile_m)
+    out = pl.pallas_call(
+        _rbf_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_m, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, tile_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp), jnp.float32),
+        interpret=interpret,
+    )(a_pad, b_pad, ls2, var)
+    return out[:n, :m]
+
+
+def vmem_footprint_bytes(tile_n: int = TILE_N, tile_m: int = TILE_M, d: int = 8) -> int:
+    """Estimated VMEM bytes resident per grid step (see DESIGN.md §Perf)."""
+    return 4 * (tile_n * d + tile_m * d + tile_n * tile_m + 2)
+
+
+def mxu_flops_per_block(tile_n: int = TILE_N, tile_m: int = TILE_M, d: int = 8) -> int:
+    """MXU (matmul) FLOPs per block — the 2*n*m*d cross term dominates."""
+    return 2 * tile_n * tile_m * d

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 GP graph.
+
+Everything in this file is the *reference* implementation: simple,
+obviously-correct jnp code with no Pallas, no tiling, no padding tricks.
+pytest compares the production kernels against these (see python/tests/).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_kernel_matrix_ref(a, b, lengthscale, variance):
+    """K[i, j] = variance * exp(-0.5 * ||a_i - b_j||^2 / lengthscale^2)."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    diff = a[:, None, :] - b[None, :, :]
+    sq = jnp.sum(diff * diff, axis=-1)
+    return variance * jnp.exp(-0.5 * sq / (lengthscale**2))
+
+
+def gp_posterior_ref(xtr, ytr, xcand, lengthscale, signal_var, noise_var):
+    """Exact GP posterior (dense solve) — oracle for the CG-based L2 graph.
+
+    Returns (mu, var) at the candidate points for a zero-mean GP with RBF
+    kernel and iid observation noise.
+    """
+    xtr = jnp.asarray(xtr, jnp.float32)
+    ytr = jnp.asarray(ytr, jnp.float32)
+    xcand = jnp.asarray(xcand, jnp.float32)
+    n = xtr.shape[0]
+    k = rbf_kernel_matrix_ref(xtr, xtr, lengthscale, signal_var)
+    k = k + noise_var * jnp.eye(n, dtype=jnp.float32)
+    kc = rbf_kernel_matrix_ref(xcand, xtr, lengthscale, signal_var)
+    sol = jnp.linalg.solve(k, jnp.concatenate([ytr[:, None], kc.T], axis=1))
+    alpha = sol[:, 0]
+    z = sol[:, 1:]
+    mu = kc @ alpha
+    var = signal_var - jnp.sum(kc * z.T, axis=1)
+    return mu, jnp.maximum(var, 1e-12)
+
+
+def smsego_gain_ref(mu, sigma, y_best, alpha):
+    """SMSego-style optimistic-gain acquisition (maximisation form)."""
+    return (mu + alpha * sigma) - y_best

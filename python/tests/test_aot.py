@@ -1,0 +1,63 @@
+"""AOT pipeline checks: HLO text artifacts are well-formed and consistent."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_gp_hlo_text_well_formed():
+    text = aot.lower_gp()
+    assert "ENTRY" in text and "HloModule" in text
+    # fixed-shape contract visible in the HLO signature
+    assert f"f32[{model.N_PAD},{model.D_FEAT}]" in text
+    assert f"f32[{model.C_CAND},{model.D_FEAT}]" in text
+    # the CG loop must have lowered to a While op, not a LAPACK custom-call
+    assert "while" in text
+    assert "lapack" not in text.lower()
+    assert "custom-call" not in text.lower()
+
+
+def test_workload_hlo_text_well_formed():
+    text = aot.lower_workload(8)
+    assert "ENTRY" in text
+    assert f"f32[8,{model.WORKLOAD_IN}]" in text
+    assert "custom-call" not in text.lower()
+
+
+def test_lowering_is_deterministic():
+    assert aot.lower_workload(1) == aot.lower_workload(1)
+
+
+def test_meta_matches_model_constants():
+    meta = aot.build_meta()
+    assert meta["gp"]["n_pad"] == model.N_PAD
+    assert meta["gp"]["d_feat"] == model.D_FEAT
+    assert meta["gp"]["c_cand"] == model.C_CAND
+    assert meta["gp"]["hyper"][4] == "y_best"
+    assert meta["workload"]["batches"] == list(model.WORKLOAD_BATCHES)
+    assert meta["workload"]["flops_per_example"] == model.workload_flops_per_example()
+    json.dumps(meta)  # must be JSON-serialisable
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.json")),
+    reason="artifacts not built yet (run `make artifacts`)",
+)
+def test_built_artifacts_consistent():
+    """If artifacts/ exists it must match the current shape contract."""
+    with open(os.path.join(ART, "meta.json")) as f:
+        meta = json.load(f)
+    assert meta == aot.build_meta()
+    for fname in ["gp.hlo.txt"] + [
+        f"workload_b{b}.hlo.txt" for b in meta["workload"]["batches"]
+    ]:
+        path = os.path.join(ART, fname)
+        assert os.path.exists(path), fname
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head

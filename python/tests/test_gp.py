@@ -1,0 +1,131 @@
+"""L2 correctness: the CG-based GP graph vs. the dense-solve oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels.ref import gp_posterior_ref, smsego_gain_ref
+
+
+def _padded_problem(rng, n_real, ls=0.25, sv=1.0, nv=1e-3, alpha=1.5):
+    # defaults sit inside the artifact's supported envelope (ls <= 0.25)
+    # and at the graph's conditioning floor (nv >= 1e-3) so the dense
+    # oracle and the CG graph solve the same system.
+    N, D, C = model.N_PAD, model.D_FEAT, model.C_CAND
+    xtr = np.zeros((N, D), np.float32)
+    xtr[:n_real, :5] = rng.uniform(size=(n_real, 5))
+    ytr = np.zeros((N,), np.float32)
+    ytr[:n_real] = rng.normal(size=n_real)
+    mask = np.zeros((N,), np.float32)
+    mask[:n_real] = 1.0
+    xcand = np.zeros((C, D), np.float32)
+    xcand[:, :5] = rng.uniform(size=(C, 5))
+    y_best = float(ytr[:n_real].max())
+    hyper = np.array([ls, sv, nv, alpha, y_best], np.float32)
+    return xtr, ytr, mask, xcand, hyper
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_real=st.integers(2, 64), seed=st.integers(0, 2**31 - 1))
+def test_gp_matches_dense_oracle(n_real, seed):
+    rng = np.random.default_rng(seed)
+    xtr, ytr, mask, xcand, hyper = _padded_problem(rng, n_real)
+    mu, sigma, gain = (np.asarray(v) for v in model.gp_fit_predict(xtr, ytr, mask, xcand, hyper))
+    mu_ref, var_ref = gp_posterior_ref(
+        xtr[:n_real], ytr[:n_real], xcand, hyper[0], hyper[1], hyper[2]
+    )
+    assert_allclose(mu, np.asarray(mu_ref), rtol=1e-3, atol=1e-3)
+    assert_allclose(sigma, np.sqrt(np.asarray(var_ref)), rtol=1e-2, atol=1e-3)
+    want_gain = smsego_gain_ref(mu, sigma, hyper[4], hyper[3])
+    assert_allclose(gain, np.asarray(want_gain), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(ls=st.floats(0.05, 0.25), seed=st.integers(0, 2**31 - 1))
+def test_gp_converges_across_supported_lengthscales(ls, seed):
+    """Envelope regression (EXPERIMENTS.md §Perf): CG_ITERS must keep the
+    solve converged for every lengthscale the artifact supports (<= 0.25),
+    at the hardest case n = N_PAD."""
+    rng = np.random.default_rng(seed)
+    xtr, ytr, mask, xcand, hyper = _padded_problem(rng, model.N_PAD, ls=ls)
+    mu, _, _ = (np.asarray(v) for v in model.gp_fit_predict(xtr, ytr, mask, xcand, hyper))
+    mu_ref, _ = gp_posterior_ref(xtr, ytr, xcand, ls, hyper[1], hyper[2])
+    assert_allclose(mu, np.asarray(mu_ref), rtol=2e-3, atol=2e-3)
+
+
+def test_padding_is_inert():
+    """Adding garbage rows under mask=0 must not change the posterior."""
+    rng = np.random.default_rng(11)
+    xtr, ytr, mask, xcand, hyper = _padded_problem(rng, 12)
+    mu1, sig1, _ = model.gp_fit_predict(xtr, ytr, mask, xcand, hyper)
+
+    xtr2, ytr2 = xtr.copy(), ytr.copy()
+    xtr2[12:, :] = rng.uniform(size=(model.N_PAD - 12, model.D_FEAT))
+    ytr2[12:] = 1e3  # wild garbage y under the mask
+    mu2, sig2, _ = model.gp_fit_predict(xtr2, ytr2, mask, xcand, hyper)
+    assert_allclose(np.asarray(mu1), np.asarray(mu2), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(sig1), np.asarray(sig2), rtol=1e-5, atol=1e-5)
+
+
+def test_posterior_interpolates_training_points():
+    """At the noise floor, mu(x_i) ~= y_i and sigma(x_i) small at history
+    points (nv passed below the floor gets clamped to 1e-3 in-graph)."""
+    rng = np.random.default_rng(5)
+    n_real = 10
+    xtr, ytr, mask, xcand, hyper = _padded_problem(rng, n_real, nv=1e-6)
+    xcand[:n_real] = xtr[:n_real]
+    mu, sigma, _ = (np.asarray(v) for v in model.gp_fit_predict(xtr, ytr, mask, xcand, hyper))
+    assert_allclose(mu[:n_real], ytr[:n_real], rtol=0, atol=5e-3)
+    assert (sigma[:n_real] < 0.05).all()
+
+
+def test_prior_far_from_data():
+    """Far from all history the posterior reverts to the prior (0, sv)."""
+    rng = np.random.default_rng(6)
+    xtr, ytr, mask, xcand, hyper = _padded_problem(rng, 8, ls=0.05)
+    xcand[:] = 50.0  # far outside [0,1]^d
+    mu, sigma, _ = (np.asarray(v) for v in model.gp_fit_predict(xtr, ytr, mask, xcand, hyper))
+    assert_allclose(mu, np.zeros_like(mu), atol=1e-4)
+    assert_allclose(sigma, np.ones_like(sigma), rtol=1e-3)
+
+
+def test_sigma_nonnegative_and_bounded():
+    rng = np.random.default_rng(7)
+    xtr, ytr, mask, xcand, hyper = _padded_problem(rng, 40)
+    _, sigma, _ = model.gp_fit_predict(xtr, ytr, mask, xcand, hyper)
+    sigma = np.asarray(sigma)
+    assert (sigma >= 0).all()
+    assert (sigma <= np.sqrt(hyper[1]) + 1e-4).all()
+
+
+def test_full_history_no_mask():
+    """n_real == N_PAD exercises the no-padding path."""
+    rng = np.random.default_rng(8)
+    xtr, ytr, mask, xcand, hyper = _padded_problem(rng, model.N_PAD)
+    mu, _, _ = (np.asarray(v) for v in model.gp_fit_predict(xtr, ytr, mask, xcand, hyper))
+    mu_ref, _ = gp_posterior_ref(xtr, ytr, xcand, hyper[0], hyper[1], hyper[2])
+    assert_allclose(mu, np.asarray(mu_ref), rtol=2e-3, atol=2e-3)
+
+
+def test_acquisition_prefers_uncertainty():
+    """With equal mu, higher sigma must score higher gain (exploration)."""
+    gain_lo = smsego_gain_ref(0.5, 0.1, 1.0, 1.5)
+    gain_hi = smsego_gain_ref(0.5, 0.9, 1.0, 1.5)
+    assert gain_hi > gain_lo
+
+
+def test_workload_mlp_shapes_and_simplex():
+    rng = np.random.default_rng(9)
+    args = [rng.normal(size=s.shape).astype(np.float32) * 0.1 for s in model.workload_example_args(8)]
+    out = np.asarray(model.workload_mlp(*args))
+    assert out.shape == (8, model.WORKLOAD_OUT)
+    assert_allclose(out.sum(axis=1), np.ones(8), rtol=1e-5)
+    assert (out >= 0).all()
+
+
+@pytest.mark.parametrize("batch", model.WORKLOAD_BATCHES)
+def test_workload_batches_lower(batch):
+    args = model.workload_example_args(batch)
+    assert args[0].shape == (batch, model.WORKLOAD_IN)

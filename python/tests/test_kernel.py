@@ -1,0 +1,159 @@
+"""L1 correctness: the Pallas RBF kernel vs. the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel that ends up inside the
+AOT GP artifact. hypothesis sweeps shapes, tile sizes and hyperparameters;
+directed tests cover the edges (tile-boundary shapes, degenerate inputs,
+dtype promotion).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import rbf_kernel_matrix_ref
+from compile.kernels.rbf import (
+    TILE_M,
+    TILE_N,
+    mxu_flops_per_block,
+    rbf_kernel_matrix,
+    vmem_footprint_bytes,
+)
+
+RTOL = 2e-5
+ATOL = 2e-6
+
+
+def _points(rng, n, d, scale=1.0):
+    return (rng.normal(size=(n, d)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 90),
+    m=st.integers(1, 90),
+    d=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rbf_matches_ref_shapes(n, m, d, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _points(rng, n, d), _points(rng, m, d)
+    got = np.asarray(rbf_kernel_matrix(a, b, 0.5, 1.0))
+    want = np.asarray(rbf_kernel_matrix_ref(a, b, 0.5, 1.0))
+    assert got.shape == (n, m)
+    assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ls=st.floats(0.05, 10.0),
+    var=st.floats(0.01, 50.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rbf_hyperparameters(ls, var, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _points(rng, 17, 5), _points(rng, 23, 5)
+    got = np.asarray(rbf_kernel_matrix(a, b, ls, var))
+    want = np.asarray(rbf_kernel_matrix_ref(a, b, ls, var))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-5 * var)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tile_n=st.sampled_from([8, 16, 32, 64]),
+    tile_m=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rbf_tile_size_invariance(tile_n, tile_m, seed):
+    """The tiling is an implementation detail: results must not depend on it."""
+    rng = np.random.default_rng(seed)
+    a, b = _points(rng, 50, 6), _points(rng, 41, 6)
+    got = np.asarray(rbf_kernel_matrix(a, b, 0.8, 2.0, tile_n=tile_n, tile_m=tile_m))
+    want = np.asarray(rbf_kernel_matrix_ref(a, b, 0.8, 2.0))
+    assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# directed edge cases
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m", [(1, 1), (64, 64), (65, 63), (128, 1), (1, 128)])
+def test_rbf_tile_boundaries(n, m):
+    rng = np.random.default_rng(7)
+    a, b = _points(rng, n, 5), _points(rng, m, 5)
+    got = np.asarray(rbf_kernel_matrix(a, b, 0.3, 1.0))
+    want = np.asarray(rbf_kernel_matrix_ref(a, b, 0.3, 1.0))
+    assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_rbf_diagonal_is_variance():
+    """K(x, x) ~= variance (f32 cancellation in the matmul form is clamped
+    at 0 but can leave a tiny positive residual distance)."""
+    rng = np.random.default_rng(1)
+    a = _points(rng, 33, 5, scale=10.0)
+    k = np.asarray(rbf_kernel_matrix(a, a, 0.7, 2.5))
+    assert_allclose(np.diag(k), np.full(33, 2.5), rtol=1e-3)
+    assert (np.diag(k) <= 2.5 + 1e-6).all()
+
+
+def test_rbf_symmetry():
+    rng = np.random.default_rng(2)
+    a = _points(rng, 40, 5)
+    k = np.asarray(rbf_kernel_matrix(a, a, 0.4, 1.0))
+    assert_allclose(k, k.T, rtol=0, atol=1e-6)
+
+
+def test_rbf_values_in_range():
+    """0 <= K <= variance for any inputs (exp underflows to +0 in f32 at
+    large distances, never negative)."""
+    rng = np.random.default_rng(3)
+    a, b = _points(rng, 30, 5, scale=5.0), _points(rng, 31, 5, scale=5.0)
+    k = np.asarray(rbf_kernel_matrix(a, b, 0.2, 3.0))
+    assert (k >= 0).all() and (k <= 3.0 + 1e-6).all()
+
+
+def test_rbf_identical_points_far_points():
+    a = np.zeros((4, 5), np.float32)
+    b = np.full((4, 5), 100.0, np.float32)
+    k_same = np.asarray(rbf_kernel_matrix(a, a, 1.0, 1.0))
+    k_far = np.asarray(rbf_kernel_matrix(a, b, 1.0, 1.0))
+    assert_allclose(k_same, np.ones((4, 4)), rtol=1e-6)
+    assert (k_far < 1e-30).all()
+
+def test_rbf_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        rbf_kernel_matrix(np.zeros((3, 4), np.float32), np.zeros((3, 5), np.float32), 1.0, 1.0)
+    with pytest.raises(ValueError):
+        rbf_kernel_matrix(np.zeros((3,), np.float32), np.zeros((3, 5), np.float32), 1.0, 1.0)
+
+
+def test_rbf_accepts_f64_input():
+    """Inputs get cast to f32; result must still match the f32 oracle."""
+    rng = np.random.default_rng(4)
+    a64 = rng.normal(size=(9, 5))
+    b64 = rng.normal(size=(11, 5))
+    got = np.asarray(rbf_kernel_matrix(a64, b64, 0.5, 1.0))
+    want = np.asarray(
+        rbf_kernel_matrix_ref(a64.astype(np.float32), b64.astype(np.float32), 0.5, 1.0)
+    )
+    assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# perf-model metadata (DESIGN.md §Hardware-Adaptation numbers stay honest)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint_under_budget():
+    # default tiles, d=8: must sit far below a 16 MiB VMEM budget.
+    assert vmem_footprint_bytes(TILE_N, TILE_M, 8) < 1 << 20
+
+
+def test_mxu_flops_accounting():
+    assert mxu_flops_per_block(64, 64, 8) == 2 * 64 * 64 * 8

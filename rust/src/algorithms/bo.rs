@@ -1,0 +1,309 @@
+//! Bayesian-optimization engine (paper §2.2): Gaussian-process surrogate
+//! + SMSego-style acquisition.
+//!
+//! Per iteration:
+//!   1. normalise the history to the unit cube, standardise y,
+//!   2. generate a candidate set (global uniform samples + local Gaussian
+//!      perturbations of the incumbent — the explore/exploit mix),
+//!   3. fit the GP and score every candidate's optimistic gain
+//!      (mu + alpha*sigma) - y_best,
+//!   4. propose the highest-gain unseen candidate.
+//!
+//! Step 3 is the numeric hot path and runs through the [`crate::gp::Surrogate`]
+//! abstraction: the production implementation executes the AOT-compiled
+//! HLO artifact (L2 JAX graph + L1 Pallas RBF kernel) via PJRT
+//! (`runtime::GpSurrogate`); the exact native GP is the oracle/fallback.
+//! Python is never on this path.
+
+use super::Tuner;
+use crate::gp::{GpHyper, NativeSurrogate, Surrogate};
+use crate::space::{Config, SearchSpace};
+use crate::util::{stats, Rng};
+
+/// Initial Latin-hypercube design size.
+pub const INIT_DESIGN: usize = 8;
+/// Candidates scored per iteration (matches the AOT artifact's C_CAND).
+pub const CANDIDATES: usize = 512;
+/// Fraction of candidates drawn globally (rest perturb the incumbent).
+const GLOBAL_FRAC: f64 = 0.75;
+/// Stddev (unit-cube) of local perturbations.
+const LOCAL_SIGMA: f64 = 0.08;
+/// Acquisition optimism (alpha in (mu + alpha*sigma) - y_best).
+pub const ACQ_ALPHA: f64 = 1.5;
+/// Most recent history points the surrogate conditions on (the AOT
+/// artifact is compiled for at most this many; see python/compile/model.py).
+pub const MAX_HISTORY: usize = 64;
+
+pub struct BayesOpt<S: Surrogate = NativeSurrogate> {
+    space: SearchSpace,
+    rng: Rng,
+    surrogate: S,
+    hyper: GpHyper,
+    /// Acquisition optimism (ablatable; default ACQ_ALPHA).
+    acq_alpha: f64,
+    /// Candidate-pool size per iteration (ablatable; default CANDIDATES).
+    n_candidates: usize,
+    /// Initial design not yet proposed.
+    pending_init: Vec<Config>,
+    /// All observations: (unit-cube x, raw y, config).
+    observed: Vec<(Vec<f64>, f64, Config)>,
+}
+
+impl BayesOpt<NativeSurrogate> {
+    /// BO with the exact native GP surrogate.
+    pub fn new(space: SearchSpace, seed: u64) -> BayesOpt<NativeSurrogate> {
+        BayesOpt::with_surrogate(space, seed, NativeSurrogate)
+    }
+}
+
+impl<S: Surrogate> BayesOpt<S> {
+    /// BO with an explicit surrogate (e.g. `runtime::GpSurrogate` for the
+    /// AOT/PJRT path).
+    pub fn with_surrogate(space: SearchSpace, seed: u64, surrogate: S) -> BayesOpt<S> {
+        let mut rng = Rng::new(seed);
+        let mut pending_init = space.latin_hypercube(INIT_DESIGN, &mut rng);
+        pending_init.reverse(); // pop from back in LHS order
+        BayesOpt {
+            space,
+            rng,
+            surrogate,
+            hyper: GpHyper::default(),
+            acq_alpha: ACQ_ALPHA,
+            n_candidates: CANDIDATES,
+            pending_init,
+            observed: Vec::new(),
+        }
+    }
+
+    /// Override the acquisition optimism (ablation A2).
+    pub fn with_acq_alpha(mut self, alpha: f64) -> BayesOpt<S> {
+        assert!(alpha >= 0.0, "acquisition alpha must be non-negative");
+        self.acq_alpha = alpha;
+        self
+    }
+
+    /// Override the candidate-pool size (ablation A3). Capped at the AOT
+    /// artifact's C_CAND when the HLO surrogate is used.
+    pub fn with_candidates(mut self, n: usize) -> BayesOpt<S> {
+        assert!(n > 0, "need at least one candidate");
+        self.n_candidates = n.min(CANDIDATES);
+        self
+    }
+
+    /// The conditioning set: all history if it fits the artifact, else the
+    /// best MAX_HISTORY/4 plus the most recent remainder.
+    fn conditioning_set(&self) -> Vec<usize> {
+        let n = self.observed.len();
+        if n <= MAX_HISTORY {
+            return (0..n).collect();
+        }
+        let keep_best = MAX_HISTORY / 4;
+        let mut by_value: Vec<usize> = (0..n).collect();
+        by_value.sort_by(|&a, &b| {
+            self.observed[b].1.partial_cmp(&self.observed[a].1).unwrap()
+        });
+        let mut chosen: Vec<usize> = by_value[..keep_best].to_vec();
+        for i in (0..n).rev() {
+            if chosen.len() >= MAX_HISTORY {
+                break;
+            }
+            if !chosen.contains(&i) {
+                chosen.push(i);
+            }
+        }
+        chosen.sort_unstable();
+        chosen
+    }
+
+    fn candidates(&mut self, incumbent: &[f64]) -> Vec<Vec<f64>> {
+        let dim = self.space.dim();
+        let n_global = (self.n_candidates as f64 * GLOBAL_FRAC) as usize;
+        let mut cands = Vec::with_capacity(self.n_candidates);
+        for _ in 0..n_global {
+            cands.push((0..dim).map(|_| self.rng.f64()).collect());
+        }
+        while cands.len() < self.n_candidates {
+            let p: Vec<f64> = incumbent
+                .iter()
+                .map(|&x| (x + self.rng.normal() * LOCAL_SIGMA).clamp(0.0, 1.0))
+                .collect();
+            cands.push(p);
+        }
+        cands
+    }
+
+    fn propose_bo(&mut self) -> Config {
+        // Standardise y over the conditioning set.
+        let idx = self.conditioning_set();
+        let x: Vec<Vec<f64>> = idx.iter().map(|&i| self.observed[i].0.clone()).collect();
+        let y_raw: Vec<f64> = idx.iter().map(|&i| self.observed[i].1).collect();
+        let mean = stats::mean(&y_raw);
+        let sd = stats::stddev(&y_raw).max(1e-9);
+        let y: Vec<f64> = y_raw.iter().map(|v| (v - mean) / sd).collect();
+        let y_best = y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+
+        let incumbent = {
+            let bi = stats::argmax(&y_raw);
+            x[bi].clone()
+        };
+        let cands = self.candidates(&incumbent);
+
+        let scores =
+            match self.surrogate.fit_score(&x, &y, &cands, self.hyper, self.acq_alpha, y_best) {
+            Ok(s) => s,
+            Err(e) => {
+                // Surrogate failure (singular kernel etc.): fall back to a
+                // random proposal rather than aborting the tuning run.
+                eprintln!("tftune: surrogate failed ({e}); proposing randomly");
+                return self.space.random(&mut self.rng);
+            }
+        };
+
+        // Highest-gain candidate whose snapped config is unseen.
+        let mut order: Vec<usize> = (0..cands.len()).collect();
+        order.sort_by(|&a, &b| scores.gain[b].partial_cmp(&scores.gain[a]).unwrap());
+        for &ci in &order {
+            let cfg = self.space.from_unit(&cands[ci]);
+            if !self.observed.iter().any(|(_, _, c)| c == &cfg) {
+                return cfg;
+            }
+        }
+        // Everything scored is already measured: random restart.
+        self.space.random(&mut self.rng)
+    }
+}
+
+impl<S: Surrogate> Tuner for BayesOpt<S> {
+    fn name(&self) -> &'static str {
+        "bayesian-optimization"
+    }
+
+    fn propose(&mut self) -> Config {
+        if let Some(cfg) = self.pending_init.pop() {
+            return cfg;
+        }
+        if self.observed.len() < 2 {
+            return self.space.random(&mut self.rng);
+        }
+        self.propose_bo()
+    }
+
+    fn observe(&mut self, config: &Config, value: f64) {
+        let u = self.space.to_unit(config);
+        self.observed.push((u, value, config.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::threading_space;
+    use crate::util::prop;
+
+    fn space() -> SearchSpace {
+        threading_space(64, 1024, 64)
+    }
+
+    fn quadratic(s: &SearchSpace, target: &Config) -> impl Fn(&Config) -> f64 {
+        let tn = s.to_unit(target);
+        let s = s.clone();
+        move |c: &Config| {
+            let u = s.to_unit(c);
+            10.0 - 10.0 * u.iter().zip(&tn).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+        }
+    }
+
+    #[test]
+    fn finds_good_region_on_quadratic() {
+        let s = space();
+        let target = vec![3, 40, 640, 60, 36];
+        let obj = quadratic(&s, &target);
+        let mut bo = BayesOpt::new(s.clone(), 5);
+        let mut best = f64::NEG_INFINITY;
+        for _ in 0..40 {
+            let c = bo.propose();
+            let v = obj(&c);
+            bo.observe(&c, v);
+            best = best.max(v);
+        }
+        assert!(best > 9.5, "BO best {best} too low");
+    }
+
+    #[test]
+    fn beats_random_search_on_smooth_objective() {
+        let s = space();
+        let target = vec![2, 24, 448, 20, 30];
+        let obj = quadratic(&s, &target);
+        let mut seeds_bo_wins = 0;
+        for seed in 0..5 {
+            let mut bo = BayesOpt::new(s.clone(), seed);
+            let mut rs = super::super::random::RandomSearch::new(s.clone(), seed);
+            let mut best_bo = f64::NEG_INFINITY;
+            let mut best_rs = f64::NEG_INFINITY;
+            for _ in 0..30 {
+                let c = bo.propose();
+                let v = obj(&c);
+                bo.observe(&c, v);
+                best_bo = best_bo.max(v);
+                let c = rs.propose();
+                best_rs = best_rs.max(obj(&c));
+                rs.observe(&c, 0.0);
+            }
+            if best_bo >= best_rs {
+                seeds_bo_wins += 1;
+            }
+        }
+        assert!(seeds_bo_wins >= 4, "BO won only {seeds_bo_wins}/5 seeds");
+    }
+
+    #[test]
+    fn exploration_signature_full_range_coverage() {
+        // Table 2: BO samples ~100% of every parameter's range.
+        let s = space();
+        let obj = quadratic(&s, &vec![2, 28, 512, 100, 28]);
+        let mut bo = BayesOpt::new(s.clone(), 9);
+        let mut h = crate::history::History::new();
+        for _ in 0..50 {
+            let c = bo.propose();
+            let v = obj(&c);
+            bo.observe(&c, v);
+            h.push(c, v);
+        }
+        let pct = h.sampled_range_pct(&s).unwrap();
+        let avg = pct.iter().sum::<f64>() / pct.len() as f64;
+        assert!(avg > 80.0, "BO coverage too low: {pct:?}");
+    }
+
+    #[test]
+    fn proposals_on_grid_no_duplicate_spam() {
+        let s = space();
+        prop::check("bo on grid", 5, |rng| {
+            let mut bo = BayesOpt::new(s.clone(), rng.next_u64());
+            let mut seen = std::collections::BTreeSet::new();
+            for i in 0..25 {
+                let c = bo.propose();
+                assert!(s.contains(&c));
+                seen.insert(c.clone());
+                bo.observe(&c, rng.range_f64(0.0, 1.0));
+                let _ = i;
+            }
+            // BO explicitly avoids re-proposing seen configs
+            assert!(seen.len() >= 23, "too many duplicates: {}", seen.len());
+        });
+    }
+
+    #[test]
+    fn conditioning_set_caps_at_artifact_size() {
+        let s = space();
+        let mut bo = BayesOpt::new(s.clone(), 3);
+        let mut rng = Rng::new(1);
+        for i in 0..(MAX_HISTORY + 40) {
+            let c = s.random(&mut rng);
+            bo.observe(&c, i as f64);
+        }
+        let idx = bo.conditioning_set();
+        assert_eq!(idx.len(), MAX_HISTORY);
+        // the globally best observation (last, value = max) must be kept
+        assert!(idx.contains(&(MAX_HISTORY + 39)));
+    }
+}

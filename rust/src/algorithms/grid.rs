@@ -1,0 +1,84 @@
+//! Exhaustive grid-search baseline — the "close to a month of CPU time"
+//! strawman from the paper's introduction, and the engine behind the
+//! Fig. 6 exhaustive sweep.
+
+use super::Tuner;
+use crate::space::{Config, SearchSpace};
+
+pub struct GridSearch {
+    space: SearchSpace,
+    /// Odometer over value indices (last parameter fastest).
+    idx: Vec<usize>,
+    exhausted: bool,
+}
+
+impl GridSearch {
+    pub fn new(space: SearchSpace) -> GridSearch {
+        let dim = space.dim();
+        GridSearch { space, idx: vec![0; dim], exhausted: false }
+    }
+
+    /// Has the full grid been proposed at least once?
+    pub fn exhausted(&self) -> bool {
+        self.exhausted
+    }
+}
+
+impl Tuner for GridSearch {
+    fn name(&self) -> &'static str {
+        "grid-search"
+    }
+
+    fn propose(&mut self) -> Config {
+        let cfg: Config = self
+            .space
+            .params
+            .iter()
+            .zip(&self.idx)
+            .map(|(p, &i)| p.value_at(i))
+            .collect();
+        // advance odometer; wrap around (and mark) at the end
+        let mut k = self.space.dim();
+        loop {
+            if k == 0 {
+                self.exhausted = true;
+                break;
+            }
+            k -= 1;
+            self.idx[k] += 1;
+            if self.idx[k] < self.space.params[k].n_values() {
+                break;
+            }
+            self.idx[k] = 0;
+        }
+        cfg
+    }
+
+    fn observe(&mut self, _config: &Config, _value: f64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{ParamDef, SearchSpace};
+
+    #[test]
+    fn covers_grid_exactly_once_then_wraps() {
+        let space = SearchSpace::new(vec![
+            ParamDef::new("a", 0, 1, 1),
+            ParamDef::new("b", 0, 2, 1),
+        ]);
+        let mut t = GridSearch::new(space);
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            assert!(!t.exhausted());
+            seen.push(t.propose());
+        }
+        assert!(t.exhausted());
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 6);
+        // wraps deterministically
+        assert_eq!(t.propose(), vec![0, 0]);
+    }
+}

@@ -1,0 +1,135 @@
+//! The algorithmic engines (paper Fig. 4): Bayesian optimization, genetic
+//! algorithm, Nelder-Mead simplex, plus random-search and exhaustive-grid
+//! baselines.
+//!
+//! All engines implement [`Tuner`], a propose/observe interface: the
+//! framework asks for the next configuration to measure, applies it to the
+//! system under test, and feeds the measurement back. The engines never
+//! talk to the system directly — that separation is the paper's
+//! "algorithm selection switch" and lets every engine share the same
+//! TensorFlow interface and data-acquisition module (`History`).
+
+pub mod bo;
+pub mod coord;
+pub mod ga;
+pub mod grid;
+pub mod nms;
+pub mod random;
+pub mod sa;
+
+pub use bo::BayesOpt;
+pub use coord::CoordinateDescent;
+pub use ga::Genetic;
+pub use grid::GridSearch;
+pub use nms::NelderMead;
+pub use random::RandomSearch;
+pub use sa::SimulatedAnnealing;
+
+use crate::space::Config;
+
+/// A tuning engine. Implementations are stateful: `propose` yields the
+/// next configuration, `observe` feeds back its measured objective
+/// (throughput in examples/s; higher is better).
+pub trait Tuner {
+    /// Engine name (figure legends, CLI).
+    fn name(&self) -> &'static str;
+
+    /// Next configuration to evaluate. Always a valid grid point.
+    fn propose(&mut self) -> Config;
+
+    /// Report the measurement for the configuration from the most recent
+    /// `propose` call.
+    fn observe(&mut self, config: &Config, value: f64);
+}
+
+/// Which engine to run (the algorithm-selection switch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Bo,
+    Ga,
+    Nms,
+    Random,
+    Grid,
+    /// Extension baseline (not in the paper): simulated annealing.
+    Sa,
+    /// Extension baseline (not in the paper): coordinate descent — the
+    /// systematic analogue of manual expert tuning.
+    Coord,
+}
+
+impl Algorithm {
+    pub fn all_paper() -> [Algorithm; 3] {
+        [Algorithm::Bo, Algorithm::Ga, Algorithm::Nms]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Bo => "bayesian-optimization",
+            Algorithm::Ga => "genetic-algorithm",
+            Algorithm::Nms => "nelder-mead",
+            Algorithm::Random => "random-search",
+            Algorithm::Grid => "grid-search",
+            Algorithm::Sa => "simulated-annealing",
+            Algorithm::Coord => "coordinate-descent",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.to_lowercase().as_str() {
+            "bo" | "bayes" | "bayesian" | "bayesian-optimization" => Some(Algorithm::Bo),
+            "ga" | "genetic" | "genetic-algorithm" => Some(Algorithm::Ga),
+            "nms" | "nelder-mead" | "neldermead" | "simplex" => Some(Algorithm::Nms),
+            "random" | "random-search" => Some(Algorithm::Random),
+            "grid" | "grid-search" | "exhaustive" => Some(Algorithm::Grid),
+            "sa" | "annealing" | "simulated-annealing" => Some(Algorithm::Sa),
+            "cd" | "coord" | "coordinate-descent" | "hill" => Some(Algorithm::Coord),
+            _ => None,
+        }
+    }
+
+    /// Construct the engine with the native GP surrogate (BO). The PJRT
+    /// surrogate variant is constructed explicitly via `BayesOpt::with_surrogate`.
+    pub fn build(&self, space: &crate::space::SearchSpace, seed: u64) -> Box<dyn Tuner> {
+        match self {
+            Algorithm::Bo => Box::new(BayesOpt::new(space.clone(), seed)),
+            Algorithm::Ga => Box::new(Genetic::new(space.clone(), seed)),
+            Algorithm::Nms => Box::new(NelderMead::new(space.clone(), seed)),
+            Algorithm::Random => Box::new(RandomSearch::new(space.clone(), seed)),
+            Algorithm::Grid => Box::new(GridSearch::new(space.clone())),
+            Algorithm::Sa => Box::new(SimulatedAnnealing::new(space.clone(), seed)),
+            Algorithm::Coord => Box::new(CoordinateDescent::new(space.clone(), seed)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(Algorithm::parse("BO"), Some(Algorithm::Bo));
+        assert_eq!(Algorithm::parse("simplex"), Some(Algorithm::Nms));
+        assert_eq!(Algorithm::parse("genetic"), Some(Algorithm::Ga));
+        assert_eq!(Algorithm::parse("unknown"), None);
+    }
+
+    #[test]
+    fn build_all() {
+        let space = crate::space::threading_space(64, 1024, 64);
+        for a in [
+            Algorithm::Bo,
+            Algorithm::Ga,
+            Algorithm::Nms,
+            Algorithm::Random,
+            Algorithm::Grid,
+            Algorithm::Sa,
+            Algorithm::Coord,
+        ] {
+            let mut t = a.build(&space, 1);
+            let cfg = t.propose();
+            assert!(space.contains(&cfg), "{} proposed off-grid {cfg:?}", t.name());
+            t.observe(&cfg, 1.0);
+        }
+    }
+}

@@ -1,0 +1,402 @@
+//! Nelder-Mead simplex engine (paper §2.2; also TensorTuner's algorithm).
+//!
+//! Standard downhill simplex (alpha=1 reflection, gamma=2 expansion,
+//! rho=0.5 contraction, sigma=0.5 shrink) on the continuous unit cube,
+//! with proposals snapped to the parameter grid at evaluation time. When
+//! the simplex collapses (all vertices within a small diameter) it
+//! restarts around the incumbent — the "clusters of points" visible in
+//! the paper's Fig. 7 pairplots are exactly these local refinement phases.
+//!
+//! Internally minimises f = -throughput.
+
+use super::Tuner;
+use crate::space::{Config, SearchSpace};
+use crate::util::Rng;
+
+const ALPHA: f64 = 1.0; // reflection
+const GAMMA: f64 = 2.0; // expansion
+const RHO: f64 = 0.5; // contraction
+const SIGMA: f64 = 0.5; // shrink
+/// Simplex diameter below which we restart around the best vertex.
+const RESTART_DIAMETER: f64 = 0.02;
+/// Edge length of a fresh (restarted) simplex.
+const INIT_STEP: f64 = 0.25;
+
+type Point = Vec<f64>;
+
+#[derive(Debug)]
+enum Phase {
+    /// Evaluating the initial simplex vertices.
+    Init,
+    /// Waiting for the reflected point's value.
+    Reflect,
+    /// Waiting for the expanded point's value (carrying f(xr)).
+    Expand { xr: Point, fr: f64 },
+    /// Waiting for an outside contraction (carrying f(xr)).
+    ContractOut { fr: f64 },
+    /// Waiting for an inside contraction.
+    ContractIn,
+    /// Re-evaluating shrunk vertices one at a time.
+    Shrink,
+}
+
+pub struct NelderMead {
+    space: SearchSpace,
+    rng: Rng,
+    /// Evaluated simplex vertices: (continuous point, f = -value).
+    simplex: Vec<(Point, f64)>,
+    /// Points proposed but not yet observed (Init/Shrink queues).
+    queue: Vec<Point>,
+    /// The continuous point awaiting its observation.
+    in_flight: Option<Point>,
+    phase: Phase,
+    restarts: usize,
+    /// Restart a collapsed simplex around the incumbent. The paper's
+    /// reference implementation (TensorTuner) does NOT restart — it is
+    /// precisely the "tendency to get stuck in local optima" the paper
+    /// describes — so this defaults to off; `with_restarts(true)` gives
+    /// the modernised variant (see the nms_restart ablation bench).
+    restart_enabled: bool,
+}
+
+fn clamp01(p: &mut Point) {
+    for x in p.iter_mut() {
+        *x = x.clamp(0.0, 1.0);
+    }
+}
+
+impl NelderMead {
+    pub fn new(space: SearchSpace, seed: u64) -> NelderMead {
+        let mut rng = Rng::new(seed);
+        let dim = space.dim();
+        let x0: Point = (0..dim).map(|_| rng.f64()).collect();
+        let queue = Self::fresh_simplex(&x0, INIT_STEP, dim);
+        NelderMead {
+            space,
+            rng,
+            simplex: Vec::new(),
+            queue,
+            in_flight: None,
+            phase: Phase::Init,
+            restarts: 0,
+            restart_enabled: false,
+        }
+    }
+
+    /// Enable/disable oriented restarts on simplex collapse.
+    pub fn with_restarts(mut self, enabled: bool) -> NelderMead {
+        self.restart_enabled = enabled;
+        self
+    }
+
+    /// Number of degenerate-simplex restarts performed (introspection).
+    pub fn restarts(&self) -> usize {
+        self.restarts
+    }
+
+    fn fresh_simplex(x0: &Point, step: f64, dim: usize) -> Vec<Point> {
+        let mut pts = vec![x0.clone()];
+        for i in 0..dim {
+            let mut p = x0.clone();
+            // step away from the wall if needed
+            p[i] = if p[i] + step <= 1.0 { p[i] + step } else { p[i] - step };
+            clamp01(&mut p);
+            pts.push(p);
+        }
+        pts.reverse(); // queue pops from the back
+        pts
+    }
+
+    fn order(&mut self) {
+        self.simplex
+            .sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+    }
+
+    /// Centroid of all vertices except the worst.
+    fn centroid(&self) -> Point {
+        let dim = self.space.dim();
+        let n = self.simplex.len() - 1;
+        let mut c = vec![0.0; dim];
+        for (p, _) in &self.simplex[..n] {
+            for (ci, pi) in c.iter_mut().zip(p) {
+                *ci += pi;
+            }
+        }
+        for ci in c.iter_mut() {
+            *ci /= n as f64;
+        }
+        c
+    }
+
+    fn diameter(&self) -> f64 {
+        let mut d: f64 = 0.0;
+        for i in 0..self.simplex.len() {
+            for j in i + 1..self.simplex.len() {
+                let dist = crate::util::linalg::sqdist(&self.simplex[i].0, &self.simplex[j].0)
+                    .sqrt();
+                d = d.max(dist);
+            }
+        }
+        d
+    }
+
+    fn point_along(&self, from: &Point, toward: &Point, t: f64) -> Point {
+        let mut p: Point =
+            from.iter().zip(toward).map(|(a, b)| a + t * (b - a)).collect();
+        clamp01(&mut p);
+        p
+    }
+
+    /// Begin a reflect step from the current (complete) simplex.
+    fn start_reflect(&mut self) -> Point {
+        self.order();
+        // Degenerate simplex -> oriented restart around the best vertex
+        // (only in the modernised variant; TensorTuner-style NMS keeps
+        // reflecting the collapsed simplex and stays stuck).
+        if self.restart_enabled && self.diameter() < RESTART_DIAMETER {
+            self.restart();
+            return self.queue.pop().expect("restart queue non-empty");
+        }
+        let c = self.centroid();
+        let worst = &self.simplex.last().unwrap().0;
+        // xr = c + ALPHA * (c - worst)
+        let xr = self.point_along(&c, worst, -ALPHA);
+        self.phase = Phase::Reflect;
+        xr
+    }
+
+    fn restart(&mut self) {
+        self.restarts += 1;
+        let dim = self.space.dim();
+        let best = self.simplex[0].clone();
+        // random orientation: jitter the incumbent, keep it in the simplex
+        let mut x0 = best.0.clone();
+        for x in x0.iter_mut() {
+            *x = (*x + self.rng.normal() * 0.05).clamp(0.0, 1.0);
+        }
+        self.queue = Self::fresh_simplex(&x0, INIT_STEP, dim);
+        self.simplex = vec![best]; // incumbent survives the restart
+        self.queue.pop(); // one slot taken by the incumbent
+        self.phase = Phase::Init;
+    }
+
+    fn dim1(&self) -> usize {
+        self.space.dim() + 1
+    }
+}
+
+impl Tuner for NelderMead {
+    fn name(&self) -> &'static str {
+        "nelder-mead"
+    }
+
+    fn propose(&mut self) -> Config {
+        assert!(self.in_flight.is_none(), "propose called twice without observe");
+        let point = if let Some(p) = self.queue.pop() {
+            p
+        } else {
+            match self.phase {
+                Phase::Init | Phase::Shrink => self.start_reflect(),
+                _ => unreachable!("empty queue outside Init/Shrink"),
+            }
+        };
+        let cfg = self.space.from_unit(&point);
+        self.in_flight = Some(point);
+        cfg
+    }
+
+    fn observe(&mut self, _config: &Config, value: f64) {
+        let point = self.in_flight.take().expect("observe without propose");
+        let f = -value; // minimise
+        match std::mem::replace(&mut self.phase, Phase::Init) {
+            Phase::Init => {
+                self.simplex.push((point, f));
+                if self.simplex.len() >= self.dim1() && self.queue.is_empty() {
+                    // simplex complete: next propose() starts reflecting
+                    self.phase = Phase::Shrink; // state meaning "start_reflect next"
+                } else {
+                    self.phase = Phase::Init;
+                }
+            }
+            Phase::Reflect => {
+                let fr = f;
+                let xr = point;
+                let best = self.simplex[0].1;
+                let second_worst = self.simplex[self.simplex.len() - 2].1;
+                let worst = self.simplex.last().unwrap().1;
+                if fr < best {
+                    // try expansion: xe = c + GAMMA*(xr - c)
+                    let c = self.centroid();
+                    let xe = self.point_along(&c, &xr, GAMMA);
+                    self.queue.push(xe);
+                    self.phase = Phase::Expand { xr, fr };
+                } else if fr < second_worst {
+                    *self.simplex.last_mut().unwrap() = (xr, fr);
+                    self.phase = Phase::Shrink; // reflect next
+                } else if fr < worst {
+                    // outside contraction: xc = c + RHO*(xr - c)
+                    let c = self.centroid();
+                    let xc = self.point_along(&c, &xr, RHO);
+                    self.queue.push(xc);
+                    self.phase = Phase::ContractOut { fr };
+                } else {
+                    // inside contraction: xc = c + RHO*(worst - c)
+                    let c = self.centroid();
+                    let xw = self.simplex.last().unwrap().0.clone();
+                    let xc = self.point_along(&c, &xw, RHO);
+                    self.queue.push(xc);
+                    self.phase = Phase::ContractIn;
+                }
+            }
+            Phase::Expand { xr, fr } => {
+                let (xe, fe) = (point, f);
+                *self.simplex.last_mut().unwrap() =
+                    if fe < fr { (xe, fe) } else { (xr, fr) };
+                self.phase = Phase::Shrink; // reflect next
+            }
+            Phase::ContractOut { fr } => {
+                if f <= fr {
+                    *self.simplex.last_mut().unwrap() = (point, f);
+                    self.phase = Phase::Shrink;
+                } else {
+                    self.begin_shrink();
+                }
+            }
+            Phase::ContractIn => {
+                let worst = self.simplex.last().unwrap().1;
+                if f < worst {
+                    *self.simplex.last_mut().unwrap() = (point, f);
+                    self.phase = Phase::Shrink;
+                } else {
+                    self.begin_shrink();
+                }
+            }
+            Phase::Shrink => {
+                // one shrunk vertex re-evaluated
+                self.simplex.push((point, f));
+                if self.simplex.len() >= self.dim1() && self.queue.is_empty() {
+                    self.phase = Phase::Shrink;
+                } else {
+                    self.phase = Phase::Shrink;
+                }
+            }
+        }
+    }
+}
+
+impl NelderMead {
+    /// Shrink every vertex toward the best and queue re-evaluations.
+    fn begin_shrink(&mut self) {
+        self.order();
+        let best = self.simplex[0].0.clone();
+        let others: Vec<Point> =
+            self.simplex[1..].iter().map(|(p, _)| p.clone()).collect();
+        self.simplex.truncate(1);
+        for p in others {
+            let shrunk = self.point_along(&best, &p, SIGMA);
+            self.queue.push(shrunk);
+        }
+        self.phase = Phase::Shrink;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{threading_space, ParamDef};
+    use crate::util::prop;
+
+    fn space() -> SearchSpace {
+        threading_space(64, 1024, 64)
+    }
+
+    /// Drive NMS on a closure objective for `iters` steps.
+    fn drive<F: Fn(&Config) -> f64>(
+        mut t: NelderMead,
+        f: F,
+        iters: usize,
+    ) -> (NelderMead, Vec<(Config, f64)>) {
+        let mut trace = Vec::new();
+        for _ in 0..iters {
+            let c = t.propose();
+            let v = f(&c);
+            t.observe(&c, v);
+            trace.push((c, v));
+        }
+        (t, trace)
+    }
+
+    #[test]
+    fn optimizes_smooth_quadratic() {
+        // maximise -(sum of squared distances to a target config)
+        let s = space();
+        let target = vec![2, 28, 512, 100, 28];
+        let tnorm = s.to_unit(&target);
+        let obj = |c: &Config| {
+            let u = s.to_unit(c);
+            -u.iter().zip(&tnorm).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+        };
+        let (_, trace) = drive(NelderMead::new(s.clone(), 7).with_restarts(true), obj, 60);
+        let best = trace.iter().map(|(_, v)| *v).fold(f64::NEG_INFINITY, f64::max);
+        assert!(best > -0.02, "NMS best {best} too far from optimum");
+    }
+
+    #[test]
+    fn proposals_always_on_grid() {
+        let s = space();
+        prop::check("nms on grid", 20, |rng| {
+            let mut t = NelderMead::new(s.clone(), rng.next_u64());
+            for _ in 0..40 {
+                let c = t.propose();
+                assert!(s.contains(&c), "off grid: {c:?}");
+                t.observe(&c, rng.range_f64(0.0, 10.0));
+            }
+        });
+    }
+
+    #[test]
+    fn restarts_on_degenerate_simplex() {
+        // constant objective: simplex shrinks forever -> must restart
+        let s = SearchSpace::new(vec![
+            ParamDef::new("a", 0, 100, 1),
+            ParamDef::new("b", 0, 100, 1),
+        ]);
+        let (t, _) = drive(NelderMead::new(s, 3).with_restarts(true), |_| 1.0, 300);
+        assert!(t.restarts() > 0, "no restart after 300 flat evaluations");
+    }
+
+    #[test]
+    #[should_panic(expected = "propose called twice")]
+    fn double_propose_panics() {
+        let mut t = NelderMead::new(space(), 1);
+        let _ = t.propose();
+        let _ = t.propose();
+    }
+
+    #[test]
+    fn exploitation_cluster_signature() {
+        // On a unimodal surface, NMS spends most late evaluations near the
+        // optimum: the mean pairwise distance of the last 10 samples must
+        // be far below that of random search (the Fig. 7 cluster effect).
+        let s = space();
+        let target = vec![1, 40, 256, 0, 40];
+        let tn = s.to_unit(&target);
+        let obj = |c: &Config| {
+            let u = s.to_unit(c);
+            -u.iter().zip(&tn).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+        };
+        let (_, trace) = drive(NelderMead::new(s.clone(), 11), obj, 50);
+        let last: Vec<Vec<f64>> =
+            trace[40..].iter().map(|(c, _)| s.to_unit(c)).collect();
+        let mut dsum = 0.0;
+        let mut cnt = 0;
+        for i in 0..last.len() {
+            for j in i + 1..last.len() {
+                dsum += crate::util::linalg::sqdist(&last[i], &last[j]).sqrt();
+                cnt += 1;
+            }
+        }
+        let mean_dist = dsum / cnt as f64;
+        assert!(mean_dist < 0.8, "late NMS samples not clustered: {mean_dist}");
+    }
+}

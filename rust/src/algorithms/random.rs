@@ -1,0 +1,57 @@
+//! Random-search baseline: uniform iid samples from the grid.
+
+use super::Tuner;
+use crate::space::{Config, SearchSpace};
+use crate::util::Rng;
+
+pub struct RandomSearch {
+    space: SearchSpace,
+    rng: Rng,
+}
+
+impl RandomSearch {
+    pub fn new(space: SearchSpace, seed: u64) -> RandomSearch {
+        RandomSearch { space, rng: Rng::new(seed) }
+    }
+}
+
+impl Tuner for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random-search"
+    }
+
+    fn propose(&mut self) -> Config {
+        self.space.random(&mut self.rng)
+    }
+
+    fn observe(&mut self, _config: &Config, _value: f64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::threading_space;
+
+    #[test]
+    fn proposals_on_grid_and_varied() {
+        let space = threading_space(64, 1024, 64);
+        let mut t = RandomSearch::new(space.clone(), 3);
+        let mut distinct = std::collections::BTreeSet::new();
+        for _ in 0..50 {
+            let c = t.propose();
+            assert!(space.contains(&c));
+            distinct.insert(c);
+        }
+        assert!(distinct.len() > 40, "only {} distinct proposals", distinct.len());
+    }
+
+    #[test]
+    fn seeded_reproducible() {
+        let space = threading_space(64, 1024, 64);
+        let mut a = RandomSearch::new(space.clone(), 5);
+        let mut b = RandomSearch::new(space, 5);
+        for _ in 0..20 {
+            assert_eq!(a.propose(), b.propose());
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Simulated-annealing baseline.
+//!
+//! Not evaluated in the paper, but the natural next member of the
+//! gradient-free family (§2.2 mentions heuristic methods); included as an
+//! extension baseline for the ablation benches. Metropolis acceptance on
+//! -throughput with a geometric temperature schedule and grid-neighbour
+//! moves.
+
+use super::Tuner;
+use crate::space::{Config, SearchSpace};
+use crate::util::Rng;
+
+/// Fraction of coordinates perturbed per move.
+const MOVE_PROB: f64 = 0.4;
+/// Geometric cooling factor per iteration.
+const COOLING: f64 = 0.93;
+
+pub struct SimulatedAnnealing {
+    space: SearchSpace,
+    rng: Rng,
+    current: Option<(Config, f64)>,
+    proposed: Option<Config>,
+    /// Temperature in units of *relative* objective change.
+    temperature: f64,
+}
+
+impl SimulatedAnnealing {
+    pub fn new(space: SearchSpace, seed: u64) -> SimulatedAnnealing {
+        SimulatedAnnealing {
+            space,
+            rng: Rng::new(seed),
+            current: None,
+            proposed: None,
+            // accept ~20% worse moves at the start
+            temperature: 0.2,
+        }
+    }
+
+    pub fn temperature(&self) -> f64 {
+        self.temperature
+    }
+}
+
+impl Tuner for SimulatedAnnealing {
+    fn name(&self) -> &'static str {
+        "simulated-annealing"
+    }
+
+    fn propose(&mut self) -> Config {
+        let cfg = match &self.current {
+            None => self.space.random(&mut self.rng),
+            Some((cur, _)) => {
+                // temperature-scaled Gaussian move in unit space: big jumps
+                // while hot, fine steps once cooled.
+                let u = self.space.to_unit(cur);
+                let sigma = self.temperature.max(0.02);
+                let moved: Vec<f64> = u
+                    .iter()
+                    .map(|&x| {
+                        if self.rng.bool(MOVE_PROB) {
+                            (x + self.rng.normal() * sigma).clamp(0.0, 1.0)
+                        } else {
+                            x
+                        }
+                    })
+                    .collect();
+                let cfg = self.space.from_unit(&moved);
+                if cfg == *cur {
+                    // degenerate move: force a single-step neighbour
+                    self.space.neighbour(cur, MOVE_PROB, &mut self.rng)
+                } else {
+                    cfg
+                }
+            }
+        };
+        self.proposed = Some(cfg.clone());
+        cfg
+    }
+
+    fn observe(&mut self, config: &Config, value: f64) {
+        let proposed = self.proposed.take().unwrap_or_else(|| config.clone());
+        match &self.current {
+            None => self.current = Some((proposed, value)),
+            Some((_, cur_v)) => {
+                // Metropolis on relative change (objective scales vary by
+                // orders of magnitude across models).
+                let rel = (value - cur_v) / cur_v.abs().max(1e-12);
+                let accept = rel >= 0.0
+                    || self.rng.f64() < (rel / self.temperature.max(1e-6)).exp();
+                if accept {
+                    self.current = Some((proposed, value));
+                }
+            }
+        }
+        self.temperature *= COOLING;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::threading_space;
+    use crate::util::prop;
+
+    fn space() -> SearchSpace {
+        threading_space(64, 1024, 64)
+    }
+
+    fn quadratic(s: &SearchSpace, target: &Config) -> impl Fn(&Config) -> f64 {
+        let tn = s.to_unit(target);
+        let s = s.clone();
+        move |c: &Config| {
+            let u = s.to_unit(c);
+            10.0 - 10.0 * u.iter().zip(&tn).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+        }
+    }
+
+    #[test]
+    fn improves_on_smooth_objective() {
+        let s = space();
+        let obj = quadratic(&s, &vec![2, 30, 512, 100, 30]);
+        let mut sa = SimulatedAnnealing::new(s.clone(), 3);
+        let mut first = None;
+        let mut best = f64::NEG_INFINITY;
+        for _ in 0..80 {
+            let c = sa.propose();
+            let v = obj(&c);
+            sa.observe(&c, v);
+            first.get_or_insert(v);
+            best = best.max(v);
+        }
+        assert!(best > first.unwrap() + 0.5, "SA didn't improve: first {first:?} best {best}");
+        assert!(best > 9.0, "SA best {best}");
+    }
+
+    #[test]
+    fn temperature_cools_monotonically() {
+        let s = space();
+        let mut sa = SimulatedAnnealing::new(s.clone(), 1);
+        let mut prev = sa.temperature();
+        for _ in 0..20 {
+            let c = sa.propose();
+            sa.observe(&c, 1.0);
+            assert!(sa.temperature() < prev);
+            prev = sa.temperature();
+        }
+    }
+
+    #[test]
+    fn prop_proposals_on_grid() {
+        let s = space();
+        prop::check("sa on grid", 25, |rng| {
+            let mut sa = SimulatedAnnealing::new(s.clone(), rng.next_u64());
+            for _ in 0..30 {
+                let c = sa.propose();
+                assert!(s.contains(&c));
+                sa.observe(&c, rng.range_f64(0.0, 10.0));
+            }
+        });
+    }
+
+    #[test]
+    fn accepts_improvements_always() {
+        let s = space();
+        let mut sa = SimulatedAnnealing::new(s.clone(), 2);
+        let c1 = sa.propose();
+        sa.observe(&c1, 1.0);
+        let c2 = sa.propose();
+        sa.observe(&c2, 2.0); // improvement: must become current
+        assert_eq!(sa.current.as_ref().unwrap().1, 2.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! Run-spec configuration: a JSON description of a tuning run (model,
+//! algorithm, budget, seeds, surrogate backend, output locations), loadable
+//! from a file or assembled from CLI flags. Every launcher entry point
+//! (CLI, benches, examples) goes through this, so runs are reproducible
+//! from a single artifact.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::algorithms::Algorithm;
+use crate::sim::ModelId;
+use crate::util::json::{parse, Json};
+
+/// Which GP surrogate backs the BO engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SurrogateKind {
+    /// Exact native-Rust GP (no artifacts needed).
+    Native,
+    /// The AOT HLO artifact via PJRT (production path).
+    Hlo,
+}
+
+impl SurrogateKind {
+    pub fn parse(s: &str) -> Option<SurrogateKind> {
+        match s.to_lowercase().as_str() {
+            "native" => Some(SurrogateKind::Native),
+            "hlo" | "pjrt" | "artifact" => Some(SurrogateKind::Hlo),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SurrogateKind::Native => "native",
+            SurrogateKind::Hlo => "hlo",
+        }
+    }
+}
+
+/// A complete tuning-run specification.
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    pub model: ModelId,
+    pub algorithm: Algorithm,
+    /// Evaluation budget (the paper caps at 50).
+    pub iterations: usize,
+    pub seed: u64,
+    /// Measurement-noise sigma for the simulated target.
+    pub noise_sigma: f64,
+    pub surrogate: SurrogateKind,
+    /// What the tuner maximises (throughput or inverse latency).
+    pub objective: crate::evaluator::Objective,
+    /// Where to write the history JSONL (None = don't persist).
+    pub history_out: Option<PathBuf>,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            model: ModelId::Resnet50Int8,
+            algorithm: Algorithm::Bo,
+            iterations: 50,
+            seed: 0,
+            noise_sigma: crate::sim::noise::DEFAULT_SIGMA,
+            surrogate: SurrogateKind::Native,
+            objective: crate::evaluator::Objective::Throughput,
+            history_out: None,
+        }
+    }
+}
+
+impl TuneConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.short_name().into()),
+            ("algorithm", self.algorithm.name().into()),
+            ("iterations", self.iterations.into()),
+            ("seed", (self.seed as i64).into()),
+            ("noise_sigma", self.noise_sigma.into()),
+            ("surrogate", self.surrogate.name().into()),
+            ("objective", self.objective.name().into()),
+            (
+                "history_out",
+                match &self.history_out {
+                    Some(p) => p.display().to_string().into(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TuneConfig> {
+        let mut cfg = TuneConfig::default();
+        if let Some(m) = j.get("model").and_then(Json::as_str) {
+            cfg.model = ModelId::parse(m).with_context(|| format!("unknown model '{m}'"))?;
+        }
+        if let Some(a) = j.get("algorithm").and_then(Json::as_str) {
+            cfg.algorithm =
+                Algorithm::parse(a).with_context(|| format!("unknown algorithm '{a}'"))?;
+        }
+        if let Some(n) = j.get("iterations").and_then(Json::as_i64) {
+            anyhow::ensure!(n > 0, "iterations must be positive");
+            cfg.iterations = n as usize;
+        }
+        if let Some(s) = j.get("seed").and_then(Json::as_i64) {
+            cfg.seed = s as u64;
+        }
+        if let Some(s) = j.get("noise_sigma").and_then(Json::as_f64) {
+            anyhow::ensure!(s >= 0.0, "noise_sigma must be non-negative");
+            cfg.noise_sigma = s;
+        }
+        if let Some(s) = j.get("surrogate").and_then(Json::as_str) {
+            cfg.surrogate =
+                SurrogateKind::parse(s).with_context(|| format!("unknown surrogate '{s}'"))?;
+        }
+        if let Some(o) = j.get("objective").and_then(Json::as_str) {
+            cfg.objective = crate::evaluator::Objective::parse(o)
+                .with_context(|| format!("unknown objective '{o}'"))?;
+        }
+        if let Some(p) = j.get("history_out").and_then(Json::as_str) {
+            cfg.history_out = Some(PathBuf::from(p));
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<TuneConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let j = parse(&text).map_err(|e| anyhow::anyhow!("parsing config: {e}"))?;
+        TuneConfig::from_json(&j)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+}
+
+impl TuneConfig {
+    /// Build the tuning engine this spec asks for, honouring the surrogate
+    /// choice for BO (HLO = the AOT artifact via PJRT).
+    pub fn build_tuner(&self) -> Result<Box<dyn crate::algorithms::Tuner>> {
+        let space = self.model.space();
+        if self.algorithm == Algorithm::Bo && self.surrogate == SurrogateKind::Hlo {
+            let surrogate = crate::runtime::GpSurrogate::open_default()
+                .context("loading the GP HLO artifact (run `make artifacts`)")?;
+            return Ok(Box::new(crate::algorithms::BayesOpt::with_surrogate(
+                space, self.seed, surrogate,
+            )));
+        }
+        Ok(self.algorithm.build(&space, self.seed))
+    }
+
+    /// Execute the run against the simulated target and return the history
+    /// (persisted to `history_out` when set).
+    pub fn run(&self) -> Result<crate::history::History> {
+        let mut tuner = self.build_tuner()?;
+        let mut eval =
+            crate::evaluator::SimEvaluator::with_sigma(self.model, self.seed, self.noise_sigma)
+                .with_objective(self.objective);
+        let history = crate::evaluator::tune(tuner.as_mut(), &mut eval, self.iterations)?;
+        if let Some(path) = &self.history_out {
+            history.save(path, &self.model.space())?;
+        }
+        Ok(history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_budget() {
+        let c = TuneConfig::default();
+        assert_eq!(c.iterations, 50);
+        assert_eq!(c.algorithm, Algorithm::Bo);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = TuneConfig::default();
+        c.model = ModelId::BertFp32;
+        c.algorithm = Algorithm::Nms;
+        c.iterations = 25;
+        c.seed = 99;
+        c.surrogate = SurrogateKind::Hlo;
+        c.history_out = Some(PathBuf::from("/tmp/h.jsonl"));
+        let j = c.to_json();
+        let c2 = TuneConfig::from_json(&j).unwrap();
+        assert_eq!(c2.model, ModelId::BertFp32);
+        assert_eq!(c2.algorithm, Algorithm::Nms);
+        assert_eq!(c2.iterations, 25);
+        assert_eq!(c2.seed, 99);
+        assert_eq!(c2.surrogate, SurrogateKind::Hlo);
+        assert_eq!(c2.history_out, Some(PathBuf::from("/tmp/h.jsonl")));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let j = parse(r#"{"model":"made-up"}"#).unwrap();
+        assert!(TuneConfig::from_json(&j).is_err());
+        let j = parse(r#"{"iterations":0}"#).unwrap();
+        assert!(TuneConfig::from_json(&j).is_err());
+        let j = parse(r#"{"noise_sigma":-1}"#).unwrap();
+        assert!(TuneConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("tftune_cfg_test");
+        let path = dir.join("run.json");
+        let c = TuneConfig::default();
+        c.save(&path).unwrap();
+        let c2 = TuneConfig::load(&path).unwrap();
+        assert_eq!(c2.iterations, c.iterations);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

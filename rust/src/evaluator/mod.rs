@@ -1,0 +1,271 @@
+//! The "TensorFlow interface" of the paper's framework (Fig. 4): an
+//! [`Evaluator`] applies a configuration to the system under test and
+//! returns the measured objective. Implementations:
+//!
+//! - [`SimEvaluator`] — the simulated Intel-TF backend (`sim`),
+//! - [`real::RealWorkloadEvaluator`] — actual PJRT executions of the AOT
+//!   MLP workload, timed in-process,
+//! - [`remote::RemoteEvaluator`] — a TCP client driving a target daemon
+//!   (`server`), reproducing the paper's host/target split.
+//!
+//! `tune()` is the shared optimization loop: propose → evaluate → observe,
+//! accumulating the global `History` every figure harness consumes.
+
+pub mod real;
+pub mod remote;
+
+pub use real::RealWorkloadEvaluator;
+pub use remote::RemoteEvaluator;
+
+use crate::algorithms::Tuner;
+use crate::history::History;
+use crate::sim::{ModelId, SimWorkload};
+use crate::space::Config;
+
+/// A system under test.
+pub trait Evaluator {
+    /// Apply `config` and measure the objective (examples/s).
+    fn evaluate(&mut self, config: &Config) -> anyhow::Result<f64>;
+
+    /// Human-readable target description (logs, figure titles).
+    fn describe(&self) -> String;
+}
+
+/// What the tuner maximises (paper §4.1: "Setting [batch] to 1 allows us
+/// to obtain latency, while higher values allow us to obtain throughput").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Objective {
+    /// examples/second (the paper's evaluation objective).
+    #[default]
+    Throughput,
+    /// 1 / batch-latency (maximised ⇒ latency minimised). The returned
+    /// value is batches/second; callers typically pin batch_size to its
+    /// minimum for a pure latency study.
+    InverseLatency,
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s.to_lowercase().as_str() {
+            "throughput" | "tp" => Some(Objective::Throughput),
+            "latency" | "inverse-latency" | "inv-latency" => Some(Objective::InverseLatency),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Throughput => "throughput",
+            Objective::InverseLatency => "inverse-latency",
+        }
+    }
+
+    pub fn unit(&self) -> &'static str {
+        match self {
+            Objective::Throughput => "examples/s",
+            Objective::InverseLatency => "batches/s",
+        }
+    }
+}
+
+/// Simulated backend evaluator.
+pub struct SimEvaluator {
+    workload: SimWorkload,
+    pub objective: Objective,
+    /// Count of evaluations served (the paper caps runs at 50).
+    pub evaluations: usize,
+}
+
+impl SimEvaluator {
+    pub fn new(model: ModelId, seed: u64) -> SimEvaluator {
+        SimEvaluator {
+            workload: SimWorkload::with_default_noise(model, seed),
+            objective: Objective::Throughput,
+            evaluations: 0,
+        }
+    }
+
+    pub fn noiseless(model: ModelId) -> SimEvaluator {
+        SimEvaluator {
+            workload: SimWorkload::noiseless(model),
+            objective: Objective::Throughput,
+            evaluations: 0,
+        }
+    }
+
+    pub fn with_sigma(model: ModelId, seed: u64, sigma: f64) -> SimEvaluator {
+        SimEvaluator {
+            workload: SimWorkload::new(model, seed, sigma),
+            objective: Objective::Throughput,
+            evaluations: 0,
+        }
+    }
+
+    pub fn with_objective(mut self, objective: Objective) -> SimEvaluator {
+        self.objective = objective;
+        self
+    }
+
+    pub fn model(&self) -> ModelId {
+        self.workload.model
+    }
+}
+
+impl Evaluator for SimEvaluator {
+    fn evaluate(&mut self, config: &Config) -> anyhow::Result<f64> {
+        self.evaluations += 1;
+        match self.objective {
+            Objective::Throughput => Ok(self.workload.measure(config)),
+            Objective::InverseLatency => {
+                // measured throughput / batch = measured batches/s (noise
+                // applied through the same stream as throughput mode).
+                let tp = self.workload.measure(config);
+                Ok(tp / config[crate::space::BATCH] as f64)
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("sim:{}:{}", self.workload.model.name(), self.objective.name())
+    }
+}
+
+/// Run `iters` tuning iterations of `tuner` against `evaluator`.
+///
+/// A non-finite measurement aborts the run: every engine's bookkeeping
+/// (GP standardisation, GA fitness ordering, simplex comparisons) is
+/// poisoned by NaN/inf, so failing fast with the offending configuration
+/// beats silently corrupting the history.
+pub fn tune(
+    tuner: &mut dyn Tuner,
+    evaluator: &mut dyn Evaluator,
+    iters: usize,
+) -> anyhow::Result<History> {
+    let mut history = History::new();
+    for _ in 0..iters {
+        let cfg = tuner.propose();
+        let value = evaluator.evaluate(&cfg)?;
+        anyhow::ensure!(
+            value.is_finite(),
+            "evaluator returned non-finite measurement {value} for {cfg:?}"
+        );
+        tuner.observe(&cfg, value);
+        history.push(cfg, value);
+    }
+    Ok(history)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Algorithm;
+
+    #[test]
+    fn tune_smoke_every_algorithm_every_model() {
+        for model in ModelId::all() {
+            let space = model.space();
+            for alg in [Algorithm::Bo, Algorithm::Ga, Algorithm::Nms, Algorithm::Random] {
+                let mut tuner = alg.build(&space, 7);
+                let mut eval = SimEvaluator::new(model, 7);
+                let h = tune(tuner.as_mut(), &mut eval, 15).unwrap();
+                assert_eq!(h.len(), 15);
+                assert!(h.best().unwrap().value > 0.0);
+                for e in h.iter() {
+                    assert!(space.contains(&e.config), "{} off grid", alg.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tuning_improves_over_first_sample() {
+        // On the simulator, 40 iterations of any real algorithm should
+        // beat the first random sample (sanity that signal flows).
+        let model = ModelId::Resnet50Fp32;
+        let space = model.space();
+        for alg in Algorithm::all_paper() {
+            let mut tuner = alg.build(&space, 3);
+            let mut eval = SimEvaluator::new(model, 3);
+            let h = tune(tuner.as_mut(), &mut eval, 40).unwrap();
+            let first = h.iter().next().unwrap().value;
+            let best = h.best().unwrap().value;
+            assert!(
+                best >= first,
+                "{}: best {best} < first {first}",
+                alg.name()
+            );
+        }
+    }
+
+    #[test]
+    fn objective_parse_round_trip() {
+        for o in [Objective::Throughput, Objective::InverseLatency] {
+            assert_eq!(Objective::parse(o.name()), Some(o));
+        }
+        assert_eq!(Objective::parse("latency"), Some(Objective::InverseLatency));
+        assert_eq!(Objective::parse("nope"), None);
+    }
+
+    #[test]
+    fn latency_objective_prefers_small_batches() {
+        // Throughput rises with batch; inverse latency falls. Tuning the
+        // latency objective must therefore land on a small batch.
+        let model = ModelId::Resnet50Fp32;
+        let space = model.space();
+        let mut tp = SimEvaluator::noiseless(model);
+        let mut lat =
+            SimEvaluator::noiseless(model).with_objective(Objective::InverseLatency);
+        let small = vec![1, 14, 64, 0, 24];
+        let big = vec![1, 14, 1024, 0, 24];
+        assert!(tp.evaluate(&big).unwrap() > tp.evaluate(&small).unwrap());
+        assert!(lat.evaluate(&small).unwrap() > lat.evaluate(&big).unwrap());
+
+        let mut tuner = crate::algorithms::Algorithm::Bo.build(&space, 2);
+        let mut eval =
+            SimEvaluator::new(model, 2).with_objective(Objective::InverseLatency);
+        let h = tune(tuner.as_mut(), &mut eval, 30).unwrap();
+        let best = h.best().unwrap();
+        assert!(
+            best.config[crate::space::BATCH] <= 192,
+            "latency tuning picked batch {}",
+            best.config[crate::space::BATCH]
+        );
+    }
+
+    #[test]
+    fn raw_trace_dispersion_nms_exceeds_ga() {
+        // The paper's Fig. 5 reading: NMS's *per-iteration* throughput
+        // oscillates wildly (reflections jump across the space) while
+        // GA's trace stays concentrated around its parents.
+        use crate::util::stats;
+        let model = ModelId::Resnet50Fp32;
+        let space = model.space();
+        let mut disp = std::collections::HashMap::new();
+        for alg in [crate::algorithms::Algorithm::Nms, crate::algorithms::Algorithm::Ga] {
+            let mut cv_per_seed = Vec::new();
+            for seed in [0u64, 1, 2] {
+                let mut t = alg.build(&space, seed);
+                let mut e = SimEvaluator::new(model, seed);
+                let h = tune(t.as_mut(), &mut e, 50).unwrap();
+                let vals = h.values();
+                cv_per_seed.push(stats::stddev(&vals) / stats::mean(&vals));
+            }
+            disp.insert(alg.name(), stats::mean(&cv_per_seed));
+        }
+        assert!(
+            disp["nelder-mead"] > disp["genetic-algorithm"],
+            "NMS dispersion {:.3} should exceed GA {:.3}",
+            disp["nelder-mead"],
+            disp["genetic-algorithm"]
+        );
+    }
+
+    #[test]
+    fn evaluation_counter_increments() {
+        let mut eval = SimEvaluator::new(ModelId::NcfFp32, 1);
+        let cfg = vec![1, 8, 128, 0, 8];
+        eval.evaluate(&cfg).unwrap();
+        eval.evaluate(&cfg).unwrap();
+        assert_eq!(eval.evaluations, 2);
+    }
+}

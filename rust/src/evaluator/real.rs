@@ -1,0 +1,58 @@
+//! Real-workload evaluator: the system under test is an actual PJRT
+//! executable (the AOT MLP), and the objective is *measured* examples/s.
+//!
+//! Search space: batch size over the AOT-compiled variants, plus the
+//! repetition count is fixed. The threading parameters of the paper do not
+//! map onto the single-threaded PJRT CPU client in this container, so this
+//! evaluator tunes the batch dimension for real and treats other
+//! parameters as no-ops — the point is an end-to-end proof that the tuner,
+//! runtime and artifacts compose on a real measurable system (DESIGN.md §2).
+
+use anyhow::Result;
+
+use super::Evaluator;
+use crate::runtime::WorkloadRunner;
+use crate::space::{Config, ParamDef, SearchSpace};
+
+pub struct RealWorkloadEvaluator {
+    runner: WorkloadRunner,
+    reps: usize,
+    pub evaluations: usize,
+}
+
+impl RealWorkloadEvaluator {
+    pub fn new(runner: WorkloadRunner, reps: usize) -> RealWorkloadEvaluator {
+        RealWorkloadEvaluator { runner, reps, evaluations: 0 }
+    }
+
+    /// The tunable space: batch size restricted to the compiled variants.
+    /// (Step = gcd of gaps would be wrong; we expose the index instead.)
+    pub fn space(&self) -> SearchSpace {
+        SearchSpace::new(vec![ParamDef::new(
+            "batch_index",
+            0,
+            self.runner.batches.len() as i64 - 1,
+            1,
+        )])
+    }
+
+    pub fn batch_for(&self, config: &Config) -> i64 {
+        self.runner.batches[config[0] as usize]
+    }
+
+    pub fn flops_per_example(&self) -> f64 {
+        self.runner.flops_per_example
+    }
+}
+
+impl Evaluator for RealWorkloadEvaluator {
+    fn evaluate(&mut self, config: &Config) -> Result<f64> {
+        self.evaluations += 1;
+        let batch = self.batch_for(config);
+        self.runner.measure_throughput(batch, self.reps)
+    }
+
+    fn describe(&self) -> String {
+        format!("real:pjrt-mlp(batches={:?})", self.runner.batches)
+    }
+}

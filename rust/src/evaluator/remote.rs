@@ -1,0 +1,119 @@
+//! Host-side client for the target daemon: an [`Evaluator`] that sends
+//! configurations over TCP and reads back measurements — the optimization
+//! framework's half of the paper's Fig. 4 deployment.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use super::Evaluator;
+use crate::server::proto::{
+    decode_response, encode_request, Request, Response,
+};
+use crate::space::{Config, SearchSpace};
+
+pub struct RemoteEvaluator {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    space: SearchSpace,
+    description: String,
+}
+
+impl RemoteEvaluator {
+    /// Connect to a target daemon and fetch its description.
+    pub fn connect(addr: &str, space: SearchSpace) -> Result<RemoteEvaluator> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        // One-line requests/responses: Nagle + delayed-ACK would add ~40 ms
+        // per direction (measured 88 ms/eval before this; see EXPERIMENTS.md
+        // §Perf).
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        let mut me = RemoteEvaluator { writer, reader, space, description: String::new() };
+        me.send(&Request::Describe)?;
+        match me.recv()? {
+            Response::Target { description } => me.description = description,
+            other => bail!("unexpected describe response: {other:?}"),
+        }
+        Ok(me)
+    }
+
+    fn send(&mut self, req: &Request) -> Result<()> {
+        writeln!(self.writer, "{}", encode_request(req, &self.space))?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Response> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("target closed the connection");
+        }
+        decode_response(line.trim_end(), &self.space).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Ask the target daemon to shut down.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.send(&Request::Shutdown)?;
+        match self.recv() {
+            Ok(Response::Bye) | Err(_) => Ok(()),
+            Ok(other) => bail!("unexpected shutdown response: {other:?}"),
+        }
+    }
+}
+
+impl Evaluator for RemoteEvaluator {
+    fn evaluate(&mut self, config: &Config) -> Result<f64> {
+        self.send(&Request::Evaluate(config.clone()))?;
+        match self.recv()? {
+            Response::Result { value, .. } => Ok(value),
+            Response::Error { message } => bail!("target error: {message}"),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("remote:{}", self.description)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Algorithm;
+    use crate::evaluator::{tune, SimEvaluator};
+    use crate::server::TargetServer;
+    use crate::sim::ModelId;
+
+    #[test]
+    fn end_to_end_remote_tuning() {
+        let model = ModelId::NcfFp32;
+        let space = model.space();
+        let server = TargetServer::bind(
+            "127.0.0.1:0",
+            space.clone(),
+            Box::new(SimEvaluator::new(model, 4)),
+        )
+        .unwrap();
+        let (addr, handle) = server.spawn().unwrap();
+
+        let mut remote =
+            RemoteEvaluator::connect(&addr.to_string(), space.clone()).unwrap();
+        assert!(remote.describe().contains("NCF"));
+        let mut tuner = Algorithm::Random.build(&space, 1);
+        let h = tune(tuner.as_mut(), &mut remote, 10).unwrap();
+        assert_eq!(h.len(), 10);
+        assert!(h.best().unwrap().value > 0.0);
+
+        remote.shutdown().unwrap();
+        let served = handle.join().unwrap().unwrap();
+        assert_eq!(served, 10);
+    }
+
+    #[test]
+    fn connect_failure_is_clean_error() {
+        let space = ModelId::NcfFp32.space();
+        assert!(RemoteEvaluator::connect("127.0.0.1:1", space).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Fig. 5 — "Results of auto-tuning TensorFlow's threading model using
+//! Bayesian optimization, genetic algorithm, and Nelder-Mead simplex":
+//! per-iteration throughput for 6 models × 3 algorithms, 50 iterations.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::algorithms::Algorithm;
+use crate::config::{SurrogateKind, TuneConfig};
+use crate::history::History;
+use crate::sim::ModelId;
+use crate::util::stats;
+
+use super::{print_table, Csv};
+
+/// One tuning curve.
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub model: ModelId,
+    pub algorithm: Algorithm,
+    pub seed: u64,
+    /// Raw measured throughput per iteration (what Fig. 5 plots).
+    pub values: Vec<f64>,
+}
+
+impl Curve {
+    pub fn best(&self) -> f64 {
+        stats::max(&self.values)
+    }
+    pub fn best_curve(&self) -> Vec<f64> {
+        stats::best_so_far(&self.values)
+    }
+}
+
+/// Run one model × algorithm tuning curve.
+pub fn run_curve(
+    model: ModelId,
+    algorithm: Algorithm,
+    seed: u64,
+    iterations: usize,
+    surrogate: SurrogateKind,
+) -> Result<Curve> {
+    let cfg = TuneConfig { model, algorithm, iterations, seed, surrogate, ..Default::default() };
+    let history: History = cfg.run()?;
+    Ok(Curve { model, algorithm, seed, values: history.values() })
+}
+
+/// The full figure: every model × {BO, GA, NMS} × `seeds`.
+pub fn run_figure(
+    iterations: usize,
+    seeds: &[u64],
+    surrogate: SurrogateKind,
+    out_dir: &Path,
+) -> Result<Vec<Curve>> {
+    let mut curves = Vec::new();
+    for model in ModelId::all() {
+        let mut csv = Csv::create(
+            out_dir,
+            &format!("fig5_{}.csv", model.short_name()),
+            &["algorithm", "seed", "iteration", "throughput", "best_so_far"],
+        )?;
+        for alg in Algorithm::all_paper() {
+            for &seed in seeds {
+                let curve = run_curve(model, alg, seed, iterations, surrogate)?;
+                let best = curve.best_curve();
+                for (i, (&v, &b)) in curve.values.iter().zip(&best).enumerate() {
+                    csv.row(&[
+                        alg.name().to_string(),
+                        seed.to_string(),
+                        i.to_string(),
+                        format!("{v:.3}"),
+                        format!("{b:.3}"),
+                    ])?;
+                }
+                curves.push(curve);
+            }
+        }
+    }
+    Ok(curves)
+}
+
+/// Print the summary the paper discusses: best throughput per model ×
+/// algorithm (median across seeds), with the per-model winner marked.
+pub fn print_summary(curves: &[Curve]) {
+    let mut rows = Vec::new();
+    for model in ModelId::all() {
+        let mut best_per_alg = Vec::new();
+        for alg in Algorithm::all_paper() {
+            let bests: Vec<f64> = curves
+                .iter()
+                .filter(|c| c.model == model && c.algorithm == alg)
+                .map(Curve::best)
+                .collect();
+            best_per_alg.push(if bests.is_empty() { 0.0 } else { stats::median(&bests) });
+        }
+        let winner = stats::argmax(&best_per_alg);
+        let mut row = vec![model.name().to_string()];
+        for (i, v) in best_per_alg.iter().enumerate() {
+            let mark = if i == winner { " *" } else { "" };
+            row.push(format!("{v:.1}{mark}"));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Fig. 5 summary: best throughput (examples/s, median over seeds; * = winner)",
+        &["model", "BO", "GA", "NMS"],
+        &rows,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_runs_and_has_budget_length() {
+        let c = run_curve(ModelId::NcfFp32, Algorithm::Ga, 1, 12, SurrogateKind::Native).unwrap();
+        assert_eq!(c.values.len(), 12);
+        assert!(c.best() > 0.0);
+    }
+
+    #[test]
+    fn best_curve_monotone() {
+        let c =
+            run_curve(ModelId::BertFp32, Algorithm::Nms, 2, 15, SurrogateKind::Native).unwrap();
+        let b = c.best_curve();
+        for w in b.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+}

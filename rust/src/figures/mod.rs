@@ -1,0 +1,102 @@
+//! Figure/table reproduction harnesses.
+//!
+//! One submodule per evaluation artifact in the paper:
+//! - `fig5`  — tuning curves, 6 models × {BO, GA, NMS}
+//! - `fig6`  — exhaustive 5-parameter sweep of ResNet50-INT8
+//! - `fig7`  — pairplot sample data + Table 2 range coverage
+//! - `tables` — Table 1 (search space) pretty-printer
+//!
+//! Each harness prints the paper's rows/series to stdout and writes CSVs
+//! under `figures_out/` so the plots can be regenerated with any plotting
+//! tool. Benches in `benches/` are thin wrappers over these.
+
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod tables;
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Default output directory for CSV series.
+pub const OUT_DIR: &str = "figures_out";
+
+/// A simple CSV writer (no quoting needed: all our fields are numeric or
+/// bare identifiers).
+pub struct Csv {
+    file: std::fs::File,
+    pub path: PathBuf,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn create(dir: &Path, name: &str, header: &[&str]) -> anyhow::Result<Csv> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(name);
+        let mut file = std::fs::File::create(&path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Csv { file, path, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(fields.len() == self.cols, "csv row width mismatch");
+        writeln!(self.file, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_display(&mut self, fields: &[&dyn std::fmt::Display]) -> anyhow::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&strs)
+    }
+}
+
+/// Render a fixed-width console table (the "same rows the paper reports").
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let line = |ch: char| {
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("{}", ch.to_string().repeat(total));
+    };
+    println!("\n{title}");
+    line('=');
+    let mut head = String::from("|");
+    for (h, w) in header.iter().zip(&widths) {
+        head.push_str(&format!(" {h:<w$} |"));
+    }
+    println!("{head}");
+    line('-');
+    for row in rows {
+        let mut s = String::from("|");
+        for (cell, w) in row.iter().zip(&widths) {
+            s.push_str(&format!(" {cell:<w$} |"));
+        }
+        println!("{s}");
+    }
+    line('=');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_and_validates() {
+        let dir = std::env::temp_dir().join("tftune_csv_test");
+        let mut csv = Csv::create(&dir, "t.csv", &["a", "b"]).unwrap();
+        csv.row(&["1".into(), "2".into()]).unwrap();
+        assert!(csv.row(&["only-one".into()]).is_err());
+        let text = std::fs::read_to_string(&csv.path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn print_table_does_not_panic() {
+        print_table("t", &["x", "yy"], &[vec!["1".into(), "2".into()]]);
+    }
+}

@@ -1,0 +1,65 @@
+//! Table 1 — the tuning parameters and their ranges, per model.
+
+use crate::sim::ModelId;
+
+use super::print_table;
+
+/// Print Table 1 exactly as the paper structures it.
+pub fn print_table1() {
+    let mut rows = vec![
+        vec![
+            "inter_op_parallelism_threads".to_string(),
+            "all models".to_string(),
+            "[1, 4, 1]".to_string(),
+        ],
+        vec![
+            "intra_op_parallelism_threads".to_string(),
+            "all models".to_string(),
+            "[1, 56, 1]".to_string(),
+        ],
+    ];
+    for model in ModelId::all() {
+        let (lo, hi, step) = model.batch_range();
+        rows.push(vec![
+            "batch_size".to_string(),
+            model.name().to_string(),
+            format!("[{lo}, {hi}, {step}]"),
+        ]);
+    }
+    rows.push(vec![
+        "KMP_BLOCKTIME".to_string(),
+        "all models".to_string(),
+        "[0, 200, 10]".to_string(),
+    ]);
+    rows.push(vec![
+        "OMP_NUM_THREADS".to_string(),
+        "all models".to_string(),
+        "[1, 56, 1]".to_string(),
+    ]);
+    print_table(
+        "Table 1 — tuning parameters and their ranges (min, max, step)",
+        &["parameter", "model", "range"],
+        &rows,
+    );
+}
+
+/// Search-space sizes per model (the paper's §1 search-cost discussion).
+pub fn print_space_sizes() {
+    let rows: Vec<Vec<String>> = ModelId::all()
+        .into_iter()
+        .map(|m| {
+            let size = m.space().size();
+            vec![m.name().to_string(), size.to_string()]
+        })
+        .collect();
+    print_table("Full Table-1 grid size per model", &["model", "grid points"], &rows);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn printers_do_not_panic() {
+        super::print_table1();
+        super::print_space_sizes();
+    }
+}

@@ -1,0 +1,176 @@
+//! Native-Rust Gaussian process (exact, Cholesky-based).
+//!
+//! Two jobs:
+//!  1. **Correctness oracle** for the AOT HLO artifact: integration tests
+//!     compare the artifact's CG-based posterior against this exact solve.
+//!  2. **Fallback surrogate** for the BO engine when artifacts are absent
+//!     (e.g. unit tests, or a user running without `make artifacts`).
+//!
+//! The hot path in production is the HLO artifact (see `runtime::gp`);
+//! this implementation is deliberately simple and allocation-heavy.
+
+use crate::util::linalg::{cholesky, solve_lower, solve_lower_t, sqdist, Mat};
+
+/// GP hyperparameters (fixed per tuning run, as in the paper).
+#[derive(Debug, Clone, Copy)]
+pub struct GpHyper {
+    /// RBF lengthscale in normalised [0,1] input space.
+    pub lengthscale: f64,
+    /// Signal variance (y is standardised, so ~1).
+    pub signal_var: f64,
+    /// Observation noise variance.
+    pub noise_var: f64,
+}
+
+impl Default for GpHyper {
+    fn default() -> Self {
+        // noise_var matches the AOT artifact's conditioning floor (the
+        // graph clamps nv to >= 1e-3 — see python/compile/model.py), so
+        // the native oracle and the HLO path solve the same system.
+        GpHyper { lengthscale: 0.2, signal_var: 1.0, noise_var: 1e-3 }
+    }
+}
+
+/// Posterior over candidate points.
+#[derive(Debug, Clone)]
+pub struct Posterior {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+/// Fitted GP: training inputs + Cholesky factor + alpha weights.
+pub struct NativeGp {
+    x: Vec<Vec<f64>>,
+    l: Mat,
+    alpha: Vec<f64>,
+    hyper: GpHyper,
+}
+
+fn rbf(a: &[f64], b: &[f64], h: &GpHyper) -> f64 {
+    h.signal_var * (-0.5 * sqdist(a, b) / (h.lengthscale * h.lengthscale)).exp()
+}
+
+impl NativeGp {
+    /// Fit on training data. `x` rows are points in [0,1]^d; `y` should be
+    /// standardised by the caller. Fails if the kernel matrix is not PD
+    /// (cannot happen for distinct points + positive noise).
+    pub fn fit(x: &[Vec<f64>], y: &[f64], hyper: GpHyper) -> Option<NativeGp> {
+        assert_eq!(x.len(), y.len(), "x/y length mismatch");
+        assert!(!x.is_empty(), "cannot fit GP on empty data");
+        let n = x.len();
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                k[(i, j)] = rbf(&x[i], &x[j], &hyper);
+            }
+            k[(i, i)] += hyper.noise_var;
+        }
+        let l = cholesky(&k)?;
+        let alpha = solve_lower_t(&l, &solve_lower(&l, y));
+        Some(NativeGp { x: x.to_vec(), l, alpha, hyper })
+    }
+
+    /// Posterior mean/std at candidate points.
+    pub fn predict(&self, cand: &[Vec<f64>]) -> Posterior {
+        let n = self.x.len();
+        let mut mean = Vec::with_capacity(cand.len());
+        let mut std = Vec::with_capacity(cand.len());
+        for c in cand {
+            let kc: Vec<f64> = (0..n).map(|i| rbf(c, &self.x[i], &self.hyper)).collect();
+            let mu: f64 = kc.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+            // var = k(c,c) - kc^T K^-1 kc  via v = L^-1 kc
+            let v = solve_lower(&self.l, &kc);
+            let var = self.hyper.signal_var - v.iter().map(|x| x * x).sum::<f64>();
+            mean.push(mu);
+            std.push(var.max(1e-12).sqrt());
+        }
+        Posterior { mean, std }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn toy_data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let x: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+        let y: Vec<f64> = x.iter().map(|p| (6.0 * p[0]).sin() + 0.5 * p[d - 1]).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn interpolates_training_points_with_small_noise() {
+        let mut rng = Rng::new(1);
+        let (x, y) = toy_data(&mut rng, 20, 3);
+        let gp = NativeGp::fit(&x, &y, GpHyper { noise_var: 1e-8, ..Default::default() }).unwrap();
+        let post = gp.predict(&x);
+        for (m, yv) in post.mean.iter().zip(&y) {
+            assert!((m - yv).abs() < 1e-3, "mean {m} vs y {yv}");
+        }
+        for s in &post.std {
+            assert!(*s < 1e-2);
+        }
+    }
+
+    #[test]
+    fn reverts_to_prior_far_away() {
+        let mut rng = Rng::new(2);
+        let (x, y) = toy_data(&mut rng, 10, 2);
+        let gp = NativeGp::fit(&x, &y, GpHyper { lengthscale: 0.05, ..Default::default() }).unwrap();
+        let post = gp.predict(&[vec![50.0, 50.0]]);
+        assert!(post.mean[0].abs() < 1e-6);
+        assert!((post.std[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uncertainty_smaller_near_data() {
+        let x = vec![vec![0.5, 0.5]];
+        let y = vec![1.0];
+        let gp = NativeGp::fit(&x, &y, GpHyper::default()).unwrap();
+        let post = gp.predict(&[vec![0.5, 0.5], vec![0.9, 0.9]]);
+        assert!(post.std[0] < post.std[1]);
+    }
+
+    #[test]
+    fn hand_computed_single_point_posterior() {
+        // n=1: mu(c) = k(c,x) * y / (sv + nv); var = sv - k^2/(sv+nv).
+        let h = GpHyper { lengthscale: 0.5, signal_var: 2.0, noise_var: 0.5 };
+        let gp = NativeGp::fit(&[vec![0.0]], &[3.0], h).unwrap();
+        let c = vec![0.3];
+        let k = 2.0 * f64::exp(-0.5 * 0.09 / 0.25);
+        let want_mu = k * 3.0 / 2.5;
+        let want_var: f64 = 2.0 - k * k / 2.5;
+        let post = gp.predict(&[c]);
+        assert!((post.mean[0] - want_mu).abs() < 1e-10);
+        assert!((post.std[0] - want_var.sqrt()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn prop_posterior_sane_everywhere() {
+        prop::check("gp posterior sane", 30, |rng| {
+            let n = 1 + rng.index(30);
+            let (x, y) = toy_data(rng, n, 4);
+            let gp = NativeGp::fit(&x, &y, GpHyper::default()).unwrap();
+            let cand: Vec<Vec<f64>> = (0..20).map(|_| (0..4).map(|_| rng.f64()).collect()).collect();
+            let post = gp.predict(&cand);
+            let ymax = y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let ymin = y.iter().cloned().fold(f64::INFINITY, f64::min);
+            let span = (ymax - ymin).max(1.0);
+            for (m, s) in post.mean.iter().zip(&post.std) {
+                assert!(m.is_finite() && s.is_finite());
+                assert!(*s >= 0.0 && *s <= (GpHyper::default().signal_var.sqrt() + 1e-9));
+                // posterior mean can't wildly exceed the data range for an RBF GP
+                assert!(*m < ymax + 3.0 * span && *m > ymin - 3.0 * span);
+            }
+        });
+    }
+
+    #[test]
+    fn duplicate_points_still_pd_with_noise() {
+        let x = vec![vec![0.2, 0.2], vec![0.2, 0.2]];
+        let y = vec![1.0, 1.2];
+        assert!(NativeGp::fit(&x, &y, GpHyper::default()).is_some());
+    }
+}

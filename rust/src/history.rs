@@ -1,0 +1,298 @@
+//! Evaluation history — the paper's "data acquisition module" (Fig. 4).
+//!
+//! Every algorithm engine consumes and extends the same global history of
+//! `(configuration, throughput)` measurements; the figure harnesses read it
+//! back to produce tuning curves (Fig. 5), pairplots (Fig. 7) and the
+//! range-coverage table (Table 2). Histories persist as JSONL so long
+//! sweeps can resume and the paper artifacts are regenerable from disk.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use crate::space::{Config, SearchSpace};
+use crate::util::{Json, Rng};
+
+/// One measurement: a configuration and its objective value
+/// (examples/second; higher is better).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Evaluation {
+    pub config: Config,
+    pub value: f64,
+    /// Which tuning iteration produced this point (0-based).
+    pub iteration: usize,
+}
+
+/// Append-only evaluation history.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    evals: Vec<Evaluation>,
+}
+
+impl History {
+    pub fn new() -> History {
+        History { evals: Vec::new() }
+    }
+
+    pub fn push(&mut self, config: Config, value: f64) {
+        let iteration = self.evals.len();
+        self.evals.push(Evaluation { config, value, iteration });
+    }
+
+    pub fn len(&self) -> usize {
+        self.evals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.evals.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Evaluation> {
+        self.evals.iter()
+    }
+
+    pub fn last(&self) -> Option<&Evaluation> {
+        self.evals.last()
+    }
+
+    /// Best evaluation so far (max objective). None when empty.
+    pub fn best(&self) -> Option<&Evaluation> {
+        self.evals
+            .iter()
+            .max_by(|a, b| a.value.partial_cmp(&b.value).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    /// The `n` best evaluations, best first (for GA parent selection).
+    pub fn top_n(&self, n: usize) -> Vec<&Evaluation> {
+        let mut sorted: Vec<&Evaluation> = self.evals.iter().collect();
+        sorted.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap_or(std::cmp::Ordering::Equal));
+        sorted.truncate(n);
+        sorted
+    }
+
+    /// Raw objective series in evaluation order (Fig. 5 plots this).
+    pub fn values(&self) -> Vec<f64> {
+        self.evals.iter().map(|e| e.value).collect()
+    }
+
+    /// Monotone best-so-far curve.
+    pub fn best_curve(&self) -> Vec<f64> {
+        crate::util::stats::best_so_far(&self.values())
+    }
+
+    /// Has this exact configuration been measured already?
+    pub fn seen(&self, config: &[i64]) -> bool {
+        self.evals.iter().any(|e| e.config == config)
+    }
+
+    /// Per-parameter sampled (min, max) over all evaluations — Table 2's
+    /// raw material. None when empty.
+    pub fn sampled_ranges(&self, dim: usize) -> Option<Vec<(i64, i64)>> {
+        if self.evals.is_empty() {
+            return None;
+        }
+        let mut ranges = vec![(i64::MAX, i64::MIN); dim];
+        for e in &self.evals {
+            assert_eq!(e.config.len(), dim, "inconsistent config dims in history");
+            for (r, &v) in ranges.iter_mut().zip(&e.config) {
+                r.0 = r.0.min(v);
+                r.1 = r.1.max(v);
+            }
+        }
+        Some(ranges)
+    }
+
+    /// Table 2's percentage: sampled span / tunable span per parameter.
+    pub fn sampled_range_pct(&self, space: &SearchSpace) -> Option<Vec<f64>> {
+        let ranges = self.sampled_ranges(space.dim())?;
+        Some(
+            space
+                .params
+                .iter()
+                .zip(&ranges)
+                .map(|(p, &(lo, hi))| {
+                    if p.max == p.min {
+                        100.0
+                    } else {
+                        100.0 * (hi - lo) as f64 / (p.max - p.min) as f64
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    // -- persistence --------------------------------------------------------
+
+    pub fn to_jsonl(&self, space: &SearchSpace) -> String {
+        let mut out = String::new();
+        for e in &self.evals {
+            let line = Json::obj(vec![
+                ("iteration", Json::from(e.iteration)),
+                ("config", space.config_to_json(&e.config)),
+                ("value", Json::from(e.value)),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_jsonl(text: &str, space: &SearchSpace) -> Result<History, String> {
+        let mut h = History::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = crate::util::json::parse(line)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let cfg = space
+                .config_from_json(j.req("config").map_err(|e| e.to_string())?)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let value = j
+                .get("value")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("line {}: missing value", lineno + 1))?;
+            h.push(cfg, value);
+        }
+        Ok(h)
+    }
+
+    pub fn save(&self, path: &Path, space: &SearchSpace) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_jsonl(space).as_bytes())
+    }
+
+    pub fn load(path: &Path, space: &SearchSpace) -> std::io::Result<History> {
+        let f = std::fs::File::open(path)?;
+        let mut text = String::new();
+        for line in std::io::BufReader::new(f).lines() {
+            text.push_str(&line?);
+            text.push('\n');
+        }
+        History::from_jsonl(&text, space)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+}
+
+/// Convenience: seeded random history (used by tests and benches).
+pub fn random_history(space: &SearchSpace, n: usize, seed: u64) -> History {
+    let mut rng = Rng::new(seed);
+    let mut h = History::new();
+    for _ in 0..n {
+        let cfg = space.random(&mut rng);
+        let v = rng.range_f64(10.0, 500.0);
+        h.push(cfg, v);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::threading_space;
+    use crate::util::prop;
+
+    fn space() -> SearchSpace {
+        threading_space(64, 1024, 64)
+    }
+
+    #[test]
+    fn best_and_curve() {
+        let s = space();
+        let mut h = History::new();
+        let mut rng = Rng::new(1);
+        for v in [3.0, 1.0, 7.0, 5.0] {
+            let cfg = s.random(&mut rng);
+            h.push(cfg, v);
+        }
+        assert_eq!(h.best().unwrap().value, 7.0);
+        assert_eq!(h.best_curve(), vec![3.0, 3.0, 7.0, 7.0]);
+        assert_eq!(h.best().unwrap().iteration, 2);
+    }
+
+    #[test]
+    fn top_n_sorted_desc() {
+        let s = space();
+        let mut h = History::new();
+        let mut rng = Rng::new(2);
+        for v in [3.0, 9.0, 1.0, 7.0] {
+            h.push(s.random(&mut rng), v);
+        }
+        let top = h.top_n(2);
+        assert_eq!(top[0].value, 9.0);
+        assert_eq!(top[1].value, 7.0);
+    }
+
+    #[test]
+    fn sampled_ranges_track_extremes() {
+        let s = space();
+        let mut h = History::new();
+        h.push(vec![1, 10, 64, 0, 5], 1.0);
+        h.push(vec![4, 30, 512, 200, 50], 2.0);
+        let r = h.sampled_ranges(5).unwrap();
+        assert_eq!(r[0], (1, 4));
+        assert_eq!(r[3], (0, 200));
+        let pct = h.sampled_range_pct(&s).unwrap();
+        assert!((pct[0] - 100.0).abs() < 1e-9); // inter_op covered 1..4 fully
+        assert!((pct[3] - 100.0).abs() < 1e-9); // blocktime 0..200 fully
+        assert!(pct[1] < 50.0); // intra 10..30 of 1..56
+    }
+
+    #[test]
+    fn jsonl_round_trip() {
+        let s = space();
+        let h = random_history(&s, 23, 7);
+        let text = h.to_jsonl(&s);
+        let h2 = History::from_jsonl(&text, &s).unwrap();
+        assert_eq!(h.evals, h2.evals);
+    }
+
+    #[test]
+    fn jsonl_rejects_bad_lines() {
+        let s = space();
+        assert!(History::from_jsonl("{not json}\n", &s).is_err());
+        assert!(History::from_jsonl(r#"{"value": 1}"#, &s).is_err());
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let s = space();
+        let h = random_history(&s, 11, 3);
+        let dir = std::env::temp_dir().join("tftune_test_hist");
+        let path = dir.join("h.jsonl");
+        h.save(&path, &s).unwrap();
+        let h2 = History::load(&path, &s).unwrap();
+        assert_eq!(h.evals, h2.evals);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prop_best_curve_monotone_and_bounded() {
+        let s = space();
+        prop::check("best curve monotone", 100, |rng| {
+            let n = 1 + rng.index(40);
+            let mut h = History::new();
+            for _ in 0..n {
+                h.push(s.random(rng), rng.range_f64(-5.0, 5.0));
+            }
+            let curve = h.best_curve();
+            assert_eq!(curve.len(), n);
+            for w in curve.windows(2) {
+                assert!(w[1] >= w[0]);
+            }
+            assert_eq!(*curve.last().unwrap(), h.best().unwrap().value);
+        });
+    }
+
+    #[test]
+    fn seen_detects_duplicates() {
+        let mut h = History::new();
+        let cfg = vec![1, 10, 64, 0, 5];
+        assert!(!h.seen(&cfg));
+        h.push(cfg.clone(), 1.0);
+        assert!(h.seen(&cfg));
+        assert!(!h.seen(&[2, 10, 64, 0, 5]));
+    }
+}

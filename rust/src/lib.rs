@@ -1,0 +1,33 @@
+//! tftune: gradient-free auto-tuning of a TensorFlow-style CPU backend.
+//!
+//! Reproduction of "Automatic Tuning of TensorFlow's CPU Backend using
+//! Gradient-Free Optimization Algorithms" (Mebratu et al., MLHPCS/ISC 2021)
+//! as a three-layer Rust + JAX + Pallas system. See DESIGN.md.
+//!
+//! Layers:
+//! - L3 (this crate): the tuning coordinator — search space, BO/GA/NMS
+//!   engines, evaluation history, the host/target protocol, the
+//!   system-under-test simulator substrate, and figure/table harnesses.
+//! - L2 (python/compile/model.py): the Gaussian-process surrogate
+//!   fit+predict+acquisition graph, AOT-lowered to HLO text at build time.
+//! - L1 (python/compile/kernels/rbf.py): the Pallas RBF kernel-matrix
+//!   kernel invoked from the L2 graph.
+//!
+//! Python is never on the tuning request path: the Rust BO engine executes
+//! the AOT-compiled GP artifact via PJRT (`runtime`).
+
+pub mod algorithms;
+pub mod config;
+pub mod evaluator;
+pub mod figures;
+pub mod gp;
+pub mod history;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod space;
+pub mod util;
+
+pub use config::TuneConfig;
+pub use history::{Evaluation, History};
+pub use space::{ParamDef, SearchSpace};

@@ -1,0 +1,329 @@
+//! tftune CLI — the launcher for every workflow in the repo.
+//!
+//! Subcommands:
+//!   tune         run one tuning session on the simulated target
+//!   serve        run the target-side evaluation daemon (paper Fig. 4)
+//!   remote-tune  drive a remote target daemon as the host
+//!   sweep        Fig. 6 exhaustive sweep (+ findings table)
+//!   figures      regenerate paper figures/tables (fig5 fig6 fig7 table1 all)
+//!   space        print Table 1 / search-space info
+//!
+//! Flag parsing is in-tree (clap is not vendored in this offline image).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use tftune::algorithms::Algorithm;
+use tftune::config::{SurrogateKind, TuneConfig};
+use tftune::evaluator::{tune, Evaluator, RemoteEvaluator, SimEvaluator};
+use tftune::figures::{fig5, fig6, fig7, tables, OUT_DIR};
+use tftune::server::TargetServer;
+use tftune::sim::ModelId;
+
+/// Minimal flag parser: `--key value` pairs plus positional args.
+struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key == "fine" || key == "help" {
+                    flags.insert(key.to_string(), "true".to_string());
+                } else {
+                    i += 1;
+                    let v = argv.get(i).with_context(|| format!("--{key} needs a value"))?;
+                    flags.insert(key.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { flags, positional })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+}
+
+fn usage() -> &'static str {
+    "tftune — gradient-free auto-tuning of a TensorFlow-style CPU backend
+
+USAGE: tftune <command> [flags]
+
+COMMANDS
+  tune         --model <m> --alg <bo|ga|nms|random|grid> [--iters 50]
+               [--seed 0] [--surrogate native|hlo] [--objective
+               throughput|latency] [--out hist.jsonl] [--config run.json]
+  serve        --model <m> [--addr 127.0.0.1:7070] [--seed 0]
+  remote-tune  --addr <host:port> --model <m> --alg <a> [--iters 50] [--seed 0]
+  sweep        [--fine] [--out-dir figures_out]   (Fig. 6)
+  figures      <fig5|fig6|fig7|table1|table2|all> [--iters 50]
+               [--seeds 0,1,2] [--surrogate native|hlo] [--out-dir figures_out]
+  space        [--model <m>]                      (Table 1)
+  profile      --model <m> [--inter 1 --intra 14 --batch 256 --blocktime 0
+               --omp 24]   (per-op schedule under a configuration)
+
+MODELS
+  ssd-mobilenet resnet50-fp32 resnet50-int8 transformer-lt bert ncf
+ALGORITHMS
+  bo ga nms random grid sa coord"
+}
+
+fn parse_model(args: &Args) -> Result<ModelId> {
+    let name = args.get("model").context("--model is required")?;
+    ModelId::parse(name).with_context(|| format!("unknown model '{name}' (see `tftune space`)"))
+}
+
+fn parse_alg(args: &Args) -> Result<Algorithm> {
+    let name = args.get("alg").context("--alg is required")?;
+    Algorithm::parse(name).with_context(|| format!("unknown algorithm '{name}'"))
+}
+
+fn parse_surrogate(args: &Args) -> Result<SurrogateKind> {
+    match args.get("surrogate") {
+        None => Ok(SurrogateKind::Native),
+        Some(s) => SurrogateKind::parse(s).with_context(|| format!("unknown surrogate '{s}'")),
+    }
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TuneConfig::load(Path::new(path))?,
+        None => TuneConfig::default(),
+    };
+    if args.get("model").is_some() {
+        cfg.model = parse_model(args)?;
+    }
+    if args.get("alg").is_some() {
+        cfg.algorithm = parse_alg(args)?;
+    }
+    cfg.iterations = args.usize_or("iters", cfg.iterations)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    if args.get("surrogate").is_some() {
+        cfg.surrogate = parse_surrogate(args)?;
+    }
+    if let Some(out) = args.get("out") {
+        cfg.history_out = Some(PathBuf::from(out));
+    }
+    if let Some(o) = args.get("objective") {
+        cfg.objective = tftune::evaluator::Objective::parse(o)
+            .with_context(|| format!("unknown objective '{o}'"))?;
+    }
+
+    println!(
+        "tuning {} with {} for {} iterations (seed {}, surrogate {}, objective {})",
+        cfg.model.name(),
+        cfg.algorithm.name(),
+        cfg.iterations,
+        cfg.seed,
+        cfg.surrogate.name(),
+        cfg.objective.name()
+    );
+    let history = cfg.run()?;
+    let best = history.best().context("empty history")?;
+    println!(
+        "best {}: {:.2} {} at iteration {}",
+        cfg.objective.name(),
+        best.value,
+        cfg.objective.unit(),
+        best.iteration
+    );
+    let space = cfg.model.space();
+    println!("best config: {}", space.config_to_json(&best.config));
+    if let Some(p) = &cfg.history_out {
+        println!("history written to {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7070");
+    let seed = args.u64_or("seed", 0)?;
+    let space = model.space();
+    let server = TargetServer::bind(addr, space, Box::new(SimEvaluator::new(model, seed)))?;
+    println!("target daemon serving sim:{} on {}", model.name(), server.local_addr()?);
+    let served = server.serve()?;
+    println!("daemon shut down after {served} evaluations");
+    Ok(())
+}
+
+fn cmd_remote_tune(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let alg = parse_alg(args)?;
+    let addr = args.get("addr").context("--addr is required")?;
+    let iters = args.usize_or("iters", 50)?;
+    let seed = args.u64_or("seed", 0)?;
+    let space = model.space();
+    let mut remote = RemoteEvaluator::connect(addr, space.clone())?;
+    println!("connected to {}", remote.describe());
+    let mut tuner = alg.build(&space, seed);
+    let history = tune(tuner.as_mut(), &mut remote, iters)?;
+    let best = history.best().context("empty history")?;
+    println!("best throughput: {:.2} examples/s", best.value);
+    println!("best config: {}", space.config_to_json(&best.config));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let fine = args.get("fine").is_some();
+    let out_dir = PathBuf::from(args.get("out-dir").unwrap_or(OUT_DIR));
+    let t0 = std::time::Instant::now();
+    let points = fig6::run_sweep(ModelId::Resnet50Int8, fine);
+    let secs = t0.elapsed().as_secs_f64();
+    let findings = fig6::analyze(&points);
+    fig6::print_findings(&findings);
+    println!("sweep of {} points took {secs:.2}s here", points.len());
+    let path = fig6::write_csv(&points, &out_dir)?;
+    println!("csv written to {}", path.display());
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let what = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let iters = args.usize_or("iters", 50)?;
+    let seeds: Vec<u64> = match args.get("seeds") {
+        None => vec![0, 1, 2],
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().parse::<u64>().context("bad --seeds"))
+            .collect::<Result<_>>()?,
+    };
+    let surrogate = parse_surrogate(args)?;
+    let out_dir = PathBuf::from(args.get("out-dir").unwrap_or(OUT_DIR));
+
+    if matches!(what, "table1" | "all") {
+        tables::print_table1();
+        tables::print_space_sizes();
+    }
+    if matches!(what, "fig5" | "all") {
+        let curves = fig5::run_figure(iters, &seeds, surrogate, &out_dir)?;
+        fig5::print_summary(&curves);
+        println!("fig5 CSVs written under {}", out_dir.display());
+    }
+    if matches!(what, "fig6" | "all") {
+        let points = fig6::run_sweep(ModelId::Resnet50Int8, false);
+        fig6::print_findings(&fig6::analyze(&points));
+        fig6::write_csv(&points, &out_dir)?;
+    }
+    if matches!(what, "fig7" | "table2" | "all") {
+        let samples = fig7::run_samples(iters, seeds[0], surrogate)?;
+        fig7::write_csv(&samples, &out_dir)?;
+        fig7::print_table2(&samples);
+        println!("fig7 CSVs written under {}", out_dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_space(args: &Args) -> Result<()> {
+    tables::print_table1();
+    if let Some(name) = args.get("model") {
+        let model = ModelId::parse(name).with_context(|| format!("unknown model '{name}'"))?;
+        let space = model.space();
+        println!("\n{}: {} grid points", model.name(), space.size());
+        for p in &space.params {
+            println!(
+                "  {:<32} [{}, {}] step {} ({} values)",
+                p.name,
+                p.min,
+                p.max,
+                p.step,
+                p.n_values()
+            );
+        }
+    } else {
+        tables::print_space_sizes();
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let space = model.space();
+    let cfg = space.snap(&vec![
+        args.u64_or("inter", 1)? as i64,
+        args.u64_or("intra", 14)? as i64,
+        args.u64_or("batch", space.params[2].min as u64)? as i64,
+        args.u64_or("blocktime", 0)? as i64,
+        args.u64_or("omp", 24)? as i64,
+    ]);
+    let workload = tftune::sim::SimWorkload::noiseless(model);
+    let report = workload.report(&cfg);
+    println!("profile of {} under {}", model.name(), space.config_to_json(&cfg));
+    println!(
+        "latency {:.3} ms  throughput {:.1} ex/s  peak thread demand {:.0}\n",
+        report.latency_s * 1e3,
+        report.throughput,
+        report.peak_demand
+    );
+    println!("{:<24} {:>10} {:>10} {:>8} {:>9}  timeline", "op", "start(us)", "dur(us)", "threads", "slowdown");
+    let width = 44usize;
+    for ev in &report.trace {
+        let s = (ev.start_s / report.latency_s * width as f64) as usize;
+        let e = ((ev.end_s / report.latency_s * width as f64) as usize).max(s + 1);
+        let bar: String = (0..width)
+            .map(|i| if i >= s && i < e.min(width) { '#' } else { '.' })
+            .collect();
+        println!(
+            "{:<24} {:>10.1} {:>10.1} {:>8.0} {:>9.2}  {bar}",
+            ev.op,
+            ev.start_s * 1e6,
+            (ev.end_s - ev.start_s) * 1e6,
+            ev.threads,
+            ev.slowdown
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{}", usage());
+        return Ok(());
+    }
+    let args = Args::parse(&argv)?;
+    if args.get("help").is_some() {
+        println!("{}", usage());
+        return Ok(());
+    }
+    match args.positional.first().map(String::as_str) {
+        Some("tune") => cmd_tune(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("remote-tune") => cmd_remote_tune(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("space") => cmd_space(&args),
+        Some("profile") => cmd_profile(&args),
+        Some(other) => bail!("unknown command '{other}'\n\n{}", usage()),
+        None => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}

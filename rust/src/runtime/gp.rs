@@ -1,0 +1,129 @@
+//! The AOT GP surrogate: executes `artifacts/gp.hlo.txt` (L2 JAX graph
+//! containing the L1 Pallas RBF kernel) via PJRT on every BO iteration.
+//!
+//! The artifact is monomorphic: N_PAD history slots, D_FEAT features,
+//! C_CAND candidates (shape contract read from meta.json and asserted
+//! here). This wrapper pads/masks the live history, marshals buffers, and
+//! unpacks the (mu, sigma, gain) tuple.
+
+use anyhow::{Context, Result};
+
+use super::{literal_f32, Runtime};
+use crate::gp::{GpHyper, Scores, Surrogate};
+
+pub struct GpSurrogate {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_pad: usize,
+    pub d_feat: usize,
+    pub c_cand: usize,
+}
+
+impl GpSurrogate {
+    /// Compile the GP artifact from a runtime.
+    pub fn load(rt: &Runtime) -> Result<GpSurrogate> {
+        let gp_meta = rt.meta().get("gp").context("meta.json missing 'gp'")?;
+        let n_pad = gp_meta.req("n_pad").map_err(anyhow::Error::msg)?.as_i64().unwrap() as usize;
+        let d_feat = gp_meta.req("d_feat").map_err(anyhow::Error::msg)?.as_i64().unwrap() as usize;
+        let c_cand = gp_meta.req("c_cand").map_err(anyhow::Error::msg)?.as_i64().unwrap() as usize;
+        let file = gp_meta
+            .get("file")
+            .and_then(crate::util::Json::as_str)
+            .unwrap_or("gp.hlo.txt")
+            .to_string();
+        let exe = rt.compile(&file)?;
+        Ok(GpSurrogate { exe, n_pad, d_feat, c_cand })
+    }
+
+    /// Convenience: open the default runtime and load.
+    pub fn open_default() -> Result<GpSurrogate> {
+        let rt = Runtime::open_default()?;
+        GpSurrogate::load(&rt)
+    }
+
+    /// Execute the artifact on padded buffers. x rows must already be in
+    /// [0,1]^d with d <= d_feat; y standardised.
+    fn execute(
+        &self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        cand: &[Vec<f64>],
+        hyper: GpHyper,
+        acq_alpha: f64,
+        y_best: f64,
+    ) -> Result<Scores> {
+        let n = x.len();
+        anyhow::ensure!(n > 0, "empty history");
+        anyhow::ensure!(n <= self.n_pad, "history {n} exceeds artifact N_PAD {}", self.n_pad);
+        anyhow::ensure!(
+            cand.len() <= self.c_cand,
+            "candidates {} exceed artifact C_CAND {}",
+            cand.len(),
+            self.c_cand
+        );
+        let d = x.first().map(|r| r.len()).unwrap_or(0);
+        anyhow::ensure!(d <= self.d_feat, "feature dim {d} exceeds artifact D_FEAT");
+
+        // Pad xtr / ytr / mask to N_PAD, candidates to C_CAND.
+        let mut xtr = vec![0f32; self.n_pad * self.d_feat];
+        for (i, row) in x.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                xtr[i * self.d_feat + j] = v as f32;
+            }
+        }
+        let mut ytr = vec![0f32; self.n_pad];
+        let mut mask = vec![0f32; self.n_pad];
+        for (i, &v) in y.iter().enumerate() {
+            ytr[i] = v as f32;
+            mask[i] = 1.0;
+        }
+        let mut xc = vec![0f32; self.c_cand * self.d_feat];
+        for (i, row) in cand.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                xc[i * self.d_feat + j] = v as f32;
+            }
+        }
+        let hyper_v = [
+            hyper.lengthscale as f32,
+            hyper.signal_var as f32,
+            hyper.noise_var as f32,
+            acq_alpha as f32,
+            y_best as f32,
+        ];
+
+        let args = [
+            literal_f32(&xtr, &[self.n_pad as i64, self.d_feat as i64])?,
+            literal_f32(&ytr, &[self.n_pad as i64])?,
+            literal_f32(&mask, &[self.n_pad as i64])?,
+            literal_f32(&xc, &[self.c_cand as i64, self.d_feat as i64])?,
+            literal_f32(&hyper_v, &[5])?,
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .context("fetching GP result")?;
+        let (mu_l, sigma_l, gain_l) = result.to_tuple3().context("unpacking GP tuple")?;
+        let mu: Vec<f32> = mu_l.to_vec()?;
+        let sigma: Vec<f32> = sigma_l.to_vec()?;
+        let gain: Vec<f32> = gain_l.to_vec()?;
+
+        let take = cand.len();
+        Ok(Scores {
+            mean: mu[..take].iter().map(|&v| v as f64).collect(),
+            std: sigma[..take].iter().map(|&v| v as f64).collect(),
+            gain: gain[..take].iter().map(|&v| v as f64).collect(),
+        })
+    }
+}
+
+impl Surrogate for GpSurrogate {
+    fn fit_score(
+        &mut self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        cand: &[Vec<f64>],
+        hyper: GpHyper,
+        acq_alpha: f64,
+        y_best: f64,
+    ) -> Result<Scores> {
+        self.execute(x, y, cand, hyper, acq_alpha, y_best)
+    }
+}

@@ -1,0 +1,123 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the Rust hot path.
+//!
+//! This is the bridge between L3 (this crate) and L2/L1 (the JAX + Pallas
+//! graphs lowered by `python/compile/aot.py`). Artifacts are HLO *text* —
+//! the only interchange format xla_extension 0.5.1 accepts from jax ≥ 0.5
+//! protos (see /opt/xla-example/README.md). Each artifact compiles once at
+//! load time into a `PjRtLoadedExecutable`; executions after that are
+//! pure C++ with no Python anywhere.
+
+pub mod gp;
+pub mod workload;
+
+pub use gp::GpSurrogate;
+pub use workload::WorkloadRunner;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Shared PJRT CPU client + artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    meta: Json,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read `meta.json` from `dir`.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", meta_path.display()))?;
+        let meta = parse(&text).map_err(|e| anyhow::anyhow!("parsing meta.json: {e}"))?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), meta })
+    }
+
+    /// Open the default `artifacts/` directory, searching upward from the
+    /// current directory (so tests and examples work from any cwd).
+    pub fn open_default() -> Result<Runtime> {
+        let dir = find_artifacts_dir()
+            .context("artifacts/ not found; run `make artifacts` first")?;
+        Runtime::new(&dir)
+    }
+
+    pub fn meta(&self) -> &Json {
+        &self.meta
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+/// Search for `artifacts/meta.json` in cwd and up to 4 parent directories.
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    for _ in 0..5 {
+        let cand = dir.join(DEFAULT_ARTIFACTS_DIR);
+        if cand.join("meta.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    // also try the crate root at compile time (tests run from target dirs)
+    let crate_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACTS_DIR);
+    if crate_dir.join("meta.json").exists() {
+        return Some(crate_dir);
+    }
+    None
+}
+
+/// Flatten an f32 slice into a Literal of the given dims.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_artifacts_dir_from_manifest() {
+        // artifacts/ is built before cargo test in the Makefile.
+        if let Some(dir) = find_artifacts_dir() {
+            assert!(dir.join("meta.json").exists());
+        }
+    }
+
+    #[test]
+    fn literal_f32_shape_check() {
+        assert!(literal_f32(&[1.0, 2.0], &[2, 2]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Real tunable workload: the AOT-compiled MLP inference graphs
+//! (`artifacts/workload_b{B}.hlo.txt`), one executable per batch size.
+//!
+//! This is the *measurable* system-under-test for the end-to-end example:
+//! the tuner varies batch size, the runner executes the actual PJRT
+//! executable and reports measured examples/second — real numbers from a
+//! real system, no simulator involved.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::{literal_f32, Runtime};
+use crate::util::{Json, Rng};
+
+pub struct WorkloadRunner {
+    /// Compiled executable + prepared input literals per batch size.
+    exes: BTreeMap<i64, (xla::PjRtLoadedExecutable, Vec<xla::Literal>)>,
+    pub batches: Vec<i64>,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub flops_per_example: f64,
+}
+
+impl WorkloadRunner {
+    pub fn load(rt: &Runtime) -> Result<WorkloadRunner> {
+        let meta = rt.meta().get("workload").context("meta.json missing 'workload'")?;
+        let batches: Vec<i64> = meta
+            .req("batches")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("batches not an array")?
+            .iter()
+            .filter_map(Json::as_i64)
+            .collect();
+        let d_in = meta.req("d_in").map_err(anyhow::Error::msg)?.as_i64().unwrap() as usize;
+        let d_hidden =
+            meta.req("d_hidden").map_err(anyhow::Error::msg)?.as_i64().unwrap() as usize;
+        let d_out = meta.req("d_out").map_err(anyhow::Error::msg)?.as_i64().unwrap() as usize;
+        let flops_per_example = meta
+            .req("flops_per_example")
+            .map_err(anyhow::Error::msg)?
+            .as_f64()
+            .unwrap();
+
+        // Deterministic random weights shared across batch variants.
+        let mut rng = Rng::new(0xD00D);
+        let mut gen = |n: usize, scale: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+        };
+        let w1 = gen(d_in * d_hidden, 0.1);
+        let b1 = gen(d_hidden, 0.01);
+        let w2 = gen(d_hidden * d_hidden, 0.05);
+        let b2 = gen(d_hidden, 0.01);
+        let w3 = gen(d_hidden * d_out, 0.1);
+        let b3 = gen(d_out, 0.01);
+
+        let mut exes = BTreeMap::new();
+        for &b in &batches {
+            let file = format!("workload_b{b}.hlo.txt");
+            let exe = rt.compile(&file)?;
+            let x = gen(b as usize * d_in, 1.0);
+            let args = vec![
+                literal_f32(&x, &[b, d_in as i64])?,
+                literal_f32(&w1, &[d_in as i64, d_hidden as i64])?,
+                literal_f32(&b1, &[d_hidden as i64])?,
+                literal_f32(&w2, &[d_hidden as i64, d_hidden as i64])?,
+                literal_f32(&b2, &[d_hidden as i64])?,
+                literal_f32(&w3, &[d_hidden as i64, d_out as i64])?,
+                literal_f32(&b3, &[d_out as i64])?,
+            ];
+            exes.insert(b, (exe, args));
+        }
+        Ok(WorkloadRunner { exes, batches, d_in, d_out, flops_per_example })
+    }
+
+    pub fn open_default() -> Result<WorkloadRunner> {
+        let rt = Runtime::open_default()?;
+        WorkloadRunner::load(&rt)
+    }
+
+    /// Run one inference at the given batch size; returns the output
+    /// probabilities (sanity: batch * d_out values, rows sum to 1).
+    pub fn run_once(&self, batch: i64) -> Result<Vec<f32>> {
+        let (exe, args) = self
+            .exes
+            .get(&batch)
+            .with_context(|| format!("no compiled workload for batch {batch}"))?;
+        let out = exe.execute::<xla::Literal>(args)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Measure throughput (examples/s) at a batch size: `reps` timed
+    /// executions after one warmup.
+    pub fn measure_throughput(&self, batch: i64, reps: usize) -> Result<f64> {
+        let (exe, args) = self
+            .exes
+            .get(&batch)
+            .with_context(|| format!("no compiled workload for batch {batch}"))?;
+        // warmup
+        let _ = exe.execute::<xla::Literal>(args)?;
+        let t0 = Instant::now();
+        for _ in 0..reps.max(1) {
+            let bufs = exe.execute::<xla::Literal>(args)?;
+            // Force completion by materialising the literal.
+            let _ = bufs[0][0].to_literal_sync()?;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        Ok(batch as f64 * reps.max(1) as f64 / dt)
+    }
+}

@@ -1,0 +1,215 @@
+//! The target-side daemon of the paper's host/target split (Fig. 4).
+//!
+//! The optimization framework ("host") runs the algorithm engines; the
+//! system under test ("target") runs this daemon, which applies requested
+//! configurations and reports measurements back over a JSON-lines TCP
+//! protocol (`proto`). The separation keeps the tuner's compute from
+//! interfering with workload measurements and lets a weak host machine
+//! drive a powerful target — exactly the paper's deployment.
+//!
+//! std::net + one thread per connection (tokio is not vendored in this
+//! offline image; the protocol is line-oriented and trivially blocking).
+
+pub mod proto;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::evaluator::Evaluator;
+use crate::space::SearchSpace;
+use proto::{decode_request, encode_response, Request, Response};
+
+/// Shared server state.
+struct Shared {
+    evaluator: Mutex<Box<dyn Evaluator + Send>>,
+    space: SearchSpace,
+    served: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+/// A running target daemon.
+pub struct TargetServer {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl TargetServer {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(
+        addr: &str,
+        space: SearchSpace,
+        evaluator: Box<dyn Evaluator + Send>,
+    ) -> Result<TargetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(TargetServer {
+            listener,
+            shared: Arc::new(Shared {
+                evaluator: Mutex::new(evaluator),
+                space,
+                served: AtomicUsize::new(0),
+                shutdown: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until a shutdown request arrives. Blocking; one thread per
+    /// connection.
+    pub fn serve(self) -> Result<usize> {
+        let mut handles = Vec::new();
+        for stream in self.listener.incoming() {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = stream?;
+            // see RemoteEvaluator::connect — line-oriented protocol needs
+            // nodelay on both ends to dodge Nagle/delayed-ACK stalls
+            let _ = stream.set_nodelay(true);
+            let shared = Arc::clone(&self.shared);
+            handles.push(std::thread::spawn(move || handle_connection(stream, &shared)));
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(self.shared.served.load(Ordering::SeqCst))
+    }
+
+    /// Spawn the server on a background thread; returns (addr, handle).
+    pub fn spawn(self) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<Result<usize>>)>
+    {
+        let addr = self.local_addr()?;
+        let handle = std::thread::spawn(move || self.serve());
+        Ok((addr, handle))
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match decode_request(&line, &shared.space) {
+            Err(e) => Response::Error { message: e },
+            Ok(Request::Describe) => {
+                let desc = shared.evaluator.lock().unwrap().describe();
+                Response::Target { description: desc }
+            }
+            Ok(Request::Evaluate(cfg)) => {
+                let result = shared.evaluator.lock().unwrap().evaluate(&cfg);
+                match result {
+                    Ok(value) => {
+                        shared.served.fetch_add(1, Ordering::SeqCst);
+                        Response::Result { value, config: cfg }
+                    }
+                    Err(e) => Response::Error { message: format!("evaluation failed: {e}") },
+                }
+            }
+            Ok(Request::Shutdown) => {
+                shared.shutdown.store(true, Ordering::SeqCst);
+                let _ = writeln!(writer, "{}", encode_response(&Response::Bye, &shared.space));
+                // poke the accept loop so serve() notices the flag
+                if let Ok(addr) = writer.local_addr() {
+                    let _ = TcpStream::connect(addr);
+                }
+                return;
+            }
+        };
+        if writeln!(writer, "{}", encode_response(&resp, &shared.space)).is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evaluator::SimEvaluator;
+    use crate::sim::ModelId;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn start() -> (std::net::SocketAddr, std::thread::JoinHandle<Result<usize>>, SearchSpace)
+    {
+        let model = ModelId::NcfFp32;
+        let space = model.space();
+        let server = TargetServer::bind(
+            "127.0.0.1:0",
+            space.clone(),
+            Box::new(SimEvaluator::new(model, 9)),
+        )
+        .unwrap();
+        let (addr, handle) = server.spawn().unwrap();
+        (addr, handle, space)
+    }
+
+    fn send(addr: std::net::SocketAddr, lines: &[String]) -> Vec<String> {
+        let mut s = TcpStream::connect(addr).unwrap();
+        for l in lines {
+            writeln!(s, "{l}").unwrap();
+        }
+        let reader = BufReader::new(s.try_clone().unwrap());
+        let mut out = Vec::new();
+        for line in reader.lines().take(lines.len()) {
+            out.push(line.unwrap());
+        }
+        drop(s);
+        out
+    }
+
+    #[test]
+    fn describe_evaluate_shutdown() {
+        let (addr, handle, space) = start();
+        let resp = send(
+            addr,
+            &[
+                proto::encode_request(&Request::Describe, &space),
+                proto::encode_request(&Request::Evaluate(vec![1, 8, 128, 0, 8]), &space),
+            ],
+        );
+        let r0 = proto::decode_response(&resp[0], &space).unwrap();
+        assert!(matches!(r0, Response::Target { .. }));
+        match proto::decode_response(&resp[1], &space).unwrap() {
+            Response::Result { value, config } => {
+                assert!(value > 0.0);
+                assert_eq!(config, vec![1, 8, 128, 0, 8]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // shutdown
+        let _ = send(addr, &[proto::encode_request(&Request::Shutdown, &space)]);
+        let served = handle.join().unwrap().unwrap();
+        assert_eq!(served, 1);
+    }
+
+    #[test]
+    fn garbage_request_gets_error_response() {
+        let (addr, handle, space) = start();
+        let resp = send(addr, &["this is not json".to_string()]);
+        match proto::decode_response(&resp[0], &space).unwrap() {
+            Response::Error { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        let _ = send(addr, &[proto::encode_request(&Request::Shutdown, &space)]);
+        let _ = handle.join();
+    }
+}

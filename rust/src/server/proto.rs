@@ -1,0 +1,161 @@
+//! Wire protocol for the host/target split (paper Fig. 4): JSON-lines
+//! over TCP. One request per line, one response per line.
+//!
+//! Requests:
+//!   {"type":"describe"}
+//!   {"type":"evaluate","config":{"<param>":<int>,...}}
+//!   {"type":"shutdown"}
+//! Responses:
+//!   {"type":"target","description":"..."}
+//!   {"type":"result","value":<f64>,"config":{...}}
+//!   {"type":"error","message":"..."}
+//!   {"type":"bye"}
+
+use crate::space::{Config, SearchSpace};
+use crate::util::json::{parse, Json};
+
+/// Parsed request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Describe,
+    Evaluate(Config),
+    Shutdown,
+}
+
+/// Parsed response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Target { description: String },
+    Result { value: f64, config: Config },
+    Error { message: String },
+    Bye,
+}
+
+pub fn encode_request(req: &Request, space: &SearchSpace) -> String {
+    match req {
+        Request::Describe => Json::obj(vec![("type", "describe".into())]).to_string(),
+        Request::Evaluate(cfg) => Json::obj(vec![
+            ("type", "evaluate".into()),
+            ("config", space.config_to_json(cfg)),
+        ])
+        .to_string(),
+        Request::Shutdown => Json::obj(vec![("type", "shutdown".into())]).to_string(),
+    }
+}
+
+pub fn decode_request(line: &str, space: &SearchSpace) -> Result<Request, String> {
+    let j = parse(line).map_err(|e| e.to_string())?;
+    match j.get("type").and_then(Json::as_str) {
+        Some("describe") => Ok(Request::Describe),
+        Some("evaluate") => {
+            let cfg = space.config_from_json(j.req("config").map_err(|e| e.to_string())?)?;
+            Ok(Request::Evaluate(cfg))
+        }
+        Some("shutdown") => Ok(Request::Shutdown),
+        other => Err(format!("unknown request type {other:?}")),
+    }
+}
+
+pub fn encode_response(resp: &Response, space: &SearchSpace) -> String {
+    match resp {
+        Response::Target { description } => Json::obj(vec![
+            ("type", "target".into()),
+            ("description", description.as_str().into()),
+        ])
+        .to_string(),
+        Response::Result { value, config } => Json::obj(vec![
+            ("type", "result".into()),
+            ("value", (*value).into()),
+            ("config", space.config_to_json(config)),
+        ])
+        .to_string(),
+        Response::Error { message } => Json::obj(vec![
+            ("type", "error".into()),
+            ("message", message.as_str().into()),
+        ])
+        .to_string(),
+        Response::Bye => Json::obj(vec![("type", "bye".into())]).to_string(),
+    }
+}
+
+pub fn decode_response(line: &str, space: &SearchSpace) -> Result<Response, String> {
+    let j = parse(line).map_err(|e| e.to_string())?;
+    match j.get("type").and_then(Json::as_str) {
+        Some("target") => Ok(Response::Target {
+            description: j
+                .get("description")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+        }),
+        Some("result") => {
+            let value = j
+                .get("value")
+                .and_then(Json::as_f64)
+                .ok_or("result missing value")?;
+            let cfg = space.config_from_json(j.req("config").map_err(|e| e.to_string())?)?;
+            Ok(Response::Result { value, config: cfg })
+        }
+        Some("error") => Ok(Response::Error {
+            message: j.get("message").and_then(Json::as_str).unwrap_or("").to_string(),
+        }),
+        Some("bye") => Ok(Response::Bye),
+        other => Err(format!("unknown response type {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::threading_space;
+    use crate::util::prop;
+
+    fn space() -> SearchSpace {
+        threading_space(64, 1024, 64)
+    }
+
+    #[test]
+    fn request_round_trip() {
+        let s = space();
+        for req in [
+            Request::Describe,
+            Request::Evaluate(vec![2, 10, 128, 30, 20]),
+            Request::Shutdown,
+        ] {
+            let line = encode_request(&req, &s);
+            assert_eq!(decode_request(&line, &s).unwrap(), req, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let s = space();
+        for resp in [
+            Response::Target { description: "sim:X".into() },
+            Response::Result { value: 123.5, config: vec![1, 1, 64, 0, 1] },
+            Response::Error { message: "boom \"quoted\"".into() },
+            Response::Bye,
+        ] {
+            let line = encode_response(&resp, &s);
+            assert_eq!(decode_response(&line, &s).unwrap(), resp, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let s = space();
+        assert!(decode_request("not json", &s).is_err());
+        assert!(decode_request(r#"{"type":"nope"}"#, &s).is_err());
+        assert!(decode_response(r#"{"type":"result"}"#, &s).is_err());
+    }
+
+    #[test]
+    fn prop_evaluate_round_trip_any_config() {
+        let s = space();
+        prop::check("proto evaluate round trip", 100, |rng| {
+            let cfg = s.random(rng);
+            let line = encode_request(&Request::Evaluate(cfg.clone()), &s);
+            assert_eq!(decode_request(&line, &s).unwrap(), Request::Evaluate(cfg));
+        });
+    }
+}

@@ -1,0 +1,447 @@
+//! The dataflow-graph execution engine: a discrete-event simulation of
+//! TensorFlow's inter-op scheduler over the machine and operator models.
+//!
+//! Mechanisms reproduced (each has a directed unit test):
+//!
+//! 1. **Inter-op scheduling** — at most `inter_op_parallelism_threads`
+//!    operators execute concurrently; ready ops queue (list scheduler).
+//! 2. **Per-pool threading** — a oneDNN op uses an OpenMP team of
+//!    `OMP_NUM_THREADS`; an Eigen op uses `intra_op` pool threads; each
+//!    concurrent inter-op worker instantiates its *own* OpenMP team (the
+//!    classic Intel-TF oversubscription trap).
+//! 3. **KMP_BLOCKTIME** — after a oneDNN region finishes, its team spins
+//!    for `blocktime` ms before sleeping. Parked teams of other inter-op
+//!    workers therefore *burn cores* while any op runs (interference grows
+//!    with blocktime); with blocktime=0 every region instead pays a team
+//!    wake cost. This is the 0-vs-200 tradeoff from the paper's Fig. 6.
+//! 4. **Amdahl + roofline op timing** — compute scales with team size;
+//!    memory-bound work saturates at `bw_sat_threads`; a team spanning
+//!    sockets pays the NUMA multiplier; LLC overflow inflates memory time.
+//! 5. **Over-subscription** — total demanded threads beyond physical
+//!    cores slow *everything* down superlinearly.
+//! 6. **Batch amortisation** — per-op dispatch and per-graph fixed costs
+//!    amortise with batch size; throughput saturates, then sags slightly
+//!    past the LLC knee.
+
+use super::machine::Machine;
+use super::op::{Dispatch, Op, Precision};
+use crate::space;
+use crate::space::Config;
+
+/// Decoded tuning configuration (paper Table 1 order; see `space`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ThreadConfig {
+    pub inter_op: i64,
+    pub intra_op: i64,
+    pub batch: i64,
+    pub blocktime_ms: i64,
+    pub omp_threads: i64,
+}
+
+impl ThreadConfig {
+    pub fn from_config(cfg: &Config) -> ThreadConfig {
+        assert_eq!(cfg.len(), 5, "expected 5-parameter configuration");
+        ThreadConfig {
+            inter_op: cfg[space::INTER_OP],
+            intra_op: cfg[space::INTRA_OP],
+            batch: cfg[space::BATCH],
+            blocktime_ms: cfg[space::BLOCKTIME],
+            omp_threads: cfg[space::OMP_THREADS],
+        }
+    }
+}
+
+/// One op's execution record (profiling / the `tftune profile` command).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub op: String,
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Team size the op ran with.
+    pub threads: f64,
+    /// Over-subscription slowdown applied at dispatch.
+    pub slowdown: f64,
+}
+
+/// Execution report for one batch through the graph.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    /// End-to-end latency of one batch, seconds.
+    pub latency_s: f64,
+    /// Throughput, examples/second.
+    pub throughput: f64,
+    /// Peak concurrent thread demand observed.
+    pub peak_demand: f64,
+    /// Total over-subscription-weighted busy time (profiling aid).
+    pub busy_s: f64,
+    /// Per-op schedule (start/end/threads/slowdown), dispatch order.
+    pub trace: Vec<TraceEvent>,
+}
+
+/// Timing for a single op given the current contention snapshot.
+#[allow(clippy::too_many_arguments)]
+fn op_duration(
+    op: &Op,
+    mach: &Machine,
+    tc: &ThreadConfig,
+    precision: Precision,
+    slowdown: f64,
+) -> f64 {
+    let team = match op.dispatch {
+        Dispatch::OneDnn => tc.omp_threads as f64,
+        Dispatch::Eigen => tc.intra_op as f64,
+        Dispatch::Serial => 1.0,
+    }
+    .max(1.0);
+
+    let peak = mach.peak_flops_core * precision.peak_multiplier();
+    let flops = op.flops(tc.batch);
+    let bytes = op.bytes(tc.batch) * precision.bytes_multiplier();
+
+    // Amdahl split: the serial fraction runs on one thread at fp32 peak.
+    // Compute scaling caps at the physical core count (SMT siblings share
+    // FMA ports — see Machine::compute_threads).
+    let p = op.parallel_frac;
+    let comp_team = mach.compute_threads(team);
+    let comp_par = flops * p / (peak * comp_team);
+    let comp_ser = flops * (1.0 - p) / peak;
+
+    // Memory: bandwidth model with saturation + NUMA + LLC pressure.
+    let bw1 = mach.mem_bw / mach.bw_sat_threads; // one thread's share
+    let mem_speed = bw1 * mach.mem_speedup(team);
+    let mut mem = bytes / mem_speed * mach.numa_mult(team);
+    if bytes > mach.llc_bytes {
+        mem *= 1.18; // streaming from DRAM without reuse
+    }
+
+    // Roofline: compute and memory overlap; serial part does not.
+    let work = comp_par.max(mem) + comp_ser;
+
+    // Parallel-region overheads (mechanism 3).
+    let regions = op.regions as f64;
+    let mut overhead = regions * (mach.fork_base_s + mach.fork_per_thread_s * team);
+    if op.dispatch == Dispatch::OneDnn {
+        if tc.blocktime_ms == 0 {
+            // team sleeps after every region -> wake per region
+            overhead += regions * mach.wake_s;
+        } else {
+            // team was possibly asleep only at op start
+            overhead += mach.wake_s;
+        }
+    }
+
+    (work + overhead) * slowdown + mach.dispatch_s
+}
+
+/// Thread demand contributed by a *running* op.
+fn running_demand(op: &Op, tc: &ThreadConfig) -> f64 {
+    match op.dispatch {
+        Dispatch::OneDnn => tc.omp_threads as f64,
+        Dispatch::Eigen => tc.intra_op as f64,
+        Dispatch::Serial => 1.0,
+    }
+}
+
+/// Fraction of a team's parked/gap time spent spinning rather than
+/// sleeping: grows with KMP_BLOCKTIME (ms scale; park intervals are
+/// ~100 ms, so blocktime >= 100 means effectively always spinning).
+fn spin_frac(tc: &ThreadConfig) -> f64 {
+    (tc.blocktime_ms as f64 / 100.0).min(1.0)
+}
+
+/// While an op executes, its own team is not computing during region gaps
+/// (master-thread serial stretches, load imbalance at region joins); with
+/// blocktime > 0 those threads spin and steal cores from *other* running
+/// ops. Measured oneDNN traces put this gap time around a third of op
+/// wall-time for short-region primitives.
+const SPIN_GAP_FRACTION: f64 = 0.35;
+
+/// Thread demand from spinning OpenMP threads (mechanism 3).
+///
+/// Two sources: (a) *parked* teams — inter-op workers that own a team but
+/// are not currently running a oneDNN op — spin at full team width;
+/// (b) *active* teams spin during their own ops' region gaps. Both scale
+/// with `spin_frac` and vanish at blocktime = 0 (where the cost shows up
+/// as per-region wake latency instead — see `op_duration`).
+fn spinning_demand(parked_teams: f64, active_onednn: f64, tc: &ThreadConfig) -> f64 {
+    if tc.blocktime_ms == 0 {
+        return 0.0;
+    }
+    let team = tc.omp_threads as f64;
+    let gap_spinners = if active_onednn > 1.0 {
+        // only interferes when there is a concurrent victim
+        active_onednn * team * SPIN_GAP_FRACTION
+    } else {
+        0.0
+    };
+    (parked_teams * team + gap_spinners) * spin_frac(tc)
+}
+
+/// Simulate one batch execution of `ops` and return the report.
+///
+/// Deterministic: no randomness lives here (noise is applied by the
+/// evaluator on top). Ops must form a DAG via `preds`.
+pub fn simulate(ops: &[Op], mach: &Machine, tc: &ThreadConfig, precision: Precision) -> ExecReport {
+    assert!(tc.inter_op >= 1 && tc.intra_op >= 1 && tc.omp_threads >= 1);
+    assert!(tc.batch >= 1, "batch must be positive");
+    let n = ops.len();
+    assert!(n > 0, "empty graph");
+
+    let mut remaining_preds: Vec<usize> = ops.iter().map(|o| o.preds.len()).collect();
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, op) in ops.iter().enumerate() {
+        for &p in &op.preds {
+            assert!(p < n, "op {i} has out-of-range pred {p}");
+            succs[p].push(i);
+        }
+    }
+
+    // Ready queue in op-index order (TF uses FIFO-ish; order only matters
+    // for ties). Running: (finish_time, op index).
+    let mut ready: Vec<usize> =
+        (0..n).filter(|&i| remaining_preds[i] == 0).collect();
+    assert!(!ready.is_empty(), "graph has no source ops (cycle?)");
+    let mut running: Vec<(f64, usize)> = Vec::new();
+    let mut done = 0usize;
+    let mut now = 0.0f64;
+    let mut peak_demand = 0.0f64;
+    let mut busy_s = 0.0f64;
+    let mut trace: Vec<TraceEvent> = Vec::with_capacity(n);
+
+    // Teams get created lazily; track how many inter-op workers have run a
+    // oneDNN op so far (those own parkable OpenMP teams).
+    let mut teams_created = 0.0f64;
+
+    while done < n {
+        // Dispatch as many ready ops as inter-op slots allow.
+        while !ready.is_empty() && (running.len() as i64) < tc.inter_op {
+            let op_idx = ready.remove(0);
+            let op = &ops[op_idx];
+
+            if op.dispatch == Dispatch::OneDnn {
+                teams_created = (teams_created + 1.0).min(tc.inter_op as f64);
+            }
+
+            // Contention snapshot: all running demands + this op + spinners.
+            let active_onednn =
+                running.iter().filter(|(_, i)| ops[*i].dispatch == Dispatch::OneDnn).count()
+                    as f64
+                    + if op.dispatch == Dispatch::OneDnn { 1.0 } else { 0.0 };
+            let parked = (teams_created - active_onednn).max(0.0);
+            let demand: f64 = running.iter().map(|(_, i)| running_demand(&ops[*i], tc)).sum::<f64>()
+                + running_demand(op, tc)
+                + spinning_demand(parked, active_onednn, tc);
+            peak_demand = peak_demand.max(demand);
+            let slowdown = mach.oversub_slowdown(demand);
+
+            let dur = op_duration(op, mach, tc, precision, slowdown);
+            busy_s += dur;
+            trace.push(TraceEvent {
+                op: op.name.clone(),
+                start_s: now,
+                end_s: now + dur,
+                threads: running_demand(op, tc),
+                slowdown,
+            });
+            running.push((now + dur, op_idx));
+        }
+
+        // Advance to the earliest finish.
+        let (min_pos, _) = running
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap())
+            .expect("deadlock: nothing running but ops remain");
+        let (t, finished) = running.swap_remove(min_pos);
+        now = t;
+        done += 1;
+        for &s in &succs[finished] {
+            remaining_preds[s] -= 1;
+            if remaining_preds[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+
+    // Per-graph fixed overhead (session/feed-fetch) before the next batch.
+    let latency = now + 120e-6;
+    ExecReport {
+        latency_s: latency,
+        throughput: tc.batch as f64 / latency,
+        peak_demand,
+        busy_s,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::op::OpKind;
+
+    fn mach() -> Machine {
+        Machine::cascade_lake()
+    }
+
+    fn tc(inter: i64, intra: i64, batch: i64, bt: i64, omp: i64) -> ThreadConfig {
+        ThreadConfig { inter_op: inter, intra_op: intra, batch, blocktime_ms: bt, omp_threads: omp }
+    }
+
+    fn conv(name: &str, preds: Vec<usize>) -> Op {
+        Op::new(name, OpKind::Conv2d, Dispatch::OneDnn, 2e8, 4e5, 2e6, 0.97, 8, preds)
+    }
+
+    fn eigen_op(name: &str, preds: Vec<usize>) -> Op {
+        Op::new(name, OpKind::Softmax, Dispatch::Eigen, 5e7, 8e5, 0.0, 0.9, 4, preds)
+    }
+
+    #[test]
+    fn chain_is_sequential() {
+        // latency(chain of 2) ~ 2 * latency(1 op), so throughput halves.
+        let one = vec![conv("a", vec![])];
+        let two = vec![conv("a", vec![]), conv("b", vec![0])];
+        let c = tc(1, 1, 64, 0, 24);
+        let r1 = simulate(&one, &mach(), &c, Precision::Fp32);
+        let r2 = simulate(&two, &mach(), &c, Precision::Fp32);
+        assert!(r2.latency_s > 1.8 * r1.latency_s);
+    }
+
+    #[test]
+    fn omp_threads_speed_up_onednn_graph() {
+        let ops = vec![conv("a", vec![]), conv("b", vec![0])];
+        let slow = simulate(&ops, &mach(), &tc(1, 1, 64, 0, 1), Precision::Fp32);
+        let fast = simulate(&ops, &mach(), &tc(1, 1, 64, 0, 24), Precision::Fp32);
+        assert!(
+            fast.throughput > 5.0 * slow.throughput,
+            "omp 24 {:.1} vs omp 1 {:.1}",
+            fast.throughput,
+            slow.throughput
+        );
+    }
+
+    #[test]
+    fn intra_op_is_inert_for_pure_onednn_graph() {
+        // Mechanism behind the paper's §4.3 ResNet50-INT8 observation.
+        let ops = vec![conv("a", vec![]), conv("b", vec![0])];
+        let lo = simulate(&ops, &mach(), &tc(1, 1, 64, 0, 24), Precision::Fp32);
+        let hi = simulate(&ops, &mach(), &tc(1, 56, 64, 0, 24), Precision::Fp32);
+        assert!((lo.throughput - hi.throughput).abs() < 1e-9);
+    }
+
+    #[test]
+    fn intra_op_matters_for_eigen_ops() {
+        let ops = vec![eigen_op("s", vec![])];
+        let lo = simulate(&ops, &mach(), &tc(1, 1, 64, 0, 4), Precision::Fp32);
+        let hi = simulate(&ops, &mach(), &tc(1, 24, 64, 0, 4), Precision::Fp32);
+        assert!(hi.throughput > 1.5 * lo.throughput);
+    }
+
+    #[test]
+    fn blocktime_zero_wins_with_parallel_inter_op() {
+        // Two parallel oneDNN branches, inter_op=2: the parked team's
+        // spinning with blocktime=200 steals cores.
+        let ops = vec![
+            conv("a1", vec![]),
+            conv("a2", vec![]),
+            conv("b1", vec![0]),
+            conv("b2", vec![1]),
+            conv("c1", vec![2]),
+            conv("c2", vec![3]),
+        ];
+        let bt0 = simulate(&ops, &mach(), &tc(2, 1, 64, 0, 36), Precision::Fp32);
+        let bt200 = simulate(&ops, &mach(), &tc(2, 1, 64, 200, 36), Precision::Fp32);
+        assert!(
+            bt0.throughput > bt200.throughput,
+            "bt0 {:.1} <= bt200 {:.1}",
+            bt0.throughput,
+            bt200.throughput
+        );
+    }
+
+    #[test]
+    fn blocktime_nonzero_wins_single_stream_many_regions() {
+        // inter_op=1: no parked teams, so blocktime only saves wake costs.
+        let mut op = conv("a", vec![]);
+        op.regions = 200;
+        op.flops_per_ex = 1e6; // short regions -> overhead-dominated
+        let ops = vec![op];
+        let bt0 = simulate(&ops, &mach(), &tc(1, 1, 64, 0, 24), Precision::Fp32);
+        let bt50 = simulate(&ops, &mach(), &tc(1, 1, 64, 50, 24), Precision::Fp32);
+        assert!(bt50.throughput > bt0.throughput);
+    }
+
+    #[test]
+    fn oversubscription_hurts() {
+        // 4 concurrent teams of 56 threads = demand 224 >> 96 hw threads.
+        let ops = vec![conv("a", vec![]), conv("b", vec![]), conv("c", vec![]), conv("d", vec![])];
+        let sane = simulate(&ops, &mach(), &tc(4, 1, 64, 0, 12), Precision::Fp32);
+        let crazy = simulate(&ops, &mach(), &tc(4, 1, 64, 0, 56), Precision::Fp32);
+        assert!(sane.throughput > crazy.throughput);
+        assert!(crazy.peak_demand > 200.0);
+    }
+
+    #[test]
+    fn int8_faster_than_fp32() {
+        let ops = vec![conv("a", vec![]), conv("b", vec![0])];
+        let c = tc(1, 1, 64, 0, 24);
+        let f = simulate(&ops, &mach(), &c, Precision::Fp32);
+        let i = simulate(&ops, &mach(), &c, Precision::Int8);
+        assert!(i.throughput > 1.5 * f.throughput);
+    }
+
+    #[test]
+    fn batch_amortises_overheads() {
+        let ops = vec![conv("a", vec![]), conv("b", vec![0])];
+        let c1 = simulate(&ops, &mach(), &tc(1, 1, 1, 0, 24), Precision::Fp32);
+        let c64 = simulate(&ops, &mach(), &tc(1, 1, 64, 0, 24), Precision::Fp32);
+        // per-example rate much better at batch 64
+        assert!(c64.throughput > 2.5 * c1.throughput);
+    }
+
+    #[test]
+    fn parallel_branches_benefit_from_inter_op() {
+        let ops = vec![conv("a", vec![]), conv("b", vec![]), conv("j", vec![0, 1])];
+        let seq = simulate(&ops, &mach(), &tc(1, 1, 64, 0, 12), Precision::Fp32);
+        let par = simulate(&ops, &mach(), &tc(2, 1, 64, 0, 12), Precision::Fp32);
+        assert!(par.throughput > 1.2 * seq.throughput);
+    }
+
+    #[test]
+    fn trace_is_consistent_schedule() {
+        let ops = vec![conv("a", vec![]), conv("b", vec![]), eigen_op("s", vec![0, 1])];
+        let c = tc(2, 8, 64, 0, 12);
+        let r = simulate(&ops, &mach(), &c, Precision::Fp32);
+        assert_eq!(r.trace.len(), 3);
+        // every event within [0, latency], end > start
+        for ev in &r.trace {
+            assert!(ev.start_s >= 0.0 && ev.end_s <= r.latency_s);
+            assert!(ev.end_s > ev.start_s);
+            assert!(ev.slowdown >= 1.0);
+        }
+        // the join op must start after both branches end
+        let join = r.trace.iter().find(|e| e.op == "s").unwrap();
+        for branch in r.trace.iter().filter(|e| e.op != "s") {
+            assert!(join.start_s >= branch.end_s - 1e-12);
+        }
+        // with inter_op=2 the two branches overlap
+        let a = r.trace.iter().find(|e| e.op == "a").unwrap();
+        let b = r.trace.iter().find(|e| e.op == "b").unwrap();
+        assert!(a.start_s < b.end_s && b.start_s < a.end_s, "branches did not overlap");
+    }
+
+    #[test]
+    fn deterministic() {
+        let ops = vec![conv("a", vec![]), eigen_op("s", vec![0])];
+        let c = tc(2, 8, 128, 30, 16);
+        let r1 = simulate(&ops, &mach(), &c, Precision::Fp32);
+        let r2 = simulate(&ops, &mach(), &c, Precision::Fp32);
+        assert_eq!(r1.throughput, r2.throughput);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_batch() {
+        let ops = vec![conv("a", vec![])];
+        simulate(&ops, &mach(), &tc(1, 1, 0, 0, 1), Precision::Fp32);
+    }
+}

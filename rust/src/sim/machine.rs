@@ -1,0 +1,162 @@
+//! Hardware model of the paper's target system: a dual-socket 24-core
+//! 2nd-gen Intel Xeon Scalable Gold 6252 ("Cascade Lake") at 3.9 GHz with
+//! hyper-threading on (§4.1).
+//!
+//! Every coefficient is a documented, order-of-magnitude-faithful constant.
+//! Absolute numbers do not need to match the authors' testbed (our substrate
+//! is a simulator); the *relative* behaviour — thread scaling, bandwidth
+//! saturation, NUMA, over-subscription, fork/wake costs — is what the
+//! tuning landscape is made of.
+
+/// Target-machine description.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    /// Physical cores (2 sockets × 24).
+    pub cores: usize,
+    /// SMT ways per core (hyper-threading on).
+    pub smt: usize,
+    /// Cores per socket (NUMA domain size).
+    pub socket_cores: usize,
+    /// Peak FP32 FLOP/s of one core: 3.9 GHz × 2 AVX-512 FMA ports ×
+    /// 16 fp32 lanes × 2 (fma) ≈ 250 GFLOP/s theoretical; we use an
+    /// achievable 60% of that for dense kernels.
+    pub peak_flops_core: f64,
+    /// Aggregate DRAM bandwidth, bytes/s (6 channels DDR4-2933 per socket
+    /// ≈ 140 GB/s each; ~75% achievable).
+    pub mem_bw: f64,
+    /// Threads needed to saturate one socket's bandwidth.
+    pub bw_sat_threads: f64,
+    /// Last-level cache capacity, bytes (35.75 MiB per socket).
+    pub llc_bytes: f64,
+    /// Cost to fork/join one parallel region (base), seconds.
+    pub fork_base_s: f64,
+    /// Additional fork cost per team thread, seconds.
+    pub fork_per_thread_s: f64,
+    /// Cost to wake a sleeping OpenMP team (futex path), seconds.
+    pub wake_s: f64,
+    /// Memory-time multiplier when a team spans both sockets.
+    pub numa_penalty: f64,
+    /// Over-subscription exponent: slowdown = (demand/capacity)^gamma.
+    pub oversub_gamma: f64,
+    /// Per-op runtime dispatch overhead (TF executor bookkeeping), seconds.
+    pub dispatch_s: f64,
+}
+
+impl Machine {
+    /// The paper's target system (Xeon Gold 6252 ×2, HT on, 3.9 GHz).
+    pub fn cascade_lake() -> Machine {
+        Machine {
+            cores: 48,
+            smt: 2,
+            socket_cores: 24,
+            peak_flops_core: 150e9,
+            mem_bw: 210e9,
+            bw_sat_threads: 8.0,
+            llc_bytes: 2.0 * 35.75e6,
+            fork_base_s: 1.5e-6,
+            fork_per_thread_s: 0.12e-6,
+            wake_s: 9e-6,
+            numa_penalty: 1.22,
+            oversub_gamma: 1.25,
+            dispatch_s: 8e-6,
+        }
+    }
+
+    /// Hardware thread capacity (cores × SMT).
+    pub fn hw_threads(&self) -> usize {
+        self.cores * self.smt
+    }
+
+    /// Over-subscription slowdown for a total thread demand.
+    ///
+    /// demand ≤ cores: no penalty. cores < demand ≤ hw_threads: SMT absorbs
+    /// some of it (mild penalty). Beyond hw threads: context-switch thrash,
+    /// super-linear penalty. Continuous and monotone in demand.
+    pub fn oversub_slowdown(&self, demand: f64) -> f64 {
+        let c = self.cores as f64;
+        let ht = self.hw_threads() as f64;
+        if demand <= c {
+            1.0
+        } else if demand <= ht {
+            // SMT region: a hyper-thread shares execution ports with its
+            // sibling, so each extra thread costs ~45% of a core's worth.
+            1.0 + 0.45 * (demand - c) / c
+        } else {
+            let smt_pen = 1.0 + 0.45 * (ht - c) / c;
+            smt_pen * (demand / ht).powf(self.oversub_gamma)
+        }
+    }
+
+    /// Memory-bandwidth-bound speedup cap: adding threads beyond
+    /// `bw_sat_threads` does not add bandwidth.
+    pub fn mem_speedup(&self, threads: f64) -> f64 {
+        threads.min(self.bw_sat_threads).max(1.0)
+    }
+
+    /// Compute-scaling cap: SMT siblings share FMA ports, so dense-kernel
+    /// compute scales only to the physical core count.
+    pub fn compute_threads(&self, team: f64) -> f64 {
+        team.clamp(1.0, self.cores as f64)
+    }
+
+    /// NUMA multiplier for a team of `threads`.
+    pub fn numa_mult(&self, threads: f64) -> f64 {
+        if threads > self.socket_cores as f64 {
+            self.numa_penalty
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity() {
+        let m = Machine::cascade_lake();
+        assert_eq!(m.cores, 48);
+        assert_eq!(m.hw_threads(), 96);
+    }
+
+    #[test]
+    fn oversub_monotone_and_continuous() {
+        let m = Machine::cascade_lake();
+        assert_eq!(m.oversub_slowdown(10.0), 1.0);
+        assert_eq!(m.oversub_slowdown(48.0), 1.0);
+        let mut prev = 0.0;
+        for d in 1..300 {
+            let s = m.oversub_slowdown(d as f64);
+            assert!(s >= prev - 1e-12, "not monotone at {d}");
+            prev = s;
+        }
+        // continuity at the SMT boundary
+        let a = m.oversub_slowdown(95.999);
+        let b = m.oversub_slowdown(96.001);
+        assert!((a - b).abs() < 1e-3);
+    }
+
+    #[test]
+    fn smt_region_milder_than_thrash() {
+        let m = Machine::cascade_lake();
+        let smt = m.oversub_slowdown(96.0) / m.oversub_slowdown(48.0);
+        let thrash = m.oversub_slowdown(192.0) / m.oversub_slowdown(96.0);
+        assert!(smt < thrash);
+    }
+
+    #[test]
+    fn mem_speedup_saturates() {
+        let m = Machine::cascade_lake();
+        assert_eq!(m.mem_speedup(2.0), 2.0);
+        assert_eq!(m.mem_speedup(100.0), m.bw_sat_threads);
+        assert_eq!(m.mem_speedup(0.5), 1.0);
+    }
+
+    #[test]
+    fn numa_kicks_in_past_socket() {
+        let m = Machine::cascade_lake();
+        assert_eq!(m.numa_mult(24.0), 1.0);
+        assert!(m.numa_mult(25.0) > 1.0);
+    }
+}

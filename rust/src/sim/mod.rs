@@ -1,0 +1,115 @@
+//! The system-under-test substrate: a performance-model simulator of
+//! TensorFlow's Intel-CPU backend (Eigen intra/inter-op pools + oneDNN
+//! OpenMP runtime) on the paper's Cascade Lake target machine.
+//!
+//! The paper's testbed (Intel-TF 1.15 + oneDNN on a 48-core Xeon) is not
+//! available in this environment; per DESIGN.md §2 this module implements
+//! the closest synthetic equivalent that exposes the same black-box
+//! response surface f(config) -> throughput to the tuning algorithms.
+
+pub mod engine;
+pub mod machine;
+pub mod models;
+pub mod noise;
+pub mod op;
+
+pub use engine::{simulate, ExecReport, ThreadConfig};
+pub use machine::Machine;
+pub use models::ModelId;
+pub use noise::NoiseModel;
+pub use op::{Dispatch, Op, OpKind, Precision};
+
+use crate::space::Config;
+
+/// A ready-to-evaluate simulated workload: model graph + machine + noise.
+#[derive(Debug, Clone)]
+pub struct SimWorkload {
+    pub model: ModelId,
+    pub machine: Machine,
+    ops: Vec<Op>,
+    noise: NoiseModel,
+}
+
+impl SimWorkload {
+    pub fn new(model: ModelId, seed: u64, sigma: f64) -> SimWorkload {
+        SimWorkload {
+            model,
+            machine: Machine::cascade_lake(),
+            ops: model.build(),
+            noise: NoiseModel::new(seed, sigma),
+        }
+    }
+
+    /// Default measurement-noise workload.
+    pub fn with_default_noise(model: ModelId, seed: u64) -> SimWorkload {
+        SimWorkload::new(model, seed, noise::DEFAULT_SIGMA)
+    }
+
+    /// Deterministic ground-truth workload (exhaustive sweeps).
+    pub fn noiseless(model: ModelId) -> SimWorkload {
+        SimWorkload::new(model, 0, 0.0)
+    }
+
+    /// Noise-free throughput for a configuration.
+    pub fn true_throughput(&self, cfg: &Config) -> f64 {
+        let tc = ThreadConfig::from_config(cfg);
+        simulate(&self.ops, &self.machine, &tc, self.model.precision()).throughput
+    }
+
+    /// One measured evaluation (true throughput + measurement noise).
+    pub fn measure(&mut self, cfg: &Config) -> f64 {
+        let t = self.true_throughput(cfg);
+        self.noise.apply(t)
+    }
+
+    /// Full execution report (profiling, tests).
+    pub fn report(&self, cfg: &Config) -> ExecReport {
+        let tc = ThreadConfig::from_config(cfg);
+        simulate(&self.ops, &self.machine, &tc, self.model.precision())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn measure_is_noisy_true_is_not() {
+        let mut w = SimWorkload::with_default_noise(ModelId::Resnet50Fp32, 42);
+        let cfg = vec![1, 14, 256, 0, 24];
+        let t1 = w.true_throughput(&cfg);
+        let t2 = w.true_throughput(&cfg);
+        assert_eq!(t1, t2);
+        let m1 = w.measure(&cfg);
+        let m2 = w.measure(&cfg);
+        assert_ne!(m1, m2);
+        assert!((m1 / t1 - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn prop_all_models_positive_and_deterministic() {
+        for model in ModelId::all() {
+            let w = SimWorkload::noiseless(model);
+            let space = model.space();
+            prop::check(&format!("sim positive {}", model.name()), 40, |rng| {
+                let cfg = space.random(rng);
+                let t = w.true_throughput(&cfg);
+                assert!(t.is_finite() && t > 0.0, "{}: {t} at {cfg:?}", model.name());
+                assert_eq!(w.true_throughput(&cfg), t);
+            });
+        }
+    }
+
+    #[test]
+    fn prop_noise_seeded_identically_reproduces() {
+        let space = ModelId::BertFp32.space();
+        prop::check("noisy reproducible", 20, |rng| {
+            let seed = rng.next_u64();
+            let mut w1 = SimWorkload::with_default_noise(ModelId::BertFp32, seed);
+            let mut w2 = SimWorkload::with_default_noise(ModelId::BertFp32, seed);
+            let cfg = space.random(rng);
+            assert_eq!(w1.measure(&cfg), w2.measure(&cfg));
+        });
+    }
+}

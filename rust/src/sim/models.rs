@@ -1,0 +1,399 @@
+//! The six Intel Model Zoo workloads the paper tunes (§4.1), as op-level
+//! dataflow graphs for the simulator.
+//!
+//! Repeated primitives are aggregated into stage-level ops (a ResNet stage
+//! op stands for its ~10 convolutions; `regions` preserves the true
+//! parallel-region count, which is what the KMP_BLOCKTIME mechanism feels).
+//! FLOP counts come from the models' published per-example numbers;
+//! byte counts are activation+weight traffic estimates. What must be
+//! faithful is each model's *sensitivity structure* (which parameters move
+//! its throughput), which is driven by the oneDNN/Eigen dispatch mix,
+//! region granularity, arithmetic intensity and batch range — see
+//! DESIGN.md §6.
+
+use super::op::{Dispatch, Op, OpKind, Precision};
+use crate::space::{threading_space, SearchSpace};
+
+/// The six benchmark models (paper Fig. 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    SsdMobilenetFp32,
+    Resnet50Fp32,
+    Resnet50Int8,
+    TransformerLtFp32,
+    BertFp32,
+    NcfFp32,
+}
+
+impl ModelId {
+    pub fn all() -> [ModelId; 6] {
+        [
+            ModelId::SsdMobilenetFp32,
+            ModelId::Resnet50Fp32,
+            ModelId::Resnet50Int8,
+            ModelId::TransformerLtFp32,
+            ModelId::BertFp32,
+            ModelId::NcfFp32,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelId::SsdMobilenetFp32 => "SSD-MobileNet-FP32",
+            ModelId::Resnet50Fp32 => "ResNet50-FP32",
+            ModelId::Resnet50Int8 => "ResNet50-INT8",
+            ModelId::TransformerLtFp32 => "Transformer-LT-FP32",
+            ModelId::BertFp32 => "BERT-FP32",
+            ModelId::NcfFp32 => "NCF-FP32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelId> {
+        let lower = s.to_lowercase();
+        ModelId::all()
+            .into_iter()
+            .find(|m| m.name().to_lowercase() == lower || m.short_name() == lower)
+    }
+
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            ModelId::SsdMobilenetFp32 => "ssd-mobilenet",
+            ModelId::Resnet50Fp32 => "resnet50-fp32",
+            ModelId::Resnet50Int8 => "resnet50-int8",
+            ModelId::TransformerLtFp32 => "transformer-lt",
+            ModelId::BertFp32 => "bert",
+            ModelId::NcfFp32 => "ncf",
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self {
+            ModelId::Resnet50Int8 => Precision::Int8,
+            _ => Precision::Fp32,
+        }
+    }
+
+    /// The paper's per-model batch-size range (Table 1).
+    pub fn batch_range(&self) -> (i64, i64, i64) {
+        match self {
+            ModelId::NcfFp32 => (64, 256, 64),
+            ModelId::BertFp32 => (32, 64, 32),
+            _ => (64, 1024, 64),
+        }
+    }
+
+    /// The full 5-parameter tuning space for this model (Table 1).
+    pub fn space(&self) -> SearchSpace {
+        let (lo, hi, step) = self.batch_range();
+        threading_space(lo, hi, step)
+    }
+
+    /// Build the op graph.
+    pub fn build(&self) -> Vec<Op> {
+        match self {
+            ModelId::SsdMobilenetFp32 => ssd_mobilenet(),
+            ModelId::Resnet50Fp32 | ModelId::Resnet50Int8 => resnet50(),
+            ModelId::TransformerLtFp32 => transformer_lt(),
+            ModelId::BertFp32 => bert(),
+            ModelId::NcfFp32 => ncf(),
+        }
+    }
+}
+
+// Helper constructors -------------------------------------------------------
+
+fn dnn(name: &str, kind: OpKind, gflops: f64, mb_ex: f64, mb_fixed: f64, p: f64, regions: u32, preds: Vec<usize>) -> Op {
+    Op::new(name, kind, Dispatch::OneDnn, gflops * 1e9, mb_ex * 1e6, mb_fixed * 1e6, p, regions, preds)
+}
+
+fn eig(name: &str, kind: OpKind, gflops: f64, mb_ex: f64, p: f64, regions: u32, preds: Vec<usize>) -> Op {
+    Op::new(name, kind, Dispatch::Eigen, gflops * 1e9, mb_ex * 1e6, 0.0, p, regions, preds)
+}
+
+fn ser(name: &str, gflops: f64, mb_ex: f64, preds: Vec<usize>) -> Op {
+    Op::new(name, OpKind::Bookkeeping, Dispatch::Serial, gflops * 1e9, mb_ex * 1e6, 0.0, 0.0, 1, preds)
+}
+
+// Model graphs ---------------------------------------------------------------
+
+/// ResNet50 v1.5 inference, ~4 GFLOP/image. Practically every hot op is a
+/// oneDNN convolution -> intra_op is inert (paper §4.3), OMP_NUM_THREADS
+/// dominates. A pure chain: inter_op buys nothing except over-subscription
+/// headroom for the spinning-team interference term.
+fn resnet50() -> Vec<Op> {
+    vec![
+        dnn("stem_conv7x7", OpKind::Conv2d, 0.24, 3.1, 0.04, 0.985, 2, vec![]),
+        dnn("res2_convs", OpKind::Conv2d, 0.68, 9.2, 0.9, 0.985, 10, vec![0]),
+        dnn("res3_convs", OpKind::Conv2d, 0.85, 6.9, 4.5, 0.985, 13, vec![1]),
+        dnn("res4_convs", OpKind::Conv2d, 1.30, 5.2, 28.0, 0.985, 19, vec![2]),
+        dnn("res5_convs", OpKind::Conv2d, 0.80, 2.1, 60.0, 0.985, 10, vec![3]),
+        eig("global_pool", OpKind::Pool, 0.0002, 0.4, 0.9, 1, vec![4]),
+        dnn("fc1000", OpKind::MatMul, 0.004, 0.02, 8.2, 0.95, 1, vec![5]),
+        ser("softmax_out", 0.00001, 0.008, vec![6]),
+    ]
+}
+
+/// SSD-MobileNet v1, ~2.5 GFLOP/image but dominated by low-arithmetic-
+/// intensity depthwise convolutions (memory-bound, many short regions) and
+/// a 6-way parallel detection head -> inter_op > 1 genuinely helps, and the
+/// short regions make the wake/spin tradeoff visible.
+fn ssd_mobilenet() -> Vec<Op> {
+    let mut ops = vec![
+        dnn("backbone_std_convs", OpKind::Conv2d, 0.95, 7.5, 6.5, 0.98, 14, vec![]),
+        dnn("backbone_dw_convs", OpKind::DepthwiseConv, 0.35, 11.0, 1.2, 0.93, 26, vec![0]),
+    ];
+    // 6 SSD feature heads in parallel off the backbone.
+    for i in 0..6 {
+        ops.push(dnn(
+            &format!("head{i}_conv"),
+            OpKind::Conv2d,
+            0.18,
+            1.4,
+            2.2,
+            0.95,
+            4,
+            vec![1],
+        ));
+    }
+    let head_ids: Vec<usize> = (2..8).collect();
+    ops.push(eig("box_decode", OpKind::Eltwise, 0.01, 1.8, 0.85, 3, head_ids.clone()));
+    ops.push(eig("nms_postproc", OpKind::Eltwise, 0.006, 0.9, 0.55, 2, vec![8]));
+    ops
+}
+
+/// Transformer-LT (translation): 6-layer encoder / 6-layer decoder with a
+/// beam-search loop. A genuinely *mixed* graph: oneDNN matmuls interleave
+/// with Eigen softmax/layernorm at similar magnitudes, so intra_op and
+/// OMP_NUM_THREADS must share the cores — a rugged, interaction-heavy
+/// landscape (the one where GA wins in Fig. 5).
+fn transformer_lt() -> Vec<Op> {
+    vec![
+        eig("embed_src", OpKind::Embedding, 0.002, 2.4, 0.8, 2, vec![]),
+        dnn("enc_qkv_matmuls", OpKind::MatMul, 1.9, 3.0, 25.0, 0.96, 24, vec![0]),
+        eig("enc_softmax_norm", OpKind::Softmax, 0.35, 6.5, 0.88, 24, vec![1]),
+        dnn("enc_ffn_matmuls", OpKind::MatMul, 3.8, 4.2, 50.0, 0.97, 12, vec![2]),
+        eig("dec_embed", OpKind::Embedding, 0.002, 1.8, 0.8, 2, vec![3]),
+        dnn("dec_qkv_matmuls", OpKind::MatMul, 2.3, 3.4, 34.0, 0.96, 36, vec![4]),
+        eig("dec_softmax_norm", OpKind::Softmax, 0.45, 7.0, 0.88, 36, vec![5]),
+        dnn("dec_ffn_matmuls", OpKind::MatMul, 4.4, 4.6, 50.0, 0.97, 18, vec![6]),
+        eig("beam_search", OpKind::Eltwise, 0.09, 3.2, 0.45, 30, vec![7]),
+        ser("detokenize", 0.0005, 0.3, vec![8]),
+    ]
+}
+
+/// BERT-base (seq 128), ~11 GFLOP/sequence of big dense matmuls with heavy
+/// activation traffic. Bandwidth saturation plus the NUMA penalty past one
+/// socket puts the OMP optimum *inside* the range (~24); the narrow batch
+/// range [32, 64] leaves a sharp ridge that local refinement (NMS) finds
+/// better than global samplers — the paper's BERT anomaly.
+fn bert() -> Vec<Op> {
+    let mut ops = vec![eig("embed_lookup", OpKind::Embedding, 0.004, 4.0, 0.8, 3, vec![])];
+    // 12 encoder layers, aggregated in 4 groups of 3 for graph simplicity.
+    for g in 0..4 {
+        let pred = ops.len() - 1;
+        ops.push(dnn(
+            &format!("layers{g}_attn_matmuls"),
+            OpKind::BatchMatMul,
+            1.05,
+            30.0,
+            21.0,
+            0.965,
+            27,
+            vec![pred],
+        ));
+        ops.push(eig(
+            &format!("layers{g}_softmax_ln"),
+            OpKind::Softmax,
+            0.16,
+            14.0,
+            0.9,
+            18,
+            vec![pred + 1],
+        ));
+        ops.push(dnn(
+            &format!("layers{g}_ffn_matmuls"),
+            OpKind::MatMul,
+            1.70,
+            18.0,
+            57.0,
+            0.97,
+            9,
+            vec![pred + 2],
+        ));
+    }
+    let last = ops.len() - 1;
+    ops.push(dnn("pooler_matmul", OpKind::MatMul, 0.01, 0.1, 2.4, 0.9, 1, vec![last]));
+    ops
+}
+
+/// Neural Collaborative Filtering: embedding gathers (memory-bound, Eigen)
+/// feeding a tiny MLP. Per-example work is ~0.3 MFLOP, so throughput is
+/// enormous and dominated by dispatch overhead + memory streams; OMP
+/// threads barely matter, intra_op and batch dominate — a smooth, gently
+/// unimodal surface (where BO shines in Fig. 5).
+fn ncf() -> Vec<Op> {
+    vec![
+        eig("user_embed", OpKind::Embedding, 0.00004, 0.09, 0.8, 1, vec![]),
+        eig("item_embed", OpKind::Embedding, 0.00004, 0.09, 0.8, 1, vec![]),
+        ser("concat", 0.0000008, 0.002, vec![0, 1]),
+        dnn("mlp_fc256", OpKind::MatMul, 0.00013, 0.003, 0.26, 0.9, 1, vec![2]),
+        dnn("mlp_fc128", OpKind::MatMul, 0.000066, 0.0015, 0.13, 0.9, 1, vec![3]),
+        dnn("mlp_fc64", OpKind::MatMul, 0.000016, 0.0008, 0.033, 0.85, 1, vec![4]),
+        ser("sigmoid_out", 0.0000002, 0.0004, vec![5]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{simulate, ThreadConfig};
+    use crate::sim::machine::Machine;
+    use crate::sim::op::Dispatch;
+
+    fn run(m: ModelId, tc: ThreadConfig) -> f64 {
+        simulate(&m.build(), &Machine::cascade_lake(), &tc, m.precision()).throughput
+    }
+
+    fn base_tc(m: ModelId) -> ThreadConfig {
+        let (lo, hi, _) = m.batch_range();
+        ThreadConfig { inter_op: 1, intra_op: 14, batch: (lo + hi) / 2, blocktime_ms: 0, omp_threads: 24 }
+    }
+
+    #[test]
+    fn graphs_are_dags_with_valid_preds() {
+        for m in ModelId::all() {
+            let ops = m.build();
+            assert!(!ops.is_empty());
+            for (i, op) in ops.iter().enumerate() {
+                for &p in &op.preds {
+                    assert!(p < i, "{}: op {i} pred {p} not topologically earlier", m.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_models_simulate_positive_throughput() {
+        for m in ModelId::all() {
+            let t = run(m, base_tc(m));
+            assert!(t > 0.0, "{} throughput {t}", m.name());
+        }
+    }
+
+    #[test]
+    fn throughput_magnitudes_plausible() {
+        // Orders of magnitude only (simulator, not testbed): images/s for
+        // vision models, sequences/s for language, 100k+ ex/s for NCF.
+        let rn50 = run(ModelId::Resnet50Fp32, base_tc(ModelId::Resnet50Fp32));
+        assert!((50.0..3000.0).contains(&rn50), "rn50 {rn50}");
+        let bert = run(ModelId::BertFp32, base_tc(ModelId::BertFp32));
+        assert!((5.0..500.0).contains(&bert), "bert {bert}");
+        let ncf = run(ModelId::NcfFp32, base_tc(ModelId::NcfFp32));
+        assert!(ncf > 30_000.0, "ncf {ncf}");
+        assert!(rn50 > bert, "resnet should outrun bert");
+        assert!(ncf > 20.0 * rn50, "ncf should dwarf resnet");
+    }
+
+    #[test]
+    fn int8_beats_fp32_resnet() {
+        let f = run(ModelId::Resnet50Fp32, base_tc(ModelId::Resnet50Fp32));
+        let i = run(ModelId::Resnet50Int8, base_tc(ModelId::Resnet50Int8));
+        assert!(i > 1.5 * f, "int8 {i} vs fp32 {f}");
+    }
+
+    #[test]
+    fn resnet_int8_insensitive_to_intra_op() {
+        // The paper's §4.3 sweep observation, end-to-end.
+        let mut tc = base_tc(ModelId::Resnet50Int8);
+        let lo = run(ModelId::Resnet50Int8, tc);
+        tc.intra_op = 56;
+        let hi = run(ModelId::Resnet50Int8, tc);
+        let rel = (hi - lo).abs() / lo;
+        assert!(rel < 0.02, "intra_op moved int8 resnet by {rel}");
+    }
+
+    #[test]
+    fn transformer_sensitive_to_both_pools() {
+        let m = ModelId::TransformerLtFp32;
+        let mut tc = base_tc(m);
+        tc.intra_op = 1;
+        let lo_intra = run(m, tc);
+        tc.intra_op = 24;
+        let hi_intra = run(m, tc);
+        assert!(hi_intra > 1.1 * lo_intra, "intra should matter for transformer");
+        let mut tc2 = base_tc(m);
+        tc2.omp_threads = 1;
+        let lo_omp = run(m, tc2);
+        tc2.omp_threads = 24;
+        let hi_omp = run(m, tc2);
+        assert!(hi_omp > 1.5 * lo_omp, "omp should matter for transformer");
+    }
+
+    #[test]
+    fn bert_omp_optimum_is_interior() {
+        // Compute scaling caps at the 48 physical cores while SMT
+        // over-subscription and NUMA bite beyond — the OMP optimum sits
+        // inside the [1, 56] range (the narrow ridge NMS refines well).
+        let m = ModelId::BertFp32;
+        let mut tc = base_tc(m);
+        tc.omp_threads = 8;
+        let low = run(m, tc);
+        tc.omp_threads = 44;
+        let mid = run(m, tc);
+        tc.omp_threads = 56;
+        let high = run(m, tc);
+        assert!(mid > low && mid > high, "bert omp curve: {low} {mid} {high}");
+    }
+
+    #[test]
+    fn ncf_omp_nearly_irrelevant_intra_matters() {
+        let m = ModelId::NcfFp32;
+        let mut tc = base_tc(m);
+        tc.omp_threads = 1;
+        let omp_lo = run(m, tc);
+        tc.omp_threads = 48;
+        let omp_hi = run(m, tc);
+        let omp_rel = (omp_hi - omp_lo).abs() / omp_lo;
+        let mut tc2 = base_tc(m);
+        tc2.intra_op = 1;
+        let intra_lo = run(m, tc2);
+        tc2.intra_op = 16;
+        let intra_hi = run(m, tc2);
+        let intra_rel = (intra_hi - intra_lo) / intra_lo;
+        assert!(intra_rel > 2.0 * omp_rel, "intra {intra_rel} vs omp {omp_rel}");
+    }
+
+    #[test]
+    fn ssd_benefits_from_inter_op() {
+        let m = ModelId::SsdMobilenetFp32;
+        let mut tc = base_tc(m);
+        tc.omp_threads = 12;
+        let seq = run(m, tc);
+        tc.inter_op = 3;
+        let par = run(m, tc);
+        assert!(par > 1.05 * seq, "inter_op should help ssd: {seq} vs {par}");
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for m in ModelId::all() {
+            assert_eq!(ModelId::parse(m.name()), Some(m));
+            assert_eq!(ModelId::parse(m.short_name()), Some(m));
+        }
+        assert_eq!(ModelId::parse("nope"), None);
+    }
+
+    #[test]
+    fn dispatch_mix_matches_design() {
+        // ResNet50 hot ops all oneDNN; transformer mixed; NCF mostly Eigen+serial.
+        let rn = resnet50();
+        let dnn_flops: f64 = rn.iter().filter(|o| o.dispatch == Dispatch::OneDnn).map(|o| o.flops_per_ex).sum();
+        let all_flops: f64 = rn.iter().map(|o| o.flops_per_ex).sum();
+        assert!(dnn_flops / all_flops > 0.98);
+
+        let tr = transformer_lt();
+        let eig_flops: f64 = tr.iter().filter(|o| o.dispatch == Dispatch::Eigen).map(|o| o.flops_per_ex).sum();
+        let tr_all: f64 = tr.iter().map(|o| o.flops_per_ex).sum();
+        assert!(eig_flops / tr_all > 0.05 && eig_flops / tr_all < 0.5);
+    }
+}

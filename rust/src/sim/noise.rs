@@ -1,0 +1,82 @@
+//! Measurement noise model.
+//!
+//! Real throughput measurements vary run to run (OS jitter, turbo states,
+//! cache state); the paper's Fig. 5 NMS curves are visibly noisy. We apply
+//! a multiplicative log-normal factor exp(N(0, sigma)) per evaluation from
+//! a seeded stream, so experiments are reproducible yet repeated
+//! evaluations of the same configuration differ like real reruns.
+
+use crate::util::Rng;
+
+/// Default relative noise (sigma of log-throughput): ~1.5%.
+pub const DEFAULT_SIGMA: f64 = 0.015;
+
+/// Seeded multiplicative noise stream.
+#[derive(Debug, Clone)]
+pub struct NoiseModel {
+    rng: Rng,
+    pub sigma: f64,
+}
+
+impl NoiseModel {
+    pub fn new(seed: u64, sigma: f64) -> NoiseModel {
+        assert!(sigma >= 0.0, "noise sigma must be non-negative");
+        NoiseModel { rng: Rng::new(seed), sigma }
+    }
+
+    /// Noise-free model (for the exhaustive sweep ground truth).
+    pub fn none() -> NoiseModel {
+        NoiseModel::new(0, 0.0)
+    }
+
+    /// Apply one draw of noise to a true throughput.
+    pub fn apply(&mut self, value: f64) -> f64 {
+        if self.sigma == 0.0 {
+            return value;
+        }
+        value * (self.rng.normal() * self.sigma).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_sigma_is_identity() {
+        let mut n = NoiseModel::none();
+        assert_eq!(n.apply(123.0), 123.0);
+    }
+
+    #[test]
+    fn noise_is_seeded_and_reproducible() {
+        let mut a = NoiseModel::new(7, 0.02);
+        let mut b = NoiseModel::new(7, 0.02);
+        for _ in 0..50 {
+            assert_eq!(a.apply(100.0), b.apply(100.0));
+        }
+    }
+
+    #[test]
+    fn noise_magnitude_sane() {
+        let mut n = NoiseModel::new(1, DEFAULT_SIGMA);
+        let draws: Vec<f64> = (0..10_000).map(|_| n.apply(100.0)).collect();
+        let mean = draws.iter().sum::<f64>() / draws.len() as f64;
+        assert!((mean - 100.0).abs() < 1.0, "mean {mean}");
+        // ~99.7% of draws within 3 sigma
+        let outliers = draws.iter().filter(|&&d| (d / 100.0).ln().abs() > 3.0 * DEFAULT_SIGMA).count();
+        assert!(outliers < 100, "outliers {outliers}");
+    }
+
+    #[test]
+    fn repeated_evals_differ() {
+        let mut n = NoiseModel::new(2, DEFAULT_SIGMA);
+        assert_ne!(n.apply(100.0), n.apply(100.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_sigma_rejected() {
+        NoiseModel::new(0, -0.1);
+    }
+}

@@ -1,0 +1,169 @@
+//! Operator model for the simulated TensorFlow CPU backend.
+//!
+//! The real Intel-TF backend dispatches each dataflow-graph operator either
+//! to the oneDNN primitives (threaded by the *OpenMP* runtime, i.e.
+//! `OMP_NUM_THREADS` / `KMP_BLOCKTIME`) or to the default Eigen kernels
+//! (threaded by TF's *intra-op* pool, i.e. `intra_op_parallelism_threads`).
+//! That dispatch split is the single most important mechanism behind the
+//! paper's observations — e.g. ResNet50-INT8 being completely insensitive
+//! to `intra_op` (§4.3) because every hot op is oneDNN — so it is a
+//! first-class attribute here.
+
+/// Which thread pool executes an operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// oneDNN primitive: parallelised by the OpenMP team
+    /// (`OMP_NUM_THREADS` threads, `KMP_BLOCKTIME` spin semantics).
+    OneDnn,
+    /// Eigen kernel: parallelised by TF's intra-op pool
+    /// (`intra_op_parallelism_threads` threads).
+    Eigen,
+    /// Bookkeeping op that runs single-threaded on the inter-op worker.
+    Serial,
+}
+
+/// Broad operator class — determines default cost-model coefficients.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Conv2d,
+    DepthwiseConv,
+    MatMul,
+    BatchMatMul,
+    Embedding,
+    Attention,
+    Norm,
+    Eltwise,
+    Pool,
+    Softmax,
+    Bookkeeping,
+}
+
+/// One (possibly aggregated) operator of a model's dataflow graph.
+///
+/// Models aggregate repeated primitives into stage-level ops; `regions`
+/// records how many OpenMP/Eigen parallel regions the stage actually
+/// launches, because per-region fork/wake overhead (the KMP_BLOCKTIME
+/// mechanism) scales with that count, not with the op count.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub name: String,
+    pub kind: OpKind,
+    pub dispatch: Dispatch,
+    /// Floating-point (or int8-ops) work per input example.
+    pub flops_per_ex: f64,
+    /// Memory traffic per example (activations), bytes.
+    pub bytes_per_ex: f64,
+    /// Batch-independent traffic (weights), bytes.
+    pub fixed_bytes: f64,
+    /// Parallelisable fraction of the op's work (Amdahl).
+    pub parallel_frac: f64,
+    /// Number of parallel regions this (aggregated) op launches.
+    pub regions: u32,
+    /// Graph predecessors (indices into the model's op list).
+    pub preds: Vec<usize>,
+}
+
+impl Op {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        kind: OpKind,
+        dispatch: Dispatch,
+        flops_per_ex: f64,
+        bytes_per_ex: f64,
+        fixed_bytes: f64,
+        parallel_frac: f64,
+        regions: u32,
+        preds: Vec<usize>,
+    ) -> Op {
+        assert!((0.0..=1.0).contains(&parallel_frac), "bad parallel_frac");
+        assert!(regions >= 1, "op must launch at least one region");
+        Op {
+            name: name.to_string(),
+            kind,
+            dispatch,
+            flops_per_ex,
+            bytes_per_ex,
+            fixed_bytes,
+            parallel_frac,
+            regions,
+            preds,
+        }
+    }
+
+    /// Total compute work for a batch, in FLOPs.
+    pub fn flops(&self, batch: i64) -> f64 {
+        self.flops_per_ex * batch as f64
+    }
+
+    /// Total memory traffic for a batch, in bytes.
+    pub fn bytes(&self, batch: i64) -> f64 {
+        self.bytes_per_ex * batch as f64 + self.fixed_bytes
+    }
+}
+
+/// Numeric precision of a model's weights/activations. INT8 raises the
+/// usable compute peak (VNNI) and shrinks memory traffic, which shortens
+/// oneDNN regions and makes per-region overheads relatively larger —
+/// exactly why KMP_BLOCKTIME matters more for the INT8 model in Fig. 6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    Int8,
+}
+
+impl Precision {
+    /// Multiplier on the FP32 compute peak (VNNI int8 dot ≈ 3.3× FP32 FMA
+    /// throughput in practice, below the 4× theoretical).
+    pub fn peak_multiplier(self) -> f64 {
+        match self {
+            Precision::Fp32 => 1.0,
+            Precision::Int8 => 3.3,
+        }
+    }
+
+    /// Multiplier on memory traffic (int8 tensors are 4× smaller, but
+    /// some f32 stays: bias/scale/requantisation — call it 3×).
+    pub fn bytes_multiplier(self) -> f64 {
+        match self {
+            Precision::Fp32 => 1.0,
+            Precision::Int8 => 1.0 / 3.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op() -> Op {
+        Op::new("c", OpKind::Conv2d, Dispatch::OneDnn, 1e9, 1e6, 5e6, 0.95, 4, vec![])
+    }
+
+    #[test]
+    fn batch_scaling() {
+        let o = op();
+        assert_eq!(o.flops(2), 2e9);
+        assert_eq!(o.bytes(2), 2e6 + 5e6);
+        assert_eq!(o.bytes(0), 5e6);
+    }
+
+    #[test]
+    fn int8_multipliers() {
+        assert!(Precision::Int8.peak_multiplier() > 3.0);
+        assert!(Precision::Int8.bytes_multiplier() < 0.5);
+        assert_eq!(Precision::Fp32.peak_multiplier(), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_parallel_frac() {
+        Op::new("x", OpKind::Eltwise, Dispatch::Eigen, 1.0, 1.0, 0.0, 1.5, 1, vec![]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_regions() {
+        Op::new("x", OpKind::Eltwise, Dispatch::Eigen, 1.0, 1.0, 0.0, 0.5, 0, vec![]);
+    }
+}

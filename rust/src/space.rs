@@ -1,0 +1,419 @@
+//! Parameter search space (paper §3, Table 1).
+//!
+//! Each tunable is an integer range `[min, max]` with a step size; the
+//! space is their Cartesian product. The tuning algorithms all work on the
+//! continuous unit cube `[0,1]^d` and snap to the grid at evaluation time
+//! (exactly what the paper's framework does when it "converts and applies
+//! the chosen parameters"), so this module owns every encode/decode:
+//!
+//!   grid value  <->  value index  <->  unit-cube coordinate
+//!
+//! plus grid iteration (for the Fig. 6 exhaustive sweep), Latin-hypercube
+//! initialisation, and neighbourhood moves.
+
+use crate::util::{Json, Rng};
+
+/// One tunable parameter: an inclusive integer range with a step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamDef {
+    pub name: String,
+    pub min: i64,
+    pub max: i64,
+    pub step: i64,
+}
+
+impl ParamDef {
+    pub fn new(name: &str, min: i64, max: i64, step: i64) -> ParamDef {
+        assert!(step > 0, "param {name}: step must be positive");
+        assert!(min <= max, "param {name}: min {min} > max {max}");
+        ParamDef { name: name.to_string(), min, max, step }
+    }
+
+    /// Number of grid points.
+    pub fn n_values(&self) -> usize {
+        ((self.max - self.min) / self.step) as usize + 1
+    }
+
+    /// Grid value at index `i` (clamped to the last point).
+    pub fn value_at(&self, i: usize) -> i64 {
+        let i = i.min(self.n_values() - 1);
+        self.min + self.step * i as i64
+    }
+
+    /// Snap an arbitrary integer to the nearest grid point.
+    pub fn snap(&self, v: i64) -> i64 {
+        let v = v.clamp(self.min, self.max);
+        let k = ((v - self.min) as f64 / self.step as f64).round() as i64;
+        (self.min + k * self.step).clamp(self.min, self.max)
+    }
+
+    /// Map a grid value to [0, 1] (0-size ranges map to 0.5).
+    pub fn to_unit(&self, v: i64) -> f64 {
+        if self.max == self.min {
+            return 0.5;
+        }
+        (self.snap(v) - self.min) as f64 / (self.max - self.min) as f64
+    }
+
+    /// Map a unit-cube coordinate back to the nearest grid value.
+    pub fn from_unit(&self, u: f64) -> i64 {
+        let u = u.clamp(0.0, 1.0);
+        let raw = self.min as f64 + u * (self.max - self.min) as f64;
+        self.snap(raw.round() as i64)
+    }
+
+    /// Uniformly random grid value.
+    pub fn random(&self, rng: &mut Rng) -> i64 {
+        self.value_at(rng.index(self.n_values()))
+    }
+}
+
+/// A concrete configuration: one value per parameter, in space order.
+pub type Config = Vec<i64>;
+
+/// The Cartesian-product search space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpace {
+    pub params: Vec<ParamDef>,
+}
+
+impl SearchSpace {
+    pub fn new(params: Vec<ParamDef>) -> SearchSpace {
+        assert!(!params.is_empty(), "empty search space");
+        SearchSpace { params }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Total number of grid points (the paper quotes ~50 000 for its
+    /// ResNet50 sweep at coarsened steps).
+    pub fn size(&self) -> u128 {
+        self.params.iter().map(|p| p.n_values() as u128).product()
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamDef> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+
+    /// Snap every coordinate of an arbitrary integer vector onto the grid.
+    pub fn snap(&self, cfg: &[i64]) -> Config {
+        assert_eq!(cfg.len(), self.dim(), "config dim mismatch");
+        self.params.iter().zip(cfg).map(|(p, &v)| p.snap(v)).collect()
+    }
+
+    /// True if `cfg` lies exactly on the grid.
+    pub fn contains(&self, cfg: &[i64]) -> bool {
+        cfg.len() == self.dim() && self.snap(cfg) == cfg
+    }
+
+    /// Configuration -> unit cube.
+    pub fn to_unit(&self, cfg: &[i64]) -> Vec<f64> {
+        assert_eq!(cfg.len(), self.dim(), "config dim mismatch");
+        self.params.iter().zip(cfg).map(|(p, &v)| p.to_unit(v)).collect()
+    }
+
+    /// Unit cube -> nearest grid configuration.
+    pub fn from_unit(&self, u: &[f64]) -> Config {
+        assert_eq!(u.len(), self.dim(), "unit vector dim mismatch");
+        self.params.iter().zip(u).map(|(p, &x)| p.from_unit(x)).collect()
+    }
+
+    /// Uniformly random configuration.
+    pub fn random(&self, rng: &mut Rng) -> Config {
+        self.params.iter().map(|p| p.random(rng)).collect()
+    }
+
+    /// Latin-hypercube sample of `n` configurations: each parameter's range
+    /// is cut into n strata and each stratum used exactly once — the
+    /// standard space-filling initial design for BO.
+    pub fn latin_hypercube(&self, n: usize, rng: &mut Rng) -> Vec<Config> {
+        assert!(n > 0);
+        let mut columns: Vec<Vec<f64>> = Vec::with_capacity(self.dim());
+        for _ in 0..self.dim() {
+            let mut col: Vec<f64> =
+                (0..n).map(|i| (i as f64 + rng.f64()) / n as f64).collect();
+            rng.shuffle(&mut col);
+            columns.push(col);
+        }
+        (0..n)
+            .map(|i| {
+                let u: Vec<f64> = columns.iter().map(|c| c[i]).collect();
+                self.from_unit(&u)
+            })
+            .collect()
+    }
+
+    /// A random neighbour: perturb each coordinate by ±step with prob
+    /// `move_prob`, always changing at least one coordinate.
+    pub fn neighbour(&self, cfg: &[i64], move_prob: f64, rng: &mut Rng) -> Config {
+        let mut out = self.snap(cfg);
+        let mut moved = false;
+        for (i, p) in self.params.iter().enumerate() {
+            if rng.bool(move_prob) {
+                let delta = if rng.bool(0.5) { p.step } else { -p.step };
+                let v = p.snap(out[i] + delta);
+                if v != out[i] {
+                    out[i] = v;
+                    moved = true;
+                }
+            }
+        }
+        if !moved {
+            let i = rng.index(self.dim());
+            let p = &self.params[i];
+            let delta = if rng.bool(0.5) { p.step } else { -p.step };
+            out[i] = p.snap(out[i] + delta);
+        }
+        out
+    }
+
+    /// Iterate the full grid in row-major order (Fig. 6 sweep).
+    pub fn grid(&self) -> GridIter<'_> {
+        GridIter { space: self, idx: vec![0; self.dim()], done: false }
+    }
+
+    /// JSON encoding of a configuration as {param: value}.
+    pub fn config_to_json(&self, cfg: &[i64]) -> Json {
+        Json::Obj(
+            self.params
+                .iter()
+                .zip(cfg)
+                .map(|(p, &v)| (p.name.clone(), Json::Num(v as f64)))
+                .collect(),
+        )
+    }
+
+    /// Decode {param: value} JSON into a snapped configuration.
+    pub fn config_from_json(&self, j: &Json) -> Result<Config, String> {
+        let mut cfg = Vec::with_capacity(self.dim());
+        for p in &self.params {
+            let v = j
+                .get(&p.name)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| format!("missing/invalid param '{}'", p.name))?;
+            cfg.push(p.snap(v));
+        }
+        Ok(cfg)
+    }
+}
+
+/// Row-major grid iterator.
+pub struct GridIter<'a> {
+    space: &'a SearchSpace,
+    idx: Vec<usize>,
+    done: bool,
+}
+
+impl<'a> Iterator for GridIter<'a> {
+    type Item = Config;
+
+    fn next(&mut self) -> Option<Config> {
+        if self.done {
+            return None;
+        }
+        let cfg: Config = self
+            .space
+            .params
+            .iter()
+            .zip(&self.idx)
+            .map(|(p, &i)| p.value_at(i))
+            .collect();
+        // Advance odometer (last param fastest).
+        let mut k = self.space.dim();
+        loop {
+            if k == 0 {
+                self.done = true;
+                break;
+            }
+            k -= 1;
+            self.idx[k] += 1;
+            if self.idx[k] < self.space.params[k].n_values() {
+                break;
+            }
+            self.idx[k] = 0;
+        }
+        Some(cfg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The paper's concrete space (Table 1).
+// ---------------------------------------------------------------------------
+
+/// Canonical parameter order used throughout tftune.
+pub const INTER_OP: usize = 0;
+pub const INTRA_OP: usize = 1;
+pub const BATCH: usize = 2;
+pub const BLOCKTIME: usize = 3;
+pub const OMP_THREADS: usize = 4;
+
+/// Pairplot letters from the paper (Fig. 7 / Table 2):
+/// X=intra_op, Y=OMP_NUM_THREADS, Z=batch_size, V=inter_op, W=KMP_BLOCKTIME.
+pub fn paper_letter(param_index: usize) -> &'static str {
+    match param_index {
+        INTER_OP => "V",
+        INTRA_OP => "X",
+        BATCH => "Z",
+        BLOCKTIME => "W",
+        OMP_THREADS => "Y",
+        _ => "?",
+    }
+}
+
+/// TensorFlow threading-model space with a per-model batch range (Table 1).
+pub fn threading_space(batch_min: i64, batch_max: i64, batch_step: i64) -> SearchSpace {
+    SearchSpace::new(vec![
+        ParamDef::new("inter_op_parallelism_threads", 1, 4, 1),
+        ParamDef::new("intra_op_parallelism_threads", 1, 56, 1),
+        ParamDef::new("batch_size", batch_min, batch_max, batch_step),
+        ParamDef::new("KMP_BLOCKTIME", 0, 200, 10),
+        ParamDef::new("OMP_NUM_THREADS", 1, 56, 1),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn space() -> SearchSpace {
+        threading_space(64, 1024, 64)
+    }
+
+    #[test]
+    fn table1_counts() {
+        let s = space();
+        assert_eq!(s.params[INTER_OP].n_values(), 4);
+        assert_eq!(s.params[INTRA_OP].n_values(), 56);
+        assert_eq!(s.params[BATCH].n_values(), 16);
+        assert_eq!(s.params[BLOCKTIME].n_values(), 21);
+        assert_eq!(s.params[OMP_THREADS].n_values(), 56);
+        assert_eq!(s.size(), 4 * 56 * 16 * 21 * 56);
+    }
+
+    #[test]
+    fn snap_rounds_to_grid() {
+        let p = ParamDef::new("b", 64, 1024, 64);
+        assert_eq!(p.snap(64), 64);
+        assert_eq!(p.snap(90), 64);
+        assert_eq!(p.snap(97), 128);
+        assert_eq!(p.snap(5000), 1024);
+        assert_eq!(p.snap(-3), 64);
+    }
+
+    #[test]
+    fn unit_round_trip_endpoints() {
+        let p = ParamDef::new("t", 1, 56, 1);
+        assert_eq!(p.from_unit(0.0), 1);
+        assert_eq!(p.from_unit(1.0), 56);
+        assert!((p.to_unit(1) - 0.0).abs() < 1e-12);
+        assert!((p.to_unit(56) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid_iterates_entire_space() {
+        let s = SearchSpace::new(vec![
+            ParamDef::new("a", 0, 2, 1),
+            ParamDef::new("b", 10, 30, 10),
+        ]);
+        let all: Vec<Config> = s.grid().collect();
+        assert_eq!(all.len(), 9);
+        assert_eq!(all[0], vec![0, 10]);
+        assert_eq!(all[8], vec![2, 30]);
+        // all unique
+        let mut uniq = all.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 9);
+    }
+
+    #[test]
+    fn lhs_covers_strata() {
+        let s = space();
+        let mut rng = Rng::new(9);
+        let n = 8;
+        let d = s.latin_hypercube(n, &mut rng);
+        assert_eq!(d.len(), n);
+        for cfg in &d {
+            assert!(s.contains(cfg));
+        }
+        // For the 56-value params, 8 LHS strata are >= 7 grid points wide,
+        // so after snapping all sampled values must be pairwise distinct.
+        for pi in [INTRA_OP, OMP_THREADS] {
+            let mut vs: Vec<i64> = d.iter().map(|c| c[pi]).collect();
+            vs.sort_unstable();
+            let before = vs.len();
+            vs.dedup();
+            assert_eq!(vs.len(), before, "strata collide for param {pi}: {vs:?}");
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let s = space();
+        let mut rng = Rng::new(4);
+        let cfg = s.random(&mut rng);
+        let j = s.config_to_json(&cfg);
+        let back = s.config_from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn json_missing_param_errors() {
+        let s = space();
+        let j = crate::util::json::parse(r#"{"batch_size": 64}"#).unwrap();
+        assert!(s.config_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn prop_snap_idempotent_and_in_bounds() {
+        let s = space();
+        prop::check("snap idempotent", 200, |rng| {
+            let raw: Vec<i64> =
+                s.params.iter().map(|_| prop::int_biased(rng, -2000, 3000)).collect();
+            let snapped = s.snap(&raw);
+            assert_eq!(s.snap(&snapped), snapped);
+            assert!(s.contains(&snapped));
+            for (p, &v) in s.params.iter().zip(&snapped) {
+                assert!(v >= p.min && v <= p.max);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_unit_round_trip() {
+        let s = space();
+        prop::check("unit round trip", 200, |rng| {
+            let cfg = s.random(rng);
+            let u = s.to_unit(&cfg);
+            assert_eq!(s.from_unit(&u), cfg);
+            for x in &u {
+                assert!((0.0..=1.0).contains(x));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_neighbour_on_grid_and_differs() {
+        let s = space();
+        prop::check("neighbour validity", 200, |rng| {
+            let cfg = s.random(rng);
+            let n = s.neighbour(&cfg, 0.3, rng);
+            assert!(s.contains(&n));
+        });
+    }
+
+    #[test]
+    fn degenerate_single_point_range() {
+        let p = ParamDef::new("x", 5, 5, 1);
+        assert_eq!(p.n_values(), 1);
+        assert_eq!(p.from_unit(0.7), 5);
+        assert_eq!(p.to_unit(5), 0.5);
+    }
+}

@@ -1,0 +1,151 @@
+//! Mini benchmark harness (criterion is not vendored in this offline
+//! image). Provides warmup, adaptive iteration counts, and robust summary
+//! statistics; used by every `benches/*.rs` target (all declared with
+//! `harness = false`).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with criterion-like behaviour: warm up, pick an
+/// iteration count that fits the measurement budget, take batched samples.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1500),
+            max_samples: 60,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_ms: u64, measure_ms: u64) -> Self {
+        Bencher {
+            warmup: Duration::from_millis(warmup_ms),
+            measure: Duration::from_millis(measure_ms),
+            ..Default::default()
+        }
+    }
+
+    /// Measure `f`, printing a one-line summary. The closure should return
+    /// something cheap (e.g. a checksum) to keep the optimizer honest.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup and per-call cost estimate.
+        let warm_start = Instant::now();
+        let mut calls = 0u64;
+        while warm_start.elapsed() < self.warmup || calls == 0 {
+            std::hint::black_box(f());
+            calls += 1;
+            if calls > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = warm_start.elapsed().as_nanos() as f64 / calls as f64;
+
+        // Choose batch size so each sample takes ~measure/max_samples.
+        let sample_budget_ns = self.measure.as_nanos() as f64 / self.max_samples as f64;
+        let batch = ((sample_budget_ns / per_call.max(1.0)).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.max_samples);
+        let run_start = Instant::now();
+        while samples.len() < self.max_samples && run_start.elapsed() < self.measure {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+        }
+
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: batch * samples.len() as u64,
+            mean_ns: stats::mean(&samples),
+            median_ns: stats::median(&samples),
+            stddev_ns: stats::stddev(&samples),
+            p95_ns: stats::quantile(&samples, 0.95),
+        };
+        println!(
+            "bench {:<44} mean {:>10}  median {:>10}  p95 {:>10}  (n={})",
+            result.name,
+            fmt_ns(result.mean_ns),
+            fmt_ns(result.median_ns),
+            fmt_ns(result.p95_ns),
+            result.iters,
+        );
+        self.results.push(result.clone());
+        result
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::new(5, 30);
+        let r = b.bench("noop-ish", || std::hint::black_box(1 + 1));
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn ordering_of_costs() {
+        // black_box each element so the sums cannot fold to closed forms.
+        let mut b = Bencher::new(5, 40);
+        let cheap = b.bench("cheap", || (0..8u64).map(std::hint::black_box).sum::<u64>());
+        let costly =
+            b.bench("costly", || (0..20_000u64).map(std::hint::black_box).sum::<u64>());
+        assert!(costly.mean_ns > cheap.mean_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+}

