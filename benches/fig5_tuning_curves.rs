@@ -5,7 +5,7 @@
 //!
 //!     cargo bench --bench fig5_tuning_curves
 
-use tftune::algorithms::Algorithm;
+use tftune::algorithms::{Algorithm, Tuner};
 use tftune::config::SurrogateKind;
 use tftune::evaluator::SimEvaluator;
 use tftune::figures::{fig5, OUT_DIR};
@@ -36,9 +36,9 @@ fn main() -> anyhow::Result<()> {
         let mut eval = SimEvaluator::new(model, 5);
         use tftune::evaluator::Evaluator;
         b.bench(&format!("iteration/{}", alg.name()), || {
-            let cfg = tuner.propose();
-            let v = eval.evaluate(&cfg).unwrap();
-            tuner.observe(&cfg, v);
+            let trial = tuner.ask(1).pop().unwrap();
+            let v = eval.evaluate(&trial.config).unwrap();
+            tuner.tell(trial.id, &tftune::history::Measurement::new(v));
             v
         });
     }

@@ -12,7 +12,7 @@
 use tftune::algorithms::{Algorithm, BayesOpt, Tuner};
 use tftune::evaluator::{Evaluator, RemoteEvaluator, SimEvaluator};
 use tftune::gp::{GpHyper, NativeSurrogate, Surrogate};
-use tftune::history::random_history;
+use tftune::history::{random_history, Measurement};
 use tftune::runtime::GpSurrogate;
 use tftune::server::TargetServer;
 use tftune::sim::{ModelId, SimWorkload};
@@ -58,14 +58,14 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    println!("\n== engine propose/observe ==");
+    println!("\n== engine ask/tell ==");
     for alg in [Algorithm::Bo, Algorithm::Ga, Algorithm::Nms, Algorithm::Random] {
         let mut tuner = alg.build(&space, 1);
         let mut eval = SimEvaluator::new(model, 1);
         b.bench(&format!("engine/{}", alg.name()), || {
-            let cfg = tuner.propose();
-            let v = eval.evaluate(&cfg).unwrap();
-            tuner.observe(&cfg, v);
+            let trial = tuner.ask(1).pop().unwrap();
+            let v = eval.evaluate(&trial.config).unwrap();
+            tuner.tell(trial.id, &Measurement::new(v));
             v
         });
     }
@@ -73,9 +73,9 @@ fn main() -> anyhow::Result<()> {
         let mut bo = BayesOpt::with_surrogate(space.clone(), 2, hlo);
         let mut eval = SimEvaluator::new(model, 2);
         b.bench("engine/bo-hlo-surrogate", || {
-            let cfg = bo.propose();
-            let v = eval.evaluate(&cfg).unwrap();
-            bo.observe(&cfg, v);
+            let trial = bo.ask(1).pop().unwrap();
+            let v = eval.evaluate(&trial.config).unwrap();
+            bo.tell(trial.id, &Measurement::new(v));
             v
         });
     }

@@ -1,55 +1,75 @@
-//! The paper's Fig. 4 deployment: the optimization framework (host) and
-//! the system under test (target) are separate processes talking over
-//! TCP, so the tuner's compute cannot perturb the measurements.
+//! The paper's Fig. 4 deployment, scaled out: the optimization framework
+//! (host) and the system under test (target) are separate processes
+//! talking over TCP, so the tuner's compute cannot perturb the
+//! measurements — and with the ask/tell session the host shards its
+//! in-flight trials across *several* target daemons at once.
 //!
-//! This example runs the target daemon on a background thread, then tunes
-//! BERT-FP32 over the wire with all three paper algorithms.
+//! This example runs two target daemons on background threads, then tunes
+//! BERT-FP32 over the wire with all three paper algorithms, two trials in
+//! flight at any moment (one per daemon connection).
 //!
 //!     cargo run --release --example distributed_tuning
 
 use anyhow::Result;
 use tftune::algorithms::Algorithm;
-use tftune::evaluator::{tune, Evaluator, RemoteEvaluator, SimEvaluator};
+use tftune::evaluator::{Evaluator, RemoteEvaluator, SimEvaluator};
 use tftune::server::TargetServer;
+use tftune::session::{Budget, TuningSession};
 use tftune::sim::ModelId;
 
 fn main() -> Result<()> {
     let model = ModelId::BertFp32;
     let space = model.space();
 
-    // Target side: the daemon that applies configs and measures.
-    let server = TargetServer::bind(
-        "127.0.0.1:0",
-        space.clone(),
-        Box::new(SimEvaluator::new(model, 42)),
-    )?;
-    let (addr, handle) = server.spawn()?;
-    println!("target daemon listening on {addr} ({})", model.name());
+    // Target side: two daemons, e.g. two machines in the paper's testbed.
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for seed in [42, 43] {
+        let server = TargetServer::bind(
+            "127.0.0.1:0",
+            space.clone(),
+            Box::new(SimEvaluator::new(model, seed)),
+        )?;
+        let (addr, handle) = server.spawn()?;
+        println!("target daemon listening on {addr} ({})", model.name());
+        addrs.push(addr.to_string());
+        handles.push(handle);
+    }
+    let addr_list = addrs.join(",");
 
-    // Host side: one connection per algorithm engine.
-    let mut last = None;
+    // Host side: one session per algorithm, one connection per daemon.
     for alg in Algorithm::all_paper() {
-        let mut remote = RemoteEvaluator::connect(&addr.to_string(), space.clone())?;
-        println!("\nhost connected to {}", remote.describe());
-        let mut tuner = alg.build(&space, 7);
+        let remotes = RemoteEvaluator::connect_all(&addr_list, &space)?;
+        println!("\nhost connected to {} daemons for {}", remotes.len(), alg.name());
+        let pool: Vec<Box<dyn Evaluator + Send>> = remotes
+            .into_iter()
+            .map(|r| Box::new(r) as Box<dyn Evaluator + Send>)
+            .collect();
+        let tuner = alg.build(&space, 7);
         let t0 = std::time::Instant::now();
-        let history = tune(tuner.as_mut(), &mut remote, 25)?;
+        let mut session = TuningSession::new(tuner, pool, Budget::evaluations(24));
+        let history = session.run()?;
         let best = history.best().unwrap();
         println!(
-            "{:<24} best {:>7.1} examples/s at iter {:>2}  ({} evals over TCP in {:.2}s)",
+            "{:<24} best {:>7.1} examples/s at trial {:>2}  ({} evals over TCP in {:.2}s)",
             alg.name(),
             best.value,
-            best.iteration,
+            best.trial_id,
             history.len(),
             t0.elapsed().as_secs_f64()
         );
         println!("  best config: {}", space.config_to_json(&best.config));
-        last = Some(remote);
     }
 
-    // Shut the daemon down cleanly and report its evaluation count.
-    last.unwrap().shutdown()?;
-    let served = handle.join().expect("server thread")?;
-    println!("\ntarget daemon served {served} evaluations total");
+    // Shut the daemons down cleanly and report their evaluation counts.
+    let mut served = 0;
+    for addr in &addrs {
+        let remote = RemoteEvaluator::connect(addr, space.clone())?;
+        remote.shutdown()?;
+    }
+    for handle in handles {
+        served += handle.join().expect("server thread")?;
+    }
+    println!("\ntarget daemons served {served} evaluations total");
     Ok(())
 }

@@ -1,0 +1,65 @@
+//! Parallel tuning with the ask/tell session driver: one BO engine, four
+//! simulator evaluators measuring concurrently, a composite budget
+//! (evaluation cap + wall-clock limit + plateau stop), and a per-trial
+//! callback streaming completions as they land — the building blocks for
+//! sharding measurements across many targets.
+//!
+//!     cargo run --release --example parallel_tuning [parallel] [iters]
+//!
+//! Migration note (propose/observe -> ask/tell): where old code wrote
+//! `let cfg = tuner.propose(); tuner.observe(&cfg, value)`, ask/tell code
+//! writes `let t = tuner.ask(1).pop().unwrap(); tuner.tell(t.id, &m)` —
+//! and a `TuningSession` does exactly that for you, n trials at a time.
+
+use anyhow::Result;
+use tftune::algorithms::Algorithm;
+use tftune::evaluator::{sim_pool, Objective};
+use tftune::session::{Budget, TuningSession};
+use tftune::sim::ModelId;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parallel: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let iters: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(40);
+
+    let model = ModelId::Resnet50Fp32;
+    let space = model.space();
+    println!(
+        "tuning {} with BO: {iters} evaluations over {parallel} parallel evaluator(s)",
+        model.name()
+    );
+
+    let budget = Budget::evaluations(iters)
+        .with_max_seconds(60.0)
+        .with_plateau(25, 0.001);
+    let tuner = Algorithm::Bo.build(&space, 0);
+    let pool = sim_pool(
+        model,
+        0,
+        tftune::sim::noise::DEFAULT_SIGMA,
+        Objective::Throughput,
+        parallel,
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut session = TuningSession::new(tuner, pool, budget).on_trial(|trial, m| {
+        println!(
+            "  trial {:>3} done: {:>8.1} examples/s  (measured in {:.3}s)",
+            trial.id, m.value, m.cost_s
+        );
+    });
+    let history = session.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let best = history.best().expect("non-empty history");
+    println!(
+        "\nstopped by {} after {} trials in {wall:.2}s wall clock \
+         ({:.2}s of measurement time packed onto {parallel} evaluator(s))",
+        session.stop_reason().map(|r| r.name()).unwrap_or("?"),
+        history.len(),
+        history.total_cost_s(),
+    );
+    println!("best: {:.1} examples/s at trial {}", best.value, best.trial_id);
+    println!("best config: {}", space.config_to_json(&best.config));
+    Ok(())
+}

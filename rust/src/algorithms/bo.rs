@@ -15,8 +15,9 @@
 //! (`runtime::GpSurrogate`); the exact native GP is the oracle/fallback.
 //! Python is never on this path.
 
-use super::Tuner;
+use super::{TrialBook, Tuner};
 use crate::gp::{GpHyper, NativeSurrogate, Surrogate};
+use crate::history::Measurement;
 use crate::space::{Config, SearchSpace};
 use crate::util::{stats, Rng};
 
@@ -47,6 +48,10 @@ pub struct BayesOpt<S: Surrogate = NativeSurrogate> {
     pending_init: Vec<Config>,
     /// All observations: (unit-cube x, raw y, config).
     observed: Vec<(Vec<f64>, f64, Config)>,
+    /// Open trials. Pending configurations are conditioned into the GP as
+    /// constant-liar fantasies (at the standardised mean) so a batch of
+    /// `ask`ed trials spreads out instead of collapsing onto one point.
+    book: TrialBook,
 }
 
 impl BayesOpt<NativeSurrogate> {
@@ -72,6 +77,7 @@ impl<S: Surrogate> BayesOpt<S> {
             n_candidates: CANDIDATES,
             pending_init,
             observed: Vec::new(),
+            book: TrialBook::new(),
         }
     }
 
@@ -135,17 +141,30 @@ impl<S: Surrogate> BayesOpt<S> {
     fn propose_bo(&mut self) -> Config {
         // Standardise y over the conditioning set.
         let idx = self.conditioning_set();
-        let x: Vec<Vec<f64>> = idx.iter().map(|&i| self.observed[i].0.clone()).collect();
+        let mut x: Vec<Vec<f64>> = idx.iter().map(|&i| self.observed[i].0.clone()).collect();
         let y_raw: Vec<f64> = idx.iter().map(|&i| self.observed[i].1).collect();
         let mean = stats::mean(&y_raw);
         let sd = stats::stddev(&y_raw).max(1e-9);
-        let y: Vec<f64> = y_raw.iter().map(|v| (v - mean) / sd).collect();
+        let mut y: Vec<f64> = y_raw.iter().map(|v| (v - mean) / sd).collect();
         let y_best = y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
 
         let incumbent = {
             let bi = stats::argmax(&y_raw);
             x[bi].clone()
         };
+
+        // Constant-liar fantasies for in-flight trials: pretend each lands
+        // at the observed mean (standardised 0), which kills the variance
+        // bonus around pending points and pushes the batch apart. Capped so
+        // the conditioning set still fits the AOT artifact's N_PAD.
+        for cfg in self.book.open_configs() {
+            if x.len() >= MAX_HISTORY {
+                break;
+            }
+            x.push(self.space.to_unit(cfg));
+            y.push(0.0);
+        }
+
         let cands = self.candidates(&incumbent);
 
         let scores =
@@ -159,12 +178,15 @@ impl<S: Surrogate> BayesOpt<S> {
             }
         };
 
-        // Highest-gain candidate whose snapped config is unseen.
+        // Highest-gain candidate whose snapped config is neither measured
+        // nor already in flight.
         let mut order: Vec<usize> = (0..cands.len()).collect();
         order.sort_by(|&a, &b| scores.gain[b].partial_cmp(&scores.gain[a]).unwrap());
         for &ci in &order {
             let cfg = self.space.from_unit(&cands[ci]);
-            if !self.observed.iter().any(|(_, _, c)| c == &cfg) {
+            if !self.observed.iter().any(|(_, _, c)| c == &cfg)
+                && !self.book.open_configs().any(|c| c == &cfg)
+            {
                 return cfg;
             }
         }
@@ -178,17 +200,30 @@ impl<S: Surrogate> Tuner for BayesOpt<S> {
         "bayesian-optimization"
     }
 
-    fn propose(&mut self) -> Config {
-        if let Some(cfg) = self.pending_init.pop() {
-            return cfg;
+    fn ask(&mut self, n: usize) -> Vec<super::Trial> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cfg = if let Some(cfg) = self.pending_init.pop() {
+                cfg
+            } else if self.observed.len() < 2 {
+                self.space.random(&mut self.rng)
+            } else {
+                self.propose_bo()
+            };
+            out.push(self.book.issue(cfg));
         }
-        if self.observed.len() < 2 {
-            return self.space.random(&mut self.rng);
-        }
-        self.propose_bo()
+        out
     }
 
-    fn observe(&mut self, config: &Config, value: f64) {
+    fn tell(&mut self, id: super::TrialId, m: &Measurement) {
+        if let Some(cfg) = self.book.settle(id) {
+            let u = self.space.to_unit(&cfg);
+            self.observed.push((u, m.value, cfg));
+        }
+    }
+
+    /// Inject a past observation (warm start / duplicate-history stress).
+    fn warm_start(&mut self, config: &Config, value: f64) {
         let u = self.space.to_unit(config);
         self.observed.push((u, value, config.clone()));
     }
@@ -213,6 +248,14 @@ mod tests {
         }
     }
 
+    /// ask(1)/tell one step against a closure objective.
+    fn step<S: Surrogate>(bo: &mut BayesOpt<S>, obj: impl Fn(&Config) -> f64) -> (Config, f64) {
+        let t = bo.ask(1).pop().unwrap();
+        let v = obj(&t.config);
+        bo.tell(t.id, &Measurement::new(v));
+        (t.config, v)
+    }
+
     #[test]
     fn finds_good_region_on_quadratic() {
         let s = space();
@@ -221,9 +264,7 @@ mod tests {
         let mut bo = BayesOpt::new(s.clone(), 5);
         let mut best = f64::NEG_INFINITY;
         for _ in 0..40 {
-            let c = bo.propose();
-            let v = obj(&c);
-            bo.observe(&c, v);
+            let (_, v) = step(&mut bo, &obj);
             best = best.max(v);
         }
         assert!(best > 9.5, "BO best {best} too low");
@@ -241,13 +282,11 @@ mod tests {
             let mut best_bo = f64::NEG_INFINITY;
             let mut best_rs = f64::NEG_INFINITY;
             for _ in 0..30 {
-                let c = bo.propose();
-                let v = obj(&c);
-                bo.observe(&c, v);
+                let (_, v) = step(&mut bo, &obj);
                 best_bo = best_bo.max(v);
-                let c = rs.propose();
-                best_rs = best_rs.max(obj(&c));
-                rs.observe(&c, 0.0);
+                let t = rs.ask(1).pop().unwrap();
+                best_rs = best_rs.max(obj(&t.config));
+                rs.tell(t.id, &Measurement::new(0.0));
             }
             if best_bo >= best_rs {
                 seeds_bo_wins += 1;
@@ -264,9 +303,7 @@ mod tests {
         let mut bo = BayesOpt::new(s.clone(), 9);
         let mut h = crate::history::History::new();
         for _ in 0..50 {
-            let c = bo.propose();
-            let v = obj(&c);
-            bo.observe(&c, v);
+            let (c, v) = step(&mut bo, &obj);
             h.push(c, v);
         }
         let pct = h.sampled_range_pct(&s).unwrap();
@@ -280,16 +317,42 @@ mod tests {
         prop::check("bo on grid", 5, |rng| {
             let mut bo = BayesOpt::new(s.clone(), rng.next_u64());
             let mut seen = std::collections::BTreeSet::new();
-            for i in 0..25 {
-                let c = bo.propose();
-                assert!(s.contains(&c));
-                seen.insert(c.clone());
-                bo.observe(&c, rng.range_f64(0.0, 1.0));
-                let _ = i;
+            for _ in 0..25 {
+                let t = bo.ask(1).pop().unwrap();
+                assert!(s.contains(&t.config));
+                seen.insert(t.config.clone());
+                bo.tell(t.id, &Measurement::new(rng.range_f64(0.0, 1.0)));
             }
             // BO explicitly avoids re-proposing seen configs
             assert!(seen.len() >= 23, "too many duplicates: {}", seen.len());
         });
+    }
+
+    #[test]
+    fn batched_ask_spreads_via_constant_liar() {
+        // After the initial design, a batch must contain distinct configs:
+        // the fantasies suppress re-proposing the same optimistic point.
+        let s = space();
+        let obj = quadratic(&s, &vec![2, 28, 512, 100, 28]);
+        let mut bo = BayesOpt::new(s.clone(), 11);
+        for _ in 0..INIT_DESIGN + 2 {
+            step(&mut bo, &obj);
+        }
+        let batch = bo.ask(6);
+        assert_eq!(batch.len(), 6);
+        let mut ids: Vec<_> = batch.iter().map(|t| t.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 6, "trial ids must be unique");
+        let mut cfgs: Vec<_> = batch.iter().map(|t| t.config.clone()).collect();
+        cfgs.sort();
+        cfgs.dedup();
+        assert_eq!(cfgs.len(), 6, "batch collapsed onto duplicate configs");
+        // out-of-order completion must be accepted
+        for t in batch.iter().rev() {
+            bo.tell(t.id, &Measurement::new(obj(&t.config)));
+        }
+        assert_eq!(bo.book.open_len(), 0);
     }
 
     #[test]
@@ -299,7 +362,7 @@ mod tests {
         let mut rng = Rng::new(1);
         for i in 0..(MAX_HISTORY + 40) {
             let c = s.random(&mut rng);
-            bo.observe(&c, i as f64);
+            bo.warm_start(&c, i as f64);
         }
         let idx = bo.conditioning_set();
         assert_eq!(idx.len(), MAX_HISTORY);

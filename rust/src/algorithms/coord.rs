@@ -7,7 +7,8 @@
 //! intra×OMP core sharing), which makes it a useful probe of the
 //! simulator's interaction structure in the ablation benches.
 
-use super::Tuner;
+use super::{TrialBook, TrialId, Tuner};
+use crate::history::Measurement;
 use crate::space::{Config, SearchSpace};
 use crate::util::Rng;
 
@@ -22,7 +23,15 @@ pub struct CoordinateDescent {
     param: usize,
     /// Which probe of that parameter is next.
     probe: usize,
-    in_flight: Option<Config>,
+    /// Open trials. The probe cursor advances once per *probe* tell; `ask`
+    /// offsets by the number of open probes so a batch covers successive
+    /// probes instead of measuring one probe n times.
+    book: TrialBook,
+    /// Ids of open probe trials. Bootstrap randoms (issued while `best` is
+    /// still unset) are deliberately absent: their tells must not consume
+    /// probe-ladder slots, or a parallel warm-up would skip the first
+    /// parameter's sweep entirely.
+    open_probes: Vec<TrialId>,
 }
 
 impl CoordinateDescent {
@@ -33,8 +42,17 @@ impl CoordinateDescent {
             best: None,
             param: 0,
             probe: 0,
-            in_flight: None,
+            book: TrialBook::new(),
+            open_probes: Vec::new(),
         }
+    }
+
+    /// The (param, probe) pair `ahead` tells into the future.
+    fn cursor_ahead(&self, ahead: usize) -> (usize, usize) {
+        let linear = self.param * PROBES.len() + self.probe + ahead;
+        let probe = linear % PROBES.len();
+        let param = (linear / PROBES.len()) % self.space.dim();
+        (param, probe)
     }
 }
 
@@ -43,35 +61,62 @@ impl Tuner for CoordinateDescent {
         "coordinate-descent"
     }
 
-    fn propose(&mut self) -> Config {
-        let cfg = match &self.best {
-            None => self.space.random(&mut self.rng),
-            Some((best, _)) => {
-                let mut cfg = best.clone();
-                let p = &self.space.params[self.param];
-                cfg[self.param] = p.from_unit(PROBES[self.probe]);
-                cfg
+    fn ask(&mut self, n: usize) -> Vec<super::Trial> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match &self.best {
+                None => {
+                    let cfg = self.space.random(&mut self.rng);
+                    out.push(self.book.issue(cfg));
+                }
+                Some((best, _)) => {
+                    let (param, probe) = self.cursor_ahead(self.open_probes.len());
+                    let mut cfg = best.clone();
+                    cfg[param] = self.space.params[param].from_unit(PROBES[probe]);
+                    let trial = self.book.issue(cfg);
+                    self.open_probes.push(trial.id);
+                    out.push(trial);
+                }
             }
-        };
-        self.in_flight = Some(cfg.clone());
-        cfg
+        }
+        out
     }
 
-    fn observe(&mut self, config: &Config, value: f64) {
-        let cfg = self.in_flight.take().unwrap_or_else(|| config.clone());
+    fn tell(&mut self, id: super::TrialId, m: &Measurement) {
+        let Some(cfg) = self.book.settle(id) else { return };
+        let was_probe = match self.open_probes.iter().position(|t| *t == id) {
+            Some(i) => {
+                self.open_probes.remove(i);
+                true
+            }
+            None => false,
+        };
+        let bootstrap = self.best.is_none();
         let improved = match &self.best {
             None => true,
-            Some((_, v)) => value > *v,
+            Some((_, v)) => m.value > *v,
         };
         if improved {
-            self.best = Some((cfg, value));
+            self.best = Some((cfg, m.value));
         }
-        if self.best.is_some() {
+        // Advance the ladder for probe results, plus once for the very
+        // first (bootstrap) observation — the serial propose/observe loop
+        // advanced there too, and that quirk is part of the preserved
+        // trajectory. Later bootstrap randoms resolving out of a parallel
+        // warm-up batch do not consume probe slots.
+        if was_probe || bootstrap {
             self.probe += 1;
             if self.probe >= PROBES.len() {
                 self.probe = 0;
                 self.param = (self.param + 1) % self.space.dim();
             }
+        }
+    }
+
+    fn warm_start(&mut self, config: &Config, value: f64) {
+        let better = self.best.as_ref().map_or(true, |(_, v)| value > *v);
+        if better {
+            self.best = Some((config.clone(), value));
         }
     }
 }
@@ -86,6 +131,13 @@ mod tests {
         threading_space(64, 1024, 64)
     }
 
+    fn step(cd: &mut CoordinateDescent, obj: impl Fn(&Config) -> f64) -> (Config, f64) {
+        let t = cd.ask(1).pop().unwrap();
+        let v = obj(&t.config);
+        cd.tell(t.id, &Measurement::new(v));
+        (t.config, v)
+    }
+
     #[test]
     fn solves_separable_objective() {
         // separable: best at intra=56, omp=56, rest irrelevant
@@ -94,9 +146,7 @@ mod tests {
         let mut cd = CoordinateDescent::new(s.clone(), 1);
         let mut best = f64::NEG_INFINITY;
         for _ in 0..55 {
-            let c = cd.propose();
-            let v = obj(&c);
-            cd.observe(&c, v);
+            let (_, v) = step(&mut cd, obj);
             best = best.max(v);
         }
         assert_eq!(best, 112.0, "coordinate descent must max a separable sum");
@@ -109,7 +159,7 @@ mod tests {
         let mut seen_params = std::collections::BTreeSet::new();
         let mut last: Option<Config> = None;
         for _ in 0..(1 + 5 * 5) {
-            let c = cd.propose();
+            let (c, _) = step(&mut cd, |_| 1.0); // flat: never improves after first
             if let Some(prev) = &last {
                 for (i, (a, b)) in prev.iter().zip(&c).enumerate() {
                     if a != b {
@@ -117,7 +167,6 @@ mod tests {
                     }
                 }
             }
-            cd.observe(&c, 1.0); // flat: never improves after first
             last = Some(c);
         }
         // flat objective: probes still walk every parameter
@@ -130,10 +179,50 @@ mod tests {
         prop::check("cd on grid", 25, |rng| {
             let mut cd = CoordinateDescent::new(s.clone(), rng.next_u64());
             for _ in 0..30 {
-                let c = cd.propose();
-                assert!(s.contains(&c));
-                cd.observe(&c, rng.range_f64(0.0, 5.0));
+                let t = cd.ask(1).pop().unwrap();
+                assert!(s.contains(&t.config));
+                cd.tell(t.id, &Measurement::new(rng.range_f64(0.0, 5.0)));
             }
         });
+    }
+
+    #[test]
+    fn bootstrap_randoms_do_not_consume_probe_slots() {
+        let s = space();
+        let mut cd = CoordinateDescent::new(s.clone(), 7);
+        // parallel-style warm-up: 4 bootstrap randoms in flight at once
+        let batch = cd.ask(4);
+        assert_eq!(batch.len(), 4);
+        for t in batch {
+            cd.tell(t.id, &Measurement::new(1.0));
+        }
+        // Only the first bootstrap tell advances the ladder (the serial
+        // quirk); the other three must not, or parameter 0 would never be
+        // swept after a parallel warm-up.
+        assert_eq!((cd.param, cd.probe), (0, 1));
+        let t = cd.ask(1).pop().unwrap();
+        assert_eq!(t.config[0], s.params[0].from_unit(PROBES[1]));
+    }
+
+    #[test]
+    fn batched_ask_covers_successive_probes() {
+        let s = space();
+        let mut cd = CoordinateDescent::new(s.clone(), 3);
+        step(&mut cd, |c: &Config| (c[1] + c[4]) as f64); // establish best
+        // A batch of 5 lays out successive probes. The first tell already
+        // advanced the cursor to (param 0, probe 1), so the batch covers
+        // probes 1..=4 of parameter 0 and then probe 0 of parameter 1.
+        let batch = cd.ask(5);
+        assert_eq!(batch.len(), 5);
+        let probed: Vec<i64> = batch[..4].iter().map(|t| t.config[0]).collect();
+        let expected: Vec<i64> =
+            PROBES[1..].iter().map(|&u| s.params[0].from_unit(u)).collect();
+        assert_eq!(probed, expected, "batch must walk the probe ladder");
+        assert_eq!(batch[4].config[1], s.params[1].from_unit(PROBES[0]));
+        // shuffled tells keep the sweep moving without panicking
+        for t in batch.iter().rev() {
+            cd.tell(t.id, &Measurement::new((t.config[1] + t.config[4]) as f64));
+        }
+        assert!(cd.ask(1).pop().is_some());
     }
 }

@@ -11,7 +11,8 @@
 //! early winners, mutation is the only mechanism that ever reaches the
 //! range extremes, and sampled range coverage stays below ~50%.
 
-use super::Tuner;
+use super::{TrialBook, Tuner};
+use crate::history::Measurement;
 use crate::space::{Config, SearchSpace};
 use crate::util::Rng;
 
@@ -41,6 +42,9 @@ pub struct Genetic {
     history: Vec<(Config, f64)>,
     /// Seeds not yet evaluated.
     pending_init: Vec<Config>,
+    /// Open trials keyed by id: a tell looks its configuration up here, so
+    /// out-of-order completions land in the right history slot.
+    book: TrialBook,
 }
 
 impl Genetic {
@@ -58,7 +62,7 @@ impl Genetic {
                 space.from_unit(&u)
             })
             .collect();
-        Genetic { space, rng, history: Vec::new(), pending_init }
+        Genetic { space, rng, history: Vec::new(), pending_init, book: TrialBook::new() }
     }
 
     /// The two fittest configurations observed so far.
@@ -112,19 +116,33 @@ impl Tuner for Genetic {
         "genetic-algorithm"
     }
 
-    fn propose(&mut self) -> Config {
-        if let Some(cfg) = self.pending_init.pop() {
-            return cfg;
+    fn ask(&mut self, n: usize) -> Vec<super::Trial> {
+        // A batch is one (partial) generation: children bred back-to-back
+        // from the current top-2 parents. Parents only refresh on tells, so
+        // the generation stays coherent however its results interleave.
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cfg = if let Some(cfg) = self.pending_init.pop() {
+                cfg
+            } else if self.history.len() < 2 {
+                // degenerate budget: fall back to random
+                let mut r = self.rng.fork(1);
+                self.space.random(&mut r)
+            } else {
+                self.breed()
+            };
+            out.push(self.book.issue(cfg));
         }
-        if self.history.len() < 2 {
-            // degenerate budget: fall back to random
-            let mut r = self.rng.fork(1);
-            return self.space.random(&mut r);
-        }
-        self.breed()
+        out
     }
 
-    fn observe(&mut self, config: &Config, value: f64) {
+    fn tell(&mut self, id: super::TrialId, m: &Measurement) {
+        if let Some(cfg) = self.book.settle(id) {
+            self.history.push((cfg, m.value));
+        }
+    }
+
+    fn warm_start(&mut self, config: &Config, value: f64) {
         self.history.push((config.clone(), value));
     }
 }
@@ -139,14 +157,20 @@ mod tests {
         threading_space(64, 1024, 64)
     }
 
+    /// ask(1)/tell one step with the given value; returns the config.
+    fn step(ga: &mut Genetic, value: f64) -> Config {
+        let t = ga.ask(1).pop().unwrap();
+        ga.tell(t.id, &Measurement::new(value));
+        t.config
+    }
+
     #[test]
     fn initial_population_is_random_grid_points() {
         let s = space();
         let mut ga = Genetic::new(s.clone(), 1);
         for _ in 0..POPULATION {
-            let c = ga.propose();
+            let c = step(&mut ga, 1.0);
             assert!(s.contains(&c));
-            ga.observe(&c, 1.0);
         }
     }
 
@@ -156,17 +180,15 @@ mod tests {
         let mut ga = Genetic::new(s.clone(), 2);
         // Drain the initial population with low fitness...
         for _ in 0..POPULATION {
-            let c = ga.propose();
-            ga.observe(&c, -1.0);
+            step(&mut ga, -1.0);
         }
-        // ...then record two very different parents with top fitness.
+        // ...then inject two very different parents with top fitness.
         let p1 = vec![1, 1, 64, 0, 1];
         let p2 = vec![4, 56, 1024, 200, 56];
-        ga.observe(&p1, 100.0);
-        ga.observe(&p2, 90.0);
+        ga.warm_start(&p1, 100.0);
+        ga.warm_start(&p2, 90.0);
         for _ in 0..50 {
-            let child = ga.propose();
-            ga.observe(&child, 0.0); // keep parents on top
+            let child = step(&mut ga, 0.0); // keep parents on top
             // Each unmutated gene must come from one of the parents.
             let inherited = child
                 .iter()
@@ -186,9 +208,10 @@ mod tests {
         // Simulate a tuning run with a smooth objective.
         let mut sampled: Vec<Config> = Vec::new();
         for _ in 0..50 {
-            let c = ga.propose();
+            let t = ga.ask(1).pop().unwrap();
+            let c = t.config;
             let v = -((c[1] - 28).abs() as f64) - (c[4] - 20).abs() as f64;
-            ga.observe(&c, v);
+            ga.tell(t.id, &Measurement::new(v));
             sampled.push(c);
         }
         let mut h = crate::history::History::new();
@@ -208,9 +231,9 @@ mod tests {
         prop::check("ga children on grid", 30, |rng| {
             let mut ga = Genetic::new(s.clone(), rng.next_u64());
             for i in 0..20 {
-                let c = ga.propose();
-                assert!(s.contains(&c), "off-grid {c:?}");
-                ga.observe(&c, rng.range_f64(0.0, 100.0 + i as f64));
+                let t = ga.ask(1).pop().unwrap();
+                assert!(s.contains(&t.config), "off-grid {:?}", t.config);
+                ga.tell(t.id, &Measurement::new(rng.range_f64(0.0, 100.0 + i as f64)));
             }
         });
     }
@@ -219,11 +242,36 @@ mod tests {
     fn parents_are_top_two() {
         let s = space();
         let mut ga = Genetic::new(s.clone(), 4);
-        ga.observe(&vec![1, 10, 64, 0, 10], 5.0);
-        ga.observe(&vec![2, 20, 128, 10, 20], 50.0);
-        ga.observe(&vec![3, 30, 192, 20, 30], 20.0);
+        ga.warm_start(&vec![1, 10, 64, 0, 10], 5.0);
+        ga.warm_start(&vec![2, 20, 128, 10, 20], 50.0);
+        ga.warm_start(&vec![3, 30, 192, 20, 30], 20.0);
         let (b, s2) = ga.parents();
         assert_eq!(b, &vec![2, 20, 128, 10, 20]);
         assert_eq!(s2, &vec![3, 30, 192, 20, 30]);
+    }
+
+    #[test]
+    fn out_of_order_tells_fill_history_with_told_configs() {
+        let s = space();
+        let mut ga = Genetic::new(s.clone(), 5);
+        let trials = ga.ask(POPULATION);
+        assert_eq!(trials.len(), POPULATION);
+        // tell in reverse order; history must pair each value with the
+        // config that trial id was issued for
+        for (i, t) in trials.iter().enumerate().rev() {
+            ga.tell(t.id, &Measurement::new(i as f64));
+        }
+        assert_eq!(ga.history.len(), POPULATION);
+        for (i, t) in trials.iter().enumerate() {
+            let slot = ga
+                .history
+                .iter()
+                .find(|(_, v)| *v == i as f64)
+                .expect("every value recorded");
+            assert_eq!(slot.0, t.config, "value {i} paired with the wrong config");
+        }
+        // stale tell is ignored
+        ga.tell(trials[0].id, &Measurement::new(999.0));
+        assert_eq!(ga.history.len(), POPULATION);
     }
 }

@@ -1,8 +1,10 @@
 //! Exhaustive grid-search baseline — the "close to a month of CPU time"
 //! strawman from the paper's introduction, and the engine behind the
-//! Fig. 6 exhaustive sweep.
+//! Fig. 6 exhaustive sweep. Batched `ask` hands out consecutive odometer
+//! points, so a parallel session shards the grid across evaluators.
 
-use super::Tuner;
+use super::{TrialBook, Tuner};
+use crate::history::Measurement;
 use crate::space::{Config, SearchSpace};
 
 pub struct GridSearch {
@@ -10,26 +12,21 @@ pub struct GridSearch {
     /// Odometer over value indices (last parameter fastest).
     idx: Vec<usize>,
     exhausted: bool,
+    book: TrialBook,
 }
 
 impl GridSearch {
     pub fn new(space: SearchSpace) -> GridSearch {
         let dim = space.dim();
-        GridSearch { space, idx: vec![0; dim], exhausted: false }
+        GridSearch { space, idx: vec![0; dim], exhausted: false, book: TrialBook::new() }
     }
 
     /// Has the full grid been proposed at least once?
     pub fn exhausted(&self) -> bool {
         self.exhausted
     }
-}
 
-impl Tuner for GridSearch {
-    fn name(&self) -> &'static str {
-        "grid-search"
-    }
-
-    fn propose(&mut self) -> Config {
+    fn next_point(&mut self) -> Config {
         let cfg: Config = self
             .space
             .params
@@ -53,8 +50,25 @@ impl Tuner for GridSearch {
         }
         cfg
     }
+}
 
-    fn observe(&mut self, _config: &Config, _value: f64) {}
+impl Tuner for GridSearch {
+    fn name(&self) -> &'static str {
+        "grid-search"
+    }
+
+    fn ask(&mut self, n: usize) -> Vec<super::Trial> {
+        (0..n)
+            .map(|_| {
+                let cfg = self.next_point();
+                self.book.issue(cfg)
+            })
+            .collect()
+    }
+
+    fn tell(&mut self, id: super::TrialId, _m: &Measurement) {
+        self.book.settle(id);
+    }
 }
 
 #[cfg(test)]
@@ -72,13 +86,33 @@ mod tests {
         let mut seen = Vec::new();
         for _ in 0..6 {
             assert!(!t.exhausted());
-            seen.push(t.propose());
+            seen.push(t.ask(1).pop().unwrap().config);
         }
         assert!(t.exhausted());
         seen.sort();
         seen.dedup();
         assert_eq!(seen.len(), 6);
         // wraps deterministically
-        assert_eq!(t.propose(), vec![0, 0]);
+        assert_eq!(t.ask(1).pop().unwrap().config, vec![0, 0]);
+    }
+
+    #[test]
+    fn batched_ask_shards_the_grid() {
+        let space = SearchSpace::new(vec![
+            ParamDef::new("a", 0, 1, 1),
+            ParamDef::new("b", 0, 2, 1),
+        ]);
+        let mut t = GridSearch::new(space);
+        let batch = t.ask(6);
+        assert_eq!(batch.len(), 6);
+        let mut ids: Vec<_> = batch.iter().map(|tr| tr.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 6, "trial ids must be unique");
+        let mut cfgs: Vec<_> = batch.iter().map(|tr| tr.config.clone()).collect();
+        cfgs.sort();
+        cfgs.dedup();
+        assert_eq!(cfgs.len(), 6, "one batch covers distinct grid points");
+        assert!(t.exhausted());
     }
 }

@@ -1,13 +1,52 @@
 //! The algorithmic engines (paper Fig. 4): Bayesian optimization, genetic
-//! algorithm, Nelder-Mead simplex, plus random-search and exhaustive-grid
-//! baselines.
+//! algorithm, Nelder-Mead simplex, plus random-search, exhaustive-grid,
+//! simulated-annealing and coordinate-descent baselines.
 //!
-//! All engines implement [`Tuner`], a propose/observe interface: the
-//! framework asks for the next configuration to measure, applies it to the
-//! system under test, and feeds the measurement back. The engines never
-//! talk to the system directly — that separation is the paper's
-//! "algorithm selection switch" and lets every engine share the same
-//! TensorFlow interface and data-acquisition module (`History`).
+//! # The ask/tell trial model
+//!
+//! All engines implement [`Tuner`], an *ask/tell* interface built around
+//! [`Trial`]s: [`Tuner::ask`] requests up to `n` configurations to measure
+//! — each wrapped in a `Trial` carrying an engine-unique id — and
+//! [`Tuner::tell`] reports the [`Measurement`] for one trial id. Ids make
+//! the conversation stateless in ordering: a driver may hold several
+//! trials in flight at once (a batch spread over parallel evaluators or
+//! remote daemons) and tell results back in whatever order they complete.
+//!
+//! Engines honour that contract each in their own way:
+//! - **BO** treats open trials as *constant-liar fantasies*: pending
+//!   configurations are conditioned into the GP at the mean of the
+//!   observed objective so a batch spreads out instead of re-proposing
+//!   the same optimistic point.
+//! - **GA / SA / coordinate descent** key their bookkeeping (fitness
+//!   history, Metropolis chain, probe cursor) by trial id, so late or
+//!   shuffled tells land in the right slot.
+//! - **NMS** issues whole simplex generations (initial vertices, shrink
+//!   re-evaluations) as batches and serialises only the genuinely
+//!   sequential reflect/expand/contract steps; while such a step is in
+//!   flight `ask` returns an empty batch rather than inventing points.
+//!
+//! `ask(n)` may return *fewer* than `n` trials (even zero) when the
+//! engine's internal state cannot justify more concurrency; drivers top
+//! up on the next call. The engines never talk to the system under test
+//! directly — that separation is the paper's "algorithm selection switch"
+//! and lets every engine share the same TensorFlow interface and
+//! data-acquisition module (`History`).
+//!
+//! # Migration from propose/observe
+//!
+//! Until this redesign the trait was `propose() -> Config` plus
+//! `observe(&Config, f64)`, hard-coding one in-flight configuration and a
+//! bare-float objective. The mapping is mechanical:
+//!
+//! ```text
+//! let cfg = tuner.propose();            let trial = tuner.ask(1).pop().unwrap();
+//! let v = eval.evaluate(&cfg)?;    =>   let m = eval.measure(&trial.config)?;
+//! tuner.observe(&cfg, v);               tuner.tell(trial.id, &m);
+//! ```
+//!
+//! The free function `evaluator::tune(tuner, evaluator, iters)` wraps
+//! exactly that loop, and `session::TuningSession` is the batched,
+//! budgeted, parallel driver built on the same two calls.
 
 pub mod bo;
 pub mod coord;
@@ -25,21 +64,79 @@ pub use nms::NelderMead;
 pub use random::RandomSearch;
 pub use sa::SimulatedAnnealing;
 
+use crate::history::Measurement;
 use crate::space::Config;
 
-/// A tuning engine. Implementations are stateful: `propose` yields the
-/// next configuration, `observe` feeds back its measured objective
-/// (throughput in examples/s; higher is better).
+/// Engine-assigned identifier of one proposed trial. Unique per engine
+/// instance for its whole lifetime.
+pub type TrialId = u64;
+
+/// One proposed evaluation: a grid configuration tagged with the id the
+/// engine will recognise when the measurement is told back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trial {
+    pub id: TrialId,
+    pub config: Config,
+}
+
+/// A tuning engine (ask/tell; see the module docs for the contract).
 pub trait Tuner {
     /// Engine name (figure legends, CLI).
     fn name(&self) -> &'static str;
 
-    /// Next configuration to evaluate. Always a valid grid point.
-    fn propose(&mut self) -> Config;
+    /// Request up to `n` trials to measure. Every returned configuration
+    /// is a valid grid point and every id is unique across the engine's
+    /// lifetime. May return fewer than `n` (or none) when the engine's
+    /// state cannot justify more concurrent trials.
+    fn ask(&mut self, n: usize) -> Vec<Trial>;
 
-    /// Report the measurement for the configuration from the most recent
-    /// `propose` call.
-    fn observe(&mut self, config: &Config, value: f64);
+    /// Report the measurement for a previously asked trial. Tells may
+    /// arrive in any order and interleaved with further `ask` calls;
+    /// unknown ids are ignored.
+    fn tell(&mut self, id: TrialId, m: &Measurement);
+
+    /// Inject a past observation without going through ask/tell (warm
+    /// starts from a persisted `History`). Engines that cannot use
+    /// out-of-band data ignore it.
+    fn warm_start(&mut self, _config: &Config, _value: f64) {}
+}
+
+/// Id allocation + open-trial ledger shared by the engine implementations.
+#[derive(Debug, Default)]
+pub(crate) struct TrialBook {
+    next_id: TrialId,
+    open: Vec<(TrialId, Config)>,
+}
+
+impl TrialBook {
+    pub fn new() -> TrialBook {
+        TrialBook::default()
+    }
+
+    /// Allocate an id for `config` and record it as in flight.
+    pub fn issue(&mut self, config: Config) -> Trial {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.open.push((id, config.clone()));
+        Trial { id, config }
+    }
+
+    /// Close an open trial, returning its configuration. None for ids
+    /// that were never issued (or already settled) — callers treat that
+    /// as an ignorable stale tell.
+    pub fn settle(&mut self, id: TrialId) -> Option<Config> {
+        let i = self.open.iter().position(|(t, _)| *t == id)?;
+        Some(self.open.remove(i).1)
+    }
+
+    /// Configurations currently in flight (issue order).
+    pub fn open_configs(&self) -> impl Iterator<Item = &Config> {
+        self.open.iter().map(|(_, c)| c)
+    }
+
+    pub fn open_len(&self) -> usize {
+        self.open.len()
+    }
 }
 
 /// Which engine to run (the algorithm-selection switch).
@@ -60,6 +157,18 @@ pub enum Algorithm {
 impl Algorithm {
     pub fn all_paper() -> [Algorithm; 3] {
         [Algorithm::Bo, Algorithm::Ga, Algorithm::Nms]
+    }
+
+    pub fn all() -> [Algorithm; 7] {
+        [
+            Algorithm::Bo,
+            Algorithm::Ga,
+            Algorithm::Nms,
+            Algorithm::Random,
+            Algorithm::Grid,
+            Algorithm::Sa,
+            Algorithm::Coord,
+        ]
     }
 
     pub fn name(&self) -> &'static str {
@@ -117,19 +226,28 @@ mod tests {
     #[test]
     fn build_all() {
         let space = crate::space::threading_space(64, 1024, 64);
-        for a in [
-            Algorithm::Bo,
-            Algorithm::Ga,
-            Algorithm::Nms,
-            Algorithm::Random,
-            Algorithm::Grid,
-            Algorithm::Sa,
-            Algorithm::Coord,
-        ] {
+        for a in Algorithm::all() {
             let mut t = a.build(&space, 1);
-            let cfg = t.propose();
-            assert!(space.contains(&cfg), "{} proposed off-grid {cfg:?}", t.name());
-            t.observe(&cfg, 1.0);
+            let trial = t.ask(1).pop().expect("fresh engine must issue a trial");
+            assert!(
+                space.contains(&trial.config),
+                "{} proposed off-grid {:?}",
+                t.name(),
+                trial.config
+            );
+            t.tell(trial.id, &Measurement::new(1.0));
         }
+    }
+
+    #[test]
+    fn trial_book_ids_unique_and_settle_once() {
+        let mut book = TrialBook::new();
+        let a = book.issue(vec![1]);
+        let b = book.issue(vec![2]);
+        assert_ne!(a.id, b.id);
+        assert_eq!(book.open_len(), 2);
+        assert_eq!(book.settle(a.id), Some(vec![1]));
+        assert_eq!(book.settle(a.id), None, "double settle must be a no-op");
+        assert_eq!(book.open_configs().collect::<Vec<_>>(), vec![&vec![2]]);
     }
 }

@@ -7,10 +7,17 @@
 //! restarts around the incumbent — the "clusters of points" visible in
 //! the paper's Fig. 7 pairplots are exactly these local refinement phases.
 //!
+//! Ask/tell bookkeeping: the naturally parallel phases (initial simplex
+//! construction, shrink re-evaluation) are issued as batches whose tells
+//! may arrive in any order — vertices are sorted by value, so arrival
+//! order is irrelevant. The reflect/expand/contract steps are inherently
+//! sequential: while one is in flight, `ask` returns an empty batch.
+//!
 //! Internally minimises f = -throughput.
 
-use super::Tuner;
-use crate::space::{Config, SearchSpace};
+use super::{Trial, TrialId, Tuner};
+use crate::history::Measurement;
+use crate::space::SearchSpace;
 use crate::util::Rng;
 
 const ALPHA: f64 = 1.0; // reflection
@@ -40,15 +47,27 @@ enum Phase {
     Shrink,
 }
 
+/// How an open trial participates in the state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Issued {
+    /// A simplex vertex (initial construction or shrink re-evaluation):
+    /// batched freely, tells accepted in any order.
+    Vertex,
+    /// The single sequential point of a reflect/expand/contract step.
+    Step,
+}
+
 pub struct NelderMead {
     space: SearchSpace,
     rng: Rng,
     /// Evaluated simplex vertices: (continuous point, f = -value).
     simplex: Vec<(Point, f64)>,
-    /// Points proposed but not yet observed (Init/Shrink queues).
+    /// Points proposed but not yet issued as trials (Init/Shrink queues,
+    /// plus the one-deep queue the sequential steps pass through).
     queue: Vec<Point>,
-    /// The continuous point awaiting its observation.
-    in_flight: Option<Point>,
+    /// Issued trials awaiting their tell.
+    open: Vec<(TrialId, Point, Issued)>,
+    next_id: TrialId,
     phase: Phase,
     restarts: usize,
     /// Restart a collapsed simplex around the incumbent. The paper's
@@ -76,7 +95,8 @@ impl NelderMead {
             rng,
             simplex: Vec::new(),
             queue,
-            in_flight: None,
+            open: Vec::new(),
+            next_id: 0,
             phase: Phase::Init,
             restarts: 0,
             restart_enabled: false,
@@ -185,38 +205,89 @@ impl NelderMead {
     }
 }
 
+impl NelderMead {
+    /// Issue one point as a trial.
+    fn issue(&mut self, point: Point, kind: Issued) -> Trial {
+        let id = self.next_id;
+        self.next_id += 1;
+        let config = self.space.from_unit(&point);
+        self.open.push((id, point, kind));
+        Trial { id, config }
+    }
+
+    /// Is a sequential reflect/expand/contract point currently in flight?
+    fn step_open(&self) -> bool {
+        self.open.iter().any(|(_, _, k)| *k == Issued::Step)
+    }
+}
+
 impl Tuner for NelderMead {
     fn name(&self) -> &'static str {
         "nelder-mead"
     }
 
-    fn propose(&mut self) -> Config {
-        assert!(self.in_flight.is_none(), "propose called twice without observe");
-        let point = if let Some(p) = self.queue.pop() {
-            p
-        } else {
-            match self.phase {
-                Phase::Init | Phase::Shrink => self.start_reflect(),
-                _ => unreachable!("empty queue outside Init/Shrink"),
+    fn ask(&mut self, n: usize) -> Vec<Trial> {
+        let mut out = Vec::new();
+        while out.len() < n {
+            // A sequential step admits no concurrency: wait for its tell.
+            if self.step_open() {
+                break;
             }
-        };
-        let cfg = self.space.from_unit(&point);
-        self.in_flight = Some(point);
-        cfg
+            if let Some(p) = self.queue.pop() {
+                // In Init/Shrink the queue holds batchable vertices; in the
+                // sequential phases it holds that phase's single point.
+                let kind = match self.phase {
+                    Phase::Init | Phase::Shrink => Issued::Vertex,
+                    _ => Issued::Step,
+                };
+                out.push(self.issue(p, kind));
+                continue;
+            }
+            // Queue drained: a new step can only start once every vertex
+            // of the current generation has been told back.
+            if !self.open.is_empty() {
+                break;
+            }
+            match self.phase {
+                Phase::Init | Phase::Shrink => {
+                    let p = self.start_reflect();
+                    // start_reflect either produced the reflected point
+                    // (phase = Reflect) or triggered a restart and handed
+                    // back the first fresh vertex (phase = Init).
+                    let kind = match self.phase {
+                        Phase::Init => Issued::Vertex,
+                        _ => Issued::Step,
+                    };
+                    out.push(self.issue(p, kind));
+                }
+                // A sequential phase with nothing queued or open cannot
+                // occur: each such phase queues its follow-up point.
+                _ => break,
+            }
+        }
+        out
     }
 
-    fn observe(&mut self, _config: &Config, value: f64) {
-        let point = self.in_flight.take().expect("observe without propose");
-        let f = -value; // minimise
+    fn tell(&mut self, id: TrialId, m: &Measurement) {
+        let Some(i) = self.open.iter().position(|(t, _, _)| *t == id) else {
+            return; // stale/unknown id
+        };
+        let (_, point, kind) = self.open.remove(i);
+        let f = -m.value; // minimise
+        if kind == Issued::Vertex {
+            // Init or Shrink vertex: accumulate; when the generation is
+            // complete (and nothing else is outstanding) the next ask
+            // starts a reflect step.
+            self.simplex.push((point, f));
+            if self.simplex.len() >= self.dim1() && self.queue.is_empty() && self.open.is_empty()
+            {
+                self.phase = Phase::Shrink; // state meaning "start_reflect next"
+            }
+            return;
+        }
         match std::mem::replace(&mut self.phase, Phase::Init) {
-            Phase::Init => {
-                self.simplex.push((point, f));
-                if self.simplex.len() >= self.dim1() && self.queue.is_empty() {
-                    // simplex complete: next propose() starts reflecting
-                    self.phase = Phase::Shrink; // state meaning "start_reflect next"
-                } else {
-                    self.phase = Phase::Init;
-                }
+            Phase::Init | Phase::Shrink => {
+                unreachable!("sequential tell in a batch phase")
             }
             Phase::Reflect => {
                 let fr = f;
@@ -271,15 +342,6 @@ impl Tuner for NelderMead {
                     self.begin_shrink();
                 }
             }
-            Phase::Shrink => {
-                // one shrunk vertex re-evaluated
-                self.simplex.push((point, f));
-                if self.simplex.len() >= self.dim1() && self.queue.is_empty() {
-                    self.phase = Phase::Shrink;
-                } else {
-                    self.phase = Phase::Shrink;
-                }
-            }
         }
     }
 }
@@ -303,14 +365,14 @@ impl NelderMead {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::space::{threading_space, ParamDef};
+    use crate::space::{threading_space, Config, ParamDef};
     use crate::util::prop;
 
     fn space() -> SearchSpace {
         threading_space(64, 1024, 64)
     }
 
-    /// Drive NMS on a closure objective for `iters` steps.
+    /// Drive NMS on a closure objective for `iters` steps (serial ask/tell).
     fn drive<F: Fn(&Config) -> f64>(
         mut t: NelderMead,
         f: F,
@@ -318,10 +380,10 @@ mod tests {
     ) -> (NelderMead, Vec<(Config, f64)>) {
         let mut trace = Vec::new();
         for _ in 0..iters {
-            let c = t.propose();
-            let v = f(&c);
-            t.observe(&c, v);
-            trace.push((c, v));
+            let trial = t.ask(1).pop().expect("serial NMS always has a next point");
+            let v = f(&trial.config);
+            t.tell(trial.id, &Measurement::new(v));
+            trace.push((trial.config, v));
         }
         (t, trace)
     }
@@ -347,9 +409,9 @@ mod tests {
         prop::check("nms on grid", 20, |rng| {
             let mut t = NelderMead::new(s.clone(), rng.next_u64());
             for _ in 0..40 {
-                let c = t.propose();
-                assert!(s.contains(&c), "off grid: {c:?}");
-                t.observe(&c, rng.range_f64(0.0, 10.0));
+                let trial = t.ask(1).pop().unwrap();
+                assert!(s.contains(&trial.config), "off grid: {:?}", trial.config);
+                t.tell(trial.id, &Measurement::new(rng.range_f64(0.0, 10.0)));
             }
         });
     }
@@ -366,11 +428,29 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "propose called twice")]
-    fn double_propose_panics() {
-        let mut t = NelderMead::new(space(), 1);
-        let _ = t.propose();
-        let _ = t.propose();
+    fn ask_batches_vertices_but_serialises_steps() {
+        let s = space();
+        let dim1 = s.dim() + 1;
+        let mut t = NelderMead::new(s.clone(), 1);
+        // The whole initial simplex comes out as one batch of vertices...
+        let init = t.ask(16);
+        assert_eq!(init.len(), dim1, "initial batch is the full simplex");
+        let mut ids: Vec<_> = init.iter().map(|tr| tr.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), dim1, "trial ids must be unique");
+        // ...and with vertices outstanding no new step can start.
+        assert!(t.ask(4).is_empty(), "no points while the generation is open");
+        // Tell the vertices back out of order.
+        for (i, tr) in init.iter().enumerate().rev() {
+            t.tell(tr.id, &Measurement::new(i as f64));
+        }
+        // The reflect step is sequential: one point, then nothing until told.
+        let step = t.ask(4);
+        assert_eq!(step.len(), 1, "reflect step admits no concurrency");
+        assert!(t.ask(1).is_empty(), "step in flight blocks further asks");
+        t.tell(step[0].id, &Measurement::new(0.5));
+        assert!(!t.ask(1).is_empty(), "engine resumes after the step's tell");
     }
 
     #[test]

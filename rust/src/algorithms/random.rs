@@ -1,17 +1,19 @@
 //! Random-search baseline: uniform iid samples from the grid.
 
-use super::Tuner;
+use super::{TrialBook, Tuner};
+use crate::history::Measurement;
 use crate::space::{Config, SearchSpace};
 use crate::util::Rng;
 
 pub struct RandomSearch {
     space: SearchSpace,
     rng: Rng,
+    book: TrialBook,
 }
 
 impl RandomSearch {
     pub fn new(space: SearchSpace, seed: u64) -> RandomSearch {
-        RandomSearch { space, rng: Rng::new(seed) }
+        RandomSearch { space, rng: Rng::new(seed), book: TrialBook::new() }
     }
 }
 
@@ -20,11 +22,20 @@ impl Tuner for RandomSearch {
         "random-search"
     }
 
-    fn propose(&mut self) -> Config {
-        self.space.random(&mut self.rng)
+    fn ask(&mut self, n: usize) -> Vec<super::Trial> {
+        (0..n)
+            .map(|_| {
+                let cfg = self.space.random(&mut self.rng);
+                self.book.issue(cfg)
+            })
+            .collect()
     }
 
-    fn observe(&mut self, _config: &Config, _value: f64) {}
+    fn tell(&mut self, id: super::TrialId, _m: &Measurement) {
+        self.book.settle(id);
+    }
+
+    fn warm_start(&mut self, _config: &Config, _value: f64) {}
 }
 
 #[cfg(test)]
@@ -37,10 +48,9 @@ mod tests {
         let space = threading_space(64, 1024, 64);
         let mut t = RandomSearch::new(space.clone(), 3);
         let mut distinct = std::collections::BTreeSet::new();
-        for _ in 0..50 {
-            let c = t.propose();
-            assert!(space.contains(&c));
-            distinct.insert(c);
+        for trial in t.ask(50) {
+            assert!(space.contains(&trial.config));
+            distinct.insert(trial.config);
         }
         assert!(distinct.len() > 40, "only {} distinct proposals", distinct.len());
     }
@@ -51,7 +61,12 @@ mod tests {
         let mut a = RandomSearch::new(space.clone(), 5);
         let mut b = RandomSearch::new(space, 5);
         for _ in 0..20 {
-            assert_eq!(a.propose(), b.propose());
+            let ta = a.ask(1).pop().unwrap();
+            let tb = b.ask(1).pop().unwrap();
+            assert_eq!(ta.config, tb.config);
+            assert_eq!(ta.id, tb.id);
+            a.tell(ta.id, &Measurement::new(0.0));
+            b.tell(tb.id, &Measurement::new(0.0));
         }
     }
 }

@@ -6,7 +6,8 @@
 //! -throughput with a geometric temperature schedule and grid-neighbour
 //! moves.
 
-use super::Tuner;
+use super::{TrialBook, Tuner};
+use crate::history::Measurement;
 use crate::space::{Config, SearchSpace};
 use crate::util::Rng;
 
@@ -19,7 +20,10 @@ pub struct SimulatedAnnealing {
     space: SearchSpace,
     rng: Rng,
     current: Option<(Config, f64)>,
-    proposed: Option<Config>,
+    /// Open trials: each tell resolves its proposal by id, so a batch of
+    /// moves can complete in any order (each is Metropolis-tested against
+    /// whatever the chain state is when its result arrives).
+    book: TrialBook,
     /// Temperature in units of *relative* objective change.
     temperature: f64,
 }
@@ -30,7 +34,7 @@ impl SimulatedAnnealing {
             space,
             rng: Rng::new(seed),
             current: None,
-            proposed: None,
+            book: TrialBook::new(),
             // accept ~20% worse moves at the start
             temperature: 0.2,
         }
@@ -39,15 +43,10 @@ impl SimulatedAnnealing {
     pub fn temperature(&self) -> f64 {
         self.temperature
     }
-}
 
-impl Tuner for SimulatedAnnealing {
-    fn name(&self) -> &'static str {
-        "simulated-annealing"
-    }
-
-    fn propose(&mut self) -> Config {
-        let cfg = match &self.current {
+    /// One temperature-scaled move from the current chain state.
+    fn next_move(&mut self) -> Config {
+        match &self.current {
             None => self.space.random(&mut self.rng),
             Some((cur, _)) => {
                 // temperature-scaled Gaussian move in unit space: big jumps
@@ -72,13 +71,29 @@ impl Tuner for SimulatedAnnealing {
                     cfg
                 }
             }
-        };
-        self.proposed = Some(cfg.clone());
-        cfg
+        }
+    }
+}
+
+impl Tuner for SimulatedAnnealing {
+    fn name(&self) -> &'static str {
+        "simulated-annealing"
     }
 
-    fn observe(&mut self, config: &Config, value: f64) {
-        let proposed = self.proposed.take().unwrap_or_else(|| config.clone());
+    fn ask(&mut self, n: usize) -> Vec<super::Trial> {
+        // A batch is n independent moves from the same chain state (the
+        // chain only advances on tells).
+        (0..n)
+            .map(|_| {
+                let cfg = self.next_move();
+                self.book.issue(cfg)
+            })
+            .collect()
+    }
+
+    fn tell(&mut self, id: super::TrialId, m: &Measurement) {
+        let Some(proposed) = self.book.settle(id) else { return };
+        let value = m.value;
         match &self.current {
             None => self.current = Some((proposed, value)),
             Some((_, cur_v)) => {
@@ -93,6 +108,14 @@ impl Tuner for SimulatedAnnealing {
             }
         }
         self.temperature *= COOLING;
+    }
+
+    fn warm_start(&mut self, config: &Config, value: f64) {
+        // Adopt the injected point when it beats the chain state.
+        let better = self.current.as_ref().map_or(true, |(_, v)| value > *v);
+        if better {
+            self.current = Some((config.clone(), value));
+        }
     }
 }
 
@@ -115,6 +138,12 @@ mod tests {
         }
     }
 
+    fn step(sa: &mut SimulatedAnnealing, value: f64) -> Config {
+        let t = sa.ask(1).pop().unwrap();
+        sa.tell(t.id, &Measurement::new(value));
+        t.config
+    }
+
     #[test]
     fn improves_on_smooth_objective() {
         let s = space();
@@ -123,9 +152,9 @@ mod tests {
         let mut first = None;
         let mut best = f64::NEG_INFINITY;
         for _ in 0..80 {
-            let c = sa.propose();
-            let v = obj(&c);
-            sa.observe(&c, v);
+            let t = sa.ask(1).pop().unwrap();
+            let v = obj(&t.config);
+            sa.tell(t.id, &Measurement::new(v));
             first.get_or_insert(v);
             best = best.max(v);
         }
@@ -139,8 +168,7 @@ mod tests {
         let mut sa = SimulatedAnnealing::new(s.clone(), 1);
         let mut prev = sa.temperature();
         for _ in 0..20 {
-            let c = sa.propose();
-            sa.observe(&c, 1.0);
+            step(&mut sa, 1.0);
             assert!(sa.temperature() < prev);
             prev = sa.temperature();
         }
@@ -152,9 +180,9 @@ mod tests {
         prop::check("sa on grid", 25, |rng| {
             let mut sa = SimulatedAnnealing::new(s.clone(), rng.next_u64());
             for _ in 0..30 {
-                let c = sa.propose();
-                assert!(s.contains(&c));
-                sa.observe(&c, rng.range_f64(0.0, 10.0));
+                let t = sa.ask(1).pop().unwrap();
+                assert!(s.contains(&t.config));
+                sa.tell(t.id, &Measurement::new(rng.range_f64(0.0, 10.0)));
             }
         });
     }
@@ -163,10 +191,28 @@ mod tests {
     fn accepts_improvements_always() {
         let s = space();
         let mut sa = SimulatedAnnealing::new(s.clone(), 2);
-        let c1 = sa.propose();
-        sa.observe(&c1, 1.0);
-        let c2 = sa.propose();
-        sa.observe(&c2, 2.0); // improvement: must become current
+        step(&mut sa, 1.0);
+        step(&mut sa, 2.0); // improvement: must become current
         assert_eq!(sa.current.as_ref().unwrap().1, 2.0);
+    }
+
+    #[test]
+    fn batched_moves_resolve_out_of_order() {
+        let s = space();
+        let mut sa = SimulatedAnnealing::new(s.clone(), 4);
+        step(&mut sa, 5.0); // establish the chain
+        let batch = sa.ask(4);
+        assert_eq!(batch.len(), 4);
+        // resolve in reverse; the chain state must always be one of the
+        // told outcomes (Metropolis may keep any of them, never corrupt)
+        for (i, t) in batch.iter().enumerate().rev() {
+            sa.tell(t.id, &Measurement::new(5.0 + i as f64));
+        }
+        let cur = sa.current.as_ref().unwrap().1;
+        assert!((5.0..=8.0).contains(&cur), "chain state {cur} not a told value");
+        // a stale tell for an already-settled id is ignored
+        let temp = sa.temperature();
+        sa.tell(batch[0].id, &Measurement::new(1e9));
+        assert_eq!(sa.temperature(), temp);
     }
 }

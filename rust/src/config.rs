@@ -51,6 +51,10 @@ pub struct TuneConfig {
     pub surrogate: SurrogateKind,
     /// What the tuner maximises (throughput or inverse latency).
     pub objective: crate::evaluator::Objective,
+    /// Simulator evaluators measuring in parallel (1 = exact serial loop).
+    pub parallel: usize,
+    /// Optional wall-clock limit wired into the session `Budget`.
+    pub max_seconds: Option<f64>,
     /// Where to write the history JSONL (None = don't persist).
     pub history_out: Option<PathBuf>,
 }
@@ -65,6 +69,8 @@ impl Default for TuneConfig {
             noise_sigma: crate::sim::noise::DEFAULT_SIGMA,
             surrogate: SurrogateKind::Native,
             objective: crate::evaluator::Objective::Throughput,
+            parallel: 1,
+            max_seconds: None,
             history_out: None,
         }
     }
@@ -80,6 +86,14 @@ impl TuneConfig {
             ("noise_sigma", self.noise_sigma.into()),
             ("surrogate", self.surrogate.name().into()),
             ("objective", self.objective.name().into()),
+            ("parallel", self.parallel.into()),
+            (
+                "max_seconds",
+                match self.max_seconds {
+                    Some(s) => s.into(),
+                    None => Json::Null,
+                },
+            ),
             (
                 "history_out",
                 match &self.history_out {
@@ -118,6 +132,14 @@ impl TuneConfig {
             cfg.objective = crate::evaluator::Objective::parse(o)
                 .with_context(|| format!("unknown objective '{o}'"))?;
         }
+        if let Some(p) = j.get("parallel").and_then(Json::as_i64) {
+            anyhow::ensure!(p > 0, "parallel must be positive");
+            cfg.parallel = p as usize;
+        }
+        if let Some(s) = j.get("max_seconds").and_then(Json::as_f64) {
+            anyhow::ensure!(s > 0.0, "max_seconds must be positive");
+            cfg.max_seconds = Some(s);
+        }
         if let Some(p) = j.get("history_out").and_then(Json::as_str) {
             cfg.history_out = Some(PathBuf::from(p));
         }
@@ -155,14 +177,31 @@ impl TuneConfig {
         Ok(self.algorithm.build(&space, self.seed))
     }
 
+    /// Build the `TuningSession` this spec describes: the engine, a pool
+    /// of `parallel` simulator evaluators, and the budget (iterations plus
+    /// the optional wall-clock cap).
+    pub fn build_session(&self) -> Result<crate::session::TuningSession> {
+        let tuner = self.build_tuner()?;
+        let pool = crate::evaluator::sim_pool(
+            self.model,
+            self.seed,
+            self.noise_sigma,
+            self.objective,
+            self.parallel.max(1),
+        );
+        let mut budget = crate::session::Budget::evaluations(self.iterations);
+        if let Some(s) = self.max_seconds {
+            budget = budget.with_max_seconds(s);
+        }
+        Ok(crate::session::TuningSession::new(tuner, pool, budget))
+    }
+
     /// Execute the run against the simulated target and return the history
-    /// (persisted to `history_out` when set).
+    /// (persisted to `history_out` when set). `parallel == 1` reproduces
+    /// the serial propose→apply→measure loop exactly.
     pub fn run(&self) -> Result<crate::history::History> {
-        let mut tuner = self.build_tuner()?;
-        let mut eval =
-            crate::evaluator::SimEvaluator::with_sigma(self.model, self.seed, self.noise_sigma)
-                .with_objective(self.objective);
-        let history = crate::evaluator::tune(tuner.as_mut(), &mut eval, self.iterations)?;
+        let mut session = self.build_session()?;
+        let history = session.run()?;
         if let Some(path) = &self.history_out {
             history.save(path, &self.model.space())?;
         }
@@ -189,6 +228,8 @@ mod tests {
         c.iterations = 25;
         c.seed = 99;
         c.surrogate = SurrogateKind::Hlo;
+        c.parallel = 4;
+        c.max_seconds = Some(12.5);
         c.history_out = Some(PathBuf::from("/tmp/h.jsonl"));
         let j = c.to_json();
         let c2 = TuneConfig::from_json(&j).unwrap();
@@ -197,6 +238,8 @@ mod tests {
         assert_eq!(c2.iterations, 25);
         assert_eq!(c2.seed, 99);
         assert_eq!(c2.surrogate, SurrogateKind::Hlo);
+        assert_eq!(c2.parallel, 4);
+        assert_eq!(c2.max_seconds, Some(12.5));
         assert_eq!(c2.history_out, Some(PathBuf::from("/tmp/h.jsonl")));
     }
 
@@ -207,6 +250,10 @@ mod tests {
         let j = parse(r#"{"iterations":0}"#).unwrap();
         assert!(TuneConfig::from_json(&j).is_err());
         let j = parse(r#"{"noise_sigma":-1}"#).unwrap();
+        assert!(TuneConfig::from_json(&j).is_err());
+        let j = parse(r#"{"parallel":0}"#).unwrap();
+        assert!(TuneConfig::from_json(&j).is_err());
+        let j = parse(r#"{"max_seconds":-2}"#).unwrap();
         assert!(TuneConfig::from_json(&j).is_err());
     }
 

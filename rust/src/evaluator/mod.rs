@@ -8,8 +8,9 @@
 //! - [`remote::RemoteEvaluator`] — a TCP client driving a target daemon
 //!   (`server`), reproducing the paper's host/target split.
 //!
-//! `tune()` is the shared optimization loop: propose → evaluate → observe,
-//! accumulating the global `History` every figure harness consumes.
+//! `tune()` is the thin serial compatibility loop over the ask/tell API
+//! (ask(1) → measure → tell); `session::TuningSession` is the batched,
+//! budgeted driver that shards measurements over a pool of evaluators.
 
 pub mod real;
 pub mod remote;
@@ -17,8 +18,10 @@ pub mod remote;
 pub use real::RealWorkloadEvaluator;
 pub use remote::RemoteEvaluator;
 
+use anyhow::Context;
+
 use crate::algorithms::Tuner;
-use crate::history::History;
+use crate::history::{History, Measurement};
 use crate::sim::{ModelId, SimWorkload};
 use crate::space::Config;
 
@@ -26,6 +29,16 @@ use crate::space::Config;
 pub trait Evaluator {
     /// Apply `config` and measure the objective (examples/s).
     fn evaluate(&mut self, config: &Config) -> anyhow::Result<f64>;
+
+    /// Apply `config` and return a full [`Measurement`]. The default wraps
+    /// [`Evaluator::evaluate`] and stamps the wall-clock cost; targets with
+    /// richer telemetry (objective kind, per-op metadata, target-side
+    /// timings) override this.
+    fn measure(&mut self, config: &Config) -> anyhow::Result<Measurement> {
+        let t0 = std::time::Instant::now();
+        let value = self.evaluate(config)?;
+        Ok(Measurement::new(value).with_cost_s(t0.elapsed().as_secs_f64()))
+    }
 
     /// Human-readable target description (logs, figure titles).
     fn describe(&self) -> String;
@@ -125,12 +138,43 @@ impl Evaluator for SimEvaluator {
         }
     }
 
+    fn measure(&mut self, config: &Config) -> anyhow::Result<Measurement> {
+        let t0 = std::time::Instant::now();
+        let value = self.evaluate(config)?;
+        Ok(Measurement::new(value)
+            .with_objective(self.objective)
+            .with_cost_s(t0.elapsed().as_secs_f64()))
+    }
+
     fn describe(&self) -> String {
         format!("sim:{}:{}", self.workload.model.name(), self.objective.name())
     }
 }
 
-/// Run `iters` tuning iterations of `tuner` against `evaluator`.
+/// A pool of `n` independent simulator evaluators over the same model, for
+/// a parallel `TuningSession`. Evaluator 0 uses `seed` itself, so a pool
+/// of one reproduces a plain `SimEvaluator::with_sigma(model, seed, ..)`
+/// run bit for bit; the rest get decorrelated noise streams.
+pub fn sim_pool(
+    model: ModelId,
+    seed: u64,
+    sigma: f64,
+    objective: Objective,
+    n: usize,
+) -> Vec<Box<dyn Evaluator + Send>> {
+    (0..n.max(1))
+        .map(|i| {
+            let s = seed.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            Box::new(SimEvaluator::with_sigma(model, s, sigma).with_objective(objective))
+                as Box<dyn Evaluator + Send>
+        })
+        .collect()
+}
+
+/// Run `iters` serial tuning iterations of `tuner` against `evaluator` —
+/// the compatibility shim over the ask/tell API (one trial in flight at a
+/// time, exactly the pre-redesign propose/observe loop). New code and the
+/// figure harnesses drive `session::TuningSession` instead.
 ///
 /// A non-finite measurement aborts the run: every engine's bookkeeping
 /// (GP standardisation, GA fitness ordering, simplex comparisons) is
@@ -143,14 +187,19 @@ pub fn tune(
 ) -> anyhow::Result<History> {
     let mut history = History::new();
     for _ in 0..iters {
-        let cfg = tuner.propose();
-        let value = evaluator.evaluate(&cfg)?;
+        let trial = tuner
+            .ask(1)
+            .pop()
+            .with_context(|| format!("engine {} issued no trial", tuner.name()))?;
+        let m = evaluator.measure(&trial.config)?;
         anyhow::ensure!(
-            value.is_finite(),
-            "evaluator returned non-finite measurement {value} for {cfg:?}"
+            m.value.is_finite(),
+            "evaluator returned non-finite measurement {} for {:?}",
+            m.value,
+            trial.config
         );
-        tuner.observe(&cfg, value);
-        history.push(cfg, value);
+        tuner.tell(trial.id, &m);
+        history.push_trial(trial.id, trial.config, &m);
     }
     Ok(history)
 }

@@ -1,6 +1,15 @@
 //! Host-side client for the target daemon: an [`Evaluator`] that sends
 //! configurations over TCP and reads back measurements — the optimization
 //! framework's half of the paper's Fig. 4 deployment.
+//!
+//! Two usage modes:
+//! - **blocking** (`Evaluator` impl): one request/response per call, used
+//!   by a `TuningSession` pool with one connection per daemon address
+//!   ([`RemoteEvaluator::connect_all`]).
+//! - **pipelined** ([`RemoteEvaluator::submit`] + [`RemoteEvaluator::recv_measurement`]):
+//!   several trial-tagged requests in flight on one connection; the daemon
+//!   answers in completion order and the trial id pairs each response with
+//!   its trial.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -8,9 +17,9 @@ use std::net::TcpStream;
 use anyhow::{bail, Context, Result};
 
 use super::Evaluator;
-use crate::server::proto::{
-    decode_response, encode_request, Request, Response,
-};
+use crate::algorithms::{Trial, TrialId};
+use crate::history::Measurement;
+use crate::server::proto::{decode_response, encode_request, Request, Response};
 use crate::space::{Config, SearchSpace};
 
 pub struct RemoteEvaluator {
@@ -39,6 +48,17 @@ impl RemoteEvaluator {
         Ok(me)
     }
 
+    /// One connection per comma-separated daemon address — the evaluator
+    /// pool for a sharded `TuningSession` (`remote-tune --addr a:1,b:2`).
+    pub fn connect_all(addrs: &str, space: &SearchSpace) -> Result<Vec<RemoteEvaluator>> {
+        let mut out = Vec::new();
+        for addr in addrs.split(',').map(str::trim).filter(|a| !a.is_empty()) {
+            out.push(RemoteEvaluator::connect(addr, space.clone())?);
+        }
+        anyhow::ensure!(!out.is_empty(), "no daemon addresses in '{addrs}'");
+        Ok(out)
+    }
+
     fn send(&mut self, req: &Request) -> Result<()> {
         writeln!(self.writer, "{}", encode_request(req, &self.space))?;
         Ok(())
@@ -53,6 +73,25 @@ impl RemoteEvaluator {
         decode_response(line.trim_end(), &self.space).map_err(|e| anyhow::anyhow!(e))
     }
 
+    /// Pipeline a trial: send its tagged evaluate request without waiting
+    /// for the response.
+    pub fn submit(&mut self, trial: &Trial) -> Result<()> {
+        self.send(&Request::Evaluate { config: trial.config.clone(), trial: Some(trial.id) })
+    }
+
+    /// Block for the next completed measurement on this connection.
+    /// Returns the trial id the daemon echoed (None for untagged requests)
+    /// with the measurement, whose cost is the *target-side* wall clock.
+    pub fn recv_measurement(&mut self) -> Result<(Option<TrialId>, Measurement)> {
+        match self.recv()? {
+            Response::Result { value, cost_s, trial, .. } => {
+                Ok((trial, Measurement::new(value).with_cost_s(cost_s)))
+            }
+            Response::Error { message, .. } => bail!("target error: {message}"),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
     /// Ask the target daemon to shut down.
     pub fn shutdown(mut self) -> Result<()> {
         self.send(&Request::Shutdown)?;
@@ -65,10 +104,21 @@ impl RemoteEvaluator {
 
 impl Evaluator for RemoteEvaluator {
     fn evaluate(&mut self, config: &Config) -> Result<f64> {
-        self.send(&Request::Evaluate(config.clone()))?;
+        self.send(&Request::Evaluate { config: config.clone(), trial: None })?;
         match self.recv()? {
             Response::Result { value, .. } => Ok(value),
-            Response::Error { message } => bail!("target error: {message}"),
+            Response::Error { message, .. } => bail!("target error: {message}"),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn measure(&mut self, config: &Config) -> Result<Measurement> {
+        self.send(&Request::Evaluate { config: config.clone(), trial: None })?;
+        match self.recv()? {
+            Response::Result { value, cost_s, .. } => {
+                Ok(Measurement::new(value).with_cost_s(cost_s))
+            }
+            Response::Error { message, .. } => bail!("target error: {message}"),
             other => bail!("unexpected response: {other:?}"),
         }
     }
@@ -81,23 +131,30 @@ impl Evaluator for RemoteEvaluator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::Algorithm;
+    use crate::algorithms::{Algorithm, Tuner};
     use crate::evaluator::{tune, SimEvaluator};
     use crate::server::TargetServer;
     use crate::sim::ModelId;
 
-    #[test]
-    fn end_to_end_remote_tuning() {
-        let model = ModelId::NcfFp32;
+    fn spawn_server(model: ModelId, seed: u64) -> (
+        std::net::SocketAddr,
+        std::thread::JoinHandle<Result<usize>>,
+        SearchSpace,
+    ) {
         let space = model.space();
         let server = TargetServer::bind(
             "127.0.0.1:0",
             space.clone(),
-            Box::new(SimEvaluator::new(model, 4)),
+            Box::new(SimEvaluator::new(model, seed)),
         )
         .unwrap();
         let (addr, handle) = server.spawn().unwrap();
+        (addr, handle, space)
+    }
 
+    #[test]
+    fn end_to_end_remote_tuning() {
+        let (addr, handle, space) = spawn_server(ModelId::NcfFp32, 4);
         let mut remote =
             RemoteEvaluator::connect(&addr.to_string(), space.clone()).unwrap();
         assert!(remote.describe().contains("NCF"));
@@ -105,10 +162,55 @@ mod tests {
         let h = tune(tuner.as_mut(), &mut remote, 10).unwrap();
         assert_eq!(h.len(), 10);
         assert!(h.best().unwrap().value > 0.0);
+        // target-side cost travelled back over the wire
+        assert!(h.iter().all(|e| e.cost_s >= 0.0));
 
         remote.shutdown().unwrap();
         let served = handle.join().unwrap().unwrap();
         assert_eq!(served, 10);
+    }
+
+    #[test]
+    fn pipelined_submit_recv_matches_ids() {
+        let (addr, handle, space) = spawn_server(ModelId::NcfFp32, 6);
+        let mut remote =
+            RemoteEvaluator::connect(&addr.to_string(), space.clone()).unwrap();
+        let mut tuner = Algorithm::Random.build(&space, 9);
+        let trials = tuner.ask(5);
+        assert_eq!(trials.len(), 5);
+        for t in &trials {
+            remote.submit(t).unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..trials.len() {
+            let (id, m) = remote.recv_measurement().unwrap();
+            assert!(m.value > 0.0);
+            let id = id.expect("daemon echoes trial ids");
+            tuner.tell(id, &m);
+            got.push(id);
+        }
+        got.sort_unstable();
+        let mut want: Vec<TrialId> = trials.iter().map(|t| t.id).collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "every in-flight trial answered exactly once");
+        remote.shutdown().unwrap();
+        let served = handle.join().unwrap().unwrap();
+        assert_eq!(served, 5);
+    }
+
+    #[test]
+    fn connect_all_splits_addresses() {
+        let (a1, h1, space) = spawn_server(ModelId::NcfFp32, 1);
+        let (a2, h2, _) = spawn_server(ModelId::NcfFp32, 2);
+        let addrs = format!("{a1}, {a2}");
+        let pool = RemoteEvaluator::connect_all(&addrs, &space).unwrap();
+        assert_eq!(pool.len(), 2);
+        assert!(RemoteEvaluator::connect_all(" , ", &space).is_err());
+        let mut it = pool.into_iter();
+        it.next().unwrap().shutdown().unwrap();
+        it.next().unwrap().shutdown().unwrap();
+        let _ = h1.join();
+        let _ = h2.join();
     }
 
     #[test]

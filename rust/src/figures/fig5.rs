@@ -33,7 +33,9 @@ impl Curve {
     }
 }
 
-/// Run one model × algorithm tuning curve.
+/// Run one model × algorithm tuning curve. Executes through a serial
+/// `TuningSession` (`TuneConfig::run`), which reproduces the paper's
+/// strictly sequential measurement loop bit for bit.
 pub fn run_curve(
     model: ModelId,
     algorithm: Algorithm,

@@ -1,7 +1,8 @@
-//! Evaluation history — the paper's "data acquisition module" (Fig. 4).
+//! Evaluation history — the paper's "data acquisition module" (Fig. 4) —
+//! plus [`Measurement`], the structured result of evaluating one trial.
 //!
 //! Every algorithm engine consumes and extends the same global history of
-//! `(configuration, throughput)` measurements; the figure harnesses read it
+//! `(configuration, measurement)` records; the figure harnesses read it
 //! back to produce tuning curves (Fig. 5), pairplots (Fig. 7) and the
 //! range-coverage table (Table 2). Histories persist as JSONL so long
 //! sweeps can resume and the paper artifacts are regenerable from disk.
@@ -9,17 +10,71 @@
 use std::io::{BufRead, Write};
 use std::path::Path;
 
+use crate::evaluator::Objective;
 use crate::space::{Config, SearchSpace};
 use crate::util::{Json, Rng};
 
-/// One measurement: a configuration and its objective value
-/// (examples/second; higher is better).
+/// The structured outcome of measuring one trial on a system under test.
+///
+/// This replaces the bare `f64` the propose/observe API passed around: a
+/// measurement knows what its value means ([`Objective`]), what it cost to
+/// obtain (wall-clock seconds — the quantity a parallel `TuningSession`
+/// balances across evaluators), and can carry optional numeric metadata
+/// (e.g. per-op timings from a profiling target).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    /// Objective value (higher is better; the engines maximise this).
+    pub value: f64,
+    /// What `value` measures.
+    pub objective: Objective,
+    /// Wall-clock cost of obtaining the measurement, in seconds.
+    pub cost_s: f64,
+    /// Optional named metadata (per-op timings, counters, ...).
+    pub metadata: Vec<(String, f64)>,
+}
+
+impl Measurement {
+    pub fn new(value: f64) -> Measurement {
+        Measurement {
+            value,
+            objective: Objective::default(),
+            cost_s: 0.0,
+            metadata: Vec::new(),
+        }
+    }
+
+    pub fn with_objective(mut self, objective: Objective) -> Measurement {
+        self.objective = objective;
+        self
+    }
+
+    pub fn with_cost_s(mut self, cost_s: f64) -> Measurement {
+        self.cost_s = cost_s;
+        self
+    }
+
+    pub fn with_metadata(mut self, key: &str, value: f64) -> Measurement {
+        self.metadata.push((key.to_string(), value));
+        self
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.value.is_finite()
+    }
+}
+
+/// One recorded evaluation: a configuration and its measurement.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Evaluation {
     pub config: Config,
     pub value: f64,
-    /// Which tuning iteration produced this point (0-based).
+    /// Which tuning iteration produced this point (0-based, completion
+    /// order — under a parallel session this is the order results arrived).
     pub iteration: usize,
+    /// Engine-assigned trial id (equals `iteration` for serial runs).
+    pub trial_id: u64,
+    /// Wall-clock cost of the measurement in seconds (0 when unknown).
+    pub cost_s: f64,
 }
 
 /// Append-only evaluation history.
@@ -35,7 +90,30 @@ impl History {
 
     pub fn push(&mut self, config: Config, value: f64) {
         let iteration = self.evals.len();
-        self.evals.push(Evaluation { config, value, iteration });
+        self.evals.push(Evaluation {
+            config,
+            value,
+            iteration,
+            trial_id: iteration as u64,
+            cost_s: 0.0,
+        });
+    }
+
+    /// Record a completed trial with its full measurement.
+    pub fn push_trial(&mut self, trial_id: u64, config: Config, m: &Measurement) {
+        let iteration = self.evals.len();
+        self.evals.push(Evaluation {
+            config,
+            value: m.value,
+            iteration,
+            trial_id,
+            cost_s: m.cost_s,
+        });
+    }
+
+    /// Total wall-clock measurement cost recorded so far (seconds).
+    pub fn total_cost_s(&self) -> f64 {
+        self.evals.iter().map(|e| e.cost_s).sum()
     }
 
     pub fn len(&self) -> usize {
@@ -127,8 +205,10 @@ impl History {
         for e in &self.evals {
             let line = Json::obj(vec![
                 ("iteration", Json::from(e.iteration)),
+                ("trial", Json::from(e.trial_id as i64)),
                 ("config", space.config_to_json(&e.config)),
                 ("value", Json::from(e.value)),
+                ("cost_s", Json::from(e.cost_s)),
             ]);
             out.push_str(&line.to_string());
             out.push('\n');
@@ -151,7 +231,15 @@ impl History {
                 .get("value")
                 .and_then(Json::as_f64)
                 .ok_or_else(|| format!("line {}: missing value", lineno + 1))?;
-            h.push(cfg, value);
+            // Trial id and cost are optional for pre-ask/tell histories.
+            let trial_id = j
+                .get("trial")
+                .and_then(Json::as_i64)
+                .map(|t| t as u64)
+                .unwrap_or(h.len() as u64);
+            let cost_s = j.get("cost_s").and_then(Json::as_f64).unwrap_or(0.0);
+            let m = Measurement::new(value).with_cost_s(cost_s);
+            h.push_trial(trial_id, cfg, &m);
         }
         Ok(h)
     }
@@ -284,6 +372,37 @@ mod tests {
             }
             assert_eq!(*curve.last().unwrap(), h.best().unwrap().value);
         });
+    }
+
+    #[test]
+    fn trial_ids_and_cost_round_trip_jsonl() {
+        let s = space();
+        let mut rng = Rng::new(5);
+        let mut h = History::new();
+        // out-of-order completion: trial ids do not match iteration order
+        for (id, v) in [(3u64, 1.0), (0, 4.0), (2, 2.0)] {
+            let m = Measurement::new(v).with_cost_s(0.25 * v);
+            h.push_trial(id, s.random(&mut rng), &m);
+        }
+        assert_eq!(h.iter().map(|e| e.trial_id).collect::<Vec<_>>(), vec![3, 0, 2]);
+        assert!((h.total_cost_s() - 0.25 * 7.0).abs() < 1e-12);
+        let h2 = History::from_jsonl(&h.to_jsonl(&s), &s).unwrap();
+        assert_eq!(h.evals, h2.evals);
+    }
+
+    #[test]
+    fn legacy_jsonl_lines_still_load() {
+        let s = space();
+        let mut rng = Rng::new(6);
+        let cfg = s.random(&mut rng);
+        let line = format!(
+            r#"{{"iteration":0,"config":{},"value":12.5}}"#,
+            s.config_to_json(&cfg)
+        );
+        let h = History::from_jsonl(&line, &s).unwrap();
+        assert_eq!(h.last().unwrap().trial_id, 0);
+        assert_eq!(h.last().unwrap().cost_s, 0.0);
+        assert_eq!(h.last().unwrap().value, 12.5);
     }
 
     #[test]

@@ -15,6 +15,37 @@
 //!
 //! Python is never on the tuning request path: the Rust BO engine executes
 //! the AOT-compiled GP artifact via PJRT (`runtime`).
+//!
+//! # The ask/tell trial model
+//!
+//! The tuning core is an *ask/tell* conversation between an engine and a
+//! driver. [`algorithms::Tuner::ask`]`(n)` yields up to `n` [`Trial`]s —
+//! grid configurations tagged with engine-unique ids — and
+//! [`algorithms::Tuner::tell`]`(id, &Measurement)` reports results back in
+//! *any* order. [`Measurement`] replaces the old bare-`f64` objective: it
+//! carries the value, what the value means, its wall-clock cost, and
+//! optional metadata, and is recorded per trial in [`History`].
+//!
+//! [`TuningSession`] is the production driver: it owns an engine, a pool
+//! of [`evaluator::Evaluator`]s (worker threads for in-process targets,
+//! one TCP connection per remote daemon), and a [`Budget`] (evaluation
+//! cap, wall-clock limit, plateau stop), keeping one trial in flight per
+//! evaluator and streaming completions through a per-trial callback.
+//!
+//! ## Migrating from propose/observe
+//!
+//! Pre-redesign code looked like `let cfg = tuner.propose(); ...;
+//! tuner.observe(&cfg, value)`. The equivalent today:
+//!
+//! ```ignore
+//! let trial = tuner.ask(1).pop().unwrap();
+//! let m = evaluator.measure(&trial.config)?;   // Measurement, not f64
+//! tuner.tell(trial.id, &m);
+//! ```
+//!
+//! or, end to end, `evaluator::tune(&mut *tuner, &mut eval, iters)` for
+//! the serial loop and [`TuningSession`] for batched/parallel runs. See
+//! `examples/parallel_tuning.rs`.
 
 pub mod algorithms;
 pub mod config;
@@ -24,10 +55,13 @@ pub mod gp;
 pub mod history;
 pub mod runtime;
 pub mod server;
+pub mod session;
 pub mod sim;
 pub mod space;
 pub mod util;
 
+pub use algorithms::{Trial, TrialId};
 pub use config::TuneConfig;
-pub use history::{Evaluation, History};
+pub use history::{Evaluation, History, Measurement};
+pub use session::{Budget, StopReason, TuningSession};
 pub use space::{ParamDef, SearchSpace};

@@ -3,10 +3,11 @@
 //! Subcommands:
 //!   tune         run one tuning session on the simulated target
 //!   serve        run the target-side evaluation daemon (paper Fig. 4)
-//!   remote-tune  drive a remote target daemon as the host
+//!   remote-tune  drive one or more remote target daemons as the host
 //!   sweep        Fig. 6 exhaustive sweep (+ findings table)
 //!   figures      regenerate paper figures/tables (fig5 fig6 fig7 table1 all)
 //!   space        print Table 1 / search-space info
+//!   profile      per-op schedule under a configuration
 //!
 //! Flag parsing is in-tree (clap is not vendored in this offline image).
 
@@ -17,10 +18,15 @@ use anyhow::{bail, Context, Result};
 
 use tftune::algorithms::Algorithm;
 use tftune::config::{SurrogateKind, TuneConfig};
-use tftune::evaluator::{tune, Evaluator, RemoteEvaluator, SimEvaluator};
+use tftune::evaluator::{Evaluator, Objective, RemoteEvaluator};
 use tftune::figures::{fig5, fig6, fig7, tables, OUT_DIR};
 use tftune::server::TargetServer;
+use tftune::session::{Budget, TuningSession};
 use tftune::sim::ModelId;
+
+/// Flags that take no value. Data-driven so adding one is a single entry
+/// here rather than a special case inside the parser.
+const BOOL_FLAGS: &[&str] = &["fine", "help"];
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
 struct Args {
@@ -36,7 +42,7 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                if key == "fine" || key == "help" {
+                if BOOL_FLAGS.contains(&key) {
                     flags.insert(key.to_string(), "true".to_string());
                 } else {
                     i += 1;
@@ -55,18 +61,44 @@ impl Args {
         self.flags.get(key).map(String::as_str)
     }
 
-    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+    /// The one parse-with-context helper behind every typed flag: absent
+    /// flags yield `None`, present ones must satisfy `parse` or fail with
+    /// a uniform "unknown/invalid <what> '<value>'" error.
+    fn opt<T>(
+        &self,
+        key: &str,
+        what: &str,
+        parse: impl FnOnce(&str) -> Option<T>,
+    ) -> Result<Option<T>> {
         match self.get(key) {
-            None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(None),
+            Some(v) => parse(v)
+                .map(Some)
+                .with_context(|| format!("unknown {what} '{v}' (from --{key})")),
         }
     }
 
+    /// Like [`Args::opt`] but the flag is mandatory.
+    fn req<T>(
+        &self,
+        key: &str,
+        what: &str,
+        parse: impl FnOnce(&str) -> Option<T>,
+    ) -> Result<T> {
+        self.opt(key, what, parse)?
+            .with_context(|| format!("--{key} is required"))
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.opt(key, "integer", |v| v.parse().ok())?.unwrap_or(default))
+    }
+
     fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
-        match self.get(key) {
-            None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
-        }
+        Ok(self.opt(key, "integer", |v| v.parse().ok())?.unwrap_or(default))
+    }
+
+    fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        self.opt(key, "number", |v| v.parse().ok())
     }
 }
 
@@ -77,16 +109,23 @@ USAGE: tftune <command> [flags]
 
 COMMANDS
   tune         --model <m> --alg <bo|ga|nms|random|grid> [--iters 50]
-               [--seed 0] [--surrogate native|hlo] [--objective
-               throughput|latency] [--out hist.jsonl] [--config run.json]
+               [--seed 0] [--parallel 1] [--max-seconds S]
+               [--surrogate native|hlo] [--objective throughput|latency]
+               [--out hist.jsonl] [--config run.json]
   serve        --model <m> [--addr 127.0.0.1:7070] [--seed 0]
-  remote-tune  --addr <host:port> --model <m> --alg <a> [--iters 50] [--seed 0]
+  remote-tune  --addr <host:port[,host:port...]> --model <m> --alg <a>
+               [--iters 50] [--seed 0] [--parallel N] [--max-seconds S]
   sweep        [--fine] [--out-dir figures_out]   (Fig. 6)
   figures      <fig5|fig6|fig7|table1|table2|all> [--iters 50]
                [--seeds 0,1,2] [--surrogate native|hlo] [--out-dir figures_out]
   space        [--model <m>]                      (Table 1)
   profile      --model <m> [--inter 1 --intra 14 --batch 256 --blocktime 0
                --omp 24]   (per-op schedule under a configuration)
+
+PARALLELISM
+  tune --parallel N measures N trials concurrently on N simulator
+  evaluators (N=1 reproduces the serial loop exactly); remote-tune shards
+  trials across every daemon address given in --addr.
 
 MODELS
   ssd-mobilenet resnet50-fp32 resnet50-int8 transformer-lt bert ncf
@@ -95,20 +134,38 @@ ALGORITHMS
 }
 
 fn parse_model(args: &Args) -> Result<ModelId> {
-    let name = args.get("model").context("--model is required")?;
-    ModelId::parse(name).with_context(|| format!("unknown model '{name}' (see `tftune space`)"))
+    args.req("model", "model", ModelId::parse)
+        .context("see `tftune space` for models")
 }
 
 fn parse_alg(args: &Args) -> Result<Algorithm> {
-    let name = args.get("alg").context("--alg is required")?;
-    Algorithm::parse(name).with_context(|| format!("unknown algorithm '{name}'"))
+    args.req("alg", "algorithm", Algorithm::parse)
 }
 
 fn parse_surrogate(args: &Args) -> Result<SurrogateKind> {
-    match args.get("surrogate") {
-        None => Ok(SurrogateKind::Native),
-        Some(s) => SurrogateKind::parse(s).with_context(|| format!("unknown surrogate '{s}'")),
+    Ok(args
+        .opt("surrogate", "surrogate", SurrogateKind::parse)?
+        .unwrap_or(SurrogateKind::Native))
+}
+
+fn parse_seeds(args: &Args, default: &[u64]) -> Result<Vec<u64>> {
+    match args.get("seeds") {
+        None => Ok(default.to_vec()),
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().parse::<u64>().context("bad --seeds"))
+            .collect(),
     }
+}
+
+/// Budget shared by `tune` and `remote-tune`: iteration cap + optional
+/// wall-clock limit.
+fn parse_budget(iters: usize, args: &Args) -> Result<Budget> {
+    let mut budget = Budget::evaluations(iters);
+    if let Some(s) = args.f64_opt("max-seconds")? {
+        budget = budget.with_max_seconds(s);
+    }
+    Ok(budget)
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
@@ -124,23 +181,28 @@ fn cmd_tune(args: &Args) -> Result<()> {
     }
     cfg.iterations = args.usize_or("iters", cfg.iterations)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.parallel = args.usize_or("parallel", cfg.parallel)?;
+    anyhow::ensure!(cfg.parallel >= 1, "--parallel must be at least 1");
+    if let Some(s) = args.f64_opt("max-seconds")? {
+        cfg.max_seconds = Some(s);
+    }
     if args.get("surrogate").is_some() {
         cfg.surrogate = parse_surrogate(args)?;
     }
     if let Some(out) = args.get("out") {
         cfg.history_out = Some(PathBuf::from(out));
     }
-    if let Some(o) = args.get("objective") {
-        cfg.objective = tftune::evaluator::Objective::parse(o)
-            .with_context(|| format!("unknown objective '{o}'"))?;
+    if let Some(o) = args.opt("objective", "objective", Objective::parse)? {
+        cfg.objective = o;
     }
 
     println!(
-        "tuning {} with {} for {} iterations (seed {}, surrogate {}, objective {})",
+        "tuning {} with {} for {} iterations (seed {}, parallel {}, surrogate {}, objective {})",
         cfg.model.name(),
         cfg.algorithm.name(),
         cfg.iterations,
         cfg.seed,
+        cfg.parallel,
         cfg.surrogate.name(),
         cfg.objective.name()
     );
@@ -166,7 +228,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7070");
     let seed = args.u64_or("seed", 0)?;
     let space = model.space();
-    let server = TargetServer::bind(addr, space, Box::new(SimEvaluator::new(model, seed)))?;
+    let server = TargetServer::bind(
+        addr,
+        space,
+        Box::new(tftune::evaluator::SimEvaluator::new(model, seed)),
+    )?;
     println!("target daemon serving sim:{} on {}", model.name(), server.local_addr()?);
     let served = server.serve()?;
     println!("daemon shut down after {served} evaluations");
@@ -176,17 +242,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_remote_tune(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
     let alg = parse_alg(args)?;
-    let addr = args.get("addr").context("--addr is required")?;
+    let addrs = args.get("addr").context("--addr is required")?;
     let iters = args.usize_or("iters", 50)?;
     let seed = args.u64_or("seed", 0)?;
     let space = model.space();
-    let mut remote = RemoteEvaluator::connect(addr, space.clone())?;
-    println!("connected to {}", remote.describe());
-    let mut tuner = alg.build(&space, seed);
-    let history = tune(tuner.as_mut(), &mut remote, iters)?;
+
+    let remotes = RemoteEvaluator::connect_all(addrs, &space)?;
+    if let Some(parallel) = args.opt("parallel", "integer", |v| v.parse::<usize>().ok())? {
+        anyhow::ensure!(
+            parallel == remotes.len(),
+            "--parallel {} but {} daemon address(es) given; remote parallelism \
+             is one in-flight trial per address in --addr",
+            parallel,
+            remotes.len()
+        );
+    }
+    for r in &remotes {
+        println!("connected to {}", r.describe());
+    }
+    let pool: Vec<Box<dyn tftune::evaluator::Evaluator + Send>> = remotes
+        .into_iter()
+        .map(|r| Box::new(r) as Box<dyn tftune::evaluator::Evaluator + Send>)
+        .collect();
+
+    let tuner = alg.build(&space, seed);
+    let mut session = TuningSession::new(tuner, pool, parse_budget(iters, args)?);
+    let history = session.run()?;
     let best = history.best().context("empty history")?;
     println!("best throughput: {:.2} examples/s", best.value);
     println!("best config: {}", space.config_to_json(&best.config));
+    if let Some(reason) = session.stop_reason() {
+        println!(
+            "stopped by {} after {} evaluations ({:.2}s measurement time)",
+            reason.name(),
+            history.len(),
+            history.total_cost_s()
+        );
+    }
     Ok(())
 }
 
@@ -207,13 +299,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 fn cmd_figures(args: &Args) -> Result<()> {
     let what = args.positional.get(1).map(String::as_str).unwrap_or("all");
     let iters = args.usize_or("iters", 50)?;
-    let seeds: Vec<u64> = match args.get("seeds") {
-        None => vec![0, 1, 2],
-        Some(s) => s
-            .split(',')
-            .map(|x| x.trim().parse::<u64>().context("bad --seeds"))
-            .collect::<Result<_>>()?,
-    };
+    let seeds = parse_seeds(args, &[0, 1, 2])?;
     let surrogate = parse_surrogate(args)?;
     let out_dir = PathBuf::from(args.get("out-dir").unwrap_or(OUT_DIR));
 
@@ -242,8 +328,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
 
 fn cmd_space(args: &Args) -> Result<()> {
     tables::print_table1();
-    if let Some(name) = args.get("model") {
-        let model = ModelId::parse(name).with_context(|| format!("unknown model '{name}'"))?;
+    if let Some(model) = args.opt("model", "model", ModelId::parse)? {
         let space = model.space();
         println!("\n{}: {} grid points", model.name(), space.size());
         for p in &space.params {

@@ -7,6 +7,17 @@
 //! interfering with workload measurements and lets a weak host machine
 //! drive a powerful target — exactly the paper's deployment.
 //!
+//! Connections are *pipelined* for trial-tagged requests: the reader keeps
+//! decoding while earlier tagged `evaluate` requests are still being
+//! measured, and each tagged response is written as soon as its measurement
+//! finishes — so a host can keep several trials in flight per connection
+//! and transport latency overlaps measurement. Untagged (legacy) evaluate
+//! requests are answered inline, strictly in request order, preserving the
+//! pre-ask/tell protocol contract. The single system under test is always
+//! serialised behind a mutex (measurements must not perturb each other);
+//! run one daemon per machine and give the session several addresses for
+//! true measurement parallelism.
+//!
 //! std::net + one thread per connection (tokio is not vendored in this
 //! offline image; the protocol is line-oriented and trivially blocking).
 
@@ -93,52 +104,99 @@ impl TargetServer {
     }
 }
 
+/// Serialise one response onto the shared connection writer.
+fn write_response(writer: &Mutex<TcpStream>, resp: &Response, shared: &Shared) -> bool {
+    let line = encode_response(resp, &shared.space);
+    let mut w = writer.lock().unwrap();
+    writeln!(w, "{line}").is_ok()
+}
+
+/// Run one measurement on the shared system under test.
+fn evaluate_response(
+    shared: &Shared,
+    config: crate::space::Config,
+    trial: Option<u64>,
+) -> Response {
+    let t0 = std::time::Instant::now();
+    match shared.evaluator.lock().unwrap().evaluate(&config) {
+        Ok(value) => {
+            shared.served.fetch_add(1, Ordering::SeqCst);
+            Response::Result { value, cost_s: t0.elapsed().as_secs_f64(), config, trial }
+        }
+        Err(e) => Response::Error { message: format!("evaluation failed: {e}"), trial },
+    }
+}
+
 fn handle_connection(stream: TcpStream, shared: &Shared) {
-    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
+    let writer = match stream.try_clone() {
+        Ok(w) => Mutex::new(w),
         Err(_) => return,
     };
     let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp = match decode_request(&line, &shared.space) {
-            Err(e) => Response::Error { message: e },
-            Ok(Request::Describe) => {
-                let desc = shared.evaluator.lock().unwrap().describe();
-                Response::Target { description: desc }
+    // Scoped workers let every in-flight evaluate borrow `shared` and the
+    // connection writer: the reader keeps pulling pipelined requests while
+    // measurements run, and responses go out tagged in completion order.
+    std::thread::scope(|scope| {
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            if line.trim().is_empty() {
+                continue;
             }
-            Ok(Request::Evaluate(cfg)) => {
-                let result = shared.evaluator.lock().unwrap().evaluate(&cfg);
-                match result {
-                    Ok(value) => {
-                        shared.served.fetch_add(1, Ordering::SeqCst);
-                        Response::Result { value, config: cfg }
+            match decode_request(&line, &shared.space) {
+                Err(e) => {
+                    if !write_response(
+                        &writer,
+                        &Response::Error { message: e, trial: None },
+                        shared,
+                    ) {
+                        break;
                     }
-                    Err(e) => Response::Error { message: format!("evaluation failed: {e}") },
+                }
+                Ok(Request::Describe) => {
+                    let desc = shared.evaluator.lock().unwrap().describe();
+                    if !write_response(
+                        &writer,
+                        &Response::Target { description: desc },
+                        shared,
+                    ) {
+                        break;
+                    }
+                }
+                // Untagged (legacy) evaluate: answered inline so responses
+                // stay in request order, exactly like the pre-pipelining
+                // server — an in-order client pairs them positionally.
+                Ok(Request::Evaluate { config, trial: None }) => {
+                    let resp = evaluate_response(shared, config, None);
+                    if !write_response(&writer, &resp, shared) {
+                        break;
+                    }
+                }
+                // Tagged evaluate: measured on a scoped worker and written
+                // in completion order; the echoed trial id pairs it.
+                Ok(Request::Evaluate { config, trial: trial @ Some(_) }) => {
+                    let writer = &writer;
+                    scope.spawn(move || {
+                        let resp = evaluate_response(shared, config, trial);
+                        write_response(writer, &resp, shared);
+                    });
+                }
+                Ok(Request::Shutdown) => {
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    write_response(&writer, &Response::Bye, shared);
+                    // poke the accept loop so serve() notices the flag
+                    if let Ok(addr) = writer.lock().unwrap().local_addr() {
+                        let _ = TcpStream::connect(addr);
+                    }
+                    break;
                 }
             }
-            Ok(Request::Shutdown) => {
-                shared.shutdown.store(true, Ordering::SeqCst);
-                let _ = writeln!(writer, "{}", encode_response(&Response::Bye, &shared.space));
-                // poke the accept loop so serve() notices the flag
-                if let Ok(addr) = writer.local_addr() {
-                    let _ = TcpStream::connect(addr);
-                }
-                return;
-            }
-        };
-        if writeln!(writer, "{}", encode_response(&resp, &shared.space)).is_err() {
-            break;
         }
-    }
-    let _ = peer;
+        // scope joins any still-running evaluations before the connection
+        // closes, so their responses are flushed first.
+    });
 }
 
 #[cfg(test)]
@@ -183,15 +241,19 @@ mod tests {
             addr,
             &[
                 proto::encode_request(&Request::Describe, &space),
-                proto::encode_request(&Request::Evaluate(vec![1, 8, 128, 0, 8]), &space),
+                proto::encode_request(
+                    &Request::Evaluate { config: vec![1, 8, 128, 0, 8], trial: None },
+                    &space,
+                ),
             ],
         );
         let r0 = proto::decode_response(&resp[0], &space).unwrap();
         assert!(matches!(r0, Response::Target { .. }));
         match proto::decode_response(&resp[1], &space).unwrap() {
-            Response::Result { value, config } => {
+            Response::Result { value, config, trial, .. } => {
                 assert!(value > 0.0);
                 assert_eq!(config, vec![1, 8, 128, 0, 8]);
+                assert_eq!(trial, None);
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -199,6 +261,43 @@ mod tests {
         let _ = send(addr, &[proto::encode_request(&Request::Shutdown, &space)]);
         let served = handle.join().unwrap().unwrap();
         assert_eq!(served, 1);
+    }
+
+    #[test]
+    fn pipelined_trials_come_back_tagged() {
+        let (addr, handle, space) = start();
+        // Fire four tagged evaluate requests before reading any response.
+        let reqs: Vec<String> = (0..4u64)
+            .map(|id| {
+                proto::encode_request(
+                    &Request::Evaluate {
+                        config: vec![1, 8, 128, 0, 8 + id as i64],
+                        trial: Some(id),
+                    },
+                    &space,
+                )
+            })
+            .collect();
+        let resp = send(addr, &reqs);
+        assert_eq!(resp.len(), 4);
+        let mut ids = Vec::new();
+        for line in &resp {
+            match proto::decode_response(line, &space).unwrap() {
+                Response::Result { value, cost_s, trial, .. } => {
+                    assert!(value > 0.0);
+                    assert!(cost_s >= 0.0);
+                    ids.push(trial.expect("tagged request must get a tagged response"));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Completion order may differ from issue order; the id *set* must
+        // match exactly.
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        let _ = send(addr, &[proto::encode_request(&Request::Shutdown, &space)]);
+        let served = handle.join().unwrap().unwrap();
+        assert_eq!(served, 4);
     }
 
     #[test]

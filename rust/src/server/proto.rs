@@ -1,15 +1,21 @@
 //! Wire protocol for the host/target split (paper Fig. 4): JSON-lines
-//! over TCP. One request per line, one response per line.
+//! over TCP. One request per line, one response per line — but responses
+//! to `evaluate` may arrive *out of order*: requests carry an optional
+//! trial id that the target echoes back, so a host can pipeline several
+//! in-flight trials on one connection and match completions by id.
 //!
 //! Requests:
 //!   {"type":"describe"}
-//!   {"type":"evaluate","config":{"<param>":<int>,...}}
+//!   {"type":"evaluate","config":{"<param>":<int>,...}[,"trial":<id>]}
 //!   {"type":"shutdown"}
 //! Responses:
 //!   {"type":"target","description":"..."}
-//!   {"type":"result","value":<f64>,"config":{...}}
-//!   {"type":"error","message":"..."}
+//!   {"type":"result","value":<f64>,"cost_s":<f64>,"config":{...}[,"trial":<id>]}
+//!   {"type":"error","message":"..."[,"trial":<id>]}
 //!   {"type":"bye"}
+//!
+//! Untagged `evaluate` requests (the pre-ask/tell protocol) remain valid:
+//! their responses simply omit the trial id and are answered in order.
 
 use crate::space::{Config, SearchSpace};
 use crate::util::json::{parse, Json};
@@ -18,7 +24,7 @@ use crate::util::json::{parse, Json};
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Describe,
-    Evaluate(Config),
+    Evaluate { config: Config, trial: Option<u64> },
     Shutdown,
 }
 
@@ -26,19 +32,32 @@ pub enum Request {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     Target { description: String },
-    Result { value: f64, config: Config },
-    Error { message: String },
+    Result { value: f64, cost_s: f64, config: Config, trial: Option<u64> },
+    Error { message: String, trial: Option<u64> },
     Bye,
+}
+
+fn push_trial(pairs: &mut Vec<(&str, Json)>, trial: &Option<u64>) {
+    if let Some(id) = trial {
+        pairs.push(("trial", Json::from(*id as i64)));
+    }
+}
+
+fn get_trial(j: &Json) -> Option<u64> {
+    j.get("trial").and_then(Json::as_i64).and_then(|t| u64::try_from(t).ok())
 }
 
 pub fn encode_request(req: &Request, space: &SearchSpace) -> String {
     match req {
         Request::Describe => Json::obj(vec![("type", "describe".into())]).to_string(),
-        Request::Evaluate(cfg) => Json::obj(vec![
-            ("type", "evaluate".into()),
-            ("config", space.config_to_json(cfg)),
-        ])
-        .to_string(),
+        Request::Evaluate { config, trial } => {
+            let mut pairs = vec![
+                ("type", "evaluate".into()),
+                ("config", space.config_to_json(config)),
+            ];
+            push_trial(&mut pairs, trial);
+            Json::obj(pairs).to_string()
+        }
         Request::Shutdown => Json::obj(vec![("type", "shutdown".into())]).to_string(),
     }
 }
@@ -48,8 +67,8 @@ pub fn decode_request(line: &str, space: &SearchSpace) -> Result<Request, String
     match j.get("type").and_then(Json::as_str) {
         Some("describe") => Ok(Request::Describe),
         Some("evaluate") => {
-            let cfg = space.config_from_json(j.req("config").map_err(|e| e.to_string())?)?;
-            Ok(Request::Evaluate(cfg))
+            let config = space.config_from_json(j.req("config").map_err(|e| e.to_string())?)?;
+            Ok(Request::Evaluate { config, trial: get_trial(&j) })
         }
         Some("shutdown") => Ok(Request::Shutdown),
         other => Err(format!("unknown request type {other:?}")),
@@ -63,17 +82,24 @@ pub fn encode_response(resp: &Response, space: &SearchSpace) -> String {
             ("description", description.as_str().into()),
         ])
         .to_string(),
-        Response::Result { value, config } => Json::obj(vec![
-            ("type", "result".into()),
-            ("value", (*value).into()),
-            ("config", space.config_to_json(config)),
-        ])
-        .to_string(),
-        Response::Error { message } => Json::obj(vec![
-            ("type", "error".into()),
-            ("message", message.as_str().into()),
-        ])
-        .to_string(),
+        Response::Result { value, cost_s, config, trial } => {
+            let mut pairs = vec![
+                ("type", "result".into()),
+                ("value", (*value).into()),
+                ("cost_s", (*cost_s).into()),
+                ("config", space.config_to_json(config)),
+            ];
+            push_trial(&mut pairs, trial);
+            Json::obj(pairs).to_string()
+        }
+        Response::Error { message, trial } => {
+            let mut pairs = vec![
+                ("type", "error".into()),
+                ("message", message.as_str().into()),
+            ];
+            push_trial(&mut pairs, trial);
+            Json::obj(pairs).to_string()
+        }
         Response::Bye => Json::obj(vec![("type", "bye".into())]).to_string(),
     }
 }
@@ -93,11 +119,13 @@ pub fn decode_response(line: &str, space: &SearchSpace) -> Result<Response, Stri
                 .get("value")
                 .and_then(Json::as_f64)
                 .ok_or("result missing value")?;
-            let cfg = space.config_from_json(j.req("config").map_err(|e| e.to_string())?)?;
-            Ok(Response::Result { value, config: cfg })
+            let cost_s = j.get("cost_s").and_then(Json::as_f64).unwrap_or(0.0);
+            let config = space.config_from_json(j.req("config").map_err(|e| e.to_string())?)?;
+            Ok(Response::Result { value, cost_s, config, trial: get_trial(&j) })
         }
         Some("error") => Ok(Response::Error {
             message: j.get("message").and_then(Json::as_str).unwrap_or("").to_string(),
+            trial: get_trial(&j),
         }),
         Some("bye") => Ok(Response::Bye),
         other => Err(format!("unknown response type {other:?}")),
@@ -119,7 +147,8 @@ mod tests {
         let s = space();
         for req in [
             Request::Describe,
-            Request::Evaluate(vec![2, 10, 128, 30, 20]),
+            Request::Evaluate { config: vec![2, 10, 128, 30, 20], trial: None },
+            Request::Evaluate { config: vec![2, 10, 128, 30, 20], trial: Some(7) },
             Request::Shutdown,
         ] {
             let line = encode_request(&req, &s);
@@ -132,12 +161,43 @@ mod tests {
         let s = space();
         for resp in [
             Response::Target { description: "sim:X".into() },
-            Response::Result { value: 123.5, config: vec![1, 1, 64, 0, 1] },
-            Response::Error { message: "boom \"quoted\"".into() },
+            Response::Result {
+                value: 123.5,
+                cost_s: 0.25,
+                config: vec![1, 1, 64, 0, 1],
+                trial: None,
+            },
+            Response::Result {
+                value: 9.0,
+                cost_s: 0.0,
+                config: vec![1, 1, 64, 0, 1],
+                trial: Some(41),
+            },
+            Response::Error { message: "boom \"quoted\"".into(), trial: Some(3) },
+            Response::Error { message: "untagged".into(), trial: None },
             Response::Bye,
         ] {
             let line = encode_response(&resp, &s);
             assert_eq!(decode_response(&line, &s).unwrap(), resp, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn legacy_untagged_result_decodes() {
+        // A pre-ask/tell peer sends results without trial/cost fields.
+        let s = space();
+        let cfg = vec![1, 1, 64, 0, 1];
+        let line = format!(
+            r#"{{"type":"result","value":5.5,"config":{}}}"#,
+            s.config_to_json(&cfg)
+        );
+        match decode_response(&line, &s).unwrap() {
+            Response::Result { value, cost_s, trial, .. } => {
+                assert_eq!(value, 5.5);
+                assert_eq!(cost_s, 0.0);
+                assert_eq!(trial, None);
+            }
+            other => panic!("unexpected {other:?}"),
         }
     }
 
@@ -150,12 +210,14 @@ mod tests {
     }
 
     #[test]
-    fn prop_evaluate_round_trip_any_config() {
+    fn prop_evaluate_round_trip_any_config_and_id() {
         let s = space();
         prop::check("proto evaluate round trip", 100, |rng| {
-            let cfg = s.random(rng);
-            let line = encode_request(&Request::Evaluate(cfg.clone()), &s);
-            assert_eq!(decode_request(&line, &s).unwrap(), Request::Evaluate(cfg));
+            let config = s.random(rng);
+            let trial = if rng.bool(0.5) { Some(rng.next_u64() >> 12) } else { None };
+            let req = Request::Evaluate { config, trial };
+            let line = encode_request(&req, &s);
+            assert_eq!(decode_request(&line, &s).unwrap(), req);
         });
     }
 }

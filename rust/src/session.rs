@@ -1,0 +1,530 @@
+//! [`TuningSession`]: the batched, budgeted tuning driver.
+//!
+//! A session owns one ask/tell engine, a pool of one or more
+//! [`Evaluator`]s (threads over sim/real targets, or one TCP connection
+//! per remote daemon), and a [`Budget`]. It keeps up to `pool-size` trials
+//! in flight: the engine is asked for as many trials as there are idle
+//! evaluators, results are told back in completion order (which under
+//! parallelism is *not* issue order — the engines are built for that), and
+//! every completed trial streams through the optional per-trial callback
+//! before landing in the returned [`History`].
+//!
+//! With a single evaluator the session runs inline on the caller's thread
+//! and is bit-for-bit identical to the serial `evaluator::tune()` loop —
+//! that is the `--parallel 1` reproducibility guarantee the tests pin.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::algorithms::{Trial, Tuner};
+use crate::evaluator::Evaluator;
+use crate::history::{History, Measurement};
+
+/// Plateau stop: end the run after `window` consecutive completed trials
+/// without a relative improvement of at least `min_rel_gain` over the best
+/// value seen so far.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Plateau {
+    pub window: usize,
+    pub min_rel_gain: f64,
+}
+
+/// Stopping rules for a [`TuningSession`]. At least one rule must be set.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Budget {
+    /// Stop after this many completed evaluations (the paper caps at 50).
+    pub max_evaluations: Option<usize>,
+    /// Stop once this much wall-clock time has elapsed (checked at trial
+    /// completion granularity; in-flight trials run to completion).
+    pub max_seconds: Option<f64>,
+    /// Stop when the best-so-far curve plateaus.
+    pub plateau: Option<Plateau>,
+}
+
+impl Budget {
+    /// Budget with only an evaluation cap — the classic fixed-iteration run.
+    pub fn evaluations(n: usize) -> Budget {
+        Budget { max_evaluations: Some(n), ..Budget::default() }
+    }
+
+    pub fn with_max_seconds(mut self, seconds: f64) -> Budget {
+        self.max_seconds = Some(seconds);
+        self
+    }
+
+    pub fn with_plateau(mut self, window: usize, min_rel_gain: f64) -> Budget {
+        self.plateau = Some(Plateau { window, min_rel_gain });
+        self
+    }
+
+    /// Does any stopping rule exist? An unbounded session would never end.
+    pub fn is_bounded(&self) -> bool {
+        self.max_evaluations.is_some() || self.max_seconds.is_some() || self.plateau.is_some()
+    }
+}
+
+/// Why a session ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The evaluation cap was reached.
+    MaxEvaluations,
+    /// The wall-clock limit elapsed.
+    MaxSeconds,
+    /// The best-so-far curve plateaued.
+    Plateau,
+    /// The engine issued no trials with none in flight (nothing left to try).
+    EngineExhausted,
+}
+
+impl StopReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StopReason::MaxEvaluations => "max-evaluations",
+            StopReason::MaxSeconds => "max-seconds",
+            StopReason::Plateau => "plateau",
+            StopReason::EngineExhausted => "engine-exhausted",
+        }
+    }
+}
+
+/// Best-so-far improvement tracking for the plateau rule.
+struct PlateauTracker {
+    rule: Option<Plateau>,
+    best: f64,
+    stale: usize,
+}
+
+impl PlateauTracker {
+    fn new(rule: Option<Plateau>) -> PlateauTracker {
+        PlateauTracker { rule, best: f64::NEG_INFINITY, stale: 0 }
+    }
+
+    fn record(&mut self, value: f64) {
+        let Some(rule) = self.rule else { return };
+        let bar = if self.best.is_finite() {
+            self.best + self.best.abs() * rule.min_rel_gain
+        } else {
+            f64::NEG_INFINITY
+        };
+        if value > bar {
+            self.best = self.best.max(value);
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+        }
+    }
+
+    fn plateaued(&self) -> bool {
+        self.rule.map_or(false, |r| self.stale >= r.window)
+    }
+}
+
+/// Per-trial callback: invoked on the driving thread for every completed
+/// trial, in completion order (streaming history out of a long run).
+pub type TrialCallback = Box<dyn FnMut(&Trial, &Measurement)>;
+
+/// The tuning driver: engine + evaluator pool + budget (module docs).
+pub struct TuningSession {
+    tuner: Box<dyn Tuner>,
+    evaluators: Vec<Box<dyn Evaluator + Send>>,
+    budget: Budget,
+    on_trial: Option<TrialCallback>,
+    stop_reason: Option<StopReason>,
+}
+
+impl TuningSession {
+    pub fn new(
+        tuner: Box<dyn Tuner>,
+        evaluators: Vec<Box<dyn Evaluator + Send>>,
+        budget: Budget,
+    ) -> TuningSession {
+        TuningSession { tuner, evaluators, budget, on_trial: None, stop_reason: None }
+    }
+
+    /// Stream every completed trial through `callback`.
+    pub fn on_trial(mut self, callback: impl FnMut(&Trial, &Measurement) + 'static) -> Self {
+        self.on_trial = Some(Box::new(callback));
+        self
+    }
+
+    /// Why the last `run` ended (None before the first run).
+    pub fn stop_reason(&self) -> Option<StopReason> {
+        self.stop_reason
+    }
+
+    /// Evaluator pool size (the in-flight trial cap).
+    pub fn parallelism(&self) -> usize {
+        self.evaluators.len()
+    }
+
+    /// Drive the session to a stop and return the completed history.
+    pub fn run(&mut self) -> Result<History> {
+        anyhow::ensure!(!self.evaluators.is_empty(), "session needs at least one evaluator");
+        anyhow::ensure!(
+            self.budget.is_bounded(),
+            "session budget has no stopping rule (set max evaluations, max seconds or plateau)"
+        );
+        self.stop_reason = None;
+        let (history, reason) = if self.evaluators.len() == 1 {
+            self.run_serial()?
+        } else {
+            self.run_parallel()?
+        };
+        self.stop_reason = Some(reason);
+        Ok(history)
+    }
+
+    /// Which stop rule (if any) fires with `done` completed evaluations?
+    fn stopped(
+        budget: &Budget,
+        done: usize,
+        start: Instant,
+        tracker: &PlateauTracker,
+    ) -> Option<StopReason> {
+        if budget.max_evaluations.map_or(false, |m| done >= m) {
+            return Some(StopReason::MaxEvaluations);
+        }
+        if budget.max_seconds.map_or(false, |s| start.elapsed().as_secs_f64() >= s) {
+            return Some(StopReason::MaxSeconds);
+        }
+        if tracker.plateaued() {
+            return Some(StopReason::Plateau);
+        }
+        None
+    }
+
+    /// Single-evaluator fast path: inline, deterministic, identical to the
+    /// serial `tune()` loop.
+    fn run_serial(&mut self) -> Result<(History, StopReason)> {
+        let evaluator = &mut self.evaluators[0];
+        let mut history = History::new();
+        let mut tracker = PlateauTracker::new(self.budget.plateau);
+        let start = Instant::now();
+        loop {
+            if let Some(reason) = Self::stopped(&self.budget, history.len(), start, &tracker) {
+                return Ok((history, reason));
+            }
+            let Some(trial) = self.tuner.ask(1).pop() else {
+                return Ok((history, StopReason::EngineExhausted));
+            };
+            let m = evaluator.measure(&trial.config)?;
+            anyhow::ensure!(
+                m.value.is_finite(),
+                "evaluator returned non-finite measurement {} for {:?}",
+                m.value,
+                trial.config
+            );
+            self.tuner.tell(trial.id, &m);
+            tracker.record(m.value);
+            history.push_trial(trial.id, trial.config.clone(), &m);
+            if let Some(cb) = &mut self.on_trial {
+                cb(&trial, &m);
+            }
+        }
+    }
+
+    /// Multi-evaluator path: one worker thread per evaluator, trials fanned
+    /// out over a shared queue, results told back in completion order.
+    fn run_parallel(&mut self) -> Result<(History, StopReason)> {
+        let pool = self.evaluators.len();
+        let budget = self.budget.clone();
+        let tuner = &mut self.tuner;
+        let on_trial = &mut self.on_trial;
+        let evaluators = &mut self.evaluators;
+
+        std::thread::scope(|scope| -> Result<(History, StopReason)> {
+            let (work_tx, work_rx) = mpsc::channel::<Trial>();
+            let work_rx = Arc::new(Mutex::new(work_rx));
+            let (done_tx, done_rx) = mpsc::channel::<(Trial, Result<Measurement>)>();
+            for evaluator in evaluators.iter_mut() {
+                let work_rx = Arc::clone(&work_rx);
+                let done_tx = done_tx.clone();
+                scope.spawn(move || loop {
+                    // Hold the lock only to pop one trial.
+                    let next = { work_rx.lock().unwrap().recv() };
+                    let Ok(trial) = next else { break };
+                    // A panicking evaluator must surface as an Err, not kill
+                    // the worker: a dead worker would strand its trial in
+                    // in_flight and deadlock the driver on done_rx.recv().
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || evaluator.measure(&trial.config),
+                    ))
+                    .unwrap_or_else(|panic| {
+                        let msg = panic
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "non-string panic".to_string());
+                        Err(anyhow::anyhow!("evaluator panicked: {msg}"))
+                    });
+                    if done_tx.send((trial, result)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(done_tx);
+
+            let mut history = History::new();
+            let mut tracker = PlateauTracker::new(budget.plateau);
+            let start = Instant::now();
+            let mut in_flight = 0usize;
+            let mut error: Option<anyhow::Error> = None;
+            let reason = loop {
+                if let Some(reason) = Self::stopped(&budget, history.len(), start, &tracker) {
+                    break reason;
+                }
+                // Top the pool up, but never schedule past the eval cap.
+                let room = pool - in_flight;
+                let capped = budget
+                    .max_evaluations
+                    .map(|m| m.saturating_sub(history.len() + in_flight))
+                    .unwrap_or(usize::MAX);
+                let want = room.min(capped);
+                if want > 0 {
+                    for trial in tuner.ask(want) {
+                        if work_tx.send(trial).is_ok() {
+                            in_flight += 1;
+                        }
+                    }
+                }
+                if in_flight == 0 {
+                    break StopReason::EngineExhausted;
+                }
+                let (trial, result) = done_rx.recv().expect("evaluator pool hung up");
+                in_flight -= 1;
+                let m = match result {
+                    Ok(m) if m.value.is_finite() => m,
+                    Ok(m) => {
+                        error = Some(anyhow::anyhow!(
+                            "evaluator returned non-finite measurement {} for {:?}",
+                            m.value,
+                            trial.config
+                        ));
+                        break StopReason::EngineExhausted;
+                    }
+                    Err(e) => {
+                        error = Some(e);
+                        break StopReason::EngineExhausted;
+                    }
+                };
+                tuner.tell(trial.id, &m);
+                tracker.record(m.value);
+                history.push_trial(trial.id, trial.config.clone(), &m);
+                if let Some(cb) = on_trial.as_mut() {
+                    cb(&trial, &m);
+                }
+            };
+            // Unblock the workers (in-flight trials finish and are dropped),
+            // then let the scope join them.
+            drop(work_tx);
+            match error {
+                Some(e) => Err(e),
+                None => Ok((history, reason)),
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Algorithm;
+    use crate::evaluator::{sim_pool, tune, Objective, SimEvaluator};
+    use crate::sim::ModelId;
+    use crate::space::Config;
+
+    #[test]
+    fn budget_builders_compose() {
+        let b = Budget::evaluations(50).with_max_seconds(1.5).with_plateau(8, 0.01);
+        assert_eq!(b.max_evaluations, Some(50));
+        assert_eq!(b.max_seconds, Some(1.5));
+        assert_eq!(b.plateau, Some(Plateau { window: 8, min_rel_gain: 0.01 }));
+        assert!(b.is_bounded());
+        assert!(!Budget::default().is_bounded());
+    }
+
+    #[test]
+    fn unbounded_budget_is_rejected() {
+        let model = ModelId::NcfFp32;
+        let tuner = Algorithm::Random.build(&model.space(), 1);
+        let mut s = TuningSession::new(
+            tuner,
+            sim_pool(model, 1, 0.0, Objective::Throughput, 1),
+            Budget::default(),
+        );
+        let err = s.run().unwrap_err();
+        assert!(err.to_string().contains("no stopping rule"), "{err}");
+    }
+
+    #[test]
+    fn serial_session_matches_tune_shim() {
+        // --parallel 1 must reproduce the plain serial loop bit for bit.
+        let model = ModelId::Resnet50Int8;
+        let space = model.space();
+        for alg in Algorithm::all_paper() {
+            let mut tuner = alg.build(&space, 21);
+            let mut eval = SimEvaluator::new(model, 21);
+            let expect = tune(tuner.as_mut(), &mut eval, 30).unwrap();
+
+            let mut session = TuningSession::new(
+                alg.build(&space, 21),
+                sim_pool(model, 21, crate::sim::noise::DEFAULT_SIGMA, Objective::Throughput, 1),
+                Budget::evaluations(30),
+            );
+            let got = session.run().unwrap();
+            assert_eq!(session.stop_reason(), Some(StopReason::MaxEvaluations));
+            assert_eq!(expect.values(), got.values(), "{} diverged", alg.name());
+            assert_eq!(expect.best_curve(), got.best_curve());
+        }
+    }
+
+    #[test]
+    fn parallel_session_completes_budget_on_grid() {
+        let model = ModelId::BertFp32;
+        let space = model.space();
+        let tuner = Algorithm::Bo.build(&space, 5);
+        let mut session = TuningSession::new(
+            tuner,
+            sim_pool(model, 5, crate::sim::noise::DEFAULT_SIGMA, Objective::Throughput, 4),
+            Budget::evaluations(24),
+        );
+        let h = session.run().unwrap();
+        assert_eq!(h.len(), 24);
+        assert_eq!(session.stop_reason(), Some(StopReason::MaxEvaluations));
+        let mut ids: Vec<u64> = h.iter().map(|e| e.trial_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 24, "every history row is a distinct trial");
+        for e in h.iter() {
+            assert!(space.contains(&e.config), "off-grid {:?}", e.config);
+            assert!(e.value > 0.0);
+        }
+    }
+
+    #[test]
+    fn callback_streams_every_trial() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        let model = ModelId::NcfFp32;
+        let mut session = TuningSession::new(
+            Algorithm::Random.build(&model.space(), 2),
+            sim_pool(model, 2, 0.0, Objective::Throughput, 2),
+            Budget::evaluations(12),
+        )
+        .on_trial(move |_t, m| {
+            assert!(m.value.is_finite());
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        let h = session.run().unwrap();
+        assert_eq!(h.len(), 12);
+        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 12);
+    }
+
+    /// Evaluator whose objective is constant: plateau must fire.
+    struct Flat;
+    impl Evaluator for Flat {
+        fn evaluate(&mut self, _c: &Config) -> Result<f64> {
+            Ok(42.0)
+        }
+        fn describe(&self) -> String {
+            "flat".into()
+        }
+    }
+
+    #[test]
+    fn plateau_stops_a_flat_run() {
+        let model = ModelId::NcfFp32;
+        let mut session = TuningSession::new(
+            Algorithm::Random.build(&model.space(), 3),
+            vec![Box::new(Flat)],
+            Budget::evaluations(500).with_plateau(6, 0.01),
+        );
+        let h = session.run().unwrap();
+        assert_eq!(session.stop_reason(), Some(StopReason::Plateau));
+        // 1 improving first sample + 6 stale ones
+        assert_eq!(h.len(), 7, "plateau fired late: {} evals", h.len());
+    }
+
+    /// Evaluator that fails after a fixed number of calls.
+    struct FailAfter(std::sync::atomic::AtomicUsize, usize);
+    impl Evaluator for FailAfter {
+        fn evaluate(&mut self, _c: &Config) -> Result<f64> {
+            let n = self.0.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            anyhow::ensure!(n < self.1, "injected pool failure");
+            Ok(1.0)
+        }
+        fn describe(&self) -> String {
+            "fail-after".into()
+        }
+    }
+
+    #[test]
+    fn parallel_worker_error_aborts_run() {
+        let model = ModelId::NcfFp32;
+        let evaluators: Vec<Box<dyn Evaluator + Send>> = vec![
+            Box::new(FailAfter(Default::default(), 3)),
+            Box::new(FailAfter(Default::default(), 3)),
+        ];
+        let mut session = TuningSession::new(
+            Algorithm::Random.build(&model.space(), 4),
+            evaluators,
+            Budget::evaluations(100),
+        );
+        let err = session.run().unwrap_err();
+        assert!(err.to_string().contains("injected pool failure"), "{err}");
+    }
+
+    #[test]
+    fn parallel_worker_panic_aborts_instead_of_deadlocking() {
+        struct Panicky(std::sync::atomic::AtomicUsize);
+        impl Evaluator for Panicky {
+            fn evaluate(&mut self, _c: &Config) -> Result<f64> {
+                let n = self.0.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if n >= 2 {
+                    panic!("injected evaluator panic");
+                }
+                Ok(1.0)
+            }
+            fn describe(&self) -> String {
+                "panicky".into()
+            }
+        }
+        let model = ModelId::NcfFp32;
+        let evaluators: Vec<Box<dyn Evaluator + Send>> =
+            vec![Box::new(Panicky(Default::default())), Box::new(Panicky(Default::default()))];
+        let mut session = TuningSession::new(
+            Algorithm::Random.build(&model.space(), 12),
+            evaluators,
+            Budget::evaluations(50),
+        );
+        let err = session.run().unwrap_err();
+        assert!(err.to_string().contains("evaluator panicked"), "{err}");
+    }
+
+    #[test]
+    fn max_seconds_stops_before_the_cap() {
+        struct Slow;
+        impl Evaluator for Slow {
+            fn evaluate(&mut self, _c: &Config) -> Result<f64> {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                Ok(1.0)
+            }
+            fn describe(&self) -> String {
+                "slow".into()
+            }
+        }
+        let model = ModelId::NcfFp32;
+        let mut session = TuningSession::new(
+            Algorithm::Random.build(&model.space(), 6),
+            vec![Box::new(Slow)],
+            Budget::evaluations(100_000).with_max_seconds(0.15),
+        );
+        let h = session.run().unwrap();
+        assert_eq!(session.stop_reason(), Some(StopReason::MaxSeconds));
+        assert!(h.len() < 10_000, "ran far past the wall clock: {}", h.len());
+    }
+}

@@ -1,0 +1,186 @@
+//! Ask/tell contract tests: every engine issues on-grid, id-unique trials
+//! in batches, survives shuffled/out-of-order tells interleaved with
+//! further asks, and — driven strictly serially — reproduces the exact
+//! best-so-far trajectory of the serial `tune()` loop. Plus the
+//! `TuningSession` stopping rules (plateau, parallel budget).
+
+use tftune::algorithms::{Algorithm, Tuner};
+use tftune::evaluator::{sim_pool, tune, Evaluator, Objective, SimEvaluator};
+use tftune::history::Measurement;
+use tftune::session::{Budget, StopReason, TuningSession};
+use tftune::sim::ModelId;
+use tftune::space::{threading_space, Config};
+use tftune::util::prop;
+
+/// Deterministic smooth objective over the threading space.
+fn objective(space: &tftune::space::SearchSpace, c: &Config) -> f64 {
+    let target = vec![2, 28, 512, 100, 28];
+    let t = space.to_unit(&target);
+    let u = space.to_unit(c);
+    10.0 - 10.0 * u.iter().zip(&t).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+}
+
+/// Property: batched asks return on-grid configurations with ids that are
+/// unique across the engine's lifetime, and shuffled tells — with a trial
+/// occasionally held back across rounds — never wedge or panic an engine.
+#[test]
+fn prop_every_engine_batches_and_survives_shuffled_tells() {
+    let space = threading_space(64, 1024, 64);
+    for alg in Algorithm::all() {
+        prop::check(&format!("ask/tell contract [{}]", alg.name()), 8, |rng| {
+            let mut engine = alg.build(&space, rng.next_u64());
+            let mut seen_ids = std::collections::BTreeSet::new();
+            let mut held: Vec<tftune::Trial> = Vec::new();
+            for _round in 0..10 {
+                let n = 1 + rng.index(5);
+                let mut trials = engine.ask(n);
+                assert!(trials.len() <= n, "{}: ask({n}) returned more", alg.name());
+                for t in &trials {
+                    assert!(
+                        space.contains(&t.config),
+                        "{}: off-grid {:?}",
+                        alg.name(),
+                        t.config
+                    );
+                    assert!(seen_ids.insert(t.id), "{}: reused id {}", alg.name(), t.id);
+                }
+                // Release anything held from the previous round, then
+                // occasionally hold one fresh trial back to the next round
+                // to force interleaved, out-of-order completion.
+                trials.extend(held.drain(..));
+                if !trials.is_empty() && rng.bool(0.3) {
+                    held.push(trials.remove(rng.index(trials.len())));
+                }
+                rng.shuffle(&mut trials);
+                for t in trials {
+                    let v = objective(&space, &t.config);
+                    engine.tell(t.id, &Measurement::new(v));
+                }
+            }
+            // With everything settled the engine must still make progress.
+            for t in held.drain(..) {
+                engine.tell(t.id, &Measurement::new(0.0));
+            }
+            assert!(
+                !engine.ask(1).is_empty(),
+                "{}: engine wedged after full drain",
+                alg.name()
+            );
+        });
+    }
+}
+
+/// Serial ask(1)/tell equals the `tune()` shim equals a 1-evaluator
+/// session: the pre-refactor best-so-far trajectory is preserved.
+#[test]
+fn serial_trajectory_matches_across_drivers() {
+    let model = ModelId::Resnet50Fp32;
+    let space = model.space();
+    for alg in Algorithm::all_paper() {
+        let seed = 17;
+        // hand-rolled serial ask/tell loop
+        let mut engine = alg.build(&space, seed);
+        let mut eval = SimEvaluator::new(model, seed);
+        let mut manual = Vec::new();
+        for _ in 0..30 {
+            let t = engine.ask(1).pop().unwrap();
+            let m = eval.measure(&t.config).unwrap();
+            engine.tell(t.id, &m);
+            manual.push(m.value);
+        }
+        // tune() shim
+        let mut engine = alg.build(&space, seed);
+        let mut eval = SimEvaluator::new(model, seed);
+        let shim = tune(engine.as_mut(), &mut eval, 30).unwrap();
+        // 1-evaluator session
+        let mut session = TuningSession::new(
+            alg.build(&space, seed),
+            sim_pool(
+                model,
+                seed,
+                tftune::sim::noise::DEFAULT_SIGMA,
+                Objective::Throughput,
+                1,
+            ),
+            Budget::evaluations(30),
+        );
+        let sess = session.run().unwrap();
+
+        assert_eq!(manual, shim.values(), "{}: shim diverged", alg.name());
+        assert_eq!(shim.values(), sess.values(), "{}: session diverged", alg.name());
+        assert_eq!(shim.best_curve(), sess.best_curve());
+    }
+}
+
+/// A parallel session completes the budget with on-grid configs and
+/// engine-unique trial ids, and BO's batch stays on the grid end to end —
+/// the `tftune tune --model resnet50-fp32 --alg bo --parallel 4`
+/// acceptance scenario, driven through the library.
+#[test]
+fn parallel_bo_session_all_trials_on_grid() {
+    let model = ModelId::Resnet50Fp32;
+    let space = model.space();
+    let mut cfg = tftune::TuneConfig::default();
+    cfg.model = model;
+    cfg.algorithm = Algorithm::Bo;
+    cfg.iterations = 20;
+    cfg.parallel = 4;
+    let h = cfg.run().unwrap();
+    assert_eq!(h.len(), 20);
+    let mut ids: Vec<u64> = h.iter().map(|e| e.trial_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 20);
+    for e in h.iter() {
+        assert!(space.contains(&e.config), "off-grid {:?}", e.config);
+        assert!(e.value > 0.0);
+        assert!(e.cost_s >= 0.0);
+    }
+}
+
+/// The plateau rule ends a session that stops improving.
+#[test]
+fn session_plateau_stop() {
+    struct Flat;
+    impl Evaluator for Flat {
+        fn evaluate(&mut self, _c: &Config) -> anyhow::Result<f64> {
+            Ok(7.0)
+        }
+        fn describe(&self) -> String {
+            "flat".into()
+        }
+    }
+    let model = ModelId::NcfFp32;
+    let mut session = TuningSession::new(
+        Algorithm::Random.build(&model.space(), 8),
+        vec![Box::new(Flat)],
+        Budget::evaluations(10_000).with_plateau(10, 0.005),
+    );
+    let h = session.run().unwrap();
+    assert_eq!(session.stop_reason(), Some(StopReason::Plateau));
+    assert_eq!(h.len(), 11, "first sample + plateau window");
+}
+
+/// Out-of-order tells with n=1 semantics: telling a batch back in reverse
+/// still leaves every engine able to finish a full run, and the recorded
+/// best is the true max of what was measured.
+#[test]
+fn reversed_batch_tells_keep_best_consistent() {
+    let space = threading_space(64, 1024, 64);
+    for alg in Algorithm::all() {
+        let mut engine = alg.build(&space, 99);
+        let mut measured: Vec<f64> = Vec::new();
+        for _ in 0..12 {
+            let mut trials = engine.ask(3);
+            trials.reverse();
+            for t in trials {
+                let v = objective(&space, &t.config);
+                measured.push(v);
+                engine.tell(t.id, &Measurement::new(v));
+            }
+        }
+        assert!(!measured.is_empty(), "{} never issued trials", alg.name());
+        let best = measured.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(best.is_finite(), "{}", alg.name());
+    }
+}

@@ -2,7 +2,7 @@
 //! simulator + history), the paper's qualitative claims at test strength,
 //! and failure-injection paths.
 
-use tftune::algorithms::{Algorithm, NelderMead, Tuner};
+use tftune::algorithms::{Algorithm, NelderMead};
 use tftune::config::{SurrogateKind, TuneConfig};
 use tftune::evaluator::{tune, Evaluator, SimEvaluator};
 use tftune::history::History;

@@ -1,8 +1,9 @@
 //! Robustness / failure-injection integration tests: malformed inputs,
 //! dying peers, pathological measurements, degenerate spaces.
 
-use tftune::algorithms::Algorithm;
+use tftune::algorithms::{Algorithm, Tuner};
 use tftune::evaluator::{tune, Evaluator, RemoteEvaluator, SimEvaluator};
+use tftune::history::Measurement;
 use tftune::server::TargetServer;
 use tftune::sim::ModelId;
 use tftune::space::{Config, ParamDef, SearchSpace};
@@ -106,9 +107,9 @@ fn degenerate_space_single_point() {
     {
         let mut t = alg.build(&space, 3);
         for _ in 0..8 {
-            let c = t.propose();
-            assert_eq!(c, vec![7], "{} proposed {c:?}", alg.name());
-            t.observe(&c, 1.0);
+            let Some(trial) = t.ask(1).pop() else { continue };
+            assert_eq!(trial.config, vec![7], "{} proposed {:?}", t.name(), trial.config);
+            t.tell(trial.id, &Measurement::new(1.0));
         }
     }
 }
@@ -121,10 +122,12 @@ fn degenerate_space_binary() {
         let mut t = alg.build(&space, 4);
         let mut seen_one = false;
         for _ in 0..20 {
-            let c = t.propose();
+            let Some(trial) = t.ask(1).pop() else { continue };
+            let c = &trial.config;
             assert!(c[0] == 0 || c[0] == 1);
             seen_one |= c[0] == 1;
-            t.observe(&c, c[0] as f64); // 1 is better
+            let v = c[0] as f64; // 1 is better
+            t.tell(trial.id, &Measurement::new(v));
         }
         assert!(seen_one, "{} never sampled the better value", alg.name());
     }
@@ -166,13 +169,11 @@ fn bo_invariant_to_objective_scale() {
 fn bo_survives_duplicate_history() {
     let space = ModelId::BertFp32.space();
     let mut t = tftune::algorithms::BayesOpt::new(space.clone(), 6);
-    use tftune::algorithms::Tuner;
     let cfg = vec![2, 10, 32, 0, 20];
     for i in 0..30 {
-        let _ = t.propose();
-        // feed the SAME config back regardless of the proposal
-        t.observe(&cfg, 100.0 + (i % 3) as f64);
+        // inject the SAME config over and over (warm-start path)
+        t.warm_start(&cfg, 100.0 + (i % 3) as f64);
     }
-    let c = t.propose();
-    assert!(space.contains(&c));
+    let trial = t.ask(1).pop().unwrap();
+    assert!(space.contains(&trial.config));
 }
