@@ -11,13 +11,13 @@
 
 use tftune::algorithms::{Algorithm, BayesOpt, Tuner};
 use tftune::evaluator::{Evaluator, RemoteEvaluator, SimEvaluator};
-use tftune::gp::{GpHyper, NativeSurrogate, Surrogate};
+use tftune::gp::{GpHyper, IncrementalGp, NativeGp, NativeSurrogate, ScoreWorkspace, Surrogate};
 use tftune::history::{random_history, Measurement};
 use tftune::runtime::GpSurrogate;
 use tftune::server::TargetServer;
 use tftune::sim::{ModelId, SimWorkload};
-use tftune::util::bench::Bencher;
-use tftune::util::Rng;
+use tftune::util::bench::{BenchResult, Bencher};
+use tftune::util::{Json, Rng};
 
 fn gp_problem(rng: &mut Rng, n: usize, c: usize) -> (Vec<Vec<f64>>, Vec<f64>, Vec<Vec<f64>>) {
     let x: Vec<Vec<f64>> = (0..n).map(|_| (0..5).map(|_| rng.f64()).collect()).collect();
@@ -40,6 +40,59 @@ fn main() -> anyhow::Result<()> {
         i = (i + 1) % cfgs.len();
         w.true_throughput(&cfgs[i])
     });
+
+    println!("\n== incremental surrogate subsystem, n=64 / 512 candidates ==");
+    {
+        let n = 64;
+        let c = 512;
+        let (x, y, cand) = gp_problem(&mut rng, n, c);
+        let hyper = GpHyper::default();
+
+        // Baseline: the pre-refactor path — refit the exact GP from
+        // scratch (O(n³) + allocations) and score per candidate.
+        let mut scratch = NativeSurrogate;
+        let r_scratch = b.bench("gp/gp_fit_scratch n=64 c=512", || {
+            scratch.fit_score(&x, &y, &cand, hyper, 1.5, 1.0).unwrap().gain[0]
+        });
+
+        // Incremental tell path: rank-1 Cholesky append of the 64th point
+        // onto a persistent 63-point factor (extend+retract keeps the
+        // model at steady state between iterations).
+        let mut inc = IncrementalGp::new(hyper);
+        for (xi, &yi) in x.iter().take(n - 1).zip(&y) {
+            assert!(inc.push(xi, yi));
+        }
+        let x_last = x[n - 1].clone();
+        let r_append = b.bench("gp/gp_append_rank1 n=63->64", || {
+            assert!(inc.extend_fantasy(&x_last, 0.0));
+            inc.retract_fantasies();
+            inc.total()
+        });
+
+        // Incremental ask path: blocked zero-allocation scoring of the
+        // full candidate pool on the persistent 64-point factor.
+        assert!(inc.push(&x_last, y[n - 1]));
+        let cand_flat: Vec<f64> = cand.iter().flatten().copied().collect();
+        let mut ws = ScoreWorkspace::default();
+        let r_score = b.bench("gp/score_512_candidates n=64", || {
+            inc.score_into(&cand_flat, c, 1.5, 1.0, &mut ws);
+            ws.gain[0]
+        });
+
+        // Sanity on the refit-only component for context.
+        let r_fit_only = b.bench("gp/fit_only_scratch n=64", || {
+            NativeGp::fit(&x, &y, hyper).unwrap().predict(&cand[..1]).mean[0]
+        });
+
+        let incremental_ns = r_append.mean_ns + r_score.mean_ns;
+        let speedup = r_scratch.mean_ns / incremental_ns;
+        println!(
+            "  incremental append+score {:.1} µs vs scratch refit+score {:.1} µs  ({speedup:.2}x)",
+            incremental_ns / 1e3,
+            r_scratch.mean_ns / 1e3,
+        );
+        write_gp_bench_json(&[&r_scratch, &r_append, &r_score, &r_fit_only], n, c, speedup)?;
+    }
 
     println!("\n== GP surrogate: native vs AOT HLO (PJRT), 512 candidates ==");
     for n in [8usize, 32, 64] {
@@ -106,5 +159,45 @@ fn main() -> anyhow::Result<()> {
     });
 
     println!("\ndone; see EXPERIMENTS.md §Perf for targets and history.");
+    Ok(())
+}
+
+/// Persist the surrogate-subsystem baseline (ISSUE 2 acceptance: the
+/// incremental append + blocked scoring must beat the scratch refit at
+/// n=64 / 512 candidates). Keys are the bench short names.
+fn write_gp_bench_json(
+    results: &[&BenchResult],
+    n: usize,
+    c: usize,
+    speedup: f64,
+) -> anyhow::Result<()> {
+    let mut benches = std::collections::BTreeMap::new();
+    for r in results {
+        let key = r
+            .name
+            .trim_start_matches("gp/")
+            .split_whitespace()
+            .next()
+            .unwrap_or(&r.name)
+            .to_string();
+        benches.insert(
+            key,
+            Json::obj(vec![
+                ("mean_ns", Json::from(r.mean_ns)),
+                ("median_ns", Json::from(r.median_ns)),
+                ("p95_ns", Json::from(r.p95_ns)),
+                ("iters", Json::from(r.iters as f64)),
+            ]),
+        );
+    }
+    let doc = Json::obj(vec![
+        ("n_history", Json::from(n)),
+        ("n_candidates", Json::from(c)),
+        ("benches", Json::Obj(benches)),
+        ("incremental_vs_scratch_speedup", Json::from(speedup)),
+        ("incremental_beats_scratch", Json::from(speedup > 1.0)),
+    ]);
+    std::fs::write("BENCH_gp.json", format!("{doc}\n"))?;
+    println!("  wrote BENCH_gp.json");
     Ok(())
 }

@@ -1,22 +1,39 @@
 //! Bayesian-optimization engine (paper §2.2): Gaussian-process surrogate
-//! + SMSego-style acquisition.
+//! + SMSego-style acquisition, built on the incremental surrogate
+//! subsystem (`crate::gp`).
 //!
 //! Per iteration:
 //!   1. normalise the history to the unit cube, standardise y,
 //!   2. generate a candidate set (global uniform samples + local Gaussian
 //!      perturbations of the incumbent — the explore/exploit mix),
-//!   3. fit the GP and score every candidate's optimistic gain
-//!      (mu + alpha*sigma) - y_best,
+//!   3. score every candidate's optimistic gain (mu + alpha*sigma) - y_best,
 //!   4. propose the highest-gain unseen candidate.
 //!
-//! Step 3 is the numeric hot path and runs through the [`crate::gp::Surrogate`]
-//! abstraction: the production implementation executes the AOT-compiled
-//! HLO artifact (L2 JAX graph + L1 Pallas RBF kernel) via PJRT
-//! (`runtime::GpSurrogate`); the exact native GP is the oracle/fallback.
-//! Python is never on this path.
+//! Step 3 is the numeric hot path. With the native stack the engine keeps
+//! a **persistent [`IncrementalGp`]** across the whole run: each `tell`
+//! folds its observation into the Cholesky factor as an O(n²) rank-1
+//! append (no O(n³) refit), each batched `ask` conditions on in-flight
+//! trials by *extending* the factor with constant-liar fantasies and
+//! *retracting* them after scoring (O(n²) per fantasy), and the
+//! 512-candidate pool is scored through one blocked cross-kernel panel +
+//! multi-RHS triangular solve with zero heap allocation
+//! ([`ScoreWorkspace`]). The model is keyed by the observation list it
+//! has factored in (`model_idx`): as long as the conditioning set only
+//! grows, appends are rank-1; if it is reshaped (window overflow, new
+//! hypers), the factor is rebuilt.
+//!
+//! Surrogates that refit in one fused call still go through
+//! [`Surrogate::fit_score`]: the production HLO artifact (L2 JAX graph +
+//! L1 Pallas RBF kernel, via PJRT — `runtime::GpSurrogate`) and the
+//! scratch-refit reference path (`ExactRefitSurrogate`). Python is never
+//! on this path. Both routes consume the same [`GpHyper`] (kernel,
+//! lengthscale, conditioning window), so they stay interchangeable.
 
-use super::{TrialBook, Tuner};
-use crate::gp::{GpHyper, NativeSurrogate, Surrogate};
+use super::{Trial, TrialBook, TrialId, Tuner};
+use crate::gp::{
+    select_lengthscale, GpHyper, IncrementalGp, KernelKind, NativeSurrogate, ScoreWorkspace,
+    Surrogate,
+};
 use crate::history::Measurement;
 use crate::space::{Config, SearchSpace};
 use crate::util::{stats, Rng};
@@ -31,31 +48,59 @@ const GLOBAL_FRAC: f64 = 0.75;
 const LOCAL_SIGMA: f64 = 0.08;
 /// Acquisition optimism (alpha in (mu + alpha*sigma) - y_best).
 pub const ACQ_ALPHA: f64 = 1.5;
-/// Most recent history points the surrogate conditions on (the AOT
-/// artifact is compiled for at most this many; see python/compile/model.py).
-pub const MAX_HISTORY: usize = 64;
+
+/// One settled observation. (Observations are keyed by their append-only
+/// index in `observed` — `tell` order — which is what `model_idx` stores;
+/// the trial id itself is consumed by `TrialBook::settle` and not needed
+/// afterwards.)
+struct Obs {
+    /// Unit-cube coordinates.
+    x: Vec<f64>,
+    /// Raw objective value.
+    y: f64,
+    config: Config,
+}
 
 pub struct BayesOpt<S: Surrogate = NativeSurrogate> {
     space: SearchSpace,
     rng: Rng,
     surrogate: S,
+    /// Kernel + lengthscale + noise + conditioning window, shared by every
+    /// surrogate path (incremental, scratch oracle, HLO artifact).
     hyper: GpHyper,
     /// Acquisition optimism (ablatable; default ACQ_ALPHA).
     acq_alpha: f64,
     /// Candidate-pool size per iteration (ablatable; default CANDIDATES).
     n_candidates: usize,
+    /// Re-select the lengthscale by log marginal likelihood as history
+    /// grows (off by default: the paper fixes hypers per run).
+    tune_lengthscale: bool,
+    /// History size at which the lengthscale was last selected.
+    ls_selected_at: usize,
     /// Initial design not yet proposed.
     pending_init: Vec<Config>,
-    /// All observations: (unit-cube x, raw y, config).
-    observed: Vec<(Vec<f64>, f64, Config)>,
+    /// All settled observations, in tell order (append-only).
+    observed: Vec<Obs>,
     /// Open trials. Pending configurations are conditioned into the GP as
     /// constant-liar fantasies (at the standardised mean) so a batch of
     /// `ask`ed trials spreads out instead of collapsing onto one point.
     book: TrialBook,
+    /// Persistent incremental model (native stack only).
+    model: IncrementalGp,
+    /// Indices into `observed` currently factored into `model`, in factor
+    /// row order — the key deciding between rank-1 append and rebuild.
+    model_idx: Vec<usize>,
+    /// Reusable scoring buffers (zero-allocation hot path).
+    ws: ScoreWorkspace,
+    /// Flattened candidate pool (n_candidates × dim), reused per ask.
+    cand_flat: Vec<f64>,
+    /// Reusable raw/standardised conditioning targets.
+    y_raw: Vec<f64>,
+    y_std: Vec<f64>,
 }
 
 impl BayesOpt<NativeSurrogate> {
-    /// BO with the exact native GP surrogate.
+    /// BO with the native surrogate stack (persistent incremental GP).
     pub fn new(space: SearchSpace, seed: u64) -> BayesOpt<NativeSurrogate> {
         BayesOpt::with_surrogate(space, seed, NativeSurrogate)
     }
@@ -63,21 +108,30 @@ impl BayesOpt<NativeSurrogate> {
 
 impl<S: Surrogate> BayesOpt<S> {
     /// BO with an explicit surrogate (e.g. `runtime::GpSurrogate` for the
-    /// AOT/PJRT path).
+    /// AOT/PJRT path, or `ExactRefitSurrogate` for the scratch reference).
     pub fn with_surrogate(space: SearchSpace, seed: u64, surrogate: S) -> BayesOpt<S> {
         let mut rng = Rng::new(seed);
         let mut pending_init = space.latin_hypercube(INIT_DESIGN, &mut rng);
         pending_init.reverse(); // pop from back in LHS order
+        let hyper = GpHyper::default();
         BayesOpt {
             space,
             rng,
             surrogate,
-            hyper: GpHyper::default(),
+            hyper,
             acq_alpha: ACQ_ALPHA,
             n_candidates: CANDIDATES,
+            tune_lengthscale: false,
+            ls_selected_at: 0,
             pending_init,
             observed: Vec::new(),
             book: TrialBook::new(),
+            model: IncrementalGp::new(hyper),
+            model_idx: Vec::new(),
+            ws: ScoreWorkspace::default(),
+            cand_flat: Vec::new(),
+            y_raw: Vec::new(),
+            y_std: Vec::new(),
         }
     }
 
@@ -96,21 +150,58 @@ impl<S: Surrogate> BayesOpt<S> {
         self
     }
 
-    /// The conditioning set: all history if it fits the artifact, else the
-    /// best MAX_HISTORY/4 plus the most recent remainder.
+    /// Covariance kernel for the surrogate (native stack; the HLO artifact
+    /// is RBF-only and rejects other kinds).
+    pub fn with_kernel(mut self, kind: KernelKind) -> BayesOpt<S> {
+        self.hyper.kernel = kind;
+        self.reset_model();
+        self
+    }
+
+    /// Override the surrogate conditioning window. Must stay ≤ the
+    /// artifact's compiled N_PAD when the HLO surrogate is used
+    /// (`runtime::GpSurrogate` enforces this at score time).
+    pub fn with_history_window(mut self, window: usize) -> BayesOpt<S> {
+        assert!(window > 0, "history window must be positive");
+        self.hyper.max_history = window;
+        self.reset_model();
+        self
+    }
+
+    /// Re-select the lengthscale over [`crate::gp::LENGTHSCALE_GRID`] by
+    /// log marginal likelihood whenever the history reaches a power-of-two
+    /// size (rebuilds the incremental factor on change).
+    pub fn with_lengthscale_selection(mut self) -> BayesOpt<S> {
+        self.tune_lengthscale = true;
+        self
+    }
+
+    /// The hypers every surrogate path is currently driven by.
+    pub fn hyper(&self) -> GpHyper {
+        self.hyper
+    }
+
+    fn reset_model(&mut self) {
+        self.model.set_hyper(self.hyper);
+        self.model_idx.clear();
+    }
+
+    /// The conditioning set: all history if it fits the window, else the
+    /// best window/4 plus the most recent remainder.
     fn conditioning_set(&self) -> Vec<usize> {
         let n = self.observed.len();
-        if n <= MAX_HISTORY {
+        let window = self.hyper.max_history;
+        if n <= window {
             return (0..n).collect();
         }
-        let keep_best = MAX_HISTORY / 4;
+        let keep_best = window / 4;
         let mut by_value: Vec<usize> = (0..n).collect();
-        by_value.sort_by(|&a, &b| {
-            self.observed[b].1.partial_cmp(&self.observed[a].1).unwrap()
-        });
+        // total_cmp keeps the sort panic-free (and deterministic) even if
+        // an evaluator ever reports a NaN measurement.
+        by_value.sort_by(|&a, &b| self.observed[b].y.total_cmp(&self.observed[a].y));
         let mut chosen: Vec<usize> = by_value[..keep_best].to_vec();
         for i in (0..n).rev() {
-            if chosen.len() >= MAX_HISTORY {
+            if chosen.len() >= window {
                 break;
             }
             if !chosen.contains(&i) {
@@ -121,70 +212,155 @@ impl<S: Surrogate> BayesOpt<S> {
         chosen
     }
 
-    fn candidates(&mut self, incumbent: &[f64]) -> Vec<Vec<f64>> {
+    /// Fill `cand_flat` with the explore/exploit candidate mix; returns
+    /// the number of rows. No allocation once the buffer has warmed up.
+    fn gen_candidates(&mut self, incumbent: &[f64]) -> usize {
         let dim = self.space.dim();
         let n_global = (self.n_candidates as f64 * GLOBAL_FRAC) as usize;
-        let mut cands = Vec::with_capacity(self.n_candidates);
-        for _ in 0..n_global {
-            cands.push((0..dim).map(|_| self.rng.f64()).collect());
+        self.cand_flat.clear();
+        self.cand_flat.reserve(self.n_candidates * dim);
+        for _ in 0..n_global * dim {
+            let v = self.rng.f64();
+            self.cand_flat.push(v);
         }
-        while cands.len() < self.n_candidates {
-            let p: Vec<f64> = incumbent
-                .iter()
-                .map(|&x| (x + self.rng.normal() * LOCAL_SIGMA).clamp(0.0, 1.0))
-                .collect();
-            cands.push(p);
+        for _ in n_global..self.n_candidates {
+            for &x in incumbent {
+                let v = (x + self.rng.normal() * LOCAL_SIGMA).clamp(0.0, 1.0);
+                self.cand_flat.push(v);
+            }
         }
-        cands
+        self.n_candidates
     }
 
-    fn propose_bo(&mut self) -> Config {
-        // Standardise y over the conditioning set.
-        let idx = self.conditioning_set();
-        let mut x: Vec<Vec<f64>> = idx.iter().map(|&i| self.observed[i].0.clone()).collect();
-        let y_raw: Vec<f64> = idx.iter().map(|&i| self.observed[i].1).collect();
-        let mean = stats::mean(&y_raw);
-        let sd = stats::stddev(&y_raw).max(1e-9);
-        let mut y: Vec<f64> = y_raw.iter().map(|v| (v - mean) / sd).collect();
-        let y_best = y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-
-        let incumbent = {
-            let bi = stats::argmax(&y_raw);
-            x[bi].clone()
-        };
+    /// Score the pool through the persistent incremental model. Returns
+    /// false (model cleared) if the factor could not be grown.
+    fn incremental_scores(&mut self, idx: &[usize], y_best: f64) -> bool {
+        // Rank-1 appends while the conditioning set extends the factored
+        // one; any reshape (window overflow reordering, hyper change)
+        // forces a rebuild.
+        let keep = self.model_idx.len() <= idx.len()
+            && self.model_idx.iter().zip(idx).all(|(a, b)| a == b);
+        if !keep {
+            self.model.clear();
+            self.model_idx.clear();
+        }
+        let start = self.model_idx.len();
+        for &i in &idx[start..] {
+            if !self.model.push(&self.observed[i].x, 0.0) {
+                self.model.clear();
+                self.model_idx.clear();
+                return false;
+            }
+            self.model_idx.push(i);
+        }
+        self.model.set_targets(&self.y_std);
 
         // Constant-liar fantasies for in-flight trials: pretend each lands
         // at the observed mean (standardised 0), which kills the variance
-        // bonus around pending points and pushes the batch apart. Capped so
-        // the conditioning set still fits the AOT artifact's N_PAD.
+        // bonus around pending points and pushes the batch apart. Capped
+        // so the conditioning set still fits the window / artifact N_PAD.
+        let window = self.hyper.max_history;
         for cfg in self.book.open_configs() {
-            if x.len() >= MAX_HISTORY {
+            if self.model.total() >= window {
+                break;
+            }
+            let u = self.space.to_unit(cfg);
+            if !self.model.extend_fantasy(&u, 0.0) {
+                break;
+            }
+        }
+
+        let n_cand = self.cand_flat.len() / self.space.dim();
+        self.model.score_into(&self.cand_flat, n_cand, self.acq_alpha, y_best, &mut self.ws);
+        self.model.retract_fantasies();
+        true
+    }
+
+    /// Score the pool through `Surrogate::fit_score` (HLO artifact or
+    /// scratch reference). Returns false on surrogate failure.
+    fn generic_scores(&mut self, idx: &[usize], y_best: f64) -> bool {
+        let dim = self.space.dim();
+        let window = self.hyper.max_history;
+        let mut x: Vec<Vec<f64>> = idx.iter().map(|&i| self.observed[i].x.clone()).collect();
+        let mut y = self.y_std.clone();
+        for cfg in self.book.open_configs() {
+            if x.len() >= window {
                 break;
             }
             x.push(self.space.to_unit(cfg));
             y.push(0.0);
         }
-
-        let cands = self.candidates(&incumbent);
-
-        let scores =
-            match self.surrogate.fit_score(&x, &y, &cands, self.hyper, self.acq_alpha, y_best) {
-            Ok(s) => s,
+        let cands: Vec<Vec<f64>> = self.cand_flat.chunks(dim).map(|c| c.to_vec()).collect();
+        match self.surrogate.fit_score(&x, &y, &cands, self.hyper, self.acq_alpha, y_best) {
+            Ok(s) => {
+                self.ws.mean = s.mean;
+                self.ws.std = s.std;
+                self.ws.gain = s.gain;
+                true
+            }
             Err(e) => {
                 // Surrogate failure (singular kernel etc.): fall back to a
                 // random proposal rather than aborting the tuning run.
                 eprintln!("tftune: surrogate failed ({e}); proposing randomly");
-                return self.space.random(&mut self.rng);
+                false
             }
+        }
+    }
+
+    fn propose_bo(&mut self) -> Config {
+        // Standardise y over the conditioning set.
+        let idx = self.conditioning_set();
+        self.y_raw.clear();
+        for &i in &idx {
+            let v = self.observed[i].y;
+            self.y_raw.push(v);
+        }
+        let mean = stats::mean(&self.y_raw);
+        let sd = stats::stddev(&self.y_raw).max(1e-9);
+        self.y_std.clear();
+        for k in 0..idx.len() {
+            let v = (self.y_raw[k] - mean) / sd;
+            self.y_std.push(v);
+        }
+        let y_best = self.y_std.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+
+        let incumbent = {
+            let bi = stats::argmax(&self.y_raw);
+            self.observed[idx[bi]].x.clone()
         };
+
+        if self.tune_lengthscale {
+            let n = idx.len();
+            if n >= 4 && n.is_power_of_two() && n != self.ls_selected_at {
+                let xs: Vec<Vec<f64>> =
+                    idx.iter().map(|&i| self.observed[i].x.clone()).collect();
+                let picked = select_lengthscale(&xs, &self.y_std, self.hyper);
+                self.ls_selected_at = n;
+                if picked != self.hyper {
+                    self.hyper = picked;
+                    self.reset_model();
+                }
+            }
+        }
+
+        let dim = self.space.dim();
+        let n_cand = self.gen_candidates(&incumbent);
+
+        let scored = if self.surrogate.use_engine_incremental() {
+            self.incremental_scores(&idx, y_best)
+        } else {
+            false
+        };
+        if !scored && !self.generic_scores(&idx, y_best) {
+            return self.space.random(&mut self.rng);
+        }
 
         // Highest-gain candidate whose snapped config is neither measured
         // nor already in flight.
-        let mut order: Vec<usize> = (0..cands.len()).collect();
-        order.sort_by(|&a, &b| scores.gain[b].partial_cmp(&scores.gain[a]).unwrap());
-        for &ci in &order {
-            let cfg = self.space.from_unit(&cands[ci]);
-            if !self.observed.iter().any(|(_, _, c)| c == &cfg)
+        debug_assert_eq!(self.ws.gain.len(), n_cand);
+        for &ci in self.ws.argsort_gain_desc() {
+            let cfg = self.space.from_unit(&self.cand_flat[ci * dim..(ci + 1) * dim]);
+            if !self.observed.iter().any(|o| o.config == cfg)
                 && !self.book.open_configs().any(|c| c == &cfg)
             {
                 return cfg;
@@ -200,7 +376,7 @@ impl<S: Surrogate> Tuner for BayesOpt<S> {
         "bayesian-optimization"
     }
 
-    fn ask(&mut self, n: usize) -> Vec<super::Trial> {
+    fn ask(&mut self, n: usize) -> Vec<Trial> {
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             let cfg = if let Some(cfg) = self.pending_init.pop() {
@@ -215,23 +391,47 @@ impl<S: Surrogate> Tuner for BayesOpt<S> {
         out
     }
 
-    fn tell(&mut self, id: super::TrialId, m: &Measurement) {
+    fn tell(&mut self, id: TrialId, m: &Measurement) {
         if let Some(cfg) = self.book.settle(id) {
             let u = self.space.to_unit(&cfg);
-            self.observed.push((u, m.value, cfg));
+            self.observed.push(Obs { x: u, y: m.value, config: cfg });
+            self.append_latest_to_model();
         }
     }
 
     /// Inject a past observation (warm start / duplicate-history stress).
     fn warm_start(&mut self, config: &Config, value: f64) {
         let u = self.space.to_unit(config);
-        self.observed.push((u, value, config.clone()));
+        self.observed.push(Obs { x: u, y: value, config: config.clone() });
+        self.append_latest_to_model();
+    }
+}
+
+impl<S: Surrogate> BayesOpt<S> {
+    /// Eager rank-1 append of the newest observation into the persistent
+    /// factor — the `tell` side of the incremental contract. Only valid
+    /// while the conditioning set is the full (windowed) prefix of
+    /// history; otherwise the next `ask` rebuilds lazily.
+    fn append_latest_to_model(&mut self) {
+        if !self.surrogate.use_engine_incremental() {
+            return;
+        }
+        let i = self.observed.len() - 1;
+        if self.observed.len() <= self.hyper.max_history && self.model_idx.len() == i {
+            if self.model.push(&self.observed[i].x, 0.0) {
+                self.model_idx.push(i);
+            } else {
+                self.model.clear();
+                self.model_idx.clear();
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gp::ExactRefitSurrogate;
     use crate::space::threading_space;
     use crate::util::prop;
 
@@ -356,17 +556,81 @@ mod tests {
     }
 
     #[test]
-    fn conditioning_set_caps_at_artifact_size() {
+    fn conditioning_set_caps_at_window() {
         let s = space();
         let mut bo = BayesOpt::new(s.clone(), 3);
+        let window = bo.hyper().max_history;
         let mut rng = Rng::new(1);
-        for i in 0..(MAX_HISTORY + 40) {
+        for i in 0..(window + 40) {
             let c = s.random(&mut rng);
             bo.warm_start(&c, i as f64);
         }
         let idx = bo.conditioning_set();
-        assert_eq!(idx.len(), MAX_HISTORY);
+        assert_eq!(idx.len(), window);
         // the globally best observation (last, value = max) must be kept
-        assert!(idx.contains(&(MAX_HISTORY + 39)));
+        assert!(idx.contains(&(window + 39)));
+    }
+
+    #[test]
+    fn history_window_is_engine_config() {
+        // Satellite: the window is a GpHyper field, not a free constant —
+        // overriding it must narrow the conditioning set everywhere.
+        let s = space();
+        let mut bo = BayesOpt::new(s.clone(), 4).with_history_window(16);
+        assert_eq!(bo.hyper().max_history, 16);
+        let mut rng = Rng::new(2);
+        for i in 0..40 {
+            let c = s.random(&mut rng);
+            bo.warm_start(&c, i as f64);
+        }
+        assert_eq!(bo.conditioning_set().len(), 16);
+    }
+
+    #[test]
+    fn matern_kernel_engine_smoke() {
+        let s = space();
+        let target = vec![3, 40, 640, 60, 36];
+        let obj = quadratic(&s, &target);
+        let mut bo = BayesOpt::new(s.clone(), 6).with_kernel(KernelKind::Matern52);
+        let mut best = f64::NEG_INFINITY;
+        for _ in 0..30 {
+            let (_, v) = step(&mut bo, &obj);
+            best = best.max(v);
+        }
+        assert!(best > 9.0, "Matérn BO best {best} too low");
+    }
+
+    #[test]
+    fn lengthscale_selection_smoke() {
+        let s = space();
+        let obj = quadratic(&s, &vec![2, 28, 512, 100, 28]);
+        let mut bo = BayesOpt::new(s.clone(), 8).with_lengthscale_selection();
+        for _ in 0..20 {
+            step(&mut bo, &obj);
+        }
+        // the selected lengthscale must be one of the grid values
+        let ls = bo.hyper().lengthscale;
+        assert!(
+            crate::gp::LENGTHSCALE_GRID.contains(&ls),
+            "selected lengthscale {ls} not on grid"
+        );
+    }
+
+    #[test]
+    fn incremental_and_scratch_engines_propose_identically() {
+        // The in-module twin of the integration-level trajectory pin: the
+        // incremental session and the scratch-refit reference must produce
+        // identical serial trajectories (same seed, same tells).
+        let s = space();
+        let obj = quadratic(&s, &vec![3, 30, 576, 80, 40]);
+        let mut inc = BayesOpt::new(s.clone(), 17);
+        let mut scratch = BayesOpt::with_surrogate(s.clone(), 17, ExactRefitSurrogate);
+        for step_i in 0..25 {
+            let a = inc.ask(1).pop().unwrap();
+            let b = scratch.ask(1).pop().unwrap();
+            assert_eq!(a.config, b.config, "trajectories diverged at step {step_i}");
+            inc.tell(a.id, &Measurement::new(obj(&a.config)));
+            scratch.tell(b.id, &Measurement::new(obj(&b.config)));
+        }
     }
 }

@@ -1,0 +1,426 @@
+//! Incremental Gaussian process: a persistent Cholesky factor with O(n²)
+//! rank-1 appends, cheap constant-liar *extend/retract*, and a
+//! zero-allocation blocked scoring path.
+//!
+//! Role in the surrogate subsystem: this is the model the BO engine keeps
+//! alive across the whole tuning run. [`IncrementalGp::push`] folds a new
+//! observation into the factor in O(n²) (vs the oracle's O(n³) refit);
+//! [`IncrementalGp::extend_fantasy`] conditions on an in-flight trial the
+//! same way and [`IncrementalGp::retract_fantasies`] truncates the factor
+//! back — fantasies are pure appends, so retracting is exact (bitwise)
+//! state restoration, not an approximate downdate.
+//!
+//! Scoring ([`IncrementalGp::score_into`]) builds the cross-kernel panel
+//! `Kc` row-blocked in a caller-owned [`ScoreWorkspace`], forms the
+//! posterior mean as one panel·α accumulation, and the variance through a
+//! single multi-RHS [`trsm_lower_packed`] — one blocked pass over the
+//! whole candidate pool instead of a per-candidate fit/solve, with zero
+//! heap allocation once the workspace has warmed up.
+//!
+//! Numerical contract: every routine performs the same floating-point
+//! operations in the same order as the exact oracle (`gp::native`), so an
+//! incrementally grown posterior is bit-equal to a from-scratch
+//! [`NativeGp::fit`](super::NativeGp::fit) on the same data. The
+//! `surrogate_incremental` integration suite pins this; keep operation
+//! order intact when editing.
+
+use super::kernel::{eval_sqdist, GpHyper};
+use super::native::Posterior;
+use crate::util::linalg::{
+    chol_append_packed, packed_len, solve_lower_packed_inplace, solve_lower_t_packed_inplace,
+    sqdist, trsm_lower_packed,
+};
+
+/// Reusable buffers for the scoring hot path. Own one per engine and pass
+/// it to every [`IncrementalGp::score_into`] call; after the first call at
+/// a given (history, candidates) shape, scoring allocates nothing.
+#[derive(Debug, Default)]
+pub struct ScoreWorkspace {
+    /// n×c cross-kernel panel; overwritten by L⁻¹Kc during scoring.
+    panel: Vec<f64>,
+    /// Posterior mean per candidate.
+    pub mean: Vec<f64>,
+    /// Posterior stddev per candidate.
+    pub std: Vec<f64>,
+    /// Acquisition gain per candidate.
+    pub gain: Vec<f64>,
+    /// Scratch index order (filled by [`ScoreWorkspace::argsort_gain_desc`]).
+    pub order: Vec<usize>,
+}
+
+impl ScoreWorkspace {
+    /// Fill `order` with candidate indices sorted by descending gain and
+    /// return it. Reuses the buffer — no allocation once warmed up.
+    pub fn argsort_gain_desc(&mut self) -> &[usize] {
+        self.order.clear();
+        self.order.extend(0..self.gain.len());
+        let gain = &self.gain;
+        // total_cmp: panic-free and deterministic even for NaN gains.
+        self.order.sort_by(|&a, &b| gain[b].total_cmp(&gain[a]));
+        &self.order
+    }
+}
+
+/// A fitted GP whose factor grows in place.
+///
+/// Targets are mutable separately from inputs ([`IncrementalGp::set_targets`]):
+/// the Cholesky factor depends only on X, so the engine can restandardise
+/// y every iteration and pay two O(n²) triangular solves, not a refit.
+#[derive(Debug)]
+pub struct IncrementalGp {
+    hyper: GpHyper,
+    /// Feature dimension; fixed by the first appended row.
+    d: usize,
+    /// Committed (real) observations; rows beyond this are fantasies.
+    committed: usize,
+    /// Row-major (total×d) inputs.
+    x: Vec<f64>,
+    /// Targets, one per row (fantasies carry their lie value).
+    y: Vec<f64>,
+    /// Packed-lower Cholesky factor of K + σₙ²I over all rows.
+    l: Vec<f64>,
+    /// α = K⁻¹y for the current targets (valid iff !alpha_dirty).
+    alpha: Vec<f64>,
+    alpha_dirty: bool,
+    /// Scratch for new-row covariances (capacity-reserved).
+    kbuf: Vec<f64>,
+}
+
+impl IncrementalGp {
+    pub fn new(hyper: GpHyper) -> IncrementalGp {
+        let cap = hyper.max_history.max(1);
+        IncrementalGp {
+            hyper,
+            d: 0,
+            committed: 0,
+            x: Vec::new(),
+            y: Vec::with_capacity(cap),
+            l: Vec::with_capacity(packed_len(cap)),
+            alpha: Vec::with_capacity(cap),
+            alpha_dirty: true,
+            kbuf: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn hyper(&self) -> GpHyper {
+        self.hyper
+    }
+
+    /// Change hyperparameters. The factor is kernel-dependent, so this
+    /// clears the model; the caller re-pushes its conditioning set.
+    pub fn set_hyper(&mut self, hyper: GpHyper) {
+        self.hyper = hyper;
+        self.clear();
+    }
+
+    /// Committed (non-fantasy) observations.
+    pub fn len(&self) -> usize {
+        self.committed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.committed == 0
+    }
+
+    /// Committed + fantasy rows currently factored in.
+    pub fn total(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.committed = 0;
+        self.x.clear();
+        self.y.clear();
+        self.l.clear();
+        self.alpha.clear();
+        self.alpha_dirty = true;
+    }
+
+    /// Rank-1 append of one row (O(total²)). Returns false — leaving the
+    /// model unchanged — if the extended kernel matrix is not PD (only
+    /// possible with zero/negative noise and duplicate points).
+    fn append_row(&mut self, xr: &[f64], yv: f64) -> bool {
+        let m = self.total();
+        if m == 0 {
+            self.d = xr.len();
+            assert!(self.d > 0, "empty feature vector");
+            self.x.reserve(self.hyper.max_history.max(1) * self.d);
+        }
+        assert_eq!(xr.len(), self.d, "feature dim mismatch");
+        self.kbuf.clear();
+        for i in 0..m {
+            let xi = &self.x[i * self.d..(i + 1) * self.d];
+            self.kbuf.push(eval_sqdist(self.hyper.kernel, sqdist(xr, xi), &self.hyper));
+        }
+        let diag = self.hyper.signal_var + self.hyper.noise_var;
+        // Split borrows: chol_append_packed mutates l and kbuf only.
+        let IncrementalGp { l, kbuf, .. } = self;
+        if !chol_append_packed(l, m, kbuf, diag) {
+            return false;
+        }
+        self.x.extend_from_slice(xr);
+        self.y.push(yv);
+        self.alpha_dirty = true;
+        true
+    }
+
+    /// Append a committed observation.
+    pub fn push(&mut self, xr: &[f64], yv: f64) -> bool {
+        debug_assert_eq!(
+            self.committed,
+            self.total(),
+            "push with fantasies in place; retract first"
+        );
+        if !self.append_row(xr, yv) {
+            return false;
+        }
+        self.committed += 1;
+        true
+    }
+
+    /// Condition on an in-flight trial (constant liar): identical math to
+    /// [`IncrementalGp::push`], but the row is dropped again by
+    /// [`IncrementalGp::retract_fantasies`].
+    pub fn extend_fantasy(&mut self, xr: &[f64], lie: f64) -> bool {
+        self.append_row(xr, lie)
+    }
+
+    /// Drop all fantasy rows, restoring the exact pre-extend state: the
+    /// factor is truncated (appends never modify earlier entries), so no
+    /// numerical downdate is involved.
+    pub fn retract_fantasies(&mut self) {
+        let m = self.committed;
+        if self.total() == m {
+            return;
+        }
+        self.x.truncate(m * self.d);
+        self.y.truncate(m);
+        self.l.truncate(packed_len(m));
+        self.alpha_dirty = true;
+    }
+
+    /// Replace the targets of every current row (committed + fantasies).
+    /// O(1) when unchanged; otherwise α is lazily recomputed on the next
+    /// score from the persistent factor (two O(n²) triangular solves).
+    pub fn set_targets(&mut self, y: &[f64]) {
+        assert_eq!(y.len(), self.total(), "target length mismatch");
+        if self.y == y {
+            return;
+        }
+        self.y.clear();
+        self.y.extend_from_slice(y);
+        self.alpha_dirty = true;
+    }
+
+    fn refresh_alpha(&mut self) {
+        if !self.alpha_dirty {
+            return;
+        }
+        let m = self.total();
+        self.alpha.clear();
+        self.alpha.extend_from_slice(&self.y);
+        solve_lower_packed_inplace(&self.l, m, &mut self.alpha);
+        solve_lower_t_packed_inplace(&self.l, m, &mut self.alpha);
+        self.alpha_dirty = false;
+    }
+
+    /// Score `c` candidates (row-major c×d in `cand`) into `ws`: posterior
+    /// mean/std and the SMSego gain `(μ + acq_alpha·σ) − y_best`. Zero
+    /// heap allocation once `ws` buffers have grown to shape.
+    pub fn score_into(
+        &mut self,
+        cand: &[f64],
+        c: usize,
+        acq_alpha: f64,
+        y_best: f64,
+        ws: &mut ScoreWorkspace,
+    ) {
+        let m = self.total();
+        assert!(m > 0, "cannot score on an empty model");
+        assert_eq!(cand.len(), c * self.d, "candidate shape mismatch");
+        self.refresh_alpha();
+
+        ws.panel.clear();
+        ws.panel.resize(m * c, 0.0);
+        ws.mean.clear();
+        ws.mean.resize(c, 0.0);
+        ws.std.clear();
+        ws.std.resize(c, 0.0);
+        ws.gain.clear();
+        ws.gain.resize(c, 0.0);
+
+        // Cross-kernel panel: row i holds k(xᵢ, ·) over the whole pool.
+        for i in 0..m {
+            let xi = &self.x[i * self.d..(i + 1) * self.d];
+            let row = &mut ws.panel[i * c..(i + 1) * c];
+            for (j, kij) in row.iter_mut().enumerate() {
+                let cj = &cand[j * self.d..(j + 1) * self.d];
+                *kij = eval_sqdist(self.hyper.kernel, sqdist(xi, cj), &self.hyper);
+            }
+        }
+
+        // μ = Kcᵀα, accumulated panel-row-wise (ascending i, matching the
+        // oracle's per-candidate dot-product order).
+        for i in 0..m {
+            let a = self.alpha[i];
+            let row = &ws.panel[i * c..(i + 1) * c];
+            for (mu, kij) in ws.mean.iter_mut().zip(row) {
+                *mu += kij * a;
+            }
+        }
+
+        // V = L⁻¹Kc in one blocked sweep, then σ² = k(x,x) − Σᵢ Vᵢⱼ².
+        trsm_lower_packed(&self.l, m, &mut ws.panel, c);
+        for i in 0..m {
+            let row = &ws.panel[i * c..(i + 1) * c];
+            for (acc, v) in ws.std.iter_mut().zip(row) {
+                *acc += v * v;
+            }
+        }
+        for j in 0..c {
+            let var = self.hyper.signal_var - ws.std[j];
+            ws.std[j] = var.max(1e-12).sqrt();
+            ws.gain[j] = (ws.mean[j] + acq_alpha * ws.std[j]) - y_best;
+        }
+    }
+
+    /// Allocating convenience wrapper over [`IncrementalGp::score_into`]
+    /// for tests and oracle comparisons.
+    pub fn predict(&mut self, cand: &[Vec<f64>]) -> Posterior {
+        let mut flat = Vec::with_capacity(cand.len() * self.d);
+        for row in cand {
+            assert_eq!(row.len(), self.d, "candidate dim mismatch");
+            flat.extend_from_slice(row);
+        }
+        let mut ws = ScoreWorkspace::default();
+        self.score_into(&flat, cand.len(), 0.0, 0.0, &mut ws);
+        Posterior { mean: ws.mean, std: ws.std }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::{KernelKind, NativeGp};
+    use crate::util::Rng;
+
+    fn toy(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let x: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+        let y: Vec<f64> = x.iter().map(|p| (5.0 * p[0]).sin() + 0.3 * p[d - 1]).collect();
+        (x, y)
+    }
+
+    fn build(x: &[Vec<f64>], y: &[f64], hyper: GpHyper) -> IncrementalGp {
+        let mut gp = IncrementalGp::new(hyper);
+        for (xi, &yi) in x.iter().zip(y) {
+            assert!(gp.push(xi, yi), "append failed");
+        }
+        gp
+    }
+
+    #[test]
+    fn matches_scratch_oracle_both_kernels() {
+        let mut rng = Rng::new(7);
+        for kind in KernelKind::all() {
+            let hyper = GpHyper { kernel: kind, ..Default::default() };
+            let (x, y) = toy(&mut rng, 24, 4);
+            let mut inc = build(&x, &y, hyper);
+            let oracle = NativeGp::fit(&x, &y, hyper).unwrap();
+            let cand: Vec<Vec<f64>> =
+                (0..16).map(|_| (0..4).map(|_| rng.f64()).collect()).collect();
+            let a = inc.predict(&cand);
+            let b = oracle.predict(&cand);
+            for j in 0..cand.len() {
+                assert!(
+                    (a.mean[j] - b.mean[j]).abs() <= 1e-9,
+                    "{}: mean {} vs {}",
+                    kind.name(),
+                    a.mean[j],
+                    b.mean[j]
+                );
+                assert!((a.std[j] - b.std[j]).abs() <= 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn extend_retract_restores_state_bitwise() {
+        let mut rng = Rng::new(8);
+        let (x, y) = toy(&mut rng, 10, 3);
+        let mut gp = build(&x, &y, GpHyper::default());
+        let cand: Vec<Vec<f64>> = (0..8).map(|_| (0..3).map(|_| rng.f64()).collect()).collect();
+        let before = gp.predict(&cand);
+        let l_before = gp.l.clone();
+
+        for _ in 0..3 {
+            let f: Vec<f64> = (0..3).map(|_| rng.f64()).collect();
+            assert!(gp.extend_fantasy(&f, 0.0));
+        }
+        assert_eq!(gp.total(), 13);
+        assert_eq!(gp.len(), 10);
+        gp.retract_fantasies();
+        assert_eq!(gp.total(), 10);
+        assert_eq!(gp.l.len(), l_before.len());
+        for (a, b) in gp.l.iter().zip(&l_before) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let after = gp.predict(&cand);
+        for j in 0..cand.len() {
+            assert_eq!(before.mean[j].to_bits(), after.mean[j].to_bits());
+            assert_eq!(before.std[j].to_bits(), after.std[j].to_bits());
+        }
+    }
+
+    #[test]
+    fn set_targets_reuses_factor() {
+        let mut rng = Rng::new(9);
+        let (x, y) = toy(&mut rng, 12, 2);
+        let mut gp = build(&x, &y, GpHyper::default());
+        let cand = vec![vec![0.4, 0.6]];
+        let _ = gp.predict(&cand);
+        // New targets: posterior must equal a scratch fit on (x, y2).
+        let y2: Vec<f64> = y.iter().map(|v| v * 2.0 - 1.0).collect();
+        gp.set_targets(&y2);
+        let a = gp.predict(&cand);
+        let b = NativeGp::fit(&x, &y2, GpHyper::default()).unwrap().predict(&cand);
+        assert!((a.mean[0] - b.mean[0]).abs() <= 1e-9);
+        assert!((a.std[0] - b.std[0]).abs() <= 1e-9);
+    }
+
+    #[test]
+    fn rejects_non_pd_append_and_stays_usable() {
+        let hyper = GpHyper { noise_var: 0.0, ..Default::default() };
+        let mut gp = IncrementalGp::new(hyper);
+        assert!(gp.push(&[0.5, 0.5], 1.0));
+        // Exact duplicate with zero noise: not PD.
+        assert!(!gp.push(&[0.5, 0.5], 2.0));
+        assert_eq!(gp.len(), 1);
+        let p = gp.predict(&[vec![0.5, 0.5]]);
+        assert!((p.mean[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn score_gain_formula() {
+        let mut rng = Rng::new(10);
+        let (x, y) = toy(&mut rng, 6, 2);
+        let mut gp = build(&x, &y, GpHyper::default());
+        let cand: Vec<f64> = vec![0.2, 0.8, 0.9, 0.1];
+        let mut ws = ScoreWorkspace::default();
+        gp.score_into(&cand, 2, 1.5, 0.7, &mut ws);
+        for j in 0..2 {
+            let want = (ws.mean[j] + 1.5 * ws.std[j]) - 0.7;
+            assert_eq!(ws.gain[j].to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn clear_then_reuse() {
+        let mut gp = IncrementalGp::new(GpHyper::default());
+        assert!(gp.push(&[0.1], 0.0));
+        gp.clear();
+        assert!(gp.is_empty());
+        // Dimension can change after clear.
+        assert!(gp.push(&[0.1, 0.2, 0.3], 1.0));
+        assert_eq!(gp.total(), 1);
+    }
+}

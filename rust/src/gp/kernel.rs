@@ -1,0 +1,302 @@
+//! Covariance kernels and hyperparameters for the surrogate subsystem.
+//!
+//! Every surrogate implementation — the incremental engine model
+//! ([`super::incremental`]), the exact oracle ([`super::native`]) and the
+//! AOT HLO artifact (`runtime::GpSurrogate`) — is parameterised by the
+//! same [`GpHyper`] value, so kernel choice, lengthscale and the
+//! conditioning-window size can never silently disagree between paths.
+//!
+//! Kernels are isotropic (functions of squared distance only), exposed
+//! two ways: a [`Kernel`] trait object for extensibility, and the
+//! enum-dispatched [`eval_sqdist`] used on hot paths (no vtable call).
+
+use crate::util::linalg::{chol_packed, packed_idx, solve_lower_packed_inplace, sqdist};
+
+/// Conditioning-window bound shared with the AOT artifact: the HLO graph
+/// is compiled for exactly this many (padded/masked) history slots — see
+/// `N_PAD` in `python/compile/model.py`. Native paths default to the same
+/// window so the artifact and oracle stay interchangeable.
+pub const ARTIFACT_MAX_HISTORY: usize = 64;
+
+/// Which covariance kernel the surrogate uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Squared-exponential: `sv * exp(-d² / 2ℓ²)`. The only kernel the
+    /// AOT HLO artifact implements (L1 Pallas RBF kernel).
+    Rbf,
+    /// Matérn-5/2: `sv * (1 + s + s²/3) * exp(-s)`, `s = √5·d/ℓ`. Native
+    /// paths only; rougher sample paths than RBF.
+    Matern52,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Rbf => "rbf",
+            KernelKind::Matern52 => "matern52",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s.to_lowercase().as_str() {
+            "rbf" | "se" | "squared-exponential" | "gaussian" => Some(KernelKind::Rbf),
+            "matern52" | "matern-5/2" | "matern" | "m52" => Some(KernelKind::Matern52),
+            _ => None,
+        }
+    }
+
+    /// Trait-object view (for generic code; hot paths use [`eval_sqdist`]).
+    pub fn kernel(self) -> &'static dyn Kernel {
+        match self {
+            KernelKind::Rbf => &RbfKernel,
+            KernelKind::Matern52 => &Matern52Kernel,
+        }
+    }
+
+    pub fn all() -> [KernelKind; 2] {
+        [KernelKind::Rbf, KernelKind::Matern52]
+    }
+}
+
+/// GP hyperparameters (fixed per tuning run, as in the paper).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpHyper {
+    /// Lengthscale in normalised [0,1] input space.
+    pub lengthscale: f64,
+    /// Signal variance (y is standardised, so ~1).
+    pub signal_var: f64,
+    /// Observation noise variance.
+    pub noise_var: f64,
+    /// Covariance kernel.
+    pub kernel: KernelKind,
+    /// Most recent/best history points the surrogate conditions on. The
+    /// AOT artifact is compiled for at most [`ARTIFACT_MAX_HISTORY`];
+    /// `runtime::GpSurrogate` rejects hypers whose window exceeds its
+    /// compiled `n_pad`, so native and artifact paths cannot drift apart.
+    pub max_history: usize,
+}
+
+impl Default for GpHyper {
+    fn default() -> Self {
+        // noise_var matches the AOT artifact's conditioning floor (the
+        // graph clamps nv to >= 1e-3 — see python/compile/model.py), so
+        // the native oracle and the HLO path solve the same system.
+        GpHyper {
+            lengthscale: 0.2,
+            signal_var: 1.0,
+            noise_var: 1e-3,
+            kernel: KernelKind::Rbf,
+            max_history: ARTIFACT_MAX_HISTORY,
+        }
+    }
+}
+
+/// An isotropic covariance function.
+pub trait Kernel {
+    /// Covariance as a function of *squared* euclidean distance.
+    fn from_sqdist(&self, d2: f64, h: &GpHyper) -> f64;
+
+    /// Covariance between two points.
+    fn eval(&self, a: &[f64], b: &[f64], h: &GpHyper) -> f64 {
+        self.from_sqdist(sqdist(a, b), h)
+    }
+
+    /// `k(x, x)` — the prior variance at any point.
+    fn diag(&self, h: &GpHyper) -> f64 {
+        h.signal_var
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Squared-exponential kernel.
+pub struct RbfKernel;
+
+impl Kernel for RbfKernel {
+    #[inline]
+    fn from_sqdist(&self, d2: f64, h: &GpHyper) -> f64 {
+        h.signal_var * (-0.5 * d2 / (h.lengthscale * h.lengthscale)).exp()
+    }
+
+    fn name(&self) -> &'static str {
+        KernelKind::Rbf.name()
+    }
+}
+
+/// Matérn-5/2 kernel.
+pub struct Matern52Kernel;
+
+impl Kernel for Matern52Kernel {
+    #[inline]
+    fn from_sqdist(&self, d2: f64, h: &GpHyper) -> f64 {
+        let s = (5.0 * d2.max(0.0)).sqrt() / h.lengthscale;
+        h.signal_var * (1.0 + s + s * s / 3.0) * (-s).exp()
+    }
+
+    fn name(&self) -> &'static str {
+        KernelKind::Matern52.name()
+    }
+}
+
+/// Enum-dispatched kernel evaluation from squared distance — the form the
+/// hot paths use so the compiler can inline per-kind (no vtable).
+#[inline]
+pub fn eval_sqdist(kind: KernelKind, d2: f64, h: &GpHyper) -> f64 {
+    match kind {
+        KernelKind::Rbf => RbfKernel.from_sqdist(d2, h),
+        KernelKind::Matern52 => Matern52Kernel.from_sqdist(d2, h),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lengthscale selection by log marginal likelihood.
+// ---------------------------------------------------------------------------
+
+/// Candidate lengthscales for [`select_lengthscale`] (unit-cube inputs, so
+/// this brackets "almost white" to "almost linear").
+pub const LENGTHSCALE_GRID: [f64; 6] = [0.05, 0.1, 0.2, 0.3, 0.5, 0.8];
+
+/// Log marginal likelihood `log p(y | X, hyper)` of the exact GP:
+/// `-½ yᵀK⁻¹y − Σᵢ log Lᵢᵢ − (n/2) log 2π`. `None` if the kernel matrix
+/// is not positive definite or the data is empty.
+pub fn log_marginal_likelihood(x: &[Vec<f64>], y: &[f64], hyper: &GpHyper) -> Option<f64> {
+    let n = x.len();
+    if n == 0 || n != y.len() {
+        return None;
+    }
+    let mut l = vec![0.0; n * (n + 1) / 2];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut v = eval_sqdist(hyper.kernel, sqdist(&x[i], &x[j]), hyper);
+            if i == j {
+                v += hyper.noise_var;
+            }
+            l[packed_idx(i, j)] = v;
+        }
+    }
+    if !chol_packed(&mut l, n) {
+        return None;
+    }
+    // yᵀK⁻¹y = ‖L⁻¹y‖², so a single forward solve suffices.
+    let mut a = y.to_vec();
+    solve_lower_packed_inplace(&l, n, &mut a);
+    let quad: f64 = a.iter().map(|v| v * v).sum();
+    let logdet: f64 = (0..n).map(|i| l[packed_idx(i, i)].ln()).sum();
+    Some(-0.5 * quad - logdet - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln())
+}
+
+/// Pick the [`LENGTHSCALE_GRID`] lengthscale maximising the log marginal
+/// likelihood on `(x, y)`, holding every other hyperparameter fixed.
+/// Returns `base` unchanged if no grid point yields a PD kernel matrix.
+pub fn select_lengthscale(x: &[Vec<f64>], y: &[f64], base: GpHyper) -> GpHyper {
+    let mut best = base;
+    let mut best_lml = f64::NEG_INFINITY;
+    for &ls in &LENGTHSCALE_GRID {
+        let h = GpHyper { lengthscale: ls, ..base };
+        if let Some(v) = log_marginal_likelihood(x, y, &h) {
+            if v > best_lml {
+                best_lml = v;
+                best = h;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_matches_closed_form() {
+        let h = GpHyper { lengthscale: 0.5, signal_var: 2.0, ..Default::default() };
+        let a = [0.0, 0.0];
+        let b = [0.3, 0.0];
+        let want = 2.0 * f64::exp(-0.5 * 0.09 / 0.25);
+        assert!((RbfKernel.eval(&a, &b, &h) - want).abs() < 1e-15);
+        assert!((eval_sqdist(KernelKind::Rbf, 0.09, &h) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn matern_matches_closed_form() {
+        let h = GpHyper { lengthscale: 0.4, signal_var: 1.5, ..Default::default() };
+        let r: f64 = 0.25;
+        let s = 5.0f64.sqrt() * r / 0.4;
+        let want = 1.5 * (1.0 + s + s * s / 3.0) * (-s).exp();
+        assert!((eval_sqdist(KernelKind::Matern52, r * r, &h) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kernels_peak_at_zero_and_decay() {
+        for kind in KernelKind::all() {
+            let h = GpHyper::default();
+            let at0 = eval_sqdist(kind, 0.0, &h);
+            assert!((at0 - h.signal_var).abs() < 1e-15, "{}: k(0)={at0}", kind.name());
+            assert!((kind.kernel().diag(&h) - h.signal_var).abs() < 1e-15);
+            let mut prev = at0;
+            for i in 1..20 {
+                let d = i as f64 * 0.1;
+                let v = eval_sqdist(kind, d * d, &h);
+                assert!(v < prev, "{} not decreasing at d={d}", kind.name());
+                assert!(v > 0.0);
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for kind in KernelKind::all() {
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::parse("matern-5/2"), Some(KernelKind::Matern52));
+        assert_eq!(KernelKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn lml_prefers_the_generating_lengthscale_regime() {
+        // Smooth, slowly-varying data: a long lengthscale must beat the
+        // near-white 0.05 one.
+        let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64 / 19.0]).collect();
+        let y: Vec<f64> = x.iter().map(|p| p[0] - 0.5).collect();
+        let h = GpHyper { noise_var: 1e-2, ..Default::default() };
+        let smooth = log_marginal_likelihood(&x, &y, &GpHyper { lengthscale: 0.8, ..h }).unwrap();
+        let rough = log_marginal_likelihood(&x, &y, &GpHyper { lengthscale: 0.05, ..h }).unwrap();
+        assert!(smooth > rough, "smooth {smooth} vs rough {rough}");
+    }
+
+    #[test]
+    fn select_lengthscale_is_argmax_over_grid() {
+        let x: Vec<Vec<f64>> = (0..15).map(|i| vec![(i as f64 * 0.618) % 1.0]).collect();
+        let y: Vec<f64> = x.iter().map(|p| (4.0 * p[0]).sin()).collect();
+        for kind in KernelKind::all() {
+            let base = GpHyper { kernel: kind, ..Default::default() };
+            let picked = select_lengthscale(&x, &y, base);
+            assert!(LENGTHSCALE_GRID.contains(&picked.lengthscale));
+            let best = log_marginal_likelihood(&x, &y, &picked).unwrap();
+            for &ls in &LENGTHSCALE_GRID {
+                let v = log_marginal_likelihood(&x, &y, &GpHyper { lengthscale: ls, ..base })
+                    .unwrap();
+                assert!(v <= best + 1e-12, "{}: ls {ls} beats selected", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn select_lengthscale_preserves_other_hypers() {
+        let x = vec![vec![0.1], vec![0.9]];
+        let y = vec![0.0, 1.0];
+        let base = GpHyper {
+            signal_var: 3.0,
+            noise_var: 0.2,
+            kernel: KernelKind::Matern52,
+            max_history: 32,
+            ..Default::default()
+        };
+        let picked = select_lengthscale(&x, &y, base);
+        assert_eq!(picked.signal_var, 3.0);
+        assert_eq!(picked.noise_var, 0.2);
+        assert_eq!(picked.kernel, KernelKind::Matern52);
+        assert_eq!(picked.max_history, 32);
+    }
+}

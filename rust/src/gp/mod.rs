@@ -1,14 +1,44 @@
-//! Gaussian-process surrogate + acquisition for the BO engine.
+//! The surrogate subsystem: kernels, the incremental engine model, the
+//! exact oracle, and the surrogate abstraction the BO engine scores
+//! through.
 //!
-//! Production path: the AOT-compiled HLO artifact (`runtime::GpArtifact`),
-//! with the L1 Pallas RBF kernel inside. Oracle/fallback path: the exact
-//! native implementation in `native`. Both implement `Surrogate`, so the
-//! BO engine is generic over them and the two are cross-checked in
-//! integration tests.
+//! Four roles, four homes:
+//!
+//! - [`kernel`] — covariance kernels (RBF, Matérn-5/2) behind the
+//!   [`Kernel`] trait, the shared [`GpHyper`] hyperparameter bundle
+//!   (kernel kind, lengthscale, noise, **conditioning window**), and
+//!   log-marginal-likelihood lengthscale selection. Every surrogate path
+//!   is parameterised by the same `GpHyper`, so the native and artifact
+//!   stacks cannot silently disagree on kernel or window.
+//! - [`incremental`] — [`IncrementalGp`], the persistent model the BO
+//!   engine keeps across the run: O(n²) rank-1 Cholesky append per
+//!   `tell`, exact extend/retract for constant-liar fantasies per `ask`,
+//!   and a zero-allocation blocked scoring path over the candidate pool.
+//! - [`native`] — [`NativeGp`], the exact from-scratch solve. It is the
+//!   *correctness oracle*: the incremental model reproduces it bit-for-bit
+//!   (pinned by `rust/tests/surrogate_incremental.rs`) and the AOT HLO
+//!   artifact is validated against it (`rust/tests/artifact_gp.rs`).
+//! - `runtime::gp` — the AOT-compiled HLO artifact (L2 JAX graph with the
+//!   L1 Pallas RBF kernel) executed via PJRT; the production scoring path
+//!   when artifacts are built.
+//!
+//! The [`Surrogate`] trait is the engine-facing seam. Implementations
+//! that refit in one fused call (the HLO artifact) expose `fit_score`;
+//! implementations backed by the native stack opt into the engine's
+//! incremental session via [`Surrogate::use_engine_incremental`], in
+//! which case the engine drives its own [`IncrementalGp`] with the same
+//! `GpHyper` and `fit_score` is bypassed on the hot path.
 
+pub mod incremental;
+pub mod kernel;
 pub mod native;
 
-pub use native::{GpHyper, NativeGp, Posterior};
+pub use incremental::{IncrementalGp, ScoreWorkspace};
+pub use kernel::{
+    eval_sqdist, select_lengthscale, GpHyper, Kernel, KernelKind, ARTIFACT_MAX_HISTORY,
+    LENGTHSCALE_GRID,
+};
+pub use native::{NativeGp, Posterior};
 
 /// A surrogate model the BO engine can query.
 pub trait Surrogate {
@@ -26,6 +56,15 @@ pub trait Surrogate {
         acq_alpha: f64,
         y_best: f64,
     ) -> anyhow::Result<Scores>;
+
+    /// Whether the BO engine should bypass `fit_score` and drive its own
+    /// persistent [`IncrementalGp`] (built from the same [`GpHyper`] it
+    /// would pass here). True for the native stack, where refitting from
+    /// scratch every ask wastes O(n³); false for the AOT artifact, whose
+    /// compiled graph performs the whole fit+score in one fused call.
+    fn use_engine_incremental(&self) -> bool {
+        false
+    }
 }
 
 /// Posterior + acquisition at candidate points.
@@ -36,7 +75,29 @@ pub struct Scores {
     pub gain: Vec<f64>,
 }
 
-/// Surrogate backed by the exact native GP.
+fn native_fit_score(
+    x: &[Vec<f64>],
+    y: &[f64],
+    cand: &[Vec<f64>],
+    hyper: GpHyper,
+    acq_alpha: f64,
+    y_best: f64,
+) -> anyhow::Result<Scores> {
+    let gp = NativeGp::fit(x, y, hyper)
+        .ok_or_else(|| anyhow::anyhow!("kernel matrix not positive definite"))?;
+    let post = gp.predict(cand);
+    let gain = post
+        .mean
+        .iter()
+        .zip(&post.std)
+        .map(|(m, s)| (m + acq_alpha * s) - y_best)
+        .collect();
+    Ok(Scores { mean: post.mean, std: post.std, gain })
+}
+
+/// Surrogate backed by the native GP stack. The engine runs this through
+/// its incremental session; `fit_score` remains available as the exact
+/// scratch-refit entry point (benches, oracle comparisons).
 #[derive(Default)]
 pub struct NativeSurrogate;
 
@@ -50,16 +111,33 @@ impl Surrogate for NativeSurrogate {
         acq_alpha: f64,
         y_best: f64,
     ) -> anyhow::Result<Scores> {
-        let gp = NativeGp::fit(x, y, hyper)
-            .ok_or_else(|| anyhow::anyhow!("kernel matrix not positive definite"))?;
-        let post = gp.predict(cand);
-        let gain = post
-            .mean
-            .iter()
-            .zip(&post.std)
-            .map(|(m, s)| (m + acq_alpha * s) - y_best)
-            .collect();
-        Ok(Scores { mean: post.mean, std: post.std, gain })
+        native_fit_score(x, y, cand, hyper, acq_alpha, y_best)
+    }
+
+    fn use_engine_incremental(&self) -> bool {
+        true
+    }
+}
+
+/// The pre-refactor reference path: same math as [`NativeSurrogate`] but
+/// opting *out* of the engine's incremental session, so every ask refits
+/// the exact GP from scratch through `fit_score`. Exists for the
+/// serial-trajectory equivalence test (incremental and scratch engines
+/// must propose identical configurations) and as a debugging fallback.
+#[derive(Default)]
+pub struct ExactRefitSurrogate;
+
+impl Surrogate for ExactRefitSurrogate {
+    fn fit_score(
+        &mut self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        cand: &[Vec<f64>],
+        hyper: GpHyper,
+        acq_alpha: f64,
+        y_best: f64,
+    ) -> anyhow::Result<Scores> {
+        native_fit_score(x, y, cand, hyper, acq_alpha, y_best)
     }
 }
 
@@ -82,5 +160,26 @@ mod tests {
             let want = scores.mean[i] + scores.std[i] - 1.0;
             assert!((scores.gain[i] - want).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn exact_refit_matches_native_surrogate_bitwise() {
+        let x = vec![vec![0.2, 0.3], vec![0.7, 0.6], vec![0.4, 0.9]];
+        let y = vec![0.1, 0.9, -0.4];
+        let cand = vec![vec![0.5, 0.5], vec![0.1, 0.8]];
+        let a = NativeSurrogate.fit_score(&x, &y, &cand, GpHyper::default(), 1.5, 0.9).unwrap();
+        let b =
+            ExactRefitSurrogate.fit_score(&x, &y, &cand, GpHyper::default(), 1.5, 0.9).unwrap();
+        for i in 0..cand.len() {
+            assert_eq!(a.mean[i].to_bits(), b.mean[i].to_bits());
+            assert_eq!(a.std[i].to_bits(), b.std[i].to_bits());
+            assert_eq!(a.gain[i].to_bits(), b.gain[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn incremental_opt_in_flags() {
+        assert!(NativeSurrogate.use_engine_incremental());
+        assert!(!ExactRefitSurrogate.use_engine_incremental());
     }
 }

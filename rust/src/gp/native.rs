@@ -1,35 +1,17 @@
-//! Native-Rust Gaussian process (exact, Cholesky-based).
+//! Native-Rust Gaussian process (exact, from-scratch Cholesky).
 //!
-//! Two jobs:
-//!  1. **Correctness oracle** for the AOT HLO artifact: integration tests
-//!     compare the artifact's CG-based posterior against this exact solve.
-//!  2. **Fallback surrogate** for the BO engine when artifacts are absent
-//!     (e.g. unit tests, or a user running without `make artifacts`).
+//! Role in the surrogate subsystem: the **correctness oracle**. The
+//! incremental engine model (`gp::incremental`) must reproduce this
+//! posterior bit-for-bit, and integration tests compare the AOT HLO
+//! artifact's posterior against this exact solve. It also remains the
+//! scratch-refit surrogate behind [`crate::gp::ExactRefitSurrogate`].
 //!
-//! The hot path in production is the HLO artifact (see `runtime::gp`);
-//! this implementation is deliberately simple and allocation-heavy.
+//! This implementation is deliberately simple and allocation-heavy — it
+//! is the reference, not the hot path (that is `gp::incremental` for the
+//! native stack and `runtime::gp` for the artifact stack).
 
+use super::kernel::{eval_sqdist, GpHyper};
 use crate::util::linalg::{cholesky, solve_lower, solve_lower_t, sqdist, Mat};
-
-/// GP hyperparameters (fixed per tuning run, as in the paper).
-#[derive(Debug, Clone, Copy)]
-pub struct GpHyper {
-    /// RBF lengthscale in normalised [0,1] input space.
-    pub lengthscale: f64,
-    /// Signal variance (y is standardised, so ~1).
-    pub signal_var: f64,
-    /// Observation noise variance.
-    pub noise_var: f64,
-}
-
-impl Default for GpHyper {
-    fn default() -> Self {
-        // noise_var matches the AOT artifact's conditioning floor (the
-        // graph clamps nv to >= 1e-3 — see python/compile/model.py), so
-        // the native oracle and the HLO path solve the same system.
-        GpHyper { lengthscale: 0.2, signal_var: 1.0, noise_var: 1e-3 }
-    }
-}
 
 /// Posterior over candidate points.
 #[derive(Debug, Clone)]
@@ -46,8 +28,8 @@ pub struct NativeGp {
     hyper: GpHyper,
 }
 
-fn rbf(a: &[f64], b: &[f64], h: &GpHyper) -> f64 {
-    h.signal_var * (-0.5 * sqdist(a, b) / (h.lengthscale * h.lengthscale)).exp()
+fn kern(a: &[f64], b: &[f64], h: &GpHyper) -> f64 {
+    eval_sqdist(h.kernel, sqdist(a, b), h)
 }
 
 impl NativeGp {
@@ -61,7 +43,7 @@ impl NativeGp {
         let mut k = Mat::zeros(n, n);
         for i in 0..n {
             for j in 0..n {
-                k[(i, j)] = rbf(&x[i], &x[j], &hyper);
+                k[(i, j)] = kern(&x[i], &x[j], &hyper);
             }
             k[(i, i)] += hyper.noise_var;
         }
@@ -76,7 +58,7 @@ impl NativeGp {
         let mut mean = Vec::with_capacity(cand.len());
         let mut std = Vec::with_capacity(cand.len());
         for c in cand {
-            let kc: Vec<f64> = (0..n).map(|i| rbf(c, &self.x[i], &self.hyper)).collect();
+            let kc: Vec<f64> = (0..n).map(|i| kern(c, &self.x[i], &self.hyper)).collect();
             let mu: f64 = kc.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
             // var = k(c,c) - kc^T K^-1 kc  via v = L^-1 kc
             let v = solve_lower(&self.l, &kc);
@@ -136,7 +118,7 @@ mod tests {
     #[test]
     fn hand_computed_single_point_posterior() {
         // n=1: mu(c) = k(c,x) * y / (sv + nv); var = sv - k^2/(sv+nv).
-        let h = GpHyper { lengthscale: 0.5, signal_var: 2.0, noise_var: 0.5 };
+        let h = GpHyper { lengthscale: 0.5, signal_var: 2.0, noise_var: 0.5, ..Default::default() };
         let gp = NativeGp::fit(&[vec![0.0]], &[3.0], h).unwrap();
         let c = vec![0.3];
         let k = 2.0 * f64::exp(-0.5 * 0.09 / 0.25);

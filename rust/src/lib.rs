@@ -32,6 +32,35 @@
 //! cap, wall-clock limit, plateau stop), keeping one trial in flight per
 //! evaluator and streaming completions through a per-trial callback.
 //!
+//! # The surrogate subsystem
+//!
+//! The GP surrogate is the numeric hot path of the whole system (the
+//! paper's central result is that BO wins on most models), so it is its
+//! own subsystem under [`gp`], with three interchangeable roles driven by
+//! one shared hyperparameter bundle ([`gp::GpHyper`]: kernel kind,
+//! lengthscale, noise, conditioning window):
+//!
+//! - **Incremental engine model** ([`gp::IncrementalGp`]) — the persistent
+//!   model `BayesOpt` keeps across a run. `tell` folds an observation in
+//!   as an O(n²) rank-1 Cholesky append; batched `ask`s condition on
+//!   in-flight trials by extending the factor with constant-liar
+//!   fantasies and retracting them after scoring; the candidate pool is
+//!   scored through one blocked cross-kernel panel + multi-RHS triangular
+//!   solve with zero heap allocation ([`gp::ScoreWorkspace`]).
+//! - **Exact oracle** ([`gp::NativeGp`]) — the from-scratch reference
+//!   solve. The incremental model reproduces it bit-for-bit (pinned by
+//!   `rust/tests/surrogate_incremental.rs`); the scratch-refit engine
+//!   path survives as [`gp::ExactRefitSurrogate`].
+//! - **AOT artifact** (`runtime::GpSurrogate`) — the compiled HLO graph
+//!   (L2 JAX + L1 Pallas RBF) executed via PJRT; RBF-only and compiled
+//!   for a fixed window, and it rejects hypers outside that contract so
+//!   the native and artifact paths can never silently disagree.
+//!
+//! Kernels (RBF, Matérn-5/2) live behind [`gp::Kernel`] /
+//! [`gp::KernelKind`] with log-marginal-likelihood lengthscale selection
+//! in [`gp::select_lengthscale`]; the packed-Cholesky/trsm/gemm kernel
+//! set backing it all is in [`util::linalg`].
+//!
 //! ## Migrating from propose/observe
 //!
 //! Pre-redesign code looked like `let cfg = tuner.propose(); ...;

@@ -9,7 +9,7 @@
 use anyhow::{Context, Result};
 
 use super::{literal_f32, Runtime};
-use crate::gp::{GpHyper, Scores, Surrogate};
+use crate::gp::{GpHyper, KernelKind, Scores, Surrogate};
 
 pub struct GpSurrogate {
     exe: xla::PjRtLoadedExecutable,
@@ -51,6 +51,22 @@ impl GpSurrogate {
         acq_alpha: f64,
         y_best: f64,
     ) -> Result<Scores> {
+        // The artifact is monomorphic over the shared GpHyper contract:
+        // its graph hard-codes the RBF kernel and N_PAD history slots, so
+        // reject hypers the compiled graph cannot represent instead of
+        // silently computing something else than the native stack would.
+        anyhow::ensure!(
+            hyper.kernel == KernelKind::Rbf,
+            "AOT GP artifact implements only the RBF kernel, got {}",
+            hyper.kernel.name()
+        );
+        anyhow::ensure!(
+            hyper.max_history <= self.n_pad,
+            "surrogate window {} exceeds artifact N_PAD {}; recompile the artifact or \
+             narrow the window (GpHyper.max_history)",
+            hyper.max_history,
+            self.n_pad
+        );
         let n = x.len();
         anyhow::ensure!(n > 0, "empty history");
         anyhow::ensure!(n <= self.n_pad, "history {n} exceeds artifact N_PAD {}", self.n_pad);

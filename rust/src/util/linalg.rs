@@ -1,8 +1,32 @@
-//! Small dense linear algebra for the native Gaussian process
-//! (`gp::native`) — the correctness oracle for the AOT HLO artifact and
-//! the small-history fallback path. Row-major `Mat` with Cholesky and
-//! triangular solves; n stays ≤ a few hundred here, so simple loops are
-//! fine (the hot path runs in XLA, not here).
+//! Small dense linear algebra for the surrogate subsystem.
+//!
+//! Two tiers live here:
+//!
+//! 1. The original row-major [`Mat`] with allocating Cholesky and
+//!    triangular solves — used by the exact oracle (`gp::native`), where
+//!    clarity beats speed.
+//! 2. A packed-lower kernel set with caller-provided storage — in-place
+//!    packed Cholesky ([`chol_packed`]), O(n²) factor *append*
+//!    ([`chol_append_packed`]), in-place triangular solves and a
+//!    multi-RHS forward solve ([`trsm_lower_packed`]). These back the
+//!    incremental GP (`gp::incremental`) and are written so the BO
+//!    scoring loop performs zero heap allocation. Two further kernels
+//!    round out the set ahead of their callers: the classic rank-1
+//!    *update* ([`chol_rank1_update_packed`], for covariance bumps that
+//!    cannot be expressed as appends) and a gemm-style block multiply
+//!    ([`gemm_nt`], for panel builds that do not need the oracle's exact
+//!    operation order).
+//!
+//! Lower-triangular factors are stored row-major *packed*: entry `(i, j)`
+//! with `j <= i` lives at [`packed_idx`]`(i, j)`; appending a row appends
+//! `i + 1` contiguous values, which is what makes the rank-1 append cheap.
+//!
+//! Bit-compatibility note: the packed routines perform the same
+//! floating-point operations in the same order as their `Mat`
+//! counterparts (ascending-index accumulation), so an incrementally
+//! maintained factor is *bitwise* equal to a from-scratch `cholesky` of
+//! the same matrix. Tests and the BO trajectory-equivalence suite rely on
+//! this; preserve the accumulation order when touching these loops.
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -166,6 +190,179 @@ pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 
+// ---------------------------------------------------------------------------
+// Packed-lower kernel set (zero-allocation tier).
+// ---------------------------------------------------------------------------
+
+/// Index of entry `(i, j)`, `j <= i`, in row-major packed-lower storage.
+#[inline]
+pub fn packed_idx(i: usize, j: usize) -> usize {
+    debug_assert!(j <= i);
+    i * (i + 1) / 2 + j
+}
+
+/// Number of stored entries of an n×n packed-lower factor.
+#[inline]
+pub fn packed_len(n: usize) -> usize {
+    n * (n + 1) / 2
+}
+
+/// In-place packed-lower Cholesky: `a` holds the lower triangle of an SPD
+/// matrix (row-major packed, [`packed_len`]`(n)` entries); on success it
+/// holds L with A = L Lᵀ. Returns false (contents unspecified) if a pivot
+/// is non-positive. Same operation order as [`cholesky`].
+pub fn chol_packed(a: &mut [f64], n: usize) -> bool {
+    assert_eq!(a.len(), packed_len(n), "packed length mismatch");
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[packed_idx(i, j)];
+            for t in 0..j {
+                s -= a[packed_idx(i, t)] * a[packed_idx(j, t)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return false;
+                }
+                a[packed_idx(i, j)] = s.sqrt();
+            } else {
+                a[packed_idx(i, j)] = s / a[packed_idx(j, j)];
+            }
+        }
+    }
+    true
+}
+
+/// Append one row to a packed-lower Cholesky factor in O(n²): given the
+/// factor L of the n×n matrix K, the covariance vector `k = K[n][..n]` of
+/// a new point against the old ones, and its diagonal `d = K[n][n]`,
+/// extend `l` in place to the factor of the (n+1)×(n+1) matrix.
+///
+/// `k` is consumed as workspace (it ends up holding the new row of L).
+/// No allocation happens when `l` has spare capacity. Returns false and
+/// leaves `l` untouched if the extended matrix is not positive definite.
+///
+/// The new row is exactly the forward-substitution `w = L⁻¹k` plus pivot
+/// `√(d − wᵀw)` — the same operations, in the same order, that a
+/// from-scratch [`chol_packed`] of the extended matrix would perform, so
+/// repeated appends reproduce the batch factor bit-for-bit.
+pub fn chol_append_packed(l: &mut Vec<f64>, n: usize, k: &mut [f64], d: f64) -> bool {
+    assert_eq!(l.len(), packed_len(n), "packed length mismatch");
+    assert_eq!(k.len(), n, "new-row covariance length mismatch");
+    for i in 0..n {
+        let mut s = k[i];
+        for t in 0..i {
+            s -= l[packed_idx(i, t)] * k[t];
+        }
+        k[i] = s / l[packed_idx(i, i)];
+    }
+    let mut piv = d;
+    for w in k.iter() {
+        piv -= w * w;
+    }
+    if piv <= 0.0 || !piv.is_finite() {
+        return false;
+    }
+    l.extend_from_slice(k);
+    l.push(piv.sqrt());
+    true
+}
+
+/// Rank-1 *update* of a packed-lower Cholesky factor: L ← chol(L Lᵀ + v vᵀ)
+/// in O(n²) via hyperbolic-rotation-free Givens sweeps. `v` is consumed as
+/// workspace. (The incremental GP appends rows instead — see
+/// [`chol_append_packed`] — but covariance bumps such as trust-region
+/// reweighting need the classic update form.)
+pub fn chol_rank1_update_packed(l: &mut [f64], n: usize, v: &mut [f64]) {
+    assert_eq!(l.len(), packed_len(n), "packed length mismatch");
+    assert_eq!(v.len(), n, "update vector length mismatch");
+    for i in 0..n {
+        let di = packed_idx(i, i);
+        let lii = l[di];
+        let r = (lii * lii + v[i] * v[i]).sqrt();
+        let c = r / lii;
+        let s = v[i] / lii;
+        l[di] = r;
+        for k in i + 1..n {
+            let ki = packed_idx(k, i);
+            l[ki] = (l[ki] + s * v[k]) / c;
+            v[k] = c * v[k] - s * l[ki];
+        }
+    }
+}
+
+/// In-place forward substitution on packed L: overwrite `x` with L⁻¹x.
+pub fn solve_lower_packed_inplace(l: &[f64], n: usize, x: &mut [f64]) {
+    assert_eq!(l.len(), packed_len(n), "packed length mismatch");
+    assert_eq!(x.len(), n, "rhs length mismatch");
+    for i in 0..n {
+        let mut s = x[i];
+        for t in 0..i {
+            s -= l[packed_idx(i, t)] * x[t];
+        }
+        x[i] = s / l[packed_idx(i, i)];
+    }
+}
+
+/// In-place back substitution on packed L: overwrite `x` with L⁻ᵀx.
+pub fn solve_lower_t_packed_inplace(l: &[f64], n: usize, x: &mut [f64]) {
+    assert_eq!(l.len(), packed_len(n), "packed length mismatch");
+    assert_eq!(x.len(), n, "rhs length mismatch");
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for t in i + 1..n {
+            s -= l[packed_idx(t, i)] * x[t];
+        }
+        x[i] = s / l[packed_idx(i, i)];
+    }
+}
+
+/// Multi-RHS forward substitution (trsm): overwrite the n×c row-major
+/// panel `b` with L⁻¹B, sweeping whole rows so the c right-hand sides are
+/// solved together cache-friendly (this is how 512 candidates are scored
+/// in one pass instead of 512 independent [`solve_lower`] calls). Per
+/// column, the operation order matches [`solve_lower`] exactly.
+pub fn trsm_lower_packed(l: &[f64], n: usize, b: &mut [f64], c: usize) {
+    assert_eq!(l.len(), packed_len(n), "packed length mismatch");
+    assert_eq!(b.len(), n * c, "panel shape mismatch");
+    for i in 0..n {
+        for t in 0..i {
+            let a = l[packed_idx(i, t)];
+            let (head, tail) = b.split_at_mut(i * c);
+            let bt = &head[t * c..(t + 1) * c];
+            let bi = &mut tail[..c];
+            for (x, y) in bi.iter_mut().zip(bt) {
+                *x -= a * y;
+            }
+        }
+        let inv = l[packed_idx(i, i)];
+        for x in &mut b[i * c..(i + 1) * c] {
+            *x /= inv;
+        }
+    }
+}
+
+/// Gemm-style block multiply into a caller-provided buffer:
+/// `out (m×n) = A · Bᵀ` with A m×k and B n×k, all row-major — i.e.
+/// `out[i][j] = aᵢ · bⱼ`. Tiled over B rows so the inner dot products
+/// stream from cache; no allocation.
+pub fn gemm_nt(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, out: &mut [f64]) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), n * k, "B shape mismatch");
+    assert_eq!(out.len(), m * n, "out shape mismatch");
+    const TILE: usize = 64;
+    for j0 in (0..n).step_by(TILE) {
+        let j1 = (j0 + TILE).min(n);
+        for i in 0..m {
+            let ar = &a[i * k..(i + 1) * k];
+            let or = &mut out[i * n..(i + 1) * n];
+            for (j, oj) in or[j0..j1].iter_mut().enumerate() {
+                let br = &b[(j0 + j) * k..(j0 + j + 1) * k];
+                *oj = dot(ar, br);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,5 +420,171 @@ mod tests {
     fn sqdist_and_dot() {
         assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
         assert_eq!(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    // -- packed tier ---------------------------------------------------------
+
+    /// Random SPD matrix A = G Gᵀ + n·I as both Mat and packed-lower.
+    fn random_spd(rng: &mut crate::util::Rng, n: usize) -> (Mat, Vec<f64>) {
+        let mut g = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                g[(i, j)] = rng.normal();
+            }
+        }
+        let mut a = g.matmul(&g.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        let mut packed = Vec::with_capacity(packed_len(n));
+        for i in 0..n {
+            for j in 0..=i {
+                packed.push(a[(i, j)]);
+            }
+        }
+        (a, packed)
+    }
+
+    #[test]
+    fn packed_chol_bitwise_matches_mat_chol() {
+        let mut rng = crate::util::Rng::new(11);
+        for n in [1usize, 2, 5, 17] {
+            let (a, mut packed) = random_spd(&mut rng, n);
+            let l = cholesky(&a).unwrap();
+            assert!(chol_packed(&mut packed, n));
+            for i in 0..n {
+                for j in 0..=i {
+                    assert_eq!(
+                        packed[packed_idx(i, j)].to_bits(),
+                        l[(i, j)].to_bits(),
+                        "entry ({i},{j}) differs at n={n}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_append_bitwise_matches_batch() {
+        let mut rng = crate::util::Rng::new(12);
+        let n = 12;
+        let (a, mut full) = random_spd(&mut rng, n);
+        assert!(chol_packed(&mut full, n));
+        // Rebuild the same factor by appending one row at a time.
+        let mut inc: Vec<f64> = Vec::new();
+        for i in 0..n {
+            let mut k: Vec<f64> = (0..i).map(|j| a[(i, j)]).collect();
+            assert!(chol_append_packed(&mut inc, i, &mut k, a[(i, i)]));
+        }
+        assert_eq!(inc.len(), full.len());
+        for (x, y) in inc.iter().zip(&full) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn packed_append_rejects_non_pd() {
+        // Appending a duplicate of an existing noiseless row must fail.
+        let mut l: Vec<f64> = Vec::new();
+        let mut empty: [f64; 0] = [];
+        assert!(chol_append_packed(&mut l, 0, &mut empty, 1.0));
+        let before = l.clone();
+        let mut k = [1.0];
+        assert!(!chol_append_packed(&mut l, 1, &mut k, 1.0));
+        assert_eq!(l, before, "failed append must leave the factor untouched");
+    }
+
+    #[test]
+    fn rank1_update_reconstructs() {
+        let mut rng = crate::util::Rng::new(13);
+        let n = 8;
+        let (a, mut l) = random_spd(&mut rng, n);
+        assert!(chol_packed(&mut l, n));
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut w = v.clone();
+        chol_rank1_update_packed(&mut l, n, &mut w);
+        // L Lᵀ must now equal A + v vᵀ.
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = 0.0;
+                for t in 0..=j {
+                    s += l[packed_idx(i, t)] * l[packed_idx(j, t)];
+                }
+                let want = a[(i, j)] + v[i] * v[j];
+                assert!((s - want).abs() < 1e-9, "({i},{j}): {s} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_solves_match_mat_solves() {
+        let mut rng = crate::util::Rng::new(14);
+        let n = 9;
+        let (a, mut packed) = random_spd(&mut rng, n);
+        let l = cholesky(&a).unwrap();
+        assert!(chol_packed(&mut packed, n));
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+        let want_fwd = solve_lower(&l, &b);
+        let mut got = b.clone();
+        solve_lower_packed_inplace(&packed, n, &mut got);
+        for (x, y) in got.iter().zip(&want_fwd) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+
+        let want_bwd = solve_lower_t(&l, &b);
+        let mut got = b.clone();
+        solve_lower_t_packed_inplace(&packed, n, &mut got);
+        for (x, y) in got.iter().zip(&want_bwd) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn trsm_matches_per_column_solves_bitwise() {
+        let mut rng = crate::util::Rng::new(15);
+        let n = 7;
+        let c = 5;
+        let (a, mut packed) = random_spd(&mut rng, n);
+        let l = cholesky(&a).unwrap();
+        assert!(chol_packed(&mut packed, n));
+        let mut panel: Vec<f64> = (0..n * c).map(|_| rng.normal()).collect();
+        // Reference: solve each column independently through Mat solves.
+        let mut want = vec![0.0; n * c];
+        for j in 0..c {
+            let col: Vec<f64> = (0..n).map(|i| panel[i * c + j]).collect();
+            for (i, v) in solve_lower(&l, &col).into_iter().enumerate() {
+                want[i * c + j] = v;
+            }
+        }
+        trsm_lower_packed(&packed, n, &mut panel, c);
+        for (x, y) in panel.iter().zip(&want) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_matmul() {
+        let mut rng = crate::util::Rng::new(16);
+        let (m, n, k) = (6, 70, 4); // n > TILE would need a bigger case; 70 crosses one tile
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0; m * n];
+        gemm_nt(&a, m, &b, n, k, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let want = dot(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+                assert_eq!(out[i * n + j].to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_idx_layout() {
+        assert_eq!(packed_idx(0, 0), 0);
+        assert_eq!(packed_idx(1, 0), 1);
+        assert_eq!(packed_idx(1, 1), 2);
+        assert_eq!(packed_idx(3, 2), 8);
+        assert_eq!(packed_len(4), 10);
     }
 }

@@ -1,0 +1,95 @@
+//! Grid round-trip property suite for `space.rs`: for every `ParamDef` —
+//! including ranges where `(max - min)` is not a multiple of `step` —
+//! value→index→unit-cube→value is the identity, and `n_values` matches
+//! what iteration actually produces.
+
+use tftune::space::{ParamDef, SearchSpace};
+use tftune::util::prop;
+
+fn random_param(rng: &mut tftune::util::Rng, name: &str) -> ParamDef {
+    let min = prop::int_biased(rng, -100, 100);
+    let span = rng.range_i64(0, 400);
+    let step = rng.range_i64(1, 37);
+    // Deliberately allow span % step != 0: the top of the range is then
+    // unreachable and the last grid point sits below `max`.
+    ParamDef::new(name, min, min + span, step)
+}
+
+#[test]
+fn prop_value_index_unit_round_trips() {
+    prop::check("param round trips", 300, |rng| {
+        let p = random_param(rng, "p");
+        let n = p.n_values();
+        assert!(n >= 1);
+        let mut prev: Option<i64> = None;
+        for i in 0..n {
+            let v = p.value_at(i);
+            // grid values stay inside the declared range…
+            assert!(v >= p.min && v <= p.max, "{v} outside [{}, {}]", p.min, p.max);
+            // …ascend in exact step increments…
+            if let Some(pv) = prev {
+                assert_eq!(v - pv, p.step, "non-uniform step at index {i}");
+            }
+            prev = Some(v);
+            // value → index is the inverse of value_at
+            assert_eq!(((v - p.min) / p.step) as usize, i);
+            // grid values are fixed points of snap
+            assert_eq!(p.snap(v), v);
+            // value → unit cube → value is the identity
+            let u = p.to_unit(v);
+            assert!((0.0..=1.0).contains(&u), "unit coord {u} out of range");
+            assert_eq!(p.from_unit(u), v, "unit round trip broke at index {i} (u={u})");
+        }
+        // value_at clamps past the end instead of leaving the grid
+        assert_eq!(p.value_at(n), p.value_at(n - 1));
+        // the reachable top of the grid, not necessarily `max`
+        let top = p.value_at(n - 1);
+        assert!(p.max - top < p.step, "top grid value {top} leaves a full step unused");
+    });
+}
+
+#[test]
+fn prop_n_values_matches_iteration_count() {
+    prop::check("n_values vs grid iteration", 60, |rng| {
+        // Small multi-param spaces (product capped so iteration stays fast).
+        let mut params = Vec::new();
+        let dims = 1 + rng.index(3);
+        for k in 0..dims {
+            let min = prop::int_biased(rng, -20, 20);
+            let span = rng.range_i64(0, 30);
+            let step = rng.range_i64(1, 7);
+            params.push(ParamDef::new(&format!("p{k}"), min, min + span, step));
+        }
+        let space = SearchSpace::new(params);
+        let want: u128 = space.params.iter().map(|p| p.n_values() as u128).product();
+        assert_eq!(space.size(), want);
+        let all: Vec<_> = space.grid().collect();
+        assert_eq!(all.len() as u128, want, "grid iteration count != n_values product");
+        // every iterated config round-trips through the unit cube
+        for cfg in &all {
+            assert!(space.contains(cfg));
+            assert_eq!(space.from_unit(&space.to_unit(cfg)), *cfg);
+        }
+        // all configs distinct
+        let mut uniq = all.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), all.len(), "grid iterator repeated a config");
+    });
+}
+
+#[test]
+fn non_divisible_range_round_trips_exhaustively() {
+    // The satellite's named edge case, pinned concretely: 10-wide range
+    // with step 3 → grid {0, 3, 6, 9}, max 10 unreachable.
+    let p = ParamDef::new("odd", 0, 10, 3);
+    assert_eq!(p.n_values(), 4);
+    let values: Vec<i64> = (0..p.n_values()).map(|i| p.value_at(i)).collect();
+    assert_eq!(values, vec![0, 3, 6, 9]);
+    for v in values {
+        assert_eq!(p.from_unit(p.to_unit(v)), v);
+    }
+    // off-grid raw values snap to the nearest reachable point
+    assert_eq!(p.snap(10), 9);
+    assert_eq!(p.from_unit(1.0), 9);
+}

@@ -1,0 +1,228 @@
+//! The incremental surrogate contract, pinned at integration level:
+//!
+//! 1. An [`IncrementalGp`] grown by rank-1 appends produces a posterior
+//!    within 1e-9 of a from-scratch [`NativeGp::fit`] on the same data —
+//!    across random histories, dimensions, hypers and both kernels.
+//! 2. Constant-liar fantasy extend+retract is exact: the extended model
+//!    matches a scratch fit on the concatenated data, and retracting
+//!    restores the original posterior bitwise.
+//! 3. The BO engine's incremental session proposes the *same serial
+//!    trajectory* as the pre-refactor scratch-refit path
+//!    ([`ExactRefitSurrogate`]) with default hypers.
+
+use tftune::algorithms::{BayesOpt, Tuner};
+use tftune::gp::{ExactRefitSurrogate, GpHyper, IncrementalGp, KernelKind, NativeGp};
+use tftune::history::Measurement;
+use tftune::space::threading_space;
+use tftune::util::prop;
+use tftune::util::Rng;
+
+fn random_history(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let x: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|p| (7.0 * p[0]).sin() + 0.4 * p[d - 1] + 0.1 * p[0] * p[d - 1])
+        .collect();
+    (x, y)
+}
+
+fn random_hyper(rng: &mut Rng, kernel: KernelKind) -> GpHyper {
+    GpHyper {
+        lengthscale: rng.range_f64(0.08, 0.8),
+        signal_var: rng.range_f64(0.5, 2.0),
+        noise_var: rng.range_f64(1e-4, 1e-2),
+        kernel,
+        ..Default::default()
+    }
+}
+
+fn build_incremental(x: &[Vec<f64>], y: &[f64], hyper: GpHyper) -> IncrementalGp {
+    let mut gp = IncrementalGp::new(hyper);
+    for (xi, &yi) in x.iter().zip(y) {
+        assert!(gp.push(xi, yi), "rank-1 append failed");
+    }
+    gp
+}
+
+#[test]
+fn prop_rank1_append_matches_scratch_fit_both_kernels() {
+    for kernel in KernelKind::all() {
+        prop::check(&format!("incremental vs oracle ({})", kernel.name()), 40, |rng| {
+            let n = 1 + rng.index(40);
+            let d = 1 + rng.index(6);
+            let (x, y) = random_history(rng, n, d);
+            let hyper = random_hyper(rng, kernel);
+            let mut inc = build_incremental(&x, &y, hyper);
+            let oracle = NativeGp::fit(&x, &y, hyper).expect("oracle fit failed");
+            let cand: Vec<Vec<f64>> =
+                (0..24).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+            let a = inc.predict(&cand);
+            let b = oracle.predict(&cand);
+            for j in 0..cand.len() {
+                assert!(
+                    (a.mean[j] - b.mean[j]).abs() <= 1e-9,
+                    "mean diverged: {} vs {} (n={n} d={d})",
+                    a.mean[j],
+                    b.mean[j]
+                );
+                assert!(
+                    (a.std[j] - b.std[j]).abs() <= 1e-9,
+                    "std diverged: {} vs {} (n={n} d={d})",
+                    a.std[j],
+                    b.std[j]
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn prop_fantasy_extend_matches_scratch_fit_on_extended_data() {
+    for kernel in KernelKind::all() {
+        prop::check(&format!("fantasy extend vs oracle ({})", kernel.name()), 25, |rng| {
+            let n = 2 + rng.index(20);
+            let d = 1 + rng.index(4);
+            let k = 1 + rng.index(6);
+            let (x, y) = random_history(rng, n, d);
+            let hyper = random_hyper(rng, kernel);
+            let mut inc = build_incremental(&x, &y, hyper);
+
+            // Extend with k fantasies at the constant-liar value 0.
+            let mut xf = x.clone();
+            let mut yf = y.clone();
+            for _ in 0..k {
+                let f: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                assert!(inc.extend_fantasy(&f, 0.0));
+                xf.push(f);
+                yf.push(0.0);
+            }
+            let oracle = NativeGp::fit(&xf, &yf, hyper).expect("extended oracle fit failed");
+            let cand: Vec<Vec<f64>> =
+                (0..12).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+            let a = inc.predict(&cand);
+            let b = oracle.predict(&cand);
+            for j in 0..cand.len() {
+                assert!((a.mean[j] - b.mean[j]).abs() <= 1e-9);
+                assert!((a.std[j] - b.std[j]).abs() <= 1e-9);
+            }
+        });
+    }
+}
+
+#[test]
+fn prop_retract_restores_posterior_bitwise() {
+    prop::check("fantasy retract exact", 30, |rng| {
+        let n = 1 + rng.index(25);
+        let d = 1 + rng.index(5);
+        let kernel = *rng.choice(&KernelKind::all());
+        let (x, y) = random_history(rng, n, d);
+        let hyper = random_hyper(rng, kernel);
+        let mut inc = build_incremental(&x, &y, hyper);
+        let cand: Vec<Vec<f64>> =
+            (0..10).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+        let before = inc.predict(&cand);
+
+        let k = 1 + rng.index(5);
+        for _ in 0..k {
+            let f: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+            assert!(inc.extend_fantasy(&f, rng.range_f64(-1.0, 1.0)));
+        }
+        inc.retract_fantasies();
+        assert_eq!(inc.total(), n);
+        let after = inc.predict(&cand);
+        for j in 0..cand.len() {
+            assert_eq!(
+                before.mean[j].to_bits(),
+                after.mean[j].to_bits(),
+                "retract is not exact (mean, cand {j})"
+            );
+            assert_eq!(before.std[j].to_bits(), after.std[j].to_bits());
+        }
+    });
+}
+
+#[test]
+fn serial_trajectory_pinned_to_scratch_refit_reference() {
+    // The refactor must not change what BO proposes: with default hypers,
+    // the persistent-incremental engine and the pre-refactor scratch-refit
+    // path walk identical serial trajectories (same seeds, same tells),
+    // because the incremental factor and blocked scorer perform the exact
+    // oracle's floating-point operations in the exact oracle's order.
+    let space = threading_space(64, 1024, 64);
+    let target = space.to_unit(&vec![2, 36, 704, 120, 44]);
+    let objective = |cfg: &Vec<i64>| {
+        let u = space.to_unit(cfg);
+        8.0 - 8.0 * u.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+    };
+    for seed in [1u64, 23, 456] {
+        let mut inc = BayesOpt::new(space.clone(), seed);
+        let mut scratch = BayesOpt::with_surrogate(space.clone(), seed, ExactRefitSurrogate);
+        for step in 0..30 {
+            let a = inc.ask(1).pop().unwrap();
+            let b = scratch.ask(1).pop().unwrap();
+            assert_eq!(
+                a.config, b.config,
+                "seed {seed}: trajectories diverged at step {step}"
+            );
+            let v = objective(&a.config);
+            inc.tell(a.id, &Measurement::new(v));
+            scratch.tell(b.id, &Measurement::new(v));
+        }
+    }
+}
+
+#[test]
+fn batched_trajectory_pinned_to_scratch_refit_reference() {
+    // Same pin with in-flight fantasies: batched asks must also agree,
+    // since fantasy extension reproduces the scratch path's conditioning.
+    let space = threading_space(64, 1024, 64);
+    let mut inc = BayesOpt::new(space.clone(), 99);
+    let mut scratch = BayesOpt::with_surrogate(space.clone(), 99, ExactRefitSurrogate);
+    let mut pending_a = Vec::new();
+    let mut pending_b = Vec::new();
+    for round in 0..8 {
+        let batch_a = inc.ask(3);
+        let batch_b = scratch.ask(3);
+        assert_eq!(batch_a.len(), batch_b.len(), "round {round}");
+        for (a, b) in batch_a.iter().zip(&batch_b) {
+            assert_eq!(a.config, b.config, "round {round}: batch diverged");
+        }
+        pending_a.extend(batch_a);
+        pending_b.extend(batch_b);
+        // Settle the oldest half out of order, identically on both sides.
+        let settle = pending_a.len() / 2 + 1;
+        for _ in 0..settle {
+            let ta = pending_a.remove(0);
+            let tb = pending_b.remove(0);
+            let v = (ta.config[1] as f64).sin() + ta.config[0] as f64;
+            inc.tell(ta.id, &Measurement::new(v));
+            scratch.tell(tb.id, &Measurement::new(v));
+        }
+    }
+}
+
+#[test]
+fn incremental_window_overflow_matches_reference() {
+    // Past the conditioning window the set reshapes every tell (best
+    // quartile + recent remainder) and the incremental model rebuilds;
+    // proposals must still match the scratch reference exactly.
+    let space = threading_space(64, 1024, 64);
+    let window = GpHyper::default().max_history;
+    let mut inc = BayesOpt::new(space.clone(), 7);
+    let mut scratch = BayesOpt::with_surrogate(space.clone(), 7, ExactRefitSurrogate);
+    let mut rng = Rng::new(5);
+    for i in 0..window + 10 {
+        let c = space.random(&mut rng);
+        let v = (i as f64 * 0.37).sin() * 5.0;
+        inc.warm_start(&c, v);
+        scratch.warm_start(&c, v);
+    }
+    for step in 0..6 {
+        let a = inc.ask(1).pop().unwrap();
+        let b = scratch.ask(1).pop().unwrap();
+        assert_eq!(a.config, b.config, "diverged at step {step} past the window");
+        let v = (step as f64).cos();
+        inc.tell(a.id, &Measurement::new(v));
+        scratch.tell(b.id, &Measurement::new(v));
+    }
+}
