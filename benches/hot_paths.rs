@@ -2,6 +2,7 @@
 //!
 //!   - simulator evaluation (L3 substrate)
 //!   - native GP fit+score vs the AOT HLO GP via PJRT (L2+L1), by history size
+//!   - shared-surrogate tell enqueue + ask under teller contention
 //!   - BO / GA / NMS propose cost
 //!   - candidate generation + argmax
 //!   - host/target TCP round trip
@@ -11,7 +12,9 @@
 
 use tftune::algorithms::{Algorithm, BayesOpt, Tuner};
 use tftune::evaluator::{Evaluator, RemoteEvaluator, SimEvaluator};
-use tftune::gp::{GpHyper, IncrementalGp, NativeGp, NativeSurrogate, ScoreWorkspace, Surrogate};
+use tftune::gp::{
+    GpHyper, IncrementalGp, NativeGp, NativeSurrogate, ScoreWorkspace, SharedSurrogate, Surrogate,
+};
 use tftune::history::{random_history, Measurement};
 use tftune::runtime::GpSurrogate;
 use tftune::server::TargetServer;
@@ -42,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     });
 
     println!("\n== incremental surrogate subsystem, n=64 / 512 candidates ==");
-    {
+    let (r_scratch, r_append, r_score, r_fit_only, speedup) = {
         let n = 64;
         let c = 512;
         let (x, y, cand) = gp_problem(&mut rng, n, c);
@@ -91,8 +94,90 @@ fn main() -> anyhow::Result<()> {
             incremental_ns / 1e3,
             r_scratch.mean_ns / 1e3,
         );
-        write_gp_bench_json(&[&r_scratch, &r_append, &r_score, &r_fit_only], n, c, speedup)?;
-    }
+        (r_scratch, r_append, r_score, r_fit_only, speedup)
+    };
+
+    println!("\n== shared surrogate: contended tell/ask ==");
+    let (r_shared_tell, r_shared_ask) = {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let hyper = GpHyper::default();
+
+        // tell side: steady-state cost of reporting a measurement —
+        // enqueue plus the amortized reclaim of queue rows (the periodic
+        // reset). Row reclaim is per-row work a real run pays at drain
+        // time, so it belongs in the per-tell price.
+        let shared = SharedSurrogate::new(hyper);
+        let row: Vec<f64> = (0..5).map(|_| rng.f64()).collect();
+        let mut told = 0u64;
+        let r_tell = b.bench("gp/shared_tell_enqueue", || {
+            shared.tell(row.clone(), 1.0);
+            told += 1;
+            if told % 4096 == 0 {
+                shared.reset();
+            }
+            told
+        });
+
+        // ask side under contention: three teller threads stream
+        // observations in while the ask loop drains, (re)builds the
+        // windowed factor and block-scores 512 candidates.
+        let shared = SharedSurrogate::new(hyper);
+        {
+            let mut seed_rng = Rng::new(0xC0FFEE);
+            for _ in 0..64 {
+                let x: Vec<f64> = (0..5).map(|_| seed_rng.f64()).collect();
+                shared.tell(x, seed_rng.f64());
+            }
+        }
+        let stop = AtomicBool::new(false);
+        let r_ask = std::thread::scope(|scope| {
+            for t in 0..3u64 {
+                let handle = shared.clone();
+                let stop = &stop;
+                scope.spawn(move || {
+                    let mut trng = Rng::new(0xFEED + t);
+                    while !stop.load(Ordering::Relaxed) {
+                        let x: Vec<f64> = (0..5).map(|_| trng.f64()).collect();
+                        handle.tell(x, trng.f64());
+                        // paced like a fast evaluator, not a spin loop
+                        std::thread::sleep(std::time::Duration::from_micros(50));
+                    }
+                });
+            }
+            let cand_flat: Vec<f64> = (0..512 * 5).map(|_| rng.f64()).collect();
+            let mut ws = ScoreWorkspace::default();
+            let mut y_buf: Vec<f64> = Vec::new();
+            let r = b.bench("gp/shared_ask_contended n<=64 c=512", || {
+                let mut g = shared.lock();
+                if g.len() < 2 {
+                    return f64::NAN; // store just reset; refills next pass
+                }
+                let idx = g.conditioning_set();
+                if !g.sync(&idx) {
+                    return f64::NAN;
+                }
+                y_buf.clear();
+                y_buf.extend(idx.iter().map(|&i| g.y(i)));
+                g.set_targets(&y_buf);
+                g.score_into(&cand_flat, 512, 1.5, 0.0, &mut ws);
+                drop(g);
+                if shared.len() > 2048 {
+                    shared.reset(); // keep conditioning-set selection bounded
+                }
+                ws.gain[0]
+            });
+            stop.store(true, Ordering::Relaxed);
+            r
+        });
+        (r_tell, r_ask)
+    };
+
+    write_gp_bench_json(
+        &[&r_scratch, &r_append, &r_score, &r_fit_only, &r_shared_tell, &r_shared_ask],
+        64,
+        512,
+        speedup,
+    )?;
 
     println!("\n== GP surrogate: native vs AOT HLO (PJRT), 512 candidates ==");
     for n in [8usize, 32, 64] {
@@ -164,7 +249,8 @@ fn main() -> anyhow::Result<()> {
 
 /// Persist the surrogate-subsystem baseline (ISSUE 2 acceptance: the
 /// incremental append + blocked scoring must beat the scratch refit at
-/// n=64 / 512 candidates). Keys are the bench short names.
+/// n=64 / 512 candidates; ISSUE 3 adds the contended shared tell/ask
+/// pair). Keys are the bench short names.
 fn write_gp_bench_json(
     results: &[&BenchResult],
     n: usize,

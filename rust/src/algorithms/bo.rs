@@ -9,18 +9,27 @@
 //!   3. score every candidate's optimistic gain (mu + alpha*sigma) - y_best,
 //!   4. propose the highest-gain unseen candidate.
 //!
-//! Step 3 is the numeric hot path. With the native stack the engine keeps
-//! a **persistent [`IncrementalGp`]** across the whole run: each `tell`
-//! folds its observation into the Cholesky factor as an O(n²) rank-1
-//! append (no O(n³) refit), each batched `ask` conditions on in-flight
-//! trials by *extending* the factor with constant-liar fantasies and
-//! *retracting* them after scoring (O(n²) per fantasy), and the
-//! 512-candidate pool is scored through one blocked cross-kernel panel +
-//! multi-RHS triangular solve with zero heap allocation
-//! ([`ScoreWorkspace`]). The model is keyed by the observation list it
-//! has factored in (`model_idx`): as long as the conditioning set only
-//! grows, appends are rank-1; if it is reshaped (window overflow, new
-//! hypers), the factor is rebuilt.
+//! Step 3 is the numeric hot path. With the native stack the engine
+//! conditions a persistent incremental model that it *borrows* rather than
+//! owns: a [`SharedSurrogate`] handle. In the default (private) case the
+//! engine is the handle's only user and behaviour is identical to owning
+//! the model; attach a handle shared with other engines
+//! ([`BayesOpt::with_shared_surrogate`]) and every `tell` from every
+//! session lands in **one** factor — the whole-host surrogate the paper's
+//! amortisation argument wants (see `gp::shared` for the concurrency
+//! contract). Each `tell` enqueues its observation (never blocking a
+//! concurrent scoring pass); each `ask` drains the queue in observation
+//! order as O(n²) rank-1 Cholesky appends, conditions on in-flight trials
+//! by *extending* the factor with constant-liar fantasies, and scores the
+//! candidate pool through one blocked cross-kernel panel + multi-RHS
+//! triangular solve with zero heap allocation ([`ScoreWorkspace`]).
+//!
+//! Batched asks are *fantasy-batched*: `ask(n)` takes the model lock
+//! once, extends the factor with each picked configuration as it is
+//! issued, scores the n candidate pools against the growing factor, and
+//! retracts all fantasies together when the guard drops — one
+//! extend/retract cycle per batch instead of one per proposal, so the
+//! per-proposal critical section a shared handle serialises stays short.
 //!
 //! Surrogates that refit in one fused call still go through
 //! [`Surrogate::fit_score`]: the production HLO artifact (L2 JAX graph +
@@ -31,8 +40,8 @@
 
 use super::{Trial, TrialBook, TrialId, Tuner};
 use crate::gp::{
-    select_lengthscale, GpHyper, IncrementalGp, KernelKind, NativeSurrogate, ScoreWorkspace,
-    Surrogate,
+    select_lengthscale, GpHyper, KernelKind, NativeSurrogate, ScoreWorkspace, SharedSurrogate,
+    Surrogate, SurrogateGuard, UNBOUNDED_HISTORY,
 };
 use crate::history::Measurement;
 use crate::space::{Config, SearchSpace};
@@ -49,16 +58,17 @@ const LOCAL_SIGMA: f64 = 0.08;
 /// Acquisition optimism (alpha in (mu + alpha*sigma) - y_best).
 pub const ACQ_ALPHA: f64 = 1.5;
 
-/// One settled observation. (Observations are keyed by their append-only
-/// index in `observed` — `tell` order — which is what `model_idx` stores;
-/// the trial id itself is consumed by `TrialBook::settle` and not needed
-/// afterwards.)
-struct Obs {
-    /// Unit-cube coordinates.
-    x: Vec<f64>,
-    /// Raw objective value.
-    y: f64,
-    config: Config,
+/// Batch-invariant proposal context (see [`BayesOpt`]'s ask): the store
+/// is frozen while the model guard is held, so the conditioning set, the
+/// acquisition baseline and the incumbent are computed once per batch.
+struct BatchCtx {
+    /// Conditioning set: indices into the shared observation store.
+    idx: Vec<usize>,
+    /// Best standardised objective over the conditioning set.
+    y_best: f64,
+    /// Unit-cube coordinates of the best observation (local-perturbation
+    /// centre for candidate generation).
+    incumbent: Vec<f64>,
 }
 
 pub struct BayesOpt<S: Surrogate = NativeSurrogate> {
@@ -66,7 +76,8 @@ pub struct BayesOpt<S: Surrogate = NativeSurrogate> {
     rng: Rng,
     surrogate: S,
     /// Kernel + lengthscale + noise + conditioning window, shared by every
-    /// surrogate path (incremental, scratch oracle, HLO artifact).
+    /// surrogate path (incremental, scratch oracle, HLO artifact). Kept in
+    /// lock-step with the shared handle's hypers.
     hyper: GpHyper,
     /// Acquisition optimism (ablatable; default ACQ_ALPHA).
     acq_alpha: f64,
@@ -79,17 +90,17 @@ pub struct BayesOpt<S: Surrogate = NativeSurrogate> {
     ls_selected_at: usize,
     /// Initial design not yet proposed.
     pending_init: Vec<Config>,
-    /// All settled observations, in tell order (append-only).
-    observed: Vec<Obs>,
+    /// Configurations this engine has settled, in tell order. Proposal
+    /// dedup only — the observation store itself lives in `shared`.
+    observed: Vec<Config>,
     /// Open trials. Pending configurations are conditioned into the GP as
     /// constant-liar fantasies (at the standardised mean) so a batch of
     /// `ask`ed trials spreads out instead of collapsing onto one point.
     book: TrialBook,
-    /// Persistent incremental model (native stack only).
-    model: IncrementalGp,
-    /// Indices into `observed` currently factored into `model`, in factor
-    /// row order — the key deciding between rank-1 append and rebuild.
-    model_idx: Vec<usize>,
+    /// Handle to the persistent incremental model (native stack only).
+    /// Private by default; [`BayesOpt::with_shared_surrogate`] attaches a
+    /// handle shared with other engines/sessions.
+    shared: SharedSurrogate,
     /// Reusable scoring buffers (zero-allocation hot path).
     ws: ScoreWorkspace,
     /// Flattened candidate pool (n_candidates × dim), reused per ask.
@@ -114,6 +125,12 @@ impl<S: Surrogate> BayesOpt<S> {
         let mut pending_init = space.latin_hypercube(INIT_DESIGN, &mut rng);
         pending_init.reverse(); // pop from back in LHS order
         let hyper = GpHyper::default();
+        let shared = SharedSurrogate::new(hyper);
+        if !surrogate.use_engine_incremental() {
+            // Fused-refit surrogates (HLO artifact, scratch reference)
+            // never score through the factor — keep drains O(1).
+            shared.set_eager_factoring(false);
+        }
         BayesOpt {
             space,
             rng,
@@ -126,13 +143,46 @@ impl<S: Surrogate> BayesOpt<S> {
             pending_init,
             observed: Vec::new(),
             book: TrialBook::new(),
-            model: IncrementalGp::new(hyper),
-            model_idx: Vec::new(),
+            shared,
             ws: ScoreWorkspace::default(),
             cand_flat: Vec::new(),
             y_raw: Vec::new(),
             y_std: Vec::new(),
         }
+    }
+
+    /// Condition this engine on a surrogate shared with other engines or
+    /// sessions (one factor per search space — see `gp::shared`). The
+    /// engine adopts the handle's hyperparameters, so attach the handle
+    /// *before* kernel/window overrides and before any tuning starts.
+    ///
+    /// An incremental engine turns eager factoring on for the whole
+    /// handle (it scores through the factor); a fused-refit engine
+    /// leaves the handle's setting alone, since siblings may still need
+    /// the factor — if *no* attached engine is incremental, disable it
+    /// via [`SharedSurrogate::set_eager_factoring`].
+    pub fn with_shared_surrogate(mut self, handle: SharedSurrogate) -> BayesOpt<S> {
+        assert!(
+            self.observed.is_empty() && self.book.open_len() == 0,
+            "attach the shared surrogate before tuning starts"
+        );
+        assert!(
+            self.hyper == GpHyper::default(),
+            "attach the shared surrogate before kernel/window overrides \
+             (the engine adopts the handle hypers, discarding earlier ones)"
+        );
+        if self.surrogate.use_engine_incremental() {
+            handle.set_eager_factoring(true);
+        }
+        self.hyper = handle.hyper();
+        self.shared = handle;
+        self
+    }
+
+    /// A cloneable handle to the surrogate this engine conditions —
+    /// attach it to further engines via [`BayesOpt::with_shared_surrogate`].
+    pub fn surrogate_handle(&self) -> SharedSurrogate {
+        self.shared.clone()
     }
 
     /// Override the acquisition optimism (ablation A2).
@@ -154,17 +204,19 @@ impl<S: Surrogate> BayesOpt<S> {
     /// is RBF-only and rejects other kinds).
     pub fn with_kernel(mut self, kind: KernelKind) -> BayesOpt<S> {
         self.hyper.kernel = kind;
-        self.reset_model();
+        self.shared.set_hyper(self.hyper);
         self
     }
 
-    /// Override the surrogate conditioning window. Must stay ≤ the
-    /// artifact's compiled N_PAD when the HLO surrogate is used
-    /// (`runtime::GpSurrogate` enforces this at score time).
-    pub fn with_history_window(mut self, window: usize) -> BayesOpt<S> {
-        assert!(window > 0, "history window must be positive");
-        self.hyper.max_history = window;
-        self.reset_model();
+    /// Override the surrogate conditioning window; `None` lifts it
+    /// entirely ([`UNBOUNDED_HISTORY`] — native paths only, since the
+    /// window exists for AOT N_PAD parity and `runtime::GpSurrogate`
+    /// enforces its compiled bound at score time).
+    pub fn with_history_window(mut self, window: impl Into<Option<usize>>) -> BayesOpt<S> {
+        let w = window.into().unwrap_or(UNBOUNDED_HISTORY);
+        assert!(w > 0, "history window must be positive");
+        self.hyper.max_history = w;
+        self.shared.set_hyper(self.hyper);
         self
     }
 
@@ -179,37 +231,6 @@ impl<S: Surrogate> BayesOpt<S> {
     /// The hypers every surrogate path is currently driven by.
     pub fn hyper(&self) -> GpHyper {
         self.hyper
-    }
-
-    fn reset_model(&mut self) {
-        self.model.set_hyper(self.hyper);
-        self.model_idx.clear();
-    }
-
-    /// The conditioning set: all history if it fits the window, else the
-    /// best window/4 plus the most recent remainder.
-    fn conditioning_set(&self) -> Vec<usize> {
-        let n = self.observed.len();
-        let window = self.hyper.max_history;
-        if n <= window {
-            return (0..n).collect();
-        }
-        let keep_best = window / 4;
-        let mut by_value: Vec<usize> = (0..n).collect();
-        // total_cmp keeps the sort panic-free (and deterministic) even if
-        // an evaluator ever reports a NaN measurement.
-        by_value.sort_by(|&a, &b| self.observed[b].y.total_cmp(&self.observed[a].y));
-        let mut chosen: Vec<usize> = by_value[..keep_best].to_vec();
-        for i in (0..n).rev() {
-            if chosen.len() >= window {
-                break;
-            }
-            if !chosen.contains(&i) {
-                chosen.push(i);
-            }
-        }
-        chosen.sort_unstable();
-        chosen
     }
 
     /// Fill `cand_flat` with the explore/exploit candidate mix; returns
@@ -232,56 +253,38 @@ impl<S: Surrogate> BayesOpt<S> {
         self.n_candidates
     }
 
-    /// Score the pool through the persistent incremental model. Returns
-    /// false (model cleared) if the factor could not be grown.
-    fn incremental_scores(&mut self, idx: &[usize], y_best: f64) -> bool {
-        // Rank-1 appends while the conditioning set extends the factored
-        // one; any reshape (window overflow reordering, hyper change)
-        // forces a rebuild.
-        let keep = self.model_idx.len() <= idx.len()
-            && self.model_idx.iter().zip(idx).all(|(a, b)| a == b);
-        if !keep {
-            self.model.clear();
-            self.model_idx.clear();
+    /// Bring the shared factor to scoring state for this batch: grow (or
+    /// rebuild) it over `idx`, install the standardised targets, and
+    /// condition on every in-flight trial as a constant-liar fantasy
+    /// (capped so the set still fits the window / artifact N_PAD).
+    /// Returns false (factor cleared) if it could not be grown.
+    fn setup_incremental(&self, g: &mut SurrogateGuard<'_>, idx: &[usize]) -> bool {
+        if !g.sync(idx) {
+            return false;
         }
-        let start = self.model_idx.len();
-        for &i in &idx[start..] {
-            if !self.model.push(&self.observed[i].x, 0.0) {
-                self.model.clear();
-                self.model_idx.clear();
-                return false;
-            }
-            self.model_idx.push(i);
-        }
-        self.model.set_targets(&self.y_std);
-
+        g.set_targets(&self.y_std);
         // Constant-liar fantasies for in-flight trials: pretend each lands
         // at the observed mean (standardised 0), which kills the variance
-        // bonus around pending points and pushes the batch apart. Capped
-        // so the conditioning set still fits the window / artifact N_PAD.
+        // bonus around pending points and pushes the batch apart.
         let window = self.hyper.max_history;
         for cfg in self.book.open_configs() {
-            if self.model.total() >= window {
+            if g.total() >= window {
                 break;
             }
             let u = self.space.to_unit(cfg);
-            if !self.model.extend_fantasy(&u, 0.0) {
+            if !g.extend_fantasy(&u, 0.0) {
                 break;
             }
         }
-
-        let n_cand = self.cand_flat.len() / self.space.dim();
-        self.model.score_into(&self.cand_flat, n_cand, self.acq_alpha, y_best, &mut self.ws);
-        self.model.retract_fantasies();
         true
     }
 
     /// Score the pool through `Surrogate::fit_score` (HLO artifact or
     /// scratch reference). Returns false on surrogate failure.
-    fn generic_scores(&mut self, idx: &[usize], y_best: f64) -> bool {
+    fn generic_scores(&mut self, g: &SurrogateGuard<'_>, idx: &[usize], y_best: f64) -> bool {
         let dim = self.space.dim();
         let window = self.hyper.max_history;
-        let mut x: Vec<Vec<f64>> = idx.iter().map(|&i| self.observed[i].x.clone()).collect();
+        let mut x: Vec<Vec<f64>> = idx.iter().map(|&i| g.x(i).to_vec()).collect();
         let mut y = self.y_std.clone();
         for cfg in self.book.open_configs() {
             if x.len() >= window {
@@ -307,12 +310,25 @@ impl<S: Surrogate> BayesOpt<S> {
         }
     }
 
-    fn propose_bo(&mut self) -> Config {
+    /// Build the batch-invariant proposal context: the conditioning set,
+    /// its standardised targets (left in `self.y_std`), the acquisition
+    /// baseline and the incumbent. The guarded store is frozen while the
+    /// guard is held (tells only enqueue), so one ask computes this once
+    /// however many proposals it issues. Also the once-per-batch spot for
+    /// hyper adoption and lengthscale re-selection.
+    fn batch_context(&mut self, g: &mut SurrogateGuard<'_>, inc_ready: &mut bool) -> BatchCtx {
+        // Hypers live with the shared model. Builder overrides and
+        // lengthscale selection write through to the handle immediately,
+        // so a mismatch here always means a sibling engine changed them —
+        // adopt (last writer wins group-wide) rather than fight over the
+        // factor, which would force a rebuild on every alternating ask.
+        self.hyper = g.hyper();
+
         // Standardise y over the conditioning set.
-        let idx = self.conditioning_set();
+        let idx = g.conditioning_set();
         self.y_raw.clear();
         for &i in &idx {
-            let v = self.observed[i].y;
+            let v = g.y(i);
             self.y_raw.push(v);
         }
         let mean = stats::mean(&self.y_raw);
@@ -326,32 +342,51 @@ impl<S: Surrogate> BayesOpt<S> {
 
         let incumbent = {
             let bi = stats::argmax(&self.y_raw);
-            self.observed[idx[bi]].x.clone()
+            g.x(idx[bi]).to_vec()
         };
 
         if self.tune_lengthscale {
             let n = idx.len();
             if n >= 4 && n.is_power_of_two() && n != self.ls_selected_at {
-                let xs: Vec<Vec<f64>> =
-                    idx.iter().map(|&i| self.observed[i].x.clone()).collect();
+                let xs: Vec<Vec<f64>> = idx.iter().map(|&i| g.x(i).to_vec()).collect();
                 let picked = select_lengthscale(&xs, &self.y_std, self.hyper);
                 self.ls_selected_at = n;
                 if picked != self.hyper {
                     self.hyper = picked;
-                    self.reset_model();
+                    g.ensure_hyper(picked);
+                    *inc_ready = false;
                 }
             }
         }
 
-        let dim = self.space.dim();
-        let n_cand = self.gen_candidates(&incumbent);
+        BatchCtx { idx, y_best, incumbent }
+    }
 
-        let scored = if self.surrogate.use_engine_incremental() {
-            self.incremental_scores(&idx, y_best)
-        } else {
-            false
-        };
-        if !scored && !self.generic_scores(&idx, y_best) {
+    /// One BO proposal against the guarded shared model. `inc_ready`
+    /// tracks per-batch factor state: once the factor is synced, targeted
+    /// and fantasy-extended, later proposals in the same `ask` reuse it
+    /// (the fantasy-batch contract — see `ask`).
+    fn propose_bo(
+        &mut self,
+        g: &mut SurrogateGuard<'_>,
+        ctx: &BatchCtx,
+        inc_ready: &mut bool,
+    ) -> Config {
+        let dim = self.space.dim();
+        let n_cand = self.gen_candidates(&ctx.incumbent);
+
+        let mut scored = false;
+        if self.surrogate.use_engine_incremental() {
+            if !*inc_ready {
+                *inc_ready = self.setup_incremental(g, &ctx.idx);
+            }
+            if *inc_ready {
+                let c = self.cand_flat.len() / dim;
+                g.score_into(&self.cand_flat, c, self.acq_alpha, ctx.y_best, &mut self.ws);
+                scored = true;
+            }
+        }
+        if !scored && !self.generic_scores(g, &ctx.idx, ctx.y_best) {
             return self.space.random(&mut self.rng);
         }
 
@@ -360,7 +395,7 @@ impl<S: Surrogate> BayesOpt<S> {
         debug_assert_eq!(self.ws.gain.len(), n_cand);
         for &ci in self.ws.argsort_gain_desc() {
             let cfg = self.space.from_unit(&self.cand_flat[ci * dim..(ci + 1) * dim]);
-            if !self.observed.iter().any(|o| o.config == cfg)
+            if !self.observed.iter().any(|c| c == &cfg)
                 && !self.book.open_configs().any(|c| c == &cfg)
             {
                 return cfg;
@@ -376,62 +411,83 @@ impl<S: Surrogate> Tuner for BayesOpt<S> {
         "bayesian-optimization"
     }
 
+    /// Fantasy-batch ask: the model lock is taken once per batch; each
+    /// issued trial is immediately extended into the factor as a
+    /// constant-liar fantasy so later proposals in the batch condition on
+    /// it, and all fantasies are retracted together when the guard drops
+    /// — one extend/retract cycle per batch, n scored pools.
     fn ask(&mut self, n: usize) -> Vec<Trial> {
+        // A shared factor that already holds a full design's worth of
+        // observations (sibling sessions, warm starts) makes the random
+        // initial design redundant — skip straight to model proposals.
+        if !self.pending_init.is_empty() && self.shared.total_observations() >= INIT_DESIGN {
+            self.pending_init.clear();
+        }
+        let shared = self.shared.clone();
+        let mut guard: Option<SurrogateGuard<'_>> = None;
+        let mut ctx: Option<BatchCtx> = None;
+        let mut inc_ready = false;
         let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
+        for slot in 0..n {
             let cfg = if let Some(cfg) = self.pending_init.pop() {
                 cfg
-            } else if self.observed.len() < 2 {
-                self.space.random(&mut self.rng)
             } else {
-                self.propose_bo()
+                if guard.is_none() {
+                    // Drains every queued tell (rank-1 appends, in
+                    // observation order) before the first proposal.
+                    guard = Some(shared.lock());
+                }
+                let g = guard.as_mut().unwrap();
+                if g.len() < 2 {
+                    self.space.random(&mut self.rng)
+                } else {
+                    if ctx.is_none() {
+                        // The store is frozen while the guard is held, so
+                        // the conditioning context serves the whole batch.
+                        ctx = Some(self.batch_context(g, &mut inc_ready));
+                    }
+                    let ctx = ctx.as_ref().unwrap();
+                    self.propose_bo(g, ctx, &mut inc_ready)
+                }
             };
-            out.push(self.book.issue(cfg));
+            let trial = self.book.issue(cfg);
+            if inc_ready && slot + 1 < n {
+                // Keep the factor conditioned on the new in-flight trial
+                // for the rest of the batch.
+                let g = guard.as_mut().unwrap();
+                if g.total() < self.hyper.max_history {
+                    let u = self.space.to_unit(&trial.config);
+                    let _ = g.extend_fantasy(&u, 0.0);
+                }
+            }
+            out.push(trial);
         }
         out
+        // guard drops here: all batch fantasies retract in one truncation
     }
 
     fn tell(&mut self, id: TrialId, m: &Measurement) {
         if let Some(cfg) = self.book.settle(id) {
             let u = self.space.to_unit(&cfg);
-            self.observed.push(Obs { x: u, y: m.value, config: cfg });
-            self.append_latest_to_model();
+            // Enqueue only — never blocks on a concurrent scoring pass;
+            // the next ask folds it into the factor in observation order.
+            self.shared.tell(u, m.value);
+            self.observed.push(cfg);
         }
     }
 
     /// Inject a past observation (warm start / duplicate-history stress).
     fn warm_start(&mut self, config: &Config, value: f64) {
         let u = self.space.to_unit(config);
-        self.observed.push(Obs { x: u, y: value, config: config.clone() });
-        self.append_latest_to_model();
-    }
-}
-
-impl<S: Surrogate> BayesOpt<S> {
-    /// Eager rank-1 append of the newest observation into the persistent
-    /// factor — the `tell` side of the incremental contract. Only valid
-    /// while the conditioning set is the full (windowed) prefix of
-    /// history; otherwise the next `ask` rebuilds lazily.
-    fn append_latest_to_model(&mut self) {
-        if !self.surrogate.use_engine_incremental() {
-            return;
-        }
-        let i = self.observed.len() - 1;
-        if self.observed.len() <= self.hyper.max_history && self.model_idx.len() == i {
-            if self.model.push(&self.observed[i].x, 0.0) {
-                self.model_idx.push(i);
-            } else {
-                self.model.clear();
-                self.model_idx.clear();
-            }
-        }
+        self.shared.tell(u, value);
+        self.observed.push(config.clone());
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gp::ExactRefitSurrogate;
+    use crate::gp::{ExactRefitSurrogate, ARTIFACT_MAX_HISTORY};
     use crate::space::threading_space;
     use crate::util::prop;
 
@@ -548,6 +604,8 @@ mod tests {
         cfgs.sort();
         cfgs.dedup();
         assert_eq!(cfgs.len(), 6, "batch collapsed onto duplicate configs");
+        // the batch fantasies must have retracted when the ask finished
+        assert_eq!(bo.surrogate_handle().lock().total(), INIT_DESIGN + 2);
         // out-of-order completion must be accepted
         for t in batch.iter().rev() {
             bo.tell(t.id, &Measurement::new(obj(&t.config)));
@@ -565,7 +623,7 @@ mod tests {
             let c = s.random(&mut rng);
             bo.warm_start(&c, i as f64);
         }
-        let idx = bo.conditioning_set();
+        let idx = bo.surrogate_handle().lock().conditioning_set();
         assert_eq!(idx.len(), window);
         // the globally best observation (last, value = max) must be kept
         assert!(idx.contains(&(window + 39)));
@@ -583,7 +641,105 @@ mod tests {
             let c = s.random(&mut rng);
             bo.warm_start(&c, i as f64);
         }
-        assert_eq!(bo.conditioning_set().len(), 16);
+        assert_eq!(bo.surrogate_handle().lock().conditioning_set().len(), 16);
+    }
+
+    #[test]
+    fn unbounded_window_conditions_on_full_history() {
+        // Satellite: with_history_window(None) lifts the N_PAD-parity cap
+        // for native-only runs — the conditioning set is the full history.
+        let s = space();
+        let mut bo = BayesOpt::new(s.clone(), 13).with_history_window(None);
+        assert_eq!(bo.hyper().max_history, UNBOUNDED_HISTORY);
+        let n = ARTIFACT_MAX_HISTORY + 20;
+        let mut rng = Rng::new(6);
+        for i in 0..n {
+            let c = s.random(&mut rng);
+            bo.warm_start(&c, (i as f64 * 0.7).sin());
+        }
+        assert_eq!(bo.surrogate_handle().lock().conditioning_set().len(), n);
+        // proposing over the lifted window still works
+        let t = bo.ask(1);
+        assert_eq!(t.len(), 1);
+        assert!(s.contains(&t[0].config));
+    }
+
+    #[test]
+    fn engines_sharing_a_handle_condition_one_model() {
+        // Two engines attached to one handle: both tell into the same
+        // factor, and each conditions on the union of observations.
+        let s = space();
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let mut a = BayesOpt::new(s.clone(), 1).with_shared_surrogate(shared.clone());
+        let mut b = BayesOpt::new(s.clone(), 2).with_shared_surrogate(shared.clone());
+        let obj = quadratic(&s, &vec![2, 28, 512, 100, 28]);
+        for _ in 0..12 {
+            step(&mut a, &obj);
+        }
+        assert_eq!(shared.total_observations(), 12);
+        for _ in 0..12 {
+            step(&mut b, &obj);
+        }
+        assert_eq!(shared.total_observations(), 24);
+        let g = shared.lock();
+        assert_eq!(g.len(), 24, "both engines' tells landed in one store");
+    }
+
+    #[test]
+    fn populated_shared_handle_skips_the_init_design() {
+        // A fresh engine attached to a factor that already holds a full
+        // design's worth of observations proposes from the model at once
+        // instead of burning its budget on Latin-hypercube randoms.
+        let s = space();
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let obj = quadratic(&s, &vec![2, 28, 512, 100, 28]);
+        let mut seeder = BayesOpt::new(s.clone(), 30).with_shared_surrogate(shared.clone());
+        for _ in 0..INIT_DESIGN + 4 {
+            step(&mut seeder, &obj);
+        }
+        let mut fresh = BayesOpt::new(s.clone(), 31).with_shared_surrogate(shared.clone());
+        let batch = fresh.ask(2);
+        assert_eq!(batch.len(), 2);
+        assert!(fresh.pending_init.is_empty(), "init design should be discarded");
+        for t in &batch {
+            assert!(s.contains(&t.config));
+        }
+    }
+
+    #[test]
+    fn sibling_hyper_override_is_adopted_not_reverted() {
+        // A builder override through one handle must win group-wide: the
+        // other engine adopts it on its next ask instead of reverting it
+        // (which would rebuild the shared factor on every alternating ask).
+        let s = space();
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let obj = quadratic(&s, &vec![3, 30, 576, 80, 40]);
+        let mut a = BayesOpt::new(s.clone(), 21).with_shared_surrogate(shared.clone());
+        for _ in 0..INIT_DESIGN + 2 {
+            step(&mut a, &obj);
+        }
+        let _b = BayesOpt::new(s.clone(), 22)
+            .with_shared_surrogate(shared.clone())
+            .with_history_window(16);
+        assert_eq!(shared.hyper().max_history, 16);
+        let t = a.ask(1).pop().unwrap();
+        assert!(s.contains(&t.config));
+        assert_eq!(a.hyper().max_history, 16, "sibling override not adopted");
+    }
+
+    #[test]
+    fn scratch_engine_pays_no_factor_cost() {
+        // Fused-refit surrogates never score through the factor; their
+        // tells must not trigger eager rank-1 appends.
+        let s = space();
+        let obj = quadratic(&s, &vec![2, 28, 512, 100, 28]);
+        let mut bo = BayesOpt::with_surrogate(s.clone(), 23, ExactRefitSurrogate);
+        for _ in 0..INIT_DESIGN + 3 {
+            step(&mut bo, &obj);
+        }
+        let g = bo.surrogate_handle().lock();
+        assert_eq!(g.len(), INIT_DESIGN + 3, "observations still recorded");
+        assert_eq!(g.total(), 0, "no factor rows for a fused-refit surrogate");
     }
 
     #[test]

@@ -80,6 +80,22 @@ pub struct Trial {
 }
 
 /// A tuning engine (ask/tell; see the module docs for the contract).
+///
+/// The whole conversation in six lines (any engine, any evaluator):
+///
+/// ```
+/// use tftune::algorithms::{Algorithm, Tuner};
+/// use tftune::evaluator::{Evaluator, SimEvaluator};
+/// use tftune::sim::ModelId;
+///
+/// let space = ModelId::NcfFp32.space();
+/// let mut tuner = Algorithm::Bo.build(&space, 42);
+/// let mut eval = SimEvaluator::new(ModelId::NcfFp32, 42);
+/// for trial in tuner.ask(2) {                       // batch of in-flight trials
+///     let m = eval.measure(&trial.config).unwrap(); // Measurement, not bare f64
+///     tuner.tell(trial.id, &m);                     // any completion order is fine
+/// }
+/// ```
 pub trait Tuner {
     /// Engine name (figure legends, CLI).
     fn name(&self) -> &'static str;
@@ -198,7 +214,9 @@ impl Algorithm {
 
     /// Construct the engine with the native GP surrogate (BO). The PJRT
     /// surrogate variant is constructed explicitly via `BayesOpt::with_surrogate`.
-    pub fn build(&self, space: &crate::space::SearchSpace, seed: u64) -> Box<dyn Tuner> {
+    /// Engines are `Send` so a session can be driven from a
+    /// `session::SessionGroup` thread.
+    pub fn build(&self, space: &crate::space::SearchSpace, seed: u64) -> Box<dyn Tuner + Send> {
         match self {
             Algorithm::Bo => Box::new(BayesOpt::new(space.clone(), seed)),
             Algorithm::Ga => Box::new(Genetic::new(space.clone(), seed)),

@@ -164,8 +164,9 @@ impl TuneConfig {
 
 impl TuneConfig {
     /// Build the tuning engine this spec asks for, honouring the surrogate
-    /// choice for BO (HLO = the AOT artifact via PJRT).
-    pub fn build_tuner(&self) -> Result<Box<dyn crate::algorithms::Tuner>> {
+    /// choice for BO (HLO = the AOT artifact via PJRT). `Send` so the
+    /// session can be driven from a `SessionGroup` thread.
+    pub fn build_tuner(&self) -> Result<Box<dyn crate::algorithms::Tuner + Send>> {
         let space = self.model.space();
         if self.algorithm == Algorithm::Bo && self.surrogate == SurrogateKind::Hlo {
             let surrogate = crate::runtime::GpSurrogate::open_default()

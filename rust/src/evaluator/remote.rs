@@ -10,6 +10,15 @@
 //!   several trial-tagged requests in flight on one connection; the daemon
 //!   answers in completion order and the trial id pairs each response with
 //!   its trial.
+//!
+//! Either way, a daemon's measurement reaches the engine through
+//! `Tuner::tell` — with a BO engine that means it *enqueues into the
+//! shared surrogate* (`gp::SharedSurrogate`) and is folded into the
+//! persistent factor, in arrival order, by the next ask. Tells never
+//! block on a concurrent scoring pass, so slow daemons and surrogate
+//! scoring overlap freely; `rust/tests/shared_surrogate.rs` pins that
+//! shuffled, sharded completion orders condition the factor identically
+//! to a serial run fed the same order.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;

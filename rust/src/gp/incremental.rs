@@ -88,7 +88,9 @@ pub struct IncrementalGp {
 
 impl IncrementalGp {
     pub fn new(hyper: GpHyper) -> IncrementalGp {
-        let cap = hyper.max_history.max(1);
+        // Reservation hint only: an unbounded window (UNBOUNDED_HISTORY =
+        // usize::MAX) must not translate into a usize::MAX reservation.
+        let cap = hyper.max_history.clamp(1, 1024);
         IncrementalGp {
             hyper,
             d: 0,
@@ -144,7 +146,7 @@ impl IncrementalGp {
         if m == 0 {
             self.d = xr.len();
             assert!(self.d > 0, "empty feature vector");
-            self.x.reserve(self.hyper.max_history.max(1) * self.d);
+            self.x.reserve(self.hyper.max_history.clamp(1, 1024) * self.d);
         }
         assert_eq!(xr.len(), self.d, "feature dim mismatch");
         self.kbuf.clear();

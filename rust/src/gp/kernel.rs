@@ -18,6 +18,12 @@ use crate::util::linalg::{chol_packed, packed_idx, solve_lower_packed_inplace, s
 /// window so the artifact and oracle stay interchangeable.
 pub const ARTIFACT_MAX_HISTORY: usize = 64;
 
+/// Sentinel for [`GpHyper::max_history`] meaning "no conditioning window":
+/// the surrogate conditions on the full history. Native paths only — the
+/// AOT artifact's compiled shape contract (`n_pad`) rejects it. Set via
+/// `BayesOpt::with_history_window(None)`.
+pub const UNBOUNDED_HISTORY: usize = usize::MAX;
+
 /// Which covariance kernel the surrogate uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelKind {
@@ -69,10 +75,18 @@ pub struct GpHyper {
     pub noise_var: f64,
     /// Covariance kernel.
     pub kernel: KernelKind,
-    /// Most recent/best history points the surrogate conditions on. The
-    /// AOT artifact is compiled for at most [`ARTIFACT_MAX_HISTORY`];
+    /// Most recent/best history points the surrogate conditions on.
+    ///
+    /// The window exists **only for AOT N_PAD parity on the artifact
+    /// path**: the compiled HLO graph has exactly `n_pad` (padded/masked)
+    /// history slots, so every surrogate path defaults to the same
+    /// [`ARTIFACT_MAX_HISTORY`] bound to stay interchangeable with it —
     /// `runtime::GpSurrogate` rejects hypers whose window exceeds its
-    /// compiled `n_pad`, so native and artifact paths cannot drift apart.
+    /// compiled `n_pad`. It is *not* a cost cap: with O(n²) rank-1
+    /// appends ([`super::IncrementalGp`]) the native path no longer needs
+    /// a window for fit-cost reasons, and native-only runs may lift it
+    /// entirely by setting [`UNBOUNDED_HISTORY`]
+    /// (`BayesOpt::with_history_window(None)`).
     pub max_history: usize,
 }
 

@@ -1,8 +1,8 @@
 //! The surrogate subsystem: kernels, the incremental engine model, the
-//! exact oracle, and the surrogate abstraction the BO engine scores
-//! through.
+//! shared concurrent handle, the exact oracle, and the surrogate
+//! abstraction the BO engine scores through.
 //!
-//! Four roles, four homes:
+//! Five roles, five homes:
 //!
 //! - [`kernel`] — covariance kernels (RBF, Matérn-5/2) behind the
 //!   [`Kernel`] trait, the shared [`GpHyper`] hyperparameter bundle
@@ -14,6 +14,11 @@
 //!   engine keeps across the run: O(n²) rank-1 Cholesky append per
 //!   `tell`, exact extend/retract for constant-liar fantasies per `ask`,
 //!   and a zero-allocation blocked scoring path over the candidate pool.
+//! - [`shared`] — [`SharedSurrogate`], the concurrent handle that lets
+//!   many producers (an evaluator pool, several sessions, remote-daemon
+//!   reporting loops) condition **one** incremental factor: tells enqueue
+//!   without blocking, the next ask drains them in observation order and
+//!   scores through an exclusive [`SurrogateGuard`].
 //! - [`native`] — [`NativeGp`], the exact from-scratch solve. It is the
 //!   *correctness oracle*: the incremental model reproduces it bit-for-bit
 //!   (pinned by `rust/tests/surrogate_incremental.rs`) and the AOT HLO
@@ -26,19 +31,22 @@
 //! that refit in one fused call (the HLO artifact) expose `fit_score`;
 //! implementations backed by the native stack opt into the engine's
 //! incremental session via [`Surrogate::use_engine_incremental`], in
-//! which case the engine drives its own [`IncrementalGp`] with the same
-//! `GpHyper` and `fit_score` is bypassed on the hot path.
+//! which case the engine conditions the persistent [`IncrementalGp`]
+//! borrowed through its [`SharedSurrogate`] handle (same `GpHyper`) and
+//! `fit_score` is bypassed on the hot path.
 
 pub mod incremental;
 pub mod kernel;
 pub mod native;
+pub mod shared;
 
 pub use incremental::{IncrementalGp, ScoreWorkspace};
 pub use kernel::{
     eval_sqdist, select_lengthscale, GpHyper, Kernel, KernelKind, ARTIFACT_MAX_HISTORY,
-    LENGTHSCALE_GRID,
+    LENGTHSCALE_GRID, UNBOUNDED_HISTORY,
 };
 pub use native::{NativeGp, Posterior};
+pub use shared::{SharedSurrogate, SurrogateGuard};
 
 /// A surrogate model the BO engine can query.
 pub trait Surrogate {

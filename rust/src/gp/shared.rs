@@ -1,0 +1,546 @@
+//! The shared concurrent surrogate: one [`IncrementalGp`] conditioning
+//! measurements from *many* producers — the evaluator pool of a single
+//! [`TuningSession`](crate::session::TuningSession), or several concurrent
+//! sessions on one host (a [`SessionGroup`](crate::session::SessionGroup))
+//! — behind a handle that any thread can `tell` into without blocking on
+//! the engine's scoring pass.
+//!
+//! # Why a queue + lock, not just a lock
+//!
+//! The paper's practicality argument (and the regime "Learning to Optimize
+//! Tensor Programs" exploits with its shared cost model) is that surrogate
+//! cost amortises across many concurrent measurements. A naive
+//! `Mutex<IncrementalGp>` would serialise *tells against asks*: a daemon
+//! reporting a measurement would wait out a full candidate-pool scoring
+//! pass. Instead the handle splits the two sides:
+//!
+//! - **tell side** ([`SharedSurrogate::tell`]): producers append `(x, y)`
+//!   rows to a small queue behind its own mutex — O(1) critical section,
+//!   never blocked by scoring. Any evaluator thread, session driver or
+//!   daemon-reporting loop may call it concurrently.
+//! - **ask side** ([`SharedSurrogate::lock`]): the BO engine takes the
+//!   model lock, *drains* the queue in observation (enqueue) order —
+//!   each drained row folds into the persistent Cholesky factor as an
+//!   O(n²) rank-1 append — and gets a [`SurrogateGuard`]: exclusive,
+//!   read-mostly access to the factored model for the duration of one
+//!   proposal batch (sync, constant-liar fantasy extend, blocked scoring).
+//!   Tells that arrive *while* the guard is held simply queue up and are
+//!   folded in by the next `lock`.
+//!
+//! Lock order is always model-state → queue (the drain inside `lock`, and
+//! [`SharedSurrogate::reset`]); `tell` takes only the queue lock, so the
+//! two sides cannot deadlock and tells cannot be starved by asks.
+//!
+//! Scope note: the handle shares the *posterior*, not engine bookkeeping.
+//! Each engine still deduplicates proposals against its own history and
+//! conditions constant-liar fantasies for its own in-flight trials only,
+//! so two sessions can occasionally measure the same configuration — a
+//! duplicate (noisy) observation, which the factor handles fine, not an
+//! error.
+//!
+//! # Numerical contract
+//!
+//! Draining performs exactly the rank-1 appends a private
+//! [`IncrementalGp`] would perform if the same observations were told
+//! serially in the same order, so a shared model is *bit-equal* to the
+//! serial private-model path given the same observation order — and
+//! within ~1e-12 of it under reordering (the GP posterior is permutation
+//! invariant in exact arithmetic). `rust/tests/shared_surrogate.rs` pins
+//! both to ≤1e-9 under genuine thread interleavings.
+//!
+//! # Example
+//!
+//! ```
+//! use tftune::gp::{GpHyper, ScoreWorkspace, SharedSurrogate};
+//!
+//! let shared = SharedSurrogate::new(GpHyper::default());
+//! // Producers (evaluator threads, daemons) tell without blocking:
+//! let handle = shared.clone();
+//! std::thread::spawn(move || handle.tell(vec![0.2, 0.7], 1.0)).join().unwrap();
+//! shared.tell(vec![0.8, 0.1], -0.5);
+//!
+//! // The ask side drains the queue and scores through one guard:
+//! let mut g = shared.lock();
+//! assert_eq!(g.len(), 2);
+//! let idx = g.conditioning_set();
+//! assert!(g.sync(&idx));
+//! g.set_targets(&[1.0, -0.5]);
+//! let mut ws = ScoreWorkspace::default();
+//! g.score_into(&[0.5, 0.5], 1, 1.5, 1.0, &mut ws);
+//! assert!(ws.std[0] > 0.0);
+//! ```
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::incremental::{IncrementalGp, ScoreWorkspace};
+use super::kernel::GpHyper;
+
+/// Model state behind the ask-side lock: the canonical observation store
+/// plus the persistent factor over (a windowed subset of) it.
+struct SharedState {
+    /// Hyperparameters every conditioning pass uses. Changing them
+    /// invalidates the factor ([`SurrogateGuard::ensure_hyper`]).
+    hyper: GpHyper,
+    /// All drained observations, in drain (= enqueue) order. This is the
+    /// canonical history the conditioning window selects from.
+    obs_x: Vec<Vec<f64>>,
+    obs_y: Vec<f64>,
+    /// The persistent factored model.
+    model: IncrementalGp,
+    /// Indices into `obs_x` currently factored into `model`, in factor
+    /// row order — decides between rank-1 append and rebuild on sync.
+    factored: Vec<usize>,
+    /// Eagerly fold drained rows into the factor (default). Engines that
+    /// never score through the factor (HLO artifact, scratch reference —
+    /// `Surrogate::use_engine_incremental()` false) disable this so
+    /// drains stay O(1) bookkeeping.
+    eager: bool,
+    /// Spare row buffer swapped with the queue on drain, so the queue
+    /// keeps its capacity and warmed-up tells never allocate.
+    drain_buf: Vec<(Vec<f64>, f64)>,
+}
+
+impl SharedState {
+    /// Fold one drained observation into the store, eagerly rank-1
+    /// appending to the factor while it is still the full windowed prefix
+    /// of the history (the cheap common case; anything else is repaired by
+    /// the next [`SurrogateGuard::sync`]).
+    fn drain_one(&mut self, x: Vec<f64>, y: f64) {
+        let i = self.obs_x.len();
+        if self.eager && i + 1 <= self.hyper.max_history && self.factored.len() == i {
+            if self.model.push(&x, 0.0) {
+                self.factored.push(i);
+            } else {
+                self.model.clear();
+                self.factored.clear();
+            }
+        }
+        self.obs_x.push(x);
+        self.obs_y.push(y);
+    }
+}
+
+struct Inner {
+    /// Pending `(x, y)` appends, in tell order. Its own mutex so the tell
+    /// side never contends with a scoring pass.
+    queue: Mutex<Vec<(Vec<f64>, f64)>>,
+    state: Mutex<SharedState>,
+}
+
+/// A cloneable handle to one concurrently-shared surrogate model (module
+/// docs). Cloning is cheap (`Arc`); every clone addresses the same model.
+pub struct SharedSurrogate {
+    inner: Arc<Inner>,
+}
+
+impl Clone for SharedSurrogate {
+    fn clone(&self) -> SharedSurrogate {
+        SharedSurrogate { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl std::fmt::Debug for SharedSurrogate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedSurrogate").finish_non_exhaustive()
+    }
+}
+
+impl SharedSurrogate {
+    /// A fresh, empty shared model conditioned with `hyper`.
+    pub fn new(hyper: GpHyper) -> SharedSurrogate {
+        SharedSurrogate {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(Vec::new()),
+                state: Mutex::new(SharedState {
+                    hyper,
+                    obs_x: Vec::new(),
+                    obs_y: Vec::new(),
+                    model: IncrementalGp::new(hyper),
+                    factored: Vec::new(),
+                    eager: true,
+                    drain_buf: Vec::new(),
+                }),
+            }),
+        }
+    }
+
+    /// Enqueue one observation (`x` in the unit cube, `y` the raw
+    /// objective). Callable from any thread; never blocks on a scoring
+    /// pass — the row is folded into the factor, in enqueue order, by the
+    /// next [`SharedSurrogate::lock`].
+    pub fn tell(&self, x: Vec<f64>, y: f64) {
+        self.inner.queue.lock().unwrap().push((x, y));
+    }
+
+    /// Observations told but not yet drained into the model.
+    pub fn pending(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    /// Observations already drained into the canonical store. The next
+    /// [`SharedSurrogate::lock`] may observe more (pending tells drain).
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().obs_x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drained + pending observations — the count the model will condition
+    /// on once the queue is next drained.
+    pub fn total_observations(&self) -> usize {
+        // Lock order: state before queue (same as the drain in `lock`).
+        let state = self.inner.state.lock().unwrap();
+        let pending = self.inner.queue.lock().unwrap().len();
+        state.obs_x.len() + pending
+    }
+
+    /// The hyperparameters the shared model currently conditions with.
+    pub fn hyper(&self) -> GpHyper {
+        self.inner.state.lock().unwrap().hyper
+    }
+
+    /// Switch hyperparameters, invalidating the factor (rebuilt by the
+    /// next sync). Affects every engine sharing this handle.
+    pub fn set_hyper(&self, hyper: GpHyper) {
+        self.lock().ensure_hyper(hyper);
+    }
+
+    /// Enable/disable eager factoring on drain (default on). Turn it off
+    /// when no attached engine scores through the factor — e.g. the HLO
+    /// artifact or scratch-refit surrogate paths, which read only the
+    /// observation store — so every drained row costs O(1), not an O(n²)
+    /// rank-1 append. [`SurrogateGuard::sync`] still builds the factor on
+    /// demand if someone asks for it.
+    pub fn set_eager_factoring(&self, on: bool) {
+        self.inner.state.lock().unwrap().eager = on;
+    }
+
+    /// Drop all observations (queued and drained) and clear the factor,
+    /// keeping the hyperparameters — reuse one handle across runs.
+    pub fn reset(&self) {
+        let mut state = self.inner.state.lock().unwrap();
+        self.inner.queue.lock().unwrap().clear();
+        state.obs_x.clear();
+        state.obs_y.clear();
+        state.model.clear();
+        state.factored.clear();
+    }
+
+    /// Take the ask-side lock: drain every pending tell into the factor
+    /// (in enqueue order) and return exclusive access to the synced model.
+    /// Concurrent `tell`s keep landing in the queue while the guard is
+    /// held; they are folded in by the next `lock`.
+    pub fn lock(&self) -> SurrogateGuard<'_> {
+        let mut state = self.inner.state.lock().unwrap();
+        // Defensive: a guard dropped mid-proposal (panic) may have left
+        // fantasy rows; the factor must hold committed rows only before
+        // new observations are appended.
+        state.model.retract_fantasies();
+        // Swap the queue with the spare buffer instead of mem::take, so
+        // the queue keeps its capacity and tells stay allocation-free
+        // once warmed up.
+        let mut pending = std::mem::take(&mut state.drain_buf);
+        std::mem::swap(&mut pending, &mut *self.inner.queue.lock().unwrap());
+        for (x, y) in pending.drain(..) {
+            state.drain_one(x, y);
+        }
+        state.drain_buf = pending;
+        SurrogateGuard { state }
+    }
+}
+
+/// Exclusive, drained view of the shared model for one proposal batch.
+///
+/// The guard exposes the canonical observation store (for conditioning-set
+/// selection and target standardisation) and the incremental model's
+/// sync / fantasy / scoring operations. Fantasy rows extended through the
+/// guard are automatically retracted when it drops, so the factor between
+/// asks always holds committed observations only.
+pub struct SurrogateGuard<'a> {
+    state: MutexGuard<'a, SharedState>,
+}
+
+impl SurrogateGuard<'_> {
+    /// Observations in the canonical store (drain order).
+    pub fn len(&self) -> usize {
+        self.state.obs_x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.obs_x.is_empty()
+    }
+
+    /// Unit-cube coordinates of observation `i` (drain order).
+    pub fn x(&self, i: usize) -> &[f64] {
+        &self.state.obs_x[i]
+    }
+
+    /// Raw objective value of observation `i` (drain order).
+    pub fn y(&self, i: usize) -> f64 {
+        self.state.obs_y[i]
+    }
+
+    pub fn hyper(&self) -> GpHyper {
+        self.state.hyper
+    }
+
+    /// Make the shared model condition with `hyper`; on change the factor
+    /// is invalidated and rebuilt by the next [`SurrogateGuard::sync`].
+    pub fn ensure_hyper(&mut self, hyper: GpHyper) {
+        if self.state.hyper != hyper {
+            self.state.hyper = hyper;
+            self.state.model.set_hyper(hyper);
+            self.state.factored.clear();
+        }
+    }
+
+    /// The conditioning set over the canonical store: the full history if
+    /// it fits the window, else the best window/4 observations plus the
+    /// most recent remainder (ascending index order).
+    pub fn conditioning_set(&self) -> Vec<usize> {
+        let n = self.state.obs_y.len();
+        let window = self.state.hyper.max_history;
+        if n <= window {
+            return (0..n).collect();
+        }
+        let keep_best = window / 4;
+        let mut by_value: Vec<usize> = (0..n).collect();
+        // total_cmp keeps the sort panic-free (and deterministic) even if
+        // an evaluator ever reports a NaN measurement.
+        let obs_y = &self.state.obs_y;
+        by_value.sort_by(|&a, &b| obs_y[b].total_cmp(&obs_y[a]));
+        let mut chosen: Vec<usize> = by_value[..keep_best].to_vec();
+        for i in (0..n).rev() {
+            if chosen.len() >= window {
+                break;
+            }
+            if !chosen.contains(&i) {
+                chosen.push(i);
+            }
+        }
+        chosen.sort_unstable();
+        chosen
+    }
+
+    /// Grow (or rebuild) the factor to cover exactly the observations in
+    /// `idx`, in order: rank-1 appends while `idx` extends the factored
+    /// prefix, full rebuild on any reshape. Returns false — factor
+    /// cleared — if the kernel matrix is not positive definite.
+    pub fn sync(&mut self, idx: &[usize]) -> bool {
+        let st = &mut *self.state;
+        let keep =
+            st.factored.len() <= idx.len() && st.factored.iter().zip(idx).all(|(a, b)| a == b);
+        if !keep {
+            st.model.clear();
+            st.factored.clear();
+        }
+        let start = st.factored.len();
+        for &i in &idx[start..] {
+            if !st.model.push(&st.obs_x[i], 0.0) {
+                st.model.clear();
+                st.factored.clear();
+                return false;
+            }
+            st.factored.push(i);
+        }
+        true
+    }
+
+    /// Replace the targets of every factored row (see
+    /// [`IncrementalGp::set_targets`]). Length must equal
+    /// [`SurrogateGuard::total`].
+    pub fn set_targets(&mut self, y: &[f64]) {
+        self.state.model.set_targets(y);
+    }
+
+    /// Committed + fantasy rows currently factored in.
+    pub fn total(&self) -> usize {
+        self.state.model.total()
+    }
+
+    /// Condition on an in-flight trial (constant liar). Retracted
+    /// automatically when the guard drops.
+    pub fn extend_fantasy(&mut self, x: &[f64], lie: f64) -> bool {
+        self.state.model.extend_fantasy(x, lie)
+    }
+
+    /// Drop fantasy rows now (also happens automatically on guard drop).
+    pub fn retract_fantasies(&mut self) {
+        self.state.model.retract_fantasies();
+    }
+
+    /// Blocked scoring over the factored model (see
+    /// [`IncrementalGp::score_into`]).
+    pub fn score_into(
+        &mut self,
+        cand: &[f64],
+        c: usize,
+        acq_alpha: f64,
+        y_best: f64,
+        ws: &mut ScoreWorkspace,
+    ) {
+        self.state.model.score_into(cand, c, acq_alpha, y_best, ws);
+    }
+}
+
+impl Drop for SurrogateGuard<'_> {
+    fn drop(&mut self) {
+        // The factor between asks holds committed observations only;
+        // fantasies are strictly per-proposal-batch state.
+        self.state.model.retract_fantasies();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::NativeGp;
+    use crate::util::Rng;
+
+    fn rows(rng: &mut Rng, n: usize, d: usize) -> Vec<(Vec<f64>, f64)> {
+        (0..n)
+            .map(|_| {
+                let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                let y = (4.0 * x[0]).sin() + 0.2 * x[d - 1];
+                (x, y)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tell_queues_and_lock_drains_in_order() {
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let mut rng = Rng::new(1);
+        let obs = rows(&mut rng, 5, 3);
+        for (x, y) in &obs {
+            shared.tell(x.clone(), *y);
+        }
+        assert_eq!(shared.pending(), 5);
+        assert_eq!(shared.len(), 0);
+        assert_eq!(shared.total_observations(), 5);
+        let g = shared.lock();
+        assert_eq!(g.len(), 5);
+        for (i, (x, y)) in obs.iter().enumerate() {
+            assert_eq!(g.x(i), &x[..]);
+            assert_eq!(g.y(i).to_bits(), y.to_bits());
+        }
+        drop(g);
+        assert_eq!(shared.pending(), 0);
+        assert_eq!(shared.len(), 5);
+    }
+
+    #[test]
+    fn drained_model_matches_private_serial_model() {
+        let hyper = GpHyper::default();
+        let shared = SharedSurrogate::new(hyper);
+        let mut rng = Rng::new(2);
+        let obs = rows(&mut rng, 20, 4);
+        // Tell in two waves with a lock (drain) in between: the factor
+        // must be identical to one serial private model either way.
+        for (x, y) in &obs[..9] {
+            shared.tell(x.clone(), *y);
+        }
+        drop(shared.lock());
+        for (x, y) in &obs[9..] {
+            shared.tell(x.clone(), *y);
+        }
+        let mut g = shared.lock();
+        let idx = g.conditioning_set();
+        assert_eq!(idx, (0..20).collect::<Vec<_>>());
+        assert!(g.sync(&idx));
+        let y_raw: Vec<f64> = (0..20).map(|i| g.y(i)).collect();
+        g.set_targets(&y_raw);
+
+        let cand: Vec<f64> = (0..8).map(|_| rng.f64()).collect();
+        let mut ws = ScoreWorkspace::default();
+        g.score_into(&cand, 2, 1.5, 0.5, &mut ws);
+
+        let x: Vec<Vec<f64>> = obs.iter().map(|(x, _)| x.clone()).collect();
+        let oracle = NativeGp::fit(&x, &y_raw, hyper).unwrap();
+        let cand_rows: Vec<Vec<f64>> = cand.chunks(4).map(|c| c.to_vec()).collect();
+        let post = oracle.predict(&cand_rows);
+        for j in 0..2 {
+            assert!((ws.mean[j] - post.mean[j]).abs() <= 1e-9);
+            assert!((ws.std[j] - post.std[j]).abs() <= 1e-9);
+        }
+    }
+
+    #[test]
+    fn guard_drop_retracts_fantasies() {
+        let shared = SharedSurrogate::new(GpHyper::default());
+        shared.tell(vec![0.1, 0.2], 0.5);
+        shared.tell(vec![0.9, 0.8], -0.5);
+        {
+            let mut g = shared.lock();
+            let idx = g.conditioning_set();
+            assert!(g.sync(&idx));
+            assert!(g.extend_fantasy(&[0.5, 0.5], 0.0));
+            assert_eq!(g.total(), 3);
+        } // dropped without explicit retract
+        let g = shared.lock();
+        assert_eq!(g.total(), 2, "fantasy survived the guard");
+    }
+
+    #[test]
+    fn reset_clears_queue_and_store() {
+        let shared = SharedSurrogate::new(GpHyper::default());
+        shared.tell(vec![0.3], 1.0);
+        drop(shared.lock());
+        shared.tell(vec![0.6], 2.0);
+        shared.reset();
+        assert_eq!(shared.pending(), 0);
+        assert_eq!(shared.len(), 0);
+        assert_eq!(shared.total_observations(), 0);
+        // Usable after reset (dimension may change).
+        shared.tell(vec![0.1, 0.9], 3.0);
+        let mut g = shared.lock();
+        let idx = g.conditioning_set();
+        assert!(g.sync(&idx));
+        assert_eq!(g.total(), 1);
+    }
+
+    #[test]
+    fn set_hyper_invalidates_and_rebuilds() {
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let mut rng = Rng::new(3);
+        for (x, y) in rows(&mut rng, 6, 2) {
+            shared.tell(x, y);
+        }
+        drop(shared.lock()); // drain + eager factor
+        let new = GpHyper { lengthscale: 0.5, ..GpHyper::default() };
+        shared.set_hyper(new);
+        assert_eq!(shared.hyper(), new);
+        let mut g = shared.lock();
+        let idx = g.conditioning_set();
+        assert!(g.sync(&idx), "rebuild under new hypers failed");
+        assert_eq!(g.total(), 6);
+    }
+
+    #[test]
+    fn eager_factoring_can_be_disabled() {
+        let shared = SharedSurrogate::new(GpHyper::default());
+        shared.set_eager_factoring(false);
+        shared.tell(vec![0.1, 0.2], 1.0);
+        shared.tell(vec![0.9, 0.5], 2.0);
+        let mut g = shared.lock();
+        assert_eq!(g.len(), 2, "store still records everything");
+        assert_eq!(g.total(), 0, "no eager appends while disabled");
+        // The factor is still available on demand.
+        let idx = g.conditioning_set();
+        assert!(g.sync(&idx));
+        assert_eq!(g.total(), 2);
+    }
+
+    #[test]
+    fn handles_address_one_model() {
+        let a = SharedSurrogate::new(GpHyper::default());
+        let b = a.clone();
+        a.tell(vec![0.2], 1.0);
+        b.tell(vec![0.8], 2.0);
+        assert_eq!(a.total_observations(), 2);
+        let g = b.lock();
+        assert_eq!(g.len(), 2);
+    }
+}

@@ -2,7 +2,9 @@
 //!
 //! Reproduction of "Automatic Tuning of TensorFlow's CPU Backend using
 //! Gradient-Free Optimization Algorithms" (Mebratu et al., MLHPCS/ISC 2021)
-//! as a three-layer Rust + JAX + Pallas system. See DESIGN.md.
+//! as a three-layer Rust + JAX + Pallas system. `ARCHITECTURE.md` at the
+//! repo root is the guided tour (layer map, trial lifecycle, surrogate
+//! contract); this page is the API-level summary.
 //!
 //! Layers:
 //! - L3 (this crate): the tuning coordinator — search space, BO/GA/NMS
@@ -31,22 +33,30 @@
 //! one TCP connection per remote daemon), and a [`Budget`] (evaluation
 //! cap, wall-clock limit, plateau stop), keeping one trial in flight per
 //! evaluator and streaming completions through a per-trial callback.
+//! [`SessionGroup`] drives several sessions concurrently on one host.
 //!
 //! # The surrogate subsystem
 //!
 //! The GP surrogate is the numeric hot path of the whole system (the
 //! paper's central result is that BO wins on most models), so it is its
-//! own subsystem under [`gp`], with three interchangeable roles driven by
-//! one shared hyperparameter bundle ([`gp::GpHyper`]: kernel kind,
+//! own subsystem under [`gp`], with interchangeable roles driven by one
+//! shared hyperparameter bundle ([`gp::GpHyper`]: kernel kind,
 //! lengthscale, noise, conditioning window):
 //!
-//! - **Incremental engine model** ([`gp::IncrementalGp`]) — the persistent
-//!   model `BayesOpt` keeps across a run. `tell` folds an observation in
-//!   as an O(n²) rank-1 Cholesky append; batched `ask`s condition on
-//!   in-flight trials by extending the factor with constant-liar
-//!   fantasies and retracting them after scoring; the candidate pool is
-//!   scored through one blocked cross-kernel panel + multi-RHS triangular
-//!   solve with zero heap allocation ([`gp::ScoreWorkspace`]).
+//! - **Incremental engine model** ([`gp::IncrementalGp`]) — the
+//!   persistent model conditioned across a run. `tell` folds an
+//!   observation in as an O(n²) rank-1 Cholesky append; batched `ask`s
+//!   condition on in-flight trials by extending the factor with
+//!   constant-liar fantasies and retracting them after scoring; the
+//!   candidate pool is scored through one blocked cross-kernel panel +
+//!   multi-RHS triangular solve with zero heap allocation
+//!   ([`gp::ScoreWorkspace`]).
+//! - **Shared concurrent handle** ([`gp::SharedSurrogate`]) — `BayesOpt`
+//!   *borrows* the model through this handle instead of owning it, so an
+//!   evaluator pool, remote daemons and whole concurrent sessions
+//!   ([`SessionGroup`]) can condition **one** factor: tells enqueue
+//!   without blocking a scoring pass; each ask drains the queue in
+//!   observation order and scores under an exclusive guard.
 //! - **Exact oracle** ([`gp::NativeGp`]) — the from-scratch reference
 //!   solve. The incremental model reproduces it bit-for-bit (pinned by
 //!   `rust/tests/surrogate_incremental.rs`); the scratch-refit engine
@@ -54,7 +64,10 @@
 //! - **AOT artifact** (`runtime::GpSurrogate`) — the compiled HLO graph
 //!   (L2 JAX + L1 Pallas RBF) executed via PJRT; RBF-only and compiled
 //!   for a fixed window, and it rejects hypers outside that contract so
-//!   the native and artifact paths can never silently disagree.
+//!   the native and artifact paths can never silently disagree. The
+//!   conditioning window exists **only** for parity with this compiled
+//!   shape; native-only runs may lift it
+//!   (`BayesOpt::with_history_window(None)`).
 //!
 //! Kernels (RBF, Matérn-5/2) live behind [`gp::Kernel`] /
 //! [`gp::KernelKind`] with log-marginal-likelihood lengthscale selection
@@ -66,15 +79,41 @@
 //! Pre-redesign code looked like `let cfg = tuner.propose(); ...;
 //! tuner.observe(&cfg, value)`. The equivalent today:
 //!
-//! ```ignore
+//! ```
+//! use tftune::algorithms::{Algorithm, Tuner};
+//! use tftune::evaluator::{Evaluator, SimEvaluator};
+//! use tftune::sim::ModelId;
+//!
+//! let space = ModelId::NcfFp32.space();
+//! let mut tuner = Algorithm::Bo.build(&space, 1);
+//! let mut evaluator = SimEvaluator::new(ModelId::NcfFp32, 1);
+//!
 //! let trial = tuner.ask(1).pop().unwrap();
-//! let m = evaluator.measure(&trial.config)?;   // Measurement, not f64
+//! let m = evaluator.measure(&trial.config).unwrap(); // Measurement, not f64
 //! tuner.tell(trial.id, &m);
 //! ```
 //!
 //! or, end to end, `evaluator::tune(&mut *tuner, &mut eval, iters)` for
-//! the serial loop and [`TuningSession`] for batched/parallel runs. See
-//! `examples/parallel_tuning.rs`.
+//! the serial loop and [`TuningSession`] for batched/parallel runs:
+//!
+//! ```
+//! use tftune::algorithms::Algorithm;
+//! use tftune::evaluator::{sim_pool, Objective};
+//! use tftune::sim::ModelId;
+//! use tftune::{Budget, TuningSession};
+//!
+//! let model = ModelId::NcfFp32;
+//! let mut session = TuningSession::new(
+//!     Algorithm::Bo.build(&model.space(), 1),
+//!     sim_pool(model, 1, 0.0, Objective::Throughput, 4),
+//!     Budget::evaluations(16).with_plateau(12, 0.01),
+//! );
+//! let history = session.run().unwrap();
+//! assert!(history.len() <= 16);
+//! ```
+//!
+//! See `examples/parallel_tuning.rs`, `examples/session_group.rs` and the
+//! example index in `README.md`.
 
 pub mod algorithms;
 pub mod config;
@@ -91,6 +130,7 @@ pub mod util;
 
 pub use algorithms::{Trial, TrialId};
 pub use config::TuneConfig;
+pub use gp::SharedSurrogate;
 pub use history::{Evaluation, History, Measurement};
-pub use session::{Budget, StopReason, TuningSession};
+pub use session::{Budget, SessionGroup, StopReason, TuningSession};
 pub use space::{ParamDef, SearchSpace};

@@ -20,6 +20,12 @@
 //!
 //! std::net + one thread per connection (tokio is not vendored in this
 //! offline image; the protocol is line-oriented and trivially blocking).
+//!
+//! On the host side, every measurement a daemon reports is told back to
+//! the engine and — for BO — lands in the shared surrogate factor
+//! (`gp::SharedSurrogate`) in arrival order, so a fleet of daemons
+//! sharded across machines amortises one GP rather than refitting per
+//! connection. See `ARCHITECTURE.md` §"The shared surrogate".
 
 pub mod proto;
 

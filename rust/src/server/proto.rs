@@ -4,15 +4,17 @@
 //! trial id that the target echoes back, so a host can pipeline several
 //! in-flight trials on one connection and match completions by id.
 //!
-//! Requests:
-//!   {"type":"describe"}
-//!   {"type":"evaluate","config":{"<param>":<int>,...}[,"trial":<id>]}
-//!   {"type":"shutdown"}
-//! Responses:
-//!   {"type":"target","description":"..."}
-//!   {"type":"result","value":<f64>,"cost_s":<f64>,"config":{...}[,"trial":<id>]}
-//!   {"type":"error","message":"..."[,"trial":<id>]}
-//!   {"type":"bye"}
+//! Requests and responses:
+//!
+//! ```text
+//! -> {"type":"describe"}
+//! -> {"type":"evaluate","config":{"<param>":<int>,...}[,"trial":<id>]}
+//! -> {"type":"shutdown"}
+//! <- {"type":"target","description":"..."}
+//! <- {"type":"result","value":<f64>,"cost_s":<f64>,"config":{...}[,"trial":<id>]}
+//! <- {"type":"error","message":"..."[,"trial":<id>]}
+//! <- {"type":"bye"}
+//! ```
 //!
 //! Untagged `evaluate` requests (the pre-ask/tell protocol) remain valid:
 //! their responses simply omit the trial id and are answered in order.

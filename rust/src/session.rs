@@ -12,6 +12,32 @@
 //! With a single evaluator the session runs inline on the caller's thread
 //! and is bit-for-bit identical to the serial `evaluator::tune()` loop —
 //! that is the `--parallel 1` reproducibility guarantee the tests pin.
+//!
+//! [`SessionGroup`] runs *several* sessions concurrently on one host —
+//! one thread per session — which is where the shared surrogate earns its
+//! keep: give every BO engine in the group a handle to one
+//! [`SharedSurrogate`] ([`SessionGroup::shared_bo`] wires this up) and
+//! all of their measurements condition a single incremental factor
+//! instead of each session refitting its own.
+//!
+//! # Example
+//!
+//! ```
+//! use tftune::algorithms::Algorithm;
+//! use tftune::evaluator::{sim_pool, Objective};
+//! use tftune::session::{Budget, StopReason, TuningSession};
+//! use tftune::sim::ModelId;
+//!
+//! let model = ModelId::NcfFp32;
+//! let mut session = TuningSession::new(
+//!     Algorithm::Bo.build(&model.space(), 7),
+//!     sim_pool(model, 7, 0.0, Objective::Throughput, 2), // 2 evaluator threads
+//!     Budget::evaluations(12),
+//! );
+//! let history = session.run().unwrap();
+//! assert_eq!(history.len(), 12);
+//! assert_eq!(session.stop_reason(), Some(StopReason::MaxEvaluations));
+//! ```
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -19,9 +45,11 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::algorithms::{Trial, Tuner};
+use crate::algorithms::{BayesOpt, Trial, Tuner};
 use crate::evaluator::Evaluator;
+use crate::gp::{GpHyper, SharedSurrogate};
 use crate::history::{History, Measurement};
+use crate::space::SearchSpace;
 
 /// Plateau stop: end the run after `window` consecutive completed trials
 /// without a relative improvement of at least `min_rel_gain` over the best
@@ -33,6 +61,20 @@ pub struct Plateau {
 }
 
 /// Stopping rules for a [`TuningSession`]. At least one rule must be set.
+///
+/// Rules compose; the first one to fire stops the session:
+///
+/// ```
+/// use tftune::session::{Budget, Plateau};
+///
+/// let b = Budget::evaluations(50)       // the paper's per-run cap
+///     .with_max_seconds(300.0)          // …or five minutes of wall clock
+///     .with_plateau(8, 0.01);           // …or 8 trials without +1% gain
+/// assert!(b.is_bounded());
+/// assert_eq!(b.max_evaluations, Some(50));
+/// assert_eq!(b.plateau, Some(Plateau { window: 8, min_rel_gain: 0.01 }));
+/// assert!(!Budget::default().is_bounded()); // no rule: session refuses to run
+/// ```
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Budget {
     /// Stop after this many completed evaluations (the paper caps at 50).
@@ -124,11 +166,12 @@ impl PlateauTracker {
 
 /// Per-trial callback: invoked on the driving thread for every completed
 /// trial, in completion order (streaming history out of a long run).
-pub type TrialCallback = Box<dyn FnMut(&Trial, &Measurement)>;
+/// `Send` so whole sessions can run on [`SessionGroup`] threads.
+pub type TrialCallback = Box<dyn FnMut(&Trial, &Measurement) + Send>;
 
 /// The tuning driver: engine + evaluator pool + budget (module docs).
 pub struct TuningSession {
-    tuner: Box<dyn Tuner>,
+    tuner: Box<dyn Tuner + Send>,
     evaluators: Vec<Box<dyn Evaluator + Send>>,
     budget: Budget,
     on_trial: Option<TrialCallback>,
@@ -137,7 +180,7 @@ pub struct TuningSession {
 
 impl TuningSession {
     pub fn new(
-        tuner: Box<dyn Tuner>,
+        tuner: Box<dyn Tuner + Send>,
         evaluators: Vec<Box<dyn Evaluator + Send>>,
         budget: Budget,
     ) -> TuningSession {
@@ -145,7 +188,10 @@ impl TuningSession {
     }
 
     /// Stream every completed trial through `callback`.
-    pub fn on_trial(mut self, callback: impl FnMut(&Trial, &Measurement) + 'static) -> Self {
+    pub fn on_trial(
+        mut self,
+        callback: impl FnMut(&Trial, &Measurement) + Send + 'static,
+    ) -> Self {
         self.on_trial = Some(Box::new(callback));
         self
     }
@@ -328,6 +374,92 @@ impl TuningSession {
     }
 }
 
+/// Several [`TuningSession`]s driven concurrently on one host — one
+/// thread per session, each with its own engine, evaluator pool and
+/// budget.
+///
+/// The group is surrogate-agnostic: sessions may be fully independent.
+/// The intended use, though, is [`SessionGroup::shared_bo`]: every BO
+/// engine borrows a handle to **one** [`SharedSurrogate`] per search
+/// space, so all concurrent measurements condition a single incremental
+/// factor (tells enqueue without blocking; each engine's ask drains and
+/// scores under the model lock — see `gp::shared` for the contract).
+pub struct SessionGroup {
+    sessions: Vec<TuningSession>,
+}
+
+impl Default for SessionGroup {
+    fn default() -> Self {
+        SessionGroup::new()
+    }
+}
+
+impl SessionGroup {
+    pub fn new() -> SessionGroup {
+        SessionGroup { sessions: Vec::new() }
+    }
+
+    /// Add a session to the group.
+    pub fn push(&mut self, session: TuningSession) {
+        self.sessions.push(session);
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// One BO session per seed, all conditioning a single shared
+    /// surrogate over `space`. `make_pool(i)` supplies the i-th session's
+    /// evaluator pool. Returns the handle (observable/reusable after the
+    /// run) and the ready-to-run group.
+    pub fn shared_bo(
+        space: &SearchSpace,
+        seeds: &[u64],
+        budget: Budget,
+        mut make_pool: impl FnMut(usize) -> Vec<Box<dyn Evaluator + Send>>,
+    ) -> (SharedSurrogate, SessionGroup) {
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let mut group = SessionGroup::new();
+        for (i, &seed) in seeds.iter().enumerate() {
+            let tuner =
+                Box::new(BayesOpt::new(space.clone(), seed).with_shared_surrogate(shared.clone()));
+            group.push(TuningSession::new(tuner, make_pool(i), budget.clone()));
+        }
+        (shared, group)
+    }
+
+    /// Run every session to its stop, concurrently, and return their
+    /// histories in push order. The first session error (or panic) is
+    /// propagated after all sessions have finished.
+    pub fn run(&mut self) -> Result<Vec<History>> {
+        anyhow::ensure!(!self.sessions.is_empty(), "session group is empty");
+        let results: Vec<Result<History>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .sessions
+                .iter_mut()
+                .map(|session| scope.spawn(move || session.run()))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow::anyhow!("session thread panicked")))
+                })
+                .collect()
+        });
+        results.into_iter().collect()
+    }
+
+    /// Why each session ended (push order; None before the first run).
+    pub fn stop_reasons(&self) -> Vec<Option<StopReason>> {
+        self.sessions.iter().map(|s| s.stop_reason()).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -503,6 +635,70 @@ mod tests {
         );
         let err = session.run().unwrap_err();
         assert!(err.to_string().contains("evaluator panicked"), "{err}");
+    }
+
+    #[test]
+    fn session_group_runs_independent_sessions() {
+        let model = ModelId::NcfFp32;
+        let mut group = SessionGroup::new();
+        for seed in [1u64, 2, 3] {
+            group.push(TuningSession::new(
+                Algorithm::Random.build(&model.space(), seed),
+                sim_pool(model, seed, 0.0, Objective::Throughput, 1),
+                Budget::evaluations(6),
+            ));
+        }
+        assert_eq!(group.len(), 3);
+        let histories = group.run().unwrap();
+        assert_eq!(histories.len(), 3);
+        for h in &histories {
+            assert_eq!(h.len(), 6);
+        }
+        assert_eq!(group.stop_reasons(), vec![Some(StopReason::MaxEvaluations); 3]);
+    }
+
+    #[test]
+    fn session_group_shared_bo_conditions_one_factor() {
+        // Three concurrent BO sessions over one search space: all their
+        // measurements must land in the single shared surrogate.
+        let model = ModelId::BertFp32;
+        let space = model.space();
+        let (shared, mut group) =
+            SessionGroup::shared_bo(&space, &[10, 11, 12], Budget::evaluations(10), |i| {
+                sim_pool(model, 100 + i as u64, 0.0, Objective::Throughput, 2)
+            });
+        let histories = group.run().unwrap();
+        assert_eq!(histories.len(), 3);
+        for h in &histories {
+            assert_eq!(h.len(), 10);
+            for e in h.iter() {
+                assert!(space.contains(&e.config));
+            }
+        }
+        // Every completed trial of every session conditions the factor.
+        assert_eq!(shared.total_observations(), 30);
+        let mut g = shared.lock();
+        assert_eq!(g.len(), 30);
+        let idx = g.conditioning_set();
+        assert!(g.sync(&idx), "shared factor must be buildable after the run");
+    }
+
+    #[test]
+    fn session_group_propagates_errors() {
+        let model = ModelId::NcfFp32;
+        let mut group = SessionGroup::new();
+        group.push(TuningSession::new(
+            Algorithm::Random.build(&model.space(), 5),
+            sim_pool(model, 5, 0.0, Objective::Throughput, 1),
+            Budget::evaluations(4),
+        ));
+        group.push(TuningSession::new(
+            Algorithm::Random.build(&model.space(), 6),
+            vec![Box::new(FailAfter(Default::default(), 1))],
+            Budget::evaluations(4),
+        ));
+        let err = group.run().unwrap_err();
+        assert!(err.to_string().contains("injected pool failure"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! The shared concurrent surrogate contract, pinned at integration level:
+//!
+//! 1. N threads telling into one [`SharedSurrogate`] produce, after the
+//!    drain, a posterior within 1e-9 of the serial private-model path
+//!    (one `IncrementalGp` fed the same observations on one thread).
+//! 2. Tells stream in *while* an ask-side loop scores (drain, sync,
+//!    fantasy-extend, blocked scoring) without blocking, losing or
+//!    reordering-beyond-enqueue any observation.
+//! 3. Attaching a fresh handle to a BO engine changes nothing for a sole
+//!    owner: the trajectory is identical to the default private engine.
+//! 4. Out-of-order tells on the remote evaluator path: daemon responses
+//!    shuffled across two shards condition the shared factor exactly as
+//!    a serial run fed the same completion order (and `History` records
+//!    that order faithfully).
+
+use tftune::algorithms::{BayesOpt, Tuner};
+use tftune::evaluator::{RemoteEvaluator, SimEvaluator};
+use tftune::gp::{GpHyper, IncrementalGp, ScoreWorkspace, SharedSurrogate};
+use tftune::history::{History, Measurement};
+use tftune::server::TargetServer;
+use tftune::sim::ModelId;
+use tftune::space::threading_space;
+use tftune::util::{prop, Rng};
+
+fn toy_obs(rng: &mut Rng, n: usize, d: usize) -> Vec<(Vec<f64>, f64)> {
+    (0..n)
+        .map(|_| {
+            let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+            let y = (3.0 * x[0]).sin() - 0.5 * x[d - 1];
+            (x, y)
+        })
+        .collect()
+}
+
+fn obs_key(x: &[f64], y: f64) -> (Vec<u64>, u64) {
+    (x.iter().map(|v| v.to_bits()).collect(), y.to_bits())
+}
+
+#[test]
+fn concurrent_tells_match_serial_private_model() {
+    let hyper = GpHyper::default();
+    let mut rng = Rng::new(41);
+    let (n, d) = (48usize, 4usize);
+    let obs = toy_obs(&mut rng, n, d);
+    let cand: Vec<f64> = (0..8 * d).map(|_| rng.f64()).collect();
+
+    // Four evaluator threads tell disjoint chunks concurrently.
+    let shared = SharedSurrogate::new(hyper);
+    std::thread::scope(|scope| {
+        for chunk in obs.chunks(n / 4) {
+            let handle = shared.clone();
+            scope.spawn(move || {
+                for (x, y) in chunk {
+                    handle.tell(x.clone(), *y);
+                }
+            });
+        }
+    });
+    assert_eq!(shared.total_observations(), n);
+
+    let mut g = shared.lock();
+    assert_eq!(g.len(), n, "a tell was lost");
+    // The drained store is a permutation of the input set, bit-exact.
+    let mut got: Vec<_> = (0..n).map(|i| obs_key(g.x(i), g.y(i))).collect();
+    let mut want: Vec<_> = obs.iter().map(|(x, y)| obs_key(x, *y)).collect();
+    got.sort();
+    want.sort();
+    assert_eq!(got, want, "drained observations are not the told set");
+
+    // Score through the shared factor (drain order)...
+    let idx = g.conditioning_set();
+    assert_eq!(idx.len(), n);
+    assert!(g.sync(&idx));
+    let y_guard: Vec<f64> = (0..n).map(|i| g.y(i)).collect();
+    g.set_targets(&y_guard);
+    let mut ws = ScoreWorkspace::default();
+    g.score_into(&cand, 8, 1.5, 0.3, &mut ws);
+
+    // ...and through the serial private-model path (canonical order).
+    let mut private = IncrementalGp::new(hyper);
+    for (x, y) in &obs {
+        assert!(private.push(x, *y));
+    }
+    let y_all: Vec<f64> = obs.iter().map(|(_, y)| *y).collect();
+    private.set_targets(&y_all);
+    let mut ws_ref = ScoreWorkspace::default();
+    private.score_into(&cand, 8, 1.5, 0.3, &mut ws_ref);
+
+    // The GP posterior is permutation invariant; thread interleaving may
+    // only move it within numerical noise.
+    for j in 0..8 {
+        assert!(
+            (ws.mean[j] - ws_ref.mean[j]).abs() <= 1e-9,
+            "mean diverged under concurrency: {} vs {}",
+            ws.mean[j],
+            ws_ref.mean[j]
+        );
+        assert!(
+            (ws.std[j] - ws_ref.std[j]).abs() <= 1e-9,
+            "std diverged under concurrency: {} vs {}",
+            ws.std[j],
+            ws_ref.std[j]
+        );
+    }
+}
+
+#[test]
+fn asks_interleave_with_streaming_tells() {
+    let hyper = GpHyper::default();
+    let shared = SharedSurrogate::new(hyper);
+    let (total, d) = (120usize, 3usize);
+
+    std::thread::scope(|scope| {
+        for t in 0..3u64 {
+            let handle = shared.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for i in 0..total / 3 {
+                    let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                    handle.tell(x, (i as f64 * 0.1).sin());
+                    if i % 8 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+
+        // Ask loop on this thread: every pass drains whatever has queued,
+        // rebuilds/extends the factor past the window, fantasy-extends
+        // and scores — while tells keep streaming in.
+        let mut ws = ScoreWorkspace::default();
+        let cand = vec![0.5; d];
+        let fantasy = vec![0.25; d];
+        let mut seen = 0usize;
+        while seen < total {
+            let mut g = shared.lock();
+            assert!(g.len() >= seen, "observation count went backwards");
+            seen = g.len();
+            if g.len() >= 2 {
+                let idx = g.conditioning_set();
+                assert!(idx.len() <= hyper.max_history);
+                assert!(g.sync(&idx), "sync failed mid-stream");
+                let y: Vec<f64> = idx.iter().map(|&i| g.y(i)).collect();
+                g.set_targets(&y);
+                assert!(g.extend_fantasy(&fantasy, 0.0));
+                g.score_into(&cand, 1, 1.5, 0.0, &mut ws);
+                assert!(ws.mean[0].is_finite());
+                assert!(ws.std[0] > 0.0);
+            }
+            drop(g); // retracts the fantasy; releases the model lock
+            std::thread::yield_now();
+        }
+    });
+    // Every tell landed exactly once.
+    assert_eq!(shared.lock().len(), total);
+    assert_eq!(shared.pending(), 0);
+}
+
+#[test]
+fn attached_handle_preserves_the_sole_owner_trajectory() {
+    // A BO engine given an explicit (empty) shared handle must walk the
+    // exact trajectory of the default private engine: borrowing the model
+    // through the handle is behaviour-neutral for a sole owner.
+    let space = threading_space(64, 1024, 64);
+    let target = space.to_unit(&vec![2, 36, 704, 120, 44]);
+    let objective = |cfg: &Vec<i64>| {
+        let u = space.to_unit(cfg);
+        8.0 - 8.0 * u.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+    };
+    let mut private = BayesOpt::new(space.clone(), 33);
+    let handle = SharedSurrogate::new(GpHyper::default());
+    let mut attached = BayesOpt::new(space.clone(), 33).with_shared_surrogate(handle.clone());
+    for step in 0..20 {
+        let a = private.ask(1).pop().unwrap();
+        let b = attached.ask(1).pop().unwrap();
+        assert_eq!(a.config, b.config, "diverged at step {step}");
+        let v = objective(&a.config);
+        private.tell(a.id, &Measurement::new(v));
+        attached.tell(b.id, &Measurement::new(v));
+    }
+    assert_eq!(handle.len(), 20);
+}
+
+#[test]
+fn prop_remote_out_of_order_tells_match_serial_path() {
+    // Two daemon shards answer a pipelined batch; the host tells results
+    // back in a random completion order. The shared factor must condition
+    // exactly as a serial run fed the same order, and History must record
+    // that order.
+    let model = ModelId::NcfFp32;
+    let space = model.space();
+    prop::check("remote out-of-order tells", 4, |rng| {
+        let mut shards = Vec::new();
+        for s in 0..2u64 {
+            let server = TargetServer::bind(
+                "127.0.0.1:0",
+                space.clone(),
+                Box::new(SimEvaluator::new(model, 50 + s)),
+            )
+            .unwrap();
+            let (addr, handle) = server.spawn().unwrap();
+            let remote = RemoteEvaluator::connect(&addr.to_string(), space.clone()).unwrap();
+            shards.push((remote, handle));
+        }
+
+        let mut engine = BayesOpt::new(space.clone(), rng.next_u64());
+        let trials = engine.ask(6);
+        assert_eq!(trials.len(), 6);
+        // Shard the batch: 3 pipelined trials per daemon connection.
+        for (i, t) in trials.iter().enumerate() {
+            shards[i % 2].0.submit(t).unwrap();
+        }
+        let mut done: Vec<(u64, Measurement)> = Vec::new();
+        for (shard, _) in shards.iter_mut() {
+            for _ in 0..3 {
+                let (id, m) = shard.recv_measurement().unwrap();
+                done.push((id.expect("daemon echoes trial ids"), m));
+            }
+        }
+        // Random completion order across the shards.
+        rng.shuffle(&mut done);
+
+        let mut history = History::new();
+        for (id, m) in &done {
+            let cfg = trials
+                .iter()
+                .find(|t| t.id == *id)
+                .expect("echoed id was issued")
+                .config
+                .clone();
+            engine.tell(*id, m);
+            history.push_trial(*id, cfg, m);
+        }
+
+        // History records completion order faithfully.
+        for (pos, e) in history.iter().enumerate() {
+            assert_eq!(e.iteration, pos);
+            assert_eq!(e.trial_id, done[pos].0);
+        }
+        let mut got_ids: Vec<u64> = history.iter().map(|e| e.trial_id).collect();
+        got_ids.sort_unstable();
+        let mut want_ids: Vec<u64> = trials.iter().map(|t| t.id).collect();
+        want_ids.sort_unstable();
+        assert_eq!(got_ids, want_ids, "every trial answered exactly once");
+
+        // Serial replay: telling the same (config, value) sequence into a
+        // fresh surrogate must reproduce the engine's shared store and
+        // factor bit for bit.
+        let serial = SharedSurrogate::new(engine.hyper());
+        for e in history.iter() {
+            serial.tell(space.to_unit(&e.config), e.value);
+        }
+        let engine_shared = engine.surrogate_handle();
+        let mut ga = engine_shared.lock();
+        let mut gb = serial.lock();
+        assert_eq!(ga.len(), 6);
+        assert_eq!(gb.len(), 6);
+        for i in 0..6 {
+            assert_eq!(
+                obs_key(ga.x(i), ga.y(i)),
+                obs_key(gb.x(i), gb.y(i)),
+                "shared-factor observation {i} disagrees with the serial path"
+            );
+        }
+        // Identical stores in identical order: the factored posteriors
+        // must agree bitwise.
+        let cand: Vec<f64> = (0..2 * space.dim()).map(|_| rng.f64()).collect();
+        let (mut wa, mut wb) = (ScoreWorkspace::default(), ScoreWorkspace::default());
+        for (g, ws) in [(&mut ga, &mut wa), (&mut gb, &mut wb)] {
+            let idx = g.conditioning_set();
+            assert!(g.sync(&idx));
+            let y: Vec<f64> = idx.iter().map(|&i| g.y(i)).collect();
+            g.set_targets(&y);
+            g.score_into(&cand, 2, 1.5, 0.0, ws);
+        }
+        for j in 0..2 {
+            assert_eq!(wa.mean[j].to_bits(), wb.mean[j].to_bits());
+            assert_eq!(wa.std[j].to_bits(), wb.std[j].to_bits());
+        }
+        drop(ga);
+        drop(gb);
+
+        for (remote, handle) in shards {
+            remote.shutdown().unwrap();
+            let _ = handle.join();
+        }
+    });
+}
