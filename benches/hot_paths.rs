@@ -3,6 +3,7 @@
 //!   - simulator evaluation (L3 substrate)
 //!   - native GP fit+score vs the AOT HLO GP via PJRT (L2+L1), by history size
 //!   - shared-surrogate tell enqueue + ask under teller contention
+//!   - surrogate service: factor-delta export/encode + remote tell round trip
 //!   - BO / GA / NMS propose cost
 //!   - candidate generation + argmax
 //!   - host/target TCP round trip
@@ -172,8 +173,71 @@ fn main() -> anyhow::Result<()> {
         (r_tell, r_ask)
     };
 
+    println!("\n== surrogate service: delta export + remote tell round trip ==");
+    let (r_sync_delta, r_remote_tell) = {
+        use tftune::server::proto::{
+            encode_surrogate_response, SurrogateResponse,
+        };
+        use tftune::server::TargetServer;
+
+        // surrogate_sync_delta: the service-side cost of a Δn=4 catch-up
+        // at n=64 — drain check, suffix slice, wire encode. This is what
+        // every replica ask pays on the server.
+        let hyper = GpHyper::default();
+        let authority = SharedSurrogate::new(hyper);
+        let mut seed_rng = Rng::new(0xDE17A);
+        for _ in 0..64 {
+            let x: Vec<f64> = (0..5).map(|_| seed_rng.f64()).collect();
+            authority.tell(x, seed_rng.f64());
+        }
+        drop(authority.lock()); // drain + eager factor to n=64
+        let r_sync = b.bench("gp/surrogate_sync_delta dn=4 n=64", || {
+            let d = authority.export_delta(60).unwrap();
+            encode_surrogate_response(&SurrogateResponse::FactorDelta(d)).len()
+        });
+
+        // remote_tell_roundtrip: one tell-obs line plus the sync that
+        // makes it visible in the replica's mirror — the full
+        // cross-process tell→conditioned path over loopback TCP.
+        let (server, _factor) = TargetServer::bind_surrogate_only("127.0.0.1:0", hyper)?;
+        let (addr, handle) = server.spawn()?;
+        let replica = tftune::gp::RemoteSurrogate::connect(&addr.to_string())?;
+        use tftune::gp::SurrogateHandle;
+        let row: Vec<f64> = (0..5).map(|_| rng.f64()).collect();
+        let r_tell_rt = b.bench("gp/remote_tell_roundtrip", || {
+            replica.tell(row.clone(), 1.0);
+            let g = replica.lock(); // sync-factor round trip + import
+            g.len()
+        });
+        // shut the service down via the evaluate plane
+        {
+            use std::io::Write;
+            let space = tftune::space::threading_space(64, 1024, 64);
+            let mut s = std::net::TcpStream::connect(addr)?;
+            writeln!(
+                s,
+                "{}",
+                tftune::server::proto::encode_request(
+                    &tftune::server::proto::Request::Shutdown,
+                    &space
+                )
+            )?;
+        }
+        let _ = handle.join();
+        (r_sync, r_tell_rt)
+    };
+
     write_gp_bench_json(
-        &[&r_scratch, &r_append, &r_score, &r_fit_only, &r_shared_tell, &r_shared_ask],
+        &[
+            &r_scratch,
+            &r_append,
+            &r_score,
+            &r_fit_only,
+            &r_shared_tell,
+            &r_shared_ask,
+            &r_sync_delta,
+            &r_remote_tell,
+        ],
         64,
         512,
         speedup,
@@ -250,7 +314,8 @@ fn main() -> anyhow::Result<()> {
 /// Persist the surrogate-subsystem baseline (ISSUE 2 acceptance: the
 /// incremental append + blocked scoring must beat the scratch refit at
 /// n=64 / 512 candidates; ISSUE 3 adds the contended shared tell/ask
-/// pair). Keys are the bench short names.
+/// pair; ISSUE 4 adds the surrogate-service pair — `surrogate_sync_delta`
+/// / `remote_tell_roundtrip`). Keys are the bench short names.
 fn write_gp_bench_json(
     results: &[&BenchResult],
     n: usize,

@@ -11,13 +11,18 @@
 //!
 //! Step 3 is the numeric hot path. With the native stack the engine
 //! conditions a persistent incremental model that it *borrows* rather than
-//! owns: a [`SharedSurrogate`] handle. In the default (private) case the
-//! engine is the handle's only user and behaviour is identical to owning
-//! the model; attach a handle shared with other engines
-//! ([`BayesOpt::with_shared_surrogate`]) and every `tell` from every
-//! session lands in **one** factor — the whole-host surrogate the paper's
-//! amortisation argument wants (see `gp::shared` for the concurrency
-//! contract). Each `tell` enqueues its observation (never blocking a
+//! owns, through the [`SurrogateHandle`] contract. In the default
+//! (private) case the engine is the handle's only user and behaviour is
+//! identical to owning the model; attach a handle shared with other
+//! engines ([`BayesOpt::with_shared_surrogate`]) and every `tell` from
+//! every session lands in **one** factor — the whole-host surrogate the
+//! paper's amortisation argument wants (see `gp::shared` for the
+//! concurrency contract). The handle may equally be a
+//! [`crate::gp::RemoteSurrogate`]: a replica of a factor *served over
+//! TCP*, so separate tuner processes (or hosts) condition one model —
+//! the engine code is identical, and sibling processes' in-flight trials
+//! arrive as leased *ambient fantasies* the batch conditions on alongside
+//! its own. Each `tell` enqueues its observation (never blocking a
 //! concurrent scoring pass); each `ask` drains the queue in observation
 //! order as O(n²) rank-1 Cholesky appends, conditions on in-flight trials
 //! by *extending* the factor with constant-liar fantasies, and scores the
@@ -41,7 +46,7 @@
 use super::{Trial, TrialBook, TrialId, Tuner};
 use crate::gp::{
     select_lengthscale, GpHyper, KernelKind, NativeSurrogate, ScoreWorkspace, SharedSurrogate,
-    Surrogate, SurrogateGuard, UNBOUNDED_HISTORY,
+    Surrogate, SurrogateGuard, SurrogateHandle, UNBOUNDED_HISTORY,
 };
 use crate::history::Measurement;
 use crate::space::{Config, SearchSpace};
@@ -97,10 +102,12 @@ pub struct BayesOpt<S: Surrogate = NativeSurrogate> {
     /// constant-liar fantasies (at the standardised mean) so a batch of
     /// `ask`ed trials spreads out instead of collapsing onto one point.
     book: TrialBook,
-    /// Handle to the persistent incremental model (native stack only).
-    /// Private by default; [`BayesOpt::with_shared_surrogate`] attaches a
-    /// handle shared with other engines/sessions.
-    shared: SharedSurrogate,
+    /// Handle to the persistent incremental model (native stack only),
+    /// behind the [`SurrogateHandle`] contract. Private by default;
+    /// [`BayesOpt::with_shared_surrogate`] attaches a handle shared with
+    /// other engines/sessions — in-process ([`SharedSurrogate`]) or a
+    /// replica of a served factor ([`crate::gp::RemoteSurrogate`]).
+    shared: Box<dyn SurrogateHandle>,
     /// Reusable scoring buffers (zero-allocation hot path).
     ws: ScoreWorkspace,
     /// Flattened candidate pool (n_candidates × dim), reused per ask.
@@ -125,7 +132,7 @@ impl<S: Surrogate> BayesOpt<S> {
         let mut pending_init = space.latin_hypercube(INIT_DESIGN, &mut rng);
         pending_init.reverse(); // pop from back in LHS order
         let hyper = GpHyper::default();
-        let shared = SharedSurrogate::new(hyper);
+        let shared: Box<dyn SurrogateHandle> = Box::new(SharedSurrogate::new(hyper));
         if !surrogate.use_engine_incremental() {
             // Fused-refit surrogates (HLO artifact, scratch reference)
             // never score through the factor — keep drains O(1).
@@ -152,16 +159,21 @@ impl<S: Surrogate> BayesOpt<S> {
     }
 
     /// Condition this engine on a surrogate shared with other engines or
-    /// sessions (one factor per search space — see `gp::shared`). The
-    /// engine adopts the handle's hyperparameters, so attach the handle
-    /// *before* kernel/window overrides and before any tuning starts.
+    /// sessions (one factor per search space — see `gp::shared`): an
+    /// in-process [`SharedSurrogate`] or a [`crate::gp::RemoteSurrogate`]
+    /// replica of a served factor — any [`SurrogateHandle`]. The engine
+    /// adopts the handle's hyperparameters, so attach the handle *before*
+    /// kernel/window overrides and before any tuning starts.
     ///
     /// An incremental engine turns eager factoring on for the whole
     /// handle (it scores through the factor); a fused-refit engine
     /// leaves the handle's setting alone, since siblings may still need
     /// the factor — if *no* attached engine is incremental, disable it
     /// via [`SharedSurrogate::set_eager_factoring`].
-    pub fn with_shared_surrogate(mut self, handle: SharedSurrogate) -> BayesOpt<S> {
+    pub fn with_shared_surrogate(
+        mut self,
+        handle: impl SurrogateHandle + 'static,
+    ) -> BayesOpt<S> {
         assert!(
             self.observed.is_empty() && self.book.open_len() == 0,
             "attach the shared surrogate before tuning starts"
@@ -175,14 +187,14 @@ impl<S: Surrogate> BayesOpt<S> {
             handle.set_eager_factoring(true);
         }
         self.hyper = handle.hyper();
-        self.shared = handle;
+        self.shared = Box::new(handle);
         self
     }
 
     /// A cloneable handle to the surrogate this engine conditions —
     /// attach it to further engines via [`BayesOpt::with_shared_surrogate`].
-    pub fn surrogate_handle(&self) -> SharedSurrogate {
-        self.shared.clone()
+    pub fn surrogate_handle(&self) -> Box<dyn SurrogateHandle> {
+        self.shared.clone_handle()
     }
 
     /// Override the acquisition optimism (ablation A2).
@@ -256,7 +268,9 @@ impl<S: Surrogate> BayesOpt<S> {
     /// Bring the shared factor to scoring state for this batch: grow (or
     /// rebuild) it over `idx`, install the standardised targets, and
     /// condition on every in-flight trial as a constant-liar fantasy
-    /// (capped so the set still fits the window / artifact N_PAD).
+    /// (capped so the set still fits the window / artifact N_PAD) — this
+    /// engine's own open trials first, then sibling *processes'* leased
+    /// points (ambient fantasies served back by a surrogate service).
     /// Returns false (factor cleared) if it could not be grown.
     fn setup_incremental(&self, g: &mut SurrogateGuard<'_>, idx: &[usize]) -> bool {
         if !g.sync(idx) {
@@ -276,6 +290,18 @@ impl<S: Surrogate> BayesOpt<S> {
                 break;
             }
         }
+        // Sibling processes' in-flight trials, untracked so this engine's
+        // published lease never echoes points it does not own. A refused
+        // point (dimension mismatch from a misconfigured sibling, non-PD
+        // extension) is skipped, not fatal — the remaining leases still
+        // condition the batch.
+        for k in 0..g.ambient_len() {
+            if g.total() >= window {
+                break;
+            }
+            let (x, lie) = g.ambient_point(k);
+            let _ = g.extend_fantasy_untracked(&x, lie);
+        }
         true
     }
 
@@ -292,6 +318,17 @@ impl<S: Surrogate> BayesOpt<S> {
             }
             x.push(self.space.to_unit(cfg));
             y.push(0.0);
+        }
+        for k in 0..g.ambient_len() {
+            if x.len() >= window {
+                break;
+            }
+            let (ax, lie) = g.ambient_point(k);
+            if ax.len() != dim {
+                continue; // misconfigured sibling's lease: skip, not fatal
+            }
+            x.push(ax);
+            y.push(lie);
         }
         let cands: Vec<Vec<f64>> = self.cand_flat.chunks(dim).map(|c| c.to_vec()).collect();
         match self.surrogate.fit_score(&x, &y, &cands, self.hyper, self.acq_alpha, y_best) {
@@ -423,7 +460,7 @@ impl<S: Surrogate> Tuner for BayesOpt<S> {
         if !self.pending_init.is_empty() && self.shared.total_observations() >= INIT_DESIGN {
             self.pending_init.clear();
         }
-        let shared = self.shared.clone();
+        let shared = self.shared.clone_handle();
         let mut guard: Option<SurrogateGuard<'_>> = None;
         let mut ctx: Option<BatchCtx> = None;
         let mut inc_ready = false;
@@ -737,7 +774,8 @@ mod tests {
         for _ in 0..INIT_DESIGN + 3 {
             step(&mut bo, &obj);
         }
-        let g = bo.surrogate_handle().lock();
+        let handle = bo.surrogate_handle();
+        let g = handle.lock();
         assert_eq!(g.len(), INIT_DESIGN + 3, "observations still recorded");
         assert_eq!(g.total(), 0, "no factor rows for a fused-refit surrogate");
     }

@@ -57,6 +57,15 @@ pub struct TuneConfig {
     pub max_seconds: Option<f64>,
     /// Where to write the history JSONL (None = don't persist).
     pub history_out: Option<PathBuf>,
+    /// Address of a surrogate service (`surrogate-serve`) to condition
+    /// against: the BO engine attaches a `RemoteSurrogate` replica, so
+    /// several tuner processes share one factor. BO only.
+    pub surrogate_addr: Option<String>,
+    /// Re-select the GP lengthscale by log marginal likelihood as history
+    /// grows (`BayesOpt::with_lengthscale_selection`). Drives the native
+    /// stack *and* the AOT HLO artifact — the artifact takes lengthscale
+    /// as a runtime input, so no recompilation is involved. BO only.
+    pub tune_lengthscale: bool,
 }
 
 impl Default for TuneConfig {
@@ -72,6 +81,8 @@ impl Default for TuneConfig {
             parallel: 1,
             max_seconds: None,
             history_out: None,
+            surrogate_addr: None,
+            tune_lengthscale: false,
         }
     }
 }
@@ -101,6 +112,14 @@ impl TuneConfig {
                     None => Json::Null,
                 },
             ),
+            (
+                "surrogate_addr",
+                match &self.surrogate_addr {
+                    Some(a) => a.as_str().into(),
+                    None => Json::Null,
+                },
+            ),
+            ("tune_lengthscale", self.tune_lengthscale.into()),
         ])
     }
 
@@ -143,6 +162,12 @@ impl TuneConfig {
         if let Some(p) = j.get("history_out").and_then(Json::as_str) {
             cfg.history_out = Some(PathBuf::from(p));
         }
+        if let Some(a) = j.get("surrogate_addr").and_then(Json::as_str) {
+            cfg.surrogate_addr = Some(a.to_string());
+        }
+        if let Some(t) = j.get("tune_lengthscale").and_then(Json::as_bool) {
+            cfg.tune_lengthscale = t;
+        }
         Ok(cfg)
     }
 
@@ -164,17 +189,65 @@ impl TuneConfig {
 
 impl TuneConfig {
     /// Build the tuning engine this spec asks for, honouring the surrogate
-    /// choice for BO (HLO = the AOT artifact via PJRT). `Send` so the
-    /// session can be driven from a `SessionGroup` thread.
+    /// choice for BO (HLO = the AOT artifact via PJRT), the surrogate
+    /// service attachment and the lengthscale-selection flag. `Send` so
+    /// the session can be driven from a `SessionGroup` thread.
     pub fn build_tuner(&self) -> Result<Box<dyn crate::algorithms::Tuner + Send>> {
-        let space = self.model.space();
-        if self.algorithm == Algorithm::Bo && self.surrogate == SurrogateKind::Hlo {
-            let surrogate = crate::runtime::GpSurrogate::open_default()
-                .context("loading the GP HLO artifact (run `make artifacts`)")?;
-            return Ok(Box::new(crate::algorithms::BayesOpt::with_surrogate(
-                space, self.seed, surrogate,
-            )));
+        /// Attach the BO-only run-spec options in the required order:
+        /// remote factor replica first (the engine adopts the service's
+        /// hypers), then lengthscale selection.
+        fn finish<S: crate::gp::Surrogate + Send + 'static>(
+            mut bo: crate::algorithms::BayesOpt<S>,
+            cfg: &TuneConfig,
+        ) -> Result<Box<dyn crate::algorithms::Tuner + Send>> {
+            if let Some(addr) = &cfg.surrogate_addr {
+                // Per-ask lengthscale selection acts on the local mirror
+                // only and the next sync re-adopts the service's hypers —
+                // the selection would silently never stick while forcing a
+                // factor rebuild per ask. Refuse the combination; set
+                // hypers on the service instead (SurrogateHandle::set_hyper
+                // writes through).
+                anyhow::ensure!(
+                    !cfg.tune_lengthscale,
+                    "tune_lengthscale cannot be combined with surrogate_addr: selection is \
+                     per-ask and would fight the served factor's hypers"
+                );
+                let replica = crate::gp::RemoteSurrogate::connect(addr)
+                    .with_context(|| format!("attaching surrogate service {addr}"))?;
+                bo = bo.with_shared_surrogate(replica);
+            }
+            if cfg.tune_lengthscale {
+                bo = bo.with_lengthscale_selection();
+            }
+            Ok(Box::new(bo))
         }
+
+        let space = self.model.space();
+        if self.algorithm == Algorithm::Bo {
+            return match self.surrogate {
+                SurrogateKind::Hlo => {
+                    let surrogate = crate::runtime::GpSurrogate::open_default()
+                        .context("loading the GP HLO artifact (run `make artifacts`)")?;
+                    finish(
+                        crate::algorithms::BayesOpt::with_surrogate(space, self.seed, surrogate),
+                        self,
+                    )
+                }
+                SurrogateKind::Native => {
+                    finish(crate::algorithms::BayesOpt::new(space, self.seed), self)
+                }
+            };
+        }
+        anyhow::ensure!(
+            self.surrogate_addr.is_none(),
+            "surrogate_addr applies to the BO engine only (got {})",
+            self.algorithm.name()
+        );
+        anyhow::ensure!(
+            !self.tune_lengthscale,
+            "tune_lengthscale applies to the BO engine only (got {})",
+            self.algorithm.name()
+        );
         Ok(self.algorithm.build(&space, self.seed))
     }
 
@@ -232,6 +305,8 @@ mod tests {
         c.parallel = 4;
         c.max_seconds = Some(12.5);
         c.history_out = Some(PathBuf::from("/tmp/h.jsonl"));
+        c.surrogate_addr = Some("127.0.0.1:7071".to_string());
+        c.tune_lengthscale = true;
         let j = c.to_json();
         let c2 = TuneConfig::from_json(&j).unwrap();
         assert_eq!(c2.model, ModelId::BertFp32);
@@ -242,6 +317,40 @@ mod tests {
         assert_eq!(c2.parallel, 4);
         assert_eq!(c2.max_seconds, Some(12.5));
         assert_eq!(c2.history_out, Some(PathBuf::from("/tmp/h.jsonl")));
+        assert_eq!(c2.surrogate_addr, Some("127.0.0.1:7071".to_string()));
+        assert!(c2.tune_lengthscale);
+    }
+
+    #[test]
+    fn bo_only_options_rejected_for_other_engines() {
+        let mut c = TuneConfig { algorithm: Algorithm::Random, ..TuneConfig::default() };
+        c.surrogate_addr = Some("127.0.0.1:7071".to_string());
+        let err = c.build_tuner().unwrap_err();
+        assert!(err.to_string().contains("BO engine only"), "{err}");
+        c.surrogate_addr = None;
+        c.tune_lengthscale = true;
+        let err = c.build_tuner().unwrap_err();
+        assert!(err.to_string().contains("BO engine only"), "{err}");
+    }
+
+    #[test]
+    fn lengthscale_selection_with_remote_factor_is_rejected() {
+        let mut c = TuneConfig::default();
+        c.surrogate_addr = Some("127.0.0.1:7071".to_string());
+        c.tune_lengthscale = true;
+        let err = c.build_tuner().unwrap_err();
+        assert!(err.to_string().contains("cannot be combined"), "{err}");
+    }
+
+    #[test]
+    fn tune_lengthscale_spec_builds_a_selecting_engine() {
+        use crate::algorithms::Tuner as _;
+        let c = TuneConfig { tune_lengthscale: true, ..TuneConfig::default() };
+        // Native BO with selection builds fine (the selection itself is
+        // pinned in rust/tests/artifact_gp.rs).
+        let mut tuner = c.build_tuner().unwrap();
+        assert_eq!(tuner.name(), "bayesian-optimization");
+        assert_eq!(tuner.ask(1).len(), 1);
     }
 
     #[test]

@@ -5,11 +5,21 @@
 //! Two usage modes:
 //! - **blocking** (`Evaluator` impl): one request/response per call, used
 //!   by a `TuningSession` pool with one connection per daemon address
-//!   ([`RemoteEvaluator::connect_all`]).
+//!   ([`RemoteEvaluator::connect_all`]). This path **reconnects with
+//!   exponential backoff** on transient transport failure (daemon
+//!   restart, dropped connection): the in-flight request is re-sent on
+//!   the fresh connection — measurements are idempotent, so a re-measure
+//!   is safe — and only after the retry budget
+//!   ([`RemoteEvaluator::with_reconnect`]) is exhausted does the session
+//!   see an error. Protocol-level errors (the target *answered* with
+//!   `error`) are never retried: the daemon is healthy, the request is
+//!   bad.
 //! - **pipelined** ([`RemoteEvaluator::submit`] + [`RemoteEvaluator::recv_measurement`]):
 //!   several trial-tagged requests in flight on one connection; the daemon
 //!   answers in completion order and the trial id pairs each response with
-//!   its trial.
+//!   its trial. This path does *not* reconnect — a lost connection loses
+//!   the in-flight trials, and silently re-submitting them is the
+//!   caller's policy decision, not this client's.
 //!
 //! Either way, a daemon's measurement reaches the engine through
 //! `Tuner::tell` — with a BO engine that means it *enqueues into the
@@ -22,6 +32,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -31,30 +42,84 @@ use crate::history::Measurement;
 use crate::server::proto::{decode_response, encode_request, Request, Response};
 use crate::space::{Config, SearchSpace};
 
-pub struct RemoteEvaluator {
+/// Default reconnect attempts after a transport failure (initial connect
+/// is not counted — `connect` fails fast so a bad address is loud).
+const DEFAULT_RECONNECT_ATTEMPTS: usize = 4;
+/// First backoff delay; doubles per attempt (20, 40, 80, 160 ms…).
+const DEFAULT_RECONNECT_BASE: Duration = Duration::from_millis(20);
+
+/// One live connection to the daemon.
+struct Wire {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
+}
+
+impl Wire {
+    fn send(&mut self, req: &Request, space: &SearchSpace) -> Result<()> {
+        writeln!(self.writer, "{}", encode_request(req, space))?;
+        Ok(())
+    }
+
+    fn recv(&mut self, space: &SearchSpace) -> Result<Response> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("target closed the connection");
+        }
+        decode_response(line.trim_end(), space).map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+pub struct RemoteEvaluator {
+    addr: String,
     space: SearchSpace,
+    /// `None` between a transport failure and the next successful redial.
+    wire: Option<Wire>,
     description: String,
+    reconnect_attempts: usize,
+    reconnect_base: Duration,
 }
 
 impl RemoteEvaluator {
-    /// Connect to a target daemon and fetch its description.
-    pub fn connect(addr: &str, space: SearchSpace) -> Result<RemoteEvaluator> {
+    /// Dial the daemon and run the describe handshake.
+    fn dial(addr: &str, space: &SearchSpace) -> Result<(Wire, String)> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         // One-line requests/responses: Nagle + delayed-ACK would add ~40 ms
         // per direction (measured 88 ms/eval before this; see EXPERIMENTS.md
         // §Perf).
         stream.set_nodelay(true)?;
         let writer = stream.try_clone()?;
-        let reader = BufReader::new(stream);
-        let mut me = RemoteEvaluator { writer, reader, space, description: String::new() };
-        me.send(&Request::Describe)?;
-        match me.recv()? {
-            Response::Target { description } => me.description = description,
+        let mut wire = Wire { writer, reader: BufReader::new(stream) };
+        wire.send(&Request::Describe, space)?;
+        match wire.recv(space)? {
+            Response::Target { description } => Ok((wire, description)),
             other => bail!("unexpected describe response: {other:?}"),
         }
-        Ok(me)
+    }
+
+    /// Connect to a target daemon and fetch its description. Fails fast —
+    /// the reconnect policy applies to *re*-connections only, so a wrong
+    /// address errors immediately.
+    pub fn connect(addr: &str, space: SearchSpace) -> Result<RemoteEvaluator> {
+        let (wire, description) = Self::dial(addr, &space)?;
+        Ok(RemoteEvaluator {
+            addr: addr.to_string(),
+            space,
+            wire: Some(wire),
+            description,
+            reconnect_attempts: DEFAULT_RECONNECT_ATTEMPTS,
+            reconnect_base: DEFAULT_RECONNECT_BASE,
+        })
+    }
+
+    /// Override the reconnect policy of the blocking path: up to
+    /// `attempts` redials after a transport failure, sleeping `base`,
+    /// `2·base`, `4·base`, … between them. `attempts = 0` restores the
+    /// old fail-on-first-error behaviour.
+    pub fn with_reconnect(mut self, attempts: usize, base: Duration) -> RemoteEvaluator {
+        self.reconnect_attempts = attempts;
+        self.reconnect_base = base;
+        self
     }
 
     /// One connection per comma-separated daemon address — the evaluator
@@ -68,31 +133,80 @@ impl RemoteEvaluator {
         Ok(out)
     }
 
-    fn send(&mut self, req: &Request) -> Result<()> {
-        writeln!(self.writer, "{}", encode_request(req, &self.space))?;
-        Ok(())
+    /// The live wire plus the space it encodes with, for the pipelined
+    /// (no-reconnect) path — split borrows so callers need no clone.
+    fn wire(&mut self) -> Result<(&mut Wire, &SearchSpace)> {
+        let RemoteEvaluator { wire, space, addr, .. } = self;
+        let wire = wire.as_mut().with_context(|| {
+            format!("connection to {addr} lost (pipelined path does not reconnect)")
+        })?;
+        Ok((wire, space))
     }
 
-    fn recv(&mut self) -> Result<Response> {
-        let mut line = String::new();
-        let n = self.reader.read_line(&mut line)?;
-        if n == 0 {
-            bail!("target closed the connection");
+    /// Blocking request/response with reconnect-with-backoff on transport
+    /// failure (module docs). The request is re-sent verbatim on every
+    /// fresh connection.
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        let mut delay = self.reconnect_base;
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..=self.reconnect_attempts {
+            if attempt > 0 {
+                std::thread::sleep(delay);
+                delay = delay.saturating_mul(2);
+            }
+            if self.wire.is_none() {
+                match Self::dial(&self.addr, &self.space) {
+                    Ok((wire, description)) => {
+                        eprintln!(
+                            "tftune: reconnected to target {} (attempt {attempt})",
+                            self.addr
+                        );
+                        self.wire = Some(wire);
+                        self.description = description;
+                    }
+                    Err(e) => {
+                        last_err = Some(e);
+                        continue;
+                    }
+                }
+            }
+            let wire = self.wire.as_mut().expect("wire present after redial");
+            let result = wire.send(req, &self.space).and_then(|()| wire.recv(&self.space));
+            match result {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    // Transport failure: drop the wire; the next attempt
+                    // redials. (Protocol errors arrive as Ok(Error{..})
+                    // and are never retried.)
+                    self.wire = None;
+                    last_err = Some(e);
+                }
+            }
         }
-        decode_response(line.trim_end(), &self.space).map_err(|e| anyhow::anyhow!(e))
+        Err(last_err.expect("at least one attempt ran")).with_context(|| {
+            format!(
+                "target {} unreachable after {} reconnect attempt(s)",
+                self.addr, self.reconnect_attempts
+            )
+        })
     }
 
     /// Pipeline a trial: send its tagged evaluate request without waiting
-    /// for the response.
+    /// for the response. No reconnect (module docs).
     pub fn submit(&mut self, trial: &Trial) -> Result<()> {
-        self.send(&Request::Evaluate { config: trial.config.clone(), trial: Some(trial.id) })
+        let (wire, space) = self.wire()?;
+        wire.send(
+            &Request::Evaluate { config: trial.config.clone(), trial: Some(trial.id) },
+            space,
+        )
     }
 
     /// Block for the next completed measurement on this connection.
     /// Returns the trial id the daemon echoed (None for untagged requests)
     /// with the measurement, whose cost is the *target-side* wall clock.
     pub fn recv_measurement(&mut self) -> Result<(Option<TrialId>, Measurement)> {
-        match self.recv()? {
+        let (wire, space) = self.wire()?;
+        match wire.recv(space)? {
             Response::Result { value, cost_s, trial, .. } => {
                 Ok((trial, Measurement::new(value).with_cost_s(cost_s)))
             }
@@ -103,8 +217,9 @@ impl RemoteEvaluator {
 
     /// Ask the target daemon to shut down.
     pub fn shutdown(mut self) -> Result<()> {
-        self.send(&Request::Shutdown)?;
-        match self.recv() {
+        let (wire, space) = self.wire()?;
+        wire.send(&Request::Shutdown, space)?;
+        match wire.recv(space) {
             Ok(Response::Bye) | Err(_) => Ok(()),
             Ok(other) => bail!("unexpected shutdown response: {other:?}"),
         }
@@ -113,8 +228,7 @@ impl RemoteEvaluator {
 
 impl Evaluator for RemoteEvaluator {
     fn evaluate(&mut self, config: &Config) -> Result<f64> {
-        self.send(&Request::Evaluate { config: config.clone(), trial: None })?;
-        match self.recv()? {
+        match self.roundtrip(&Request::Evaluate { config: config.clone(), trial: None })? {
             Response::Result { value, .. } => Ok(value),
             Response::Error { message, .. } => bail!("target error: {message}"),
             other => bail!("unexpected response: {other:?}"),
@@ -122,8 +236,7 @@ impl Evaluator for RemoteEvaluator {
     }
 
     fn measure(&mut self, config: &Config) -> Result<Measurement> {
-        self.send(&Request::Evaluate { config: config.clone(), trial: None })?;
-        match self.recv()? {
+        match self.roundtrip(&Request::Evaluate { config: config.clone(), trial: None })? {
             Response::Result { value, cost_s, .. } => {
                 Ok(Measurement::new(value).with_cost_s(cost_s))
             }
@@ -226,5 +339,54 @@ mod tests {
     fn connect_failure_is_clean_error() {
         let space = ModelId::NcfFp32.space();
         assert!(RemoteEvaluator::connect("127.0.0.1:1", space).is_err());
+    }
+
+    #[test]
+    fn reconnects_after_target_restart() {
+        // Kill-and-resume: measure, kill the daemon, restart it on the
+        // same port, measure again — the blocking path must redial with
+        // backoff instead of failing the session.
+        let model = ModelId::NcfFp32;
+        let (addr, handle, space) = spawn_server(model, 4);
+        let mut remote = RemoteEvaluator::connect(&addr.to_string(), space.clone())
+            .unwrap()
+            .with_reconnect(20, Duration::from_millis(5));
+        let cfg = vec![1, 8, 128, 0, 8];
+        assert!(remote.evaluate(&cfg).unwrap() > 0.0);
+
+        // Kill the daemon out from under the evaluator's connection.
+        let killer = RemoteEvaluator::connect(&addr.to_string(), space.clone()).unwrap();
+        killer.shutdown().unwrap();
+        let _ = handle.join();
+
+        // Restart on the very same port, then measure through the stale
+        // evaluator: its first send/recv fails, it redials, re-sends.
+        let server2 = TargetServer::bind(
+            &addr.to_string(),
+            space.clone(),
+            Box::new(SimEvaluator::new(model, 5)),
+        )
+        .unwrap();
+        let (_, handle2) = server2.spawn().unwrap();
+        assert!(remote.evaluate(&cfg).unwrap() > 0.0, "reconnect did not resume");
+        assert!(remote.measure(&cfg).unwrap().value > 0.0);
+
+        remote.shutdown().unwrap();
+        let served2 = handle2.join().unwrap().unwrap();
+        assert_eq!(served2, 2, "both post-restart measurements hit the new daemon");
+    }
+
+    #[test]
+    fn zero_attempts_restores_fail_fast() {
+        let model = ModelId::NcfFp32;
+        let (addr, handle, space) = spawn_server(model, 7);
+        let mut remote = RemoteEvaluator::connect(&addr.to_string(), space.clone())
+            .unwrap()
+            .with_reconnect(0, Duration::from_millis(1));
+        let killer = RemoteEvaluator::connect(&addr.to_string(), space).unwrap();
+        killer.shutdown().unwrap();
+        let _ = handle.join();
+        let err = remote.evaluate(&vec![1, 8, 128, 0, 8]).unwrap_err();
+        assert!(err.to_string().contains("unreachable after 0"), "{err}");
     }
 }

@@ -187,6 +187,45 @@ impl IncrementalGp {
         self.append_row(xr, lie)
     }
 
+    /// The packed Cholesky rows `from..total`, concatenated — the suffix a
+    /// replica needs to catch up after `total - from` appends. Row `m`
+    /// contributes `m + 1` entries, so the slice holds
+    /// `packed_len(total) - packed_len(from)` values. Appends never modify
+    /// earlier factor entries, which is exactly why a suffix transfer is
+    /// sound: the replica's prefix is already bit-identical.
+    pub fn factor_suffix(&self, from: usize) -> &[f64] {
+        assert!(from <= self.total(), "suffix start {from} past factor end");
+        &self.l[packed_len(from)..]
+    }
+
+    /// Append a committed row whose packed factor row was computed
+    /// elsewhere (the authoritative factor of a surrogate service) — the
+    /// O(n) import counterpart of the O(n²) [`IncrementalGp::push`].
+    /// `lrow` must be the `total() + 1` packed entries of the next factor
+    /// row, produced by the same kernel/hyper/row-order as this model.
+    /// Returns false (model unchanged) on a non-positive diagonal.
+    pub fn import_row(&mut self, xr: &[f64], yv: f64, lrow: &[f64]) -> bool {
+        let m = self.total();
+        debug_assert_eq!(self.committed, m, "import with fantasies in place; retract first");
+        if m == 0 {
+            self.d = xr.len();
+            assert!(self.d > 0, "empty feature vector");
+            self.x.reserve(self.hyper.max_history.clamp(1, 1024) * self.d);
+        }
+        assert_eq!(xr.len(), self.d, "feature dim mismatch");
+        assert_eq!(lrow.len(), m + 1, "factor row length mismatch");
+        let diag = lrow[m];
+        if !(diag.is_finite() && diag > 0.0) {
+            return false;
+        }
+        self.l.extend_from_slice(lrow);
+        self.x.extend_from_slice(xr);
+        self.y.push(yv);
+        self.committed += 1;
+        self.alpha_dirty = true;
+        true
+    }
+
     /// Drop all fantasy rows, restoring the exact pre-extend state: the
     /// factor is truncated (appends never modify earlier entries), so no
     /// numerical downdate is involved.
@@ -413,6 +452,51 @@ mod tests {
             let want = (ws.mean[j] + 1.5 * ws.std[j]) - 0.7;
             assert_eq!(ws.gain[j].to_bits(), want.to_bits());
         }
+    }
+
+    #[test]
+    fn factor_suffix_import_matches_push_bitwise() {
+        // A replica that imports exported factor rows must be bit-equal to
+        // one that recomputed every append itself.
+        let mut rng = Rng::new(11);
+        let (x, y) = toy(&mut rng, 14, 3);
+        let hyper = GpHyper::default();
+        let authoritative = build(&x, &y, hyper);
+
+        let split = 9usize;
+        let mut replica = build(&x[..split], &y[..split], hyper);
+        let suffix = authoritative.factor_suffix(split);
+        assert_eq!(
+            suffix.len(),
+            crate::util::linalg::packed_len(14) - crate::util::linalg::packed_len(split)
+        );
+        let mut off = 0;
+        for (k, (xi, &yi)) in x[split..].iter().zip(&y[split..]).enumerate() {
+            let m = split + k;
+            assert!(replica.import_row(xi, yi, &suffix[off..off + m + 1]));
+            off += m + 1;
+        }
+        assert_eq!(off, suffix.len());
+        assert_eq!(replica.total(), 14);
+
+        let cand: Vec<Vec<f64>> =
+            (0..6).map(|_| (0..3).map(|_| rng.f64()).collect()).collect();
+        let mut a = authoritative;
+        let pa = a.predict(&cand);
+        let pb = replica.predict(&cand);
+        for j in 0..cand.len() {
+            assert_eq!(pa.mean[j].to_bits(), pb.mean[j].to_bits());
+            assert_eq!(pa.std[j].to_bits(), pb.std[j].to_bits());
+        }
+    }
+
+    #[test]
+    fn import_rejects_bad_diagonal() {
+        let mut gp = IncrementalGp::new(GpHyper::default());
+        assert!(gp.push(&[0.2, 0.4], 1.0));
+        assert!(!gp.import_row(&[0.6, 0.1], 0.5, &[0.3, 0.0]));
+        assert!(!gp.import_row(&[0.6, 0.1], 0.5, &[0.3, f64::NAN]));
+        assert_eq!(gp.total(), 1, "rejected import must leave the model unchanged");
     }
 
     #[test]

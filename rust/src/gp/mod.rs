@@ -18,7 +18,14 @@
 //!   many producers (an evaluator pool, several sessions, remote-daemon
 //!   reporting loops) condition **one** incremental factor: tells enqueue
 //!   without blocking, the next ask drains them in observation order and
-//!   scores through an exclusive [`SurrogateGuard`].
+//!   scores through an exclusive [`SurrogateGuard`]. The handle contract
+//!   is the [`SurrogateHandle`] trait, and [`SurrogateDelta`] is the
+//!   unit a served factor is replicated by.
+//! - [`replica`] — [`RemoteSurrogate`], the same handle contract against
+//!   a factor *served over TCP* by a surrogate service (`server` hosts
+//!   the authoritative [`SharedSurrogate`]): separate tuner processes —
+//!   or hosts — condition one model, with constant-liar leases standing
+//!   in for cross-process fantasies.
 //! - [`native`] — [`NativeGp`], the exact from-scratch solve. It is the
 //!   *correctness oracle*: the incremental model reproduces it bit-for-bit
 //!   (pinned by `rust/tests/surrogate_incremental.rs`) and the AOT HLO
@@ -38,6 +45,7 @@
 pub mod incremental;
 pub mod kernel;
 pub mod native;
+pub mod replica;
 pub mod shared;
 
 pub use incremental::{IncrementalGp, ScoreWorkspace};
@@ -46,7 +54,8 @@ pub use kernel::{
     LENGTHSCALE_GRID, UNBOUNDED_HISTORY,
 };
 pub use native::{NativeGp, Posterior};
-pub use shared::{SharedSurrogate, SurrogateGuard};
+pub use replica::RemoteSurrogate;
+pub use shared::{SharedSurrogate, SurrogateDelta, SurrogateGuard, SurrogateHandle};
 
 /// A surrogate model the BO engine can query.
 pub trait Surrogate {

@@ -1,0 +1,283 @@
+//! [`RemoteSurrogate`]: a replica of a GP factor served over TCP — the
+//! cross-process rung of the shared-surrogate ladder ("Learning to
+//! Optimize Tensor Programs" regime: many tuner *processes*, one
+//! statistical model).
+//!
+//! A surrogate service (`server::TargetServer` with an attached
+//! [`SharedSurrogate`], or the `surrogate-serve` CLI daemon) owns the
+//! authoritative factor. Each tuner process connects a `RemoteSurrogate`
+//! and hands it to its BO engine via `BayesOpt::with_shared_surrogate` —
+//! the engine neither knows nor cares that the model lives elsewhere,
+//! because the replica implements the same [`SurrogateHandle`] contract
+//! as the in-process handle:
+//!
+//! - **tell never blocks on scoring** — [`SurrogateHandle::tell`] writes
+//!   one fire-and-forget `tell-obs` line to the service and returns; the
+//!   service folds it into the authoritative store in arrival order.
+//! - **ask drains in observation order** — [`SurrogateHandle::lock`]
+//!   first performs a `sync-factor` round trip: the service exports a
+//!   [`SurrogateDelta`](super::shared::SurrogateDelta) holding the rows
+//!   this replica is missing *plus the packed Cholesky suffix for them*,
+//!   so catching up after Δn observations is an O(Δn·n) verbatim import
+//!   (bit-identical to the authority), not an O(n³) refit. TCP ordering
+//!   guarantees every tell this process sent earlier is included. The
+//!   guard then scores against the local mirror with zero further
+//!   network traffic.
+//! - **guard-drop retracts fantasies** — locally via the ordinary guard
+//!   drop; *cross-process* via leases. On every guard drop the replica
+//!   publishes the batch's own constant-liar points as a lease
+//!   (`ask-lease`, replacing its previous one); sibling processes receive
+//!   those points in their next delta and condition on them as ambient
+//!   fantasies. If the process dies instead of retracting, the service
+//!   expires its leases when the connection closes.
+//!
+//! Known limitation: in-guard hyper changes (`SurrogateGuard::ensure_hyper`,
+//! e.g. lengthscale re-selection) act on the local mirror only and are
+//! overwritten by the authority's hypers on the next sync; use
+//! [`SurrogateHandle::set_hyper`] (which writes through via `set-hyper`)
+//! for changes that should win group-wide.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::kernel::GpHyper;
+use super::shared::{SharedSurrogate, SurrogateGuard, SurrogateHandle};
+use crate::server::proto::{
+    decode_surrogate_response, encode_surrogate_request, SurrogateRequest, SurrogateResponse,
+    PROTOCOL_VERSION,
+};
+
+/// One line-oriented connection to the surrogate service. Requests that
+/// expect a response are serialised behind the connection mutex; tells
+/// write without reading.
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Conn {
+    fn send(&mut self, req: &SurrogateRequest) -> Result<()> {
+        writeln!(self.writer, "{}", encode_surrogate_request(req))?;
+        Ok(())
+    }
+
+    fn request(&mut self, req: &SurrogateRequest) -> Result<SurrogateResponse> {
+        self.send(req)?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("surrogate service closed the connection");
+        }
+        decode_surrogate_response(line.trim_end()).map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+struct Remote {
+    conn: Arc<Mutex<Conn>>,
+    /// The local replica: a plain [`SharedSurrogate`] whose store mirrors
+    /// the authority's, in the authority's (canonical) order.
+    mirror: SharedSurrogate,
+    /// Tells sent since the last successful sync. TCP ordering makes the
+    /// next sync observe all of them, so this resets to zero per sync.
+    pending_tells: AtomicUsize,
+}
+
+/// Handle to a GP factor served by a surrogate service (module docs).
+/// Cloning is cheap and shares the connection and the local mirror.
+pub struct RemoteSurrogate {
+    inner: Arc<Remote>,
+}
+
+impl Clone for RemoteSurrogate {
+    fn clone(&self) -> RemoteSurrogate {
+        RemoteSurrogate { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl std::fmt::Debug for RemoteSurrogate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RemoteSurrogate").finish_non_exhaustive()
+    }
+}
+
+impl RemoteSurrogate {
+    /// Connect to a surrogate service, perform the protocol handshake,
+    /// and pull the initial full-factor sync (adopting the authority's
+    /// hypers). Fails loudly on a version mismatch or a daemon that hosts
+    /// no surrogate.
+    pub fn connect(addr: &str) -> Result<RemoteSurrogate> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting surrogate service {addr}"))?;
+        // Line-oriented request/response: dodge Nagle/delayed-ACK stalls
+        // (same rationale as RemoteEvaluator::connect).
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        let mut conn = Conn { writer, reader: BufReader::new(stream) };
+
+        match conn.request(&SurrogateRequest::Hello { version: PROTOCOL_VERSION })? {
+            SurrogateResponse::HelloOk { version } => anyhow::ensure!(
+                version == PROTOCOL_VERSION,
+                "surrogate service speaks protocol v{version}, this replica v{PROTOCOL_VERSION}"
+            ),
+            SurrogateResponse::Error { message } => bail!("handshake refused: {message}"),
+            other => bail!("unexpected handshake response: {other:?}"),
+        }
+        let delta = match conn.request(&SurrogateRequest::SyncFactor { from_n: 0 })? {
+            SurrogateResponse::FactorDelta(d) => d,
+            SurrogateResponse::Error { message } => bail!("initial sync refused: {message}"),
+            other => bail!("unexpected sync response: {other:?}"),
+        };
+        let mirror = SharedSurrogate::new(delta.hyper);
+        anyhow::ensure!(mirror.import_delta(&delta), "initial surrogate delta rejected");
+
+        let conn = Arc::new(Mutex::new(conn));
+        // Lease publication: every guard drop replaces this process's
+        // lease with the batch's own fantasy points (publish the new one
+        // before retracting the old, so siblings never see a gap). Runs
+        // with the mirror's model lock already released.
+        let hook_conn = Arc::clone(&conn);
+        let mut active: Option<u64> = None;
+        let mut last_key: Vec<(Vec<u64>, u64)> = Vec::new();
+        mirror.set_lease_hook(move |points| {
+            let key: Vec<(Vec<u64>, u64)> = points
+                .iter()
+                .map(|(x, lie)| (x.iter().map(|v| v.to_bits()).collect(), lie.to_bits()))
+                .collect();
+            if key == last_key {
+                return; // unchanged in-flight set: nothing to republish
+            }
+            let mut c = hook_conn.lock().unwrap();
+            let next = if points.is_empty() {
+                None
+            } else {
+                match c.request(&SurrogateRequest::AskLease { points: points.to_vec() }) {
+                    Ok(SurrogateResponse::Lease { id }) => Some(id),
+                    // Transport hiccup: skip — disconnect expiry is the
+                    // backstop for a lease that never got replaced.
+                    _ => None,
+                }
+            };
+            if let Some(old) = active.take() {
+                let _ = c.request(&SurrogateRequest::RetractLease { id: old });
+            }
+            active = next;
+            if points.is_empty() || active.is_some() {
+                last_key = key;
+            } else {
+                // Publish failed: the service holds no lease for us now,
+                // so forget the key — the next guard drop with the same
+                // in-flight set must retry instead of deduping away.
+                last_key.clear();
+            }
+        });
+
+        Ok(RemoteSurrogate {
+            inner: Arc::new(Remote { conn, mirror, pending_tells: AtomicUsize::new(0) }),
+        })
+    }
+
+    /// One catch-up round trip: ask the service for everything past the
+    /// mirror's current length and import it (factor suffix verbatim when
+    /// present). Serialised behind the connection mutex.
+    fn sync(&self) -> Result<()> {
+        let mut conn = self.inner.conn.lock().unwrap();
+        let from_n = self.inner.mirror.len();
+        match conn.request(&SurrogateRequest::SyncFactor { from_n })? {
+            SurrogateResponse::FactorDelta(d) => {
+                anyhow::ensure!(
+                    self.inner.mirror.import_delta(&d),
+                    "surrogate delta rejected (replica at {from_n}, delta from {})",
+                    d.from_n
+                );
+                self.inner.pending_tells.store(0, Ordering::SeqCst);
+                Ok(())
+            }
+            SurrogateResponse::Error { message } => bail!("surrogate service error: {message}"),
+            other => bail!("unexpected sync response: {other:?}"),
+        }
+    }
+}
+
+impl SurrogateHandle for RemoteSurrogate {
+    /// Fire-and-forget: one `tell-obs` line to the service. Never blocks
+    /// on a scoring pass (scoring happens against the local mirror with
+    /// the connection released); a transport failure drops the
+    /// observation with a warning rather than poisoning the session.
+    fn tell(&self, x: Vec<f64>, y: f64) {
+        let mut conn = self.inner.conn.lock().unwrap();
+        match conn.send(&SurrogateRequest::TellObs { x, y }) {
+            Ok(()) => {
+                self.inner.pending_tells.fetch_add(1, Ordering::SeqCst);
+            }
+            Err(e) => eprintln!(
+                "tftune: surrogate tell lost ({e}); continuing on the remaining observations"
+            ),
+        }
+    }
+
+    /// Sync with the service (catch-up delta, sibling leases), then lock
+    /// the local mirror. If the service is unreachable the engine scores
+    /// on the stale replica — degraded, not dead.
+    fn lock(&self) -> SurrogateGuard<'_> {
+        if let Err(e) = self.sync() {
+            eprintln!("tftune: surrogate sync failed ({e}); scoring on the stale replica");
+        }
+        self.inner.mirror.lock()
+    }
+
+    fn hyper(&self) -> GpHyper {
+        self.inner.mirror.hyper()
+    }
+
+    /// Write-through: the service's factor switches hypers (every sibling
+    /// adopts them on its next sync), then the mirror follows.
+    fn set_hyper(&self, hyper: GpHyper) {
+        {
+            let mut conn = self.inner.conn.lock().unwrap();
+            match conn.request(&SurrogateRequest::SetHyper { hyper }) {
+                Ok(SurrogateResponse::HyperOk) => {}
+                Ok(other) => eprintln!("tftune: unexpected set-hyper response: {other:?}"),
+                Err(e) => eprintln!("tftune: surrogate set-hyper failed ({e})"),
+            }
+        }
+        self.inner.mirror.set_hyper(hyper);
+    }
+
+    /// Local-mirror policy only (the service keeps its own factoring
+    /// eagerness; it must, since other replicas rely on the suffix).
+    fn set_eager_factoring(&self, on: bool) {
+        self.inner.mirror.set_eager_factoring(on)
+    }
+
+    /// Rows in the local mirror (the service may hold more until the next
+    /// sync).
+    fn len(&self) -> usize {
+        self.inner.mirror.len()
+    }
+
+    /// Mirrored rows plus tells this process sent since the last sync —
+    /// a lower bound on what the next lock will condition on.
+    fn total_observations(&self) -> usize {
+        self.inner.mirror.len() + self.inner.pending_tells.load(Ordering::SeqCst)
+    }
+
+    fn clone_handle(&self) -> Box<dyn SurrogateHandle> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connect_failure_is_clean_error() {
+        // Port 1 is never a surrogate service.
+        let err = RemoteSurrogate::connect("127.0.0.1:1").unwrap_err();
+        assert!(err.to_string().contains("connecting surrogate service"), "{err}");
+    }
+}

@@ -38,6 +38,38 @@
 //! duplicate (noisy) observation, which the factor handles fine, not an
 //! error.
 //!
+//! # The handle contract ([`SurrogateHandle`])
+//!
+//! The BO engine borrows the model through the [`SurrogateHandle`] trait,
+//! not through this type directly. Two implementations share it:
+//! `SharedSurrogate` (this module — in-process), and
+//! [`RemoteSurrogate`](super::replica::RemoteSurrogate) (a replica of a
+//! factor served over TCP by a surrogate service — `server`). The
+//! contract both uphold: `tell` never blocks on a scoring pass, `lock`
+//! drains every earlier tell in canonical observation order before
+//! scoring, and fantasies extended through the guard never outlive it.
+//!
+//! # Cross-process pieces
+//!
+//! Three affordances exist purely so a served factor can be replicated:
+//!
+//! - [`SurrogateDelta`] / [`SharedSurrogate::export_delta`] /
+//!   [`SharedSurrogate::import_delta`] — the catch-up unit. A delta
+//!   carries the observation rows a replica is missing plus, when the
+//!   authoritative factor covers exactly the store prefix, the packed
+//!   Cholesky *suffix rows* for them — so the replica catches up with an
+//!   O(Δn·n) import instead of re-factoring, and bit-identically to the
+//!   authority.
+//! - **ambient fantasies** — sibling *processes'* in-flight trials
+//!   (constant-liar lease points served back by the surrogate service).
+//!   The engine reads them via [`SurrogateGuard::ambient_point`] and
+//!   conditions on them with [`SurrogateGuard::extend_fantasy_untracked`],
+//!   which keeps them out of this process's own published lease.
+//! - **the lease hook** — when set (only by `RemoteSurrogate`), every
+//!   guard drop reports the batch's own fantasy points so the replica can
+//!   publish them as a lease on the service. The hook runs *after* the
+//!   model lock is released (it performs a network round trip).
+//!
 //! # Numerical contract
 //!
 //! Draining performs exactly the rank-1 appends a private
@@ -46,7 +78,9 @@
 //! serial private-model path given the same observation order — and
 //! within ~1e-12 of it under reordering (the GP posterior is permutation
 //! invariant in exact arithmetic). `rust/tests/shared_surrogate.rs` pins
-//! both to ≤1e-9 under genuine thread interleavings.
+//! both to ≤1e-9 under genuine thread interleavings;
+//! `rust/tests/surrogate_service.rs` pins the replicated-factor path over
+//! real loopback TCP to the same bound.
 //!
 //! # Example
 //!
@@ -74,6 +108,82 @@ use std::sync::{Arc, Mutex, MutexGuard};
 
 use super::incremental::{IncrementalGp, ScoreWorkspace};
 use super::kernel::GpHyper;
+use crate::util::linalg::packed_len;
+
+/// Callback a replica installs to publish the guard's own fantasy points
+/// as a cross-process lease when the guard drops (module docs).
+pub(crate) type LeaseHook = Box<dyn FnMut(&[(Vec<f64>, f64)]) + Send>;
+
+/// The handle contract the BO engine conditions its surrogate through.
+///
+/// Implemented by [`SharedSurrogate`] (one factor per host process) and
+/// [`RemoteSurrogate`](super::replica::RemoteSurrogate) (a replica of a
+/// factor served over TCP), so `BayesOpt::with_shared_surrogate` accepts
+/// either and the in-process and cross-process paths stay one stack.
+///
+/// Contract: [`SurrogateHandle::tell`] never blocks on a concurrent
+/// scoring pass; [`SurrogateHandle::lock`] drains every tell issued
+/// before it, in canonical observation order, and returns exclusive
+/// access to the synced model; fantasies extended through the returned
+/// guard are retracted when the guard drops (for a remote handle the
+/// service additionally expires the published lease if the process
+/// disconnects without retracting).
+pub trait SurrogateHandle: Send + Sync {
+    /// Enqueue one observation (`x` in the unit cube, `y` raw objective).
+    fn tell(&self, x: Vec<f64>, y: f64);
+
+    /// Drain pending tells and take the ask-side lock (module docs).
+    fn lock(&self) -> SurrogateGuard<'_>;
+
+    /// The hyperparameters the model currently conditions with.
+    fn hyper(&self) -> GpHyper;
+
+    /// Switch hyperparameters, invalidating the factor. Write-through:
+    /// every engine sharing the underlying model adopts them.
+    fn set_hyper(&self, hyper: GpHyper);
+
+    /// Enable/disable eager factoring on drain
+    /// (see [`SharedSurrogate::set_eager_factoring`]).
+    fn set_eager_factoring(&self, on: bool);
+
+    /// Observations in the canonical store this handle can see.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Observations the model will condition on once pending tells land.
+    fn total_observations(&self) -> usize;
+
+    /// Cheap clone addressing the same model.
+    fn clone_handle(&self) -> Box<dyn SurrogateHandle>;
+}
+
+/// One replication unit of a shared factor: the observation rows a
+/// replica is missing and — when the authoritative factor covers exactly
+/// the store prefix — their packed Cholesky suffix rows, so catch-up is
+/// an O(Δn·n) verbatim import instead of an O(Δn·n²) re-factor. Carries
+/// the authority's hypers (replicas adopt them) and, over the wire, the
+/// sibling processes' in-flight lease points (constant-liar fantasies).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SurrogateDelta {
+    /// First row index the delta covers (the replica's current length).
+    pub from_n: usize,
+    /// Authoritative store length after the delta.
+    pub total_n: usize,
+    /// Hypers the authoritative factor conditions with.
+    pub hyper: GpHyper,
+    /// `(x, y)` observation rows `from_n..total_n`, canonical order.
+    pub rows: Vec<(Vec<f64>, f64)>,
+    /// Packed factor rows `from_n..total_n` concatenated
+    /// (`packed_len(total_n) - packed_len(from_n)` values), present iff
+    /// the authoritative factor is exactly the store prefix.
+    pub factor: Option<Vec<f64>>,
+    /// Sibling processes' in-flight points `(x, lie)` — served back so a
+    /// replica's engine can condition on them as ambient fantasies.
+    pub leases: Vec<(Vec<f64>, f64)>,
+}
 
 /// Model state behind the ask-side lock: the canonical observation store
 /// plus the persistent factor over (a windowed subset of) it.
@@ -98,14 +208,37 @@ struct SharedState {
     /// Spare row buffer swapped with the queue on drain, so the queue
     /// keeps its capacity and warmed-up tells never allocate.
     drain_buf: Vec<(Vec<f64>, f64)>,
+    /// Sibling processes' in-flight `(x, lie)` points, refreshed by
+    /// [`SharedSurrogate::import_delta`]. Always empty on a purely local
+    /// handle.
+    ambient: Vec<(Vec<f64>, f64)>,
 }
 
 impl SharedState {
+    /// Dimension of the canonical store (fixed by its first row).
+    fn dim(&self) -> Option<usize> {
+        self.obs_x.first().map(Vec::len)
+    }
+
     /// Fold one drained observation into the store, eagerly rank-1
     /// appending to the factor while it is still the full windowed prefix
     /// of the history (the cheap common case; anything else is repaired by
     /// the next [`SurrogateGuard::sync`]).
+    ///
+    /// Rows whose dimension disagrees with the store are *dropped with a
+    /// warning*, not asserted on: on a surrogate service the queue is fed
+    /// by the network (a tuner attached with the wrong search space must
+    /// degrade the one bad producer, not panic the fleet's daemon).
     fn drain_one(&mut self, x: Vec<f64>, y: f64) {
+        if x.is_empty() || self.dim().map_or(false, |d| d != x.len()) {
+            eprintln!(
+                "tftune: dropping observation with dimension {} (store dimension {:?}) — \
+                 one shared surrogate serves exactly one search space",
+                x.len(),
+                self.dim()
+            );
+            return;
+        }
         let i = self.obs_x.len();
         if self.eager && i + 1 <= self.hyper.max_history && self.factored.len() == i {
             if self.model.push(&x, 0.0) {
@@ -125,6 +258,9 @@ struct Inner {
     /// side never contends with a scoring pass.
     queue: Mutex<Vec<(Vec<f64>, f64)>>,
     state: Mutex<SharedState>,
+    /// Replica lease publication hook (module docs). Its own mutex — the
+    /// guard invokes it *after* releasing the model lock.
+    lease_hook: Mutex<Option<LeaseHook>>,
 }
 
 /// A cloneable handle to one concurrently-shared surrogate model (module
@@ -159,7 +295,9 @@ impl SharedSurrogate {
                     factored: Vec::new(),
                     eager: true,
                     drain_buf: Vec::new(),
+                    ambient: Vec::new(),
                 }),
+                lease_hook: Mutex::new(None),
             }),
         }
     }
@@ -226,6 +364,124 @@ impl SharedSurrogate {
         state.obs_y.clear();
         state.model.clear();
         state.factored.clear();
+        state.ambient.clear();
+    }
+
+    /// Install the replica lease hook (module docs). The hook receives,
+    /// on every guard drop, the `(x, lie)` fantasy points the batch
+    /// extended through [`SurrogateGuard::extend_fantasy`] — i.e. this
+    /// process's own in-flight trials — and runs with the model lock
+    /// released.
+    pub(crate) fn set_lease_hook(
+        &self,
+        hook: impl FnMut(&[(Vec<f64>, f64)]) + Send + 'static,
+    ) {
+        *self.inner.lease_hook.lock().unwrap() = Some(Box::new(hook));
+    }
+
+    /// Export the catch-up delta for a replica at `from_n` rows: drains
+    /// pending tells first, so the delta reflects every tell received.
+    /// `None` if the replica claims more rows than the store holds.
+    /// The factor suffix rides along iff the factor covers exactly the
+    /// store prefix (eager factoring within the conditioning window —
+    /// the service's steady state). `leases` is left empty; the serving
+    /// layer fills in sibling lease points.
+    pub fn export_delta(&self, from_n: usize) -> Option<SurrogateDelta> {
+        drop(self.lock()); // drain queued tells; retract stray fantasies
+        let st = self.inner.state.lock().unwrap();
+        let n = st.obs_x.len();
+        if from_n > n {
+            return None;
+        }
+        let rows: Vec<(Vec<f64>, f64)> =
+            (from_n..n).map(|i| (st.obs_x[i].clone(), st.obs_y[i])).collect();
+        let prefix =
+            st.factored.len() == n && st.factored.iter().enumerate().all(|(i, &j)| i == j);
+        let factor = if prefix { Some(st.model.factor_suffix(from_n).to_vec()) } else { None };
+        Some(SurrogateDelta {
+            from_n,
+            total_n: n,
+            hyper: st.hyper,
+            rows,
+            factor,
+            leases: Vec::new(),
+        })
+    }
+
+    /// Apply a catch-up delta exported by the authoritative factor. The
+    /// store must sit exactly at `delta.from_n` rows (the replica always
+    /// requests its own length); hypers are adopted on mismatch. When the
+    /// delta carries factor rows and the local factor is the store prefix,
+    /// they are imported verbatim — O(Δn·n), bit-identical to the
+    /// authority; otherwise rows land through the ordinary drain path and
+    /// the factor is rebuilt on the next sync. Sibling lease points
+    /// replace the ambient-fantasy set. Returns false (nothing applied)
+    /// on a length mismatch.
+    pub fn import_delta(&self, delta: &SurrogateDelta) -> bool {
+        let mut st = self.inner.state.lock().unwrap();
+        st.model.retract_fantasies();
+        if st.obs_x.len() != delta.from_n {
+            return false;
+        }
+        // Shape sanity on wire-decoded counts (also keeps packed_len from
+        // overflowing on garbage).
+        if delta.total_n < delta.from_n || delta.total_n > (1 << 30) {
+            return false;
+        }
+        // Dimension sanity on wire-decoded rows: one model, one space.
+        let dim = st.dim().or_else(|| delta.rows.first().map(|(x, _)| x.len()));
+        if let Some(d) = dim {
+            if d == 0 || delta.rows.iter().any(|(x, _)| x.len() != d) {
+                return false;
+            }
+        }
+        if st.hyper != delta.hyper {
+            let hyper = delta.hyper;
+            st.hyper = hyper;
+            st.model.set_hyper(hyper);
+            st.factored.clear();
+        }
+        let expected = packed_len(delta.total_n) - packed_len(delta.from_n);
+        let prefix = st.factored.len() == delta.from_n
+            && st.factored.iter().enumerate().all(|(i, &j)| i == j);
+        match &delta.factor {
+            Some(suffix)
+                if prefix
+                    && suffix.len() == expected
+                    && delta.rows.len() == delta.total_n - delta.from_n =>
+            {
+                // Verbatim import. A rejected row (malformed wire data)
+                // drops the factor and stores the remaining rows plain —
+                // the next guard sync rebuilds locally.
+                let mut importing = true;
+                let mut off = 0;
+                for (k, (x, y)) in delta.rows.iter().enumerate() {
+                    let m = delta.from_n + k;
+                    let row = &suffix[off..off + m + 1];
+                    off += m + 1;
+                    let i = st.obs_x.len();
+                    if importing {
+                        if st.model.import_row(x, *y, row) {
+                            st.factored.push(i);
+                        } else {
+                            st.model.clear();
+                            st.factored.clear();
+                            importing = false;
+                        }
+                    }
+                    st.obs_x.push(x.clone());
+                    st.obs_y.push(*y);
+                }
+            }
+            _ => {
+                for (x, y) in &delta.rows {
+                    st.drain_one(x.clone(), *y);
+                }
+            }
+        }
+        st.ambient.clear();
+        st.ambient.extend(delta.leases.iter().cloned());
+        true
     }
 
     /// Take the ask-side lock: drain every pending tell into the factor
@@ -233,6 +489,10 @@ impl SharedSurrogate {
     /// Concurrent `tell`s keep landing in the queue while the guard is
     /// held; they are folded in by the next `lock`.
     pub fn lock(&self) -> SurrogateGuard<'_> {
+        // Read the hook flag *before* taking the model lock: the hook
+        // mutex sits above conn → model-state in the replica's lock
+        // order, so holding model-state while acquiring it could cycle.
+        let log_lease = self.inner.lease_hook.lock().unwrap().is_some();
         let mut state = self.inner.state.lock().unwrap();
         // Defensive: a guard dropped mid-proposal (panic) may have left
         // fantasy rows; the factor must hold committed rows only before
@@ -247,7 +507,83 @@ impl SharedSurrogate {
             state.drain_one(x, y);
         }
         state.drain_buf = pending;
-        SurrogateGuard { state }
+        SurrogateGuard {
+            state: Some(state),
+            hook: &self.inner.lease_hook,
+            log_lease,
+            own_log: Vec::new(),
+        }
+    }
+}
+
+impl SurrogateHandle for SharedSurrogate {
+    fn tell(&self, x: Vec<f64>, y: f64) {
+        SharedSurrogate::tell(self, x, y)
+    }
+
+    fn lock(&self) -> SurrogateGuard<'_> {
+        SharedSurrogate::lock(self)
+    }
+
+    fn hyper(&self) -> GpHyper {
+        SharedSurrogate::hyper(self)
+    }
+
+    fn set_hyper(&self, hyper: GpHyper) {
+        SharedSurrogate::set_hyper(self, hyper)
+    }
+
+    fn set_eager_factoring(&self, on: bool) {
+        SharedSurrogate::set_eager_factoring(self, on)
+    }
+
+    fn len(&self) -> usize {
+        SharedSurrogate::len(self)
+    }
+
+    fn total_observations(&self) -> usize {
+        SharedSurrogate::total_observations(self)
+    }
+
+    fn clone_handle(&self) -> Box<dyn SurrogateHandle> {
+        Box::new(self.clone())
+    }
+}
+
+/// Boxed handles forward the contract, so a handle returned by
+/// `BayesOpt::surrogate_handle` can be attached to further engines
+/// without knowing which implementation sits behind it.
+impl SurrogateHandle for Box<dyn SurrogateHandle> {
+    fn tell(&self, x: Vec<f64>, y: f64) {
+        (**self).tell(x, y)
+    }
+
+    fn lock(&self) -> SurrogateGuard<'_> {
+        (**self).lock()
+    }
+
+    fn hyper(&self) -> GpHyper {
+        (**self).hyper()
+    }
+
+    fn set_hyper(&self, hyper: GpHyper) {
+        (**self).set_hyper(hyper)
+    }
+
+    fn set_eager_factoring(&self, on: bool) {
+        (**self).set_eager_factoring(on)
+    }
+
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+
+    fn total_observations(&self) -> usize {
+        (**self).total_observations()
+    }
+
+    fn clone_handle(&self) -> Box<dyn SurrogateHandle> {
+        (**self).clone_handle()
     }
 }
 
@@ -257,51 +593,84 @@ impl SharedSurrogate {
 /// selection and target standardisation) and the incremental model's
 /// sync / fantasy / scoring operations. Fantasy rows extended through the
 /// guard are automatically retracted when it drops, so the factor between
-/// asks always holds committed observations only.
+/// asks always holds committed observations only. On a replica handle the
+/// drop additionally publishes the batch's own fantasy points as a
+/// cross-process lease (after releasing the model lock).
 pub struct SurrogateGuard<'a> {
-    state: MutexGuard<'a, SharedState>,
+    /// `Some` for the guard's whole visible lifetime; taken in `drop` so
+    /// the model lock is released before the lease hook's network call.
+    state: Option<MutexGuard<'a, SharedState>>,
+    hook: &'a Mutex<Option<LeaseHook>>,
+    /// Whether to record own fantasy points for the hook (hook installed).
+    log_lease: bool,
+    /// Own fantasy points extended during this batch (tracked only when
+    /// `log_lease`).
+    own_log: Vec<(Vec<f64>, f64)>,
 }
 
 impl SurrogateGuard<'_> {
+    fn st(&self) -> &SharedState {
+        self.state.as_ref().expect("guard state present until drop")
+    }
+
+    fn st_mut(&mut self) -> &mut SharedState {
+        self.state.as_mut().expect("guard state present until drop")
+    }
+
     /// Observations in the canonical store (drain order).
     pub fn len(&self) -> usize {
-        self.state.obs_x.len()
+        self.st().obs_x.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.state.obs_x.is_empty()
+        self.st().obs_x.is_empty()
     }
 
     /// Unit-cube coordinates of observation `i` (drain order).
     pub fn x(&self, i: usize) -> &[f64] {
-        &self.state.obs_x[i]
+        &self.st().obs_x[i]
     }
 
     /// Raw objective value of observation `i` (drain order).
     pub fn y(&self, i: usize) -> f64 {
-        self.state.obs_y[i]
+        self.st().obs_y[i]
     }
 
     pub fn hyper(&self) -> GpHyper {
-        self.state.hyper
+        self.st().hyper
     }
 
     /// Make the shared model condition with `hyper`; on change the factor
     /// is invalidated and rebuilt by the next [`SurrogateGuard::sync`].
     pub fn ensure_hyper(&mut self, hyper: GpHyper) {
-        if self.state.hyper != hyper {
-            self.state.hyper = hyper;
-            self.state.model.set_hyper(hyper);
-            self.state.factored.clear();
+        let st = self.st_mut();
+        if st.hyper != hyper {
+            st.hyper = hyper;
+            st.model.set_hyper(hyper);
+            st.factored.clear();
         }
+    }
+
+    /// Sibling processes' in-flight points currently leased (empty on a
+    /// purely local handle).
+    pub fn ambient_len(&self) -> usize {
+        self.st().ambient.len()
+    }
+
+    /// The `k`-th ambient `(x, lie)` point (cloned: callers extend it into
+    /// the factor while the guard stays mutably borrowed).
+    pub fn ambient_point(&self, k: usize) -> (Vec<f64>, f64) {
+        let (x, lie) = &self.st().ambient[k];
+        (x.clone(), *lie)
     }
 
     /// The conditioning set over the canonical store: the full history if
     /// it fits the window, else the best window/4 observations plus the
     /// most recent remainder (ascending index order).
     pub fn conditioning_set(&self) -> Vec<usize> {
-        let n = self.state.obs_y.len();
-        let window = self.state.hyper.max_history;
+        let st = self.st();
+        let n = st.obs_y.len();
+        let window = st.hyper.max_history;
         if n <= window {
             return (0..n).collect();
         }
@@ -309,7 +678,7 @@ impl SurrogateGuard<'_> {
         let mut by_value: Vec<usize> = (0..n).collect();
         // total_cmp keeps the sort panic-free (and deterministic) even if
         // an evaluator ever reports a NaN measurement.
-        let obs_y = &self.state.obs_y;
+        let obs_y = &st.obs_y;
         by_value.sort_by(|&a, &b| obs_y[b].total_cmp(&obs_y[a]));
         let mut chosen: Vec<usize> = by_value[..keep_best].to_vec();
         for i in (0..n).rev() {
@@ -329,7 +698,7 @@ impl SurrogateGuard<'_> {
     /// prefix, full rebuild on any reshape. Returns false — factor
     /// cleared — if the kernel matrix is not positive definite.
     pub fn sync(&mut self, idx: &[usize]) -> bool {
-        let st = &mut *self.state;
+        let st = self.st_mut();
         let keep =
             st.factored.len() <= idx.len() && st.factored.iter().zip(idx).all(|(a, b)| a == b);
         if !keep {
@@ -352,23 +721,50 @@ impl SurrogateGuard<'_> {
     /// [`IncrementalGp::set_targets`]). Length must equal
     /// [`SurrogateGuard::total`].
     pub fn set_targets(&mut self, y: &[f64]) {
-        self.state.model.set_targets(y);
+        self.st_mut().model.set_targets(y);
     }
 
     /// Committed + fantasy rows currently factored in.
     pub fn total(&self) -> usize {
-        self.state.model.total()
+        self.st().model.total()
+    }
+
+    /// Does `x` fit the store's dimension? Wire-sourced fantasy points
+    /// (sibling leases) must be shape-checked before touching the factor
+    /// — a mismatch is a refusal, not a panic.
+    fn fantasy_dim_ok(&self, x: &[f64]) -> bool {
+        !x.is_empty() && self.st().dim().map_or(true, |d| d == x.len())
     }
 
     /// Condition on an in-flight trial (constant liar). Retracted
-    /// automatically when the guard drops.
+    /// automatically when the guard drops, and — on a replica handle —
+    /// published as part of this process's lease. Returns false (factor
+    /// untouched) for a point whose dimension disagrees with the store.
     pub fn extend_fantasy(&mut self, x: &[f64], lie: f64) -> bool {
-        self.state.model.extend_fantasy(x, lie)
+        if !self.fantasy_dim_ok(x) {
+            return false;
+        }
+        let ok = self.st_mut().model.extend_fantasy(x, lie);
+        if ok && self.log_lease {
+            self.own_log.push((x.to_vec(), lie));
+        }
+        ok
+    }
+
+    /// Condition on a fantasy that is *not* this process's own in-flight
+    /// trial (sibling lease points — [`SurrogateGuard::ambient_point`]).
+    /// Identical math to [`SurrogateGuard::extend_fantasy`] but excluded
+    /// from the published lease, so leases never echo back and forth.
+    pub fn extend_fantasy_untracked(&mut self, x: &[f64], lie: f64) -> bool {
+        if !self.fantasy_dim_ok(x) {
+            return false;
+        }
+        self.st_mut().model.extend_fantasy(x, lie)
     }
 
     /// Drop fantasy rows now (also happens automatically on guard drop).
     pub fn retract_fantasies(&mut self) {
-        self.state.model.retract_fantasies();
+        self.st_mut().model.retract_fantasies();
     }
 
     /// Blocked scoring over the factored model (see
@@ -381,7 +777,7 @@ impl SurrogateGuard<'_> {
         y_best: f64,
         ws: &mut ScoreWorkspace,
     ) {
-        self.state.model.score_into(cand, c, acq_alpha, y_best, ws);
+        self.st_mut().model.score_into(cand, c, acq_alpha, y_best, ws);
     }
 }
 
@@ -389,7 +785,19 @@ impl Drop for SurrogateGuard<'_> {
     fn drop(&mut self) {
         // The factor between asks holds committed observations only;
         // fantasies are strictly per-proposal-batch state.
-        self.state.model.retract_fantasies();
+        if let Some(state) = self.state.as_mut() {
+            state.model.retract_fantasies();
+        }
+        // Release the model lock *before* publishing the lease: the hook
+        // performs a network round trip, and a concurrent replica sync
+        // acquires connection → model-state in that order.
+        self.state = None;
+        if !self.log_lease {
+            return;
+        }
+        if let Some(hook) = self.hook.lock().unwrap().as_mut() {
+            hook(&self.own_log);
+        }
     }
 }
 
@@ -542,5 +950,178 @@ mod tests {
         assert_eq!(a.total_observations(), 2);
         let g = b.lock();
         assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn delta_round_trip_is_bitwise_and_suffix_sized() {
+        let hyper = GpHyper::default();
+        let mut rng = Rng::new(5);
+        let obs = rows(&mut rng, 24, 4);
+
+        let authority = SharedSurrogate::new(hyper);
+        for (x, y) in &obs[..20] {
+            authority.tell(x.clone(), *y);
+        }
+        let replica = SharedSurrogate::new(hyper);
+        let full = authority.export_delta(0).unwrap();
+        assert_eq!(full.total_n, 20);
+        assert_eq!(
+            full.factor.as_ref().unwrap().len(),
+            packed_len(20),
+            "full export carries the whole packed factor"
+        );
+        assert!(replica.import_delta(&full));
+        assert_eq!(replica.len(), 20);
+
+        // Δn = 4 catch-up: only the suffix rows travel.
+        for (x, y) in &obs[20..] {
+            authority.tell(x.clone(), *y);
+        }
+        let delta = authority.export_delta(20).unwrap();
+        assert_eq!(delta.rows.len(), 4);
+        assert_eq!(
+            delta.factor.as_ref().unwrap().len(),
+            packed_len(24) - packed_len(20),
+            "catch-up export carries only the factor suffix"
+        );
+        // A replica ahead of its request is rejected; a stale delta too.
+        assert!(authority.export_delta(25).is_none());
+        assert!(!replica.import_delta(&SurrogateDelta { from_n: 3, ..delta.clone() }));
+        assert!(replica.import_delta(&delta));
+
+        // Identical store and factor ⇒ bitwise-identical posterior.
+        let cand: Vec<f64> = (0..2 * 4).map(|_| rng.f64()).collect();
+        let (mut wa, mut wb) = (ScoreWorkspace::default(), ScoreWorkspace::default());
+        for (h, ws) in [(&authority, &mut wa), (&replica, &mut wb)] {
+            let mut g = h.lock();
+            let idx = g.conditioning_set();
+            assert!(g.sync(&idx));
+            let y: Vec<f64> = idx.iter().map(|&i| g.y(i)).collect();
+            g.set_targets(&y);
+            g.score_into(&cand, 2, 1.5, 0.0, ws);
+        }
+        for j in 0..2 {
+            assert_eq!(wa.mean[j].to_bits(), wb.mean[j].to_bits());
+            assert_eq!(wa.std[j].to_bits(), wb.std[j].to_bits());
+        }
+    }
+
+    #[test]
+    fn delta_without_factor_still_replicates_through_drain() {
+        // Eager factoring off on the authority: the export carries rows
+        // only and the replica recomputes — same store, same posterior
+        // after a local sync.
+        let hyper = GpHyper::default();
+        let mut rng = Rng::new(6);
+        let authority = SharedSurrogate::new(hyper);
+        authority.set_eager_factoring(false);
+        for (x, y) in rows(&mut rng, 10, 3) {
+            authority.tell(x, y);
+        }
+        let delta = authority.export_delta(0).unwrap();
+        assert!(delta.factor.is_none(), "no factor without eager factoring");
+        let replica = SharedSurrogate::new(hyper);
+        assert!(replica.import_delta(&delta));
+        assert_eq!(replica.len(), 10);
+        let mut g = replica.lock();
+        let idx = g.conditioning_set();
+        assert!(g.sync(&idx));
+        assert_eq!(g.total(), 10);
+    }
+
+    #[test]
+    fn hyper_mismatch_delta_adopts_and_rebuilds() {
+        let authority = SharedSurrogate::new(GpHyper::default());
+        let mut rng = Rng::new(7);
+        for (x, y) in rows(&mut rng, 6, 2) {
+            authority.tell(x, y);
+        }
+        let new = GpHyper { lengthscale: 0.5, ..GpHyper::default() };
+        authority.set_hyper(new);
+        let replica = SharedSurrogate::new(GpHyper::default());
+        let delta = authority.export_delta(0).unwrap();
+        assert_eq!(delta.hyper, new);
+        assert!(replica.import_delta(&delta));
+        assert_eq!(replica.hyper(), new, "replica adopts the authority's hypers");
+        let mut g = replica.lock();
+        let idx = g.conditioning_set();
+        assert!(g.sync(&idx));
+        assert_eq!(g.total(), 6);
+    }
+
+    #[test]
+    fn ambient_points_surface_and_extend_untracked() {
+        let replica = SharedSurrogate::new(GpHyper::default());
+        replica.tell(vec![0.2, 0.2], 1.0);
+        drop(replica.lock());
+        let delta = SurrogateDelta {
+            from_n: 1,
+            total_n: 1,
+            hyper: GpHyper::default(),
+            rows: Vec::new(),
+            factor: Some(Vec::new()),
+            leases: vec![(vec![0.7, 0.7], 0.0)],
+        };
+        assert!(replica.import_delta(&delta));
+        let mut g = replica.lock();
+        assert_eq!(g.ambient_len(), 1);
+        let (x, lie) = g.ambient_point(0);
+        assert_eq!(x, vec![0.7, 0.7]);
+        let idx = g.conditioning_set();
+        assert!(g.sync(&idx));
+        assert!(g.extend_fantasy_untracked(&x, lie));
+        assert_eq!(g.total(), 2, "ambient point conditioned as a fantasy");
+        drop(g);
+        let g = replica.lock();
+        assert_eq!(g.total(), 1, "ambient fantasy retracted with the guard");
+    }
+
+    #[test]
+    fn mismatched_dimension_rows_are_dropped_not_fatal() {
+        // The drain queue of a surrogate service is fed by the network:
+        // a tuner attached with the wrong search space must degrade
+        // itself, not panic the daemon (and poison the fleet's mutex).
+        let shared = SharedSurrogate::new(GpHyper::default());
+        shared.tell(vec![0.2, 0.4], 1.0);
+        shared.tell(vec![0.1, 0.2, 0.3], 2.0); // wrong space: dropped
+        shared.tell(vec![], 3.0); // empty: dropped
+        shared.tell(vec![0.6, 0.8], 4.0);
+        let mut g = shared.lock();
+        assert_eq!(g.len(), 2, "mismatched rows must be dropped, not stored");
+        assert!(!g.extend_fantasy(&[0.5], 0.0), "mismatched fantasy refused");
+        assert!(!g.extend_fantasy_untracked(&[], 0.0));
+        let idx = g.conditioning_set();
+        assert!(g.sync(&idx));
+        assert_eq!(g.total(), 2, "the factor holds only well-shaped rows");
+    }
+
+    #[test]
+    fn lease_hook_reports_own_fantasies_only() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let shared = SharedSurrogate::new(GpHyper::default());
+        shared.tell(vec![0.1, 0.1], 0.0);
+        drop(shared.lock());
+        let published = Arc::new(Mutex::new(Vec::new()));
+        let calls = Arc::new(AtomicUsize::new(0));
+        let (p2, c2) = (Arc::clone(&published), Arc::clone(&calls));
+        shared.set_lease_hook(move |points| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            *p2.lock().unwrap() = points.to_vec();
+        });
+        {
+            let mut g = shared.lock();
+            let idx = g.conditioning_set();
+            assert!(g.sync(&idx));
+            assert!(g.extend_fantasy(&[0.5, 0.5], 0.0));
+            assert!(g.extend_fantasy_untracked(&[0.9, 0.9], 0.0));
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "hook fires once per guard drop");
+        let got = published.lock().unwrap().clone();
+        assert_eq!(got.len(), 1, "untracked fantasies stay out of the lease");
+        assert_eq!(got[0].0, vec![0.5, 0.5]);
+        // A fantasy-free batch publishes an empty lease (retract signal).
+        drop(shared.lock());
+        assert_eq!(calls.load(Ordering::SeqCst), 2);
+        assert!(published.lock().unwrap().is_empty());
     }
 }

@@ -52,11 +52,18 @@
 //!   multi-RHS triangular solve with zero heap allocation
 //!   ([`gp::ScoreWorkspace`]).
 //! - **Shared concurrent handle** ([`gp::SharedSurrogate`]) — `BayesOpt`
-//!   *borrows* the model through this handle instead of owning it, so an
-//!   evaluator pool, remote daemons and whole concurrent sessions
-//!   ([`SessionGroup`]) can condition **one** factor: tells enqueue
-//!   without blocking a scoring pass; each ask drains the queue in
-//!   observation order and scores under an exclusive guard.
+//!   *borrows* the model through the [`gp::SurrogateHandle`] contract
+//!   instead of owning it, so an evaluator pool, remote daemons and whole
+//!   concurrent sessions ([`SessionGroup`]) can condition **one** factor:
+//!   tells enqueue without blocking a scoring pass; each ask drains the
+//!   queue in observation order and scores under an exclusive guard.
+//! - **Served factor replica** ([`gp::RemoteSurrogate`]) — the same
+//!   handle contract against a factor hosted by a *surrogate service*
+//!   (`server`, `surrogate-serve`): separate tuner processes or hosts
+//!   tell into one model over TCP, catch up via packed-factor suffix
+//!   deltas, and lease their in-flight trials to each other as
+//!   constant-liar fantasies ([`SessionGroup::remote_shared_bo`] wires a
+//!   whole group).
 //! - **Exact oracle** ([`gp::NativeGp`]) — the from-scratch reference
 //!   solve. The incremental model reproduces it bit-for-bit (pinned by
 //!   `rust/tests/surrogate_incremental.rs`); the scratch-refit engine

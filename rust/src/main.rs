@@ -1,13 +1,14 @@
 //! tftune CLI — the launcher for every workflow in the repo.
 //!
 //! Subcommands:
-//!   tune         run one tuning session on the simulated target
-//!   serve        run the target-side evaluation daemon (paper Fig. 4)
-//!   remote-tune  drive one or more remote target daemons as the host
-//!   sweep        Fig. 6 exhaustive sweep (+ findings table)
-//!   figures      regenerate paper figures/tables (fig5 fig6 fig7 table1 all)
-//!   space        print Table 1 / search-space info
-//!   profile      per-op schedule under a configuration
+//!   tune            run one tuning session on the simulated target
+//!   serve           run the target-side evaluation daemon (paper Fig. 4)
+//!   surrogate-serve host the shared GP factor for a fleet of tuner processes
+//!   remote-tune     drive one or more remote target daemons as the host
+//!   sweep           Fig. 6 exhaustive sweep (+ findings table)
+//!   figures         regenerate paper figures/tables (fig5 fig6 fig7 table1 all)
+//!   space           print Table 1 / search-space info
+//!   profile         per-op schedule under a configuration
 //!
 //! Flag parsing is in-tree (clap is not vendored in this offline image).
 
@@ -26,7 +27,7 @@ use tftune::sim::ModelId;
 
 /// Flags that take no value. Data-driven so adding one is a single entry
 /// here rather than a special case inside the parser.
-const BOOL_FLAGS: &[&str] = &["fine", "help"];
+const BOOL_FLAGS: &[&str] = &["fine", "help", "tune-lengthscale"];
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
 struct Args {
@@ -111,10 +112,15 @@ COMMANDS
   tune         --model <m> --alg <bo|ga|nms|random|grid> [--iters 50]
                [--seed 0] [--parallel 1] [--max-seconds S]
                [--surrogate native|hlo] [--objective throughput|latency]
+               [--surrogate-addr host:port] [--tune-lengthscale]
                [--out hist.jsonl] [--config run.json]
   serve        --model <m> [--addr 127.0.0.1:7070] [--seed 0]
+  surrogate-serve  [--addr 127.0.0.1:7071]
+               host the authoritative shared GP factor: tuner processes
+               started with --surrogate-addr condition one model
   remote-tune  --addr <host:port[,host:port...]> --model <m> --alg <a>
                [--iters 50] [--seed 0] [--parallel N] [--max-seconds S]
+               [--surrogate-addr host:port]
   sweep        [--fine] [--out-dir figures_out]   (Fig. 6)
   figures      <fig5|fig6|fig7|table1|table2|all> [--iters 50]
                [--seeds 0,1,2] [--surrogate native|hlo] [--out-dir figures_out]
@@ -126,6 +132,12 @@ PARALLELISM
   tune --parallel N measures N trials concurrently on N simulator
   evaluators (N=1 reproduces the serial loop exactly); remote-tune shards
   trials across every daemon address given in --addr.
+
+CROSS-PROCESS SURROGATE
+  Start `surrogate-serve` once, then give every BO tuner process
+  --surrogate-addr <its address>: all their measurements condition one
+  served GP factor, and each process's in-flight trials are leased to the
+  others as constant-liar fantasies (expiring if a process dies).
 
 MODELS
   ssd-mobilenet resnet50-fp32 resnet50-int8 transformer-lt bert ncf
@@ -195,6 +207,12 @@ fn cmd_tune(args: &Args) -> Result<()> {
     if let Some(o) = args.opt("objective", "objective", Objective::parse)? {
         cfg.objective = o;
     }
+    if let Some(addr) = args.get("surrogate-addr") {
+        cfg.surrogate_addr = Some(addr.to_string());
+    }
+    if args.get("tune-lengthscale").is_some() {
+        cfg.tune_lengthscale = true;
+    }
 
     println!(
         "tuning {} with {} for {} iterations (seed {}, parallel {}, surrogate {}, objective {})",
@@ -239,6 +257,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_surrogate_serve(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7071");
+    let (server, _factor) =
+        TargetServer::bind_surrogate_only(addr, tftune::gp::GpHyper::default())?;
+    println!(
+        "surrogate service hosting the shared GP factor on {} (protocol v{})",
+        server.local_addr()?,
+        tftune::server::proto::PROTOCOL_VERSION
+    );
+    println!("attach tuners with: tftune tune --alg bo --surrogate-addr <this address> ...");
+    server.serve()?;
+    println!("surrogate service shut down");
+    Ok(())
+}
+
 fn cmd_remote_tune(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
     let alg = parse_alg(args)?;
@@ -265,7 +298,26 @@ fn cmd_remote_tune(args: &Args) -> Result<()> {
         .map(|r| Box::new(r) as Box<dyn tftune::evaluator::Evaluator + Send>)
         .collect();
 
-    let tuner = alg.build(&space, seed);
+    // With --surrogate-addr the BO engine conditions a replica of the
+    // served factor: every remote-tune process given the same address
+    // shares one model.
+    let tuner: Box<dyn tftune::algorithms::Tuner + Send> = match args.get("surrogate-addr") {
+        Some(surrogate_addr) => {
+            anyhow::ensure!(
+                alg == Algorithm::Bo,
+                "--surrogate-addr applies to the BO engine only (got {})",
+                alg.name()
+            );
+            let replica = tftune::gp::RemoteSurrogate::connect(surrogate_addr)
+                .with_context(|| format!("attaching surrogate service {surrogate_addr}"))?;
+            println!("conditioning the shared factor served at {surrogate_addr}");
+            Box::new(
+                tftune::algorithms::BayesOpt::new(space.clone(), seed)
+                    .with_shared_surrogate(replica),
+            )
+        }
+        None => alg.build(&space, seed),
+    };
     let mut session = TuningSession::new(tuner, pool, parse_budget(iters, args)?);
     let history = session.run()?;
     let best = history.best().context("empty history")?;
@@ -400,6 +452,7 @@ fn main() -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
+        Some("surrogate-serve") => cmd_surrogate_serve(&args),
         Some("remote-tune") => cmd_remote_tune(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("figures") => cmd_figures(&args),

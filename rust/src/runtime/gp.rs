@@ -5,6 +5,15 @@
 //! C_CAND candidates (shape contract read from meta.json and asserted
 //! here). This wrapper pads/masks the live history, marshals buffers, and
 //! unpacks the (mu, sigma, gain) tuple.
+//!
+//! Hyperparameters are *runtime inputs* (the `hyper_v` vector below), not
+//! compile-time constants — which is what lets
+//! `BayesOpt::with_lengthscale_selection` (and the CLI's
+//! `--tune-lengthscale`) drive the existing log-marginal-likelihood grid
+//! search on this path with **zero recompilation**: the engine re-selects
+//! the lengthscale as history grows and the same compiled graph scores
+//! under the new value. Pinned native-vs-artifact in
+//! `rust/tests/artifact_gp.rs`.
 
 use anyhow::{Context, Result};
 

@@ -26,19 +26,54 @@
 //! (`gp::SharedSurrogate`) in arrival order, so a fleet of daemons
 //! sharded across machines amortises one GP rather than refitting per
 //! connection. See `ARCHITECTURE.md` §"The shared surrogate".
+//!
+//! # The surrogate service
+//!
+//! A daemon can additionally (or exclusively) host the **authoritative
+//! shared factor** for a fleet of tuner processes: attach a
+//! [`SharedSurrogate`] via [`TargetServer::with_surrogate`] (or start a
+//! dedicated one with [`TargetServer::bind_surrogate_only`] / the
+//! `surrogate-serve` CLI command) and the protocol-v2 surrogate plane
+//! (`proto` docs) activates on every connection. `tell-obs` lines fold
+//! into the served factor in arrival order; `sync-factor` exports the
+//! catch-up [`SurrogateDelta`](crate::gp::SurrogateDelta) — observation
+//! rows plus the packed Cholesky suffix, so replicas import instead of
+//! re-factoring; `ask-lease`/`retract-lease` maintain each connection's
+//! in-flight constant-liar points, which are served back to *other*
+//! connections in their deltas and **expire when the owning connection
+//! closes** — a crashed tuner cannot leave phantom fantasies behind.
 
 pub mod proto;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::evaluator::Evaluator;
+use crate::gp::{GpHyper, SharedSurrogate};
 use crate::space::SearchSpace;
-use proto::{decode_request, encode_response, Request, Response};
+use proto::{
+    decode_request, decode_surrogate_request, encode_response, encode_surrogate_response,
+    Request, Response, SurrogateRequest, SurrogateResponse, PROTOCOL_VERSION,
+};
+
+/// One connection's published constant-liar lease.
+struct LeaseEntry {
+    id: u64,
+    /// Owning connection — leases are served only to *other* connections
+    /// and dropped when this one closes.
+    conn: u64,
+    points: Vec<(Vec<f64>, f64)>,
+}
+
+#[derive(Default)]
+struct LeaseTable {
+    next_id: u64,
+    entries: Vec<LeaseEntry>,
+}
 
 /// Shared server state.
 struct Shared {
@@ -46,6 +81,12 @@ struct Shared {
     space: SearchSpace,
     served: AtomicUsize,
     shutdown: AtomicBool,
+    /// The authoritative shared factor, when this daemon is a surrogate
+    /// service (module docs).
+    surrogate: Option<SharedSurrogate>,
+    leases: Mutex<LeaseTable>,
+    /// Connection-id allocator (lease ownership / expiry).
+    conns: AtomicU64,
 }
 
 /// A running target daemon.
@@ -69,8 +110,41 @@ impl TargetServer {
                 space,
                 served: AtomicUsize::new(0),
                 shutdown: AtomicBool::new(false),
+                surrogate: None,
+                leases: Mutex::new(LeaseTable::default()),
+                conns: AtomicU64::new(0),
             }),
         })
+    }
+
+    /// Host `surrogate` as the authoritative shared factor next to the
+    /// measurement daemon (module docs: the surrogate service). Must be
+    /// called before [`TargetServer::serve`]/[`TargetServer::spawn`].
+    /// Keep a clone of the handle to observe or reuse the factor after
+    /// the daemon shuts down.
+    pub fn with_surrogate(mut self, surrogate: SharedSurrogate) -> TargetServer {
+        Arc::get_mut(&mut self.shared)
+            .expect("attach the surrogate before serving")
+            .surrogate = Some(surrogate);
+        self
+    }
+
+    /// Bind a dedicated surrogate service: a daemon that hosts the
+    /// authoritative factor (fresh, conditioned with `hyper`) and no
+    /// measurement target — `evaluate` requests get a clean error.
+    /// Returns the daemon and a local handle to the served factor.
+    pub fn bind_surrogate_only(
+        addr: &str,
+        hyper: GpHyper,
+    ) -> Result<(TargetServer, SharedSurrogate)> {
+        let shared = SharedSurrogate::new(hyper);
+        let server = TargetServer::bind(
+            addr,
+            crate::space::threading_space(64, 1024, 64),
+            Box::new(NoTarget),
+        )?
+        .with_surrogate(shared.clone());
+        Ok((server, shared))
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -110,9 +184,100 @@ impl TargetServer {
     }
 }
 
+/// Evaluator behind [`TargetServer::bind_surrogate_only`]: a surrogate
+/// service with no measurement target.
+struct NoTarget;
+
+impl Evaluator for NoTarget {
+    fn evaluate(&mut self, _config: &crate::space::Config) -> Result<f64> {
+        anyhow::bail!("this daemon serves only the shared surrogate; no target is attached")
+    }
+
+    fn describe(&self) -> String {
+        "surrogate-only".to_string()
+    }
+}
+
 /// Serialise one response onto the shared connection writer.
 fn write_response(writer: &Mutex<TcpStream>, resp: &Response, shared: &Shared) -> bool {
     let line = encode_response(resp, &shared.space);
+    let mut w = writer.lock().unwrap();
+    writeln!(w, "{line}").is_ok()
+}
+
+/// Serve one surrogate-plane request (module docs: the surrogate
+/// service). Returns false when the connection writer is gone.
+fn handle_surrogate_request(
+    req: SurrogateRequest,
+    shared: &Shared,
+    conn_id: u64,
+    writer: &Mutex<TcpStream>,
+) -> bool {
+    let no_factor = || SurrogateResponse::Error {
+        message: "this daemon hosts no shared surrogate (start one with `surrogate-serve` \
+                  or attach it via TargetServer::with_surrogate)"
+            .to_string(),
+    };
+    let resp = match req {
+        // The handshake answers on any daemon — it reports what this
+        // server speaks, surrogate hosted or not.
+        SurrogateRequest::Hello { version: _ } => {
+            SurrogateResponse::HelloOk { version: PROTOCOL_VERSION }
+        }
+        SurrogateRequest::TellObs { x, y } => match &shared.surrogate {
+            Some(s) => {
+                // Fire-and-forget: queue into the served factor (enqueue
+                // order across connections = arrival order here) and send
+                // no response, so tells never stall the teller.
+                s.tell(x, y);
+                return true;
+            }
+            None => no_factor(),
+        },
+        SurrogateRequest::SyncFactor { from_n } => match &shared.surrogate {
+            Some(s) => match s.export_delta(from_n) {
+                Some(mut d) => {
+                    // Serve every *other* connection's lease points: the
+                    // requester conditions its own in-flight trials
+                    // itself.
+                    let table = shared.leases.lock().unwrap();
+                    d.leases = table
+                        .entries
+                        .iter()
+                        .filter(|e| e.conn != conn_id)
+                        .flat_map(|e| e.points.iter().cloned())
+                        .collect();
+                    SurrogateResponse::FactorDelta(d)
+                }
+                None => SurrogateResponse::Error {
+                    message: format!(
+                        "replica claims {from_n} rows, ahead of the served factor"
+                    ),
+                },
+            },
+            None => no_factor(),
+        },
+        SurrogateRequest::AskLease { points } => {
+            let mut table = shared.leases.lock().unwrap();
+            table.next_id += 1;
+            let id = table.next_id;
+            table.entries.push(LeaseEntry { id, conn: conn_id, points });
+            SurrogateResponse::Lease { id }
+        }
+        SurrogateRequest::RetractLease { id } => {
+            let mut table = shared.leases.lock().unwrap();
+            table.entries.retain(|e| e.id != id || e.conn != conn_id);
+            SurrogateResponse::LeaseOk { id }
+        }
+        SurrogateRequest::SetHyper { hyper } => match &shared.surrogate {
+            Some(s) => {
+                s.set_hyper(hyper);
+                SurrogateResponse::HyperOk
+            }
+            None => no_factor(),
+        },
+    };
+    let line = encode_surrogate_response(&resp);
     let mut w = writer.lock().unwrap();
     writeln!(w, "{line}").is_ok()
 }
@@ -138,6 +303,9 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
         Ok(w) => Mutex::new(w),
         Err(_) => return,
     };
+    // Lease scope: this connection's published constant-liar points live
+    // exactly as long as the connection (expiry on disconnect).
+    let conn_id = shared.conns.fetch_add(1, Ordering::SeqCst);
     let reader = BufReader::new(stream);
     // Scoped workers let every in-flight evaluate borrow `shared` and the
     // connection writer: the reader keeps pulling pipelined requests while
@@ -153,12 +321,23 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
             }
             match decode_request(&line, &shared.space) {
                 Err(e) => {
-                    if !write_response(
-                        &writer,
-                        &Response::Error { message: e, trial: None },
-                        shared,
-                    ) {
-                        break;
+                    // Not an evaluate-plane message: try the surrogate
+                    // plane before reporting a decode error.
+                    match decode_surrogate_request(&line) {
+                        Ok(sreq) => {
+                            if !handle_surrogate_request(sreq, shared, conn_id, &writer) {
+                                break;
+                            }
+                        }
+                        Err(_) => {
+                            if !write_response(
+                                &writer,
+                                &Response::Error { message: e, trial: None },
+                                shared,
+                            ) {
+                                break;
+                            }
+                        }
                     }
                 }
                 Ok(Request::Describe) => {
@@ -203,6 +382,9 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
         // scope joins any still-running evaluations before the connection
         // closes, so their responses are flushed first.
     });
+    // Lease expiry on disconnect: a replica that died mid-batch (or never
+    // retracted) stops conditioning its siblings' models right here.
+    shared.leases.lock().unwrap().entries.retain(|e| e.conn != conn_id);
 }
 
 #[cfg(test)]
@@ -304,6 +486,145 @@ mod tests {
         let _ = send(addr, &[proto::encode_request(&Request::Shutdown, &space)]);
         let served = handle.join().unwrap().unwrap();
         assert_eq!(served, 4);
+    }
+
+    #[test]
+    fn surrogate_plane_tell_sync_lease_over_tcp() {
+        let (server, factor) =
+            TargetServer::bind_surrogate_only("127.0.0.1:0", crate::gp::GpHyper::default())
+                .unwrap();
+        let (addr, handle) = server.spawn().unwrap();
+        let space = crate::space::threading_space(64, 1024, 64);
+
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        fn roundtrip(
+            s: &mut TcpStream,
+            reader: &mut BufReader<TcpStream>,
+            req: &SurrogateRequest,
+        ) -> SurrogateResponse {
+            writeln!(s, "{}", proto::encode_surrogate_request(req)).unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            proto::decode_surrogate_response(line.trim_end()).unwrap()
+        }
+
+        // Handshake reports the server's protocol version.
+        match roundtrip(&mut s, &mut reader, &SurrogateRequest::Hello { version: 2 }) {
+            SurrogateResponse::HelloOk { version } => assert_eq!(version, PROTOCOL_VERSION),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Fire-and-forget tells (no response), then a sync that must see
+        // both of them in arrival order.
+        for (x, y) in [(vec![0.25, 0.5], 1.0), (vec![0.75, 0.5], 2.0)] {
+            writeln!(
+                s,
+                "{}",
+                proto::encode_surrogate_request(&SurrogateRequest::TellObs { x, y })
+            )
+            .unwrap();
+        }
+        match roundtrip(&mut s, &mut reader, &SurrogateRequest::SyncFactor { from_n: 0 }) {
+            SurrogateResponse::FactorDelta(d) => {
+                assert_eq!(d.total_n, 2);
+                assert_eq!(d.rows.len(), 2);
+                assert_eq!(d.rows[0].1, 1.0);
+                assert_eq!(d.rows[1].1, 2.0);
+                assert!(d.factor.is_some(), "eager prefix factor rides along");
+                assert!(d.leases.is_empty(), "own leases are never served back");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(factor.len(), 2, "tells landed in the hosted factor");
+
+        // A lease from this connection is invisible to it but visible to
+        // a second connection — until this connection closes.
+        match roundtrip(
+            &mut s,
+            &mut reader,
+            &SurrogateRequest::AskLease { points: vec![(vec![0.1, 0.1], 0.0)] },
+        ) {
+            SurrogateResponse::Lease { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        match roundtrip(&mut s, &mut reader, &SurrogateRequest::SyncFactor { from_n: 2 }) {
+            SurrogateResponse::FactorDelta(d) => assert!(d.leases.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+        let mut s2 = TcpStream::connect(addr).unwrap();
+        let mut reader2 = BufReader::new(s2.try_clone().unwrap());
+        match roundtrip(&mut s2, &mut reader2, &SurrogateRequest::SyncFactor { from_n: 0 }) {
+            SurrogateResponse::FactorDelta(d) => {
+                assert_eq!(d.leases, vec![(vec![0.1, 0.1], 0.0)]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Both halves of the first connection must close for the server's
+        // reader to see EOF.
+        drop(s);
+        drop(reader);
+        // Lease expiry on disconnect (poll: the server notices EOF async).
+        let mut expired = false;
+        for _ in 0..200 {
+            match roundtrip(&mut s2, &mut reader2, &SurrogateRequest::SyncFactor { from_n: 2 })
+            {
+                SurrogateResponse::FactorDelta(d) => {
+                    if d.leases.is_empty() {
+                        expired = true;
+                        break;
+                    }
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(expired, "lease survived its connection");
+
+        // A surrogate-only daemon refuses measurements cleanly.
+        writeln!(
+            s2,
+            "{}",
+            proto::encode_request(
+                &Request::Evaluate { config: vec![1, 8, 128, 0, 8], trial: None },
+                &space,
+            )
+        )
+        .unwrap();
+        let mut line = String::new();
+        reader2.read_line(&mut line).unwrap();
+        match proto::decode_response(line.trim_end(), &space).unwrap() {
+            Response::Error { message, .. } => {
+                assert!(message.contains("no target"), "{message}")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let _ = send(addr, &[proto::encode_request(&Request::Shutdown, &space)]);
+        let _ = handle.join();
+    }
+
+    #[test]
+    fn measurement_daemon_without_surrogate_refuses_the_plane() {
+        let (addr, handle, space) = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(
+            s,
+            "{}",
+            proto::encode_surrogate_request(&SurrogateRequest::SyncFactor { from_n: 0 })
+        )
+        .unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        match proto::decode_surrogate_response(line.trim_end()).unwrap() {
+            SurrogateResponse::Error { message } => {
+                assert!(message.contains("hosts no shared surrogate"), "{message}")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        drop(s);
+        let _ = send(addr, &[proto::encode_request(&Request::Shutdown, &space)]);
+        let _ = handle.join();
     }
 
     #[test]

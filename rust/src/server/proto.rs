@@ -18,9 +18,48 @@
 //!
 //! Untagged `evaluate` requests (the pre-ask/tell protocol) remain valid:
 //! their responses simply omit the trial id and are answered in order.
+//!
+//! # The surrogate plane (protocol v2)
+//!
+//! [`PROTOCOL_VERSION`] 2 adds a second message plane on the same
+//! JSON-lines connection: the **surrogate service**, which replicates one
+//! shared GP factor across tuner processes (see `gp::replica` and
+//! `ARCHITECTURE.md` §"The surrogate service"). Its messages are
+//! space-free (inputs are unit-cube coordinates), so
+//! [`encode_surrogate_request`]/[`decode_surrogate_response`] take no
+//! `SearchSpace`:
+//!
+//! ```text
+//! -> {"type":"hello","version":2}                      protocol handshake
+//! -> {"type":"tell-obs","x":[...],"y":<f64>}           fire-and-forget observation
+//! -> {"type":"sync-factor","from_n":<n>}               catch-up request
+//! -> {"type":"ask-lease","points":[{"x":[...],"lie":<f64>},...]}
+//! -> {"type":"retract-lease","id":<id>}
+//! -> {"type":"set-hyper","hyper":{...}}
+//! <- {"type":"hello-ok","version":2}
+//! <- {"type":"factor-delta","from_n":..,"total_n":..,"hyper":{...},
+//!     "rows":[{"x":[...],"y":..},...],"factor":[...]|null,
+//!     "leases":[{"x":[...],"lie":..},...]}
+//! <- {"type":"lease","id":<id>}
+//! <- {"type":"lease-ok","id":<id>}
+//! <- {"type":"hyper-ok"}
+//! <- {"type":"error","message":"..."}                  shared with the evaluate plane
+//! ```
+//!
+//! `tell-obs` gets **no** response on success — tells must never block on
+//! the service. Leases are scoped to the connection that asked them: the
+//! daemon drops a connection's leases when it closes, which is how a
+//! crashed tuner's constant-liar fantasies expire. f64 values survive the
+//! wire bit-exactly (shortest-round-trip encode, correctly-rounded parse).
 
+use crate::gp::{GpHyper, KernelKind, SurrogateDelta, UNBOUNDED_HISTORY};
 use crate::space::{Config, SearchSpace};
 use crate::util::json::{parse, Json};
+
+/// Wire-protocol version: 1 was the implicit evaluate-only protocol, 2
+/// adds the handshake and the surrogate plane. Peers exchange versions via
+/// `hello`/`hello-ok`; a replica refuses a mismatched service.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Parsed request.
 #[derive(Debug, Clone, PartialEq)]
@@ -134,6 +173,263 @@ pub fn decode_response(line: &str, space: &SearchSpace) -> Result<Response, Stri
     }
 }
 
+// ---------------------------------------------------------------------------
+// The surrogate plane (protocol v2). Space-free: x rows are unit-cube
+// coordinates, so these codecs need no SearchSpace.
+// ---------------------------------------------------------------------------
+
+/// Parsed surrogate-plane request (module docs for the wire format).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SurrogateRequest {
+    /// Protocol-version handshake.
+    Hello { version: u32 },
+    /// Fire-and-forget observation append (no response on success).
+    TellObs { x: Vec<f64>, y: f64 },
+    /// Catch-up request: everything past the replica's `from_n` rows.
+    SyncFactor { from_n: usize },
+    /// Publish this connection's in-flight `(x, lie)` points as a lease.
+    AskLease { points: Vec<(Vec<f64>, f64)> },
+    /// Retract a lease this connection published earlier.
+    RetractLease { id: u64 },
+    /// Switch the served factor's hyperparameters (write-through).
+    SetHyper { hyper: GpHyper },
+}
+
+/// Parsed surrogate-plane response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SurrogateResponse {
+    HelloOk { version: u32 },
+    FactorDelta(SurrogateDelta),
+    Lease { id: u64 },
+    LeaseOk { id: u64 },
+    HyperOk,
+    Error { message: String },
+}
+
+fn hyper_to_json(h: &GpHyper) -> Json {
+    Json::obj(vec![
+        ("lengthscale", h.lengthscale.into()),
+        ("signal_var", h.signal_var.into()),
+        ("noise_var", h.noise_var.into()),
+        ("kernel", h.kernel.name().into()),
+        (
+            "max_history",
+            if h.max_history == UNBOUNDED_HISTORY {
+                Json::Null
+            } else {
+                h.max_history.into()
+            },
+        ),
+    ])
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing number '{key}'"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(Json::as_i64)
+        .and_then(|n| usize::try_from(n).ok())
+        .ok_or_else(|| format!("missing non-negative integer '{key}'"))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(Json::as_i64)
+        .and_then(|n| u64::try_from(n).ok())
+        .ok_or_else(|| format!("missing non-negative integer '{key}'"))
+}
+
+fn hyper_from_json(j: &Json) -> Result<GpHyper, String> {
+    let kname =
+        j.get("kernel").and_then(Json::as_str).ok_or_else(|| "missing 'kernel'".to_string())?;
+    let kernel = KernelKind::parse(kname).ok_or_else(|| format!("unknown kernel '{kname}'"))?;
+    let max_history = match j.get("max_history") {
+        None | Some(Json::Null) => UNBOUNDED_HISTORY,
+        Some(v) => v
+            .as_i64()
+            .and_then(|n| usize::try_from(n).ok())
+            .filter(|&w| w > 0)
+            .ok_or_else(|| "bad 'max_history'".to_string())?,
+    };
+    Ok(GpHyper {
+        lengthscale: req_f64(j, "lengthscale")?,
+        signal_var: req_f64(j, "signal_var")?,
+        noise_var: req_f64(j, "noise_var")?,
+        kernel,
+        max_history,
+    })
+}
+
+fn f64_vec(j: &Json) -> Result<Vec<f64>, String> {
+    j.as_arr()
+        .ok_or_else(|| "expected an array of numbers".to_string())?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| "expected a number".to_string()))
+        .collect()
+}
+
+/// `(x, value)` points under `value_key` ("y" for observation rows, "lie"
+/// for lease points).
+fn points_to_json(points: &[(Vec<f64>, f64)], value_key: &str) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|(x, v)| Json::obj(vec![("x", Json::from_f64s(x)), (value_key, (*v).into())]))
+            .collect(),
+    )
+}
+
+fn points_from_json(j: &Json, value_key: &str) -> Result<Vec<(Vec<f64>, f64)>, String> {
+    j.as_arr()
+        .ok_or_else(|| "expected an array of points".to_string())?
+        .iter()
+        .map(|p| {
+            let x = f64_vec(p.req("x").map_err(|e| e.to_string())?)?;
+            Ok((x, req_f64(p, value_key)?))
+        })
+        .collect()
+}
+
+pub fn encode_surrogate_request(req: &SurrogateRequest) -> String {
+    match req {
+        SurrogateRequest::Hello { version } => Json::obj(vec![
+            ("type", "hello".into()),
+            ("version", (*version as i64).into()),
+        ])
+        .to_string(),
+        SurrogateRequest::TellObs { x, y } => Json::obj(vec![
+            ("type", "tell-obs".into()),
+            ("x", Json::from_f64s(x)),
+            ("y", (*y).into()),
+        ])
+        .to_string(),
+        SurrogateRequest::SyncFactor { from_n } => Json::obj(vec![
+            ("type", "sync-factor".into()),
+            ("from_n", (*from_n).into()),
+        ])
+        .to_string(),
+        SurrogateRequest::AskLease { points } => Json::obj(vec![
+            ("type", "ask-lease".into()),
+            ("points", points_to_json(points, "lie")),
+        ])
+        .to_string(),
+        SurrogateRequest::RetractLease { id } => Json::obj(vec![
+            ("type", "retract-lease".into()),
+            ("id", (*id as i64).into()),
+        ])
+        .to_string(),
+        SurrogateRequest::SetHyper { hyper } => Json::obj(vec![
+            ("type", "set-hyper".into()),
+            ("hyper", hyper_to_json(hyper)),
+        ])
+        .to_string(),
+    }
+}
+
+pub fn decode_surrogate_request(line: &str) -> Result<SurrogateRequest, String> {
+    let j = parse(line).map_err(|e| e.to_string())?;
+    match j.get("type").and_then(Json::as_str) {
+        Some("hello") => Ok(SurrogateRequest::Hello {
+            version: req_u64(&j, "version")?
+                .try_into()
+                .map_err(|_| "version out of range".to_string())?,
+        }),
+        Some("tell-obs") => Ok(SurrogateRequest::TellObs {
+            x: f64_vec(j.req("x").map_err(|e| e.to_string())?)?,
+            y: req_f64(&j, "y")?,
+        }),
+        Some("sync-factor") => {
+            Ok(SurrogateRequest::SyncFactor { from_n: req_usize(&j, "from_n")? })
+        }
+        Some("ask-lease") => Ok(SurrogateRequest::AskLease {
+            points: points_from_json(j.req("points").map_err(|e| e.to_string())?, "lie")?,
+        }),
+        Some("retract-lease") => Ok(SurrogateRequest::RetractLease { id: req_u64(&j, "id")? }),
+        Some("set-hyper") => Ok(SurrogateRequest::SetHyper {
+            hyper: hyper_from_json(j.req("hyper").map_err(|e| e.to_string())?)?,
+        }),
+        other => Err(format!("unknown surrogate request type {other:?}")),
+    }
+}
+
+pub fn encode_surrogate_response(resp: &SurrogateResponse) -> String {
+    match resp {
+        SurrogateResponse::HelloOk { version } => Json::obj(vec![
+            ("type", "hello-ok".into()),
+            ("version", (*version as i64).into()),
+        ])
+        .to_string(),
+        SurrogateResponse::FactorDelta(d) => Json::obj(vec![
+            ("type", "factor-delta".into()),
+            ("from_n", d.from_n.into()),
+            ("total_n", d.total_n.into()),
+            ("hyper", hyper_to_json(&d.hyper)),
+            ("rows", points_to_json(&d.rows, "y")),
+            (
+                "factor",
+                match &d.factor {
+                    Some(f) => Json::from_f64s(f),
+                    None => Json::Null,
+                },
+            ),
+            ("leases", points_to_json(&d.leases, "lie")),
+        ])
+        .to_string(),
+        SurrogateResponse::Lease { id } => Json::obj(vec![
+            ("type", "lease".into()),
+            ("id", (*id as i64).into()),
+        ])
+        .to_string(),
+        SurrogateResponse::LeaseOk { id } => Json::obj(vec![
+            ("type", "lease-ok".into()),
+            ("id", (*id as i64).into()),
+        ])
+        .to_string(),
+        SurrogateResponse::HyperOk => {
+            Json::obj(vec![("type", "hyper-ok".into())]).to_string()
+        }
+        SurrogateResponse::Error { message } => Json::obj(vec![
+            ("type", "error".into()),
+            ("message", message.as_str().into()),
+        ])
+        .to_string(),
+    }
+}
+
+pub fn decode_surrogate_response(line: &str) -> Result<SurrogateResponse, String> {
+    let j = parse(line).map_err(|e| e.to_string())?;
+    match j.get("type").and_then(Json::as_str) {
+        Some("hello-ok") => Ok(SurrogateResponse::HelloOk {
+            version: req_u64(&j, "version")?
+                .try_into()
+                .map_err(|_| "version out of range".to_string())?,
+        }),
+        Some("factor-delta") => {
+            let factor = match j.get("factor") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(f64_vec(v)?),
+            };
+            Ok(SurrogateResponse::FactorDelta(SurrogateDelta {
+                from_n: req_usize(&j, "from_n")?,
+                total_n: req_usize(&j, "total_n")?,
+                hyper: hyper_from_json(j.req("hyper").map_err(|e| e.to_string())?)?,
+                rows: points_from_json(j.req("rows").map_err(|e| e.to_string())?, "y")?,
+                factor,
+                leases: points_from_json(j.req("leases").map_err(|e| e.to_string())?, "lie")?,
+            }))
+        }
+        Some("lease") => Ok(SurrogateResponse::Lease { id: req_u64(&j, "id")? }),
+        Some("lease-ok") => Ok(SurrogateResponse::LeaseOk { id: req_u64(&j, "id")? }),
+        Some("hyper-ok") => Ok(SurrogateResponse::HyperOk),
+        Some("error") => Ok(SurrogateResponse::Error {
+            message: j.get("message").and_then(Json::as_str).unwrap_or("").to_string(),
+        }),
+        other => Err(format!("unknown surrogate response type {other:?}")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,6 +505,93 @@ mod tests {
         assert!(decode_request("not json", &s).is_err());
         assert!(decode_request(r#"{"type":"nope"}"#, &s).is_err());
         assert!(decode_response(r#"{"type":"result"}"#, &s).is_err());
+    }
+
+    #[test]
+    fn surrogate_request_round_trip() {
+        let hyper = GpHyper { lengthscale: 0.35, max_history: 32, ..GpHyper::default() };
+        for req in [
+            SurrogateRequest::Hello { version: PROTOCOL_VERSION },
+            SurrogateRequest::TellObs { x: vec![0.25, 0.5, 1.0], y: -3.125 },
+            SurrogateRequest::SyncFactor { from_n: 17 },
+            SurrogateRequest::AskLease { points: vec![(vec![0.1, 0.9], 0.0)] },
+            SurrogateRequest::AskLease { points: Vec::new() },
+            SurrogateRequest::RetractLease { id: 41 },
+            SurrogateRequest::SetHyper { hyper },
+        ] {
+            let line = encode_surrogate_request(&req);
+            assert_eq!(decode_surrogate_request(&line).unwrap(), req, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn surrogate_response_round_trip() {
+        let delta = SurrogateDelta {
+            from_n: 2,
+            total_n: 4,
+            hyper: GpHyper::default(),
+            rows: vec![(vec![0.5, 0.25], 1.5), (vec![0.125, 0.75], -0.5)],
+            factor: Some(vec![1.0, 0.5, 0.875, 0.25, 0.125, 1.5, 0.0]),
+            leases: vec![(vec![0.3, 0.3], 0.0)],
+        };
+        for resp in [
+            SurrogateResponse::HelloOk { version: PROTOCOL_VERSION },
+            SurrogateResponse::FactorDelta(delta.clone()),
+            SurrogateResponse::FactorDelta(SurrogateDelta { factor: None, ..delta }),
+            SurrogateResponse::Lease { id: 7 },
+            SurrogateResponse::LeaseOk { id: 7 },
+            SurrogateResponse::HyperOk,
+            SurrogateResponse::Error { message: "boom \"quoted\"".into() },
+        ] {
+            let line = encode_surrogate_response(&resp);
+            assert_eq!(decode_surrogate_response(&line).unwrap(), resp, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn unbounded_window_survives_the_wire() {
+        let hyper =
+            GpHyper { max_history: crate::gp::UNBOUNDED_HISTORY, ..GpHyper::default() };
+        let line = encode_surrogate_request(&SurrogateRequest::SetHyper { hyper });
+        assert!(line.contains(r#""max_history":null"#), "line: {line}");
+        match decode_surrogate_request(&line).unwrap() {
+            SurrogateRequest::SetHyper { hyper: h } => {
+                assert_eq!(h.max_history, crate::gp::UNBOUNDED_HISTORY)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn surrogate_rejects_garbage() {
+        assert!(decode_surrogate_request("not json").is_err());
+        assert!(decode_surrogate_request(r#"{"type":"evaluate"}"#).is_err());
+        assert!(decode_surrogate_request(r#"{"type":"tell-obs","x":"nope","y":1}"#).is_err());
+        assert!(decode_surrogate_response(r#"{"type":"factor-delta"}"#).is_err());
+        assert!(decode_surrogate_request(r#"{"type":"sync-factor","from_n":-1}"#).is_err());
+    }
+
+    #[test]
+    fn prop_surrogate_f64s_survive_the_wire_bit_exactly() {
+        // The factor-suffix transfer relies on f64 round-tripping through
+        // the JSON codec without rounding: shortest-round-trip encode,
+        // correctly-rounded parse.
+        prop::check("surrogate f64 wire round trip", 50, |rng| {
+            let x: Vec<f64> = (0..5)
+                .map(|_| (rng.f64() - 0.5) * 10f64.powi(rng.range_i64(-12, 12) as i32))
+                .collect();
+            let y = (rng.f64() - 0.5) * 1e6;
+            let req = SurrogateRequest::TellObs { x: x.clone(), y };
+            match decode_surrogate_request(&encode_surrogate_request(&req)).unwrap() {
+                SurrogateRequest::TellObs { x: x2, y: y2 } => {
+                    assert_eq!(y.to_bits(), y2.to_bits());
+                    for (a, b) in x.iter().zip(&x2) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{a} re-decoded as {b}");
+                    }
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        });
     }
 
     #[test]

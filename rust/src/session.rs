@@ -47,7 +47,7 @@ use anyhow::Result;
 
 use crate::algorithms::{BayesOpt, Trial, Tuner};
 use crate::evaluator::Evaluator;
-use crate::gp::{GpHyper, SharedSurrogate};
+use crate::gp::{GpHyper, RemoteSurrogate, SharedSurrogate};
 use crate::history::{History, Measurement};
 use crate::space::SearchSpace;
 
@@ -384,6 +384,9 @@ impl TuningSession {
 /// space, so all concurrent measurements condition a single incremental
 /// factor (tells enqueue without blocking; each engine's ask drains and
 /// scores under the model lock — see `gp::shared` for the contract).
+/// [`SessionGroup::remote_shared_bo`] is the cross-process variant: the
+/// factor lives in a surrogate service and every session attaches a
+/// [`RemoteSurrogate`] replica over its own TCP connection.
 pub struct SessionGroup {
     sessions: Vec<TuningSession>,
 }
@@ -430,6 +433,30 @@ impl SessionGroup {
             group.push(TuningSession::new(tuner, make_pool(i), budget.clone()));
         }
         (shared, group)
+    }
+
+    /// The cross-process sibling of [`SessionGroup::shared_bo`]: one BO
+    /// session per seed, each conditioning a [`RemoteSurrogate`] replica
+    /// of the factor served at `surrogate_addr` (a daemon started with
+    /// `surrogate-serve`, or any [`crate::server::TargetServer`] with an
+    /// attached surrogate). Each session gets its *own* connection, so
+    /// its constant-liar lease expires independently if it dies — exactly
+    /// how separate tuner processes on other hosts attach. Fails fast if
+    /// the service is unreachable or speaks the wrong protocol version.
+    pub fn remote_shared_bo(
+        space: &SearchSpace,
+        surrogate_addr: &str,
+        seeds: &[u64],
+        budget: Budget,
+        mut make_pool: impl FnMut(usize) -> Vec<Box<dyn Evaluator + Send>>,
+    ) -> Result<SessionGroup> {
+        let mut group = SessionGroup::new();
+        for (i, &seed) in seeds.iter().enumerate() {
+            let handle = RemoteSurrogate::connect(surrogate_addr)?;
+            let tuner = Box::new(BayesOpt::new(space.clone(), seed).with_shared_surrogate(handle));
+            group.push(TuningSession::new(tuner, make_pool(i), budget.clone()));
+        }
+        Ok(group)
     }
 
     /// Run every session to its stop, concurrently, and return their
@@ -681,6 +708,52 @@ mod tests {
         assert_eq!(g.len(), 30);
         let idx = g.conditioning_set();
         assert!(g.sync(&idx), "shared factor must be buildable after the run");
+    }
+
+    #[test]
+    fn session_group_remote_shared_bo_conditions_one_served_factor() {
+        use crate::server::proto::{encode_request, Request};
+        use crate::server::TargetServer;
+        use std::io::Write;
+
+        let model = ModelId::NcfFp32;
+        let space = model.space();
+        let (server, factor) =
+            TargetServer::bind_surrogate_only("127.0.0.1:0", GpHyper::default()).unwrap();
+        let (addr, server_handle) = server.spawn().unwrap();
+
+        let mut group = SessionGroup::remote_shared_bo(
+            &space,
+            &addr.to_string(),
+            &[20, 21],
+            Budget::evaluations(8),
+            |i| sim_pool(model, 200 + i as u64, 0.0, Objective::Throughput, 2),
+        )
+        .unwrap();
+        let histories = group.run().unwrap();
+        assert_eq!(histories.len(), 2);
+        for h in &histories {
+            assert_eq!(h.len(), 8);
+            for e in h.iter() {
+                assert!(space.contains(&e.config));
+            }
+        }
+        // Tells are fire-and-forget lines: poll until the served factor
+        // has absorbed every completed trial of both sessions.
+        let mut n = 0;
+        for _ in 0..400 {
+            n = factor.total_observations();
+            if n >= 16 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(n, 16, "every trial of every process conditions the served factor");
+
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(s, "{}", encode_request(&Request::Shutdown, &space)).unwrap();
+        drop(s);
+        let _ = server_handle.join();
     }
 
     #[test]

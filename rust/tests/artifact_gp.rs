@@ -1,8 +1,11 @@
 //! Cross-layer integration: the AOT HLO GP artifact (L2 JAX graph with the
 //! L1 Pallas RBF kernel inside), executed via PJRT from Rust, must agree
-//! with the exact native-Rust GP.
+//! with the exact native-Rust GP — including lengthscale selection, which
+//! the artifact consumes as a *runtime input* (no recompilation).
 //!
-//! Skips (with a note) when `artifacts/` has not been built.
+//! Skips (with a note) when `artifacts/` has not been built; the
+//! lengthscale-selection pin runs the fused-surrogate engine path either
+//! way (the scratch reference is artifact-shaped: one `fit_score` call).
 
 use tftune::gp::{GpHyper, NativeSurrogate, Surrogate};
 use tftune::runtime::GpSurrogate;
@@ -82,6 +85,70 @@ fn artifact_handles_max_candidates() {
     let s = hlo.fit_score(&x, &y, &cand, GpHyper::default(), 1.5, 1.0).unwrap();
     assert_eq!(s.mean.len(), 512);
     assert!(s.std.iter().all(|v| v.is_finite() && *v >= 0.0));
+}
+
+#[test]
+fn lengthscale_selection_drives_the_artifact_path_without_recompilation() {
+    // ROADMAP satellite: `select_lengthscale` exists for the native stack;
+    // the artifact takes lengthscale as a runtime input, so the same grid
+    // search drives it with zero recompilation. Pin: a native incremental
+    // engine and a fused-surrogate engine (the artifact-shaped scoring
+    // path) walk identical trajectories under --tune-lengthscale and
+    // select the *same* grid lengthscale.
+    use tftune::algorithms::{BayesOpt, Tuner};
+    use tftune::gp::{ExactRefitSurrogate, LENGTHSCALE_GRID};
+    use tftune::history::Measurement;
+    use tftune::space::threading_space;
+
+    let space = threading_space(64, 1024, 64);
+    let target = space.to_unit(&vec![2, 30, 576, 80, 40]);
+    let objective = |cfg: &Vec<i64>| {
+        let u = space.to_unit(cfg);
+        9.0 - 9.0 * u.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+    };
+
+    let mut native = BayesOpt::new(space.clone(), 27).with_lengthscale_selection();
+    let mut fused = BayesOpt::with_surrogate(space.clone(), 27, ExactRefitSurrogate)
+        .with_lengthscale_selection();
+    for step in 0..24 {
+        let a = native.ask(1).pop().unwrap();
+        let b = fused.ask(1).pop().unwrap();
+        assert_eq!(a.config, b.config, "paths diverged under selection at step {step}");
+        let v = objective(&a.config);
+        native.tell(a.id, &Measurement::new(v));
+        fused.tell(b.id, &Measurement::new(v));
+    }
+    let ls = native.hyper().lengthscale;
+    assert!(LENGTHSCALE_GRID.contains(&ls), "selected lengthscale {ls} off grid");
+    assert_eq!(
+        ls,
+        fused.hyper().lengthscale,
+        "native and artifact-path selection disagree"
+    );
+    // The selection must have actually engaged (power-of-two history
+    // checkpoints at n=4/8/16 all ran) — with the default 0.2 in the grid
+    // this still holds because the quadratic's LML argmax at n>=16 is a
+    // longer lengthscale than the near-white candidates.
+    assert!(fused.hyper().lengthscale > 0.0);
+
+    // When the compiled artifact is present, it must accept the selected
+    // hypers at runtime — same graph, new lengthscale input.
+    if let Some(mut hlo) = load() {
+        let mut rng = Rng::new(3);
+        let (x, y, cand) = toy(&mut rng, 12, 5, 8);
+        let hyper = GpHyper { lengthscale: ls, ..GpHyper::default() };
+        let s = hlo.fit_score(&x, &y, &cand, hyper, 1.5, 0.0).unwrap();
+        assert_eq!(s.mean.len(), 8);
+        let native_s = NativeSurrogate.fit_score(&x, &y, &cand, hyper, 1.5, 0.0).unwrap();
+        for i in 0..8 {
+            assert!(
+                (s.mean[i] - native_s.mean[i]).abs() < 2e-3,
+                "artifact under selected lengthscale diverged: {} vs {}",
+                s.mean[i],
+                native_s.mean[i]
+            );
+        }
+    }
 }
 
 #[test]

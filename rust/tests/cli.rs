@@ -121,6 +121,45 @@ fn tune_with_config_file() {
 }
 
 #[test]
+fn surrogate_serve_and_two_tuner_processes_share_one_factor() {
+    // The cross-process quickstart, end to end with real OS processes:
+    // one surrogate service, two BO tuner processes conditioning it.
+    let port = 17__557;
+    let addr = format!("127.0.0.1:{port}");
+    let mut server = Command::new(env!("CARGO_BIN_EXE_tftune"))
+        .args(["surrogate-serve", "--addr", &addr])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning surrogate service");
+    std::thread::sleep(std::time::Duration::from_millis(400));
+
+    for seed in ["3", "4"] {
+        let out = tftune(&[
+            "tune",
+            "--model",
+            "ncf",
+            "--alg",
+            "bo",
+            "--iters",
+            "10",
+            "--seed",
+            seed,
+            "--surrogate-addr",
+            &addr,
+        ]);
+        assert!(
+            out.status.success(),
+            "tuner process (seed {seed}) failed, stderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(String::from_utf8_lossy(&out.stdout).contains("best throughput"));
+    }
+    let _ = server.kill();
+    let _ = server.wait();
+}
+
+#[test]
 fn serve_and_remote_tune_over_tcp() {
     // serve on an ephemeral-ish port; pick one unlikely to clash
     let port = 17__435;

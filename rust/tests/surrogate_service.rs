@@ -1,0 +1,378 @@
+//! The surrogate service contract, pinned over real loopback TCP:
+//!
+//! 1. N replicas (threads with their own connections — thread-per-process
+//!    stand-ins) telling one served factor produce, after sync, a
+//!    posterior within 1e-9 of the serial private-model path fed the same
+//!    (canonical, service-side) observation order — mirroring
+//!    `rust/tests/shared_surrogate.rs` one protocol layer up.
+//! 2. Replica catch-up after Δn new observations transfers only the
+//!    packed-factor *suffix*: a byte-count bound on the encoded
+//!    `factor-delta` line.
+//! 3. Two BO tuner sessions sharing one served factor match a
+//!    single-process `SharedSurrogate` replay of the same observation
+//!    order (the ISSUE 4 acceptance criterion).
+//! 4. Constant-liar leases: one replica's in-flight fantasies surface as
+//!    ambient points for its siblings, and expire when its connection
+//!    dies.
+//! 5. Version/handshake hygiene: a daemon without a hosted factor refuses
+//!    replicas loudly.
+
+use tftune::evaluator::{sim_pool, Objective};
+use tftune::gp::{
+    GpHyper, IncrementalGp, RemoteSurrogate, ScoreWorkspace, SharedSurrogate, SurrogateHandle,
+};
+use tftune::server::proto::{encode_surrogate_response, SurrogateResponse};
+use tftune::server::TargetServer;
+use tftune::sim::ModelId;
+use tftune::space::threading_space;
+use tftune::util::linalg::packed_len;
+use tftune::util::Rng;
+
+fn serve_factor() -> (
+    std::net::SocketAddr,
+    std::thread::JoinHandle<anyhow::Result<usize>>,
+    SharedSurrogate,
+) {
+    let (server, factor) =
+        TargetServer::bind_surrogate_only("127.0.0.1:0", GpHyper::default()).unwrap();
+    let (addr, handle) = server.spawn().unwrap();
+    (addr, handle, factor)
+}
+
+fn shutdown_daemon(addr: std::net::SocketAddr) {
+    use std::io::Write;
+    use tftune::server::proto::{encode_request, Request};
+    let space = threading_space(64, 1024, 64);
+    if let Ok(mut s) = std::net::TcpStream::connect(addr) {
+        let _ = writeln!(s, "{}", encode_request(&Request::Shutdown, &space));
+    }
+}
+
+fn toy_obs(rng: &mut Rng, n: usize, d: usize) -> Vec<(Vec<f64>, f64)> {
+    (0..n)
+        .map(|_| {
+            let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+            let y = (3.0 * x[0]).sin() - 0.5 * x[d - 1];
+            (x, y)
+        })
+        .collect()
+}
+
+fn obs_key(x: &[f64], y: f64) -> (Vec<u64>, u64) {
+    (x.iter().map(|v| v.to_bits()).collect(), y.to_bits())
+}
+
+#[test]
+fn replicas_over_tcp_match_serial_private_model() {
+    let hyper = GpHyper::default();
+    let mut rng = Rng::new(71);
+    let (n, d) = (48usize, 4usize);
+    let obs = toy_obs(&mut rng, n, d);
+    let cand: Vec<f64> = (0..8 * d).map(|_| rng.f64()).collect();
+
+    let (addr, handle, _factor) = serve_factor();
+    let addr_s = addr.to_string();
+
+    // Four replicas tell disjoint chunks concurrently over their own
+    // connections — the thread-per-process stand-in for four tuner
+    // processes.
+    std::thread::scope(|scope| {
+        for chunk in obs.chunks(n / 4) {
+            let addr = addr_s.clone();
+            scope.spawn(move || {
+                let replica = RemoteSurrogate::connect(&addr).unwrap();
+                for (x, y) in chunk {
+                    replica.tell(x.clone(), *y);
+                }
+            });
+        }
+    });
+
+    // Tells are fire-and-forget: poll a reader replica until the service
+    // has absorbed all of them (each lock performs one sync round trip).
+    let reader = RemoteSurrogate::connect(&addr_s).unwrap();
+    let mut seen = 0;
+    for _ in 0..2000 {
+        seen = reader.lock().len();
+        if seen == n {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(seen, n, "a remote tell was lost");
+
+    let mut g = reader.lock();
+    // The mirrored store is a permutation of the told set, bit-exact
+    // across the wire.
+    let mut got: Vec<_> = (0..n).map(|i| obs_key(g.x(i), g.y(i))).collect();
+    let mut want: Vec<_> = obs.iter().map(|(x, y)| obs_key(x, *y)).collect();
+    got.sort();
+    want.sort();
+    assert_eq!(got, want, "mirrored observations are not the told set");
+
+    // Score through the replicated factor (canonical service order)...
+    let idx = g.conditioning_set();
+    assert_eq!(idx.len(), n);
+    assert!(g.sync(&idx));
+    let y_canon: Vec<f64> = (0..n).map(|i| g.y(i)).collect();
+    g.set_targets(&y_canon);
+    let mut ws = ScoreWorkspace::default();
+    g.score_into(&cand, 8, 1.5, 0.3, &mut ws);
+
+    // ...and through a serial private model fed the same canonical order.
+    let mut private = IncrementalGp::new(hyper);
+    for i in 0..n {
+        assert!(private.push(g.x(i), g.y(i)));
+    }
+    private.set_targets(&y_canon);
+    let mut ws_ref = ScoreWorkspace::default();
+    private.score_into(&cand, 8, 1.5, 0.3, &mut ws_ref);
+
+    for j in 0..8 {
+        assert!(
+            (ws.mean[j] - ws_ref.mean[j]).abs() <= 1e-9,
+            "mean diverged across the service: {} vs {}",
+            ws.mean[j],
+            ws_ref.mean[j]
+        );
+        assert!(
+            (ws.std[j] - ws_ref.std[j]).abs() <= 1e-9,
+            "std diverged across the service: {} vs {}",
+            ws.std[j],
+            ws_ref.std[j]
+        );
+    }
+    drop(g);
+
+    shutdown_daemon(addr);
+    let _ = handle.join();
+}
+
+#[test]
+fn replica_catchup_transfers_only_the_factor_suffix() {
+    // The byte-count bound of the ISSUE 4 acceptance criteria: catching
+    // up Δn=4 rows at n=64 must ship the 4 suffix factor rows
+    // (packed_len(64) - packed_len(60) = 250 values), not the full
+    // packed_len(64) = 2080-value factor — bounded here on the actual
+    // encoded wire line.
+    let hyper = GpHyper::default();
+    let mut rng = Rng::new(72);
+    let obs = toy_obs(&mut rng, 64, 5);
+
+    let authority = SharedSurrogate::new(hyper);
+    for (x, y) in &obs {
+        authority.tell(x.clone(), *y);
+    }
+    let full = authority.export_delta(0).unwrap();
+    assert_eq!(full.factor.as_ref().unwrap().len(), packed_len(64));
+    let full_line = encode_surrogate_response(&SurrogateResponse::FactorDelta(full));
+
+    let delta = authority.export_delta(60).unwrap();
+    assert_eq!(delta.rows.len(), 4);
+    assert_eq!(
+        delta.factor.as_ref().unwrap().len(),
+        packed_len(64) - packed_len(60),
+        "catch-up must carry exactly the suffix factor rows"
+    );
+    let delta_line = encode_surrogate_response(&SurrogateResponse::FactorDelta(delta.clone()));
+    assert!(
+        delta_line.len() * 4 < full_line.len(),
+        "Δn=4 catch-up ({} bytes) is not a small fraction of a full sync ({} bytes)",
+        delta_line.len(),
+        full_line.len()
+    );
+
+    // And the transferred suffix is sufficient: a replica at 60 rows
+    // lands bit-identical to the authority.
+    let replica = SharedSurrogate::new(hyper);
+    for (x, y) in &obs[..60] {
+        replica.tell(x.clone(), *y);
+    }
+    drop(replica.lock());
+    assert!(replica.import_delta(&delta));
+    let cand: Vec<f64> = (0..10).map(|_| rng.f64()).collect();
+    let (mut wa, mut wb) = (ScoreWorkspace::default(), ScoreWorkspace::default());
+    for (h, ws) in [(&authority, &mut wa), (&replica, &mut wb)] {
+        let mut g = h.lock();
+        let idx = g.conditioning_set();
+        assert!(g.sync(&idx));
+        let y: Vec<f64> = idx.iter().map(|&i| g.y(i)).collect();
+        g.set_targets(&y);
+        g.score_into(&cand, 2, 1.5, 0.0, ws);
+    }
+    for j in 0..2 {
+        assert_eq!(wa.mean[j].to_bits(), wb.mean[j].to_bits());
+        assert_eq!(wa.std[j].to_bits(), wb.std[j].to_bits());
+    }
+}
+
+#[test]
+fn two_tuner_sessions_match_single_process_replay() {
+    // The acceptance criterion: two BO tuners sharing one served factor
+    // produce a posterior within 1e-9 of the single-process
+    // SharedSurrogate replay of the same observation order.
+    let model = ModelId::NcfFp32;
+    let space = model.space();
+    let (addr, handle, _factor) = serve_factor();
+
+    let mut group = tftune::session::SessionGroup::remote_shared_bo(
+        &space,
+        &addr.to_string(),
+        &[81, 82],
+        tftune::session::Budget::evaluations(12),
+        |i| sim_pool(model, 800 + i as u64, 0.0, Objective::Throughput, 2),
+    )
+    .unwrap();
+    let histories = group.run().unwrap();
+    assert_eq!(histories.len(), 2);
+    let total: usize = histories.iter().map(|h| h.len()).sum();
+    assert_eq!(total, 24);
+
+    // Pull the canonical observation order off the service (poll: the
+    // final tells are fire-and-forget).
+    let reader = RemoteSurrogate::connect(&addr.to_string()).unwrap();
+    let mut seen = 0;
+    for _ in 0..2000 {
+        seen = reader.lock().len();
+        if seen == total {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(seen, total, "the served factor missed a trial");
+
+    let mut g = reader.lock();
+    // Single-process replay: the same observations, in the same order,
+    // through a local SharedSurrogate. (Hyper read through the guard —
+    // the handle's own accessor would re-lock the mirror state.)
+    let replay = SharedSurrogate::new(g.hyper());
+    for i in 0..total {
+        replay.tell(g.x(i).to_vec(), g.y(i));
+    }
+    let mut gr = replay.lock();
+    assert_eq!(gr.len(), total);
+    for i in 0..total {
+        assert_eq!(
+            obs_key(g.x(i), g.y(i)),
+            obs_key(gr.x(i), gr.y(i)),
+            "replay store diverged at row {i}"
+        );
+    }
+
+    let mut rng = Rng::new(83);
+    let cand: Vec<f64> = (0..4 * space.dim()).map(|_| rng.f64()).collect();
+    let (mut wa, mut wb) = (ScoreWorkspace::default(), ScoreWorkspace::default());
+    for (guard, ws) in [(&mut g, &mut wa), (&mut gr, &mut wb)] {
+        let idx = guard.conditioning_set();
+        assert!(guard.sync(&idx));
+        let y: Vec<f64> = idx.iter().map(|&i| guard.y(i)).collect();
+        guard.set_targets(&y);
+        guard.score_into(&cand, 4, 1.5, 0.0, ws);
+    }
+    for j in 0..4 {
+        assert!(
+            (wa.mean[j] - wb.mean[j]).abs() <= 1e-9,
+            "posterior mean diverged from the single-process replay: {} vs {}",
+            wa.mean[j],
+            wb.mean[j]
+        );
+        assert!(
+            (wa.std[j] - wb.std[j]).abs() <= 1e-9,
+            "posterior std diverged from the single-process replay: {} vs {}",
+            wa.std[j],
+            wb.std[j]
+        );
+    }
+    drop(g);
+    drop(gr);
+
+    shutdown_daemon(addr);
+    let _ = handle.join();
+}
+
+#[test]
+fn leases_condition_siblings_and_expire_on_disconnect() {
+    let (addr, handle, _factor) = serve_factor();
+    let addr_s = addr.to_string();
+
+    let a = RemoteSurrogate::connect(&addr_s).unwrap();
+    let b = RemoteSurrogate::connect(&addr_s).unwrap();
+
+    // A batch on replica A leaves an in-flight fantasy: published as a
+    // lease when its guard drops (synchronously, so no poll needed).
+    {
+        let mut ga = a.lock();
+        assert!(ga.extend_fantasy(&[0.4, 0.6], 0.0));
+    }
+    {
+        let gb = b.lock();
+        assert_eq!(gb.ambient_len(), 1, "sibling lease not served");
+        let (x, lie) = gb.ambient_point(0);
+        assert_eq!(x, vec![0.4, 0.6]);
+        assert_eq!(lie, 0.0);
+    }
+    // A's own view never includes its own lease; re-extending the same
+    // in-flight point keeps the lease alive (the publish hook dedups an
+    // unchanged batch instead of retract-and-republish).
+    {
+        let mut ga = a.lock();
+        assert_eq!(ga.ambient_len(), 0, "a replica saw its own lease");
+        assert!(ga.extend_fantasy(&[0.4, 0.6], 0.0));
+    }
+    {
+        let gb = b.lock();
+        assert_eq!(gb.ambient_len(), 1, "unchanged lease was dropped on republish");
+    }
+
+    // Kill replica A without retracting: the service must expire its
+    // lease when the connection closes.
+    drop(a);
+    let mut ambient = usize::MAX;
+    for _ in 0..2000 {
+        ambient = b.lock().ambient_len();
+        if ambient == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(ambient, 0, "dead replica's lease never expired");
+
+    shutdown_daemon(addr);
+    let _ = handle.join();
+}
+
+#[test]
+fn hyper_changes_write_through_to_every_replica() {
+    let (addr, handle, factor) = serve_factor();
+    let addr_s = addr.to_string();
+    let a = RemoteSurrogate::connect(&addr_s).unwrap();
+    let b = RemoteSurrogate::connect(&addr_s).unwrap();
+
+    let new = GpHyper { lengthscale: 0.5, ..GpHyper::default() };
+    a.set_hyper(new);
+    assert_eq!(a.hyper(), new);
+    assert_eq!(factor.hyper(), new, "set-hyper did not reach the served factor");
+    drop(b.lock()); // sync adopts the authority's hypers
+    assert_eq!(b.hyper(), new, "sibling replica did not adopt the new hypers");
+
+    shutdown_daemon(addr);
+    let _ = handle.join();
+}
+
+#[test]
+fn replica_refuses_a_daemon_without_a_factor() {
+    // A plain measurement daemon answers the handshake but hosts no
+    // factor: the replica must fail loudly at connect, not limp along.
+    let model = ModelId::NcfFp32;
+    let server = TargetServer::bind(
+        "127.0.0.1:0",
+        model.space(),
+        Box::new(tftune::evaluator::SimEvaluator::new(model, 1)),
+    )
+    .unwrap();
+    let (addr, handle) = server.spawn().unwrap();
+    let err = RemoteSurrogate::connect(&addr.to_string()).unwrap_err();
+    assert!(err.to_string().contains("hosts no shared surrogate"), "{err}");
+    shutdown_daemon(addr);
+    let _ = handle.join();
+}
