@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     });
 
     println!("\n== incremental surrogate subsystem, n=64 / 512 candidates ==");
-    let (r_scratch, r_append, r_score, r_fit_only, speedup) = {
+    let (r_scratch, r_append, r_score, r_fit_only, r_score_mo, speedup) = {
         let n = 64;
         let c = 512;
         let (x, y, cand) = gp_problem(&mut rng, n, c);
@@ -88,6 +88,18 @@ fn main() -> anyhow::Result<()> {
             NativeGp::fit(&x, &y, hyper).unwrap().predict(&cand[..1]).mean[0]
         });
 
+        // Multi-objective panel pass: K=2 target columns over the SAME
+        // factor — one panel build + variance solve, two α solves/mean
+        // accumulations. The whole point of the design is that this
+        // costs far less than two single-objective passes.
+        let y2: Vec<f64> = x.iter().map(|p| p[2] - 0.5 * p[3]).collect();
+        let mut ws_mo = ScoreWorkspace::default();
+        let r_score_mo = b.bench("gp/score_multiobj_k2_512 n=64", || {
+            let targets: [&[f64]; 2] = [&y, &y2];
+            inc.score_multi_into(&cand_flat, c, &targets, &mut ws_mo);
+            ws_mo.mean_obj[0]
+        });
+
         let incremental_ns = r_append.mean_ns + r_score.mean_ns;
         let speedup = r_scratch.mean_ns / incremental_ns;
         println!(
@@ -95,7 +107,12 @@ fn main() -> anyhow::Result<()> {
             incremental_ns / 1e3,
             r_scratch.mean_ns / 1e3,
         );
-        (r_scratch, r_append, r_score, r_fit_only, speedup)
+        println!(
+            "  K=2 panel pass {:.1} µs vs 2x single-objective {:.1} µs",
+            r_score_mo.mean_ns / 1e3,
+            2.0 * r_score.mean_ns / 1e3,
+        );
+        (r_scratch, r_append, r_score, r_fit_only, r_score_mo, speedup)
     };
 
     println!("\n== shared surrogate: contended tell/ask ==");
@@ -174,7 +191,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("\n== surrogate service: delta export + remote tell round trip ==");
-    let (r_sync_delta, r_remote_tell) = {
+    let (r_sync_delta, r_remote_tell, r_multiobj_tell) = {
         use tftune::server::proto::{
             encode_surrogate_response, SurrogateResponse,
         };
@@ -209,6 +226,15 @@ fn main() -> anyhow::Result<()> {
             let g = replica.lock(); // sync-factor round trip + import
             g.len()
         });
+
+        // The K=2 variant: a tell carrying a secondary objective column
+        // plus the sync that mirrors it — the full multi-objective
+        // tell→conditioned path over loopback TCP (protocol v3 "ys").
+        let r_tell_mo = b.bench("gp/multiobj_tell_roundtrip", || {
+            replica.tell_multi(row.clone(), vec![1.0, -4.0]);
+            let g = replica.lock();
+            g.len()
+        });
         // shut the service down via the evaluate plane
         {
             use std::io::Write;
@@ -224,7 +250,7 @@ fn main() -> anyhow::Result<()> {
             )?;
         }
         let _ = handle.join();
-        (r_sync, r_tell_rt)
+        (r_sync, r_tell_rt, r_tell_mo)
     };
 
     write_gp_bench_json(
@@ -233,10 +259,12 @@ fn main() -> anyhow::Result<()> {
             &r_append,
             &r_score,
             &r_fit_only,
+            &r_score_mo,
             &r_shared_tell,
             &r_shared_ask,
             &r_sync_delta,
             &r_remote_tell,
+            &r_multiobj_tell,
         ],
         64,
         512,
@@ -315,7 +343,9 @@ fn main() -> anyhow::Result<()> {
 /// incremental append + blocked scoring must beat the scratch refit at
 /// n=64 / 512 candidates; ISSUE 3 adds the contended shared tell/ask
 /// pair; ISSUE 4 adds the surrogate-service pair — `surrogate_sync_delta`
-/// / `remote_tell_roundtrip`). Keys are the bench short names.
+/// / `remote_tell_roundtrip`; ISSUE 5 adds the multi-objective pair —
+/// `score_multiobj_k2_512` / `multiobj_tell_roundtrip`). Keys are the
+/// bench short names.
 fn write_gp_bench_json(
     results: &[&BenchResult],
     n: usize,

@@ -1,0 +1,75 @@
+//! Multi-objective tuning: throughput vs p99 latency on one GP factor.
+//!
+//! The knobs this system tunes (inter/intra-op threads, batch,
+//! `OMP_NUM_THREADS`) trade throughput against tail latency, so instead
+//! of collapsing to a single scalar the run declares an `ObjectiveSet` —
+//! the primary `value` plus the `p99_latency_ms` metadata column every
+//! `SimEvaluator::measure` already attaches — and the BO engine scores
+//! *both* objectives per candidate in one blocked panel pass over one
+//! Cholesky factor (K target columns, not K refits), proposing by
+//! SMSego-style hypervolume gain over the non-dominated front.
+//!
+//!     cargo run --release --example multi_objective [iters]
+//!
+//! The history records each trial's objective vector, so the Pareto
+//! front prints straight off the returned `History`.
+
+use anyhow::Result;
+use tftune::algorithms::BayesOpt;
+use tftune::evaluator::sim_pool;
+use tftune::session::{Budget, TuningSession};
+use tftune::sim::ModelId;
+use tftune::{ObjectiveSet, Scalarization};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let iters: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(40);
+
+    let model = ModelId::BertFp32;
+    let space = model.space();
+    let set = ObjectiveSet::parse("throughput,p99_latency_ms:min")
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "tuning {} over [{}] for {iters} evaluations (SMSego hypervolume gain)",
+        model.name(),
+        set.spec()
+    );
+
+    let tuner = Box::new(
+        BayesOpt::new(space.clone(), 7).with_objectives(set.clone(), Scalarization::Smsego),
+    );
+    let mut session = TuningSession::new(
+        tuner,
+        sim_pool(
+            model,
+            7,
+            tftune::sim::noise::DEFAULT_SIGMA,
+            tftune::evaluator::Objective::Throughput,
+            2,
+        ),
+        Budget::evaluations(iters),
+    )
+    .with_objectives(set.clone());
+
+    let history = session.run()?;
+
+    // The recorded objective vectors are maximisation-oriented (p99 is
+    // negated), so flip the sign back for display.
+    let mut front = history.pareto_front();
+    front.sort_by(|a, b| a.objectives[0].total_cmp(&b.objectives[0]));
+    println!(
+        "\nnon-dominated front: {} of {} trials (throughput up, p99 down):",
+        front.len(),
+        history.len()
+    );
+    println!("{:>12}  {:>10}  config", "examples/s", "p99 (ms)");
+    for e in &front {
+        println!(
+            "{:>12.1}  {:>10.3}  {}",
+            e.objectives[0],
+            -e.objectives[1],
+            space.config_to_json(&e.config)
+        );
+    }
+    Ok(())
+}

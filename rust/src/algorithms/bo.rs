@@ -42,6 +42,19 @@
 //! scratch-refit reference path (`ExactRefitSurrogate`). Python is never
 //! on this path. Both routes consume the same [`GpHyper`] (kernel,
 //! lengthscale, conditioning window), so they stay interchangeable.
+//!
+//! **Multi-objective acquisition** ([`BayesOpt::with_objectives`]): the
+//! settings this system tunes trade throughput against tail latency, so
+//! the engine can optimise a declared
+//! [`ObjectiveSet`](crate::objectives::ObjectiveSet) — primary `value`
+//! plus named `Measurement::metadata` columns. The factor depends only
+//! on X, so K objectives cost **K target columns over one factor**: one
+//! blocked panel pass emits per-objective means and the shared posterior
+//! std (`IncrementalGp::score_multi_into`), and the acquisition is a
+//! weighted scalarisation or an SMSego-style hypervolume gain over the
+//! non-dominated front. Trials missing a declared column degrade to
+//! their measured columns with a warning; the shared factor is never
+//! poisoned.
 
 use super::{Trial, TrialBook, TrialId, Tuner};
 use crate::gp::{
@@ -49,6 +62,7 @@ use crate::gp::{
     Surrogate, SurrogateGuard, SurrogateHandle, UNBOUNDED_HISTORY,
 };
 use crate::history::Measurement;
+use crate::objectives::{self, ObjectiveSet, Scalarization};
 use crate::space::{Config, SearchSpace};
 use crate::util::{stats, Rng};
 
@@ -74,6 +88,29 @@ struct BatchCtx {
     /// Unit-cube coordinates of the best observation (local-perturbation
     /// centre for candidate generation).
     incumbent: Vec<f64>,
+    /// Multi-objective per-batch context (None in single-objective mode).
+    mo: Option<MoBatch>,
+}
+
+/// The declared objectives + acquisition of a multi-objective engine
+/// ([`BayesOpt::with_objectives`]).
+struct MultiObjective {
+    set: ObjectiveSet,
+    scalarize: Scalarization,
+}
+
+/// Per-batch multi-objective state: per-objective acquisition baselines
+/// and the non-dominated front (standardised, maximisation) SMSego
+/// measures hypervolume gain against.
+struct MoBatch {
+    /// Best standardised value per objective over rows that measured it.
+    y_best: Vec<f64>,
+    /// Non-dominated front over fully-measured conditioning rows.
+    front: Vec<Vec<f64>>,
+    /// Hypervolume reference point (below every front point).
+    ref_point: Vec<f64>,
+    /// HV(front): the SMSego gain baseline, computed once per batch.
+    hv_front: f64,
 }
 
 pub struct BayesOpt<S: Surrogate = NativeSurrogate> {
@@ -115,6 +152,18 @@ pub struct BayesOpt<S: Surrogate = NativeSurrogate> {
     /// Reusable raw/standardised conditioning targets.
     y_raw: Vec<f64>,
     y_std: Vec<f64>,
+    /// Multi-objective mode (None = the classic single-objective engine,
+    /// byte-identical behaviour): declared set + scalarisation.
+    multi: Option<MultiObjective>,
+    /// Per-objective standardised targets over the conditioning set
+    /// (multi mode; column 0 mirrors `y_std`).
+    y_std_obj: Vec<Vec<f64>>,
+    /// Scratch: targets padded with per-fantasy lies to the factor's
+    /// current row count, one column per objective.
+    y_pad_obj: Vec<Vec<f64>>,
+    /// Scratch: the K-element optimistic point of the candidate being
+    /// scored (multi mode), reused across proposals.
+    mo_opt: Vec<f64>,
 }
 
 impl BayesOpt<NativeSurrogate> {
@@ -155,6 +204,10 @@ impl<S: Surrogate> BayesOpt<S> {
             cand_flat: Vec::new(),
             y_raw: Vec::new(),
             y_std: Vec::new(),
+            multi: None,
+            y_std_obj: Vec::new(),
+            y_pad_obj: Vec::new(),
+            mo_opt: Vec::new(),
         }
     }
 
@@ -195,6 +248,42 @@ impl<S: Surrogate> BayesOpt<S> {
     /// attach it to further engines via [`BayesOpt::with_shared_surrogate`].
     pub fn surrogate_handle(&self) -> Box<dyn SurrogateHandle> {
         self.shared.clone_handle()
+    }
+
+    /// Switch the engine to **multi-objective acquisition** over the
+    /// declared objective set: tells extract the K objective columns
+    /// from each [`Measurement`] (primary `value` + named metadata
+    /// columns, `:min` columns negated so everything maximises) into the
+    /// shared store, and every ask scores all K objectives in **one
+    /// blocked panel pass over one factor** — K target columns, not K
+    /// refits (`IncrementalGp::score_multi_into`). The acquisition is
+    /// either a fixed weighted scalarisation of the per-objective
+    /// optimistic gains or the SMSego-style hypervolume gain of the
+    /// optimistic candidate point over the non-dominated front.
+    ///
+    /// A trial whose measurement is missing a declared column (or
+    /// carries NaN) degrades to the columns it does measure, with a
+    /// warning — the factor depends only on X and is never poisoned.
+    ///
+    /// Native incremental surrogate only (the AOT HLO artifact's fused
+    /// graph is single-objective); panics on a fused-refit surrogate or
+    /// a weight-count mismatch — `TuneConfig` validates both with
+    /// proper errors first.
+    pub fn with_objectives(mut self, set: ObjectiveSet, scalarize: Scalarization) -> BayesOpt<S> {
+        assert!(
+            self.surrogate.use_engine_incremental(),
+            "multi-objective acquisition requires the native incremental surrogate"
+        );
+        let scalarize = scalarize
+            .resolve(set.k())
+            .unwrap_or_else(|e| panic!("scalarisation/objective mismatch: {e}"));
+        self.multi = Some(MultiObjective { set, scalarize });
+        self
+    }
+
+    /// The declared objective set (None = single-objective engine).
+    pub fn objective_set(&self) -> Option<&ObjectiveSet> {
+        self.multi.as_ref().map(|m| &m.set)
     }
 
     /// Override the acquisition optimism (ablation A2).
@@ -396,7 +485,143 @@ impl<S: Surrogate> BayesOpt<S> {
             }
         }
 
-        BatchCtx { idx, y_best, incumbent }
+        // Multi-objective batch state: standardise every declared column
+        // over the conditioning set (a row that did not measure a column
+        // contributes 0.0 — the standardised mean — to that column and
+        // stays out of the front), and fix the SMSego baseline.
+        let mo = match &self.multi {
+            None => None,
+            Some(moc) => {
+                let k = moc.set.k();
+                // Resize without dropping column capacity (once per run
+                // in practice — K is fixed per engine).
+                self.y_std_obj.resize(k, Vec::new());
+                let mut y_best_obj = vec![0.0; k];
+                {
+                    let col0 = &mut self.y_std_obj[0];
+                    col0.clear();
+                    col0.extend_from_slice(&self.y_std);
+                }
+                y_best_obj[0] = y_best;
+                for kk in 1..k {
+                    let col: Vec<f64> = idx
+                        .iter()
+                        .map(|&i| g.y_extras(i).get(kk - 1).copied().unwrap_or(f64::NAN))
+                        .collect();
+                    let finite: Vec<f64> =
+                        col.iter().copied().filter(|v| v.is_finite()).collect();
+                    let (mean, sd) = if finite.is_empty() {
+                        (0.0, 1.0)
+                    } else {
+                        (stats::mean(&finite), stats::stddev(&finite).max(1e-9))
+                    };
+                    let dst = &mut self.y_std_obj[kk];
+                    dst.clear();
+                    dst.extend(
+                        col.iter()
+                            .map(|&v| if v.is_finite() { (v - mean) / sd } else { 0.0 }),
+                    );
+                    let best = col
+                        .iter()
+                        .zip(dst.iter())
+                        .filter(|(raw, _)| raw.is_finite())
+                        .map(|(_, &s)| s)
+                        .fold(f64::NEG_INFINITY, f64::max);
+                    y_best_obj[kk] = if best.is_finite() { best } else { 0.0 };
+                }
+                // Front over rows with every declared column measured.
+                let mut pts: Vec<Vec<f64>> = Vec::new();
+                for (r, &i) in idx.iter().enumerate() {
+                    let fully = (1..k).all(|kk| {
+                        g.y_extras(i).get(kk - 1).map_or(false, |v| v.is_finite())
+                    });
+                    if fully {
+                        pts.push((0..k).map(|kk| self.y_std_obj[kk][r]).collect());
+                    }
+                }
+                let front: Vec<Vec<f64>> = objectives::pareto_front_indices(&pts)
+                    .into_iter()
+                    .map(|i| pts[i].clone())
+                    .collect();
+                let ref_point = objectives::hv_reference(&front, k, 1.0)
+                    .unwrap_or_else(|| vec![-3.0; k]);
+                let hv_front = objectives::hypervolume(&front, &ref_point);
+                Some(MoBatch { y_best: y_best_obj, front, ref_point, hv_front })
+            }
+        };
+
+        BatchCtx { idx, y_best, incumbent, mo }
+    }
+
+    /// Multi-objective candidate scoring: one panel pass over the shared
+    /// factor with K target columns (conditioning targets padded with
+    /// the per-fantasy lies — standardised 0 in every column), then the
+    /// scalarised or hypervolume acquisition fills `ws.gain`.
+    fn score_multi(&mut self, g: &mut SurrogateGuard<'_>, ctx: &BatchCtx, c: usize) {
+        let mo = ctx.mo.as_ref().expect("score_multi without multi-objective context");
+        let k = self.y_std_obj.len();
+        let total = g.total();
+        // Pad the per-objective targets to the factor's current row
+        // count, reusing column capacity across proposals.
+        self.y_pad_obj.resize(k, Vec::new());
+        for kk in 0..k {
+            let col = &mut self.y_pad_obj[kk];
+            col.clear();
+            col.extend_from_slice(&self.y_std_obj[kk]);
+            // Constant-liar fantasies lie at the standardised mean of
+            // every objective, exactly like the single-objective path.
+            col.resize(total, 0.0);
+        }
+        {
+            let refs: Vec<&[f64]> = self.y_pad_obj.iter().map(|v| v.as_slice()).collect();
+            g.score_multi_into(&self.cand_flat, c, &refs, &mut self.ws);
+        }
+
+        let acq = self.acq_alpha;
+        let moc = self.multi.as_ref().expect("multi context without declared objectives");
+        // K-element optimistic-point scratch, reused across proposals.
+        self.mo_opt.clear();
+        self.mo_opt.resize(k, 0.0);
+        match &moc.scalarize {
+            Scalarization::Weighted(w) => {
+                // With positive weights a candidate whose optimistic
+                // vector is dominated can never argmax (pinned in
+                // rust/tests/multi_objective.rs).
+                for j in 0..c {
+                    for kk in 0..k {
+                        self.mo_opt[kk] = self.ws.mean_obj[kk * c + j] + acq * self.ws.std[j];
+                    }
+                    self.ws.gain[j] = objectives::weighted_gain(w, &self.mo_opt, &mo.y_best);
+                }
+            }
+            Scalarization::Smsego => {
+                // SMSego: hypervolume gain of the optimistic candidate
+                // point over the batch's non-dominated front. The last
+                // slot of `with_u` is rewritten per candidate. Most
+                // optimistic points are dominated (zero gain); a tiny
+                // equal-weight scalarised term keeps the ranking
+                // informative instead of degenerating to index order.
+                // (`with_u` is rebuilt per proposal, not per candidate;
+                // the c hypervolume sweeps below dominate its cost.)
+                let mut with_u: Vec<Vec<f64>> = mo.front.clone();
+                with_u.push(vec![0.0; k]);
+                for j in 0..c {
+                    for kk in 0..k {
+                        self.mo_opt[kk] = self.ws.mean_obj[kk * c + j] + acq * self.ws.std[j];
+                    }
+                    with_u.last_mut().expect("candidate slot").copy_from_slice(&self.mo_opt);
+                    let hv_gain =
+                        objectives::hypervolume(&with_u, &mo.ref_point) - mo.hv_front;
+                    let tie: f64 = self
+                        .mo_opt
+                        .iter()
+                        .zip(&mo.y_best)
+                        .map(|(o, b)| o - b)
+                        .sum();
+                    self.ws.gain[j] = hv_gain.max(0.0) + 1e-9 * tie;
+                }
+            }
+        }
     }
 
     /// One BO proposal against the guarded shared model. `inc_ready`
@@ -419,7 +644,11 @@ impl<S: Surrogate> BayesOpt<S> {
             }
             if *inc_ready {
                 let c = self.cand_flat.len() / dim;
-                g.score_into(&self.cand_flat, c, self.acq_alpha, ctx.y_best, &mut self.ws);
+                if ctx.mo.is_some() {
+                    self.score_multi(g, ctx, c);
+                } else {
+                    g.score_into(&self.cand_flat, c, self.acq_alpha, ctx.y_best, &mut self.ws);
+                }
                 scored = true;
             }
         }
@@ -508,7 +737,24 @@ impl<S: Surrogate> Tuner for BayesOpt<S> {
             let u = self.space.to_unit(&cfg);
             // Enqueue only — never blocks on a concurrent scoring pass;
             // the next ask folds it into the factor in observation order.
-            self.shared.tell(u, m.value);
+            match &self.multi {
+                Some(mo) => {
+                    let (ys, missing) = mo.set.extract(m);
+                    if !missing.is_empty() {
+                        let names: Vec<&str> = missing
+                            .iter()
+                            .map(|&k| mo.set.defs()[k].name.as_str())
+                            .collect();
+                        eprintln!(
+                            "tftune: trial {id} did not measure declared objective \
+                             column(s) {names:?}; conditioning it on its measured \
+                             columns only"
+                        );
+                    }
+                    self.shared.tell_multi(u, ys);
+                }
+                None => self.shared.tell(u, m.value),
+            }
             self.observed.push(cfg);
         }
     }
@@ -808,6 +1054,73 @@ mod tests {
             crate::gp::LENGTHSCALE_GRID.contains(&ls),
             "selected lengthscale {ls} not on grid"
         );
+    }
+
+    #[test]
+    fn multi_objective_engine_degrades_missing_columns() {
+        // Trials missing the declared p99 column (or carrying NaN) must
+        // degrade to primary-only conditioning, never crash the ask.
+        let s = space();
+        let set = ObjectiveSet::parse("throughput,p99:min").unwrap();
+        let mut bo = BayesOpt::new(s.clone(), 31)
+            .with_objectives(set, Scalarization::Weighted(vec![0.7, 0.3]));
+        assert!(bo.objective_set().is_some());
+        let obj = quadratic(&s, &vec![2, 28, 512, 100, 28]);
+        for i in 0..INIT_DESIGN + 8 {
+            let t = bo.ask(1).pop().unwrap();
+            assert!(s.contains(&t.config));
+            let v = obj(&t.config);
+            let m = match i % 4 {
+                0 => Measurement::new(v), // column absent entirely
+                1 => Measurement::new(v).with_metadata("p99", f64::NAN),
+                _ => Measurement::new(v).with_metadata("p99", 12.0 - v),
+            };
+            bo.tell(t.id, &m);
+        }
+        let batch = bo.ask(3);
+        assert_eq!(batch.len(), 3);
+        for t in &batch {
+            assert!(s.contains(&t.config));
+        }
+        // fantasies retracted after the multi-objective batch too
+        assert_eq!(bo.surrogate_handle().lock().total(), INIT_DESIGN + 8);
+    }
+
+    #[test]
+    fn multi_objective_smsego_finds_a_trade_off_front() {
+        // Bi-objective with an analytic trade-off along inter_op: the
+        // SMSego engine must populate more than one point of the front
+        // (a single-objective engine would collapse onto one end).
+        let s = space();
+        let set = ObjectiveSet::parse("throughput,p99:min").unwrap();
+        let mut bo = BayesOpt::new(s.clone(), 32).with_objectives(set.clone(), Scalarization::Smsego);
+        let mut h = crate::history::History::new();
+        for _ in 0..30 {
+            let t = bo.ask(1).pop().unwrap();
+            let u = s.to_unit(&t.config);
+            let tp = 10.0 * u[0] - 2.0 * u[1] * u[1];
+            let p99 = 2.0 + 8.0 * u[0] * u[0] + 2.0 * u[1] * u[1];
+            let m = Measurement::new(tp).with_metadata("p99", p99);
+            let (ys, missing) = set.extract(&m);
+            assert!(missing.is_empty());
+            h.push_trial_multi(t.id, t.config.clone(), &m, ys);
+            bo.tell(t.id, &m);
+        }
+        let front = h.pareto_front();
+        assert!(
+            front.len() >= 2,
+            "SMSego engine collapsed onto one point: front {}",
+            front.len()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "native incremental surrogate")]
+    fn multi_objective_rejects_fused_surrogates() {
+        let s = space();
+        let set = ObjectiveSet::parse("a,b:min").unwrap();
+        let _ = BayesOpt::with_surrogate(s, 1, ExactRefitSurrogate)
+            .with_objectives(set, Scalarization::Smsego);
     }
 
     #[test]

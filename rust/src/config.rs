@@ -66,6 +66,15 @@ pub struct TuneConfig {
     /// stack *and* the AOT HLO artifact — the artifact takes lengthscale
     /// as a runtime input, so no recompilation is involved. BO only.
     pub tune_lengthscale: bool,
+    /// Declared multi-objective set (`--objectives throughput,p99:min`):
+    /// primary `value` plus named `Measurement::metadata` columns. BO +
+    /// native surrogate only; drives both the engine's acquisition and
+    /// the history's recorded objective vectors.
+    pub objectives: Option<crate::objectives::ObjectiveSet>,
+    /// Acquisition scalarisation for a multi-objective run
+    /// (`--scalarize weighted:0.7,0.3` or `smsego`). Defaults to equal
+    /// weights over the declared objectives.
+    pub scalarize: Option<crate::objectives::Scalarization>,
 }
 
 impl Default for TuneConfig {
@@ -83,6 +92,8 @@ impl Default for TuneConfig {
             history_out: None,
             surrogate_addr: None,
             tune_lengthscale: false,
+            objectives: None,
+            scalarize: None,
         }
     }
 }
@@ -120,6 +131,20 @@ impl TuneConfig {
                 },
             ),
             ("tune_lengthscale", self.tune_lengthscale.into()),
+            (
+                "objectives",
+                match &self.objectives {
+                    Some(set) => set.spec().into(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "scalarize",
+                match &self.scalarize {
+                    Some(s) => s.spec().into(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -168,6 +193,18 @@ impl TuneConfig {
         if let Some(t) = j.get("tune_lengthscale").and_then(Json::as_bool) {
             cfg.tune_lengthscale = t;
         }
+        if let Some(o) = j.get("objectives").and_then(Json::as_str) {
+            cfg.objectives = Some(
+                crate::objectives::ObjectiveSet::parse(o)
+                    .map_err(|e| anyhow::anyhow!("bad objectives '{o}': {e}"))?,
+            );
+        }
+        if let Some(s) = j.get("scalarize").and_then(Json::as_str) {
+            cfg.scalarize = Some(
+                crate::objectives::Scalarization::parse(s)
+                    .map_err(|e| anyhow::anyhow!("bad scalarize '{s}': {e}"))?,
+            );
+        }
         Ok(cfg)
     }
 
@@ -195,23 +232,14 @@ impl TuneConfig {
     pub fn build_tuner(&self) -> Result<Box<dyn crate::algorithms::Tuner + Send>> {
         /// Attach the BO-only run-spec options in the required order:
         /// remote factor replica first (the engine adopts the service's
-        /// hypers), then lengthscale selection.
+        /// hypers), then lengthscale selection (in-guard changes write
+        /// back through the replica's `set-hyper` hook, so siblings
+        /// converge on one hyper), then the declared objective set.
         fn finish<S: crate::gp::Surrogate + Send + 'static>(
             mut bo: crate::algorithms::BayesOpt<S>,
             cfg: &TuneConfig,
         ) -> Result<Box<dyn crate::algorithms::Tuner + Send>> {
             if let Some(addr) = &cfg.surrogate_addr {
-                // Per-ask lengthscale selection acts on the local mirror
-                // only and the next sync re-adopts the service's hypers —
-                // the selection would silently never stick while forcing a
-                // factor rebuild per ask. Refuse the combination; set
-                // hypers on the service instead (SurrogateHandle::set_hyper
-                // writes through).
-                anyhow::ensure!(
-                    !cfg.tune_lengthscale,
-                    "tune_lengthscale cannot be combined with surrogate_addr: selection is \
-                     per-ask and would fight the served factor's hypers"
-                );
                 let replica = crate::gp::RemoteSurrogate::connect(addr)
                     .with_context(|| format!("attaching surrogate service {addr}"))?;
                 bo = bo.with_shared_surrogate(replica);
@@ -219,13 +247,25 @@ impl TuneConfig {
             if cfg.tune_lengthscale {
                 bo = bo.with_lengthscale_selection();
             }
+            if let Some(set) = &cfg.objectives {
+                bo = bo.with_objectives(set.clone(), cfg.resolved_scalarize()?);
+            }
             Ok(Box::new(bo))
         }
 
         let space = self.model.space();
+        anyhow::ensure!(
+            self.objectives.is_some() || self.scalarize.is_none(),
+            "scalarize requires a declared objective set (--objectives)"
+        );
         if self.algorithm == Algorithm::Bo {
             return match self.surrogate {
                 SurrogateKind::Hlo => {
+                    anyhow::ensure!(
+                        self.objectives.is_none(),
+                        "multi-objective tuning requires the native surrogate \
+                         (the AOT HLO artifact's fused graph is single-objective)"
+                    );
                     let surrogate = crate::runtime::GpSurrogate::open_default()
                         .context("loading the GP HLO artifact (run `make artifacts`)")?;
                     finish(
@@ -248,12 +288,33 @@ impl TuneConfig {
             "tune_lengthscale applies to the BO engine only (got {})",
             self.algorithm.name()
         );
+        anyhow::ensure!(
+            self.objectives.is_none(),
+            "objectives applies to the BO engine only (got {})",
+            self.algorithm.name()
+        );
         Ok(self.algorithm.build(&space, self.seed))
+    }
+
+    /// The scalarisation a multi-objective run will use: the declared one
+    /// (weights validated against the objective count) or equal weights.
+    pub fn resolved_scalarize(&self) -> Result<crate::objectives::Scalarization> {
+        let set = self
+            .objectives
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no objective set declared"))?;
+        self.scalarize
+            .clone()
+            .unwrap_or(crate::objectives::Scalarization::Weighted(Vec::new()))
+            .resolve(set.k())
+            .map_err(|e| anyhow::anyhow!("bad scalarisation: {e}"))
     }
 
     /// Build the `TuningSession` this spec describes: the engine, a pool
     /// of `parallel` simulator evaluators, and the budget (iterations plus
-    /// the optional wall-clock cap).
+    /// the optional wall-clock cap). A declared objective set is wired
+    /// into both the engine (acquisition) and the session (history
+    /// recording).
     pub fn build_session(&self) -> Result<crate::session::TuningSession> {
         let tuner = self.build_tuner()?;
         let pool = crate::evaluator::sim_pool(
@@ -267,7 +328,11 @@ impl TuneConfig {
         if let Some(s) = self.max_seconds {
             budget = budget.with_max_seconds(s);
         }
-        Ok(crate::session::TuningSession::new(tuner, pool, budget))
+        let mut session = crate::session::TuningSession::new(tuner, pool, budget);
+        if let Some(set) = &self.objectives {
+            session = session.with_objectives(set.clone());
+        }
+        Ok(session)
     }
 
     /// Execute the run against the simulated target and return the history
@@ -307,6 +372,10 @@ mod tests {
         c.history_out = Some(PathBuf::from("/tmp/h.jsonl"));
         c.surrogate_addr = Some("127.0.0.1:7071".to_string());
         c.tune_lengthscale = true;
+        c.objectives =
+            Some(crate::objectives::ObjectiveSet::parse("throughput,p99:min").unwrap());
+        c.scalarize =
+            Some(crate::objectives::Scalarization::parse("weighted:0.7,0.3").unwrap());
         let j = c.to_json();
         let c2 = TuneConfig::from_json(&j).unwrap();
         assert_eq!(c2.model, ModelId::BertFp32);
@@ -319,6 +388,8 @@ mod tests {
         assert_eq!(c2.history_out, Some(PathBuf::from("/tmp/h.jsonl")));
         assert_eq!(c2.surrogate_addr, Some("127.0.0.1:7071".to_string()));
         assert!(c2.tune_lengthscale);
+        assert_eq!(c2.objectives, c.objectives);
+        assert_eq!(c2.scalarize, c.scalarize);
     }
 
     #[test]
@@ -331,15 +402,81 @@ mod tests {
         c.tune_lengthscale = true;
         let err = c.build_tuner().unwrap_err();
         assert!(err.to_string().contains("BO engine only"), "{err}");
+        c.tune_lengthscale = false;
+        c.objectives =
+            Some(crate::objectives::ObjectiveSet::parse("throughput,p99:min").unwrap());
+        let err = c.build_tuner().unwrap_err();
+        assert!(err.to_string().contains("BO engine only"), "{err}");
     }
 
     #[test]
-    fn lengthscale_selection_with_remote_factor_is_rejected() {
+    fn lengthscale_selection_with_remote_factor_builds() {
+        // Since the replica's set-hyper write-through landed, in-guard
+        // lengthscale selection publishes to the service instead of
+        // fighting it — the combination is legal now.
+        let (server, _factor) = crate::server::TargetServer::bind_surrogate_only(
+            "127.0.0.1:0",
+            crate::gp::GpHyper::default(),
+        )
+        .unwrap();
+        let (addr, handle) = server.spawn().unwrap();
         let mut c = TuneConfig::default();
-        c.surrogate_addr = Some("127.0.0.1:7071".to_string());
+        c.surrogate_addr = Some(addr.to_string());
         c.tune_lengthscale = true;
-        let err = c.build_tuner().unwrap_err();
-        assert!(err.to_string().contains("cannot be combined"), "{err}");
+        let mut tuner = c.build_tuner().unwrap();
+        use crate::algorithms::Tuner as _;
+        assert_eq!(tuner.ask(1).len(), 1);
+        drop(tuner);
+        // shut the daemon down via the evaluate plane
+        {
+            use std::io::Write;
+            let space = crate::space::threading_space(64, 1024, 64);
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            let _ = writeln!(
+                s,
+                "{}",
+                crate::server::proto::encode_request(
+                    &crate::server::proto::Request::Shutdown,
+                    &space
+                )
+            );
+        }
+        let _ = handle.join();
+    }
+
+    #[test]
+    fn multi_objective_spec_builds_and_rejects_misuse() {
+        use crate::algorithms::Tuner as _;
+        let mut c = TuneConfig::default();
+        c.objectives =
+            Some(crate::objectives::ObjectiveSet::parse("throughput,p99_latency_ms:min").unwrap());
+        c.scalarize = Some(crate::objectives::Scalarization::Smsego);
+        let mut tuner = c.build_tuner().unwrap();
+        assert_eq!(tuner.name(), "bayesian-optimization");
+        assert_eq!(tuner.ask(1).len(), 1);
+
+        // scalarize without objectives is meaningless
+        let mut bad = TuneConfig::default();
+        bad.scalarize = Some(crate::objectives::Scalarization::Smsego);
+        let err = bad.build_tuner().unwrap_err();
+        assert!(err.to_string().contains("requires a declared objective set"), "{err}");
+
+        // weight-count mismatch is a config error, not a panic
+        let mut mismatch = TuneConfig::default();
+        mismatch.objectives =
+            Some(crate::objectives::ObjectiveSet::parse("throughput,p99:min").unwrap());
+        mismatch.scalarize =
+            Some(crate::objectives::Scalarization::parse("weighted:1,2,3").unwrap());
+        let err = mismatch.build_tuner().unwrap_err();
+        assert!(err.to_string().contains("bad scalarisation"), "{err}");
+
+        // the HLO artifact path is single-objective
+        let mut hlo = TuneConfig::default();
+        hlo.objectives =
+            Some(crate::objectives::ObjectiveSet::parse("throughput,p99:min").unwrap());
+        hlo.surrogate = SurrogateKind::Hlo;
+        let err = hlo.build_tuner().unwrap_err();
+        assert!(err.to_string().contains("native surrogate"), "{err}");
     }
 
     #[test]

@@ -87,15 +87,14 @@ pub struct SimEvaluator {
     pub objective: Objective,
     /// Count of evaluations served (the paper caps runs at 50).
     pub evaluations: usize,
+    /// Relative measurement-noise sigma (kept for the tail-latency model
+    /// in [`SimEvaluator::measure`]'s metadata).
+    sigma: f64,
 }
 
 impl SimEvaluator {
     pub fn new(model: ModelId, seed: u64) -> SimEvaluator {
-        SimEvaluator {
-            workload: SimWorkload::with_default_noise(model, seed),
-            objective: Objective::Throughput,
-            evaluations: 0,
-        }
+        SimEvaluator::with_sigma(model, seed, crate::sim::noise::DEFAULT_SIGMA)
     }
 
     pub fn noiseless(model: ModelId) -> SimEvaluator {
@@ -103,6 +102,7 @@ impl SimEvaluator {
             workload: SimWorkload::noiseless(model),
             objective: Objective::Throughput,
             evaluations: 0,
+            sigma: 0.0,
         }
     }
 
@@ -111,6 +111,7 @@ impl SimEvaluator {
             workload: SimWorkload::new(model, seed, sigma),
             objective: Objective::Throughput,
             evaluations: 0,
+            sigma,
         }
     }
 
@@ -141,9 +142,28 @@ impl Evaluator for SimEvaluator {
     fn measure(&mut self, config: &Config) -> anyhow::Result<Measurement> {
         let t0 = std::time::Instant::now();
         let value = self.evaluate(config)?;
-        Ok(Measurement::new(value)
+        let mut m = Measurement::new(value)
             .with_objective(self.objective)
-            .with_cost_s(t0.elapsed().as_secs_f64()))
+            .with_cost_s(t0.elapsed().as_secs_f64());
+        // Latency telemetry for multi-objective runs (`--objectives
+        // throughput,p99_latency_ms:min`): batch latency derived from
+        // the same measured value, with a noise-proportional tail model
+        // (a noisier target has a fatter p99). Values stay finite for
+        // every positive measurement; a declared-but-absent column is
+        // the engine's degradation path, not ours.
+        if value > 0.0 {
+            let latency_s = match self.objective {
+                Objective::Throughput => config[crate::space::BATCH] as f64 / value,
+                Objective::InverseLatency => 1.0 / value,
+            };
+            let latency_ms = latency_s * 1e3;
+            // 2.326 = z(0.99): one-sided normal tail at the 99th pct.
+            let p99_ms = latency_ms * (1.0 + 2.326 * self.sigma);
+            m = m
+                .with_metadata("latency_ms", latency_ms)
+                .with_metadata("p99_latency_ms", p99_ms);
+        }
+        Ok(m)
     }
 
     fn describe(&self) -> String {
@@ -307,6 +327,24 @@ mod tests {
             disp["nelder-mead"],
             disp["genetic-algorithm"]
         );
+    }
+
+    #[test]
+    fn sim_measure_attaches_latency_metadata() {
+        let mut eval = SimEvaluator::new(ModelId::NcfFp32, 1);
+        let m = eval.measure(&vec![1, 8, 128, 0, 8]).unwrap();
+        let get = |k: &str| m.metadata.iter().find(|(n, _)| n == k).map(|&(_, v)| v);
+        let lat = get("latency_ms").expect("latency_ms metadata");
+        let p99 = get("p99_latency_ms").expect("p99_latency_ms metadata");
+        assert!(lat > 0.0 && lat.is_finite());
+        assert!(p99 >= lat, "tail latency below the mean: {p99} < {lat}");
+        // consistency with the measured value: latency = batch / throughput
+        assert!((lat - 128.0 / m.value * 1e3).abs() < 1e-9);
+        // noiseless target: p99 equals the mean latency exactly
+        let mut quiet = SimEvaluator::noiseless(ModelId::NcfFp32);
+        let mq = quiet.measure(&vec![1, 8, 128, 0, 8]).unwrap();
+        let get_q = |k: &str| mq.metadata.iter().find(|(n, _)| n == k).map(|&(_, v)| v);
+        assert_eq!(get_q("latency_ms"), get_q("p99_latency_ms"));
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::util::linalg::{
 pub struct ScoreWorkspace {
     /// n×c cross-kernel panel; overwritten by L⁻¹Kc during scoring.
     panel: Vec<f64>,
-    /// Posterior mean per candidate.
+    /// Posterior mean per candidate (primary objective).
     pub mean: Vec<f64>,
     /// Posterior stddev per candidate.
     pub std: Vec<f64>,
@@ -46,6 +46,16 @@ pub struct ScoreWorkspace {
     pub gain: Vec<f64>,
     /// Scratch index order (filled by [`ScoreWorkspace::argsort_gain_desc`]).
     pub order: Vec<usize>,
+    /// K×c posterior means of a multi-objective panel pass
+    /// ([`IncrementalGp::score_multi_into`]): objective `k`'s mean at
+    /// candidate `j` lives at `k * c + j`. The posterior *std* is shared
+    /// across objectives (it depends only on X and the kernel) and stays
+    /// in [`ScoreWorkspace::std`].
+    pub mean_obj: Vec<f64>,
+    /// Objective count of the last multi-objective pass (0 = none).
+    pub n_obj: usize,
+    /// K×n per-objective α = K⁻¹y scratch for the multi pass.
+    alpha_obj: Vec<f64>,
 }
 
 impl ScoreWorkspace {
@@ -325,6 +335,117 @@ impl IncrementalGp {
         }
     }
 
+    /// Solve `out = (K + σₙ²I)⁻¹ y` against the current factor without
+    /// touching model state — the per-objective α of a multi-objective
+    /// panel pass. Performs exactly the two triangular solves
+    /// [`IncrementalGp::set_targets`] + scoring would perform for the
+    /// same targets, in the same order, so a K-objective pass is
+    /// bit-equal to K independent single-objective models sharing this
+    /// factor.
+    pub fn solve_alpha(&self, y: &[f64], out: &mut Vec<f64>) {
+        let m = self.total();
+        assert_eq!(y.len(), m, "target length mismatch");
+        out.clear();
+        out.extend_from_slice(y);
+        solve_lower_packed_inplace(&self.l, m, out);
+        solve_lower_t_packed_inplace(&self.l, m, out);
+    }
+
+    /// Score `c` candidates against **K objectives in one blocked panel
+    /// pass**: the cross-kernel panel and the variance triangular solve
+    /// are computed once (they depend only on X), and each objective
+    /// contributes one α solve plus one panel·α accumulation. Mean of
+    /// objective `k` lands in `ws.mean_obj[k*c..(k+1)*c]`; the shared
+    /// posterior std in `ws.std`; `ws.mean` mirrors the primary
+    /// objective (`targets[0]`). `ws.gain` is resized and zeroed — the
+    /// caller's acquisition (scalarised or hypervolume gain) fills it.
+    ///
+    /// `targets` are per-objective target vectors over every current row
+    /// (committed + fantasies, standardised by the caller; fantasy rows
+    /// carry their per-objective lies). The factor is read, never
+    /// modified: K objectives cost K panel accumulations over one
+    /// factor, not K refits.
+    pub fn score_multi_into(
+        &mut self,
+        cand: &[f64],
+        c: usize,
+        targets: &[&[f64]],
+        ws: &mut ScoreWorkspace,
+    ) {
+        let m = self.total();
+        assert!(m > 0, "cannot score on an empty model");
+        assert_eq!(cand.len(), c * self.d, "candidate shape mismatch");
+        let k_obj = targets.len();
+        assert!(k_obj > 0, "need at least one objective");
+        for t in targets {
+            assert_eq!(t.len(), m, "target length mismatch");
+        }
+
+        // Per-objective α against the shared factor (no state touched;
+        // the same two solves `solve_alpha` performs, into ws scratch so
+        // a warmed-up pass allocates nothing).
+        ws.alpha_obj.clear();
+        ws.alpha_obj.reserve(k_obj * m);
+        for t in targets {
+            let start = ws.alpha_obj.len();
+            ws.alpha_obj.extend_from_slice(t);
+            let col = &mut ws.alpha_obj[start..];
+            solve_lower_packed_inplace(&self.l, m, col);
+            solve_lower_t_packed_inplace(&self.l, m, col);
+        }
+
+        ws.n_obj = k_obj;
+        ws.panel.clear();
+        ws.panel.resize(m * c, 0.0);
+        ws.mean_obj.clear();
+        ws.mean_obj.resize(k_obj * c, 0.0);
+        ws.std.clear();
+        ws.std.resize(c, 0.0);
+        ws.gain.clear();
+        ws.gain.resize(c, 0.0);
+
+        // Cross-kernel panel, built once (identical loop to score_into).
+        for i in 0..m {
+            let xi = &self.x[i * self.d..(i + 1) * self.d];
+            let row = &mut ws.panel[i * c..(i + 1) * c];
+            for (j, kij) in row.iter_mut().enumerate() {
+                let cj = &cand[j * self.d..(j + 1) * self.d];
+                *kij = eval_sqdist(self.hyper.kernel, sqdist(xi, cj), &self.hyper);
+            }
+        }
+
+        // μ_k = Kcᵀα_k, panel-row-wise per objective (ascending i — the
+        // same accumulation order a single-objective pass performs).
+        for k in 0..k_obj {
+            let alpha = &ws.alpha_obj[k * m..(k + 1) * m];
+            let mean = &mut ws.mean_obj[k * c..(k + 1) * c];
+            for i in 0..m {
+                let a = alpha[i];
+                let row = &ws.panel[i * c..(i + 1) * c];
+                for (mu, kij) in mean.iter_mut().zip(row) {
+                    *mu += kij * a;
+                }
+            }
+        }
+
+        // V = L⁻¹Kc once; σ is objective-independent.
+        trsm_lower_packed(&self.l, m, &mut ws.panel, c);
+        for i in 0..m {
+            let row = &ws.panel[i * c..(i + 1) * c];
+            for (acc, v) in ws.std.iter_mut().zip(row) {
+                *acc += v * v;
+            }
+        }
+        for j in 0..c {
+            let var = self.hyper.signal_var - ws.std[j];
+            ws.std[j] = var.max(1e-12).sqrt();
+        }
+
+        // Mirror the primary objective into the single-objective slot.
+        ws.mean.clear();
+        ws.mean.extend_from_slice(&ws.mean_obj[..c]);
+    }
+
     /// Allocating convenience wrapper over [`IncrementalGp::score_into`]
     /// for tests and oracle comparisons.
     pub fn predict(&mut self, cand: &[Vec<f64>]) -> Posterior {
@@ -451,6 +572,62 @@ mod tests {
         for j in 0..2 {
             let want = (ws.mean[j] + 1.5 * ws.std[j]) - 0.7;
             assert_eq!(ws.gain[j].to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn multi_pass_matches_independent_models_bitwise() {
+        // One factor, two target columns: the panel pass must reproduce
+        // two independent single-objective models (same X, same hypers)
+        // bit for bit — mean per objective, shared std.
+        let mut rng = Rng::new(21);
+        let (x, y0) = toy(&mut rng, 18, 4);
+        let y1: Vec<f64> = x.iter().map(|p| p[1] - 0.4 * p[2]).collect();
+        let hyper = GpHyper::default();
+        let mut joint = build(&x, &y0, hyper);
+        let l_before = joint.l.clone();
+
+        let cand: Vec<f64> = (0..12 * 4).map(|_| rng.f64()).collect();
+        let mut ws = ScoreWorkspace::default();
+        joint.score_multi_into(&cand, 12, &[&y0, &y1], &mut ws);
+        assert_eq!(ws.n_obj, 2);
+
+        for (k, yk) in [&y0, &y1].into_iter().enumerate() {
+            let mut solo = build(&x, yk, hyper);
+            let mut ws_solo = ScoreWorkspace::default();
+            solo.score_into(&cand, 12, 1.5, 0.0, &mut ws_solo);
+            for j in 0..12 {
+                assert_eq!(
+                    ws.mean_obj[k * 12 + j].to_bits(),
+                    ws_solo.mean[j].to_bits(),
+                    "objective {k} mean diverged at candidate {j}"
+                );
+                assert_eq!(ws.std[j].to_bits(), ws_solo.std[j].to_bits());
+            }
+        }
+        // Primary mirror and an untouched factor (no refit happened).
+        for j in 0..12 {
+            assert_eq!(ws.mean[j].to_bits(), ws.mean_obj[j].to_bits());
+        }
+        assert_eq!(joint.l.len(), l_before.len());
+        for (a, b) in joint.l.iter().zip(&l_before) {
+            assert_eq!(a.to_bits(), b.to_bits(), "multi pass must not touch the factor");
+        }
+    }
+
+    #[test]
+    fn solve_alpha_matches_installed_targets() {
+        let mut rng = Rng::new(22);
+        let (x, y) = toy(&mut rng, 9, 3);
+        let mut gp = build(&x, &y, GpHyper::default());
+        let y2: Vec<f64> = y.iter().map(|v| 1.0 - v).collect();
+        let mut out = Vec::new();
+        gp.solve_alpha(&y2, &mut out);
+        gp.set_targets(&y2);
+        gp.refresh_alpha();
+        assert_eq!(out.len(), gp.alpha.len());
+        for (a, b) in out.iter().zip(&gp.alpha) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

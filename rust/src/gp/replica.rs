@@ -39,7 +39,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
@@ -84,6 +84,15 @@ struct Remote {
     /// Tells sent since the last successful sync. TCP ordering makes the
     /// next sync observe all of them, so this resets to zero per sync.
     pending_tells: AtomicUsize,
+    /// Protocol version negotiated at connect (min of ours and the
+    /// service's). Against a v2 service the replica degrades to
+    /// single-objective tells: secondary columns are **dropped at the
+    /// wire** (the authoritative store never sees them, so neither does
+    /// any mirror) — announced by a one-time warning on the first
+    /// multi-column tell.
+    version: u32,
+    /// Whether the v2-degradation warning has fired (once per replica).
+    warned_v2_extras: AtomicBool,
 }
 
 /// Handle to a GP factor served by a surrogate service (module docs).
@@ -118,14 +127,23 @@ impl RemoteSurrogate {
         let writer = stream.try_clone()?;
         let mut conn = Conn { writer, reader: BufReader::new(stream) };
 
-        match conn.request(&SurrogateRequest::Hello { version: PROTOCOL_VERSION })? {
-            SurrogateResponse::HelloOk { version } => anyhow::ensure!(
-                version == PROTOCOL_VERSION,
-                "surrogate service speaks protocol v{version}, this replica v{PROTOCOL_VERSION}"
-            ),
+        // Version negotiation: the service answers with min(its version,
+        // ours). Anything from v2 up is workable — against a v2 service
+        // this replica simply degrades to single-objective tells (the
+        // surrogate plane itself predates v2, so below that we refuse).
+        let version = match conn.request(&SurrogateRequest::Hello { version: PROTOCOL_VERSION })?
+        {
+            SurrogateResponse::HelloOk { version } => {
+                anyhow::ensure!(
+                    (2..=PROTOCOL_VERSION).contains(&version),
+                    "surrogate service speaks protocol v{version}, this replica \
+                     v{PROTOCOL_VERSION} (v2 is the oldest surrogate plane)"
+                );
+                version
+            }
             SurrogateResponse::Error { message } => bail!("handshake refused: {message}"),
             other => bail!("unexpected handshake response: {other:?}"),
-        }
+        };
         let delta = match conn.request(&SurrogateRequest::SyncFactor { from_n: 0 })? {
             SurrogateResponse::FactorDelta(d) => d,
             SurrogateResponse::Error { message } => bail!("initial sync refused: {message}"),
@@ -175,8 +193,32 @@ impl RemoteSurrogate {
             }
         });
 
+        // Hyper write-through: an in-guard hyper change (e.g. lengthscale
+        // selection inside the engine's batch) publishes `set-hyper` to
+        // the service when the guard drops, so sibling replicas adopt the
+        // same hypers on their next sync instead of fighting the served
+        // factor. Runs with the model lock already released.
+        let hyper_conn = Arc::clone(&conn);
+        mirror.set_hyper_hook(move |hyper| {
+            let mut c = hyper_conn.lock().unwrap();
+            match c.request(&SurrogateRequest::SetHyper { hyper }) {
+                Ok(SurrogateResponse::HyperOk) => {}
+                Ok(other) => eprintln!("tftune: unexpected set-hyper response: {other:?}"),
+                Err(e) => eprintln!(
+                    "tftune: surrogate set-hyper write-through failed ({e}); the service \
+                     re-adopts on the next explicit set_hyper"
+                ),
+            }
+        });
+
         Ok(RemoteSurrogate {
-            inner: Arc::new(Remote { conn, mirror, pending_tells: AtomicUsize::new(0) }),
+            inner: Arc::new(Remote {
+                conn,
+                mirror,
+                pending_tells: AtomicUsize::new(0),
+                version,
+                warned_v2_extras: AtomicBool::new(false),
+            }),
         })
     }
 
@@ -208,8 +250,35 @@ impl SurrogateHandle for RemoteSurrogate {
     /// the connection released); a transport failure drops the
     /// observation with a warning rather than poisoning the session.
     fn tell(&self, x: Vec<f64>, y: f64) {
+        self.tell_multi(x, vec![y]);
+    }
+
+    /// K-column tell: the secondary objective columns ride the same
+    /// `tell-obs` line (`ys`). Against a v2 service the extras are
+    /// dropped at the wire — the served factor (and therefore every
+    /// mirror) degrades to single-objective rather than confusing an
+    /// old daemon; a one-time warning makes the degradation visible.
+    fn tell_multi(&self, x: Vec<f64>, ys: Vec<f64>) {
+        let Some((&y, extra)) = ys.split_first() else {
+            eprintln!("tftune: dropping observation with no objective columns");
+            return;
+        };
+        let ys = if self.inner.version >= 3 {
+            extra.to_vec()
+        } else {
+            if !extra.is_empty() && !self.inner.warned_v2_extras.swap(true, Ordering::SeqCst) {
+                eprintln!(
+                    "tftune: the surrogate service speaks protocol v{} — secondary \
+                     objective columns cannot cross the wire, so the shared factor \
+                     degrades to the primary objective (upgrade the daemon for \
+                     fleet-wide multi-objective tuning)",
+                    self.inner.version
+                );
+            }
+            Vec::new()
+        };
         let mut conn = self.inner.conn.lock().unwrap();
-        match conn.send(&SurrogateRequest::TellObs { x, y }) {
+        match conn.send(&SurrogateRequest::TellObs { x, y, ys }) {
             Ok(()) => {
                 self.inner.pending_tells.fetch_add(1, Ordering::SeqCst);
             }
@@ -233,17 +302,12 @@ impl SurrogateHandle for RemoteSurrogate {
         self.inner.mirror.hyper()
     }
 
-    /// Write-through: the service's factor switches hypers (every sibling
-    /// adopts them on its next sync), then the mirror follows.
+    /// Write-through: the mirror switches hypers through a guard, whose
+    /// drop publishes `set-hyper` to the service (the hyper hook
+    /// installed at connect) — the same path in-guard `ensure_hyper`
+    /// changes take, so explicit and in-guard switches cannot diverge.
+    /// Every sibling replica adopts the new hypers on its next sync.
     fn set_hyper(&self, hyper: GpHyper) {
-        {
-            let mut conn = self.inner.conn.lock().unwrap();
-            match conn.request(&SurrogateRequest::SetHyper { hyper }) {
-                Ok(SurrogateResponse::HyperOk) => {}
-                Ok(other) => eprintln!("tftune: unexpected set-hyper response: {other:?}"),
-                Err(e) => eprintln!("tftune: surrogate set-hyper failed ({e})"),
-            }
-        }
         self.inner.mirror.set_hyper(hyper);
     }
 

@@ -114,6 +114,12 @@ use crate::util::linalg::packed_len;
 /// as a cross-process lease when the guard drops (module docs).
 pub(crate) type LeaseHook = Box<dyn FnMut(&[(Vec<f64>, f64)]) + Send>;
 
+/// Callback a replica installs to write in-guard hyper changes
+/// ([`SurrogateGuard::ensure_hyper`]) through to the surrogate service,
+/// so sibling replicas converge on one hyper instead of each selecting
+/// locally. Runs after the model lock is released (network round trip).
+pub(crate) type HyperHook = Box<dyn FnMut(GpHyper) + Send>;
+
 /// The handle contract the BO engine conditions its surrogate through.
 ///
 /// Implemented by [`SharedSurrogate`] (one factor per host process) and
@@ -131,6 +137,14 @@ pub(crate) type LeaseHook = Box<dyn FnMut(&[(Vec<f64>, f64)]) + Send>;
 pub trait SurrogateHandle: Send + Sync {
     /// Enqueue one observation (`x` in the unit cube, `y` raw objective).
     fn tell(&self, x: Vec<f64>, y: f64);
+
+    /// Enqueue one observation carrying K objective columns (`ys[0]` is
+    /// the primary objective, later entries the declared secondary
+    /// columns in maximisation orientation; NaN marks a column this
+    /// trial could not measure). Same non-blocking contract as
+    /// [`SurrogateHandle::tell`]; an empty `ys` is dropped with a
+    /// warning.
+    fn tell_multi(&self, x: Vec<f64>, ys: Vec<f64>);
 
     /// Drain pending tells and take the ask-side lock (module docs).
     fn lock(&self) -> SurrogateGuard<'_>;
@@ -174,8 +188,14 @@ pub struct SurrogateDelta {
     pub total_n: usize,
     /// Hypers the authoritative factor conditions with.
     pub hyper: GpHyper,
-    /// `(x, y)` observation rows `from_n..total_n`, canonical order.
+    /// `(x, y)` observation rows `from_n..total_n`, canonical order
+    /// (`y` is the primary objective).
     pub rows: Vec<(Vec<f64>, f64)>,
+    /// Secondary objective columns per row, aligned with `rows` (empty
+    /// inner vector = single-objective row; NaN = declared column the
+    /// trial did not carry). May be empty entirely when no row has
+    /// extras — protocol-v2 peers always decode it that way.
+    pub extras: Vec<Vec<f64>>,
     /// Packed factor rows `from_n..total_n` concatenated
     /// (`packed_len(total_n) - packed_len(from_n)` values), present iff
     /// the authoritative factor is exactly the store prefix.
@@ -195,6 +215,9 @@ struct SharedState {
     /// canonical history the conditioning window selects from.
     obs_x: Vec<Vec<f64>>,
     obs_y: Vec<f64>,
+    /// Secondary objective columns per observation, aligned with
+    /// `obs_x` (empty = single-objective row; NaN = degraded column).
+    obs_extra: Vec<Vec<f64>>,
     /// The persistent factored model.
     model: IncrementalGp,
     /// Indices into `obs_x` currently factored into `model`, in factor
@@ -207,7 +230,7 @@ struct SharedState {
     eager: bool,
     /// Spare row buffer swapped with the queue on drain, so the queue
     /// keeps its capacity and warmed-up tells never allocate.
-    drain_buf: Vec<(Vec<f64>, f64)>,
+    drain_buf: Vec<(Vec<f64>, f64, Vec<f64>)>,
     /// Sibling processes' in-flight `(x, lie)` points, refreshed by
     /// [`SharedSurrogate::import_delta`]. Always empty on a purely local
     /// handle.
@@ -229,7 +252,7 @@ impl SharedState {
     /// warning*, not asserted on: on a surrogate service the queue is fed
     /// by the network (a tuner attached with the wrong search space must
     /// degrade the one bad producer, not panic the fleet's daemon).
-    fn drain_one(&mut self, x: Vec<f64>, y: f64) {
+    fn drain_one(&mut self, x: Vec<f64>, y: f64, extra: Vec<f64>) {
         if x.is_empty() || self.dim().map_or(false, |d| d != x.len()) {
             eprintln!(
                 "tftune: dropping observation with dimension {} (store dimension {:?}) — \
@@ -250,17 +273,24 @@ impl SharedState {
         }
         self.obs_x.push(x);
         self.obs_y.push(y);
+        self.obs_extra.push(extra);
     }
 }
 
 struct Inner {
-    /// Pending `(x, y)` appends, in tell order. Its own mutex so the tell
-    /// side never contends with a scoring pass.
-    queue: Mutex<Vec<(Vec<f64>, f64)>>,
+    /// Pending `(x, y, extras)` appends, in tell order. Its own mutex so
+    /// the tell side never contends with a scoring pass. `extras` is the
+    /// secondary objective columns (empty = single-objective tell, so a
+    /// plain `tell` still allocates nothing beyond the row).
+    queue: Mutex<Vec<(Vec<f64>, f64, Vec<f64>)>>,
     state: Mutex<SharedState>,
     /// Replica lease publication hook (module docs). Its own mutex — the
     /// guard invokes it *after* releasing the model lock.
     lease_hook: Mutex<Option<LeaseHook>>,
+    /// Replica hyper write-through hook: invoked (after the model lock is
+    /// released) when a guard changed hypers via `ensure_hyper`, so a
+    /// served factor's siblings converge on one hyper.
+    hyper_hook: Mutex<Option<HyperHook>>,
 }
 
 /// A cloneable handle to one concurrently-shared surrogate model (module
@@ -291,6 +321,7 @@ impl SharedSurrogate {
                     hyper,
                     obs_x: Vec::new(),
                     obs_y: Vec::new(),
+                    obs_extra: Vec::new(),
                     model: IncrementalGp::new(hyper),
                     factored: Vec::new(),
                     eager: true,
@@ -298,6 +329,7 @@ impl SharedSurrogate {
                     ambient: Vec::new(),
                 }),
                 lease_hook: Mutex::new(None),
+                hyper_hook: Mutex::new(None),
             }),
         }
     }
@@ -307,7 +339,21 @@ impl SharedSurrogate {
     /// pass — the row is folded into the factor, in enqueue order, by the
     /// next [`SharedSurrogate::lock`].
     pub fn tell(&self, x: Vec<f64>, y: f64) {
-        self.inner.queue.lock().unwrap().push((x, y));
+        self.inner.queue.lock().unwrap().push((x, y, Vec::new()));
+    }
+
+    /// Enqueue one observation carrying K objective columns (`ys[0]`
+    /// primary, the rest secondary — maximisation orientation, NaN for a
+    /// column the trial could not measure). Non-blocking like
+    /// [`SharedSurrogate::tell`]; an empty `ys` is dropped with a
+    /// warning rather than panicking a producer thread.
+    pub fn tell_multi(&self, x: Vec<f64>, ys: Vec<f64>) {
+        let Some((&y, extra)) = ys.split_first() else {
+            eprintln!("tftune: dropping observation with no objective columns");
+            return;
+        };
+        let extra = extra.to_vec();
+        self.inner.queue.lock().unwrap().push((x, y, extra));
     }
 
     /// Observations told but not yet drained into the model.
@@ -362,6 +408,7 @@ impl SharedSurrogate {
         self.inner.queue.lock().unwrap().clear();
         state.obs_x.clear();
         state.obs_y.clear();
+        state.obs_extra.clear();
         state.model.clear();
         state.factored.clear();
         state.ambient.clear();
@@ -377,6 +424,15 @@ impl SharedSurrogate {
         hook: impl FnMut(&[(Vec<f64>, f64)]) + Send + 'static,
     ) {
         *self.inner.lease_hook.lock().unwrap() = Some(Box::new(hook));
+    }
+
+    /// Install the hyper write-through hook: invoked with the new hypers
+    /// whenever a guard changes them via [`SurrogateGuard::ensure_hyper`]
+    /// (e.g. in-guard lengthscale selection), after the model lock is
+    /// released. A replica uses this to publish the change to the
+    /// surrogate service so sibling replicas converge on one hyper.
+    pub(crate) fn set_hyper_hook(&self, hook: impl FnMut(GpHyper) + Send + 'static) {
+        *self.inner.hyper_hook.lock().unwrap() = Some(Box::new(hook));
     }
 
     /// Export the catch-up delta for a replica at `from_n` rows: drains
@@ -395,6 +451,7 @@ impl SharedSurrogate {
         }
         let rows: Vec<(Vec<f64>, f64)> =
             (from_n..n).map(|i| (st.obs_x[i].clone(), st.obs_y[i])).collect();
+        let extras: Vec<Vec<f64>> = (from_n..n).map(|i| st.obs_extra[i].clone()).collect();
         let prefix =
             st.factored.len() == n && st.factored.iter().enumerate().all(|(i, &j)| i == j);
         let factor = if prefix { Some(st.model.factor_suffix(from_n).to_vec()) } else { None };
@@ -403,6 +460,7 @@ impl SharedSurrogate {
             total_n: n,
             hyper: st.hyper,
             rows,
+            extras,
             factor,
             leases: Vec::new(),
         })
@@ -435,6 +493,12 @@ impl SharedSurrogate {
                 return false;
             }
         }
+        // Extras ride per-row: either absent entirely (v2 peer) or one
+        // (possibly empty) column vector per row.
+        if !delta.extras.is_empty() && delta.extras.len() != delta.rows.len() {
+            return false;
+        }
+        let extra_of = |k: usize| delta.extras.get(k).cloned().unwrap_or_default();
         if st.hyper != delta.hyper {
             let hyper = delta.hyper;
             st.hyper = hyper;
@@ -471,11 +535,12 @@ impl SharedSurrogate {
                     }
                     st.obs_x.push(x.clone());
                     st.obs_y.push(*y);
+                    st.obs_extra.push(extra_of(k));
                 }
             }
             _ => {
-                for (x, y) in &delta.rows {
-                    st.drain_one(x.clone(), *y);
+                for (k, (x, y)) in delta.rows.iter().enumerate() {
+                    st.drain_one(x.clone(), *y, extra_of(k));
                 }
             }
         }
@@ -489,10 +554,11 @@ impl SharedSurrogate {
     /// Concurrent `tell`s keep landing in the queue while the guard is
     /// held; they are folded in by the next `lock`.
     pub fn lock(&self) -> SurrogateGuard<'_> {
-        // Read the hook flag *before* taking the model lock: the hook
-        // mutex sits above conn → model-state in the replica's lock
-        // order, so holding model-state while acquiring it could cycle.
+        // Read the hook flags *before* taking the model lock: the hook
+        // mutexes sit above conn → model-state in the replica's lock
+        // order, so holding model-state while acquiring them could cycle.
         let log_lease = self.inner.lease_hook.lock().unwrap().is_some();
+        let log_hyper = self.inner.hyper_hook.lock().unwrap().is_some();
         let mut state = self.inner.state.lock().unwrap();
         // Defensive: a guard dropped mid-proposal (panic) may have left
         // fantasy rows; the factor must hold committed rows only before
@@ -503,8 +569,8 @@ impl SharedSurrogate {
         // once warmed up.
         let mut pending = std::mem::take(&mut state.drain_buf);
         std::mem::swap(&mut pending, &mut *self.inner.queue.lock().unwrap());
-        for (x, y) in pending.drain(..) {
-            state.drain_one(x, y);
+        for (x, y, extra) in pending.drain(..) {
+            state.drain_one(x, y, extra);
         }
         state.drain_buf = pending;
         SurrogateGuard {
@@ -512,6 +578,9 @@ impl SharedSurrogate {
             hook: &self.inner.lease_hook,
             log_lease,
             own_log: Vec::new(),
+            hyper_hook: &self.inner.hyper_hook,
+            log_hyper,
+            hyper_changed: None,
         }
     }
 }
@@ -519,6 +588,10 @@ impl SharedSurrogate {
 impl SurrogateHandle for SharedSurrogate {
     fn tell(&self, x: Vec<f64>, y: f64) {
         SharedSurrogate::tell(self, x, y)
+    }
+
+    fn tell_multi(&self, x: Vec<f64>, ys: Vec<f64>) {
+        SharedSurrogate::tell_multi(self, x, ys)
     }
 
     fn lock(&self) -> SurrogateGuard<'_> {
@@ -556,6 +629,10 @@ impl SurrogateHandle for SharedSurrogate {
 impl SurrogateHandle for Box<dyn SurrogateHandle> {
     fn tell(&self, x: Vec<f64>, y: f64) {
         (**self).tell(x, y)
+    }
+
+    fn tell_multi(&self, x: Vec<f64>, ys: Vec<f64>) {
+        (**self).tell_multi(x, ys)
     }
 
     fn lock(&self) -> SurrogateGuard<'_> {
@@ -606,6 +683,12 @@ pub struct SurrogateGuard<'a> {
     /// Own fantasy points extended during this batch (tracked only when
     /// `log_lease`).
     own_log: Vec<(Vec<f64>, f64)>,
+    hyper_hook: &'a Mutex<Option<HyperHook>>,
+    /// Whether to record in-guard hyper changes (hook installed).
+    log_hyper: bool,
+    /// The hypers an in-guard `ensure_hyper` switched to, published on
+    /// drop (last change wins within one batch).
+    hyper_changed: Option<GpHyper>,
 }
 
 impl SurrogateGuard<'_> {
@@ -636,18 +719,34 @@ impl SurrogateGuard<'_> {
         self.st().obs_y[i]
     }
 
+    /// Secondary objective columns of observation `i` (maximisation
+    /// orientation, declared order minus the primary). Empty for a
+    /// single-objective row; NaN marks a declared column that row's
+    /// trial could not measure — consumers degrade that row, never the
+    /// factor (the factor depends only on X).
+    pub fn y_extras(&self, i: usize) -> &[f64] {
+        &self.st().obs_extra[i]
+    }
+
     pub fn hyper(&self) -> GpHyper {
         self.st().hyper
     }
 
     /// Make the shared model condition with `hyper`; on change the factor
     /// is invalidated and rebuilt by the next [`SurrogateGuard::sync`].
+    /// On a replica handle the change is additionally written through to
+    /// the surrogate service when the guard drops, so sibling replicas
+    /// converge on the same hypers instead of each selecting locally.
     pub fn ensure_hyper(&mut self, hyper: GpHyper) {
+        let log_hyper = self.log_hyper;
         let st = self.st_mut();
         if st.hyper != hyper {
             st.hyper = hyper;
             st.model.set_hyper(hyper);
             st.factored.clear();
+            if log_hyper {
+                self.hyper_changed = Some(hyper);
+            }
         }
     }
 
@@ -779,6 +878,18 @@ impl SurrogateGuard<'_> {
     ) {
         self.st_mut().model.score_into(cand, c, acq_alpha, y_best, ws);
     }
+
+    /// K-objective blocked scoring over the factored model: one panel
+    /// pass, K target columns (see [`IncrementalGp::score_multi_into`]).
+    pub fn score_multi_into(
+        &mut self,
+        cand: &[f64],
+        c: usize,
+        targets: &[&[f64]],
+        ws: &mut ScoreWorkspace,
+    ) {
+        self.st_mut().model.score_multi_into(cand, c, targets, ws);
+    }
 }
 
 impl Drop for SurrogateGuard<'_> {
@@ -788,10 +899,17 @@ impl Drop for SurrogateGuard<'_> {
         if let Some(state) = self.state.as_mut() {
             state.model.retract_fantasies();
         }
-        // Release the model lock *before* publishing the lease: the hook
-        // performs a network round trip, and a concurrent replica sync
+        // Release the model lock *before* running the hooks: both
+        // perform a network round trip, and a concurrent replica sync
         // acquires connection → model-state in that order.
         self.state = None;
+        if self.log_hyper {
+            if let Some(hyper) = self.hyper_changed.take() {
+                if let Some(hook) = self.hyper_hook.lock().unwrap().as_mut() {
+                    hook(hyper);
+                }
+            }
+        }
         if !self.log_lease {
             return;
         }
@@ -1059,6 +1177,7 @@ mod tests {
             total_n: 1,
             hyper: GpHyper::default(),
             rows: Vec::new(),
+            extras: Vec::new(),
             factor: Some(Vec::new()),
             leases: vec![(vec![0.7, 0.7], 0.0)],
         };
@@ -1093,6 +1212,84 @@ mod tests {
         let idx = g.conditioning_set();
         assert!(g.sync(&idx));
         assert_eq!(g.total(), 2, "the factor holds only well-shaped rows");
+    }
+
+    #[test]
+    fn tell_multi_columns_survive_drain_and_delta() {
+        let shared = SharedSurrogate::new(GpHyper::default());
+        shared.tell_multi(vec![0.2, 0.4], vec![1.0, -7.5]);
+        shared.tell(vec![0.6, 0.8], 2.0); // single-objective row mixes in
+        shared.tell_multi(vec![0.1, 0.9], vec![3.0, f64::NAN]); // degraded column
+        shared.tell_multi(vec![0.5, 0.5], Vec::new()); // no columns: dropped
+        let g = shared.lock();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.y(0), 1.0);
+        assert_eq!(g.y_extras(0), &[-7.5]);
+        assert!(g.y_extras(1).is_empty());
+        assert!(g.y_extras(2)[0].is_nan());
+        drop(g);
+
+        // Columns replicate through the delta plane.
+        let delta = shared.export_delta(0).unwrap();
+        assert_eq!(delta.extras.len(), 3);
+        assert_eq!(delta.extras[0], vec![-7.5]);
+        assert!(delta.extras[1].is_empty());
+        let replica = SharedSurrogate::new(GpHyper::default());
+        assert!(replica.import_delta(&delta));
+        let g = replica.lock();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.y_extras(0), &[-7.5]);
+        assert!(g.y_extras(2)[0].is_nan());
+    }
+
+    #[test]
+    fn v2_delta_without_extras_imports_single_objective() {
+        // A delta from a protocol-v2 authority has no extras vector at
+        // all; every imported row is single-objective.
+        let authority = SharedSurrogate::new(GpHyper::default());
+        authority.tell(vec![0.3, 0.3], 1.0);
+        authority.tell(vec![0.7, 0.7], 2.0);
+        let mut delta = authority.export_delta(0).unwrap();
+        delta.extras = Vec::new();
+        let replica = SharedSurrogate::new(GpHyper::default());
+        assert!(replica.import_delta(&delta));
+        let g = replica.lock();
+        assert_eq!(g.len(), 2);
+        assert!(g.y_extras(0).is_empty());
+        assert!(g.y_extras(1).is_empty());
+        drop(g);
+        // Misaligned extras are rejected outright.
+        let authority2 = SharedSurrogate::new(GpHyper::default());
+        authority2.tell(vec![0.1, 0.1], 0.5);
+        let mut bad = authority2.export_delta(0).unwrap();
+        bad.extras = vec![vec![1.0], vec![2.0]];
+        let replica2 = SharedSurrogate::new(GpHyper::default());
+        assert!(!replica2.import_delta(&bad));
+    }
+
+    #[test]
+    fn hyper_hook_fires_once_per_changed_batch() {
+        let shared = SharedSurrogate::new(GpHyper::default());
+        shared.tell(vec![0.2, 0.2], 1.0);
+        let published = Arc::new(Mutex::new(Vec::new()));
+        let p2 = Arc::clone(&published);
+        shared.set_hyper_hook(move |h| p2.lock().unwrap().push(h));
+        // A guard that never touches hypers publishes nothing.
+        drop(shared.lock());
+        assert!(published.lock().unwrap().is_empty());
+        // An in-guard change publishes exactly once, after the drop.
+        let new = GpHyper { lengthscale: 0.5, ..GpHyper::default() };
+        {
+            let mut g = shared.lock();
+            g.ensure_hyper(new);
+            g.ensure_hyper(new); // unchanged: no second record
+            assert!(published.lock().unwrap().is_empty(), "hook ran under the lock");
+        }
+        assert_eq!(*published.lock().unwrap(), vec![new]);
+        // set_hyper goes through a guard, so it publishes too.
+        let newer = GpHyper { lengthscale: 0.8, ..GpHyper::default() };
+        shared.set_hyper(newer);
+        assert_eq!(*published.lock().unwrap(), vec![new, newer]);
     }
 
     #[test]

@@ -75,6 +75,12 @@ pub struct Evaluation {
     pub trial_id: u64,
     /// Wall-clock cost of the measurement in seconds (0 when unknown).
     pub cost_s: f64,
+    /// Declared objective vector in **maximisation orientation**
+    /// (`ObjectiveSet::extract` order: primary first, `:min` columns
+    /// negated). Empty for single-objective records; a NaN entry marks a
+    /// declared column the measurement did not carry (that record never
+    /// enters the Pareto front).
+    pub objectives: Vec<f64>,
 }
 
 /// Append-only evaluation history.
@@ -96,11 +102,25 @@ impl History {
             iteration,
             trial_id: iteration as u64,
             cost_s: 0.0,
+            objectives: Vec::new(),
         });
     }
 
     /// Record a completed trial with its full measurement.
     pub fn push_trial(&mut self, trial_id: u64, config: Config, m: &Measurement) {
+        self.push_trial_multi(trial_id, config, m, Vec::new());
+    }
+
+    /// Record a completed trial together with its extracted K-objective
+    /// vector (see [`crate::objectives::ObjectiveSet::extract`]; pass an
+    /// empty vector for single-objective runs).
+    pub fn push_trial_multi(
+        &mut self,
+        trial_id: u64,
+        config: Config,
+        m: &Measurement,
+        objectives: Vec<f64>,
+    ) {
         let iteration = self.evals.len();
         self.evals.push(Evaluation {
             config,
@@ -108,6 +128,7 @@ impl History {
             iteration,
             trial_id,
             cost_s: m.cost_s,
+            objectives,
         });
     }
 
@@ -162,6 +183,43 @@ impl History {
         self.evals.iter().any(|e| e.config == config)
     }
 
+    // -- multi-objective views ----------------------------------------------
+
+    /// The objective vector of each evaluation, in evaluation order:
+    /// the recorded K-vector when present, else the single-objective
+    /// `[value]`. All maximisation orientation.
+    pub fn objective_points(&self) -> Vec<Vec<f64>> {
+        self.evals
+            .iter()
+            .map(|e| {
+                if e.objectives.is_empty() {
+                    vec![e.value]
+                } else {
+                    e.objectives.clone()
+                }
+            })
+            .collect()
+    }
+
+    /// The non-dominated front over the recorded objective vectors
+    /// (maximisation; records with a NaN column never enter). For
+    /// single-objective histories this degenerates to the best record.
+    pub fn pareto_front(&self) -> Vec<&Evaluation> {
+        let points = self.objective_points();
+        crate::objectives::pareto_front_indices(&points)
+            .into_iter()
+            .map(|i| &self.evals[i])
+            .collect()
+    }
+
+    /// Dominated hypervolume of the history's non-dominated front with
+    /// respect to `ref_point` (maximisation orientation; see
+    /// [`crate::objectives::hypervolume`]). Monotone non-decreasing as
+    /// evaluations are appended.
+    pub fn hypervolume(&self, ref_point: &[f64]) -> f64 {
+        crate::objectives::hypervolume(&self.objective_points(), ref_point)
+    }
+
     /// Per-parameter sampled (min, max) over all evaluations — Table 2's
     /// raw material. None when empty.
     pub fn sampled_ranges(&self, dim: usize) -> Option<Vec<(i64, i64)>> {
@@ -203,13 +261,27 @@ impl History {
     pub fn to_jsonl(&self, space: &SearchSpace) -> String {
         let mut out = String::new();
         for e in &self.evals {
-            let line = Json::obj(vec![
+            let mut pairs = vec![
                 ("iteration", Json::from(e.iteration)),
                 ("trial", Json::from(e.trial_id as i64)),
                 ("config", space.config_to_json(&e.config)),
                 ("value", Json::from(e.value)),
                 ("cost_s", Json::from(e.cost_s)),
-            ]);
+            ];
+            if !e.objectives.is_empty() {
+                // NaN (a declared-but-missing column) is not valid JSON;
+                // encode it as null and decode null back to NaN.
+                pairs.push((
+                    "objectives",
+                    Json::Arr(
+                        e.objectives
+                            .iter()
+                            .map(|&v| if v.is_finite() { Json::from(v) } else { Json::Null })
+                            .collect(),
+                    ),
+                ));
+            }
+            let line = Json::obj(pairs);
             out.push_str(&line.to_string());
             out.push('\n');
         }
@@ -238,8 +310,12 @@ impl History {
                 .map(|t| t as u64)
                 .unwrap_or(h.len() as u64);
             let cost_s = j.get("cost_s").and_then(Json::as_f64).unwrap_or(0.0);
+            let objectives: Vec<f64> = match j.get("objectives").and_then(Json::as_arr) {
+                Some(arr) => arr.iter().map(|v| v.as_f64().unwrap_or(f64::NAN)).collect(),
+                None => Vec::new(),
+            };
             let m = Measurement::new(value).with_cost_s(cost_s);
-            h.push_trial(trial_id, cfg, &m);
+            h.push_trial_multi(trial_id, cfg, &m, objectives);
         }
         Ok(h)
     }
@@ -403,6 +479,71 @@ mod tests {
         assert_eq!(h.last().unwrap().trial_id, 0);
         assert_eq!(h.last().unwrap().cost_s, 0.0);
         assert_eq!(h.last().unwrap().value, 12.5);
+    }
+
+    #[test]
+    fn pareto_front_and_hypervolume_views() {
+        let s = space();
+        let mut rng = Rng::new(9);
+        let mut h = History::new();
+        // (value, p99-negated) pairs: (5,-1) and (1,-0.1) trade off;
+        // (2,-2) is dominated; the NaN row is degraded and never fronts.
+        for (id, obj) in [
+            (0u64, vec![5.0, -1.0]),
+            (1, vec![1.0, -0.1]),
+            (2, vec![2.0, -2.0]),
+            (3, vec![4.0, f64::NAN]),
+        ] {
+            let m = Measurement::new(obj[0]);
+            h.push_trial_multi(id, s.random(&mut rng), &m, obj);
+        }
+        let front: Vec<u64> = h.pareto_front().iter().map(|e| e.trial_id).collect();
+        assert_eq!(front, vec![0, 1]);
+        // HV against (0, -3): rects 5*2 + extra strip 0*... hand compute:
+        // (5,-1) gives 5*2=10; (1,-0.1) adds 1*(−0.1−(−1))=0.9 → 10.9.
+        let hv = h.hypervolume(&[0.0, -3.0]);
+        assert!((hv - 10.9).abs() < 1e-12, "hv {hv}");
+    }
+
+    #[test]
+    fn single_objective_front_is_the_best_record() {
+        let s = space();
+        let h = random_history(&s, 12, 4);
+        let front = h.pareto_front();
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].iteration, h.best().unwrap().iteration);
+    }
+
+    #[test]
+    fn objectives_round_trip_jsonl_with_nan_as_null() {
+        let s = space();
+        let mut rng = Rng::new(11);
+        let mut h = History::new();
+        h.push_trial_multi(
+            0,
+            s.random(&mut rng),
+            &Measurement::new(3.0),
+            vec![3.0, -0.5],
+        );
+        h.push_trial_multi(
+            1,
+            s.random(&mut rng),
+            &Measurement::new(1.0),
+            vec![1.0, f64::NAN],
+        );
+        let text = h.to_jsonl(&s);
+        assert!(text.contains("null"), "NaN column must encode as null: {text}");
+        let h2 = History::from_jsonl(&text, &s).unwrap();
+        assert_eq!(h2.len(), 2);
+        let a: Vec<Vec<u64>> = h
+            .iter()
+            .map(|e| e.objectives.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        let b: Vec<Vec<u64>> = h2
+            .iter()
+            .map(|e| e.objectives.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        assert_eq!(a, b, "objective vectors must survive the round trip bitwise");
     }
 
     #[test]

@@ -81,6 +81,23 @@
 //! in [`gp::select_lengthscale`]; the packed-Cholesky/trsm/gemm kernel
 //! set backing it all is in [`util::linalg`].
 //!
+//! # Multi-objective tuning
+//!
+//! The knobs this system tunes trade throughput against tail latency, so
+//! a run can declare an [`ObjectiveSet`] (primary `value` plus named
+//! `Measurement::metadata` columns, `:min` to minimise — see
+//! [`objectives`]) and hand it to the BO engine
+//! (`BayesOpt::with_objectives`) and the session
+//! ([`TuningSession::with_objectives`]). The GP factor depends only on
+//! the inputs, so K objectives are **K target columns over one shared
+//! factor** — one blocked panel pass per ask, not K refits — scored
+//! under a weighted scalarisation or an SMSego-style hypervolume gain
+//! over the non-dominated front ([`Scalarization`]). [`History`] records
+//! each trial's objective vector and exposes
+//! [`History::pareto_front`] / [`History::hypervolume`]. On the wire
+//! (protocol v3) the columns ride `tell-obs` / `factor-delta` rows, and
+//! v2 peers keep working single-objective.
+//!
 //! ## Migrating from propose/observe
 //!
 //! Pre-redesign code looked like `let cfg = tuner.propose(); ...;
@@ -128,6 +145,7 @@ pub mod evaluator;
 pub mod figures;
 pub mod gp;
 pub mod history;
+pub mod objectives;
 pub mod runtime;
 pub mod server;
 pub mod session;
@@ -139,5 +157,6 @@ pub use algorithms::{Trial, TrialId};
 pub use config::TuneConfig;
 pub use gp::SharedSurrogate;
 pub use history::{Evaluation, History, Measurement};
+pub use objectives::{ObjectiveSet, Scalarization};
 pub use session::{Budget, SessionGroup, StopReason, TuningSession};
 pub use space::{ParamDef, SearchSpace};

@@ -112,15 +112,17 @@ COMMANDS
   tune         --model <m> --alg <bo|ga|nms|random|grid> [--iters 50]
                [--seed 0] [--parallel 1] [--max-seconds S]
                [--surrogate native|hlo] [--objective throughput|latency]
+               [--objectives spec] [--scalarize weighted:<w,..>|smsego]
                [--surrogate-addr host:port] [--tune-lengthscale]
                [--out hist.jsonl] [--config run.json]
   serve        --model <m> [--addr 127.0.0.1:7070] [--seed 0]
-  surrogate-serve  [--addr 127.0.0.1:7071]
+  surrogate-serve  [--addr 127.0.0.1:7071] [--objectives spec]
                host the authoritative shared GP factor: tuner processes
                started with --surrogate-addr condition one model
   remote-tune  --addr <host:port[,host:port...]> --model <m> --alg <a>
                [--iters 50] [--seed 0] [--parallel N] [--max-seconds S]
-               [--surrogate-addr host:port]
+               [--surrogate-addr host:port] [--objectives spec]
+               [--scalarize weighted:<w,..>|smsego]
   sweep        [--fine] [--out-dir figures_out]   (Fig. 6)
   figures      <fig5|fig6|fig7|table1|table2|all> [--iters 50]
                [--seeds 0,1,2] [--surrogate native|hlo] [--out-dir figures_out]
@@ -138,6 +140,15 @@ CROSS-PROCESS SURROGATE
   --surrogate-addr <its address>: all their measurements condition one
   served GP factor, and each process's in-flight trials are leased to the
   others as constant-liar fantasies (expiring if a process dies).
+
+MULTI-OBJECTIVE
+  --objectives declares what a BO run optimises: the primary objective
+  plus named Measurement metadata columns, ':min' to minimise — e.g.
+  --objectives throughput,p99_latency_ms:min. The GP scores every
+  objective in one panel pass over one factor; --scalarize picks the
+  acquisition (weighted:<w,..> fixed weights, or smsego hypervolume
+  gain over the non-dominated front). The history records each trial's
+  objective vector, so Pareto fronts are readable from the JSONL.
 
 MODELS
   ssd-mobilenet resnet50-fp32 resnet50-int8 transformer-lt bert ncf
@@ -213,6 +224,14 @@ fn cmd_tune(args: &Args) -> Result<()> {
     if args.get("tune-lengthscale").is_some() {
         cfg.tune_lengthscale = true;
     }
+    if let Some(spec) = args.get("objectives") {
+        cfg.objectives =
+            Some(tftune::ObjectiveSet::parse(spec).map_err(|e| anyhow::anyhow!(e))?);
+    }
+    if let Some(spec) = args.get("scalarize") {
+        cfg.scalarize =
+            Some(tftune::Scalarization::parse(spec).map_err(|e| anyhow::anyhow!(e))?);
+    }
 
     println!(
         "tuning {} with {} for {} iterations (seed {}, parallel {}, surrogate {}, objective {})",
@@ -235,6 +254,15 @@ fn cmd_tune(args: &Args) -> Result<()> {
     );
     let space = cfg.model.space();
     println!("best config: {}", space.config_to_json(&best.config));
+    if let Some(set) = &cfg.objectives {
+        let front = history.pareto_front();
+        println!(
+            "non-dominated front over [{}]: {} of {} trials",
+            set.spec(),
+            front.len(),
+            history.len()
+        );
+    }
     if let Some(p) = &cfg.history_out {
         println!("history written to {}", p.display());
     }
@@ -266,6 +294,18 @@ fn cmd_surrogate_serve(args: &Args) -> Result<()> {
         server.local_addr()?,
         tftune::server::proto::PROTOCOL_VERSION
     );
+    if let Some(spec) = args.get("objectives") {
+        // The served store accepts whatever objective columns arrive;
+        // the declaration here is validated and echoed so operators see
+        // what the fleet is expected to tune.
+        let set = tftune::ObjectiveSet::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "serving a {}-objective fleet [{}]: v3 tuners contribute all columns, \
+             v2 tuners degrade to the primary objective",
+            set.k(),
+            set.spec()
+        );
+    }
     println!("attach tuners with: tftune tune --alg bo --surrogate-addr <this address> ...");
     server.serve()?;
     println!("surrogate service shut down");
@@ -300,29 +340,69 @@ fn cmd_remote_tune(args: &Args) -> Result<()> {
 
     // With --surrogate-addr the BO engine conditions a replica of the
     // served factor: every remote-tune process given the same address
-    // shares one model.
-    let tuner: Box<dyn tftune::algorithms::Tuner + Send> = match args.get("surrogate-addr") {
-        Some(surrogate_addr) => {
-            anyhow::ensure!(
-                alg == Algorithm::Bo,
-                "--surrogate-addr applies to the BO engine only (got {})",
-                alg.name()
-            );
-            let replica = tftune::gp::RemoteSurrogate::connect(surrogate_addr)
-                .with_context(|| format!("attaching surrogate service {surrogate_addr}"))?;
-            println!("conditioning the shared factor served at {surrogate_addr}");
-            Box::new(
-                tftune::algorithms::BayesOpt::new(space.clone(), seed)
-                    .with_shared_surrogate(replica),
+    // shares one model. --objectives switches the engine to the declared
+    // multi-objective acquisition (BO only, like the service attachment).
+    let objectives = match args.get("objectives") {
+        Some(spec) => Some(tftune::ObjectiveSet::parse(spec).map_err(|e| anyhow::anyhow!(e))?),
+        None => None,
+    };
+    let scalarize = match args.get("scalarize") {
+        Some(spec) => {
+            let set = objectives
+                .as_ref()
+                .context("--scalarize requires --objectives")?;
+            Some(
+                tftune::Scalarization::parse(spec)
+                    .and_then(|s| s.resolve(set.k()))
+                    .map_err(|e| anyhow::anyhow!(e))?,
             )
         }
-        None => alg.build(&space, seed),
+        None => None,
     };
+    let surrogate_addr = args.get("surrogate-addr");
+    let tuner: Box<dyn tftune::algorithms::Tuner + Send> =
+        if surrogate_addr.is_some() || objectives.is_some() {
+            anyhow::ensure!(
+                alg == Algorithm::Bo,
+                "--surrogate-addr/--objectives apply to the BO engine only (got {})",
+                alg.name()
+            );
+            let mut bo = tftune::algorithms::BayesOpt::new(space.clone(), seed);
+            if let Some(addr) = surrogate_addr {
+                let replica = tftune::gp::RemoteSurrogate::connect(addr)
+                    .with_context(|| format!("attaching surrogate service {addr}"))?;
+                println!("conditioning the shared factor served at {addr}");
+                bo = bo.with_shared_surrogate(replica);
+            }
+            if let Some(set) = &objectives {
+                let scal = match scalarize.clone() {
+                    Some(s) => s,
+                    None => tftune::Scalarization::Weighted(Vec::new())
+                        .resolve(set.k())
+                        .map_err(|e| anyhow::anyhow!(e))?,
+                };
+                println!("optimising objectives [{}] with {}", set.spec(), scal.spec());
+                bo = bo.with_objectives(set.clone(), scal);
+            }
+            Box::new(bo)
+        } else {
+            alg.build(&space, seed)
+        };
     let mut session = TuningSession::new(tuner, pool, parse_budget(iters, args)?);
+    if let Some(set) = objectives.clone() {
+        session = session.with_objectives(set);
+    }
     let history = session.run()?;
     let best = history.best().context("empty history")?;
     println!("best throughput: {:.2} examples/s", best.value);
     println!("best config: {}", space.config_to_json(&best.config));
+    if objectives.is_some() {
+        println!(
+            "non-dominated front: {} of {} trials",
+            history.pareto_front().len(),
+            history.len()
+        );
+    }
     if let Some(reason) = session.stop_reason() {
         println!(
             "stopped by {} after {} evaluations ({:.2}s measurement time)",

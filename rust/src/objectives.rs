@@ -1,0 +1,476 @@
+//! Declared objective sets and multi-objective utilities.
+//!
+//! The paper tunes a single scalar (training/inference time), but the
+//! knobs it tunes — inter/intra-op threads, `OMP_NUM_THREADS`, allocator
+//! settings — trade *throughput against tail latency*, and
+//! [`Measurement`](crate::history::Measurement) already carries named
+//! metadata columns (e.g. `p99_latency_ms`). An [`ObjectiveSet`] declares
+//! which columns a tuning run optimises: the **primary** objective is
+//! always `Measurement::value`; every further objective names a metadata
+//! column and a direction (`max` by default, `:min` to minimise).
+//!
+//! Internally everything is *maximisation*: [`ObjectiveSet::extract`]
+//! negates `:min` columns at extraction time, so the engines, the Pareto
+//! helpers and the [`History`](crate::history::History) front all work in
+//! one orientation. A declared column that is missing from a measurement
+//! (or non-finite) extracts as NaN — the engine degrades that one trial
+//! to primary-objective-only instead of poisoning the shared factor (see
+//! `algorithms::bo`).
+//!
+//! [`Scalarization`] selects the acquisition used by the BO engine's
+//! multi-objective mode: a fixed **weighted** scalarisation of the
+//! per-objective optimistic gains, or an **SMSego**-style hypervolume
+//! gain of the optimistic candidate point over the non-dominated front
+//! (computed by [`pareto_front_indices`] / [`hypervolume`] below).
+//!
+//! Spec strings (CLI `--objectives` / `--scalarize`, `TuneConfig` JSON):
+//!
+//! ```text
+//! --objectives throughput,p99_latency_ms:min   primary + one minimised column
+//! --scalarize  weighted:0.7,0.3                fixed weights (one per objective)
+//! --scalarize  smsego                          hypervolume-gain acquisition
+//! ```
+
+use crate::history::Measurement;
+
+/// One declared objective: a display name (for the primary) or the
+/// metadata column it reads (for secondaries), plus its direction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObjectiveDef {
+    /// Display name; for secondary objectives this is the
+    /// `Measurement::metadata` key the value is read from.
+    pub name: String,
+    /// Minimised objectives are negated at extraction, so every internal
+    /// consumer maximises.
+    pub minimize: bool,
+}
+
+/// The declared objective set of a tuning run: primary `value` first,
+/// then named metadata columns. Parse one from a spec string like
+/// `"throughput,p99_latency_ms:min"`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObjectiveSet {
+    defs: Vec<ObjectiveDef>,
+}
+
+impl ObjectiveSet {
+    /// Build from explicit definitions. The first entry is the primary
+    /// objective (read from `Measurement::value`).
+    pub fn new(defs: Vec<ObjectiveDef>) -> Result<ObjectiveSet, String> {
+        if defs.is_empty() {
+            return Err("objective set needs at least the primary objective".to_string());
+        }
+        for d in &defs {
+            if d.name.is_empty() {
+                return Err("empty objective name".to_string());
+            }
+        }
+        for i in 1..defs.len() {
+            if defs[..i].iter().any(|d| d.name == defs[i].name) {
+                return Err(format!("duplicate objective '{}'", defs[i].name));
+            }
+        }
+        Ok(ObjectiveSet { defs })
+    }
+
+    /// Parse `"name[:min|:max],name[:min|:max],..."`. The first entry is
+    /// the primary objective (its name is informational — the value is
+    /// always `Measurement::value`); later entries name metadata columns.
+    pub fn parse(spec: &str) -> Result<ObjectiveSet, String> {
+        let mut defs = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(format!("empty objective in spec '{spec}'"));
+            }
+            let (name, minimize) = match part.rsplit_once(':') {
+                Some((n, "min")) => (n, true),
+                Some((n, "max")) => (n, false),
+                Some((_, dir)) => {
+                    return Err(format!("unknown direction '{dir}' (use :min or :max)"));
+                }
+                None => (part, false),
+            };
+            defs.push(ObjectiveDef { name: name.trim().to_string(), minimize });
+        }
+        ObjectiveSet::new(defs)
+    }
+
+    /// Canonical spec string (round-trips through [`ObjectiveSet::parse`]).
+    pub fn spec(&self) -> String {
+        self.defs
+            .iter()
+            .map(|d| {
+                if d.minimize {
+                    format!("{}:min", d.name)
+                } else {
+                    d.name.clone()
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Number of objectives (K), primary included.
+    pub fn k(&self) -> usize {
+        self.defs.len()
+    }
+
+    /// More than one objective declared?
+    pub fn is_multi(&self) -> bool {
+        self.defs.len() > 1
+    }
+
+    pub fn defs(&self) -> &[ObjectiveDef] {
+        &self.defs
+    }
+
+    /// Extract the K objective values from a measurement, in declared
+    /// order and **maximisation orientation** (`:min` columns negated).
+    /// `values[0]` is always `m.value`. A declared metadata column that
+    /// is absent or non-finite extracts as NaN, and its index lands in
+    /// `missing` — callers degrade that trial to primary-objective-only.
+    pub fn extract(&self, m: &Measurement) -> (Vec<f64>, Vec<usize>) {
+        let mut values = Vec::with_capacity(self.defs.len());
+        let mut missing = Vec::new();
+        for (k, d) in self.defs.iter().enumerate() {
+            let raw = if k == 0 {
+                Some(m.value)
+            } else {
+                m.metadata.iter().find(|(name, _)| name == &d.name).map(|&(_, v)| v)
+            };
+            match raw {
+                Some(v) if v.is_finite() => values.push(if d.minimize { -v } else { v }),
+                _ => {
+                    values.push(f64::NAN);
+                    missing.push(k);
+                }
+            }
+        }
+        (values, missing)
+    }
+}
+
+/// How the BO engine collapses K per-objective gains into one
+/// acquisition value per candidate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalarization {
+    /// Fixed weighted sum of per-objective optimistic gains
+    /// `Σ_k w_k ((μ_k + α σ) − y*_k)`. Weights must be positive, one per
+    /// objective; permuting the weights together with the objectives
+    /// leaves the scalarised gain unchanged.
+    Weighted(Vec<f64>),
+    /// SMSego-style hypervolume gain: the increase in dominated
+    /// hypervolume when the candidate's optimistic point joins the
+    /// current non-dominated front.
+    Smsego,
+}
+
+impl Scalarization {
+    /// Parse `"weighted:w1,w2,..."` or `"smsego"` (aliases `hv`,
+    /// `hypervolume`). `"weighted"` without weights means equal weights,
+    /// resolved against the objective set at build time.
+    pub fn parse(spec: &str) -> Result<Scalarization, String> {
+        let spec = spec.trim();
+        match spec.to_lowercase().as_str() {
+            "smsego" | "hv" | "hypervolume" => return Ok(Scalarization::Smsego),
+            "weighted" => return Ok(Scalarization::Weighted(Vec::new())),
+            _ => {}
+        }
+        if let Some(ws) = spec.strip_prefix("weighted:") {
+            let weights: Result<Vec<f64>, String> = ws
+                .split(',')
+                .map(|w| {
+                    w.trim()
+                        .parse::<f64>()
+                        .map_err(|_| format!("bad weight '{}'", w.trim()))
+                })
+                .collect();
+            let weights = weights?;
+            if weights.iter().any(|&w| !(w.is_finite() && w > 0.0)) {
+                return Err("scalarisation weights must be positive and finite".to_string());
+            }
+            return Ok(Scalarization::Weighted(weights));
+        }
+        Err(format!("unknown scalarization '{spec}' (weighted:<w,..> or smsego)"))
+    }
+
+    /// Canonical spec string (round-trips through [`Scalarization::parse`]).
+    pub fn spec(&self) -> String {
+        match self {
+            Scalarization::Smsego => "smsego".to_string(),
+            Scalarization::Weighted(w) if w.is_empty() => "weighted".to_string(),
+            Scalarization::Weighted(w) => format!(
+                "weighted:{}",
+                w.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",")
+            ),
+        }
+    }
+
+    /// Resolve empty weighted specs to equal weights over `k` objectives
+    /// and validate the weight count.
+    pub fn resolve(self, k: usize) -> Result<Scalarization, String> {
+        match self {
+            Scalarization::Weighted(w) if w.is_empty() => {
+                Ok(Scalarization::Weighted(vec![1.0 / k as f64; k]))
+            }
+            Scalarization::Weighted(w) if w.len() != k => Err(format!(
+                "{} scalarisation weights for {k} objectives",
+                w.len()
+            )),
+            other => Ok(other),
+        }
+    }
+}
+
+/// The weighted scalarised gain of one candidate:
+/// `Σ_k w_k (optimistic_k − y_best_k)` — exactly what the BO engine's
+/// `Weighted` acquisition evaluates per candidate. Permuting the weights
+/// together with the objectives leaves the value unchanged (addition is
+/// commutative; for K>2 re-association stays within a few ulp), and with
+/// positive weights a candidate whose optimistic vector is dominated by
+/// another's can never score highest.
+pub fn weighted_gain(weights: &[f64], optimistic: &[f64], y_best: &[f64]) -> f64 {
+    debug_assert_eq!(weights.len(), optimistic.len());
+    debug_assert_eq!(weights.len(), y_best.len());
+    let mut g = 0.0;
+    for ((w, o), b) in weights.iter().zip(optimistic).zip(y_best) {
+        g += w * (o - b);
+    }
+    g
+}
+
+// ---------------------------------------------------------------------------
+// Pareto helpers (maximisation orientation throughout).
+// ---------------------------------------------------------------------------
+
+/// Does `a` dominate `b`? (a ≥ b in every coordinate, > in at least one;
+/// maximisation.) Any NaN coordinate makes the answer false.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strict = false;
+    for (&x, &y) in a.iter().zip(b) {
+        if !(x >= y) {
+            return false; // also catches NaN on either side
+        }
+        if x > y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Indices of the non-dominated points among `points` (maximisation).
+/// Points with any non-finite coordinate never enter the front. Among
+/// exact duplicates the earliest index is kept.
+pub fn pareto_front_indices(points: &[Vec<f64>]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, p) in points.iter().enumerate() {
+        if p.iter().any(|v| !v.is_finite()) {
+            continue;
+        }
+        for (j, q) in points.iter().enumerate() {
+            if i == j || q.iter().any(|v| !v.is_finite()) {
+                continue;
+            }
+            if dominates(q, p) || (q == p && j < i) {
+                continue 'outer;
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+/// Dominated hypervolume of `points` with respect to the reference point
+/// `ref_point` (maximisation: the measure of the region dominated by at
+/// least one point and above `ref_point` in every coordinate). Exact, by
+/// recursive slicing on the last dimension — fine for the small fronts a
+/// tuning history produces. Points not strictly above the reference in
+/// every coordinate contribute nothing; non-finite points are ignored.
+pub fn hypervolume(points: &[Vec<f64>], ref_point: &[f64]) -> f64 {
+    let d = ref_point.len();
+    let pts: Vec<&Vec<f64>> = points
+        .iter()
+        .filter(|p| {
+            p.len() == d
+                && p.iter().all(|v| v.is_finite())
+                && p.iter().zip(ref_point).all(|(v, r)| v > r)
+        })
+        .collect();
+    hv_rec(&pts, ref_point, d)
+}
+
+fn hv_rec(points: &[&Vec<f64>], ref_point: &[f64], d: usize) -> f64 {
+    if points.is_empty() {
+        return 0.0;
+    }
+    if d == 1 {
+        let best = points.iter().map(|p| p[0]).fold(f64::NEG_INFINITY, f64::max);
+        return (best - ref_point[0]).max(0.0);
+    }
+    // Slice along dimension d-1: between consecutive levels, the cross
+    // section is the (d-1)-dimensional hypervolume of the points reaching
+    // that high.
+    let mut levels: Vec<f64> = points.iter().map(|p| p[d - 1]).collect();
+    levels.sort_by(|a, b| b.partial_cmp(a).expect("finite by construction"));
+    levels.dedup();
+    let mut total = 0.0;
+    for (i, &z) in levels.iter().enumerate() {
+        let lower = if i + 1 < levels.len() { levels[i + 1] } else { ref_point[d - 1] };
+        let slab = z - lower;
+        if slab <= 0.0 {
+            continue;
+        }
+        let active: Vec<&Vec<f64>> =
+            points.iter().filter(|p| p[d - 1] >= z).copied().collect();
+        total += slab * hv_rec(&active, ref_point, d - 1);
+    }
+    total
+}
+
+/// A reference point safely below `points` in every coordinate
+/// (componentwise finite minimum minus `margin`). `None` when no point
+/// is fully finite.
+pub fn hv_reference(points: &[Vec<f64>], k: usize, margin: f64) -> Option<Vec<f64>> {
+    let mut r = vec![f64::INFINITY; k];
+    let mut any = false;
+    for p in points {
+        if p.len() != k || p.iter().any(|v| !v.is_finite()) {
+            continue;
+        }
+        any = true;
+        for (ri, &v) in r.iter_mut().zip(p) {
+            *ri = ri.min(v);
+        }
+    }
+    if !any {
+        return None;
+    }
+    Some(r.into_iter().map(|v| v - margin).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_spec_round_trip() {
+        let set = ObjectiveSet::parse("throughput,p99_latency_ms:min").unwrap();
+        assert_eq!(set.k(), 2);
+        assert!(set.is_multi());
+        assert!(!set.defs()[0].minimize);
+        assert!(set.defs()[1].minimize);
+        assert_eq!(set.spec(), "throughput,p99_latency_ms:min");
+        assert_eq!(ObjectiveSet::parse(&set.spec()).unwrap(), set);
+
+        let single = ObjectiveSet::parse("throughput").unwrap();
+        assert!(!single.is_multi());
+
+        assert!(ObjectiveSet::parse("").is_err());
+        assert!(ObjectiveSet::parse("a,,b").is_err());
+        assert!(ObjectiveSet::parse("a,a").is_err());
+        assert!(ObjectiveSet::parse("a:sideways").is_err());
+    }
+
+    #[test]
+    fn extract_negates_min_and_flags_missing() {
+        let set = ObjectiveSet::parse("tp,p99:min,mem:min").unwrap();
+        let m = Measurement::new(100.0)
+            .with_metadata("p99", 7.5)
+            .with_metadata("unrelated", 1.0);
+        let (v, missing) = set.extract(&m);
+        assert_eq!(v[0], 100.0);
+        assert_eq!(v[1], -7.5, "minimised column is negated");
+        assert!(v[2].is_nan(), "absent column extracts as NaN");
+        assert_eq!(missing, vec![2]);
+
+        let m2 = Measurement::new(1.0).with_metadata("p99", f64::NAN).with_metadata("mem", 3.0);
+        let (v2, missing2) = set.extract(&m2);
+        assert!(v2[1].is_nan());
+        assert_eq!(v2[2], -3.0);
+        assert_eq!(missing2, vec![1]);
+    }
+
+    #[test]
+    fn scalarization_parse_round_trip() {
+        for spec in ["smsego", "weighted:0.7,0.3", "weighted"] {
+            let s = Scalarization::parse(spec).unwrap();
+            assert_eq!(Scalarization::parse(&s.spec()).unwrap(), s, "spec {spec}");
+        }
+        assert_eq!(Scalarization::parse("hv").unwrap(), Scalarization::Smsego);
+        assert!(Scalarization::parse("weighted:0.5,-1").is_err());
+        assert!(Scalarization::parse("weighted:x").is_err());
+        assert!(Scalarization::parse("nope").is_err());
+
+        let eq = Scalarization::Weighted(Vec::new()).resolve(2).unwrap();
+        assert_eq!(eq, Scalarization::Weighted(vec![0.5, 0.5]));
+        assert!(Scalarization::Weighted(vec![1.0]).resolve(2).is_err());
+        assert_eq!(Scalarization::Smsego.resolve(3).unwrap(), Scalarization::Smsego);
+    }
+
+    #[test]
+    fn dominance_and_front() {
+        assert!(dominates(&[2.0, 2.0], &[1.0, 2.0]));
+        assert!(!dominates(&[2.0, 1.0], &[1.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equal points do not dominate");
+        assert!(!dominates(&[f64::NAN, 5.0], &[0.0, 0.0]));
+
+        let pts = vec![
+            vec![1.0, 4.0],
+            vec![3.0, 3.0],
+            vec![2.0, 2.0], // dominated by (3,3)
+            vec![4.0, 1.0],
+            vec![f64::NAN, 9.0], // never on the front
+            vec![3.0, 3.0],      // duplicate: earliest kept
+        ];
+        assert_eq!(pareto_front_indices(&pts), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn hypervolume_matches_hand_computed_2d() {
+        let r = [0.0, 0.0];
+        // Single point: a rectangle.
+        assert!((hypervolume(&[vec![2.0, 3.0]], &r) - 6.0).abs() < 1e-12);
+        // Two staircase points: union of rectangles = 3*1 + 2*... let's
+        // hand-compute: (1,3) and (3,1): 1*3 + (3-1)*1 = 5.
+        let hv = hypervolume(&[vec![1.0, 3.0], vec![3.0, 1.0]], &r);
+        assert!((hv - 5.0).abs() < 1e-12, "hv {hv}");
+        // A dominated point adds nothing.
+        let hv2 =
+            hypervolume(&[vec![1.0, 3.0], vec![3.0, 1.0], vec![0.5, 0.5]], &r);
+        assert!((hv2 - 5.0).abs() < 1e-12);
+        // Points at/below the reference contribute nothing.
+        assert_eq!(hypervolume(&[vec![0.0, 5.0]], &r), 0.0);
+        assert_eq!(hypervolume(&[vec![-1.0, -1.0]], &r), 0.0);
+    }
+
+    #[test]
+    fn hypervolume_3d_box_union() {
+        // Two boxes sharing a corner at the reference: (1,1,2) and
+        // (2,1,1): union = 2 + 2 - overlap(1*1*1) = 3.
+        let hv = hypervolume(&[vec![1.0, 1.0, 2.0], vec![2.0, 1.0, 1.0]], &[0.0, 0.0, 0.0]);
+        assert!((hv - 3.0).abs() < 1e-12, "hv {hv}");
+    }
+
+    #[test]
+    fn hypervolume_is_monotone_in_added_points() {
+        let r = [-1.0, -1.0];
+        let mut pts: Vec<Vec<f64>> = Vec::new();
+        let mut prev = 0.0;
+        for p in [vec![0.0, 1.0], vec![1.0, 0.0], vec![0.6, 0.6], vec![-0.5, 2.0]] {
+            pts.push(p);
+            let hv = hypervolume(&pts, &r);
+            assert!(hv >= prev - 1e-15, "hv shrank: {hv} < {prev}");
+            prev = hv;
+        }
+    }
+
+    #[test]
+    fn hv_reference_sits_below_every_point() {
+        let pts = vec![vec![1.0, -2.0], vec![0.5, 4.0], vec![f64::NAN, 0.0]];
+        let r = hv_reference(&pts, 2, 1.0).unwrap();
+        assert_eq!(r, vec![-0.5, -3.0]);
+        assert!(hv_reference(&[vec![f64::NAN, 0.0]], 2, 1.0).is_none());
+    }
+}

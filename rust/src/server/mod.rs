@@ -219,17 +219,24 @@ fn handle_surrogate_request(
             .to_string(),
     };
     let resp = match req {
-        // The handshake answers on any daemon — it reports what this
-        // server speaks, surrogate hosted or not.
-        SurrogateRequest::Hello { version: _ } => {
-            SurrogateResponse::HelloOk { version: PROTOCOL_VERSION }
+        // The handshake answers on any daemon — it reports the
+        // *negotiated* version, min(client, server), so an old peer
+        // keeps speaking its own protocol (single-objective tells)
+        // against a newer daemon instead of being refused.
+        SurrogateRequest::Hello { version } => {
+            SurrogateResponse::HelloOk { version: version.min(PROTOCOL_VERSION) }
         }
-        SurrogateRequest::TellObs { x, y } => match &shared.surrogate {
+        SurrogateRequest::TellObs { x, y, ys } => match &shared.surrogate {
             Some(s) => {
                 // Fire-and-forget: queue into the served factor (enqueue
                 // order across connections = arrival order here) and send
-                // no response, so tells never stall the teller.
-                s.tell(x, y);
+                // no response, so tells never stall the teller. Secondary
+                // objective columns (v3) ride into the store with the row;
+                // a v2 teller simply contributes single-objective rows.
+                let mut all = Vec::with_capacity(1 + ys.len());
+                all.push(y);
+                all.extend(ys);
+                s.tell_multi(x, all);
                 return true;
             }
             None => no_factor(),
@@ -509,8 +516,17 @@ mod tests {
             proto::decode_surrogate_response(line.trim_end()).unwrap()
         }
 
-        // Handshake reports the server's protocol version.
+        // Handshake negotiates min(client, server): a v2 client is
+        // answered at v2, a current client at the server's version.
         match roundtrip(&mut s, &mut reader, &SurrogateRequest::Hello { version: 2 }) {
+            SurrogateResponse::HelloOk { version } => assert_eq!(version, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        match roundtrip(
+            &mut s,
+            &mut reader,
+            &SurrogateRequest::Hello { version: PROTOCOL_VERSION },
+        ) {
             SurrogateResponse::HelloOk { version } => assert_eq!(version, PROTOCOL_VERSION),
             other => panic!("unexpected {other:?}"),
         }
@@ -520,7 +536,11 @@ mod tests {
             writeln!(
                 s,
                 "{}",
-                proto::encode_surrogate_request(&SurrogateRequest::TellObs { x, y })
+                proto::encode_surrogate_request(&SurrogateRequest::TellObs {
+                    x,
+                    y,
+                    ys: Vec::new()
+                })
             )
             .unwrap();
         }

@@ -51,15 +51,35 @@
 //! daemon drops a connection's leases when it closes, which is how a
 //! crashed tuner's constant-liar fantasies expire. f64 values survive the
 //! wire bit-exactly (shortest-round-trip encode, correctly-rounded parse).
+//!
+//! # Multi-objective columns (protocol v3)
+//!
+//! [`PROTOCOL_VERSION`] 3 lets observations carry K objective columns:
+//! `tell-obs` and each `factor-delta` row gain an optional `"ys"` array
+//! holding the *secondary* columns (the primary stays in `"y"`), e.g.
+//!
+//! ```text
+//! -> {"type":"tell-obs","x":[...],"y":<f64>,"ys":[<f64>|null,...]}
+//! <- ... "rows":[{"x":[...],"y":..,"ys":[..]},...] ...
+//! ```
+//!
+//! `null` inside `"ys"` marks a declared column that trial could not
+//! measure (NaN in memory — NaN is not representable in JSON); consumers
+//! degrade that row to the columns it does carry. The handshake
+//! negotiates down: `hello-ok` answers `min(client, server)` versions, so
+//! a v2 peer keeps working single-objective — a v2 sender simply never
+//! writes `"ys"`, and a v2 receiver ignores the unknown key.
 
 use crate::gp::{GpHyper, KernelKind, SurrogateDelta, UNBOUNDED_HISTORY};
 use crate::space::{Config, SearchSpace};
 use crate::util::json::{parse, Json};
 
 /// Wire-protocol version: 1 was the implicit evaluate-only protocol, 2
-/// adds the handshake and the surrogate plane. Peers exchange versions via
-/// `hello`/`hello-ok`; a replica refuses a mismatched service.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// adds the handshake and the surrogate plane, 3 adds K-objective target
+/// columns on `tell-obs` / `factor-delta` rows. Peers negotiate the
+/// *minimum* of their versions via `hello`/`hello-ok`: a v2 peer against
+/// a v3 daemon keeps working, single-objective.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Parsed request.
 #[derive(Debug, Clone, PartialEq)]
@@ -184,7 +204,11 @@ pub enum SurrogateRequest {
     /// Protocol-version handshake.
     Hello { version: u32 },
     /// Fire-and-forget observation append (no response on success).
-    TellObs { x: Vec<f64>, y: f64 },
+    /// `ys` holds the secondary objective columns (v3; empty =
+    /// single-objective, the only form a v2 peer sends). NaN entries
+    /// mark declared columns this trial could not measure and travel as
+    /// JSON `null`.
+    TellObs { x: Vec<f64>, y: f64, ys: Vec<f64> },
     /// Catch-up request: everything past the replica's `from_n` rows.
     SyncFactor { from_n: usize },
     /// Publish this connection's in-flight `(x, lie)` points as a lease.
@@ -292,6 +316,72 @@ fn points_from_json(j: &Json, value_key: &str) -> Result<Vec<(Vec<f64>, f64)>, S
         .collect()
 }
 
+/// Secondary objective columns: NaN (a declared-but-missing column) is
+/// not valid JSON, so it travels as `null` and decodes back to NaN.
+fn ys_to_json(ys: &[f64]) -> Json {
+    Json::Arr(
+        ys.iter()
+            .map(|&v| if v.is_finite() { Json::Num(v) } else { Json::Null })
+            .collect(),
+    )
+}
+
+fn ys_from_json(j: &Json) -> Result<Vec<f64>, String> {
+    j.as_arr()
+        .ok_or_else(|| "expected an array of objective columns".to_string())?
+        .iter()
+        .map(|v| match v {
+            // Only null means "column not measured" (NaN in memory);
+            // any other non-number is a producer bug and must surface
+            // as a decode error, exactly like every other f64 field.
+            Json::Null => Ok(f64::NAN),
+            other => other
+                .as_f64()
+                .ok_or_else(|| "objective column must be a number or null".to_string()),
+        })
+        .collect()
+}
+
+/// Observation rows with their per-row secondary columns: each row is
+/// `{"x":..,"y":..}` plus `"ys"` when that row carries extras.
+fn rows_to_json(rows: &[(Vec<f64>, f64)], extras: &[Vec<f64>]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .enumerate()
+            .map(|(i, (x, y))| {
+                let mut pairs = vec![("x", Json::from_f64s(x)), ("y", (*y).into())];
+                if let Some(e) = extras.get(i) {
+                    if !e.is_empty() {
+                        pairs.push(("ys", ys_to_json(e)));
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect(),
+    )
+}
+
+#[allow(clippy::type_complexity)]
+fn rows_from_json(j: &Json) -> Result<(Vec<(Vec<f64>, f64)>, Vec<Vec<f64>>), String> {
+    let arr = j.as_arr().ok_or_else(|| "expected an array of rows".to_string())?;
+    let mut rows = Vec::with_capacity(arr.len());
+    let mut extras = Vec::with_capacity(arr.len());
+    for p in arr {
+        let x = f64_vec(p.req("x").map_err(|e| e.to_string())?)?;
+        rows.push((x, req_f64(p, "y")?));
+        extras.push(match p.get("ys") {
+            Some(v) => ys_from_json(v)?,
+            None => Vec::new(),
+        });
+    }
+    // Canonical form for all-single-objective deltas (what a v2 peer
+    // sends): no extras vector at all.
+    if extras.iter().all(Vec::is_empty) {
+        extras.clear();
+    }
+    Ok((rows, extras))
+}
+
 pub fn encode_surrogate_request(req: &SurrogateRequest) -> String {
     match req {
         SurrogateRequest::Hello { version } => Json::obj(vec![
@@ -299,12 +389,17 @@ pub fn encode_surrogate_request(req: &SurrogateRequest) -> String {
             ("version", (*version as i64).into()),
         ])
         .to_string(),
-        SurrogateRequest::TellObs { x, y } => Json::obj(vec![
-            ("type", "tell-obs".into()),
-            ("x", Json::from_f64s(x)),
-            ("y", (*y).into()),
-        ])
-        .to_string(),
+        SurrogateRequest::TellObs { x, y, ys } => {
+            let mut pairs = vec![
+                ("type", "tell-obs".into()),
+                ("x", Json::from_f64s(x)),
+                ("y", (*y).into()),
+            ];
+            if !ys.is_empty() {
+                pairs.push(("ys", ys_to_json(ys)));
+            }
+            Json::obj(pairs).to_string()
+        }
         SurrogateRequest::SyncFactor { from_n } => Json::obj(vec![
             ("type", "sync-factor".into()),
             ("from_n", (*from_n).into()),
@@ -339,6 +434,10 @@ pub fn decode_surrogate_request(line: &str) -> Result<SurrogateRequest, String> 
         Some("tell-obs") => Ok(SurrogateRequest::TellObs {
             x: f64_vec(j.req("x").map_err(|e| e.to_string())?)?,
             y: req_f64(&j, "y")?,
+            ys: match j.get("ys") {
+                Some(v) => ys_from_json(v)?,
+                None => Vec::new(),
+            },
         }),
         Some("sync-factor") => {
             Ok(SurrogateRequest::SyncFactor { from_n: req_usize(&j, "from_n")? })
@@ -366,7 +465,7 @@ pub fn encode_surrogate_response(resp: &SurrogateResponse) -> String {
             ("from_n", d.from_n.into()),
             ("total_n", d.total_n.into()),
             ("hyper", hyper_to_json(&d.hyper)),
-            ("rows", points_to_json(&d.rows, "y")),
+            ("rows", rows_to_json(&d.rows, &d.extras)),
             (
                 "factor",
                 match &d.factor {
@@ -411,11 +510,13 @@ pub fn decode_surrogate_response(line: &str) -> Result<SurrogateResponse, String
                 None | Some(Json::Null) => None,
                 Some(v) => Some(f64_vec(v)?),
             };
+            let (rows, extras) = rows_from_json(j.req("rows").map_err(|e| e.to_string())?)?;
             Ok(SurrogateResponse::FactorDelta(SurrogateDelta {
                 from_n: req_usize(&j, "from_n")?,
                 total_n: req_usize(&j, "total_n")?,
                 hyper: hyper_from_json(j.req("hyper").map_err(|e| e.to_string())?)?,
-                rows: points_from_json(j.req("rows").map_err(|e| e.to_string())?, "y")?,
+                rows,
+                extras,
                 factor,
                 leases: points_from_json(j.req("leases").map_err(|e| e.to_string())?, "lie")?,
             }))
@@ -512,7 +613,12 @@ mod tests {
         let hyper = GpHyper { lengthscale: 0.35, max_history: 32, ..GpHyper::default() };
         for req in [
             SurrogateRequest::Hello { version: PROTOCOL_VERSION },
-            SurrogateRequest::TellObs { x: vec![0.25, 0.5, 1.0], y: -3.125 },
+            SurrogateRequest::TellObs { x: vec![0.25, 0.5, 1.0], y: -3.125, ys: Vec::new() },
+            SurrogateRequest::TellObs {
+                x: vec![0.25, 0.5],
+                y: 2.0,
+                ys: vec![-1.5, 0.625],
+            },
             SurrogateRequest::SyncFactor { from_n: 17 },
             SurrogateRequest::AskLease { points: vec![(vec![0.1, 0.9], 0.0)] },
             SurrogateRequest::AskLease { points: Vec::new() },
@@ -531,6 +637,7 @@ mod tests {
             total_n: 4,
             hyper: GpHyper::default(),
             rows: vec![(vec![0.5, 0.25], 1.5), (vec![0.125, 0.75], -0.5)],
+            extras: vec![vec![-2.5], Vec::new()],
             factor: Some(vec![1.0, 0.5, 0.875, 0.25, 0.125, 1.5, 0.0]),
             leases: vec![(vec![0.3, 0.3], 0.0)],
         };
@@ -569,6 +676,60 @@ mod tests {
         assert!(decode_surrogate_request(r#"{"type":"tell-obs","x":"nope","y":1}"#).is_err());
         assert!(decode_surrogate_response(r#"{"type":"factor-delta"}"#).is_err());
         assert!(decode_surrogate_request(r#"{"type":"sync-factor","from_n":-1}"#).is_err());
+        assert!(
+            decode_surrogate_request(r#"{"type":"tell-obs","x":[0.5],"y":1,"ys":7}"#).is_err(),
+            "non-array ys must be refused"
+        );
+        assert!(
+            decode_surrogate_request(r#"{"type":"tell-obs","x":[0.5],"y":1,"ys":["1.5"]}"#)
+                .is_err(),
+            "a non-numeric column is a producer bug, not a NaN"
+        );
+    }
+
+    #[test]
+    fn nan_objective_column_travels_as_null() {
+        // A declared-but-unmeasured column is NaN in memory; JSON cannot
+        // represent NaN, so it rides as null and decodes back to NaN —
+        // the degradation marker survives the wire.
+        let req = SurrogateRequest::TellObs {
+            x: vec![0.5, 0.25],
+            y: 3.0,
+            ys: vec![f64::NAN, -1.25],
+        };
+        let line = encode_surrogate_request(&req);
+        assert!(line.contains("null"), "line: {line}");
+        match decode_surrogate_request(&line).unwrap() {
+            SurrogateRequest::TellObs { y, ys, .. } => {
+                assert_eq!(y, 3.0);
+                assert!(ys[0].is_nan());
+                assert_eq!(ys[1], -1.25);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_lines_still_decode_single_objective() {
+        // A v2 peer never writes "ys": the v3 decoder must accept its
+        // lines unchanged (empty extras everywhere).
+        match decode_surrogate_request(r#"{"type":"tell-obs","x":[0.5,0.25],"y":1.5}"#).unwrap()
+        {
+            SurrogateRequest::TellObs { ys, .. } => assert!(ys.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+        let line = r#"{"type":"factor-delta","from_n":0,"total_n":1,
+            "hyper":{"lengthscale":0.2,"signal_var":1.0,"noise_var":0.001,
+                     "kernel":"rbf","max_history":64},
+            "rows":[{"x":[0.5,0.5],"y":2.0}],"factor":null,"leases":[]}"#
+            .replace('\n', "");
+        match decode_surrogate_response(&line).unwrap() {
+            SurrogateResponse::FactorDelta(d) => {
+                assert_eq!(d.rows.len(), 1);
+                assert!(d.extras.is_empty(), "v2 delta decodes with no extras");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]
@@ -581,12 +742,19 @@ mod tests {
                 .map(|_| (rng.f64() - 0.5) * 10f64.powi(rng.range_i64(-12, 12) as i32))
                 .collect();
             let y = (rng.f64() - 0.5) * 1e6;
-            let req = SurrogateRequest::TellObs { x: x.clone(), y };
+            let ys: Vec<f64> = (0..rng.index(3))
+                .map(|_| (rng.f64() - 0.5) * 10f64.powi(rng.range_i64(-12, 12) as i32))
+                .collect();
+            let req = SurrogateRequest::TellObs { x: x.clone(), y, ys: ys.clone() };
             match decode_surrogate_request(&encode_surrogate_request(&req)).unwrap() {
-                SurrogateRequest::TellObs { x: x2, y: y2 } => {
+                SurrogateRequest::TellObs { x: x2, y: y2, ys: ys2 } => {
                     assert_eq!(y.to_bits(), y2.to_bits());
                     for (a, b) in x.iter().zip(&x2) {
                         assert_eq!(a.to_bits(), b.to_bits(), "{a} re-decoded as {b}");
+                    }
+                    assert_eq!(ys.len(), ys2.len());
+                    for (a, b) in ys.iter().zip(&ys2) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "column {a} re-decoded as {b}");
                     }
                 }
                 other => panic!("unexpected {other:?}"),

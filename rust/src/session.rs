@@ -49,6 +49,7 @@ use crate::algorithms::{BayesOpt, Trial, Tuner};
 use crate::evaluator::Evaluator;
 use crate::gp::{GpHyper, RemoteSurrogate, SharedSurrogate};
 use crate::history::{History, Measurement};
+use crate::objectives::ObjectiveSet;
 use crate::space::SearchSpace;
 
 /// Plateau stop: end the run after `window` consecutive completed trials
@@ -176,6 +177,11 @@ pub struct TuningSession {
     budget: Budget,
     on_trial: Option<TrialCallback>,
     stop_reason: Option<StopReason>,
+    /// Declared objective set of a multi-objective run: every completed
+    /// trial's K-objective vector is extracted and recorded in the
+    /// [`History`], so Pareto fronts and hypervolume curves are readable
+    /// straight off the returned history.
+    objectives: Option<ObjectiveSet>,
 }
 
 impl TuningSession {
@@ -184,7 +190,14 @@ impl TuningSession {
         evaluators: Vec<Box<dyn Evaluator + Send>>,
         budget: Budget,
     ) -> TuningSession {
-        TuningSession { tuner, evaluators, budget, on_trial: None, stop_reason: None }
+        TuningSession {
+            tuner,
+            evaluators,
+            budget,
+            on_trial: None,
+            stop_reason: None,
+            objectives: None,
+        }
     }
 
     /// Stream every completed trial through `callback`.
@@ -193,6 +206,17 @@ impl TuningSession {
         callback: impl FnMut(&Trial, &Measurement) + Send + 'static,
     ) -> Self {
         self.on_trial = Some(Box::new(callback));
+        self
+    }
+
+    /// Record each completed trial's objective vector (extracted via
+    /// `objectives.extract`, maximisation orientation) into the returned
+    /// history — [`History::pareto_front`] / [`History::hypervolume`]
+    /// then work out of the box. Pair this with a tuner built by
+    /// `BayesOpt::with_objectives` so the engine optimises the same set
+    /// it records.
+    pub fn with_objectives(mut self, objectives: ObjectiveSet) -> Self {
+        self.objectives = Some(objectives);
         self
     }
 
@@ -265,7 +289,11 @@ impl TuningSession {
             );
             self.tuner.tell(trial.id, &m);
             tracker.record(m.value);
-            history.push_trial(trial.id, trial.config.clone(), &m);
+            let objectives = match &self.objectives {
+                Some(set) => set.extract(&m).0,
+                None => Vec::new(),
+            };
+            history.push_trial_multi(trial.id, trial.config.clone(), &m, objectives);
             if let Some(cb) = &mut self.on_trial {
                 cb(&trial, &m);
             }
@@ -279,6 +307,7 @@ impl TuningSession {
         let budget = self.budget.clone();
         let tuner = &mut self.tuner;
         let on_trial = &mut self.on_trial;
+        let objectives = self.objectives.clone();
         let evaluators = &mut self.evaluators;
 
         std::thread::scope(|scope| -> Result<(History, StopReason)> {
@@ -358,7 +387,11 @@ impl TuningSession {
                 };
                 tuner.tell(trial.id, &m);
                 tracker.record(m.value);
-                history.push_trial(trial.id, trial.config.clone(), &m);
+                let obj_vec = match &objectives {
+                    Some(set) => set.extract(&m).0,
+                    None => Vec::new(),
+                };
+                history.push_trial_multi(trial.id, trial.config.clone(), &m, obj_vec);
                 if let Some(cb) = on_trial.as_mut() {
                     cb(&trial, &m);
                 }

@@ -1,0 +1,353 @@
+//! Multi-objective acquisition pins (ISSUE 5):
+//!
+//! 1. K-objective panel scoring against K independent single-objective
+//!    `IncrementalGp`s — one factor, K target columns, panel passes, not
+//!    refits — to ≤1e-9 (bit-equal in practice), with the factor proven
+//!    untouched by the pass.
+//! 2. Scalarisation invariances: permuting weights together with
+//!    objectives leaves the gain unchanged, and a candidate whose
+//!    optimistic vector is dominated never has the best scalarised gain.
+//!    A dominated optimistic point also has zero SMSego hypervolume gain.
+//! 3. Bitwise fantasy extend/retract round trip with vector-valued
+//!    fantasies (per-objective lies in the target columns).
+//! 4. End-to-end Pareto: a synthetic bi-objective target with a known
+//!    analytic trade-off, tuned via `TuningSession` — the hypervolume of
+//!    the history's non-dominated front is non-decreasing over
+//!    checkpoints, and the SMSego session's final front beats random
+//!    search at equal budget.
+
+use tftune::algorithms::BayesOpt;
+use tftune::evaluator::Evaluator;
+use tftune::gp::{GpHyper, IncrementalGp, ScoreWorkspace};
+use tftune::history::Measurement;
+use tftune::objectives::{dominates, hypervolume, weighted_gain, ObjectiveSet, Scalarization};
+use tftune::session::{Budget, TuningSession};
+use tftune::space::{threading_space, Config, SearchSpace};
+use tftune::util::prop;
+use tftune::util::Rng;
+
+fn rand_rows(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f64>> {
+    (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect()
+}
+
+#[test]
+fn prop_k_objective_panel_matches_independent_models() {
+    prop::check("k-objective panel vs independent models", 25, |rng| {
+        let n = 5 + rng.index(25);
+        let d = 2 + rng.index(4);
+        let k = 2 + rng.index(2); // 2 or 3 objectives
+        let c = 1 + rng.index(12);
+        let hyper = GpHyper::default();
+        let x = rand_rows(rng, n, d);
+        let targets: Vec<Vec<f64>> = (0..k)
+            .map(|kk| {
+                x.iter()
+                    .map(|p| (3.0 * p[0] + kk as f64).sin() - 0.2 * p[d - 1])
+                    .collect()
+            })
+            .collect();
+        let cand_rows = rand_rows(rng, c, d);
+        let cand_flat: Vec<f64> = cand_rows.iter().flatten().copied().collect();
+
+        // ONE factor: built once, scored with K target columns.
+        let mut joint = IncrementalGp::new(hyper);
+        for (xi, y0) in x.iter().zip(&targets[0]) {
+            assert!(joint.push(xi, *y0));
+        }
+        let factor_before: Vec<u64> =
+            joint.factor_suffix(0).iter().map(|v| v.to_bits()).collect();
+        let refs: Vec<&[f64]> = targets.iter().map(|t| t.as_slice()).collect();
+        let mut ws = ScoreWorkspace::default();
+        joint.score_multi_into(&cand_flat, c, &refs, &mut ws);
+        assert_eq!(ws.n_obj, k);
+
+        // The pass performed zero refits/appends: the factor is
+        // bit-identical to the state before scoring.
+        let factor_after: Vec<u64> =
+            joint.factor_suffix(0).iter().map(|v| v.to_bits()).collect();
+        assert_eq!(factor_before, factor_after, "multi pass mutated the factor");
+
+        // K independent single-objective models (their own factors,
+        // their own refits) must agree to ≤1e-9 per objective.
+        for (kk, tk) in targets.iter().enumerate() {
+            let mut solo = IncrementalGp::new(hyper);
+            for (xi, yk) in x.iter().zip(tk) {
+                assert!(solo.push(xi, *yk));
+            }
+            let mut ws_solo = ScoreWorkspace::default();
+            solo.score_into(&cand_flat, c, 1.5, 0.0, &mut ws_solo);
+            for j in 0..c {
+                assert!(
+                    (ws.mean_obj[kk * c + j] - ws_solo.mean[j]).abs() <= 1e-9,
+                    "objective {kk} mean diverged at candidate {j}: {} vs {}",
+                    ws.mean_obj[kk * c + j],
+                    ws_solo.mean[j]
+                );
+                assert!(
+                    (ws.std[j] - ws_solo.std[j]).abs() <= 1e-9,
+                    "shared std diverged at candidate {j}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_weight_permutation_matches_objective_permutation() {
+    prop::check("scalarisation permutation invariance", 200, |rng| {
+        let k = 2 + rng.index(3); // 2..=4
+        let w: Vec<f64> = (0..k).map(|_| 0.05 + rng.f64()).collect();
+        let opt: Vec<f64> = (0..k).map(|_| (rng.f64() - 0.5) * 6.0).collect();
+        let best: Vec<f64> = (0..k).map(|_| (rng.f64() - 0.5) * 2.0).collect();
+        // random permutation (Fisher–Yates)
+        let mut perm: Vec<usize> = (0..k).collect();
+        for i in (1..k).rev() {
+            let j = rng.index(i + 1);
+            perm.swap(i, j);
+        }
+        let g = weighted_gain(&w, &opt, &best);
+        let wp: Vec<f64> = perm.iter().map(|&i| w[i]).collect();
+        let op: Vec<f64> = perm.iter().map(|&i| opt[i]).collect();
+        let bp: Vec<f64> = perm.iter().map(|&i| best[i]).collect();
+        let gp = weighted_gain(&wp, &op, &bp);
+        assert!(
+            (g - gp).abs() <= 1e-9 * (1.0 + g.abs()),
+            "permuting weights with objectives changed the gain: {g} vs {gp}"
+        );
+    });
+}
+
+#[test]
+fn prop_dominated_candidates_never_have_the_best_scalarised_gain() {
+    prop::check("dominated never argmax", 100, |rng| {
+        let k = 2 + rng.index(2);
+        let n_cand = 4 + rng.index(20);
+        let w: Vec<f64> = (0..k).map(|_| 0.05 + rng.f64()).collect();
+        let best = vec![0.0; k];
+        let cands: Vec<Vec<f64>> =
+            (0..n_cand).map(|_| (0..k).map(|_| (rng.f64() - 0.5) * 4.0).collect()).collect();
+        let gains: Vec<f64> = cands.iter().map(|o| weighted_gain(&w, o, &best)).collect();
+        let argmax = (0..n_cand)
+            .max_by(|&a, &b| gains[a].total_cmp(&gains[b]))
+            .unwrap();
+        for (i, c) in cands.iter().enumerate() {
+            assert!(
+                i == argmax || !dominates(c, &cands[argmax]),
+                "candidate {i} dominates the scalarised argmax {argmax}"
+            );
+        }
+    });
+}
+
+#[test]
+fn dominated_optimistic_point_has_zero_hypervolume_gain() {
+    // SMSego's gain for a candidate whose optimistic vector is inside
+    // the region the front already dominates must be exactly zero.
+    let front = vec![vec![1.0, 3.0], vec![3.0, 1.0]];
+    let r = [0.0, 0.0];
+    let base = hypervolume(&front, &r);
+    for dominated in [vec![0.5, 0.5], vec![1.0, 3.0], vec![2.9, 0.9]] {
+        let mut with = front.clone();
+        with.push(dominated.clone());
+        let gain = hypervolume(&with, &r) - base;
+        assert!(
+            gain.abs() < 1e-12,
+            "dominated optimistic point {dominated:?} gained {gain}"
+        );
+    }
+    // ...while a genuinely non-dominated point gains volume.
+    let mut with = front.clone();
+    with.push(vec![2.0, 2.0]);
+    assert!(hypervolume(&with, &r) - base > 0.5);
+}
+
+#[test]
+fn vector_fantasy_extend_retract_is_bitwise() {
+    // Vector-valued fantasies: fantasy rows enter the factor once (the
+    // factor depends only on X) while each objective column carries its
+    // own lie. Retraction must restore the exact pre-extend state —
+    // factor bits and K-objective posterior bits.
+    let mut rng = Rng::new(51);
+    let hyper = GpHyper::default();
+    let (n, d, c, k) = (14usize, 3usize, 6usize, 2usize);
+    let x = rand_rows(&mut rng, n, d);
+    let targets: Vec<Vec<f64>> = (0..k)
+        .map(|kk| x.iter().map(|p| p[0] * (kk + 1) as f64 - 0.5 * p[1]).collect())
+        .collect();
+    let cand: Vec<f64> = (0..c * d).map(|_| rng.f64()).collect();
+
+    let mut gp = IncrementalGp::new(hyper);
+    for (xi, y0) in x.iter().zip(&targets[0]) {
+        assert!(gp.push(xi, *y0));
+    }
+    let refs: Vec<&[f64]> = targets.iter().map(|t| t.as_slice()).collect();
+    let mut before = ScoreWorkspace::default();
+    gp.score_multi_into(&cand, c, &refs, &mut before);
+    let factor_before: Vec<u64> = gp.factor_suffix(0).iter().map(|v| v.to_bits()).collect();
+
+    // Extend three fantasies; each objective column gets its own lie.
+    let mut padded: Vec<Vec<f64>> = targets.clone();
+    for f in 0..3 {
+        let xf: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        assert!(gp.extend_fantasy(&xf, 0.0));
+        for (kk, col) in padded.iter_mut().enumerate() {
+            col.push(0.1 * (f as f64 + 1.0) * if kk == 0 { 1.0 } else { -1.0 });
+        }
+    }
+    assert_eq!(gp.total(), n + 3);
+    let refs_pad: Vec<&[f64]> = padded.iter().map(|t| t.as_slice()).collect();
+    let mut during = ScoreWorkspace::default();
+    gp.score_multi_into(&cand, c, &refs_pad, &mut during);
+    // Conditioning on the fantasies must actually change the posterior
+    // (otherwise this test pins nothing).
+    assert!(
+        (0..c).any(|j| during.std[j].to_bits() != before.std[j].to_bits()),
+        "fantasies did not condition the model"
+    );
+
+    gp.retract_fantasies();
+    assert_eq!(gp.total(), n);
+    let factor_after: Vec<u64> = gp.factor_suffix(0).iter().map(|v| v.to_bits()).collect();
+    assert_eq!(factor_before, factor_after, "retract did not restore the factor bitwise");
+    let mut after = ScoreWorkspace::default();
+    gp.score_multi_into(&cand, c, &refs, &mut after);
+    for j in 0..c {
+        for kk in 0..k {
+            assert_eq!(
+                before.mean_obj[kk * c + j].to_bits(),
+                after.mean_obj[kk * c + j].to_bits(),
+                "objective {kk} mean not restored bitwise at candidate {j}"
+            );
+        }
+        assert_eq!(before.std[j].to_bits(), after.std[j].to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end Pareto: synthetic bi-objective target with a known front.
+// ---------------------------------------------------------------------------
+
+/// Analytic bi-objective target over the unit cube: `u[0]` trades
+/// throughput against p99 (the known front lies along it), and every
+/// other coordinate penalises *both* objectives away from 0.75 — so a
+/// tuner must drive the penalty to zero to reach the front, while random
+/// search almost always carries positive penalty.
+struct BiObjectiveTarget {
+    space: SearchSpace,
+}
+
+impl BiObjectiveTarget {
+    fn penalty(u: &[f64]) -> f64 {
+        u[1..].iter().map(|&v| (v - 0.75) * (v - 0.75)).sum::<f64>()
+    }
+
+    fn throughput(u: &[f64]) -> f64 {
+        10.0 * u[0] + 5.0 - 4.0 * Self::penalty(u)
+    }
+
+    fn p99(u: &[f64]) -> f64 {
+        2.0 + 8.0 * u[0] * u[0] + 4.0 * Self::penalty(u)
+    }
+}
+
+impl Evaluator for BiObjectiveTarget {
+    fn evaluate(&mut self, config: &Config) -> anyhow::Result<f64> {
+        Ok(Self::throughput(&self.space.to_unit(config)))
+    }
+
+    fn measure(&mut self, config: &Config) -> anyhow::Result<Measurement> {
+        let u = self.space.to_unit(config);
+        Ok(Measurement::new(Self::throughput(&u)).with_metadata("p99", Self::p99(&u)))
+    }
+
+    fn describe(&self) -> String {
+        "synthetic-bi-objective".into()
+    }
+}
+
+/// Reference point safely below every reachable (throughput, −p99)
+/// vector: tp ∈ (−inf, 15], −p99 ∈ [−10 − 4·p_max, −2], p_max ≤ 4·0.75².
+const HV_REF: [f64; 2] = [0.0, -30.0];
+
+fn run_session(seed: u64, smsego: bool, evals: usize) -> tftune::History {
+    let space = threading_space(64, 1024, 64);
+    let set = ObjectiveSet::parse("throughput,p99:min").unwrap();
+    let tuner: Box<dyn tftune::algorithms::Tuner + Send> = if smsego {
+        Box::new(
+            BayesOpt::new(space.clone(), seed).with_objectives(set.clone(), Scalarization::Smsego),
+        )
+    } else {
+        Box::new(tftune::algorithms::RandomSearch::new(space.clone(), seed))
+    };
+    let mut session = TuningSession::new(
+        tuner,
+        vec![Box::new(BiObjectiveTarget { space })],
+        Budget::evaluations(evals),
+    )
+    .with_objectives(set);
+    session.run().unwrap()
+}
+
+/// Hypervolume of the front over the first `n` evaluations.
+fn hv_prefix(h: &tftune::History, n: usize) -> f64 {
+    let pts: Vec<Vec<f64>> =
+        h.iter().take(n).map(|e| e.objectives.clone()).collect();
+    hypervolume(&pts, &HV_REF)
+}
+
+#[test]
+fn pareto_session_hypervolume_grows_and_beats_random_search() {
+    let evals = 40;
+    let mut bo_wins = 0;
+    let seeds = [11u64, 12, 13];
+    for &seed in &seeds {
+        let bo = run_session(seed, true, evals);
+        assert_eq!(bo.len(), evals);
+        // Every record carries the extracted 2-objective vector
+        // (maximisation orientation: p99 negated).
+        for e in bo.iter() {
+            assert_eq!(e.objectives.len(), 2);
+            assert_eq!(e.objectives[0], e.value);
+            assert!(e.objectives[1] <= -2.0, "p99 column not negated: {:?}", e.objectives);
+        }
+        // Checkpointed hypervolume is non-decreasing.
+        let mut prev = 0.0;
+        for n in [5, 10, 20, 30, evals] {
+            let hv = hv_prefix(&bo, n);
+            assert!(
+                hv >= prev - 1e-12,
+                "seed {seed}: hypervolume shrank at checkpoint {n}: {hv} < {prev}"
+            );
+            prev = hv;
+        }
+        assert!(prev > 0.0, "seed {seed}: empty dominated region");
+
+        let rs = run_session(seed, false, evals);
+        let hv_bo = bo.hypervolume(&HV_REF);
+        let hv_rs = rs.hypervolume(&HV_REF);
+        if hv_bo > hv_rs {
+            bo_wins += 1;
+        }
+    }
+    assert!(
+        bo_wins >= 2,
+        "multi-objective BO dominated random search on only {bo_wins}/{} seeds",
+        seeds.len()
+    );
+}
+
+#[test]
+fn pareto_session_front_spreads_along_the_trade_off() {
+    // The known front lies along u[0] with zero penalty: the SMSego
+    // session's final non-dominated set should hold several points, not
+    // collapse onto a single throughput-optimal corner.
+    let h = run_session(17, true, 40);
+    let front = h.pareto_front();
+    assert!(front.len() >= 2, "front collapsed: {} points", front.len());
+    // Every front point's objectives are consistent with the analytic
+    // target (tp ≤ 15, p99 ≥ 2 ⇒ −p99 ≤ −2).
+    for e in &front {
+        assert!(e.objectives[0] <= 15.0 + 1e-9);
+        assert!(e.objectives[1] <= -2.0 + 1e-9);
+    }
+}

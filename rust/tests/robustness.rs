@@ -163,6 +163,93 @@ fn bo_invariant_to_objective_scale() {
     }
 }
 
+/// A trial whose measurement is missing a declared objective column (or
+/// carries NaN) degrades that trial to its measured columns — the engine
+/// keeps proposing, the shared factor is never poisoned, and fully
+/// measured rows still drive the multi-objective acquisition.
+#[test]
+fn missing_or_nan_objective_column_degrades_the_trial_not_the_run() {
+    use tftune::objectives::{ObjectiveSet, Scalarization};
+    let space = ModelId::NcfFp32.space();
+    let set = ObjectiveSet::parse("throughput,p99:min").unwrap();
+    for scalarize in [Scalarization::Weighted(vec![0.5, 0.5]), Scalarization::Smsego] {
+        let mut bo = tftune::algorithms::BayesOpt::new(space.clone(), 41)
+            .with_objectives(set.clone(), scalarize);
+        for i in 0..24 {
+            let Some(trial) = bo.ask(1).pop() else { panic!("engine stopped issuing") };
+            assert!(space.contains(&trial.config));
+            let v = 100.0 + (i as f64 * 0.7).sin() * 10.0;
+            let m = match i % 3 {
+                0 => Measurement::new(v), // declared column absent
+                1 => Measurement::new(v).with_metadata("p99", f64::NAN), // poisoned column
+                _ => Measurement::new(v).with_metadata("p99", 5.0 + (i as f64) * 0.1),
+            };
+            bo.tell(trial.id, &m);
+        }
+        // The factor stayed healthy: a fresh batch still scores.
+        let batch = bo.ask(4);
+        assert_eq!(batch.len(), 4);
+        for t in &batch {
+            assert!(space.contains(&t.config));
+        }
+    }
+}
+
+/// The same degradation over the wire: `tell-obs` rows whose `ys` column
+/// is `null` (NaN in memory) or absent entirely must land in a served
+/// factor as degraded rows — siblings keep syncing, nothing panics.
+#[test]
+fn degraded_objective_columns_survive_the_surrogate_wire() {
+    use std::io::{BufRead, BufReader, Write};
+    use tftune::gp::{GpHyper, RemoteSurrogate, SurrogateHandle};
+    use tftune::server::proto::{decode_surrogate_response, SurrogateResponse};
+
+    let (server, factor) =
+        TargetServer::bind_surrogate_only("127.0.0.1:0", GpHyper::default()).unwrap();
+    let (addr, handle) = server.spawn().unwrap();
+
+    // Raw v3 lines: a full row, a null (NaN) column, and a bare v2 row.
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    writeln!(s, r#"{{"type":"tell-obs","x":[0.2,0.2],"y":1.0,"ys":[-4.0]}}"#).unwrap();
+    writeln!(s, r#"{{"type":"tell-obs","x":[0.5,0.5],"y":2.0,"ys":[null]}}"#).unwrap();
+    writeln!(s, r#"{{"type":"tell-obs","x":[0.8,0.8],"y":3.0}}"#).unwrap();
+    writeln!(s, r#"{{"type":"sync-factor","from_n":0}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    match decode_surrogate_response(line.trim_end()).unwrap() {
+        SurrogateResponse::FactorDelta(d) => {
+            assert_eq!(d.total_n, 3);
+            assert_eq!(d.extras.len(), 3);
+            assert_eq!(d.extras[0], vec![-4.0]);
+            assert!(d.extras[1][0].is_nan(), "null column must decode to NaN");
+            assert!(d.extras[2].is_empty());
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(factor.len(), 3, "degraded rows must still land in the store");
+
+    // A replica syncing the degraded store conditions and scores fine.
+    let replica = RemoteSurrogate::connect(&addr.to_string()).unwrap();
+    let mut g = replica.lock();
+    assert_eq!(g.len(), 3);
+    assert!(g.y_extras(1)[0].is_nan());
+    let idx = g.conditioning_set();
+    assert!(g.sync(&idx), "factor must stay PD under degraded columns");
+    drop(g);
+    drop(replica);
+    drop(s);
+    drop(reader);
+
+    // Shut the daemon down via the evaluate plane.
+    let space = ModelId::NcfFp32.space();
+    if let Ok(mut sd) = std::net::TcpStream::connect(addr) {
+        use tftune::server::proto::{encode_request, Request};
+        let _ = writeln!(sd, "{}", encode_request(&Request::Shutdown, &space));
+    }
+    let _ = handle.join();
+}
+
 /// Histories with duplicated configurations (NMS collapse) keep the GP
 /// solvable (jitter floor) — BO must not crash after mass duplicates.
 #[test]

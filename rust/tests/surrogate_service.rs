@@ -21,6 +21,7 @@ use tftune::evaluator::{sim_pool, Objective};
 use tftune::gp::{
     GpHyper, IncrementalGp, RemoteSurrogate, ScoreWorkspace, SharedSurrogate, SurrogateHandle,
 };
+use tftune::objectives::{ObjectiveSet, Scalarization};
 use tftune::server::proto::{encode_surrogate_response, SurrogateResponse};
 use tftune::server::TargetServer;
 use tftune::sim::ModelId;
@@ -285,6 +286,192 @@ fn two_tuner_sessions_match_single_process_replay() {
     }
     drop(g);
     drop(gr);
+
+    shutdown_daemon(addr);
+    let _ = handle.join();
+}
+
+#[test]
+fn two_replica_multi_objective_run_matches_single_process_replay() {
+    // Two multi-objective BO tuner sessions (their own TCP connections)
+    // share one served factor; the K objective columns ride the wire.
+    // After the run, the mirrored store replayed through a local
+    // SharedSurrogate must produce an identical K-objective posterior
+    // (≤1e-9) — same rows, same columns, same factor.
+    let model = ModelId::NcfFp32;
+    let space = model.space();
+    let set = ObjectiveSet::parse("throughput,p99_latency_ms:min").unwrap();
+    let (addr, handle, _factor) = serve_factor();
+
+    let mut group = tftune::session::SessionGroup::new();
+    for (i, seed) in [91u64, 92].into_iter().enumerate() {
+        let replica = RemoteSurrogate::connect(&addr.to_string()).unwrap();
+        let tuner = Box::new(
+            tftune::algorithms::BayesOpt::new(space.clone(), seed)
+                .with_shared_surrogate(replica)
+                .with_objectives(set.clone(), Scalarization::Weighted(vec![0.6, 0.4])),
+        );
+        group.push(
+            tftune::session::TuningSession::new(
+                tuner,
+                sim_pool(model, 900 + i as u64, 0.0, Objective::Throughput, 2),
+                tftune::session::Budget::evaluations(10),
+            )
+            .with_objectives(set.clone()),
+        );
+    }
+    let histories = group.run().unwrap();
+    let total: usize = histories.iter().map(|h| h.len()).sum();
+    assert_eq!(total, 20);
+    for h in &histories {
+        for e in h.iter() {
+            assert_eq!(e.objectives.len(), 2, "history must record the K-vector");
+        }
+    }
+
+    // Pull the canonical store (poll: final tells are fire-and-forget).
+    let reader = RemoteSurrogate::connect(&addr.to_string()).unwrap();
+    let mut seen = 0;
+    for _ in 0..2000 {
+        seen = reader.lock().len();
+        if seen == total {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(seen, total, "the served factor missed a trial");
+
+    let mut g = reader.lock();
+    // Every mirrored row carries its secondary column, bit-exact.
+    for i in 0..total {
+        assert_eq!(g.y_extras(i).len(), 1, "row {i} lost its p99 column over the wire");
+        assert!(g.y_extras(i)[0].is_finite());
+    }
+    // Single-process replay of the same rows + columns.
+    let replay = SharedSurrogate::new(g.hyper());
+    for i in 0..total {
+        let mut ys = vec![g.y(i)];
+        ys.extend_from_slice(g.y_extras(i));
+        replay.tell_multi(g.x(i).to_vec(), ys);
+    }
+    let mut gr = replay.lock();
+    assert_eq!(gr.len(), total);
+
+    let mut rng = Rng::new(93);
+    let cand: Vec<f64> = (0..4 * space.dim()).map(|_| rng.f64()).collect();
+    let (mut wa, mut wb) = (ScoreWorkspace::default(), ScoreWorkspace::default());
+    for (guard, ws) in [(&mut g, &mut wa), (&mut gr, &mut wb)] {
+        let idx = guard.conditioning_set();
+        assert!(guard.sync(&idx));
+        let t0: Vec<f64> = idx.iter().map(|&i| guard.y(i)).collect();
+        let t1: Vec<f64> = idx.iter().map(|&i| guard.y_extras(i)[0]).collect();
+        guard.score_multi_into(&cand, 4, &[&t0, &t1], ws);
+    }
+    for j in 0..4 {
+        for k in 0..2 {
+            assert!(
+                (wa.mean_obj[k * 4 + j] - wb.mean_obj[k * 4 + j]).abs() <= 1e-9,
+                "objective {k} posterior diverged from the replay at candidate {j}: {} vs {}",
+                wa.mean_obj[k * 4 + j],
+                wb.mean_obj[k * 4 + j]
+            );
+        }
+        assert!((wa.std[j] - wb.std[j]).abs() <= 1e-9);
+    }
+    drop(g);
+    drop(gr);
+    // Close every replica connection before asking the daemon to stop,
+    // so its per-connection threads see EOF and serve() can join them.
+    drop(reader);
+    drop(group);
+
+    shutdown_daemon(addr);
+    let _ = handle.join();
+}
+
+#[test]
+fn v2_client_against_v3_server_degrades_to_single_objective() {
+    // A protocol-v2 peer (raw lines, no "ys" anywhere) against the
+    // current daemon: the handshake negotiates down to v2, v2-format
+    // tells land as single-objective rows next to v3 rows, and the sync
+    // answer decodes under v2 expectations — no refusal, no panic.
+    use std::io::{BufReader, Write};
+    use tftune::server::proto::{decode_surrogate_response, PROTOCOL_VERSION};
+
+    let (addr, handle, factor) = serve_factor();
+    assert_eq!(PROTOCOL_VERSION, 3, "update this test alongside the protocol");
+
+    // A v3 tuner contributes a two-column row first.
+    factor.tell_multi(vec![0.25, 0.75], vec![1.0, -9.0]);
+
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    fn roundtrip(
+        s: &mut std::net::TcpStream,
+        reader: &mut BufReader<std::net::TcpStream>,
+        line: &str,
+    ) -> String {
+        use std::io::{BufRead, Write};
+        writeln!(s, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp.trim_end().to_string()
+    }
+
+    // v2 handshake: answered at v2, not refused.
+    let resp = roundtrip(&mut s, &mut reader, r#"{"type":"hello","version":2}"#);
+    match decode_surrogate_response(&resp).unwrap() {
+        SurrogateResponse::HelloOk { version } => assert_eq!(version, 2),
+        other => panic!("unexpected {other:?}"),
+    }
+    // v2 tell: no "ys" key at all (fire-and-forget, no response).
+    writeln!(s, r#"{{"type":"tell-obs","x":[0.5,0.5],"y":2.0}}"#).unwrap();
+    // v2 sync decodes the mixed store without tripping on the v3 row.
+    let resp = roundtrip(&mut s, &mut reader, r#"{"type":"sync-factor","from_n":0}"#);
+    match decode_surrogate_response(&resp).unwrap() {
+        SurrogateResponse::FactorDelta(d) => {
+            assert_eq!(d.total_n, 2, "both tells landed");
+            assert_eq!(d.rows[0].1, 1.0);
+            assert_eq!(d.rows[1].1, 2.0);
+            // the v3 row still carries its column; the v2 row is bare
+            assert_eq!(d.extras.len(), 2);
+            assert_eq!(d.extras[0], vec![-9.0]);
+            assert!(d.extras[1].is_empty(), "v2 tell degraded to single-objective");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    drop(s);
+    drop(reader);
+
+    shutdown_daemon(addr);
+    let _ = handle.join();
+}
+
+#[test]
+fn in_guard_hyper_selection_writes_through_to_siblings() {
+    // The ROADMAP scale-out bullet: an in-guard `ensure_hyper` on a
+    // replica (what per-ask lengthscale selection performs) must publish
+    // via `set-hyper` when the guard drops, so sibling replicas converge
+    // on one hyper instead of each selecting locally.
+    let (addr, handle, factor) = serve_factor();
+    let addr_s = addr.to_string();
+    let a = RemoteSurrogate::connect(&addr_s).unwrap();
+    let b = RemoteSurrogate::connect(&addr_s).unwrap();
+
+    let new = GpHyper { lengthscale: 0.5, ..GpHyper::default() };
+    {
+        let mut ga = a.lock();
+        ga.ensure_hyper(new);
+    } // guard drop publishes set-hyper synchronously (request/response)
+    assert_eq!(
+        factor.hyper(),
+        new,
+        "in-guard hyper change did not reach the served factor"
+    );
+    drop(b.lock()); // sibling sync adopts the authority's hypers
+    assert_eq!(b.hyper(), new, "sibling replica did not converge on the selected hyper");
+    drop(a);
+    drop(b);
 
     shutdown_daemon(addr);
     let _ = handle.join();
