@@ -4,6 +4,7 @@
 //!   - native GP fit+score vs the AOT HLO GP via PJRT (L2+L1), by history size
 //!   - shared-surrogate tell enqueue + ask under teller contention
 //!   - surrogate service: factor-delta export/encode + remote tell round trip
+//!   - persistence plane: snapshot write + cold WAL replay
 //!   - BO / GA / NMS propose cost
 //!   - candidate generation + argmax
 //!   - host/target TCP round trip
@@ -253,6 +254,54 @@ fn main() -> anyhow::Result<()> {
         (r_sync, r_tell_rt, r_tell_mo)
     };
 
+    println!("\n== persistence plane: snapshot write + WAL replay, n=512 ==");
+    let (r_snapshot_write, r_wal_replay) = {
+        use tftune::persist::{self, PersistOptions};
+        let hyper = GpHyper::default();
+
+        // snapshot_write_512: one checkpoint of a 512-row store — export
+        // under the model lock, canonical serialize, checksum, atomic
+        // temp+rename publish. The daemon's --snapshot-every steady-state
+        // cost, and the price of truncating the replayable WAL suffix.
+        let dir_snap = std::env::temp_dir().join("tftune_bench_snapshot");
+        let _ = std::fs::remove_dir_all(&dir_snap);
+        let shared = SharedSurrogate::new(hyper);
+        let mut seed_rng = Rng::new(0x5EED);
+        for _ in 0..512 {
+            let x: Vec<f64> = (0..5).map(|_| seed_rng.f64()).collect();
+            shared.tell(x, seed_rng.f64());
+        }
+        drop(shared.lock()); // drain + eager factor to n=512
+        let r_snap = b.bench("gp/snapshot_write_512", || {
+            persist::write_snapshot(&shared, &dir_snap).unwrap()
+        });
+
+        // wal_replay_512: cold recovery from a WAL-only state dir (no
+        // snapshot) — parse 512 records and re-run the drain path's
+        // rank-1 appends. The worst case a crash can leave behind;
+        // snapshots exist to amortise exactly this.
+        let dir_wal = std::env::temp_dir().join("tftune_bench_wal");
+        let _ = std::fs::remove_dir_all(&dir_wal);
+        {
+            let source = SharedSurrogate::new(hyper);
+            let opts = PersistOptions { fsync_every: 64 };
+            let p = persist::attach(&source, &dir_wal, opts)?;
+            let mut wal_rng = Rng::new(0x317A);
+            for _ in 0..512 {
+                let x: Vec<f64> = (0..5).map(|_| wal_rng.f64()).collect();
+                source.tell(x, wal_rng.f64());
+            }
+            drop(source.lock());
+            p.sync()?;
+        }
+        let r_replay = b.bench("gp/wal_replay_512", || {
+            persist::recover(&dir_wal, hyper).unwrap().surrogate.len()
+        });
+        let _ = std::fs::remove_dir_all(&dir_snap);
+        let _ = std::fs::remove_dir_all(&dir_wal);
+        (r_snap, r_replay)
+    };
+
     write_gp_bench_json(
         &[
             &r_scratch,
@@ -265,6 +314,8 @@ fn main() -> anyhow::Result<()> {
             &r_sync_delta,
             &r_remote_tell,
             &r_multiobj_tell,
+            &r_snapshot_write,
+            &r_wal_replay,
         ],
         64,
         512,
@@ -344,8 +395,9 @@ fn main() -> anyhow::Result<()> {
 /// n=64 / 512 candidates; ISSUE 3 adds the contended shared tell/ask
 /// pair; ISSUE 4 adds the surrogate-service pair — `surrogate_sync_delta`
 /// / `remote_tell_roundtrip`; ISSUE 5 adds the multi-objective pair —
-/// `score_multiobj_k2_512` / `multiobj_tell_roundtrip`). Keys are the
-/// bench short names.
+/// `score_multiobj_k2_512` / `multiobj_tell_roundtrip`; ISSUE 6 adds the
+/// persistence pair — `snapshot_write_512` / `wal_replay_512`). Keys are
+/// the bench short names.
 fn write_gp_bench_json(
     results: &[&BenchResult],
     n: usize,

@@ -1,0 +1,112 @@
+//! The durable persistence plane, end to end in one binary: a tuning
+//! campaign journals every observation into a state directory, "crashes"
+//! halfway, and is restored bit-identically — snapshot + WAL-suffix
+//! replay — before finishing its budget.
+//!
+//!     cargo run --release --example durable_session [iters]
+//!
+//! The same deployment with real processes:
+//!
+//!     tftune surrogate-serve --addr 127.0.0.1:7071 \
+//!         --state-dir /var/lib/tftune/campaign &
+//!     # kill -9 it at any point, then run the identical command again:
+//!     # it recovers the factor from snapshot + WAL and keeps serving.
+//!
+//!     tftune tune --model ncf-fp32 --alg bo --iters 60 \
+//!         --state-dir /var/lib/tftune/session --resume
+
+use anyhow::Result;
+use tftune::gp::{GpHyper, SharedSurrogate, SurrogateDelta};
+use tftune::persist::{self, PersistOptions};
+use tftune::sim::ModelId;
+use tftune::space::SearchSpace;
+use tftune::util::Rng;
+
+/// Every observation row and the packed Cholesky factor as raw bit
+/// patterns: equality here is the "bit-identical" durability claim,
+/// not an epsilon comparison.
+fn bits(delta: &SurrogateDelta) -> (Vec<u64>, Vec<u64>) {
+    let mut rows = Vec::new();
+    for (x, y) in &delta.rows {
+        rows.extend(x.iter().map(|v| v.to_bits()));
+        rows.push(y.to_bits());
+    }
+    let factor: Vec<u64> = match &delta.factor {
+        Some(f) => f.iter().map(|v| v.to_bits()).collect(),
+        None => Vec::new(),
+    };
+    (rows, factor)
+}
+
+fn tell_campaign(surrogate: &SharedSurrogate, space: &SearchSpace, seed: u64, n: usize) {
+    // A stand-in for expensive real measurements: random configs scored
+    // by the simulator-shaped toy objective.
+    let mut rng = Rng::new(seed);
+    let d = space.dim();
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        let y = (3.0 * x[0]).sin() - 0.5 * x[d - 1];
+        surrogate.tell(x, y);
+    }
+    drop(surrogate.lock()); // drain → factor append → WAL append
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let iters: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(40);
+    let iters = iters.max(4); // each phase needs at least one observation
+    let space = ModelId::NcfFp32.space();
+
+    let dir = std::env::temp_dir().join("tftune_example_durable");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Phase 1: a fresh campaign. recover() on an empty directory is the
+    // cold start — one code path for boot and reboot alike.
+    let booted = persist::recover(&dir, GpHyper::default())?;
+    let surrogate = booted.surrogate;
+    let persistence = persist::attach(&surrogate, &dir, PersistOptions::default())?;
+    tell_campaign(&surrogate, &space, 7, iters / 2);
+    let seq = persistence.snapshot(&surrogate)?;
+    println!("campaign: {} observations, snapshot @{seq}", surrogate.len());
+
+    // More observations after the snapshot: these live only in the WAL.
+    tell_campaign(&surrogate, &space, 8, iters / 4);
+    println!(
+        "campaign: {} observations ({} of them WAL-only) … and the process dies here",
+        surrogate.len(),
+        surrogate.len() - seq
+    );
+    drop(persistence); // simulate the crash: no final snapshot
+    let pre_crash = surrogate.export_delta(0).expect("full export");
+    drop(surrogate);
+
+    // Phase 2: the restart. Newest valid snapshot seeds the store, the
+    // WAL suffix replays through the ordinary drain path, and the packed
+    // Cholesky factor comes back bit-for-bit.
+    let recovered = persist::recover(&dir, GpHyper::default())?;
+    println!(
+        "recovery: snapshot {:?} + {} WAL record(s) replayed → {} observations",
+        recovered.snapshot_seq,
+        recovered.replayed,
+        recovered.surrogate.len()
+    );
+    let restored = recovered.surrogate.export_delta(0).expect("full export");
+    let (rows_a, factor_a) = bits(&pre_crash);
+    let (rows_b, factor_b) = bits(&restored);
+    assert_eq!(rows_a, rows_b, "recovered rows are not bit-identical");
+    assert_eq!(factor_a, factor_b, "recovered factor is not bit-identical");
+    assert!(!factor_b.is_empty(), "recovered factor missing");
+    println!("recovery: rows and packed factor verified bit-identical");
+
+    // Phase 3: finish the budget on the restored model — re-attach the
+    // journal (never before recover(), so replay is not re-journaled)
+    // and keep going as if nothing happened.
+    let surrogate = recovered.surrogate;
+    let persistence = persist::attach(&surrogate, &dir, PersistOptions::default())?;
+    tell_campaign(&surrogate, &space, 9, iters - iters / 2 - iters / 4);
+    persistence.snapshot(&surrogate)?;
+    println!("resumed: {} observations, durable through the next crash", surrogate.len());
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

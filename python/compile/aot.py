@@ -10,7 +10,8 @@ emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
 cleanly. See /opt/xla-example/README.md.
 
 Outputs (under --out-dir, default ../artifacts):
-  gp.hlo.txt            the fused GP fit+predict+acquisition graph
+  gp.hlo.txt            the fused GP fit+predict+acquisition graph (N_PAD=64)
+  gp_n{N}.hlo.txt       larger-window GP variants (N_PAD in GP_VARIANTS)
   workload_b{B}.hlo.txt the real-workload MLP at each batch size B
   meta.json             the shape contract the Rust side asserts against
 """
@@ -36,11 +37,19 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
-def lower_gp() -> str:
-    def fn(xtr, ytr, mask, xcand, hyper):
-        return model.gp_fit_predict(xtr, ytr, mask, xcand, hyper)
+def gp_file(n_pad: int) -> str:
+    """Artifact file per history capacity; the N_PAD=64 default keeps its
+    historical name so existing deployments keep resolving."""
+    return "gp.hlo.txt" if n_pad == model.N_PAD else f"gp_n{n_pad}.hlo.txt"
 
-    lowered = jax.jit(fn).lower(*model.gp_example_args())
+
+def lower_gp(n_pad: int = model.N_PAD) -> str:
+    iters = model.cg_iters_for(n_pad)
+
+    def fn(xtr, ytr, mask, xcand, hyper):
+        return model.gp_fit_predict(xtr, ytr, mask, xcand, hyper, cg_iters=iters)
+
+    lowered = jax.jit(fn).lower(*model.gp_example_args(n_pad=n_pad))
     return to_hlo_text(lowered)
 
 
@@ -63,6 +72,17 @@ def build_meta() -> dict:
             "hyper": ["lengthscale", "signal_var", "noise_var", "acq_alpha", "y_best"],
             "outputs": ["mu", "sigma", "gain"],
             "file": "gp.hlo.txt",
+            # Larger-window recompiles: same graph per capacity, variant
+            # CG depth. The Rust loader (runtime/gp.rs load_for_window)
+            # picks the smallest n_pad covering the requested window.
+            "variants": [
+                {
+                    "n_pad": n,
+                    "cg_iters": model.cg_iters_for(n),
+                    "file": gp_file(n),
+                }
+                for n in model.GP_VARIANTS
+            ],
         },
         "workload": {
             "batches": list(model.WORKLOAD_BATCHES),
@@ -89,11 +109,12 @@ def main() -> None:
 
     written = []
     if args.only in ("gp", "all"):
-        path = os.path.join(args.out_dir, "gp.hlo.txt")
-        text = lower_gp()
-        with open(path, "w") as f:
-            f.write(text)
-        written.append((path, len(text)))
+        for n_pad in model.GP_VARIANTS:
+            path = os.path.join(args.out_dir, gp_file(n_pad))
+            text = lower_gp(n_pad)
+            with open(path, "w") as f:
+                f.write(text)
+            written.append((path, len(text)))
 
     if args.only in ("workload", "all"):
         for batch in model.WORKLOAD_BATCHES:

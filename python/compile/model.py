@@ -55,6 +55,27 @@ C_CAND = 512    # candidate configurations scored per iteration
 # cost 1.5x vs the original 48.
 CG_ITERS = 32
 
+# History-capacity variants the AOT pipeline emits (aot.py). The graph is
+# monomorphic per capacity, so serving a larger conditioning window means
+# compiling a larger artifact — the Rust loader picks the smallest variant
+# whose n_pad covers the requested window (runtime/gp.rs).
+GP_VARIANTS = (64, 128, 256)
+
+
+def cg_iters_for(n_pad: int) -> int:
+    """Fixed CG iteration count per history capacity.
+
+    Larger K means a longer spectrum for CG to sweep; the counts below
+    extend the n_pad=64 calibration above with the same ls<=0.25 envelope
+    (iterations grow sublinearly in n because the 1e-3 noise floor caps
+    the condition number).
+    """
+    calibrated = {64: CG_ITERS, 128: 48, 256: 64}
+    if n_pad in calibrated:
+        return calibrated[n_pad]
+    # Uncalibrated capacity: scale conservatively from the nearest pin.
+    return max(CG_ITERS, n_pad // 4)
+
 # Batch sizes at which the real-workload MLP is AOT-compiled. The
 # real-workload example tunes over this axis with *measured* throughput.
 WORKLOAD_BATCHES = (1, 8, 32, 128)
@@ -91,13 +112,15 @@ def _cg_solve(k: jax.Array, b: jax.Array, iters: int) -> jax.Array:
     return x
 
 
-def gp_fit_predict(xtr, ytr, mask, xcand, hyper):
+def gp_fit_predict(xtr, ytr, mask, xcand, hyper, cg_iters: int = CG_ITERS):
     """Fit the GP on the (masked) history and score the candidates.
 
-    Args (all float32):
-      xtr:   (N_PAD, D_FEAT)  history configurations, normalised to [0,1].
-      ytr:   (N_PAD,)         standardised objective values; 0 where masked.
-      mask:  (N_PAD,)         1.0 = real history point, 0.0 = padding.
+    Shapes are taken from the arguments, so one definition serves every
+    GP_VARIANTS capacity — `aot.py` lowers it once per (n_pad, cg_iters)
+    pair. Args (all float32, n_pad = xtr.shape[0]):
+      xtr:   (n_pad, D_FEAT)  history configurations, normalised to [0,1].
+      ytr:   (n_pad,)         standardised objective values; 0 where masked.
+      mask:  (n_pad,)         1.0 = real history point, 0.0 = padding.
       xcand: (C_CAND, D_FEAT) candidate configurations.
       hyper: (5,)             [lengthscale, signal_var, noise_var,
                                acq_alpha, y_best].
@@ -122,13 +145,13 @@ def gp_fit_predict(xtr, ytr, mask, xcand, hyper):
     # Mask padding: masked rows/cols of K become identity rows/cols, and
     # masked candidate columns vanish. K stays SPD and well-conditioned.
     m2 = mask[:, None] * mask[None, :]
-    eye = jnp.eye(N_PAD, dtype=jnp.float32)
+    eye = jnp.eye(xtr.shape[0], dtype=jnp.float32)
     k = ktt * m2 + eye * (nv * mask + (1.0 - mask))
     kct = kct * mask[None, :]
 
     # One batched CG solve for [y | Kct^T]  ->  [alpha | Z].
     rhs = jnp.concatenate([(ytr * mask)[:, None], kct.T], axis=1)  # (N, C+1)
-    sol = _cg_solve(k, rhs, CG_ITERS)
+    sol = _cg_solve(k, rhs, cg_iters)
     alpha_vec = sol[:, 0]                                          # (N,)
     z = sol[:, 1:]                                                 # (N, C)
 
@@ -139,14 +162,14 @@ def gp_fit_predict(xtr, ytr, mask, xcand, hyper):
     return mu, sigma, gain
 
 
-def gp_example_args():
+def gp_example_args(n_pad: int = N_PAD, c_cand: int = C_CAND):
     """ShapeDtypeStructs matching gp_fit_predict's signature (for AOT)."""
     f32 = jnp.float32
     return (
-        jax.ShapeDtypeStruct((N_PAD, D_FEAT), f32),
-        jax.ShapeDtypeStruct((N_PAD,), f32),
-        jax.ShapeDtypeStruct((N_PAD,), f32),
-        jax.ShapeDtypeStruct((C_CAND, D_FEAT), f32),
+        jax.ShapeDtypeStruct((n_pad, D_FEAT), f32),
+        jax.ShapeDtypeStruct((n_pad,), f32),
+        jax.ShapeDtypeStruct((n_pad,), f32),
+        jax.ShapeDtypeStruct((c_cand, D_FEAT), f32),
         jax.ShapeDtypeStruct((5,), f32),
     )
 

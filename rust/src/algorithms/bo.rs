@@ -765,6 +765,19 @@ impl<S: Surrogate> Tuner for BayesOpt<S> {
         self.shared.tell(u, value);
         self.observed.push(config.clone());
     }
+
+    /// Warm start with a recorded objective vector (primary first): the
+    /// resumed store gets the same K columns the interrupted run told, so
+    /// a multi-objective acquisition picks up where it left off.
+    fn warm_start_obs(&mut self, config: &Config, value: f64, objectives: &[f64]) {
+        if objectives.is_empty() {
+            self.warm_start(config, value);
+            return;
+        }
+        let u = self.space.to_unit(config);
+        self.shared.tell_multi(u, objectives.to_vec());
+        self.observed.push(config.clone());
+    }
 }
 
 #[cfg(test)]

@@ -115,6 +115,16 @@ pub trait Tuner {
     /// starts from a persisted `History`). Engines that cannot use
     /// out-of-band data ignore it.
     fn warm_start(&mut self, _config: &Config, _value: f64) {}
+
+    /// Like [`Tuner::warm_start`] but with the record's full objective
+    /// vector (primary first, maximisation orientation — the shape
+    /// `ObjectiveSet::extract` produces and `History` persists). Engines
+    /// that model only the primary objective fall back to
+    /// [`Tuner::warm_start`]; BO re-conditions every column, so a resumed
+    /// multi-objective run restores the same K-column store.
+    fn warm_start_obs(&mut self, config: &Config, value: f64, _objectives: &[f64]) {
+        self.warm_start(config, value);
+    }
 }
 
 /// Id allocation + open-trial ledger shared by the engine implementations.

@@ -75,7 +75,21 @@ pub struct TuneConfig {
     /// (`--scalarize weighted:0.7,0.3` or `smsego`). Defaults to equal
     /// weights over the declared objectives.
     pub scalarize: Option<crate::objectives::Scalarization>,
+    /// Durable-run state directory (`--state-dir`): every completed trial
+    /// is streamed to `DIR/session.jsonl` (append + fsync) as it lands,
+    /// so an interrupted run leaves a resumable record on disk.
+    pub state_dir: Option<PathBuf>,
+    /// Continue an interrupted durable run (`--resume`): prior trials in
+    /// `state_dir/session.jsonl` are loaded, warm-started into the
+    /// engine, and counted against `iterations` — the run finishes the
+    /// remaining budget instead of starting cold. Requires `state_dir`.
+    pub resume: bool,
 }
+
+/// File inside a `--state-dir` holding the streamed per-trial session
+/// journal (one [`crate::history::Evaluation`] JSONL line per completed
+/// trial, append order = completion order).
+pub const SESSION_LOG: &str = "session.jsonl";
 
 impl Default for TuneConfig {
     fn default() -> Self {
@@ -94,6 +108,8 @@ impl Default for TuneConfig {
             tune_lengthscale: false,
             objectives: None,
             scalarize: None,
+            state_dir: None,
+            resume: false,
         }
     }
 }
@@ -145,6 +161,14 @@ impl TuneConfig {
                     None => Json::Null,
                 },
             ),
+            (
+                "state_dir",
+                match &self.state_dir {
+                    Some(p) => p.display().to_string().into(),
+                    None => Json::Null,
+                },
+            ),
+            ("resume", self.resume.into()),
         ])
     }
 
@@ -204,6 +228,12 @@ impl TuneConfig {
                 crate::objectives::Scalarization::parse(s)
                     .map_err(|e| anyhow::anyhow!("bad scalarize '{s}': {e}"))?,
             );
+        }
+        if let Some(p) = j.get("state_dir").and_then(Json::as_str) {
+            cfg.state_dir = Some(PathBuf::from(p));
+        }
+        if let Some(r) = j.get("resume").and_then(Json::as_bool) {
+            cfg.resume = r;
         }
         Ok(cfg)
     }
@@ -338,13 +368,121 @@ impl TuneConfig {
     /// Execute the run against the simulated target and return the history
     /// (persisted to `history_out` when set). `parallel == 1` reproduces
     /// the serial propose→apply→measure loop exactly.
+    ///
+    /// With `state_dir` set, every completed trial is additionally
+    /// streamed to `state_dir/session.jsonl` as it lands, and `resume`
+    /// continues an interrupted run: prior trials are warm-started into a
+    /// fresh engine and only the *remaining* budget is spent (the
+    /// returned history is prior + new, in completion order).
     pub fn run(&self) -> Result<crate::history::History> {
-        let mut session = self.build_session()?;
-        let history = session.run()?;
-        if let Some(path) = &self.history_out {
-            history.save(path, &self.model.space())?;
+        let Some(dir) = self.state_dir.clone() else {
+            anyhow::ensure!(!self.resume, "resume requires a state directory (--state-dir)");
+            let mut session = self.build_session()?;
+            let history = session.run()?;
+            if let Some(path) = &self.history_out {
+                history.save(path, &self.model.space())?;
+            }
+            return Ok(history);
+        };
+
+        let space = self.model.space();
+        let log_path = dir.join(SESSION_LOG);
+        let prior = if self.resume && log_path.exists() {
+            crate::history::History::load(&log_path, &space)
+                .with_context(|| format!("loading session journal {}", log_path.display()))?
+        } else {
+            crate::history::History::new()
+        };
+
+        let done = prior.len();
+        if done >= self.iterations {
+            // The interrupted run had already finished its budget.
+            if let Some(path) = &self.history_out {
+                prior.save(path, &space)?;
+            }
+            return Ok(prior);
         }
-        Ok(history)
+
+        // A fresh engine warm-started from the journal: the BO store gets
+        // every prior row (all objective columns), so its posterior
+        // conditions on the full interrupted campaign before the first
+        // new proposal.
+        let mut tuner = self.build_tuner()?;
+        for e in prior.iter() {
+            tuner.warm_start_obs(&e.config, e.value, &e.objectives);
+        }
+
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating state dir {}", dir.display()))?;
+        let log = if self.resume {
+            std::fs::OpenOptions::new().create(true).append(true).open(&log_path)
+        } else {
+            // A cold durable run owns the journal: truncate any stale one.
+            std::fs::File::create(&log_path)
+        }
+        .with_context(|| format!("opening session journal {}", log_path.display()))?;
+
+        let pool = crate::evaluator::sim_pool(
+            self.model,
+            self.seed,
+            self.noise_sigma,
+            self.objective,
+            self.parallel.max(1),
+        );
+        let mut budget = crate::session::Budget::evaluations(self.iterations - done);
+        if let Some(s) = self.max_seconds {
+            budget = budget.with_max_seconds(s);
+        }
+
+        // Stream each completed trial to the journal the moment it lands,
+        // fsync'd per record: a measurement is real evaluation time, so
+        // losing one to a crash costs more than the fsync.
+        let journal_space = space.clone();
+        let journal_set = self.objectives.clone();
+        let mut log = log;
+        let mut iteration = done;
+        let mut session = crate::session::TuningSession::new(tuner, pool, budget).on_trial(
+            move |trial, m| {
+                use std::io::Write as _;
+                let objectives = match &journal_set {
+                    Some(set) => set.extract(m).0,
+                    None => Vec::new(),
+                };
+                let e = crate::history::Evaluation {
+                    config: trial.config.clone(),
+                    value: m.value,
+                    iteration,
+                    trial_id: trial.id,
+                    cost_s: m.cost_s,
+                    objectives,
+                };
+                iteration += 1;
+                if writeln!(log, "{}", e.to_json_line(&journal_space))
+                    .and_then(|()| log.sync_data())
+                    .is_err()
+                {
+                    eprintln!(
+                        "tftune: session journal write failed; resume may lose this trial"
+                    );
+                }
+            },
+        );
+        if let Some(set) = &self.objectives {
+            session = session.with_objectives(set.clone());
+        }
+        let fresh = session.run()?;
+
+        // prior + new, renumbered in completion order (matches the
+        // journal on disk).
+        let mut merged = prior;
+        for e in fresh.iter() {
+            let m = crate::history::Measurement::new(e.value).with_cost_s(e.cost_s);
+            merged.push_trial_multi(e.trial_id, e.config.clone(), &m, e.objectives.clone());
+        }
+        if let Some(path) = &self.history_out {
+            merged.save(path, &space)?;
+        }
+        Ok(merged)
     }
 }
 
@@ -376,6 +514,8 @@ mod tests {
             Some(crate::objectives::ObjectiveSet::parse("throughput,p99:min").unwrap());
         c.scalarize =
             Some(crate::objectives::Scalarization::parse("weighted:0.7,0.3").unwrap());
+        c.state_dir = Some(PathBuf::from("/tmp/state"));
+        c.resume = true;
         let j = c.to_json();
         let c2 = TuneConfig::from_json(&j).unwrap();
         assert_eq!(c2.model, ModelId::BertFp32);
@@ -390,6 +530,56 @@ mod tests {
         assert!(c2.tune_lengthscale);
         assert_eq!(c2.objectives, c.objectives);
         assert_eq!(c2.scalarize, c.scalarize);
+        assert_eq!(c2.state_dir, Some(PathBuf::from("/tmp/state")));
+        assert!(c2.resume);
+    }
+
+    #[test]
+    fn resume_without_state_dir_is_rejected() {
+        let c = TuneConfig { resume: true, iterations: 2, ..TuneConfig::default() };
+        let err = c.run().unwrap_err();
+        assert!(err.to_string().contains("state directory"), "{err}");
+    }
+
+    #[test]
+    fn durable_run_streams_and_resumes_the_budget() {
+        let dir = std::env::temp_dir().join("tftune_cfg_resume");
+        std::fs::remove_dir_all(&dir).ok();
+        let base = TuneConfig {
+            model: ModelId::NcfFp32,
+            algorithm: Algorithm::Random,
+            iterations: 6,
+            seed: 17,
+            noise_sigma: 0.0,
+            state_dir: Some(dir.clone()),
+            ..TuneConfig::default()
+        };
+        // An "interrupted" run: 6 of 10 iterations, journaled as it goes.
+        let first = base.run().unwrap();
+        assert_eq!(first.len(), 6);
+        let space = base.model.space();
+        let journal =
+            crate::history::History::load(&dir.join(SESSION_LOG), &space).unwrap();
+        assert_eq!(journal.len(), 6, "every completed trial streams to the journal");
+        assert_eq!(journal.values(), first.values());
+
+        // Resume with a larger budget: only the remainder is spent, and
+        // the merged history starts with the prior trials verbatim.
+        let resumed_cfg =
+            TuneConfig { iterations: 10, resume: true, ..base.clone() };
+        let resumed = resumed_cfg.run().unwrap();
+        assert_eq!(resumed.len(), 10);
+        assert_eq!(&resumed.values()[..6], &first.values()[..]);
+        let journal =
+            crate::history::History::load(&dir.join(SESSION_LOG), &space).unwrap();
+        assert_eq!(journal.len(), 10, "resumed trials append to the same journal");
+
+        // Resuming a finished budget is a no-op returning the journal.
+        let done = TuneConfig { iterations: 10, resume: true, ..base.clone() };
+        let again = done.run().unwrap();
+        assert_eq!(again.len(), 10);
+        assert_eq!(again.values(), resumed.values());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

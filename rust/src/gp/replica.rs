@@ -31,6 +31,25 @@
 //!   fantasies. If the process dies instead of retracting, the service
 //!   expires its leases when the connection closes.
 //!
+//! # Reconnection
+//!
+//! Real campaigns outlive daemon restarts (a `surrogate-serve
+//! --state-dir` daemon may be killed and restored mid-run), so the
+//! replica's connection layer retries transparently with exponential
+//! backoff, mirroring `RemoteEvaluator`: on a transport failure the
+//! wire is torn down, re-dialled, and the protocol handshake is redone.
+//! Because **leases are liveness state, not model state**, they are NOT
+//! journaled by the durability plane — a restarted daemon boots with an
+//! empty lease table, and a replica's old lease died with its old
+//! connection anyway. The redial path therefore re-publishes this
+//! process's current in-flight set under a fresh lease id, so siblings
+//! keep conditioning on it across the restart. `with_reconnect(0, ..)`
+//! restores strict fail-fast semantics (one shot, no redial budget).
+//!
+//! A tell that was buffered by the kernel but never reached a dying
+//! daemon is still lost (fire-and-forget has no acknowledgement); the
+//! durable authority only guarantees what it *received* survives.
+//!
 //! Known limitation: in-guard hyper changes (`SurrogateGuard::ensure_hyper`,
 //! e.g. lengthscale re-selection) act on the local mirror only and are
 //! overwritten by the authority's hypers on the next sync; use
@@ -39,8 +58,9 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -50,6 +70,14 @@ use crate::server::proto::{
     decode_surrogate_response, encode_surrogate_request, SurrogateRequest, SurrogateResponse,
     PROTOCOL_VERSION,
 };
+
+/// Default reconnect budget: up to 4 redials with exponential backoff
+/// starting at [`DEFAULT_RECONNECT_BASE`] (20, 40, 80, 160 ms) — enough
+/// to ride out a daemon kill-restart-restore cycle without stalling a
+/// healthy session noticeably. Mirrors `RemoteEvaluator`'s defaults.
+pub const DEFAULT_RECONNECT_ATTEMPTS: usize = 4;
+/// First-retry backoff delay (doubles per attempt).
+pub const DEFAULT_RECONNECT_BASE: Duration = Duration::from_millis(20);
 
 /// One line-oriented connection to the surrogate service. Requests that
 /// expect a response are serialised behind the connection mutex; tells
@@ -76,21 +104,226 @@ impl Conn {
     }
 }
 
+/// Dial the service once: connect, handshake, negotiate the protocol
+/// version (min of ours and the service's; v2 is the oldest surrogate
+/// plane we speak).
+fn dial(addr: &str) -> Result<(Conn, u32)> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting surrogate service {addr}"))?;
+    // Line-oriented request/response: dodge Nagle/delayed-ACK stalls
+    // (same rationale as RemoteEvaluator::connect).
+    stream.set_nodelay(true)?;
+    let writer = stream.try_clone()?;
+    let mut conn = Conn { writer, reader: BufReader::new(stream) };
+    let version = match conn.request(&SurrogateRequest::Hello { version: PROTOCOL_VERSION })? {
+        SurrogateResponse::HelloOk { version } => {
+            anyhow::ensure!(
+                (2..=PROTOCOL_VERSION).contains(&version),
+                "surrogate service speaks protocol v{version}, this replica \
+                 v{PROTOCOL_VERSION} (v2 is the oldest surrogate plane)"
+            );
+            version
+        }
+        SurrogateResponse::Error { message } => bail!("handshake refused: {message}"),
+        other => bail!("unexpected handshake response: {other:?}"),
+    };
+    Ok((conn, version))
+}
+
+/// The wire (None between a transport failure and the next successful
+/// redial) and the protocol version it negotiated.
+struct ConnState {
+    wire: Option<Conn>,
+    version: u32,
+}
+
+/// Bit-exact identity of a published point set — the dedup key that
+/// keeps an unchanged in-flight batch from being retract-and-republished
+/// on every guard drop.
+fn lease_key(points: &[(Vec<f64>, f64)]) -> Vec<(Vec<u64>, u64)> {
+    points
+        .iter()
+        .map(|(x, lie)| (x.iter().map(|v| v.to_bits()).collect(), lie.to_bits()))
+        .collect()
+}
+
+/// This process's lease bookkeeping, shared by the guard-drop hook and
+/// the redial path (which must re-publish after a daemon restart).
+/// Lock order: connection state strictly before lease state.
+#[derive(Default)]
+struct LeaseState {
+    /// Server-side id of our currently published lease, if any.
+    active: Option<u64>,
+    /// Bit-key of the last successfully published (or empty) point set —
+    /// the guard-drop dedup that avoids republishing an unchanged batch.
+    last_key: Vec<(Vec<u64>, u64)>,
+    /// The current in-flight point set itself, kept so a redial can
+    /// re-publish it under a fresh id.
+    points: Vec<(Vec<f64>, f64)>,
+}
+
+/// The replica's connection layer: address, wire state, reconnect
+/// budget and lease bookkeeping — everything the guard-drop hooks and
+/// the request paths share.
+struct Link {
+    addr: String,
+    state: Mutex<ConnState>,
+    lease: Mutex<LeaseState>,
+    attempts: AtomicUsize,
+    base_ms: AtomicU64,
+}
+
+impl Link {
+    fn backoff(&self) -> (usize, Duration) {
+        (
+            self.attempts.load(Ordering::SeqCst),
+            Duration::from_millis(self.base_ms.load(Ordering::SeqCst)),
+        )
+    }
+
+    /// Re-dial and re-handshake, then re-publish the current lease: the
+    /// old lease expired with the old connection (and a restarted daemon
+    /// boots with an empty lease table regardless), so siblings would
+    /// otherwise stop conditioning on our in-flight trials.
+    fn redial(&self, st: &mut ConnState) -> Result<()> {
+        let (conn, version) = dial(&self.addr)?;
+        st.wire = Some(conn);
+        st.version = version;
+        let mut ls = self.lease.lock().unwrap();
+        ls.active = None;
+        ls.last_key.clear();
+        if !ls.points.is_empty() {
+            if let Ok(SurrogateResponse::Lease { id }) = st
+                .wire
+                .as_mut()
+                .expect("wire installed above")
+                .request(&SurrogateRequest::AskLease { points: ls.points.clone() })
+            {
+                ls.active = Some(id);
+                // Restore the dedup key so the next guard drop with the
+                // same in-flight set keeps this lease, and an *empty*
+                // drop (batch finished) still retracts it.
+                ls.last_key = lease_key(&ls.points);
+            }
+        }
+        Ok(())
+    }
+
+    /// One request/response round trip with transparent reconnect.
+    /// Transport failures tear the wire down and retry with exponential
+    /// backoff up to the configured budget; protocol-level refusals
+    /// (decoded [`SurrogateResponse::Error`]s) are returned to the
+    /// caller, never retried.
+    fn roundtrip(&self, req: &SurrogateRequest) -> Result<SurrogateResponse> {
+        let (attempts, base) = self.backoff();
+        let mut delay = base;
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..=attempts {
+            if attempt > 0 {
+                std::thread::sleep(delay);
+                delay = delay.saturating_mul(2);
+            }
+            let mut st = self.state.lock().unwrap();
+            if st.wire.is_none() {
+                match self.redial(&mut st) {
+                    Ok(()) => eprintln!(
+                        "tftune: reconnected to surrogate service {} (attempt {attempt})",
+                        self.addr
+                    ),
+                    Err(e) => {
+                        last_err = Some(e);
+                        continue;
+                    }
+                }
+            }
+            match st.wire.as_mut().expect("wire present").request(req) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    st.wire = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.expect("at least one attempt ran")).with_context(|| {
+            format!(
+                "surrogate service {} unreachable after {attempts} reconnect attempt(s)",
+                self.addr
+            )
+        })
+    }
+
+    /// One fire-and-forget `tell-obs` line with the same reconnect
+    /// discipline as [`Link::roundtrip`]. The secondary columns are
+    /// re-evaluated against the *current* negotiated version on every
+    /// attempt (a redial may land on an older daemon).
+    fn send_tell(
+        &self,
+        x: &[f64],
+        y: f64,
+        extras: &[f64],
+        warned_v2: &AtomicBool,
+    ) -> Result<()> {
+        let (attempts, base) = self.backoff();
+        let mut delay = base;
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..=attempts {
+            if attempt > 0 {
+                std::thread::sleep(delay);
+                delay = delay.saturating_mul(2);
+            }
+            let mut st = self.state.lock().unwrap();
+            if st.wire.is_none() {
+                match self.redial(&mut st) {
+                    Ok(()) => eprintln!(
+                        "tftune: reconnected to surrogate service {} (attempt {attempt})",
+                        self.addr
+                    ),
+                    Err(e) => {
+                        last_err = Some(e);
+                        continue;
+                    }
+                }
+            }
+            let ys = if st.version >= 3 {
+                extras.to_vec()
+            } else {
+                if !extras.is_empty() && !warned_v2.swap(true, Ordering::SeqCst) {
+                    eprintln!(
+                        "tftune: the surrogate service speaks protocol v{} — secondary \
+                         objective columns cannot cross the wire, so the shared factor \
+                         degrades to the primary objective (upgrade the daemon for \
+                         fleet-wide multi-objective tuning)",
+                        st.version
+                    );
+                }
+                Vec::new()
+            };
+            let req = SurrogateRequest::TellObs { x: x.to_vec(), y, ys };
+            match st.wire.as_mut().expect("wire present").send(&req) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    st.wire = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.expect("at least one attempt ran")).with_context(|| {
+            format!(
+                "surrogate service {} unreachable after {attempts} reconnect attempt(s)",
+                self.addr
+            )
+        })
+    }
+}
+
 struct Remote {
-    conn: Arc<Mutex<Conn>>,
+    link: Arc<Link>,
     /// The local replica: a plain [`SharedSurrogate`] whose store mirrors
     /// the authority's, in the authority's (canonical) order.
     mirror: SharedSurrogate,
     /// Tells sent since the last successful sync. TCP ordering makes the
     /// next sync observe all of them, so this resets to zero per sync.
     pending_tells: AtomicUsize,
-    /// Protocol version negotiated at connect (min of ours and the
-    /// service's). Against a v2 service the replica degrades to
-    /// single-objective tells: secondary columns are **dropped at the
-    /// wire** (the authoritative store never sees them, so neither does
-    /// any mirror) — announced by a one-time warning on the first
-    /// multi-column tell.
-    version: u32,
     /// Whether the v2-degradation warning has fired (once per replica).
     warned_v2_extras: AtomicBool,
 }
@@ -117,34 +350,20 @@ impl RemoteSurrogate {
     /// Connect to a surrogate service, perform the protocol handshake,
     /// and pull the initial full-factor sync (adopting the authority's
     /// hypers). Fails loudly on a version mismatch or a daemon that hosts
-    /// no surrogate.
+    /// no surrogate — the *initial* connection never retries; the
+    /// reconnect budget ([`RemoteSurrogate::with_reconnect`]) covers
+    /// failures after a session is established.
     pub fn connect(addr: &str) -> Result<RemoteSurrogate> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting surrogate service {addr}"))?;
-        // Line-oriented request/response: dodge Nagle/delayed-ACK stalls
-        // (same rationale as RemoteEvaluator::connect).
-        stream.set_nodelay(true)?;
-        let writer = stream.try_clone()?;
-        let mut conn = Conn { writer, reader: BufReader::new(stream) };
+        let (conn, version) = dial(addr)?;
+        let link = Arc::new(Link {
+            addr: addr.to_string(),
+            state: Mutex::new(ConnState { wire: Some(conn), version }),
+            lease: Mutex::new(LeaseState::default()),
+            attempts: AtomicUsize::new(DEFAULT_RECONNECT_ATTEMPTS),
+            base_ms: AtomicU64::new(DEFAULT_RECONNECT_BASE.as_millis() as u64),
+        });
 
-        // Version negotiation: the service answers with min(its version,
-        // ours). Anything from v2 up is workable — against a v2 service
-        // this replica simply degrades to single-objective tells (the
-        // surrogate plane itself predates v2, so below that we refuse).
-        let version = match conn.request(&SurrogateRequest::Hello { version: PROTOCOL_VERSION })?
-        {
-            SurrogateResponse::HelloOk { version } => {
-                anyhow::ensure!(
-                    (2..=PROTOCOL_VERSION).contains(&version),
-                    "surrogate service speaks protocol v{version}, this replica \
-                     v{PROTOCOL_VERSION} (v2 is the oldest surrogate plane)"
-                );
-                version
-            }
-            SurrogateResponse::Error { message } => bail!("handshake refused: {message}"),
-            other => bail!("unexpected handshake response: {other:?}"),
-        };
-        let delta = match conn.request(&SurrogateRequest::SyncFactor { from_n: 0 })? {
+        let delta = match link.roundtrip(&SurrogateRequest::SyncFactor { from_n: 0 })? {
             SurrogateResponse::FactorDelta(d) => d,
             SurrogateResponse::Error { message } => bail!("initial sync refused: {message}"),
             other => bail!("unexpected sync response: {other:?}"),
@@ -152,44 +371,52 @@ impl RemoteSurrogate {
         let mirror = SharedSurrogate::new(delta.hyper);
         anyhow::ensure!(mirror.import_delta(&delta), "initial surrogate delta rejected");
 
-        let conn = Arc::new(Mutex::new(conn));
         // Lease publication: every guard drop replaces this process's
         // lease with the batch's own fantasy points (publish the new one
         // before retracting the old, so siblings never see a gap). Runs
-        // with the mirror's model lock already released.
-        let hook_conn = Arc::clone(&conn);
-        let mut active: Option<u64> = None;
-        let mut last_key: Vec<(Vec<u64>, u64)> = Vec::new();
+        // with the mirror's model lock already released. The current
+        // point set is stored in the shared LeaseState *before*
+        // publishing so a redial re-publishes exactly what is in flight.
+        let hook_link = Arc::clone(&link);
         mirror.set_lease_hook(move |points| {
-            let key: Vec<(Vec<u64>, u64)> = points
-                .iter()
-                .map(|(x, lie)| (x.iter().map(|v| v.to_bits()).collect(), lie.to_bits()))
-                .collect();
-            if key == last_key {
-                return; // unchanged in-flight set: nothing to republish
+            let key = lease_key(points);
+            {
+                let mut ls = hook_link.lease.lock().unwrap();
+                if key == ls.last_key {
+                    return; // unchanged in-flight set: nothing to republish
+                }
+                ls.points = points.to_vec();
             }
-            let mut c = hook_conn.lock().unwrap();
             let next = if points.is_empty() {
                 None
             } else {
-                match c.request(&SurrogateRequest::AskLease { points: points.to_vec() }) {
+                match hook_link
+                    .roundtrip(&SurrogateRequest::AskLease { points: points.to_vec() })
+                {
                     Ok(SurrogateResponse::Lease { id }) => Some(id),
-                    // Transport hiccup: skip — disconnect expiry is the
-                    // backstop for a lease that never got replaced.
+                    // Transport hiccup past the reconnect budget: skip —
+                    // disconnect expiry is the backstop for a lease that
+                    // never got replaced.
                     _ => None,
                 }
             };
-            if let Some(old) = active.take() {
-                let _ = c.request(&SurrogateRequest::RetractLease { id: old });
-            }
-            active = next;
-            if points.is_empty() || active.is_some() {
-                last_key = key;
-            } else {
-                // Publish failed: the service holds no lease for us now,
-                // so forget the key — the next guard drop with the same
-                // in-flight set must retry instead of deduping away.
-                last_key.clear();
+            let old = {
+                let mut ls = hook_link.lease.lock().unwrap();
+                let old = ls.active.take();
+                ls.active = next;
+                if points.is_empty() || next.is_some() {
+                    ls.last_key = key;
+                } else {
+                    // Publish failed: the service holds no lease for us
+                    // now, so forget the key — the next guard drop with
+                    // the same in-flight set must retry instead of
+                    // deduping away.
+                    ls.last_key.clear();
+                }
+                old
+            };
+            if let Some(old) = old {
+                let _ = hook_link.roundtrip(&SurrogateRequest::RetractLease { id: old });
             }
         });
 
@@ -198,10 +425,9 @@ impl RemoteSurrogate {
         // the service when the guard drops, so sibling replicas adopt the
         // same hypers on their next sync instead of fighting the served
         // factor. Runs with the model lock already released.
-        let hyper_conn = Arc::clone(&conn);
+        let hyper_link = Arc::clone(&link);
         mirror.set_hyper_hook(move |hyper| {
-            let mut c = hyper_conn.lock().unwrap();
-            match c.request(&SurrogateRequest::SetHyper { hyper }) {
+            match hyper_link.roundtrip(&SurrogateRequest::SetHyper { hyper }) {
                 Ok(SurrogateResponse::HyperOk) => {}
                 Ok(other) => eprintln!("tftune: unexpected set-hyper response: {other:?}"),
                 Err(e) => eprintln!(
@@ -213,22 +439,33 @@ impl RemoteSurrogate {
 
         Ok(RemoteSurrogate {
             inner: Arc::new(Remote {
-                conn,
+                link,
                 mirror,
                 pending_tells: AtomicUsize::new(0),
-                version,
                 warned_v2_extras: AtomicBool::new(false),
             }),
         })
     }
 
+    /// Override the transparent-reconnect budget: up to `attempts`
+    /// redials per request with exponential backoff starting at `base`.
+    /// `with_reconnect(0, ..)` restores strict fail-fast behaviour — one
+    /// shot per request, errors surface immediately. Applies to every
+    /// clone sharing this connection.
+    pub fn with_reconnect(self, attempts: usize, base: Duration) -> RemoteSurrogate {
+        self.inner.link.attempts.store(attempts, Ordering::SeqCst);
+        self.inner.link.base_ms.store(base.as_millis() as u64, Ordering::SeqCst);
+        self
+    }
+
     /// One catch-up round trip: ask the service for everything past the
     /// mirror's current length and import it (factor suffix verbatim when
-    /// present). Serialised behind the connection mutex.
+    /// present). Serialised behind the connection mutex; rides the
+    /// reconnect budget, so a daemon restored from `--state-dir` between
+    /// two asks is caught up transparently.
     fn sync(&self) -> Result<()> {
-        let mut conn = self.inner.conn.lock().unwrap();
         let from_n = self.inner.mirror.len();
-        match conn.request(&SurrogateRequest::SyncFactor { from_n })? {
+        match self.inner.link.roundtrip(&SurrogateRequest::SyncFactor { from_n })? {
             SurrogateResponse::FactorDelta(d) => {
                 anyhow::ensure!(
                     self.inner.mirror.import_delta(&d),
@@ -247,8 +484,9 @@ impl RemoteSurrogate {
 impl SurrogateHandle for RemoteSurrogate {
     /// Fire-and-forget: one `tell-obs` line to the service. Never blocks
     /// on a scoring pass (scoring happens against the local mirror with
-    /// the connection released); a transport failure drops the
-    /// observation with a warning rather than poisoning the session.
+    /// the connection released); a transport failure retries through the
+    /// reconnect budget and then drops the observation with a warning
+    /// rather than poisoning the session.
     fn tell(&self, x: Vec<f64>, y: f64) {
         self.tell_multi(x, vec![y]);
     }
@@ -263,22 +501,7 @@ impl SurrogateHandle for RemoteSurrogate {
             eprintln!("tftune: dropping observation with no objective columns");
             return;
         };
-        let ys = if self.inner.version >= 3 {
-            extra.to_vec()
-        } else {
-            if !extra.is_empty() && !self.inner.warned_v2_extras.swap(true, Ordering::SeqCst) {
-                eprintln!(
-                    "tftune: the surrogate service speaks protocol v{} — secondary \
-                     objective columns cannot cross the wire, so the shared factor \
-                     degrades to the primary objective (upgrade the daemon for \
-                     fleet-wide multi-objective tuning)",
-                    self.inner.version
-                );
-            }
-            Vec::new()
-        };
-        let mut conn = self.inner.conn.lock().unwrap();
-        match conn.send(&SurrogateRequest::TellObs { x, y, ys }) {
+        match self.inner.link.send_tell(&x, y, extra, &self.inner.warned_v2_extras) {
             Ok(()) => {
                 self.inner.pending_tells.fetch_add(1, Ordering::SeqCst);
             }
@@ -289,8 +512,9 @@ impl SurrogateHandle for RemoteSurrogate {
     }
 
     /// Sync with the service (catch-up delta, sibling leases), then lock
-    /// the local mirror. If the service is unreachable the engine scores
-    /// on the stale replica — degraded, not dead.
+    /// the local mirror. If the service is unreachable past the
+    /// reconnect budget the engine scores on the stale replica —
+    /// degraded, not dead.
     fn lock(&self) -> SurrogateGuard<'_> {
         if let Err(e) = self.sync() {
             eprintln!("tftune: surrogate sync failed ({e}); scoring on the stale replica");
@@ -337,11 +561,118 @@ impl SurrogateHandle for RemoteSurrogate {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::server::TargetServer;
+
+    fn shutdown_daemon(addr: std::net::SocketAddr) {
+        use crate::server::proto::{encode_request, Request};
+        let space = crate::space::threading_space(64, 1024, 64);
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            let _ = writeln!(s, "{}", encode_request(&Request::Shutdown, &space));
+        }
+    }
+
+    /// Sever the replica's wire as if the connection had just died: the
+    /// client socket closes (so the daemon's handler unblocks on EOF and
+    /// the daemon can be shut down and joined deterministically) and the
+    /// replica's next request goes through the redial path.
+    fn sever(replica: &RemoteSurrogate) {
+        replica.inner.link.state.lock().unwrap().wire = None;
+    }
 
     #[test]
     fn connect_failure_is_clean_error() {
         // Port 1 is never a surrogate service.
         let err = RemoteSurrogate::connect("127.0.0.1:1").unwrap_err();
         assert!(err.to_string().contains("connecting surrogate service"), "{err}");
+    }
+
+    #[test]
+    fn reconnects_and_republishes_lease_after_daemon_restart() {
+        let (server, _factor) =
+            TargetServer::bind_surrogate_only("127.0.0.1:0", GpHyper::default()).unwrap();
+        let (addr, handle) = server.spawn().unwrap();
+        let a = RemoteSurrogate::connect(&addr.to_string())
+            .unwrap()
+            .with_reconnect(20, Duration::from_millis(5));
+        a.tell(vec![0.25, 0.75], 1.0);
+        {
+            let mut ga = a.lock();
+            assert_eq!(ga.len(), 1);
+            // Leave a fantasy in flight: the guard drop publishes it as
+            // this process's lease.
+            assert!(ga.extend_fantasy(&[0.4, 0.6], 0.0));
+        }
+
+        // The daemon dies mid-campaign.
+        sever(&a);
+        shutdown_daemon(addr);
+        let _ = handle.join();
+
+        // Restart on the very same port hosting a restored factor (the
+        // durable-daemon path: persist::recover + bind_surrogate_with).
+        // Its lease table starts empty by design.
+        let restored = SharedSurrogate::new(GpHyper::default());
+        restored.tell(vec![0.25, 0.75], 1.0);
+        let (server2, _f2) =
+            TargetServer::bind_surrogate_with(&addr.to_string(), restored).unwrap();
+        let (_, handle2) = server2.spawn().unwrap();
+
+        // The next tell redials, re-handshakes and — because leases died
+        // with the old connection — re-publishes the stored in-flight
+        // set under a fresh id before the observation goes out.
+        a.tell(vec![0.5, 0.5], 2.0);
+
+        // A sibling connecting to the restarted daemon still conditions
+        // on A's pre-crash in-flight point.
+        let b = RemoteSurrogate::connect(&addr.to_string()).unwrap();
+        {
+            let gb = b.lock();
+            assert_eq!(gb.ambient_len(), 1, "lease not re-published after restart");
+            let (x, lie) = gb.ambient_point(0);
+            assert_eq!(x, vec![0.4, 0.6]);
+            assert_eq!(lie, 0.0);
+        }
+
+        // A's catch-up sync sees both the restored row and the
+        // post-restart tell; re-extending the same in-flight point
+        // dedups against the redial's lease instead of republishing.
+        {
+            let mut ga = a.lock();
+            assert_eq!(ga.len(), 2, "post-restart catch-up incomplete");
+            assert!(ga.extend_fantasy(&[0.4, 0.6], 0.0));
+        }
+        {
+            let gb = b.lock();
+            assert_eq!(gb.ambient_len(), 1, "unchanged lease republished after dedup");
+        }
+
+        drop(a);
+        drop(b);
+        shutdown_daemon(addr);
+        let _ = handle2.join();
+    }
+
+    #[test]
+    fn zero_attempts_restores_fail_fast() {
+        let (server, _factor) =
+            TargetServer::bind_surrogate_only("127.0.0.1:0", GpHyper::default()).unwrap();
+        let (addr, handle) = server.spawn().unwrap();
+        let replica = RemoteSurrogate::connect(&addr.to_string())
+            .unwrap()
+            .with_reconnect(0, Duration::from_millis(1));
+        replica.tell(vec![0.25, 0.75], 1.0);
+
+        // Kill the daemon for good (no restart): with a zero reconnect
+        // budget the next round trip gets exactly one shot and fails
+        // with the fail-fast error instead of retrying.
+        sever(&replica);
+        shutdown_daemon(addr);
+        let _ = handle.join();
+        let err = replica
+            .inner
+            .link
+            .roundtrip(&SurrogateRequest::SyncFactor { from_n: 0 })
+            .unwrap_err();
+        assert!(err.to_string().contains("unreachable after 0"), "{err}");
     }
 }

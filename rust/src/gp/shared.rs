@@ -120,6 +120,24 @@ pub(crate) type LeaseHook = Box<dyn FnMut(&[(Vec<f64>, f64)]) + Send>;
 /// locally. Runs after the model lock is released (network round trip).
 pub(crate) type HyperHook = Box<dyn FnMut(GpHyper) + Send>;
 
+/// One state mutation of the canonical store, as seen by the durability
+/// journal (`persist`): a stored observation row or an adopted hyper
+/// change. Borrowed views — the journal runs synchronously *under the
+/// model-state lock*, at the exact point the mutation lands, so the
+/// write-ahead log records mutations in true store order.
+pub(crate) enum JournalEvent<'a> {
+    /// A row was appended to the canonical store (post dimension check —
+    /// dropped rows are never journaled).
+    Row { x: &'a [f64], y: f64, extras: &'a [f64] },
+    /// The model switched hyperparameters.
+    Hyper(GpHyper),
+}
+
+/// The durability journal: invoked under the model-state lock for every
+/// store mutation. Must be cheap and non-blocking (buffered append — the
+/// fsync cadence is the journal owner's business).
+pub(crate) type Journal = Box<dyn FnMut(JournalEvent<'_>) + Send>;
+
 /// The handle contract the BO engine conditions its surrogate through.
 ///
 /// Implemented by [`SharedSurrogate`] (one factor per host process) and
@@ -235,6 +253,11 @@ struct SharedState {
     /// [`SharedSurrogate::import_delta`]. Always empty on a purely local
     /// handle.
     ambient: Vec<(Vec<f64>, f64)>,
+    /// Durability journal (`persist` installs it on the *authoritative*
+    /// handle only — mirrors replicate a factor that is already journaled
+    /// at its authority). Lives behind the state mutex so journal order
+    /// is store-mutation order by construction.
+    journal: Option<Journal>,
 }
 
 impl SharedState {
@@ -270,6 +293,9 @@ impl SharedState {
                 self.model.clear();
                 self.factored.clear();
             }
+        }
+        if let Some(journal) = self.journal.as_mut() {
+            journal(JournalEvent::Row { x: &x, y, extras: &extra });
         }
         self.obs_x.push(x);
         self.obs_y.push(y);
@@ -327,6 +353,7 @@ impl SharedSurrogate {
                     eager: true,
                     drain_buf: Vec::new(),
                     ambient: Vec::new(),
+                    journal: None,
                 }),
                 lease_hook: Mutex::new(None),
                 hyper_hook: Mutex::new(None),
@@ -435,6 +462,19 @@ impl SharedSurrogate {
         *self.inner.hyper_hook.lock().unwrap() = Some(Box::new(hook));
     }
 
+    /// Install the durability journal (`persist`): invoked synchronously
+    /// under the model-state lock for every store mutation — a stored
+    /// observation row or an adopted hyper change — so the write-ahead
+    /// log records mutations in exact store order. Install on the
+    /// *authoritative* handle only; a replica mirror replicates a factor
+    /// whose mutations are already journaled at the authority.
+    pub(crate) fn set_journal(
+        &self,
+        journal: impl FnMut(JournalEvent<'_>) + Send + 'static,
+    ) {
+        self.inner.state.lock().unwrap().journal = Some(Box::new(journal));
+    }
+
     /// Export the catch-up delta for a replica at `from_n` rows: drains
     /// pending tells first, so the delta reflects every tell received.
     /// `None` if the replica claims more rows than the store holds.
@@ -504,6 +544,9 @@ impl SharedSurrogate {
             st.hyper = hyper;
             st.model.set_hyper(hyper);
             st.factored.clear();
+            if let Some(journal) = st.journal.as_mut() {
+                journal(JournalEvent::Hyper(hyper));
+            }
         }
         let expected = packed_len(delta.total_n) - packed_len(delta.from_n);
         let prefix = st.factored.len() == delta.from_n
@@ -533,9 +576,13 @@ impl SharedSurrogate {
                             importing = false;
                         }
                     }
+                    let extra = extra_of(k);
+                    if let Some(journal) = st.journal.as_mut() {
+                        journal(JournalEvent::Row { x, y: *y, extras: &extra });
+                    }
                     st.obs_x.push(x.clone());
                     st.obs_y.push(*y);
-                    st.obs_extra.push(extra_of(k));
+                    st.obs_extra.push(extra);
                 }
             }
             _ => {
@@ -744,6 +791,9 @@ impl SurrogateGuard<'_> {
             st.hyper = hyper;
             st.model.set_hyper(hyper);
             st.factored.clear();
+            if let Some(journal) = st.journal.as_mut() {
+                journal(JournalEvent::Hyper(hyper));
+            }
             if log_hyper {
                 self.hyper_changed = Some(hyper);
             }

@@ -83,6 +83,36 @@ pub struct Evaluation {
     pub objectives: Vec<f64>,
 }
 
+impl Evaluation {
+    /// Encode this record as one JSONL line (no trailing newline) — the
+    /// unit [`History::to_jsonl`] concatenates, and the unit a streaming
+    /// session journal (`tune --state-dir`) appends per completed trial
+    /// so an interrupted run can resume from disk.
+    pub fn to_json_line(&self, space: &SearchSpace) -> String {
+        let mut pairs = vec![
+            ("iteration", Json::from(self.iteration)),
+            ("trial", Json::from(self.trial_id as i64)),
+            ("config", space.config_to_json(&self.config)),
+            ("value", Json::from(self.value)),
+            ("cost_s", Json::from(self.cost_s)),
+        ];
+        if !self.objectives.is_empty() {
+            // NaN (a declared-but-missing column) is not valid JSON;
+            // encode it as null and decode null back to NaN.
+            pairs.push((
+                "objectives",
+                Json::Arr(
+                    self.objectives
+                        .iter()
+                        .map(|&v| if v.is_finite() { Json::from(v) } else { Json::Null })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs).to_string()
+    }
+}
+
 /// Append-only evaluation history.
 #[derive(Debug, Clone, Default)]
 pub struct History {
@@ -261,28 +291,7 @@ impl History {
     pub fn to_jsonl(&self, space: &SearchSpace) -> String {
         let mut out = String::new();
         for e in &self.evals {
-            let mut pairs = vec![
-                ("iteration", Json::from(e.iteration)),
-                ("trial", Json::from(e.trial_id as i64)),
-                ("config", space.config_to_json(&e.config)),
-                ("value", Json::from(e.value)),
-                ("cost_s", Json::from(e.cost_s)),
-            ];
-            if !e.objectives.is_empty() {
-                // NaN (a declared-but-missing column) is not valid JSON;
-                // encode it as null and decode null back to NaN.
-                pairs.push((
-                    "objectives",
-                    Json::Arr(
-                        e.objectives
-                            .iter()
-                            .map(|&v| if v.is_finite() { Json::from(v) } else { Json::Null })
-                            .collect(),
-                    ),
-                ));
-            }
-            let line = Json::obj(pairs);
-            out.push_str(&line.to_string());
+            out.push_str(&e.to_json_line(space));
             out.push('\n');
         }
         out

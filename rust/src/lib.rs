@@ -136,8 +136,17 @@
 //! assert!(history.len() <= 16);
 //! ```
 //!
-//! See `examples/parallel_tuning.rs`, `examples/session_group.rs` and the
-//! example index in `README.md`.
+//! # Durability
+//!
+//! Long campaigns survive crashes through the [`persist`] subsystem:
+//! checksummed snapshots of the packed factor + observation store, a
+//! write-ahead log of every store mutation between them, and recovery
+//! that restores the factor **bit-identically** to the pre-crash
+//! authority (`surrogate-serve --state-dir`, `tune --state-dir` /
+//! `--resume`; ARCHITECTURE.md §Durability).
+//!
+//! See `examples/parallel_tuning.rs`, `examples/session_group.rs`,
+//! `examples/durable_session.rs` and the example index in `README.md`.
 
 pub mod algorithms;
 pub mod config;
@@ -146,6 +155,7 @@ pub mod figures;
 pub mod gp;
 pub mod history;
 pub mod objectives;
+pub mod persist;
 pub mod runtime;
 pub mod server;
 pub mod session;

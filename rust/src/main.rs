@@ -27,7 +27,7 @@ use tftune::sim::ModelId;
 
 /// Flags that take no value. Data-driven so adding one is a single entry
 /// here rather than a special case inside the parser.
-const BOOL_FLAGS: &[&str] = &["fine", "help", "tune-lengthscale"];
+const BOOL_FLAGS: &[&str] = &["fine", "help", "resume", "tune-lengthscale"];
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
 struct Args {
@@ -114,9 +114,11 @@ COMMANDS
                [--surrogate native|hlo] [--objective throughput|latency]
                [--objectives spec] [--scalarize weighted:<w,..>|smsego]
                [--surrogate-addr host:port] [--tune-lengthscale]
+               [--state-dir DIR] [--resume]
                [--out hist.jsonl] [--config run.json]
   serve        --model <m> [--addr 127.0.0.1:7070] [--seed 0]
   surrogate-serve  [--addr 127.0.0.1:7071] [--objectives spec]
+               [--state-dir DIR] [--fsync-every 1] [--snapshot-every 30]
                host the authoritative shared GP factor: tuner processes
                started with --surrogate-addr condition one model
   remote-tune  --addr <host:port[,host:port...]> --model <m> --alg <a>
@@ -140,6 +142,15 @@ CROSS-PROCESS SURROGATE
   --surrogate-addr <its address>: all their measurements condition one
   served GP factor, and each process's in-flight trials are leased to the
   others as constant-liar fantasies (expiring if a process dies).
+
+DURABILITY
+  surrogate-serve --state-dir DIR journals every tell/set-hyper to a
+  write-ahead log and checkpoints snapshots in the background; on
+  restart the daemon restores the served factor bit-identically and
+  replicas reconnect and re-publish their leases. tune --state-dir DIR
+  streams every completed trial to DIR/session.jsonl; add --resume to
+  continue an interrupted run's remaining budget instead of starting
+  cold. See ARCHITECTURE.md, section "Durability".
 
 MULTI-OBJECTIVE
   --objectives declares what a BO run optimises: the primary objective
@@ -232,6 +243,27 @@ fn cmd_tune(args: &Args) -> Result<()> {
         cfg.scalarize =
             Some(tftune::Scalarization::parse(spec).map_err(|e| anyhow::anyhow!(e))?);
     }
+    if let Some(dir) = args.get("state-dir") {
+        cfg.state_dir = Some(PathBuf::from(dir));
+    }
+    if args.get("resume").is_some() {
+        cfg.resume = true;
+    }
+    if cfg.resume {
+        let dir = cfg.state_dir.as_ref().context("--resume requires --state-dir")?;
+        let log = dir.join(tftune::config::SESSION_LOG);
+        let done = if log.exists() {
+            tftune::History::load(&log, &cfg.model.space())?.len()
+        } else {
+            0
+        };
+        println!(
+            "resuming from {}: {done} completed trial(s), {} of {} iteration(s) remaining",
+            log.display(),
+            cfg.iterations.saturating_sub(done),
+            cfg.iterations
+        );
+    }
 
     println!(
         "tuning {} with {} for {} iterations (seed {}, parallel {}, surrogate {}, objective {})",
@@ -287,13 +319,76 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_surrogate_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7071");
-    let (server, _factor) =
-        TargetServer::bind_surrogate_only(addr, tftune::gp::GpHyper::default())?;
+    let state_dir = args.get("state-dir").map(PathBuf::from);
+
+    // With --state-dir the served factor is durable: recover whatever a
+    // previous daemon left behind (bit-identical snapshot + WAL replay),
+    // journal every mutation from here on, and checkpoint periodically in
+    // the background, off the model lock.
+    let (server, factor, persistence) = match &state_dir {
+        Some(dir) => {
+            let fsync_every = args.usize_or("fsync-every", 1)?;
+            let recovered = tftune::persist::recover(dir, tftune::gp::GpHyper::default())?;
+            if !recovered.surrogate.is_empty() {
+                println!(
+                    "restored {} observation(s) from {} (snapshot seq {}, {} WAL \
+                     record(s) replayed)",
+                    recovered.surrogate.len(),
+                    dir.display(),
+                    recovered
+                        .snapshot_seq
+                        .map_or("none".to_string(), |s| s.to_string()),
+                    recovered.replayed
+                );
+            }
+            let persistence = tftune::persist::attach(
+                &recovered.surrogate,
+                dir,
+                tftune::persist::PersistOptions { fsync_every },
+            )?;
+            let (server, factor) =
+                TargetServer::bind_surrogate_with(addr, recovered.surrogate)?;
+            (server, factor, Some(std::sync::Arc::new(persistence)))
+        }
+        None => {
+            let (server, factor) =
+                TargetServer::bind_surrogate_only(addr, tftune::gp::GpHyper::default())?;
+            (server, factor, None)
+        }
+    };
     println!(
         "surrogate service hosting the shared GP factor on {} (protocol v{})",
         server.local_addr()?,
         tftune::server::proto::PROTOCOL_VERSION
     );
+    if let Some(p) = &persistence {
+        let every = args.f64_opt("snapshot-every")?.unwrap_or(30.0);
+        anyhow::ensure!(every > 0.0, "--snapshot-every must be positive seconds");
+        println!(
+            "durable state in {} (WAL fsync every {} record(s), snapshot every {every}s)",
+            p.dir().display(),
+            args.usize_or("fsync-every", 1)?
+        );
+        // Detached checkpoint thread: snapshots only when the store grew,
+        // and dies with the process (the WAL alone already recovers the
+        // tail; the final snapshot below covers clean shutdown).
+        let p = std::sync::Arc::clone(p);
+        let snap_factor = factor.clone();
+        std::thread::spawn(move || {
+            let mut last = snap_factor.total_observations();
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs_f64(every));
+                let now = snap_factor.total_observations();
+                if now == last {
+                    continue;
+                }
+                match p.snapshot(&snap_factor) {
+                    Ok(seq) => last = now.max(seq),
+                    Err(e) => eprintln!("tftune: background snapshot failed: {e}"),
+                }
+            }
+        });
+    }
     if let Some(spec) = args.get("objectives") {
         // The served store accepts whatever objective columns arrive;
         // the declaration here is validated and echoed so operators see
@@ -308,6 +403,12 @@ fn cmd_surrogate_serve(args: &Args) -> Result<()> {
     }
     println!("attach tuners with: tftune tune --alg bo --surrogate-addr <this address> ...");
     server.serve()?;
+    if let Some(p) = &persistence {
+        // Clean shutdown: one final snapshot so the next boot replays no
+        // WAL suffix at all.
+        let seq = p.snapshot(&factor)?;
+        println!("final snapshot written at seq {seq}");
+    }
     println!("surrogate service shut down");
     Ok(())
 }

@@ -1,0 +1,288 @@
+//! The durable persistence plane: snapshot + write-ahead log with
+//! bit-identical crash recovery for the shared surrogate.
+//!
+//! The paper's campaigns are long black-box searches where every trial
+//! is an expensive real measurement — yet the authoritative packed
+//! Cholesky factor, the observation store and the multi-objective
+//! history all live in memory. This module makes them survive a crash:
+//!
+//! - [`snapshot`] — periodic checksummed captures of the full model
+//!   (observation rows + extras, hypers, and the packed factor when it
+//!   covers the store prefix), written atomically off the model lock.
+//! - [`wal`] — a write-ahead log of every store mutation between
+//!   snapshots, appended *under the model-state lock* by a journal hook
+//!   inside [`SharedSurrogate`], fsync'd on a configurable cadence. WAL
+//!   order is store-mutation order by construction, and the number of
+//!   `tell` records always equals the store length.
+//! - [`recover`](crate::persist::recover()) — newest valid snapshot +
+//!   WAL-suffix replay through the existing `factor_suffix`/`import_row`
+//!   and drain machinery, restoring the factor **bit-identically** to
+//!   the pre-crash authority (same ≤-exact standard the replica-parity
+//!   suite pins). Torn WAL tails are truncated; corrupt snapshots fall
+//!   back to full-log replay.
+//!
+//! # Wiring
+//!
+//! `surrogate-serve --state-dir DIR` recovers on boot, attaches the
+//! journal, and checkpoints in the background; `tune --state-dir DIR`
+//! additionally streams each completed trial to `DIR/session.jsonl` so
+//! `--resume` continues an interrupted budget. In-process, attach
+//! durability to any [`SharedSurrogate`] directly:
+//!
+//! ```
+//! use tftune::gp::{GpHyper, SharedSurrogate};
+//! use tftune::persist::{self, PersistOptions};
+//!
+//! let dir = std::env::temp_dir().join("tftune_doc_persist");
+//! # std::fs::remove_dir_all(&dir).ok();
+//! let shared = SharedSurrogate::new(GpHyper::default());
+//! let persistence =
+//!     persist::attach(&shared, &dir, PersistOptions::default()).unwrap();
+//! shared.tell(vec![0.25, 0.75], 1.5); // journaled on next drain
+//! drop(shared.lock());
+//! persistence.snapshot(&shared).unwrap();
+//!
+//! // …crash… then restore, bit-identically:
+//! let restored = persist::recover(&dir, GpHyper::default()).unwrap();
+//! assert_eq!(restored.surrogate.len(), 1);
+//! # std::fs::remove_dir_all(&dir).ok();
+//! ```
+//!
+//! Attach the journal to the **authoritative** handle only. A
+//! [`RemoteSurrogate`](crate::gp::RemoteSurrogate) mirror replicates a
+//! factor that is already journaled at its served authority; journaling
+//! it again would record the same history twice.
+
+pub mod recover;
+pub mod snapshot;
+pub mod wal;
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::gp::shared::JournalEvent;
+use crate::gp::SharedSurrogate;
+
+pub use recover::Recovered;
+pub use snapshot::{list_snapshots, snapshot_path, write_snapshot, SNAPSHOTS_KEPT};
+pub use wal::{read_wal, wal_path, WalRecord, WalWriter, WAL_FILE};
+
+/// Tunables for [`attach`].
+#[derive(Debug, Clone, Copy)]
+pub struct PersistOptions {
+    /// Fsync the WAL after every `n` appended records; `0` buffers until
+    /// an explicit sync or snapshot. Default 1 — every measurement is
+    /// paid for with real evaluation time, so losing even one to a crash
+    /// costs more than an fsync (see ARCHITECTURE.md §Durability for the
+    /// cadence trade-off).
+    pub fsync_every: usize,
+}
+
+impl Default for PersistOptions {
+    fn default() -> PersistOptions {
+        PersistOptions { fsync_every: 1 }
+    }
+}
+
+/// Handle to an attached journal: owns the WAL writer shared with the
+/// surrogate's journal hook and knows the state directory, so callers
+/// can snapshot and sync through one object.
+pub struct Persistence {
+    dir: PathBuf,
+    writer: Arc<Mutex<WalWriter>>,
+}
+
+impl Persistence {
+    /// The state directory this journal writes into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Capture and write one snapshot of `surrogate` (atomic, keeps the
+    /// newest [`SNAPSHOTS_KEPT`]), then fsync the WAL so every row the
+    /// snapshot contains is also durable in the log — full-log fallback
+    /// stays valid even if this snapshot is later corrupted. Returns the
+    /// snapshot's `seq`.
+    pub fn snapshot(&self, surrogate: &SharedSurrogate) -> Result<usize> {
+        let seq = write_snapshot(surrogate, &self.dir)?;
+        self.sync()?;
+        Ok(seq)
+    }
+
+    /// Flush and fsync the WAL now, regardless of cadence.
+    pub fn sync(&self) -> Result<()> {
+        self.writer.lock().unwrap().sync()
+    }
+}
+
+/// Install the durability journal on `surrogate`: every store mutation
+/// (stored row, hyper change) from this point on is appended to
+/// `dir/wal.jsonl` in store order, honouring `opts.fsync_every`.
+///
+/// Safe on a warm surrogate: if the WAL holds fewer `tell` records than
+/// the store (fresh directory, or rows told before attachment), the gap
+/// is backfilled first so the log always describes the whole store.
+/// Attach to the *authoritative* handle only (module docs); attach
+/// *after* [`recover`](crate::persist::recover()) so replay is never
+/// journaled twice.
+pub fn attach(
+    surrogate: &SharedSurrogate,
+    dir: &Path,
+    opts: PersistOptions,
+) -> Result<Persistence> {
+    // Drain pending tells so the store — and the backfill below — is
+    // current before the journal starts observing mutations.
+    drop(surrogate.lock());
+
+    let mut writer = WalWriter::open(dir, opts.fsync_every)?;
+
+    // Backfill: the WAL must be a prefix of the store's history.
+    let on_disk = read_wal(&wal_path(dir))?.tell_count();
+    let store_len = surrogate.len();
+    if on_disk < store_len {
+        let missing = surrogate
+            .export_delta(on_disk)
+            .expect("store length bounds the export");
+        for (k, (x, y)) in missing.rows.iter().enumerate() {
+            writer.append(&WalRecord::Tell {
+                x: x.clone(),
+                value: *y,
+                objectives: missing.extras.get(k).cloned().unwrap_or_default(),
+            });
+        }
+        writer.sync()?;
+    }
+
+    let writer = Arc::new(Mutex::new(writer));
+    let hook_writer = Arc::clone(&writer);
+    // The hook runs under the model-state lock; the writer mutex nests
+    // strictly below it (nobody takes state while holding the writer).
+    surrogate.set_journal(move |event| {
+        let mut w = hook_writer.lock().unwrap();
+        match event {
+            JournalEvent::Row { x, y, extras } => w.append(&WalRecord::Tell {
+                x: x.to_vec(),
+                value: y,
+                objectives: extras.to_vec(),
+            }),
+            JournalEvent::Hyper(h) => w.append(&WalRecord::SetHyper(h)),
+        }
+    });
+    Ok(Persistence { dir: dir.to_path_buf(), writer })
+}
+
+/// Rebuild a surrogate from `dir` — see [`recover::recover`].
+pub fn recover(dir: &Path, default_hyper: crate::gp::GpHyper) -> Result<Recovered> {
+    recover::recover(dir, default_hyper)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::{GpHyper, SurrogateHandle};
+    use crate::util::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tftune_persist_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn factor_bits(s: &SharedSurrogate) -> Vec<u64> {
+        let delta = s.export_delta(0).unwrap();
+        delta.factor.expect("factor present").iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn journal_records_drains_and_hyper_changes_in_order() {
+        let dir = tmp_dir("order");
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let p = attach(&shared, &dir, PersistOptions { fsync_every: 1 }).unwrap();
+        shared.tell(vec![0.1, 0.2], 1.0);
+        shared.tell_multi(vec![0.3, 0.4], vec![2.0, -0.5]);
+        drop(shared.lock());
+        let new = GpHyper { lengthscale: 0.5, ..GpHyper::default() };
+        shared.set_hyper(new);
+        shared.tell(vec![0.5, 0.6], 3.0);
+        drop(shared.lock());
+        p.sync().unwrap();
+
+        let wal = read_wal(&wal_path(&dir)).unwrap();
+        assert_eq!(wal.records.len(), 4);
+        assert!(matches!(&wal.records[0], WalRecord::Tell { value, .. } if *value == 1.0));
+        assert!(
+            matches!(&wal.records[1], WalRecord::Tell { objectives, .. } if objectives == &vec![-0.5])
+        );
+        assert!(matches!(&wal.records[2], WalRecord::SetHyper(h) if *h == new));
+        assert!(matches!(&wal.records[3], WalRecord::Tell { value, .. } if *value == 3.0));
+        assert_eq!(wal.tell_count(), shared.len(), "WAL tells == store length invariant");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dropped_rows_are_never_journaled() {
+        let dir = tmp_dir("dropped");
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let _p = attach(&shared, &dir, PersistOptions::default()).unwrap();
+        shared.tell(vec![0.1, 0.2], 1.0);
+        shared.tell(vec![0.3], 2.0); // wrong dimension: dropped on drain
+        shared.tell(vec![0.7, 0.8], 3.0);
+        drop(shared.lock());
+        let wal = read_wal(&wal_path(&dir)).unwrap();
+        assert_eq!(wal.tell_count(), 2, "the dropped row must not reach the WAL");
+        assert_eq!(wal.tell_count(), shared.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn attach_backfills_a_warm_surrogate() {
+        let dir = tmp_dir("backfill");
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let mut rng = Rng::new(23);
+        for _ in 0..5 {
+            shared.tell_multi(vec![rng.f64(), rng.f64()], vec![rng.f64(), 9.0]);
+        }
+        // Rows exist before any journal: attach must backfill them.
+        let p = attach(&shared, &dir, PersistOptions::default()).unwrap();
+        shared.tell(vec![0.5, 0.5], 7.0);
+        drop(shared.lock());
+        p.sync().unwrap();
+        let wal = read_wal(&wal_path(&dir)).unwrap();
+        assert_eq!(wal.tell_count(), 6);
+        match &wal.records[0] {
+            WalRecord::Tell { objectives, .. } => assert_eq!(objectives, &vec![9.0]),
+            other => panic!("unexpected {other:?}"),
+        }
+        // The backfilled log replays to the same factor.
+        let r = recover(&dir, GpHyper::default()).unwrap();
+        assert_eq!(factor_bits(&shared), factor_bits(&r.surrogate));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_then_more_tells_then_recover() {
+        let dir = tmp_dir("cycle");
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let p = attach(&shared, &dir, PersistOptions::default()).unwrap();
+        let mut rng = Rng::new(29);
+        for _ in 0..6 {
+            shared.tell(vec![rng.f64(), rng.f64()], rng.f64());
+        }
+        let seq = p.snapshot(&shared).unwrap();
+        assert_eq!(seq, 6, "snapshot drains pending tells before capture");
+        for _ in 0..4 {
+            shared.tell(vec![rng.f64(), rng.f64()], rng.f64());
+        }
+        drop(shared.lock());
+        p.sync().unwrap();
+
+        let r = recover(&dir, GpHyper::default()).unwrap();
+        assert_eq!(r.snapshot_seq, Some(6));
+        assert_eq!(r.replayed, 4);
+        assert_eq!(r.surrogate.len(), 10);
+        assert_eq!(factor_bits(&shared), factor_bits(&r.surrogate));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,335 @@
+//! Crash recovery: rebuild the authoritative [`SharedSurrogate`] from a
+//! state directory, bit-identically to the pre-crash factor.
+//!
+//! Sequence (ARCHITECTURE.md §Durability):
+//!
+//! 1. Read the WAL; truncate a torn tail to the last complete record.
+//! 2. Scan snapshots newest-first; the first one that validates
+//!    (checksum, version, counts) seeds the store — its packed factor
+//!    rows are imported *verbatim* through the same
+//!    `factor_suffix`/`import_row` machinery replica catch-up uses, so
+//!    the restored factor is byte-for-byte the authority's.
+//! 3. Replay the WAL suffix: skip records up to the snapshot's `seq`-th
+//!    `tell`, then apply the rest in order through the ordinary
+//!    `tell_multi`/`set_hyper` drain path — identical float ops over an
+//!    identical store prefix, hence identical eager rank-1 appends.
+//!    Re-applying a `set-hyper` the snapshot already reflects is a
+//!    no-op (hyper equality check), so the snapshot boundary cannot
+//!    double-apply anything.
+//! 4. If every snapshot is corrupt (or none exists), fall back to
+//!    full-log replay from `seq` 0.
+//! 5. Heal: if the WAL holds fewer `tell` records than the recovered
+//!    store (a snapshot outlived an unsynced or poisoned WAL tail),
+//!    append the missing rows back so full-log fallback stays valid for
+//!    the *next* crash.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::gp::{GpHyper, SharedSurrogate};
+
+use super::snapshot::{list_snapshots, load_snapshot};
+use super::wal::{read_wal, truncate_wal, wal_path, WalRecord, WalWriter};
+
+/// The outcome of [`recover`]: the rebuilt surrogate plus what it took.
+pub struct Recovered {
+    /// The restored authoritative surrogate (journal *not* attached —
+    /// callers attach one after recovery so replay is never re-journaled).
+    pub surrogate: SharedSurrogate,
+    /// `seq` of the snapshot that seeded the store; `None` for full-log
+    /// replay (no snapshot, or every snapshot corrupt).
+    pub snapshot_seq: Option<usize>,
+    /// WAL records applied on top of the snapshot.
+    pub replayed: usize,
+    /// Bytes of torn WAL tail truncated away.
+    pub truncated_bytes: u64,
+    /// Store rows appended back into the WAL by the heal pass.
+    pub healed: usize,
+}
+
+/// Rebuild the surrogate from `dir` (see module docs). An empty or
+/// absent directory recovers to a fresh, empty surrogate conditioned
+/// with `default_hyper` — so one code path serves cold start and
+/// restart alike.
+pub fn recover(dir: &Path, default_hyper: GpHyper) -> Result<Recovered> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating state dir {}", dir.display()))?;
+
+    // 1. The WAL, torn tail removed.
+    let path = wal_path(dir);
+    let wal = read_wal(&path)?;
+    let mut truncated_bytes = 0;
+    if wal.torn {
+        let total = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(wal.valid_len);
+        truncated_bytes = total - wal.valid_len;
+        eprintln!(
+            "tftune: truncating {truncated_bytes} byte(s) of torn WAL tail in {}",
+            dir.display()
+        );
+        truncate_wal(&path, wal.valid_len)?;
+    }
+
+    // 2. Newest valid snapshot seeds the store.
+    let mut surrogate = None;
+    let mut snapshot_seq = None;
+    for (seq, snap_path) in list_snapshots(dir)? {
+        match load_snapshot(&snap_path) {
+            Ok(delta) => {
+                let restored = SharedSurrogate::new(delta.hyper);
+                // from_n = 0 against an empty store: always applies.
+                // Factor rows (when present) import verbatim.
+                assert!(restored.import_delta(&delta), "empty store accepts a full delta");
+                surrogate = Some(restored);
+                snapshot_seq = Some(seq);
+                break;
+            }
+            Err(e) => {
+                eprintln!(
+                    "tftune: snapshot {} invalid ({e}); falling back to the previous one",
+                    snap_path.display()
+                );
+            }
+        }
+    }
+    let surrogate = match surrogate {
+        Some(s) => s,
+        None => SharedSurrogate::new(default_hyper), // full-log replay
+    };
+    let seq = snapshot_seq.unwrap_or(0);
+
+    // 3./4. Replay the WAL suffix: skip through the seq-th tell (hyper
+    // records in that prefix are already reflected by the snapshot's
+    // hyper — state mutation precedes its journal write under one lock),
+    // apply everything after in order.
+    let mut tells_seen = 0usize;
+    let mut replayed = 0usize;
+    for record in &wal.records {
+        if tells_seen < seq {
+            if let WalRecord::Tell { .. } = record {
+                tells_seen += 1;
+            }
+            continue;
+        }
+        match record {
+            WalRecord::Tell { x, value, objectives } => {
+                let mut ys = Vec::with_capacity(1 + objectives.len());
+                ys.push(*value);
+                ys.extend_from_slice(objectives);
+                surrogate.tell_multi(x.clone(), ys);
+            }
+            // set_hyper drains queued tells first (its guard's lock), so
+            // replay order is preserved; an equal hyper is a no-op.
+            WalRecord::SetHyper(h) => surrogate.set_hyper(*h),
+        }
+        replayed += 1;
+    }
+    drop(surrogate.lock()); // drain the trailing tells into the factor
+
+    // 5. Heal: a snapshot newer than the surviving WAL leaves the log
+    // short; append the missing store rows so full-log fallback stays
+    // valid. (Journaled rows always passed the store's dimension check,
+    // so WAL tell k is store row k — indices align.)
+    let wal_tells = wal.tell_count();
+    let store_len = surrogate.len();
+    let mut healed = 0usize;
+    if wal_tells < store_len {
+        let missing = surrogate
+            .export_delta(wal_tells)
+            .expect("store length bounds the export");
+        match WalWriter::open(dir, 0) {
+            Ok(mut w) => {
+                for (k, (x, y)) in missing.rows.iter().enumerate() {
+                    w.append(&WalRecord::Tell {
+                        x: x.clone(),
+                        value: *y,
+                        objectives: missing.extras.get(k).cloned().unwrap_or_default(),
+                    });
+                }
+                if w.sync().is_ok() && !w.is_failed() {
+                    healed = missing.rows.len();
+                }
+            }
+            Err(e) => {
+                eprintln!("tftune: could not heal the WAL ({e}); continuing without it")
+            }
+        }
+    }
+
+    Ok(Recovered { surrogate, snapshot_seq, replayed, truncated_bytes, healed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::snapshot::{snapshot_path, write_snapshot};
+    use super::*;
+    use crate::gp::{ScoreWorkspace, SurrogateHandle};
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tftune_recover_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn factor_bits(s: &SharedSurrogate) -> Vec<u64> {
+        let delta = s.export_delta(0).unwrap();
+        delta.factor.expect("factor covers the store prefix").iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn fresh_dir_recovers_empty() {
+        let dir = tmp_dir("fresh");
+        let r = recover(&dir, GpHyper::default()).unwrap();
+        assert_eq!(r.surrogate.len(), 0);
+        assert_eq!(r.snapshot_seq, None);
+        assert_eq!(r.replayed, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_plus_wal_suffix_restores_bit_identically() {
+        let dir = tmp_dir("bitwise");
+        let hyper = GpHyper::default();
+        let authority = SharedSurrogate::new(hyper);
+        let mut w = WalWriter::open(&dir, 1).unwrap();
+        let mut rng = Rng::new(11);
+        let mut tell = |s: &SharedSurrogate, w: &mut WalWriter| {
+            let x: Vec<f64> = (0..3).map(|_| rng.f64()).collect();
+            let y = (5.0 * x[0]).cos() + x[1];
+            s.tell(x.clone(), y);
+            w.append(&WalRecord::Tell { x, value: y, objectives: Vec::new() });
+        };
+        for _ in 0..10 {
+            tell(&authority, &mut w);
+        }
+        drop(authority.lock());
+        write_snapshot(&authority, &dir).unwrap();
+        for _ in 0..7 {
+            tell(&authority, &mut w); // WAL suffix past the snapshot
+        }
+        drop(authority.lock());
+        drop(w);
+
+        let r = recover(&dir, hyper).unwrap();
+        assert_eq!(r.snapshot_seq, Some(10));
+        assert_eq!(r.replayed, 7);
+        assert_eq!(r.surrogate.len(), 17);
+        assert_eq!(
+            factor_bits(&authority),
+            factor_bits(&r.surrogate),
+            "restored packed factor must be bit-identical"
+        );
+
+        // And the posterior it serves is bit-identical too.
+        let cand: Vec<f64> = (0..6).map(|_| rng.f64()).collect();
+        let (mut wa, mut wb) = (ScoreWorkspace::default(), ScoreWorkspace::default());
+        for (h, ws) in [(&authority, &mut wa), (&r.surrogate, &mut wb)] {
+            let mut g = h.lock();
+            let idx = g.conditioning_set();
+            assert!(g.sync(&idx));
+            let y: Vec<f64> = idx.iter().map(|&i| g.y(i)).collect();
+            g.set_targets(&y);
+            g.score_into(&cand, 2, 1.5, 0.0, ws);
+        }
+        for j in 0..2 {
+            assert_eq!(wa.mean[j].to_bits(), wb.mean[j].to_bits());
+            assert_eq!(wa.std[j].to_bits(), wb.std[j].to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_snapshot_falls_back_to_full_log_replay() {
+        let dir = tmp_dir("fallback");
+        let hyper = GpHyper::default();
+        let authority = SharedSurrogate::new(hyper);
+        let mut w = WalWriter::open(&dir, 1).unwrap();
+        let mut rng = Rng::new(13);
+        for _ in 0..8 {
+            let x: Vec<f64> = (0..2).map(|_| rng.f64()).collect();
+            let y = x[0] - x[1];
+            authority.tell(x.clone(), y);
+            w.append(&WalRecord::Tell { x, value: y, objectives: Vec::new() });
+        }
+        drop(authority.lock());
+        let seq = write_snapshot(&authority, &dir).unwrap();
+        drop(w);
+        // Corrupt the only snapshot: recovery must replay the whole log.
+        std::fs::write(snapshot_path(&dir, seq), b"{\"version\":1,garbage").unwrap();
+
+        let r = recover(&dir, hyper).unwrap();
+        assert_eq!(r.snapshot_seq, None, "corrupt snapshot must not seed the store");
+        assert_eq!(r.replayed, 8);
+        assert_eq!(factor_bits(&authority), factor_bits(&r.surrogate));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hyper_changes_replay_in_order() {
+        let dir = tmp_dir("hyper");
+        let hyper = GpHyper::default();
+        let authority = SharedSurrogate::new(hyper);
+        let mut w = WalWriter::open(&dir, 1).unwrap();
+        let mut rng = Rng::new(17);
+        for i in 0..9 {
+            if i == 4 {
+                let new = GpHyper { lengthscale: 0.5, ..hyper };
+                authority.set_hyper(new);
+                w.append(&WalRecord::SetHyper(new));
+            }
+            let x: Vec<f64> = (0..2).map(|_| rng.f64()).collect();
+            let y = (3.0 * x[0]).sin();
+            authority.tell(x.clone(), y);
+            w.append(&WalRecord::Tell { x, value: y, objectives: Vec::new() });
+        }
+        drop(authority.lock());
+        drop(w);
+
+        let r = recover(&dir, hyper).unwrap();
+        assert_eq!(r.surrogate.hyper(), authority.hyper());
+        assert_eq!(r.surrogate.len(), 9);
+        assert_eq!(factor_bits(&authority), factor_bits(&r.surrogate));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_newer_than_wal_heals_the_log() {
+        let dir = tmp_dir("heal");
+        let hyper = GpHyper::default();
+        let authority = SharedSurrogate::new(hyper);
+        let mut rng = Rng::new(19);
+        // Rows reach the snapshot but never the WAL (e.g. a poisoned
+        // writer): recovery restores from the snapshot and heals.
+        for _ in 0..6 {
+            let x: Vec<f64> = (0..2).map(|_| rng.f64()).collect();
+            authority.tell_multi(x, vec![rng.f64(), -1.5]);
+        }
+        drop(authority.lock());
+        write_snapshot(&authority, &dir).unwrap();
+
+        let r = recover(&dir, hyper).unwrap();
+        assert_eq!(r.snapshot_seq, Some(6));
+        assert_eq!(r.healed, 6);
+        assert_eq!(factor_bits(&authority), factor_bits(&r.surrogate));
+        let wal = read_wal(&wal_path(&dir)).unwrap();
+        assert_eq!(wal.tell_count(), 6, "healed WAL covers the whole store");
+        match &wal.records[0] {
+            WalRecord::Tell { objectives, .. } => {
+                assert_eq!(objectives, &vec![-1.5], "extras survive the heal")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // A second recovery now works even without the snapshot at all.
+        for (_, p) in list_snapshots(&dir).unwrap() {
+            std::fs::remove_file(p).unwrap();
+        }
+        let r2 = recover(&dir, hyper).unwrap();
+        assert_eq!(r2.snapshot_seq, None);
+        assert_eq!(factor_bits(&authority), factor_bits(&r2.surrogate));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

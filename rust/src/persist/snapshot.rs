@@ -1,0 +1,310 @@
+//! Checksummed snapshots of the shared surrogate: the full canonical
+//! observation store, the hypers, and — when the factor covers exactly
+//! the store prefix (eager factoring's steady state) — the packed
+//! Cholesky factor itself, byte-for-byte.
+//!
+//! On-disk format (`snapshot-<seq>.json`, one JSON object):
+//!
+//! ```text
+//! {"checksum":"<fnv1a64 hex>",
+//!  "factor":[<f64>...]|null,
+//!  "hyper":{...},
+//!  "rows":[{"x":[...],"y":<f64>[,"ys":[...]]},...],
+//!  "seq":<n>,
+//!  "version":1}
+//! ```
+//!
+//! `seq` is the store length the snapshot captures — recovery skips that
+//! many `tell` records of the WAL and replays the rest. The checksum is
+//! FNV-1a 64 over the canonical serialization of the object *without*
+//! the checksum field; the JSON codec is deterministic (sorted keys,
+//! shortest-round-trip f64s), so verification is re-serialize + compare.
+//! Writes are atomic: temp file, fsync, rename, directory fsync — a
+//! crash mid-write leaves either the old snapshot set or the new one,
+//! never a half-written file that passes validation.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::gp::{SharedSurrogate, SurrogateDelta};
+use crate::server::proto::{
+    f64_vec, hyper_from_json, hyper_to_json, rows_from_json, rows_to_json,
+};
+use crate::util::json::{parse, Json};
+
+/// Snapshot format version this build writes (and the only one it reads).
+pub const SNAPSHOT_VERSION: i64 = 1;
+
+/// How many snapshots [`write_snapshot`] retains (newest first). Two, so
+/// a corrupt newest snapshot still recovers from its predecessor plus a
+/// longer WAL replay before falling all the way back to full-log replay.
+pub const SNAPSHOTS_KEPT: usize = 2;
+
+/// FNV-1a 64-bit — cheap, dependency-free corruption check (this guards
+/// against torn writes and bit rot, not adversaries).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x1_0000_01b3);
+    }
+    hash
+}
+
+/// Path of the snapshot capturing `seq` store rows inside `dir`.
+pub fn snapshot_path(dir: &Path, seq: usize) -> PathBuf {
+    dir.join(format!("snapshot-{seq}.json"))
+}
+
+/// The checksummed payload fields, canonically serialized.
+fn payload_json(delta: &SurrogateDelta) -> Json {
+    Json::obj(vec![
+        (
+            "factor",
+            match &delta.factor {
+                Some(f) => Json::from_f64s(f),
+                None => Json::Null,
+            },
+        ),
+        ("hyper", hyper_to_json(&delta.hyper)),
+        ("rows", rows_to_json(&delta.rows, &delta.extras)),
+        ("seq", (delta.total_n as i64).into()),
+        ("version", SNAPSHOT_VERSION.into()),
+    ])
+}
+
+/// Capture and atomically write one snapshot of `surrogate` into `dir`,
+/// pruning all but the newest [`SNAPSHOTS_KEPT`]. Returns the snapshot's
+/// `seq` (the store length captured). The capture itself is one short
+/// pass under the model lock ([`SharedSurrogate::export_delta`] — it
+/// drains pending tells first); serialization and file I/O run off it.
+pub fn write_snapshot(surrogate: &SharedSurrogate, dir: &Path) -> Result<usize> {
+    let delta = surrogate
+        .export_delta(0)
+        .expect("export_delta(0) is always satisfiable");
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating state dir {}", dir.display()))?;
+
+    // Serialize off the model lock: checksum over the payload without the
+    // checksum field, then splice the checksum in as another sorted key.
+    let payload = payload_json(&delta);
+    let checksum = fnv1a64(payload.to_string().as_bytes());
+    let full = match payload {
+        Json::Obj(mut map) => {
+            map.insert("checksum".to_string(), format!("{checksum:016x}").as_str().into());
+            Json::Obj(map)
+        }
+        _ => unreachable!("payload is an object"),
+    };
+
+    let seq = delta.total_n;
+    let path = snapshot_path(dir, seq);
+    let tmp = dir.join(format!("snapshot-{seq}.json.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(full.to_string().as_bytes()).context("writing snapshot")?;
+        f.write_all(b"\n").context("writing snapshot")?;
+        f.sync_all().context("fsyncing snapshot")?;
+    }
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing snapshot {}", path.display()))?;
+    // Make the rename itself durable (directory metadata).
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+
+    for (_, stale_path) in list_snapshots(dir)?.into_iter().skip(SNAPSHOTS_KEPT) {
+        std::fs::remove_file(stale_path).ok();
+    }
+    Ok(seq)
+}
+
+/// Snapshots inside `dir`, newest (highest `seq`) first.
+pub fn list_snapshots(dir: &Path) -> Result<Vec<(usize, PathBuf)>> {
+    let mut found = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(found),
+        Err(e) => {
+            return Err(e).with_context(|| format!("listing state dir {}", dir.display()))
+        }
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let Some(seq) = name
+            .strip_prefix("snapshot-")
+            .and_then(|rest| rest.strip_suffix(".json"))
+            .and_then(|s| s.parse::<usize>().ok())
+        else {
+            continue;
+        };
+        found.push((seq, path));
+    }
+    found.sort_by(|a, b| b.0.cmp(&a.0));
+    Ok(found)
+}
+
+/// Load and validate one snapshot file. Errors cover everything a crash
+/// or bit rot can produce: unreadable file, unparsable JSON, checksum
+/// mismatch, unknown version, or internally inconsistent counts.
+pub fn load_snapshot(path: &Path) -> Result<SurrogateDelta, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let j = parse(text.trim()).map_err(|e| format!("{}: {e}", path.display()))?;
+
+    let version = j
+        .get("version")
+        .and_then(Json::as_i64)
+        .ok_or_else(|| "missing 'version'".to_string())?;
+    if version != SNAPSHOT_VERSION {
+        return Err(format!("unsupported snapshot version {version}"));
+    }
+    let stored_sum = j
+        .get("checksum")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing 'checksum'".to_string())?
+        .to_string();
+
+    let seq = j
+        .get("seq")
+        .and_then(Json::as_i64)
+        .and_then(|n| usize::try_from(n).ok())
+        .ok_or_else(|| "missing non-negative 'seq'".to_string())?;
+    let hyper = hyper_from_json(j.req("hyper").map_err(|e| e.to_string())?)?;
+    let (rows, extras) = rows_from_json(j.req("rows").map_err(|e| e.to_string())?)?;
+    let factor = match j.get("factor") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(f64_vec(v)?),
+    };
+
+    // Verify before trusting the contents: re-serialize the payload
+    // canonically (the decode above is bit-exact) and compare checksums.
+    let delta = SurrogateDelta {
+        from_n: 0,
+        total_n: seq,
+        hyper,
+        rows,
+        extras,
+        factor,
+        leases: Vec::new(),
+    };
+    let expect = fnv1a64(payload_json(&delta).to_string().as_bytes());
+    if format!("{expect:016x}") != stored_sum {
+        return Err(format!(
+            "checksum mismatch in {} (stored {stored_sum}, computed {expect:016x})",
+            path.display()
+        ));
+    }
+    if delta.rows.len() != seq {
+        return Err(format!("snapshot seq {seq} disagrees with {} rows", delta.rows.len()));
+    }
+    Ok(delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::GpHyper;
+    use crate::util::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tftune_snap_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn filled(n: usize, seed: u64) -> SharedSurrogate {
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let mut rng = Rng::new(seed);
+        for _ in 0..n {
+            let x: Vec<f64> = (0..3).map(|_| rng.f64()).collect();
+            let y = (4.0 * x[0]).sin() + 0.2 * x[2];
+            shared.tell_multi(x, vec![y, -y, f64::NAN]);
+        }
+        drop(shared.lock());
+        shared
+    }
+
+    #[test]
+    fn snapshot_round_trip_is_bitwise() {
+        let dir = tmp_dir("rt");
+        let shared = filled(12, 3);
+        let seq = write_snapshot(&shared, &dir).unwrap();
+        assert_eq!(seq, 12);
+        let delta = load_snapshot(&snapshot_path(&dir, seq)).unwrap();
+        assert_eq!(delta.total_n, 12);
+        assert!(delta.factor.is_some(), "eagerly factored store exports its factor");
+
+        let want = shared.export_delta(0).unwrap();
+        assert_eq!(delta.rows.len(), want.rows.len());
+        for ((x, y), (wx, wy)) in delta.rows.iter().zip(&want.rows) {
+            assert_eq!(y.to_bits(), wy.to_bits());
+            for (a, b) in x.iter().zip(wx) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        for (e, we) in delta.extras.iter().zip(&want.extras) {
+            assert_eq!(e.len(), we.len());
+            for (a, b) in e.iter().zip(we) {
+                assert_eq!(a.to_bits(), b.to_bits(), "extras must round trip bitwise");
+            }
+        }
+        for (a, b) in delta.factor.as_ref().unwrap().iter().zip(want.factor.as_ref().unwrap())
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "packed factor must round trip bitwise");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pruning_keeps_the_newest_two() {
+        let dir = tmp_dir("prune");
+        let shared = SharedSurrogate::new(GpHyper::default());
+        let mut rng = Rng::new(5);
+        for k in 0..3 {
+            for _ in 0..(k + 1) {
+                shared.tell(vec![rng.f64(), rng.f64()], rng.f64());
+            }
+            write_snapshot(&shared, &dir).unwrap();
+        }
+        let kept = list_snapshots(&dir).unwrap();
+        assert_eq!(kept.len(), SNAPSHOTS_KEPT);
+        assert_eq!(kept[0].0, 6, "newest first");
+        assert_eq!(kept[1].0, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_fails_validation() {
+        let dir = tmp_dir("corrupt");
+        let shared = filled(6, 9);
+        let seq = write_snapshot(&shared, &dir).unwrap();
+        let path = snapshot_path(&dir, seq);
+        let good = std::fs::read_to_string(&path).unwrap();
+
+        // Flip one digit inside the rows payload.
+        let target = good.find("\"rows\"").unwrap();
+        let mut bad = good.clone().into_bytes();
+        let flip = bad[target..].iter().position(|b| b.is_ascii_digit()).unwrap() + target;
+        bad[flip] = if bad[flip] == b'9' { b'8' } else { b'9' };
+        std::fs::write(&path, &bad).unwrap();
+        let err = load_snapshot(&path).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        // Truncated file (torn write that somehow skipped the tmp+rename
+        // discipline) fails parse, not a panic.
+        std::fs::write(&path, &good.as_bytes()[..good.len() / 2]).unwrap();
+        assert!(load_snapshot(&path).is_err());
+
+        // Unknown version is refused.
+        std::fs::write(&path, good.replace("\"version\":1", "\"version\":9")).unwrap();
+        let err = load_snapshot(&path).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,366 @@
+//! The write-ahead log: an append-only JSONL file recording every store
+//! mutation of the authoritative [`SharedSurrogate`] between snapshots.
+//!
+//! Record shapes reuse the `History`/`Evaluation` JSONL vocabulary
+//! (`"value"` / `"objectives"`, NaN travelling as `null`) and the
+//! surrogate wire codec for hypers, so every f64 — including packed
+//! factor inputs — survives the file bit-exactly (shortest-round-trip
+//! encode, correctly-rounded parse; pinned in `server::proto`):
+//!
+//! ```text
+//! {"kind":"tell","x":[...],"value":<f64>[,"objectives":[<f64>|null,...]]}
+//! {"kind":"set-hyper","hyper":{...}}
+//! ```
+//!
+//! `x` is the observation in unit-cube coordinates, `value` the primary
+//! objective, `objectives` the *secondary* columns (present only for
+//! multi-objective rows — mirrors the optional `"ys"` of the wire's
+//! `tell-obs`). The log is strictly ordered: the journal hook appends
+//! under the model-state lock, so WAL record order *is* store mutation
+//! order, and the number of `tell` records equals the store length.
+//!
+//! A reader tolerates a **torn tail** — a partial line from a crash
+//! mid-write — by reporting the byte length of the valid prefix;
+//! recovery truncates the file there. A writer that hits an I/O error
+//! poisons itself (no further appends) rather than leaving a hole in
+//! the middle of the log: a WAL must always be a *prefix* of the true
+//! history, never a subsequence.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::gp::GpHyper;
+use crate::server::proto::{
+    f64_vec, hyper_from_json, hyper_to_json, ys_from_json, ys_to_json,
+};
+use crate::util::json::{parse, Json};
+
+/// File name of the write-ahead log inside a state directory.
+pub const WAL_FILE: &str = "wal.jsonl";
+
+/// Path of the write-ahead log inside `dir`.
+pub fn wal_path(dir: &Path) -> PathBuf {
+    dir.join(WAL_FILE)
+}
+
+/// One durable store mutation (module docs for the wire shape).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    /// An observation row appended to the canonical store. `objectives`
+    /// holds the secondary columns only (empty = single-objective row;
+    /// NaN = declared column the trial could not measure).
+    Tell { x: Vec<f64>, value: f64, objectives: Vec<f64> },
+    /// The model switched hyperparameters.
+    SetHyper(GpHyper),
+}
+
+impl WalRecord {
+    /// One JSONL line, no trailing newline.
+    pub fn encode(&self) -> String {
+        match self {
+            WalRecord::Tell { x, value, objectives } => {
+                let mut pairs = vec![
+                    ("kind", "tell".into()),
+                    ("x", Json::from_f64s(x)),
+                    ("value", (*value).into()),
+                ];
+                if !objectives.is_empty() {
+                    pairs.push(("objectives", ys_to_json(objectives)));
+                }
+                Json::obj(pairs).to_string()
+            }
+            WalRecord::SetHyper(h) => Json::obj(vec![
+                ("kind", "set-hyper".into()),
+                ("hyper", hyper_to_json(h)),
+            ])
+            .to_string(),
+        }
+    }
+
+    pub fn decode(line: &str) -> Result<WalRecord, String> {
+        let j = parse(line).map_err(|e| e.to_string())?;
+        match j.get("kind").and_then(Json::as_str) {
+            Some("tell") => Ok(WalRecord::Tell {
+                x: f64_vec(j.req("x").map_err(|e| e.to_string())?)?,
+                value: j
+                    .get("value")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| "missing number 'value'".to_string())?,
+                objectives: match j.get("objectives") {
+                    Some(v) => ys_from_json(v)?,
+                    None => Vec::new(),
+                },
+            }),
+            Some("set-hyper") => Ok(WalRecord::SetHyper(
+                hyper_from_json(j.req("hyper").map_err(|e| e.to_string())?)?,
+            )),
+            other => Err(format!("unknown WAL record kind {other:?}")),
+        }
+    }
+}
+
+/// The decoded contents of a write-ahead log.
+pub struct WalContents {
+    /// Every record in the valid prefix, in append (= store) order.
+    pub records: Vec<WalRecord>,
+    /// Byte length of the valid prefix (complete, decodable lines).
+    pub valid_len: u64,
+    /// Whether bytes past `valid_len` exist — a torn tail from a crash
+    /// mid-append (or garbage). Recovery truncates the file there.
+    pub torn: bool,
+}
+
+impl WalContents {
+    /// Number of `tell` records — equals the store length the log
+    /// describes (the journal appends exactly one per stored row).
+    pub fn tell_count(&self) -> usize {
+        self.records.iter().filter(|r| matches!(r, WalRecord::Tell { .. })).count()
+    }
+}
+
+/// Read the WAL at `path`, stopping at the first incomplete or
+/// undecodable line. A missing file reads as an empty, untorn log.
+pub fn read_wal(path: &Path) -> Result<WalContents> {
+    let mut bytes = Vec::new();
+    match File::open(path) {
+        Ok(mut f) => {
+            f.read_to_end(&mut bytes)
+                .with_context(|| format!("reading WAL {}", path.display()))?;
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(WalContents { records: Vec::new(), valid_len: 0, torn: false });
+        }
+        Err(e) => {
+            return Err(e).with_context(|| format!("opening WAL {}", path.display()))
+        }
+    }
+    let mut records = Vec::new();
+    let mut valid_len = 0u64;
+    let mut offset = 0usize;
+    while let Some(nl) = bytes[offset..].iter().position(|&b| b == b'\n') {
+        let line = &bytes[offset..offset + nl];
+        let decoded = std::str::from_utf8(line).ok().and_then(|s| {
+            let s = s.trim();
+            if s.is_empty() { None } else { WalRecord::decode(s).ok() }
+        });
+        match decoded {
+            Some(rec) => {
+                records.push(rec);
+                offset += nl + 1;
+                valid_len = offset as u64;
+            }
+            // An undecodable *complete* line means everything after it is
+            // suspect too — treat it as the start of the torn tail.
+            None => break,
+        }
+    }
+    let torn = valid_len < bytes.len() as u64;
+    Ok(WalContents { records, valid_len, torn })
+}
+
+/// Truncate the WAL at `path` to `valid_len` bytes (drop a torn tail).
+pub fn truncate_wal(path: &Path, valid_len: u64) -> Result<()> {
+    let f = OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening WAL {} for truncation", path.display()))?;
+    f.set_len(valid_len).context("truncating torn WAL tail")?;
+    f.sync_all().context("syncing truncated WAL")?;
+    Ok(())
+}
+
+/// Appender for the write-ahead log, with a configurable fsync cadence.
+///
+/// `fsync_every = n` flushes *and fsyncs* after every `n` appended
+/// records (1 = maximum durability: every record is on disk before the
+/// measurement that produced it can be acted on further); `0` buffers
+/// until an explicit [`WalWriter::sync`] or drop — fastest, but a crash
+/// loses the buffered tail (recovery still restores a consistent prefix).
+pub struct WalWriter {
+    out: BufWriter<File>,
+    fsync_every: usize,
+    unsynced: usize,
+    failed: bool,
+}
+
+impl WalWriter {
+    /// Open (append, create) the WAL inside `dir`.
+    pub fn open(dir: &Path, fsync_every: usize) -> Result<WalWriter> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating state dir {}", dir.display()))?;
+        let path = wal_path(dir);
+        let file = OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(&path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        Ok(WalWriter { out: BufWriter::new(file), fsync_every, unsynced: 0, failed: false })
+    }
+
+    /// Append one record, honouring the fsync cadence. Best-effort: an
+    /// I/O error *poisons* the writer (all further appends are dropped
+    /// with one warning) so the log stays a prefix of the true history —
+    /// a hole in the middle would replay to a silently different model.
+    pub fn append(&mut self, record: &WalRecord) {
+        if self.failed {
+            return;
+        }
+        let result = writeln!(self.out, "{}", record.encode()).and_then(|()| {
+            self.unsynced += 1;
+            if self.fsync_every > 0 && self.unsynced >= self.fsync_every {
+                self.unsynced = 0;
+                self.out.flush()?;
+                self.out.get_ref().sync_data()?;
+            }
+            Ok(())
+        });
+        if let Err(e) = result {
+            self.failed = true;
+            eprintln!(
+                "tftune: write-ahead log failed ({e}); journaling disabled — durability \
+                 degrades to snapshots only"
+            );
+        }
+    }
+
+    /// Whether an I/O error has poisoned this writer.
+    pub fn is_failed(&self) -> bool {
+        self.failed
+    }
+
+    /// Flush buffered records and fsync now (snapshot boundary, shutdown).
+    pub fn sync(&mut self) -> Result<()> {
+        if self.failed {
+            anyhow::bail!("write-ahead log writer poisoned by an earlier I/O error");
+        }
+        self.unsynced = 0;
+        self.out.flush().context("flushing WAL")?;
+        self.out.get_ref().sync_data().context("fsyncing WAL")?;
+        Ok(())
+    }
+}
+
+impl Drop for WalWriter {
+    fn drop(&mut self) {
+        if !self.failed {
+            let _ = self.out.flush();
+            let _ = self.out.get_ref().sync_data();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::UNBOUNDED_HISTORY;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tftune_wal_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn record_round_trip_bitwise() {
+        let recs = [
+            WalRecord::Tell { x: vec![0.25, 1e-300, -3.5], value: 0.1 + 0.2, objectives: Vec::new() },
+            WalRecord::Tell { x: vec![0.5], value: -1.0, objectives: vec![f64::NAN, 2.5] },
+            WalRecord::SetHyper(GpHyper { lengthscale: 0.35, ..GpHyper::default() }),
+            WalRecord::SetHyper(GpHyper {
+                max_history: UNBOUNDED_HISTORY,
+                ..GpHyper::default()
+            }),
+        ];
+        for rec in &recs {
+            let line = rec.encode();
+            let back = WalRecord::decode(&line).unwrap();
+            match (rec, &back) {
+                (
+                    WalRecord::Tell { x, value, objectives },
+                    WalRecord::Tell { x: x2, value: v2, objectives: o2 },
+                ) => {
+                    assert_eq!(value.to_bits(), v2.to_bits(), "line: {line}");
+                    for (a, b) in x.iter().zip(x2) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                    assert_eq!(objectives.len(), o2.len());
+                    for (a, b) in objectives.iter().zip(o2) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+                _ => assert_eq!(rec, &back, "line: {line}"),
+            }
+        }
+        assert!(WalRecord::decode("not json").is_err());
+        assert!(WalRecord::decode(r#"{"kind":"nope"}"#).is_err());
+    }
+
+    #[test]
+    fn writer_reader_round_trip_and_missing_file() {
+        let dir = tmp_dir("rt");
+        let empty = read_wal(&wal_path(&dir)).unwrap();
+        assert_eq!(empty.records.len(), 0);
+        assert!(!empty.torn);
+
+        let mut w = WalWriter::open(&dir, 1).unwrap();
+        w.append(&WalRecord::Tell { x: vec![0.1, 0.9], value: 2.0, objectives: Vec::new() });
+        w.append(&WalRecord::SetHyper(GpHyper::default()));
+        w.append(&WalRecord::Tell { x: vec![0.4, 0.2], value: 3.0, objectives: vec![1.5] });
+        drop(w);
+        let back = read_wal(&wal_path(&dir)).unwrap();
+        assert_eq!(back.records.len(), 3);
+        assert_eq!(back.tell_count(), 2);
+        assert!(!back.torn);
+
+        // Re-opening appends, never truncates.
+        let mut w = WalWriter::open(&dir, 0).unwrap();
+        w.append(&WalRecord::Tell { x: vec![0.7, 0.7], value: 4.0, objectives: Vec::new() });
+        w.sync().unwrap();
+        assert_eq!(read_wal(&wal_path(&dir)).unwrap().tell_count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_reported_and_truncated() {
+        let dir = tmp_dir("torn");
+        let mut w = WalWriter::open(&dir, 1).unwrap();
+        w.append(&WalRecord::Tell { x: vec![0.1], value: 1.0, objectives: Vec::new() });
+        w.append(&WalRecord::Tell { x: vec![0.2], value: 2.0, objectives: Vec::new() });
+        drop(w);
+        let path = wal_path(&dir);
+        let good_len = std::fs::metadata(&path).unwrap().len();
+        // Crash mid-append: a partial record with no newline.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(br#"{"kind":"tell","x":[0."#).unwrap();
+        drop(f);
+
+        let contents = read_wal(&path).unwrap();
+        assert_eq!(contents.records.len(), 2);
+        assert_eq!(contents.valid_len, good_len);
+        assert!(contents.torn);
+        truncate_wal(&path, contents.valid_len).unwrap();
+        let clean = read_wal(&path).unwrap();
+        assert_eq!(clean.records.len(), 2);
+        assert!(!clean.torn);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn garbage_line_marks_the_tail_torn() {
+        let dir = tmp_dir("garbage");
+        let path = wal_path(&dir);
+        let good = WalRecord::Tell { x: vec![0.3], value: 1.0, objectives: Vec::new() };
+        std::fs::write(&path, format!("{}\nthis is not json\n{}\n", good.encode(), good.encode()))
+            .unwrap();
+        let contents = read_wal(&path).unwrap();
+        // Everything after the first bad line is suspect, even if it
+        // parses: the log is a prefix, never a subsequence.
+        assert_eq!(contents.records.len(), 1);
+        assert!(contents.torn);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -19,12 +19,69 @@ use anyhow::{Context, Result};
 
 use super::{literal_f32, Runtime};
 use crate::gp::{GpHyper, KernelKind, Scores, Surrogate};
+use crate::util::Json;
 
 pub struct GpSurrogate {
     exe: xla::PjRtLoadedExecutable,
     pub n_pad: usize,
     pub d_feat: usize,
     pub c_cand: usize,
+}
+
+/// One compiled capacity of the GP graph, as declared by meta.json.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GpVariant {
+    pub n_pad: usize,
+    pub file: String,
+}
+
+/// The capacities meta.json declares: the base artifact plus every entry
+/// of the optional `variants` list (pre-variant meta.json files have
+/// none), deduplicated and sorted ascending by `n_pad`.
+fn declared_variants(gp_meta: &Json) -> Result<Vec<GpVariant>> {
+    let base_n = gp_meta
+        .req("n_pad")
+        .map_err(anyhow::Error::msg)?
+        .as_i64()
+        .unwrap_or(0) as usize;
+    let base_file = gp_meta
+        .get("file")
+        .and_then(Json::as_str)
+        .unwrap_or("gp.hlo.txt")
+        .to_string();
+    let mut variants = vec![GpVariant { n_pad: base_n, file: base_file }];
+    if let Some(list) = gp_meta.get("variants").and_then(Json::as_arr) {
+        for v in list {
+            let n_pad = v
+                .get("n_pad")
+                .and_then(Json::as_i64)
+                .context("gp variant missing 'n_pad'")? as usize;
+            let file = v
+                .get("file")
+                .and_then(Json::as_str)
+                .context("gp variant missing 'file'")?
+                .to_string();
+            variants.push(GpVariant { n_pad, file });
+        }
+    }
+    variants.sort_by_key(|v| v.n_pad);
+    variants.dedup_by_key(|v| v.n_pad);
+    Ok(variants)
+}
+
+/// Pick the smallest declared capacity covering `window` — compiling a
+/// 256-slot graph to serve a 65-point window would pay 4x the matmul cost
+/// of the 128-slot one for nothing.
+fn select_variant(gp_meta: &Json, window: usize) -> Result<GpVariant> {
+    let variants = declared_variants(gp_meta)?;
+    let largest = variants.last().map(|v| v.n_pad).unwrap_or(0);
+    let picked = variants.into_iter().find(|v| v.n_pad >= window);
+    picked.with_context(|| {
+        format!(
+            "no GP artifact variant covers a {window}-point window (largest compiled \
+             capacity is {largest}); add the capacity to GP_VARIANTS and rebuild artifacts"
+        )
+    })
 }
 
 impl GpSurrogate {
@@ -47,6 +104,27 @@ impl GpSurrogate {
     pub fn open_default() -> Result<GpSurrogate> {
         let rt = Runtime::open_default()?;
         GpSurrogate::load(&rt)
+    }
+
+    /// Compile the smallest artifact variant whose capacity covers a
+    /// `window`-point conditioning window (`GpHyper::max_history`). With
+    /// a pre-variant meta.json this degrades to [`GpSurrogate::load`]
+    /// when the base capacity suffices, and errors otherwise.
+    pub fn load_for_window(rt: &Runtime, window: usize) -> Result<GpSurrogate> {
+        let gp_meta = rt.meta().get("gp").context("meta.json missing 'gp'")?;
+        let variant = select_variant(gp_meta, window)?;
+        let d_feat = gp_meta
+            .req("d_feat")
+            .map_err(anyhow::Error::msg)?
+            .as_i64()
+            .unwrap() as usize;
+        let c_cand = gp_meta
+            .req("c_cand")
+            .map_err(anyhow::Error::msg)?
+            .as_i64()
+            .unwrap() as usize;
+        let exe = rt.compile(&variant.file)?;
+        Ok(GpSurrogate { exe, n_pad: variant.n_pad, d_feat, c_cand })
     }
 
     /// Execute the artifact on padded buffers. x rows must already be in
@@ -150,5 +228,50 @@ impl Surrogate for GpSurrogate {
         y_best: f64,
     ) -> Result<Scores> {
         self.execute(x, y, cand, hyper, acq_alpha, y_best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn variant_meta() -> Json {
+        // The 'gp' section aot.py writes for GP_VARIANTS = (64, 128, 256).
+        parse(
+            r#"{"n_pad":64,"d_feat":8,"c_cand":512,"file":"gp.hlo.txt",
+                "variants":[
+                  {"n_pad":64,"cg_iters":32,"file":"gp.hlo.txt"},
+                  {"n_pad":128,"cg_iters":48,"file":"gp_n128.hlo.txt"},
+                  {"n_pad":256,"cg_iters":64,"file":"gp_n256.hlo.txt"}]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn selects_smallest_covering_variant() {
+        let meta = variant_meta();
+        let pick = |w| select_variant(&meta, w).unwrap();
+        assert_eq!(pick(1), GpVariant { n_pad: 64, file: "gp.hlo.txt".into() });
+        assert_eq!(pick(64), GpVariant { n_pad: 64, file: "gp.hlo.txt".into() });
+        assert_eq!(pick(65), GpVariant { n_pad: 128, file: "gp_n128.hlo.txt".into() });
+        assert_eq!(pick(128), GpVariant { n_pad: 128, file: "gp_n128.hlo.txt".into() });
+        assert_eq!(pick(256), GpVariant { n_pad: 256, file: "gp_n256.hlo.txt".into() });
+    }
+
+    #[test]
+    fn oversized_window_names_the_largest_capacity() {
+        let err = select_variant(&variant_meta(), 257).unwrap_err().to_string();
+        assert!(err.contains("257-point window"), "{err}");
+        assert!(err.contains("largest compiled capacity is 256"), "{err}");
+    }
+
+    #[test]
+    fn pre_variant_meta_degrades_to_the_base_artifact() {
+        // An older meta.json: no 'variants' list, no explicit 'file'.
+        let meta = parse(r#"{"n_pad":64,"d_feat":8,"c_cand":512}"#).unwrap();
+        let v = select_variant(&meta, 40).unwrap();
+        assert_eq!(v, GpVariant { n_pad: 64, file: "gp.hlo.txt".into() });
+        assert!(select_variant(&meta, 65).is_err());
     }
 }

@@ -137,14 +137,27 @@ impl TargetServer {
         addr: &str,
         hyper: GpHyper,
     ) -> Result<(TargetServer, SharedSurrogate)> {
-        let shared = SharedSurrogate::new(hyper);
+        TargetServer::bind_surrogate_with(addr, SharedSurrogate::new(hyper))
+    }
+
+    /// Like [`TargetServer::bind_surrogate_only`], but host an *existing*
+    /// surrogate — e.g. one restored by
+    /// [`persist::recover`](crate::persist::recover()) — instead of a
+    /// fresh one. The served lease table starts empty either way: leases
+    /// are liveness state scoped to live connections, so a restarted
+    /// daemon forgets pre-crash leases and replicas re-publish on their
+    /// next guard drop (see `gp::replica`).
+    pub fn bind_surrogate_with(
+        addr: &str,
+        surrogate: SharedSurrogate,
+    ) -> Result<(TargetServer, SharedSurrogate)> {
         let server = TargetServer::bind(
             addr,
             crate::space::threading_space(64, 1024, 64),
             Box::new(NoTarget),
         )?
-        .with_surrogate(shared.clone());
-        Ok((server, shared))
+        .with_surrogate(surrogate.clone());
+        Ok((server, surrogate))
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {

@@ -230,7 +230,7 @@ pub enum SurrogateResponse {
     Error { message: String },
 }
 
-fn hyper_to_json(h: &GpHyper) -> Json {
+pub(crate) fn hyper_to_json(h: &GpHyper) -> Json {
     Json::obj(vec![
         ("lengthscale", h.lengthscale.into()),
         ("signal_var", h.signal_var.into()),
@@ -265,7 +265,7 @@ fn req_u64(j: &Json, key: &str) -> Result<u64, String> {
         .ok_or_else(|| format!("missing non-negative integer '{key}'"))
 }
 
-fn hyper_from_json(j: &Json) -> Result<GpHyper, String> {
+pub(crate) fn hyper_from_json(j: &Json) -> Result<GpHyper, String> {
     let kname =
         j.get("kernel").and_then(Json::as_str).ok_or_else(|| "missing 'kernel'".to_string())?;
     let kernel = KernelKind::parse(kname).ok_or_else(|| format!("unknown kernel '{kname}'"))?;
@@ -286,7 +286,7 @@ fn hyper_from_json(j: &Json) -> Result<GpHyper, String> {
     })
 }
 
-fn f64_vec(j: &Json) -> Result<Vec<f64>, String> {
+pub(crate) fn f64_vec(j: &Json) -> Result<Vec<f64>, String> {
     j.as_arr()
         .ok_or_else(|| "expected an array of numbers".to_string())?
         .iter()
@@ -318,7 +318,7 @@ fn points_from_json(j: &Json, value_key: &str) -> Result<Vec<(Vec<f64>, f64)>, S
 
 /// Secondary objective columns: NaN (a declared-but-missing column) is
 /// not valid JSON, so it travels as `null` and decodes back to NaN.
-fn ys_to_json(ys: &[f64]) -> Json {
+pub(crate) fn ys_to_json(ys: &[f64]) -> Json {
     Json::Arr(
         ys.iter()
             .map(|&v| if v.is_finite() { Json::Num(v) } else { Json::Null })
@@ -326,7 +326,7 @@ fn ys_to_json(ys: &[f64]) -> Json {
     )
 }
 
-fn ys_from_json(j: &Json) -> Result<Vec<f64>, String> {
+pub(crate) fn ys_from_json(j: &Json) -> Result<Vec<f64>, String> {
     j.as_arr()
         .ok_or_else(|| "expected an array of objective columns".to_string())?
         .iter()
@@ -344,7 +344,7 @@ fn ys_from_json(j: &Json) -> Result<Vec<f64>, String> {
 
 /// Observation rows with their per-row secondary columns: each row is
 /// `{"x":..,"y":..}` plus `"ys"` when that row carries extras.
-fn rows_to_json(rows: &[(Vec<f64>, f64)], extras: &[Vec<f64>]) -> Json {
+pub(crate) fn rows_to_json(rows: &[(Vec<f64>, f64)], extras: &[Vec<f64>]) -> Json {
     Json::Arr(
         rows.iter()
             .enumerate()
@@ -362,7 +362,7 @@ fn rows_to_json(rows: &[(Vec<f64>, f64)], extras: &[Vec<f64>]) -> Json {
 }
 
 #[allow(clippy::type_complexity)]
-fn rows_from_json(j: &Json) -> Result<(Vec<(Vec<f64>, f64)>, Vec<Vec<f64>>), String> {
+pub(crate) fn rows_from_json(j: &Json) -> Result<(Vec<(Vec<f64>, f64)>, Vec<Vec<f64>>), String> {
     let arr = j.as_arr().ok_or_else(|| "expected an array of rows".to_string())?;
     let mut rows = Vec::with_capacity(arr.len());
     let mut extras = Vec::with_capacity(arr.len());

@@ -1,0 +1,282 @@
+//! The durable persistence plane, pinned end to end over real state
+//! directories (and real loopback TCP for the daemon scenario):
+//!
+//! 1. A surrogate daemon killed mid-campaign — after a mid-campaign
+//!    snapshot plus further WAL-only tells — restores **bit-identically**
+//!    (rows, extras, packed factor) and serves a posterior within 1e-9
+//!    of an uninterrupted reference on the same port.
+//! 2. A torn WAL tail (crash mid-append) is truncated to the last
+//!    complete record, and the heal makes the next recovery clean.
+//! 3. A corrupt snapshot is rejected by its checksum and recovery falls
+//!    back to full-log replay, still matching the reference bitwise.
+//! 4. Multi-objective rows (secondary columns, NaN degradations) round
+//!    trip through both the snapshot and the WAL.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use tftune::gp::{GpHyper, RemoteSurrogate, ScoreWorkspace, SharedSurrogate, SurrogateHandle};
+use tftune::persist::{self, PersistOptions};
+use tftune::server::TargetServer;
+use tftune::space::threading_space;
+use tftune::util::Rng;
+
+fn state_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tftune_persist_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn shutdown_daemon(addr: std::net::SocketAddr) {
+    use tftune::server::proto::{encode_request, Request};
+    let space = threading_space(64, 1024, 64);
+    if let Ok(mut s) = std::net::TcpStream::connect(addr) {
+        let _ = writeln!(s, "{}", encode_request(&Request::Shutdown, &space));
+    }
+}
+
+fn toy_obs(rng: &mut Rng, n: usize, d: usize) -> Vec<(Vec<f64>, f64)> {
+    (0..n)
+        .map(|_| {
+            let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+            let y = (3.0 * x[0]).sin() - 0.5 * x[d - 1];
+            (x, y)
+        })
+        .collect()
+}
+
+/// Tells are fire-and-forget: poll until the service has absorbed them.
+fn wait_len(replica: &RemoteSurrogate, want: usize) {
+    let mut seen = 0;
+    for _ in 0..2000 {
+        seen = replica.lock().len();
+        if seen == want {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(seen, want, "service did not absorb the campaign's tells");
+}
+
+/// The full store as bit patterns: rows, secondary columns, packed
+/// factor. Two surrogates with equal `delta_bits` are interchangeable.
+#[allow(clippy::type_complexity)]
+fn delta_bits(
+    s: &SharedSurrogate,
+) -> (Vec<(Vec<u64>, u64)>, Vec<Vec<u64>>, Option<Vec<u64>>) {
+    let d = s.export_delta(0).expect("full export always applies");
+    (
+        d.rows
+            .iter()
+            .map(|(x, y)| (x.iter().map(|v| v.to_bits()).collect(), y.to_bits()))
+            .collect(),
+        d.extras
+            .iter()
+            .map(|r| r.iter().map(|v| v.to_bits()).collect())
+            .collect(),
+        d.factor.map(|f| f.iter().map(|v| v.to_bits()).collect()),
+    )
+}
+
+/// Score `cand` through a guard in canonical order (the parity-suite
+/// idiom from `surrogate_service.rs`).
+fn posterior(g: &mut tftune::gp::SurrogateGuard<'_>, cand: &[f64], c: usize) -> ScoreWorkspace {
+    let idx = g.conditioning_set();
+    assert!(g.sync(&idx));
+    let y: Vec<f64> = (0..g.len()).map(|i| g.y(i)).collect();
+    g.set_targets(&y);
+    let mut ws = ScoreWorkspace::default();
+    g.score_into(cand, c, 1.5, 0.3, &mut ws);
+    ws
+}
+
+#[test]
+fn daemon_killed_mid_campaign_restores_bit_identically() {
+    let dir = state_dir("kill_mid_campaign");
+    let mut rng = Rng::new(23);
+    let (n, d) = (24usize, 3usize);
+    let obs = toy_obs(&mut rng, n, d);
+    let cand: Vec<f64> = (0..8 * d).map(|_| rng.f64()).collect();
+
+    // The uninterrupted reference: same observations, same order, no
+    // crash anywhere near it.
+    let reference = SharedSurrogate::new(GpHyper::default());
+
+    // Daemon A: a durable authority (recover-on-boot is exercised by the
+    // cold start — an empty directory recovers to an empty surrogate).
+    let recovered = persist::recover(&dir, GpHyper::default()).unwrap();
+    assert!(recovered.surrogate.is_empty());
+    let authority = recovered.surrogate;
+    let persistence = persist::attach(&authority, &dir, PersistOptions::default()).unwrap();
+    let (server, _f) =
+        TargetServer::bind_surrogate_with("127.0.0.1:0", authority.clone()).unwrap();
+    let (addr, handle) = server.spawn().unwrap();
+
+    // A replica campaign over TCP: half the budget, then a mid-campaign
+    // checkpoint, then the rest — so recovery must replay a WAL suffix
+    // on top of the snapshot.
+    let replica = RemoteSurrogate::connect(&addr.to_string()).unwrap();
+    for (x, y) in &obs[..12] {
+        replica.tell(x.clone(), *y);
+        reference.tell(x.clone(), *y);
+    }
+    wait_len(&replica, 12);
+    let seq = persistence.snapshot(&authority).unwrap();
+    assert_eq!(seq, 12);
+    for (x, y) in &obs[12..] {
+        replica.tell(x.clone(), *y);
+        reference.tell(x.clone(), *y);
+    }
+    wait_len(&replica, n);
+
+    // Kill the daemon. No final snapshot — rows 12.. exist only in the
+    // WAL, exactly the crash the plane is for.
+    drop(replica);
+    shutdown_daemon(addr);
+    let _ = handle.join();
+    drop(persistence);
+    drop(authority);
+
+    // Recover: snapshot @12 seeds the store, the WAL suffix replays the
+    // remaining 12 tells, and the result is bit-identical to the
+    // uninterrupted reference — factor included.
+    let recovered = persist::recover(&dir, GpHyper::default()).unwrap();
+    assert_eq!(recovered.snapshot_seq, Some(12));
+    assert_eq!(recovered.replayed, 12);
+    assert_eq!(recovered.truncated_bytes, 0);
+    assert_eq!(recovered.surrogate.len(), n);
+    let (rows_r, extras_r, factor_r) = delta_bits(&recovered.surrogate);
+    let (rows_ref, extras_ref, factor_ref) = delta_bits(&reference);
+    assert_eq!(rows_r, rows_ref, "restored rows differ from the reference");
+    assert_eq!(extras_r, extras_ref);
+    assert!(factor_r.is_some(), "recovered factor does not cover the store");
+    assert_eq!(factor_r, factor_ref, "restored factor is not bit-identical");
+
+    // Serve the restored factor on the very same port; a fresh replica's
+    // posterior matches the uninterrupted reference within the parity
+    // suite's 1e-9.
+    let (server2, _f2) =
+        TargetServer::bind_surrogate_with(&addr.to_string(), recovered.surrogate).unwrap();
+    let (_, handle2) = server2.spawn().unwrap();
+    let replica2 = RemoteSurrogate::connect(&addr.to_string()).unwrap();
+    {
+        let mut g = replica2.lock();
+        assert_eq!(g.len(), n);
+        let ws = posterior(&mut g, &cand, 8);
+        let mut gr = reference.lock();
+        let ws_ref = posterior(&mut gr, &cand, 8);
+        for j in 0..8 {
+            assert!(
+                (ws.mean[j] - ws_ref.mean[j]).abs() <= 1e-9,
+                "posterior mean diverged after recovery: {} vs {}",
+                ws.mean[j],
+                ws_ref.mean[j]
+            );
+            assert!(
+                (ws.std[j] - ws_ref.std[j]).abs() <= 1e-9,
+                "posterior std diverged after recovery: {} vs {}",
+                ws.std[j],
+                ws_ref.std[j]
+            );
+        }
+    }
+    drop(replica2);
+    shutdown_daemon(addr);
+    let _ = handle2.join();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_wal_tail_is_truncated_and_healed() {
+    let dir = state_dir("torn_tail");
+    let shared = SharedSurrogate::new(GpHyper::default());
+    let p = persist::attach(&shared, &dir, PersistOptions::default()).unwrap();
+    shared.tell(vec![0.1, 0.9], 1.0);
+    shared.tell(vec![0.8, 0.2], 2.0);
+    drop(shared.lock()); // drain → journal
+    p.sync().unwrap();
+    drop(p);
+    drop(shared);
+
+    // Crash mid-append: half a record, no trailing newline.
+    let mut f = std::fs::OpenOptions::new().append(true).open(persist::wal_path(&dir)).unwrap();
+    f.write_all(b"{\"kind\":\"tell\",\"x\":[0.5").unwrap();
+    drop(f);
+
+    let recovered = persist::recover(&dir, GpHyper::default()).unwrap();
+    assert_eq!(recovered.surrogate.len(), 2, "valid prefix lost with the torn tail");
+    assert!(recovered.truncated_bytes > 0, "torn tail went unnoticed");
+
+    // The truncation healed the file on disk: recovering again is clean
+    // and yields the same store.
+    let again = persist::recover(&dir, GpHyper::default()).unwrap();
+    assert_eq!(again.truncated_bytes, 0);
+    assert_eq!(delta_bits(&again.surrogate), delta_bits(&recovered.surrogate));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_snapshot_falls_back_to_full_log_replay() {
+    let dir = state_dir("corrupt_snapshot");
+    let mut rng = Rng::new(9);
+    let obs = toy_obs(&mut rng, 6, 2);
+
+    let reference = SharedSurrogate::new(GpHyper::default());
+    let shared = SharedSurrogate::new(GpHyper::default());
+    let p = persist::attach(&shared, &dir, PersistOptions::default()).unwrap();
+    for (x, y) in &obs {
+        shared.tell(x.clone(), *y);
+        reference.tell(x.clone(), *y);
+    }
+    drop(shared.lock());
+    p.snapshot(&shared).unwrap();
+    drop(p);
+    drop(shared);
+
+    // Flip bytes inside the (only) snapshot: its checksum must reject it.
+    let snaps = persist::list_snapshots(&dir).unwrap();
+    assert_eq!(snaps.len(), 1);
+    let path = &snaps[0].1;
+    let corrupted = std::fs::read_to_string(path).unwrap().replace("rows", "r0ws");
+    std::fs::write(path, corrupted).unwrap();
+
+    let recovered = persist::recover(&dir, GpHyper::default()).unwrap();
+    assert_eq!(recovered.snapshot_seq, None, "a corrupt snapshot was trusted");
+    assert_eq!(recovered.replayed, 6, "full-log replay skipped records");
+    assert_eq!(
+        delta_bits(&recovered.surrogate),
+        delta_bits(&reference),
+        "full-log fallback is not bit-identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn multi_objective_rows_survive_snapshot_and_wal() {
+    let dir = state_dir("multi_objective");
+    let shared = SharedSurrogate::new(GpHyper::default());
+    let p = persist::attach(&shared, &dir, PersistOptions::default()).unwrap();
+
+    // One K=3 row into the snapshot (with a NaN degradation), one into
+    // the WAL suffix, one single-objective row for the mixed case.
+    shared.tell_multi(vec![0.2, 0.4], vec![1.0, 0.5, f64::NAN]);
+    drop(shared.lock());
+    p.snapshot(&shared).unwrap();
+    shared.tell_multi(vec![0.6, 0.1], vec![2.0, -0.25, 3.5]);
+    shared.tell(vec![0.9, 0.9], -1.0);
+    drop(shared.lock());
+    drop(p);
+
+    let reference_bits = delta_bits(&shared);
+    drop(shared);
+
+    let recovered = persist::recover(&dir, GpHyper::default()).unwrap();
+    assert_eq!(recovered.snapshot_seq, Some(1));
+    assert_eq!(recovered.surrogate.len(), 3);
+    let restored_bits = delta_bits(&recovered.surrogate);
+    assert_eq!(
+        restored_bits, reference_bits,
+        "secondary objective columns did not survive the round trip"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
