@@ -32,6 +32,19 @@ fn gp_problem(rng: &mut Rng, n: usize, c: usize) -> (Vec<Vec<f64>>, Vec<f64>, Ve
 }
 
 fn main() -> anyhow::Result<()> {
+    // `cargo bench --bench hot_paths -- --smoke`: a short CI-sized run of
+    // only the scoring-engine panel. Leaves BENCH_gp.json untouched — the
+    // committed file is the cross-commit regression baseline, and a smoke
+    // run's numbers are too noisy to publish.
+    if std::env::args().skip(1).any(|a| a == "--smoke") {
+        let mut b = Bencher::new(100, 400);
+        let mut rng = Rng::new(0xBEEF);
+        println!("== scoring engine smoke, n=512 / 512 candidates ==");
+        bench_scoring_engine(&mut b, &mut rng);
+        println!("\nsmoke run complete (scoring engine only; BENCH_gp.json untouched)");
+        return Ok(());
+    }
+
     let mut b = Bencher::new(300, 1500);
     let mut rng = Rng::new(0xBEEF);
 
@@ -115,6 +128,10 @@ fn main() -> anyhow::Result<()> {
         );
         (r_scratch, r_append, r_score, r_fit_only, r_score_mo, speedup)
     };
+
+    println!("\n== scoring engine, n=512 / 512 candidates ==");
+    let [r_512, r_512_naive, r_512_par, r_512_f32, r_512_mo] =
+        bench_scoring_engine(&mut b, &mut rng);
 
     println!("\n== shared surrogate: contended tell/ask ==");
     let (r_shared_tell, r_shared_ask) = {
@@ -316,6 +333,11 @@ fn main() -> anyhow::Result<()> {
             &r_multiobj_tell,
             &r_snapshot_write,
             &r_wal_replay,
+            &r_512,
+            &r_512_naive,
+            &r_512_par,
+            &r_512_f32,
+            &r_512_mo,
         ],
         64,
         512,
@@ -390,14 +412,89 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The n=512 scoring-engine panel (ISSUE 7): the serial blocked baseline,
+/// the unblocked kernels (`BlockSpec::naive`), the 4-thread fixed
+/// partition, the f32 ranking tier, and the K=2 multi-objective panel —
+/// all over the same 512-point factor and 512-candidate pool. The
+/// `--smoke` flag runs only this section.
+fn bench_scoring_engine(b: &mut Bencher, rng: &mut Rng) -> [BenchResult; 5] {
+    use tftune::gp::{BlockSpec, ScoreTier};
+    let n = 512;
+    let c = 512;
+    let (x, y, cand) = gp_problem(rng, n, c);
+    let mut inc = IncrementalGp::new(GpHyper::default());
+    for (xi, &yi) in x.iter().zip(&y) {
+        assert!(inc.push(xi, yi), "512-point factor must stay positive definite");
+    }
+    let cand_flat: Vec<f64> = cand.iter().flatten().copied().collect();
+
+    // Serial f64 blocked scoring: the committed baseline the parallel
+    // acceptance gate (>=2x at 4 threads) is measured against.
+    let mut ws = ScoreWorkspace::default();
+    let r_serial = b.bench("gp/score_512_candidates_n512 serial f64", || {
+        inc.score_into(&cand_flat, c, 1.5, 1.0, &mut ws);
+        ws.gain[0]
+    });
+
+    // Unblocked kernels: what cache tiling buys at this panel size.
+    inc.set_block_spec(BlockSpec::naive());
+    let r_naive = b.bench("gp/score_512_naive_n512 serial f64", || {
+        inc.score_into(&cand_flat, c, 1.5, 1.0, &mut ws);
+        ws.gain[0]
+    });
+    inc.set_block_spec(BlockSpec::default());
+
+    // 4-thread fixed-partition panel: bit-identical to serial by
+    // construction (pinned in rust/tests/scoring_engine.rs).
+    inc.set_score_threads(4);
+    let r_par = b.bench("gp/score_512_parallel_t4 f64", || {
+        inc.score_into(&cand_flat, c, 1.5, 1.0, &mut ws);
+        ws.gain[0]
+    });
+
+    // f32 ranking tier on top of the 4-thread partition.
+    inc.set_score_tier(ScoreTier::F32);
+    let r_f32 = b.bench("gp/score_512_f32 t4", || {
+        inc.score_into(&cand_flat, c, 1.5, 1.0, &mut ws);
+        ws.gain[0]
+    });
+    inc.set_score_tier(ScoreTier::F64);
+    inc.set_score_threads(1);
+
+    // K=2 multi-objective panel through the same engine.
+    let y2: Vec<f64> = x.iter().map(|p| p[2] - 0.5 * p[3]).collect();
+    let mut ws_mo = ScoreWorkspace::default();
+    let r_mo = b.bench("gp/score_multiobj_k2_n512 serial f64", || {
+        let targets: [&[f64]; 2] = [&y, &y2];
+        inc.score_multi_into(&cand_flat, c, &targets, &mut ws_mo);
+        ws_mo.mean_obj[0]
+    });
+
+    println!(
+        "  4-thread panel {:.1} µs vs serial {:.1} µs ({:.2}x); naive blocks {:.1} µs; \
+         f32 tier {:.1} µs",
+        r_par.mean_ns / 1e3,
+        r_serial.mean_ns / 1e3,
+        r_serial.mean_ns / r_par.mean_ns,
+        r_naive.mean_ns / 1e3,
+        r_f32.mean_ns / 1e3,
+    );
+    [r_serial, r_naive, r_par, r_f32, r_mo]
+}
+
 /// Persist the surrogate-subsystem baseline (ISSUE 2 acceptance: the
 /// incremental append + blocked scoring must beat the scratch refit at
 /// n=64 / 512 candidates; ISSUE 3 adds the contended shared tell/ask
 /// pair; ISSUE 4 adds the surrogate-service pair — `surrogate_sync_delta`
 /// / `remote_tell_roundtrip`; ISSUE 5 adds the multi-objective pair —
 /// `score_multiobj_k2_512` / `multiobj_tell_roundtrip`; ISSUE 6 adds the
-/// persistence pair — `snapshot_write_512` / `wal_replay_512`). Keys are
-/// the bench short names.
+/// persistence pair — `snapshot_write_512` / `wal_replay_512`; ISSUE 7
+/// adds the scoring-engine panel at n=512 — `score_512_candidates_n512`
+/// serial baseline, `score_512_naive_n512` unblocked kernels,
+/// `score_512_parallel_t4` 4-thread partition, `score_512_f32` fast tier,
+/// `score_multiobj_k2_n512` K=2 panel). Keys are the bench short names.
+/// `"estimated": false` marks the numbers as measured on real hardware —
+/// CI's regression guard skips files whose baseline was only estimated.
 fn write_gp_bench_json(
     results: &[&BenchResult],
     n: usize,
@@ -426,6 +523,7 @@ fn write_gp_bench_json(
     let doc = Json::obj(vec![
         ("n_history", Json::from(n)),
         ("n_candidates", Json::from(c)),
+        ("estimated", Json::from(false)),
         ("benches", Json::Obj(benches)),
         ("incremental_vs_scratch_speedup", Json::from(speedup)),
         ("incremental_beats_scratch", Json::from(speedup > 1.0)),

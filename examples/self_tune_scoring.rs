@@ -1,0 +1,104 @@
+//! The paper's tuning loop, closed on ourselves: the repo's own BO
+//! engine tunes the scoring engine's cache-blocking knobs
+//! ([`tftune::gp::BlockSpec`] — mc/nc/kc) against *measured* timings of
+//! the n=512 / 512-candidate panel pass. The objective is scoring
+//! throughput (panel passes per second), so "best" means the block
+//! shape that makes `score_into` fastest on *this* machine — the same
+//! ask/tell conversation the paper runs against TensorFlow, with the
+//! simulator swapped out for a real measurement.
+//!
+//!     cargo run --release --example self_tune_scoring [iters] [reps]
+//!
+//! The shipped `BlockSpec::default()` was picked with this example; rerun
+//! it on new hardware before trusting the default there.
+
+use anyhow::Result;
+use tftune::algorithms::{BayesOpt, Tuner};
+use tftune::gp::{BlockSpec, GpHyper, IncrementalGp, ScoreWorkspace};
+use tftune::history::Measurement;
+use tftune::space::{ParamDef, SearchSpace};
+use tftune::util::Rng;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let iters: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(24);
+    let reps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(5);
+
+    // The system under test: a 512-point factor and a 512-candidate pool,
+    // the scoring-engine bench shape (BENCH_gp.json `score_512_*`).
+    let (n, d, c) = (512usize, 5usize, 512usize);
+    let mut rng = Rng::new(0xB10C);
+    let mut gp = IncrementalGp::new(GpHyper::default());
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        let y = x[0] - 0.7 * x[1];
+        assert!(gp.push(&x, y), "seed factor must stay positive definite");
+    }
+    let cand: Vec<f64> = (0..c * d).map(|_| rng.f64()).collect();
+    let mut ws = ScoreWorkspace::default();
+
+    // The search space: every blocking knob the kernels expose. Steps
+    // keep the grid small enough that 24 evaluations see real coverage.
+    let space = SearchSpace::new(vec![
+        ParamDef::new("mc", 4, 64, 4),
+        ParamDef::new("nc", 8, 128, 8),
+        ParamDef::new("kc", 16, 256, 16),
+    ]);
+
+    // One measurement: the median of `reps` timed panel passes under the
+    // candidate BlockSpec, reported as passes/second (maximised).
+    let mut measure = |spec: BlockSpec| -> f64 {
+        gp.set_block_spec(spec);
+        let mut times: Vec<f64> = (0..reps)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                gp.score_into(&cand, c, 1.5, 0.0, &mut ws);
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        1.0 / times[times.len() / 2]
+    };
+
+    println!(
+        "self-tuning BlockSpec over {} grid points ({iters} evaluations, \
+         median of {reps} timed passes each)",
+        space.size()
+    );
+    let baseline = measure(BlockSpec::default());
+    let naive = measure(BlockSpec::naive());
+    println!(
+        "  shipped default {:?}: {baseline:.1} passes/s;  naive (unblocked): {naive:.1} passes/s",
+        BlockSpec::default()
+    );
+
+    let mut bo = BayesOpt::new(space.clone(), 0);
+    let mut best = (f64::NEG_INFINITY, BlockSpec::default());
+    for i in 0..iters {
+        let trial = bo.ask(1).pop().expect("engine always proposes");
+        let spec = BlockSpec {
+            mc: trial.config[0] as usize,
+            nc: trial.config[1] as usize,
+            kc: trial.config[2] as usize,
+        };
+        let passes = measure(spec);
+        bo.tell(trial.id, &Measurement::new(passes));
+        if passes > best.0 {
+            best = (passes, spec);
+            println!("  iter {i:>3}: {spec:?}  {passes:.1} passes/s  <- new best");
+        }
+    }
+
+    println!(
+        "\nbest BlockSpec on this machine: {:?} at {:.1} passes/s \
+         ({:+.1}% vs shipped default, {:.2}x vs naive)",
+        best.1,
+        best.0,
+        100.0 * (best.0 / baseline - 1.0),
+        best.0 / naive
+    );
+    if best.0 > baseline * 1.05 {
+        println!("consider updating BlockSpec::default() for this target");
+    }
+    Ok(())
+}

@@ -27,7 +27,11 @@
 //! order as O(n²) rank-1 Cholesky appends, conditions on in-flight trials
 //! by *extending* the factor with constant-liar fantasies, and scores the
 //! candidate pool through one blocked cross-kernel panel + multi-RHS
-//! triangular solve with zero heap allocation ([`ScoreWorkspace`]).
+//! triangular solve over reused buffers ([`ScoreWorkspace`]) that never
+//! grow once warmed up. The pass is the *scoring engine* of
+//! `gp::incremental`: [`BayesOpt::with_score_threads`] partitions the
+//! pool over worker threads (bit-identical results for any count) and
+//! [`BayesOpt::with_score_tier`] opts ranking into the f32 fast tier.
 //!
 //! Batched asks are *fantasy-batched*: `ask(n)` takes the model lock
 //! once, extends the factor with each picked configuration as it is
@@ -58,8 +62,8 @@
 
 use super::{Trial, TrialBook, TrialId, Tuner};
 use crate::gp::{
-    select_lengthscale, GpHyper, KernelKind, NativeSurrogate, ScoreWorkspace, SharedSurrogate,
-    Surrogate, SurrogateGuard, SurrogateHandle, UNBOUNDED_HISTORY,
+    select_lengthscale, GpHyper, KernelKind, NativeSurrogate, ScoreTier, ScoreWorkspace,
+    SharedSurrogate, Surrogate, SurrogateGuard, SurrogateHandle, UNBOUNDED_HISTORY,
 };
 use crate::history::Measurement;
 use crate::objectives::{self, ObjectiveSet, Scalarization};
@@ -164,6 +168,11 @@ pub struct BayesOpt<S: Surrogate = NativeSurrogate> {
     /// Scratch: the K-element optimistic point of the candidate being
     /// scored (multi mode), reused across proposals.
     mo_opt: Vec<f64>,
+    /// Scoring-engine worker threads, pushed to the shared model at each
+    /// batch (default 1 = serial; results bit-identical for any count).
+    score_threads: usize,
+    /// Scoring-engine arithmetic tier (default f64 — the pinned oracle).
+    score_tier: ScoreTier,
 }
 
 impl BayesOpt<NativeSurrogate> {
@@ -208,6 +217,8 @@ impl<S: Surrogate> BayesOpt<S> {
             y_std_obj: Vec::new(),
             y_pad_obj: Vec::new(),
             mo_opt: Vec::new(),
+            score_threads: 1,
+            score_tier: ScoreTier::F64,
         }
     }
 
@@ -299,6 +310,59 @@ impl<S: Surrogate> BayesOpt<S> {
         assert!(n > 0, "need at least one candidate");
         self.n_candidates = n.min(CANDIDATES);
         self
+    }
+
+    /// Worker threads the scoring engine partitions each candidate pool
+    /// over (default 1 = serial). A purely wall-clock knob: the pool is
+    /// split into fixed contiguous candidate blocks — a pure function of
+    /// (pool size, thread count) — so results are **bit-identical** for
+    /// every count ([`crate::gp::IncrementalGp::set_score_threads`]).
+    /// Native incremental surrogate only; fused-refit paths ignore it.
+    pub fn with_score_threads(mut self, threads: usize) -> BayesOpt<S> {
+        assert!(threads >= 1, "scoring needs at least one thread");
+        self.score_threads = threads;
+        self
+    }
+
+    /// Scoring arithmetic tier (default [`ScoreTier::F64`], the pinned
+    /// oracle). [`ScoreTier::F32`] ranks candidates at single precision —
+    /// faster panels for acquisition ranking only; everything the model
+    /// *learns* (factor, targets, appends) stays f64 regardless.
+    pub fn with_score_tier(mut self, tier: ScoreTier) -> BayesOpt<S> {
+        self.score_tier = tier;
+        self
+    }
+
+    /// The scoring-engine worker-thread count this engine pushes at each
+    /// batch.
+    pub fn score_threads(&self) -> usize {
+        self.score_threads
+    }
+
+    /// The scoring tier this engine pushes at each batch.
+    pub fn score_tier(&self) -> ScoreTier {
+        self.score_tier
+    }
+
+    /// Capacities of every per-ask scratch buffer — the probe behind the
+    /// no-per-ask-heap-growth test (`rust/tests/scoring_engine.rs`): once
+    /// the engine has seen a workload's shapes, repeated asks must leave
+    /// all of these unchanged (the candidate pool refills through a
+    /// capacity-preserving clear, the scoring workspace reuses its
+    /// buffers).
+    pub fn scratch_capacities(&self) -> Vec<usize> {
+        let mut caps = vec![
+            self.cand_flat.capacity(),
+            self.y_raw.capacity(),
+            self.y_std.capacity(),
+            self.mo_opt.capacity(),
+            self.y_std_obj.capacity(),
+            self.y_pad_obj.capacity(),
+        ];
+        caps.extend(self.y_std_obj.iter().map(Vec::capacity));
+        caps.extend(self.y_pad_obj.iter().map(Vec::capacity));
+        caps.extend(self.ws.heap_capacities());
+        caps
     }
 
     /// Covariance kernel for the surrogate (native stack; the HLO artifact
@@ -701,7 +765,15 @@ impl<S: Surrogate> Tuner for BayesOpt<S> {
                 if guard.is_none() {
                     // Drains every queued tell (rank-1 appends, in
                     // observation order) before the first proposal.
-                    guard = Some(shared.lock());
+                    let mut g = shared.lock();
+                    // Engine-local scoring knobs, pushed per batch: a
+                    // sibling engine sharing the handle may have set its
+                    // own (last locker wins — outputs are unaffected,
+                    // threads are bit-identical and the tier is applied
+                    // per scoring pass).
+                    g.set_score_threads(self.score_threads);
+                    g.set_score_tier(self.score_tier);
+                    guard = Some(g);
                 }
                 let g = guard.as_mut().unwrap();
                 if g.len() < 2 {
@@ -1134,6 +1206,25 @@ mod tests {
         let set = ObjectiveSet::parse("a,b:min").unwrap();
         let _ = BayesOpt::with_surrogate(s, 1, ExactRefitSurrogate)
             .with_objectives(set, Scalarization::Smsego);
+    }
+
+    #[test]
+    fn parallel_scoring_engine_proposes_identically() {
+        // Thread-parallel scoring is bit-identical to serial, so the
+        // whole proposal trajectory must match configuration-for-
+        // configuration (same seed, same tells).
+        let s = space();
+        let obj = quadratic(&s, &vec![3, 30, 576, 80, 40]);
+        let mut serial = BayesOpt::new(s.clone(), 19);
+        let mut par = BayesOpt::new(s.clone(), 19).with_score_threads(4);
+        assert_eq!(par.score_threads(), 4);
+        for step_i in 0..20 {
+            let a = serial.ask(1).pop().unwrap();
+            let b = par.ask(1).pop().unwrap();
+            assert_eq!(a.config, b.config, "trajectories diverged at step {step_i}");
+            serial.tell(a.id, &Measurement::new(obj(&a.config)));
+            par.tell(b.id, &Measurement::new(obj(&b.config)));
+        }
     }
 
     #[test]

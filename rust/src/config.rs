@@ -84,6 +84,14 @@ pub struct TuneConfig {
     /// engine, and counted against `iterations` — the run finishes the
     /// remaining budget instead of starting cold. Requires `state_dir`.
     pub resume: bool,
+    /// Threads the BO scoring engine partitions each candidate panel
+    /// across (`--score-threads`). Results are bit-identical to serial
+    /// for any value; 1 = the plain serial loop. BO only.
+    pub score_threads: usize,
+    /// Precision tier for acquisition ranking (`--score-tier`): `f64`
+    /// (default, the pinned oracle) or `f32` (fast ranking tier; means
+    /// and stds are computed in single precision and cast up). BO only.
+    pub score_tier: crate::gp::ScoreTier,
 }
 
 /// File inside a `--state-dir` holding the streamed per-trial session
@@ -110,6 +118,8 @@ impl Default for TuneConfig {
             scalarize: None,
             state_dir: None,
             resume: false,
+            score_threads: 1,
+            score_tier: crate::gp::ScoreTier::F64,
         }
     }
 }
@@ -169,6 +179,8 @@ impl TuneConfig {
                 },
             ),
             ("resume", self.resume.into()),
+            ("score_threads", self.score_threads.into()),
+            ("score_tier", self.score_tier.name().into()),
         ])
     }
 
@@ -235,6 +247,14 @@ impl TuneConfig {
         if let Some(r) = j.get("resume").and_then(Json::as_bool) {
             cfg.resume = r;
         }
+        if let Some(t) = j.get("score_threads").and_then(Json::as_i64) {
+            anyhow::ensure!(t > 0, "score_threads must be positive");
+            cfg.score_threads = t as usize;
+        }
+        if let Some(t) = j.get("score_tier").and_then(Json::as_str) {
+            cfg.score_tier = crate::gp::ScoreTier::parse(t)
+                .with_context(|| format!("unknown score tier '{t}' (f64|f32)"))?;
+        }
         Ok(cfg)
     }
 
@@ -280,6 +300,9 @@ impl TuneConfig {
             if let Some(set) = &cfg.objectives {
                 bo = bo.with_objectives(set.clone(), cfg.resolved_scalarize()?);
             }
+            bo = bo
+                .with_score_threads(cfg.score_threads.max(1))
+                .with_score_tier(cfg.score_tier);
             Ok(Box::new(bo))
         }
 
@@ -321,6 +344,16 @@ impl TuneConfig {
         anyhow::ensure!(
             self.objectives.is_none(),
             "objectives applies to the BO engine only (got {})",
+            self.algorithm.name()
+        );
+        anyhow::ensure!(
+            self.score_threads <= 1,
+            "score_threads applies to the BO engine only (got {})",
+            self.algorithm.name()
+        );
+        anyhow::ensure!(
+            self.score_tier == crate::gp::ScoreTier::F64,
+            "score_tier applies to the BO engine only (got {})",
             self.algorithm.name()
         );
         Ok(self.algorithm.build(&space, self.seed))
@@ -516,6 +549,8 @@ mod tests {
             Some(crate::objectives::Scalarization::parse("weighted:0.7,0.3").unwrap());
         c.state_dir = Some(PathBuf::from("/tmp/state"));
         c.resume = true;
+        c.score_threads = 4;
+        c.score_tier = crate::gp::ScoreTier::F32;
         let j = c.to_json();
         let c2 = TuneConfig::from_json(&j).unwrap();
         assert_eq!(c2.model, ModelId::BertFp32);
@@ -532,6 +567,8 @@ mod tests {
         assert_eq!(c2.scalarize, c.scalarize);
         assert_eq!(c2.state_dir, Some(PathBuf::from("/tmp/state")));
         assert!(c2.resume);
+        assert_eq!(c2.score_threads, 4);
+        assert_eq!(c2.score_tier, crate::gp::ScoreTier::F32);
     }
 
     #[test]
@@ -595,6 +632,14 @@ mod tests {
         c.tune_lengthscale = false;
         c.objectives =
             Some(crate::objectives::ObjectiveSet::parse("throughput,p99:min").unwrap());
+        let err = c.build_tuner().unwrap_err();
+        assert!(err.to_string().contains("BO engine only"), "{err}");
+        c.objectives = None;
+        c.score_threads = 4;
+        let err = c.build_tuner().unwrap_err();
+        assert!(err.to_string().contains("BO engine only"), "{err}");
+        c.score_threads = 1;
+        c.score_tier = crate::gp::ScoreTier::F32;
         let err = c.build_tuner().unwrap_err();
         assert!(err.to_string().contains("BO engine only"), "{err}");
     }
@@ -692,6 +737,23 @@ mod tests {
         assert!(TuneConfig::from_json(&j).is_err());
         let j = parse(r#"{"max_seconds":-2}"#).unwrap();
         assert!(TuneConfig::from_json(&j).is_err());
+        let j = parse(r#"{"score_threads":0}"#).unwrap();
+        assert!(TuneConfig::from_json(&j).is_err());
+        let j = parse(r#"{"score_tier":"f16"}"#).unwrap();
+        assert!(TuneConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn scoring_engine_knobs_build_a_bo_engine() {
+        use crate::algorithms::Tuner as _;
+        let c = TuneConfig {
+            score_threads: 4,
+            score_tier: crate::gp::ScoreTier::F32,
+            ..TuneConfig::default()
+        };
+        let mut tuner = c.build_tuner().unwrap();
+        assert_eq!(tuner.name(), "bayesian-optimization");
+        assert_eq!(tuner.ask(1).len(), 1);
     }
 
     #[test]

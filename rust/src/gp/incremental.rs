@@ -10,30 +10,82 @@
 //! back — fantasies are pure appends, so retracting is exact (bitwise)
 //! state restoration, not an approximate downdate.
 //!
-//! Scoring ([`IncrementalGp::score_into`]) builds the cross-kernel panel
-//! `Kc` row-blocked in a caller-owned [`ScoreWorkspace`], forms the
-//! posterior mean as one panel·α accumulation, and the variance through a
-//! single multi-RHS [`trsm_lower_packed`] — one blocked pass over the
-//! whole candidate pool instead of a per-candidate fit/solve, with zero
-//! heap allocation once the workspace has warmed up.
+//! Scoring ([`IncrementalGp::score_into`]) is a real *scoring engine*:
+//! the cross-kernel panel `Kc` is built candidate-block-major in a
+//! caller-owned [`ScoreWorkspace`], the posterior mean formed as one
+//! panel·α accumulation, and the variance taken through one cache-blocked
+//! multi-RHS trsm ([`trsm_lower_packed_blocked`], geometry tunable via
+//! [`BlockSpec`]) — one pass over the whole candidate pool instead of a
+//! per-candidate fit/solve, with no buffer growth once the workspace has
+//! warmed up. Two knobs scale it:
 //!
-//! Numerical contract: every routine performs the same floating-point
-//! operations in the same order as the exact oracle (`gp::native`), so an
-//! incrementally grown posterior is bit-equal to a from-scratch
-//! [`NativeGp::fit`](super::NativeGp::fit) on the same data. The
-//! `surrogate_incremental` integration suite pins this; keep operation
-//! order intact when editing.
+//! - [`IncrementalGp::set_score_threads`] partitions the pool into
+//!   **fixed contiguous candidate blocks** scored by scoped worker
+//!   threads, each owning its exclusive slice of the workspace. Because a
+//!   candidate's panel column, mean accumulation and variance solve touch
+//!   only that candidate's column — and the partition is a pure function
+//!   of (pool size, thread count) — every candidate's result is
+//!   **bit-identical** to the serial sweep for any thread count.
+//! - [`IncrementalGp::set_score_tier`] selects [`ScoreTier::F32`], which
+//!   downcasts factor/inputs/panel to f32 for acquisition *ranking* only;
+//!   [`ScoreTier::F64`] stays the default and the pinned oracle.
+//!
+//! Numerical contract: on the f64 tier every routine performs the same
+//! floating-point operations in the same order as the exact oracle
+//! (`gp::native`), so an incrementally grown posterior is bit-equal to a
+//! from-scratch [`NativeGp::fit`](super::NativeGp::fit) on the same data
+//! — for any thread count or blocking. The `surrogate_incremental` and
+//! `scoring_engine` integration suites pin this; keep per-entry operation
+//! order (ascending-index accumulation) intact when editing.
 
-use super::kernel::{eval_sqdist, GpHyper};
+use super::kernel::{eval_sqdist, eval_sqdist_f32, GpHyper};
 use super::native::Posterior;
 use crate::util::linalg::{
     chol_append_packed, packed_len, solve_lower_packed_inplace, solve_lower_t_packed_inplace,
-    sqdist, trsm_lower_packed,
+    sqdist, sqdist_f32, trsm_lower_packed_blocked, trsm_lower_packed_blocked_f32, BlockSpec,
 };
+
+/// Arithmetic width of the scoring pass.
+///
+/// [`ScoreTier::F64`] (the default) is the pinned oracle path: bit-equal
+/// to the from-scratch reference for any thread count or [`BlockSpec`].
+/// [`ScoreTier::F32`] downcasts the factor, inputs and panel to f32 for
+/// acquisition *ranking* only — the mean/std handed back are cast up but
+/// carry f32 precision and must never feed a parity pin. BO tolerates the
+/// ranking noise on well-separated gains (property-tested in
+/// `rust/tests/scoring_engine.rs`); everything the model *learns* (the
+/// factor, α, appended rows) stays f64 regardless of tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScoreTier {
+    /// Full f64 scoring — the default and the bitwise oracle.
+    #[default]
+    F64,
+    /// Downcast f32 fast tier, for acquisition ranking only.
+    F32,
+}
+
+impl ScoreTier {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScoreTier::F64 => "f64",
+            ScoreTier::F32 => "f32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ScoreTier> {
+        match s.to_lowercase().as_str() {
+            "f64" | "double" | "exact" => Some(ScoreTier::F64),
+            "f32" | "single" | "fast" => Some(ScoreTier::F32),
+            _ => None,
+        }
+    }
+}
 
 /// Reusable buffers for the scoring hot path. Own one per engine and pass
 /// it to every [`IncrementalGp::score_into`] call; after the first call at
-/// a given (history, candidates) shape, scoring allocates nothing.
+/// a given (history, candidates) shape, none of these buffers grow again
+/// (the no-per-ask-heap-growth contract — probe with
+/// [`ScoreWorkspace::heap_capacities`]).
 #[derive(Debug, Default)]
 pub struct ScoreWorkspace {
     /// n×c cross-kernel panel; overwritten by L⁻¹Kc during scoring.
@@ -56,6 +108,29 @@ pub struct ScoreWorkspace {
     pub n_obj: usize,
     /// K×n per-objective α = K⁻¹y scratch for the multi pass.
     alpha_obj: Vec<f64>,
+    /// Downcast scratch for the [`ScoreTier::F32`] fast tier.
+    f32buf: F32Buffers,
+}
+
+/// Downcast scratch for the [`ScoreTier::F32`] fast tier, grouped in one
+/// struct so the scoring core can split-borrow it from the f64 output
+/// buffers. Empty (and never filled) on the default f64 tier.
+#[derive(Debug, Default)]
+struct F32Buffers {
+    /// Downcast packed factor.
+    l: Vec<f32>,
+    /// Downcast per-objective α (objective-major, K×n).
+    alpha: Vec<f32>,
+    /// Downcast history inputs (row-major n×d).
+    x: Vec<f32>,
+    /// Downcast candidate pool (row-major c×d).
+    cand: Vec<f32>,
+    /// f32 cross-kernel panel (n×c).
+    panel: Vec<f32>,
+    /// f32 per-objective means (K×c), cast up after the pass.
+    mean: Vec<f32>,
+    /// f32 variance accumulators / stds (c), cast up after the pass.
+    std: Vec<f32>,
 }
 
 impl ScoreWorkspace {
@@ -68,6 +143,29 @@ impl ScoreWorkspace {
         // total_cmp: panic-free and deterministic even for NaN gains.
         self.order.sort_by(|&a, &b| gain[b].total_cmp(&gain[a]));
         &self.order
+    }
+
+    /// Capacities of every owned buffer — the allocation-stability probe
+    /// behind the engine's no-per-ask-heap-growth test: once a workload's
+    /// shapes have been seen, repeated scoring passes must leave all of
+    /// these unchanged.
+    pub fn heap_capacities(&self) -> [usize; 14] {
+        [
+            self.panel.capacity(),
+            self.mean.capacity(),
+            self.std.capacity(),
+            self.gain.capacity(),
+            self.order.capacity(),
+            self.mean_obj.capacity(),
+            self.alpha_obj.capacity(),
+            self.f32buf.l.capacity(),
+            self.f32buf.alpha.capacity(),
+            self.f32buf.x.capacity(),
+            self.f32buf.cand.capacity(),
+            self.f32buf.panel.capacity(),
+            self.f32buf.mean.capacity(),
+            self.f32buf.std.capacity(),
+        ]
     }
 }
 
@@ -94,6 +192,17 @@ pub struct IncrementalGp {
     alpha_dirty: bool,
     /// Scratch for new-row covariances (capacity-reserved).
     kbuf: Vec<f64>,
+    /// Scoring arithmetic tier (default [`ScoreTier::F64`]).
+    tier: ScoreTier,
+    /// Scoring worker threads (default 1 = serial; results bit-identical
+    /// for every count).
+    threads: usize,
+    /// Cache-blocking geometry for the panel build and trsm.
+    blocks: BlockSpec,
+    /// Reused workspace for [`IncrementalGp::predict`].
+    predict_ws: ScoreWorkspace,
+    /// Reused flat-candidate scratch for [`IncrementalGp::predict`].
+    predict_flat: Vec<f64>,
 }
 
 impl IncrementalGp {
@@ -111,11 +220,55 @@ impl IncrementalGp {
             alpha: Vec::with_capacity(cap),
             alpha_dirty: true,
             kbuf: Vec::with_capacity(cap),
+            tier: ScoreTier::F64,
+            threads: 1,
+            blocks: BlockSpec::default(),
+            predict_ws: ScoreWorkspace::default(),
+            predict_flat: Vec::new(),
         }
     }
 
     pub fn hyper(&self) -> GpHyper {
         self.hyper
+    }
+
+    /// Scoring arithmetic tier. Scoring config lives on the engine, never
+    /// in [`GpHyper`]: hypers are serialized over the wire/WAL as a pure
+    /// model parameterisation, while tier/threads/blocking only change
+    /// *how fast* (and on f32, at what ranking precision) the same model
+    /// is scored.
+    pub fn score_tier(&self) -> ScoreTier {
+        self.tier
+    }
+
+    /// Select the scoring tier; see [`ScoreTier`] for the contract.
+    pub fn set_score_tier(&mut self, tier: ScoreTier) {
+        self.tier = tier;
+    }
+
+    /// Scoring worker threads.
+    pub fn score_threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Set the scoring worker-thread count (clamped to ≥ 1). Results are
+    /// bit-identical for every count: the candidate pool is partitioned
+    /// into fixed contiguous blocks — a pure function of (pool size,
+    /// thread count) — and each candidate's per-column op sequence is
+    /// unchanged from the serial sweep.
+    pub fn set_score_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// Cache-blocking geometry used by the panel build and blocked trsm.
+    pub fn block_spec(&self) -> BlockSpec {
+        self.blocks
+    }
+
+    /// Set the cache-blocking geometry (bitwise output-invariant; see
+    /// [`BlockSpec`]). Tuned by `examples/self_tune_scoring.rs`.
+    pub fn set_block_spec(&mut self, blocks: BlockSpec) {
+        self.blocks = blocks;
     }
 
     /// Change hyperparameters. The factor is kernel-dependent, so this
@@ -276,8 +429,11 @@ impl IncrementalGp {
     }
 
     /// Score `c` candidates (row-major c×d in `cand`) into `ws`: posterior
-    /// mean/std and the SMSego gain `(μ + acq_alpha·σ) − y_best`. Zero
-    /// heap allocation once `ws` buffers have grown to shape.
+    /// mean/std and the SMSego gain `(μ + acq_alpha·σ) − y_best`, through
+    /// the scoring engine (tier / threads / blocking — see the module
+    /// docs). The numeric buffers allocate nothing once `ws` has grown to
+    /// shape; a pass adds only O(threads · objectives) transient slice
+    /// bookkeeping on top.
     pub fn score_into(
         &mut self,
         cand: &[f64],
@@ -291,8 +447,6 @@ impl IncrementalGp {
         assert_eq!(cand.len(), c * self.d, "candidate shape mismatch");
         self.refresh_alpha();
 
-        ws.panel.clear();
-        ws.panel.resize(m * c, 0.0);
         ws.mean.clear();
         ws.mean.resize(c, 0.0);
         ws.std.clear();
@@ -300,38 +454,12 @@ impl IncrementalGp {
         ws.gain.clear();
         ws.gain.resize(c, 0.0);
 
-        // Cross-kernel panel: row i holds k(xᵢ, ·) over the whole pool.
-        for i in 0..m {
-            let xi = &self.x[i * self.d..(i + 1) * self.d];
-            let row = &mut ws.panel[i * c..(i + 1) * c];
-            for (j, kij) in row.iter_mut().enumerate() {
-                let cj = &cand[j * self.d..(j + 1) * self.d];
-                *kij = eval_sqdist(self.hyper.kernel, sqdist(xi, cj), &self.hyper);
-            }
-        }
+        let gp: &IncrementalGp = self;
+        let ScoreWorkspace { panel, mean, std, gain, f32buf, .. } = ws;
+        score_partitioned(gp, cand, c, &gp.alpha, 1, panel, mean, std, f32buf);
 
-        // μ = Kcᵀα, accumulated panel-row-wise (ascending i, matching the
-        // oracle's per-candidate dot-product order).
-        for i in 0..m {
-            let a = self.alpha[i];
-            let row = &ws.panel[i * c..(i + 1) * c];
-            for (mu, kij) in ws.mean.iter_mut().zip(row) {
-                *mu += kij * a;
-            }
-        }
-
-        // V = L⁻¹Kc in one blocked sweep, then σ² = k(x,x) − Σᵢ Vᵢⱼ².
-        trsm_lower_packed(&self.l, m, &mut ws.panel, c);
-        for i in 0..m {
-            let row = &ws.panel[i * c..(i + 1) * c];
-            for (acc, v) in ws.std.iter_mut().zip(row) {
-                *acc += v * v;
-            }
-        }
-        for j in 0..c {
-            let var = self.hyper.signal_var - ws.std[j];
-            ws.std[j] = var.max(1e-12).sqrt();
-            ws.gain[j] = (ws.mean[j] + acq_alpha * ws.std[j]) - y_best;
+        for ((g, mu), s) in gain.iter_mut().zip(mean.iter()).zip(std.iter()) {
+            *g = (*mu + acq_alpha * *s) - y_best;
         }
     }
 
@@ -395,8 +523,6 @@ impl IncrementalGp {
         }
 
         ws.n_obj = k_obj;
-        ws.panel.clear();
-        ws.panel.resize(m * c, 0.0);
         ws.mean_obj.clear();
         ws.mean_obj.resize(k_obj * c, 0.0);
         ws.std.clear();
@@ -404,60 +530,379 @@ impl IncrementalGp {
         ws.gain.clear();
         ws.gain.resize(c, 0.0);
 
-        // Cross-kernel panel, built once (identical loop to score_into).
-        for i in 0..m {
-            let xi = &self.x[i * self.d..(i + 1) * self.d];
-            let row = &mut ws.panel[i * c..(i + 1) * c];
-            for (j, kij) in row.iter_mut().enumerate() {
-                let cj = &cand[j * self.d..(j + 1) * self.d];
-                *kij = eval_sqdist(self.hyper.kernel, sqdist(xi, cj), &self.hyper);
-            }
-        }
-
-        // μ_k = Kcᵀα_k, panel-row-wise per objective (ascending i — the
-        // same accumulation order a single-objective pass performs).
-        for k in 0..k_obj {
-            let alpha = &ws.alpha_obj[k * m..(k + 1) * m];
-            let mean = &mut ws.mean_obj[k * c..(k + 1) * c];
-            for i in 0..m {
-                let a = alpha[i];
-                let row = &ws.panel[i * c..(i + 1) * c];
-                for (mu, kij) in mean.iter_mut().zip(row) {
-                    *mu += kij * a;
-                }
-            }
-        }
-
-        // V = L⁻¹Kc once; σ is objective-independent.
-        trsm_lower_packed(&self.l, m, &mut ws.panel, c);
-        for i in 0..m {
-            let row = &ws.panel[i * c..(i + 1) * c];
-            for (acc, v) in ws.std.iter_mut().zip(row) {
-                *acc += v * v;
-            }
-        }
-        for j in 0..c {
-            let var = self.hyper.signal_var - ws.std[j];
-            ws.std[j] = var.max(1e-12).sqrt();
-        }
+        // One engine pass: the panel and variance trsm are computed once
+        // (they depend only on X), each objective contributes one panel·α
+        // accumulation. Runs through the same partitioned core as
+        // score_into, so threads/tier/blocking apply here too.
+        let gp: &IncrementalGp = self;
+        let ScoreWorkspace { panel, std, mean, mean_obj, alpha_obj, f32buf, .. } = ws;
+        score_partitioned(gp, cand, c, alpha_obj, k_obj, panel, mean_obj, std, f32buf);
 
         // Mirror the primary objective into the single-objective slot.
-        ws.mean.clear();
-        ws.mean.extend_from_slice(&ws.mean_obj[..c]);
+        mean.clear();
+        mean.extend_from_slice(&mean_obj[..c]);
     }
 
-    /// Allocating convenience wrapper over [`IncrementalGp::score_into`]
-    /// for tests and oracle comparisons.
+    /// Convenience wrapper over [`IncrementalGp::score_into`] for tests
+    /// and oracle comparisons. Routes through the same scoring engine and
+    /// a model-owned reused [`ScoreWorkspace`], so repeated predictions
+    /// exercise exactly the kernels the hot path uses and stop allocating
+    /// scratch once warmed up (only the returned [`Posterior`] allocates).
     pub fn predict(&mut self, cand: &[Vec<f64>]) -> Posterior {
-        let mut flat = Vec::with_capacity(cand.len() * self.d);
+        let mut flat = std::mem::take(&mut self.predict_flat);
+        let mut ws = std::mem::take(&mut self.predict_ws);
+        flat.clear();
+        flat.reserve(cand.len() * self.d);
         for row in cand {
             assert_eq!(row.len(), self.d, "candidate dim mismatch");
             flat.extend_from_slice(row);
         }
-        let mut ws = ScoreWorkspace::default();
         self.score_into(&flat, cand.len(), 0.0, 0.0, &mut ws);
-        Posterior { mean: ws.mean, std: ws.std }
+        let post = Posterior { mean: ws.mean.clone(), std: ws.std.clone() };
+        self.predict_flat = flat;
+        self.predict_ws = ws;
+        post
     }
+}
+
+/// Refill a downcast scratch buffer from an f64 source, reusing capacity.
+fn fill_f32(dst: &mut Vec<f32>, src: &[f64]) {
+    dst.clear();
+    dst.extend(src.iter().map(|&v| v as f32));
+}
+
+/// Fixed contiguous partition of `c` candidates over `threads` workers: a
+/// pure function of `(c, threads)` (first `c % threads` workers take one
+/// extra), so the parallel sweep's per-column operation order — and
+/// therefore every output bit — matches the serial one. Requires
+/// `1 <= threads <= c`, so every range is non-empty.
+fn partition_bounds(c: usize, threads: usize) -> Vec<(usize, usize)> {
+    let base = c / threads;
+    let rem = c % threads;
+    let mut bounds = Vec::with_capacity(threads);
+    let mut j0 = 0;
+    for wi in 0..threads {
+        let w = base + usize::from(wi < rem);
+        bounds.push((j0, j0 + w));
+        j0 += w;
+    }
+    debug_assert_eq!(j0, c);
+    bounds
+}
+
+/// Split each row of an objective-major `K×c` buffer at the worker
+/// bounds, transposed worker-major: `result[wi]` holds worker `wi`'s
+/// exclusive `[j0, j1)` sub-slice of every objective row.
+fn carve_rows<'a, T>(
+    buf: &'a mut [T],
+    c: usize,
+    bounds: &[(usize, usize)],
+) -> Vec<Vec<&'a mut [T]>> {
+    let mut per: Vec<Vec<&'a mut [T]>> =
+        bounds.iter().map(|_| Vec::with_capacity(buf.len() / c.max(1))).collect();
+    for row in buf.chunks_mut(c) {
+        let mut rest = row;
+        for (wi, &(j0, j1)) in bounds.iter().enumerate() {
+            let (chunk, r) = std::mem::take(&mut rest).split_at_mut(j1 - j0);
+            per[wi].push(chunk);
+            rest = r;
+        }
+    }
+    per
+}
+
+/// One worker's exclusive view of the scoring buffers for a contiguous
+/// candidate range — carved up front so scoped threads write disjoint
+/// slices with no synchronisation. The f64 variant is the pinned oracle
+/// path; the f32 variant carries the downcast inputs (shared) plus the
+/// worker's f32 scratch and the f64 output slices the results are cast
+/// up into.
+enum RangeOut<'a> {
+    F64 {
+        /// Worker-private m×w panel slab (row stride = range width).
+        panel: &'a mut [f64],
+        /// Per-objective mean output, this worker's `[j0, j1)` slice.
+        means: Vec<&'a mut [f64]>,
+        /// Posterior-std output slice (arrives zeroed).
+        stds: &'a mut [f64],
+    },
+    F32 {
+        l: &'a [f32],
+        alphas: &'a [f32],
+        x: &'a [f32],
+        cand: &'a [f32],
+        panel: &'a mut [f32],
+        means32: Vec<&'a mut [f32]>,
+        stds32: &'a mut [f32],
+        /// f64 output slices the f32 results are cast up into.
+        means: Vec<&'a mut [f64]>,
+        stds: &'a mut [f64],
+    },
+}
+
+/// Score candidates `[j0, j1)` of the pool into `out`: panel build →
+/// per-objective mean accumulation → blocked variance trsm → std
+/// finalisation. On the f64 tier every per-candidate operation sequence
+/// is identical to the full serial sweep (ascending-index accumulation
+/// throughout, blocking only reorders *which column when*), which is the
+/// whole bit-identical-parallelism argument.
+fn score_range(
+    gp: &IncrementalGp,
+    alphas: &[f64],
+    k_obj: usize,
+    cand: &[f64],
+    j0: usize,
+    j1: usize,
+    out: RangeOut<'_>,
+) {
+    let w = j1 - j0;
+    if w == 0 {
+        return;
+    }
+    let m = gp.total();
+    debug_assert_eq!(alphas.len(), k_obj * m, "alphas must be objective-major K x m");
+    let d = gp.d;
+    let h = &gp.hyper;
+    let blocks = gp.blocks;
+    let nc = blocks.nc.max(1);
+    match out {
+        RangeOut::F64 { panel, means, stds } => {
+            // Candidate-block-major panel build: each nc-wide block of
+            // candidate d-vectors stays cache-hot across all m kernel
+            // rows (entries are pure per-(i, j) functions — build order
+            // cannot change a bit).
+            let mut jb = 0usize;
+            while jb < w {
+                let je = jb.saturating_add(nc).min(w);
+                for i in 0..m {
+                    let xi = &gp.x[i * d..(i + 1) * d];
+                    let row = &mut panel[i * w + jb..i * w + je];
+                    for (jj, kij) in row.iter_mut().enumerate() {
+                        let cj0 = (j0 + jb + jj) * d;
+                        let cj = &cand[cj0..cj0 + d];
+                        *kij = eval_sqdist(h.kernel, sqdist(xi, cj), h);
+                    }
+                }
+                jb = je;
+            }
+            // μ_k = Kcᵀα_k, ascending-i per candidate — the oracle's
+            // dot-product order.
+            for (k, mean) in means.into_iter().enumerate() {
+                let alpha = &alphas[k * m..(k + 1) * m];
+                for (i, &a) in alpha.iter().enumerate() {
+                    let row = &panel[i * w..(i + 1) * w];
+                    for (mu, kij) in mean.iter_mut().zip(row) {
+                        *mu += kij * a;
+                    }
+                }
+            }
+            // V = L⁻¹Kc; σ² = k(x,x) − Σᵢ Vᵢⱼ², ascending i.
+            trsm_lower_packed_blocked(&gp.l, m, panel, w, blocks);
+            for i in 0..m {
+                let row = &panel[i * w..(i + 1) * w];
+                for (acc, v) in stds.iter_mut().zip(row) {
+                    *acc += v * v;
+                }
+            }
+            for s in stds.iter_mut() {
+                let var = h.signal_var - *s;
+                *s = var.max(1e-12).sqrt();
+            }
+        }
+        RangeOut::F32 {
+            l,
+            alphas: alphas32,
+            x,
+            cand: cand32,
+            panel,
+            mut means32,
+            stds32,
+            means,
+            stds,
+        } => {
+            // Same structure as the f64 arm at f32 width; results are
+            // cast up at the end. Ranking-quality only — never a parity
+            // source.
+            let mut jb = 0usize;
+            while jb < w {
+                let je = jb.saturating_add(nc).min(w);
+                for i in 0..m {
+                    let xi = &x[i * d..(i + 1) * d];
+                    let row = &mut panel[i * w + jb..i * w + je];
+                    for (jj, kij) in row.iter_mut().enumerate() {
+                        let cj0 = (j0 + jb + jj) * d;
+                        let cj = &cand32[cj0..cj0 + d];
+                        *kij = eval_sqdist_f32(h.kernel, sqdist_f32(xi, cj), h);
+                    }
+                }
+                jb = je;
+            }
+            for (k, mean) in means32.iter_mut().enumerate() {
+                let alpha = &alphas32[k * m..(k + 1) * m];
+                for (i, &a) in alpha.iter().enumerate() {
+                    let row = &panel[i * w..(i + 1) * w];
+                    for (mu, kij) in mean.iter_mut().zip(row) {
+                        *mu += kij * a;
+                    }
+                }
+            }
+            trsm_lower_packed_blocked_f32(l, m, panel, w, blocks);
+            for i in 0..m {
+                let row = &panel[i * w..(i + 1) * w];
+                for (acc, v) in stds32.iter_mut().zip(row) {
+                    *acc += v * v;
+                }
+            }
+            let sv = h.signal_var as f32;
+            for s in stds32.iter_mut() {
+                let var = sv - *s;
+                *s = var.max(1e-12_f32).sqrt();
+            }
+            for (dst, src) in means.into_iter().zip(means32.iter()) {
+                for (o, v) in dst.iter_mut().zip(src.iter()) {
+                    *o = *v as f64;
+                }
+            }
+            for (o, v) in stds.iter_mut().zip(stds32.iter()) {
+                *o = *v as f64;
+            }
+        }
+    }
+}
+
+/// The scoring-engine core shared by [`IncrementalGp::score_into`] and
+/// [`IncrementalGp::score_multi_into`]: panel build + per-objective mean
+/// accumulation + blocked variance trsm over the candidate pool, run at
+/// `gp.tier` precision, tiled by `gp.blocks`, and partitioned over
+/// `gp.threads` scoped workers on fixed contiguous candidate blocks.
+/// `alphas` is objective-major (K×m), `means` objective-major (K×c),
+/// `stds` arrives zeroed (length c). The numeric buffers never grow once
+/// warmed; a pass performs only O(threads · objectives) transient slice
+/// bookkeeping beyond them (none of it on the serial path's panel/std
+/// math itself).
+#[allow(clippy::too_many_arguments)]
+fn score_partitioned(
+    gp: &IncrementalGp,
+    cand: &[f64],
+    c: usize,
+    alphas: &[f64],
+    k_obj: usize,
+    panel: &mut Vec<f64>,
+    means: &mut [f64],
+    stds: &mut [f64],
+    f32b: &mut F32Buffers,
+) {
+    if c == 0 {
+        return;
+    }
+    let m = gp.total();
+    match gp.tier {
+        ScoreTier::F64 => {
+            panel.clear();
+            panel.resize(m * c, 0.0);
+        }
+        ScoreTier::F32 => {
+            fill_f32(&mut f32b.l, &gp.l);
+            fill_f32(&mut f32b.alpha, alphas);
+            fill_f32(&mut f32b.x, &gp.x);
+            fill_f32(&mut f32b.cand, cand);
+            f32b.panel.clear();
+            f32b.panel.resize(m * c, 0.0);
+            f32b.mean.clear();
+            f32b.mean.resize(k_obj * c, 0.0);
+            f32b.std.clear();
+            f32b.std.resize(c, 0.0);
+        }
+    }
+
+    let threads = gp.threads.max(1).min(c);
+    if threads <= 1 {
+        let out = match gp.tier {
+            ScoreTier::F64 => RangeOut::F64 {
+                panel: &mut panel[..],
+                means: means.chunks_mut(c).collect(),
+                stds,
+            },
+            ScoreTier::F32 => RangeOut::F32 {
+                l: &f32b.l,
+                alphas: &f32b.alpha,
+                x: &f32b.x,
+                cand: &f32b.cand,
+                panel: &mut f32b.panel[..],
+                means32: f32b.mean.chunks_mut(c).collect(),
+                stds32: &mut f32b.std[..],
+                means: means.chunks_mut(c).collect(),
+                stds,
+            },
+        };
+        score_range(gp, alphas, k_obj, cand, 0, c, out);
+        return;
+    }
+
+    // Carve every worker's exclusive output view up front, then fan out
+    // on scoped threads (the caller thread takes the first range). Panel
+    // slabs are worker-private m×w blocks; mean/std rows are split at the
+    // partition bounds.
+    let bounds = partition_bounds(c, threads);
+    let mut outs: Vec<RangeOut<'_>> = Vec::with_capacity(threads);
+    match gp.tier {
+        ScoreTier::F64 => {
+            let mut panel_rest = &mut panel[..];
+            let mut stds_rest = stds;
+            let mut means_per = carve_rows(means, c, &bounds);
+            for (wi, &(j0, j1)) in bounds.iter().enumerate() {
+                let w = j1 - j0;
+                let (p, pr) = std::mem::take(&mut panel_rest).split_at_mut(m * w);
+                panel_rest = pr;
+                let (s, sr) = std::mem::take(&mut stds_rest).split_at_mut(w);
+                stds_rest = sr;
+                outs.push(RangeOut::F64 {
+                    panel: p,
+                    means: std::mem::take(&mut means_per[wi]),
+                    stds: s,
+                });
+            }
+        }
+        ScoreTier::F32 => {
+            let F32Buffers { l, alpha, x, cand: cand32, panel: panel32, mean: mean32, std: std32 } =
+                f32b;
+            let mut panel_rest = &mut panel32[..];
+            let mut stds32_rest = &mut std32[..];
+            let mut stds_rest = stds;
+            let mut means32_per = carve_rows(mean32, c, &bounds);
+            let mut means_per = carve_rows(means, c, &bounds);
+            for (wi, &(j0, j1)) in bounds.iter().enumerate() {
+                let w = j1 - j0;
+                let (p, pr) = std::mem::take(&mut panel_rest).split_at_mut(m * w);
+                panel_rest = pr;
+                let (s32, s32r) = std::mem::take(&mut stds32_rest).split_at_mut(w);
+                stds32_rest = s32r;
+                let (s, sr) = std::mem::take(&mut stds_rest).split_at_mut(w);
+                stds_rest = sr;
+                outs.push(RangeOut::F32 {
+                    l: &l[..],
+                    alphas: &alpha[..],
+                    x: &x[..],
+                    cand: &cand32[..],
+                    panel: p,
+                    means32: std::mem::take(&mut means32_per[wi]),
+                    stds32: s32,
+                    means: std::mem::take(&mut means_per[wi]),
+                    stds: s,
+                });
+            }
+        }
+    }
+
+    std::thread::scope(|sc| {
+        let mut outs = outs.into_iter();
+        let first = outs.next().expect("at least one worker range");
+        for (&(j0, j1), out) in bounds[1..].iter().zip(outs) {
+            sc.spawn(move || score_range(gp, alphas, k_obj, cand, j0, j1, out));
+        }
+        let (j0, j1) = bounds[0];
+        score_range(gp, alphas, k_obj, cand, j0, j1, first);
+    });
 }
 
 #[cfg(test)]
@@ -685,5 +1130,130 @@ mod tests {
         // Dimension can change after clear.
         assert!(gp.push(&[0.1, 0.2, 0.3], 1.0));
         assert_eq!(gp.total(), 1);
+    }
+
+    #[test]
+    fn parallel_scoring_bitwise_matches_serial() {
+        // The fixed-partition determinism contract, at module scope: any
+        // thread count (including counts exceeding the pool) reproduces
+        // the serial sweep bit for bit. The full {threads}×{pool} matrix
+        // lives in rust/tests/scoring_engine.rs.
+        let mut rng = Rng::new(31);
+        let (x, y) = toy(&mut rng, 20, 3);
+        let mut gp = build(&x, &y, GpHyper::default());
+        let c = 37;
+        let cand: Vec<f64> = (0..c * 3).map(|_| rng.f64()).collect();
+        let mut ws_serial = ScoreWorkspace::default();
+        gp.score_into(&cand, c, 1.5, 0.2, &mut ws_serial);
+        for threads in [2, 3, 64] {
+            gp.set_score_threads(threads);
+            let mut ws = ScoreWorkspace::default();
+            gp.score_into(&cand, c, 1.5, 0.2, &mut ws);
+            for j in 0..c {
+                assert_eq!(ws.mean[j].to_bits(), ws_serial.mean[j].to_bits(), "t={threads} j={j}");
+                assert_eq!(ws.std[j].to_bits(), ws_serial.std[j].to_bits(), "t={threads} j={j}");
+                assert_eq!(ws.gain[j].to_bits(), ws_serial.gain[j].to_bits(), "t={threads} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_spec_bitwise_invariant_end_to_end() {
+        let mut rng = Rng::new(32);
+        let (x, y) = toy(&mut rng, 15, 2);
+        let mut gp = build(&x, &y, GpHyper::default());
+        let c = 21;
+        let cand: Vec<f64> = (0..c * 2).map(|_| rng.f64()).collect();
+        let mut want = ScoreWorkspace::default();
+        gp.set_block_spec(BlockSpec::naive());
+        gp.score_into(&cand, c, 1.0, 0.0, &mut want);
+        for spec in [BlockSpec { mc: 3, nc: 5, kc: 4 }, BlockSpec::default()] {
+            gp.set_block_spec(spec);
+            let mut got = ScoreWorkspace::default();
+            gp.score_into(&cand, c, 1.0, 0.0, &mut got);
+            for j in 0..c {
+                assert_eq!(got.mean[j].to_bits(), want.mean[j].to_bits(), "{spec:?}");
+                assert_eq!(got.std[j].to_bits(), want.std[j].to_bits(), "{spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_tier_is_opt_in_and_tracks_f64() {
+        let mut rng = Rng::new(33);
+        let (x, y) = toy(&mut rng, 16, 3);
+        let mut gp = build(&x, &y, GpHyper::default());
+        assert_eq!(gp.score_tier(), ScoreTier::F64, "f64 must be the default tier");
+        let c = 11;
+        let cand: Vec<f64> = (0..c * 3).map(|_| rng.f64()).collect();
+        let mut exact = ScoreWorkspace::default();
+        gp.score_into(&cand, c, 1.5, 0.0, &mut exact);
+        gp.set_score_tier(ScoreTier::F32);
+        for threads in [1, 3] {
+            gp.set_score_threads(threads);
+            let mut fast = ScoreWorkspace::default();
+            gp.score_into(&cand, c, 1.5, 0.0, &mut fast);
+            for j in 0..c {
+                assert!(
+                    (fast.mean[j] - exact.mean[j]).abs() < 1e-3,
+                    "t={threads} j={j}: f32 mean {} vs f64 {}",
+                    fast.mean[j],
+                    exact.mean[j]
+                );
+                assert!((fast.std[j] - exact.std[j]).abs() < 1e-3);
+            }
+        }
+        assert_eq!(ScoreTier::parse("f32"), Some(ScoreTier::F32));
+        assert_eq!(ScoreTier::parse("exact"), Some(ScoreTier::F64));
+        assert_eq!(ScoreTier::parse("bogus"), None);
+    }
+
+    #[test]
+    fn multi_objective_parallel_bitwise_matches_serial() {
+        let mut rng = Rng::new(34);
+        let (x, y0) = toy(&mut rng, 14, 3);
+        let y1: Vec<f64> = x.iter().map(|p| p[2] - p[0]).collect();
+        let mut gp = build(&x, &y0, GpHyper::default());
+        let c = 19;
+        let cand: Vec<f64> = (0..c * 3).map(|_| rng.f64()).collect();
+        let mut serial = ScoreWorkspace::default();
+        gp.score_multi_into(&cand, c, &[&y0, &y1], &mut serial);
+        gp.set_score_threads(4);
+        let mut par = ScoreWorkspace::default();
+        gp.score_multi_into(&cand, c, &[&y0, &y1], &mut par);
+        assert_eq!(par.n_obj, 2);
+        for k in 0..2 {
+            for j in 0..c {
+                assert_eq!(
+                    par.mean_obj[k * c + j].to_bits(),
+                    serial.mean_obj[k * c + j].to_bits(),
+                    "objective {k} candidate {j}"
+                );
+            }
+        }
+        for j in 0..c {
+            assert_eq!(par.std[j].to_bits(), serial.std[j].to_bits());
+            assert_eq!(par.mean[j].to_bits(), serial.mean[j].to_bits());
+        }
+    }
+
+    #[test]
+    fn predict_reuses_workspace_and_stays_deterministic() {
+        let mut rng = Rng::new(35);
+        let (x, y) = toy(&mut rng, 12, 2);
+        let mut gp = build(&x, &y, GpHyper::default());
+        let cand: Vec<Vec<f64>> = (0..9).map(|_| (0..2).map(|_| rng.f64()).collect()).collect();
+        let first = gp.predict(&cand);
+        let caps = gp.predict_ws.heap_capacities();
+        let flat_cap = gp.predict_flat.capacity();
+        for _ in 0..5 {
+            let again = gp.predict(&cand);
+            for j in 0..cand.len() {
+                assert_eq!(first.mean[j].to_bits(), again.mean[j].to_bits());
+                assert_eq!(first.std[j].to_bits(), again.std[j].to_bits());
+            }
+        }
+        assert_eq!(caps, gp.predict_ws.heap_capacities(), "predict must reuse its workspace");
+        assert_eq!(flat_cap, gp.predict_flat.capacity());
     }
 }

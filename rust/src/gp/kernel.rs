@@ -162,6 +162,23 @@ pub fn eval_sqdist(kind: KernelKind, d2: f64, h: &GpHyper) -> f64 {
     }
 }
 
+/// f32 twin of [`eval_sqdist`] for the fast scoring tier
+/// (`gp::ScoreTier::F32`): the same closed forms evaluated in f32
+/// arithmetic over downcast hyperparameters. Acquisition *ranking* only —
+/// the f64 path stays the pinned oracle.
+#[inline]
+pub fn eval_sqdist_f32(kind: KernelKind, d2: f32, h: &GpHyper) -> f32 {
+    let sv = h.signal_var as f32;
+    let ls = h.lengthscale as f32;
+    match kind {
+        KernelKind::Rbf => sv * (-0.5 * d2 / (ls * ls)).exp(),
+        KernelKind::Matern52 => {
+            let s = (5.0 * d2.max(0.0)).sqrt() / ls;
+            sv * (1.0 + s + s * s / 3.0) * (-s).exp()
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Lengthscale selection by log marginal likelihood.
 // ---------------------------------------------------------------------------
@@ -254,6 +271,19 @@ mod tests {
                 assert!(v < prev, "{} not decreasing at d={d}", kind.name());
                 assert!(v > 0.0);
                 prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn f32_eval_tracks_f64_closely() {
+        let h = GpHyper { lengthscale: 0.3, signal_var: 1.2, ..Default::default() };
+        for kind in KernelKind::all() {
+            for i in 0..30 {
+                let d2 = i as f64 * 0.07;
+                let a = eval_sqdist(kind, d2, &h);
+                let b = eval_sqdist_f32(kind, d2 as f32, &h) as f64;
+                assert!((a - b).abs() < 1e-5, "{} at d2={d2}: {a} vs {b}", kind.name());
             }
         }
     }

@@ -13,7 +13,9 @@
 //! - [`incremental`] — [`IncrementalGp`], the persistent model the BO
 //!   engine keeps across the run: O(n²) rank-1 Cholesky append per
 //!   `tell`, exact extend/retract for constant-liar fantasies per `ask`,
-//!   and a zero-allocation blocked scoring path over the candidate pool.
+//!   and a blocked, optionally multi-threaded scoring engine over the
+//!   candidate pool (cache-tiled kernels, a [`ScoreTier::F32`] fast
+//!   ranking tier, and buffers that never grow once warmed up).
 //! - [`shared`] — [`SharedSurrogate`], the concurrent handle that lets
 //!   many producers (an evaluator pool, several sessions, remote-daemon
 //!   reporting loops) condition **one** incremental factor: tells enqueue
@@ -48,7 +50,8 @@ pub mod native;
 pub mod replica;
 pub mod shared;
 
-pub use incremental::{IncrementalGp, ScoreWorkspace};
+pub use crate::util::linalg::BlockSpec;
+pub use incremental::{IncrementalGp, ScoreTier, ScoreWorkspace};
 pub use kernel::{
     eval_sqdist, select_lengthscale, GpHyper, Kernel, KernelKind, ARTIFACT_MAX_HISTORY,
     LENGTHSCALE_GRID, UNBOUNDED_HISTORY,

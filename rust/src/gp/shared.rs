@@ -106,7 +106,7 @@
 
 use std::sync::{Arc, Mutex, MutexGuard};
 
-use super::incremental::{IncrementalGp, ScoreWorkspace};
+use super::incremental::{IncrementalGp, ScoreTier, ScoreWorkspace};
 use super::kernel::GpHyper;
 use crate::util::linalg::packed_len;
 
@@ -939,6 +939,38 @@ impl SurrogateGuard<'_> {
         ws: &mut ScoreWorkspace,
     ) {
         self.st_mut().model.score_multi_into(cand, c, targets, ws);
+    }
+
+    /// Scoring worker-thread count of the shared model's engine.
+    pub fn score_threads(&self) -> usize {
+        self.st().model.score_threads()
+    }
+
+    /// Set the scoring worker-thread count (clamped to ≥ 1; bit-identical
+    /// results for every count — see
+    /// [`IncrementalGp::set_score_threads`]). Engine configuration, not
+    /// model state: it never travels in a [`SurrogateDelta`], so each
+    /// process sharing a served factor picks its own parallelism.
+    pub fn set_score_threads(&mut self, threads: usize) {
+        self.st_mut().model.set_score_threads(threads);
+    }
+
+    /// Scoring arithmetic tier of the shared model's engine.
+    pub fn score_tier(&self) -> ScoreTier {
+        self.st().model.score_tier()
+    }
+
+    /// Select the scoring tier (see [`ScoreTier`]). Like the thread
+    /// count, this is per-process engine configuration — the factor and
+    /// everything replicated stays f64 regardless.
+    pub fn set_score_tier(&mut self, tier: ScoreTier) {
+        self.st_mut().model.set_score_tier(tier);
+    }
+
+    /// Set the cache-blocking geometry of the scoring kernels (bitwise
+    /// output-invariant — see [`IncrementalGp::set_block_spec`]).
+    pub fn set_block_spec(&mut self, blocks: crate::util::linalg::BlockSpec) {
+        self.st_mut().model.set_block_spec(blocks);
     }
 }
 

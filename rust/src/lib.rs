@@ -48,9 +48,12 @@
 //!   observation in as an O(n²) rank-1 Cholesky append; batched `ask`s
 //!   condition on in-flight trials by extending the factor with
 //!   constant-liar fantasies and retracting them after scoring; the
-//!   candidate pool is scored through one blocked cross-kernel panel +
-//!   multi-RHS triangular solve with zero heap allocation
-//!   ([`gp::ScoreWorkspace`]).
+//!   candidate pool is scored by a blocked scoring engine — one
+//!   cache-tiled cross-kernel panel + multi-RHS triangular solve over
+//!   reused buffers ([`gp::ScoreWorkspace`]) that never grow once
+//!   warmed, optionally partitioned across threads (bit-identical to
+//!   serial for any count) with an opt-in f32 ranking tier
+//!   ([`gp::ScoreTier`]).
 //! - **Shared concurrent handle** ([`gp::SharedSurrogate`]) — `BayesOpt`
 //!   *borrows* the model through the [`gp::SurrogateHandle`] contract
 //!   instead of owning it, so an evaluator pool, remote daemons and whole

@@ -114,6 +114,7 @@ COMMANDS
                [--surrogate native|hlo] [--objective throughput|latency]
                [--objectives spec] [--scalarize weighted:<w,..>|smsego]
                [--surrogate-addr host:port] [--tune-lengthscale]
+               [--score-threads N] [--score-tier f64|f32]
                [--state-dir DIR] [--resume]
                [--out hist.jsonl] [--config run.json]
   serve        --model <m> [--addr 127.0.0.1:7070] [--seed 0]
@@ -136,6 +137,12 @@ PARALLELISM
   tune --parallel N measures N trials concurrently on N simulator
   evaluators (N=1 reproduces the serial loop exactly); remote-tune shards
   trials across every daemon address given in --addr.
+
+SCORING ENGINE (BO only)
+  --score-threads N partitions each candidate panel across N threads;
+  proposals are bit-identical to serial for any N. --score-tier f32
+  ranks candidates in single precision (faster panels, same argmax on
+  well-separated gains); the default f64 tier is the pinned oracle.
 
 CROSS-PROCESS SURROGATE
   Start `surrogate-serve` once, then give every BO tuner process
@@ -234,6 +241,11 @@ fn cmd_tune(args: &Args) -> Result<()> {
     }
     if args.get("tune-lengthscale").is_some() {
         cfg.tune_lengthscale = true;
+    }
+    cfg.score_threads = args.usize_or("score-threads", cfg.score_threads)?;
+    anyhow::ensure!(cfg.score_threads >= 1, "--score-threads must be at least 1");
+    if let Some(t) = args.opt("score-tier", "score tier", tftune::gp::ScoreTier::parse)? {
+        cfg.score_tier = t;
     }
     if let Some(spec) = args.get("objectives") {
         cfg.objectives =

@@ -17,6 +17,15 @@
 //!    ([`gemm_nt`], for panel builds that do not need the oracle's exact
 //!    operation order).
 //!
+//! The multi-RHS trsm and the gemm are *cache-blocked*
+//! ([`trsm_lower_packed_blocked`] / [`gemm_nt_blocked`]): a tunable
+//! [`BlockSpec`] `{mc, nc, kc}` tiles the row/column/depth loops so the
+//! active panel block stays cache-resident at n=512-scale scoring
+//! problems, while [`BlockSpec::naive`] degenerates the same code into
+//! the historical unblocked loops. An f32 twin of the trsm
+//! ([`trsm_lower_packed_blocked_f32`]) backs the optional fast scoring
+//! tier (`gp::ScoreTier::F32`).
+//!
 //! Lower-triangular factors are stored row-major *packed*: entry `(i, j)`
 //! with `j <= i` lives at [`packed_idx`]`(i, j)`; appending a row appends
 //! `i + 1` contiguous values, which is what makes the rank-1 append cheap.
@@ -190,6 +199,13 @@ pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 
+/// f32 squared euclidean distance — the f32 scoring tier's panel loop
+/// (`gp::ScoreTier::F32`); same ascending accumulation as [`sqdist`].
+pub fn sqdist_f32(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
 // ---------------------------------------------------------------------------
 // Packed-lower kernel set (zero-allocation tier).
 // ---------------------------------------------------------------------------
@@ -316,51 +332,196 @@ pub fn solve_lower_t_packed_inplace(l: &[f64], n: usize, x: &mut [f64]) {
     }
 }
 
-/// Multi-RHS forward substitution (trsm): overwrite the n×c row-major
-/// panel `b` with L⁻¹B, sweeping whole rows so the c right-hand sides are
-/// solved together cache-friendly (this is how 512 candidates are scored
-/// in one pass instead of 512 independent [`solve_lower`] calls). Per
-/// column, the operation order matches [`solve_lower`] exactly.
-pub fn trsm_lower_packed(l: &[f64], n: usize, b: &mut [f64], c: usize) {
-    assert_eq!(l.len(), packed_len(n), "packed length mismatch");
-    assert_eq!(b.len(), n * c, "panel shape mismatch");
-    for i in 0..n {
-        for t in 0..i {
-            let a = l[packed_idx(i, t)];
-            let (head, tail) = b.split_at_mut(i * c);
-            let bt = &head[t * c..(t + 1) * c];
-            let bi = &mut tail[..c];
-            for (x, y) in bi.iter_mut().zip(bt) {
-                *x -= a * y;
-            }
-        }
-        let inv = l[packed_idx(i, i)];
-        for x in &mut b[i * c..(i + 1) * c] {
-            *x /= inv;
-        }
+/// Cache-blocking geometry for the packed trsm / gemm kernels.
+///
+/// `mc` rows × `nc` columns of the panel form the active output block and
+/// `kc` bounds each ascending-index accumulation run, so the working set
+/// stays L1/L2-resident at n=512-scale scoring problems. The fields are
+/// deliberately plain `usize`s: `examples/self_tune_scoring.rs` searches
+/// this space with the repo's own BO engine against scoring-bench
+/// timings — the paper's tuning loop closed on ourselves.
+///
+/// Blocking never changes results: every output element receives exactly
+/// the same floating-point operations in the same (ascending) order for
+/// **any** `BlockSpec`, so a blocked kernel is bitwise equal to the
+/// [`BlockSpec::naive`] degenerate loops. Unit tests and
+/// `rust/tests/scoring_engine.rs` pin this at awkward
+/// (non-multiple-of-block) shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockSpec {
+    /// Row-block height: output rows solved/accumulated per block.
+    pub mc: usize,
+    /// Column-block width: right-hand sides (candidates) per block.
+    pub nc: usize,
+    /// Depth tile: factor columns folded in per sweep.
+    pub kc: usize,
+}
+
+impl Default for BlockSpec {
+    /// Starting point picked with `examples/self_tune_scoring.rs` on the
+    /// n=512 scoring problem: a 32×64 f64 output block is 16 KB
+    /// (L1-resident) and kc=128 keeps each streamed factor tile under the
+    /// panel block's footprint.
+    fn default() -> BlockSpec {
+        BlockSpec { mc: 32, nc: 64, kc: 128 }
     }
 }
 
-/// Gemm-style block multiply into a caller-provided buffer:
+impl BlockSpec {
+    /// Degenerate blocks spanning the whole problem: the blocked kernels
+    /// execute exactly the historical unblocked loops. This is the
+    /// reference the parity tests and the committed bench baseline
+    /// (`score_512_naive_n512` in BENCH_gp.json) run against.
+    pub fn naive() -> BlockSpec {
+        BlockSpec { mc: usize::MAX, nc: usize::MAX, kc: usize::MAX }
+    }
+}
+
+macro_rules! trsm_lower_packed_blocked_impl {
+    ($(#[$doc:meta])* $name:ident, $t:ty) => {
+        $(#[$doc])*
+        pub fn $name(l: &[$t], n: usize, b: &mut [$t], c: usize, spec: BlockSpec) {
+            assert_eq!(l.len(), packed_len(n), "packed length mismatch");
+            assert_eq!(b.len(), n * c, "panel shape mismatch");
+            let mc = spec.mc.max(1);
+            let nc = spec.nc.max(1);
+            let kc = spec.kc.max(1);
+            let mut j0 = 0;
+            while j0 < c {
+                let j1 = j0.saturating_add(nc).min(c);
+                let mut i0 = 0;
+                while i0 < n {
+                    let i1 = i0.saturating_add(mc).min(n);
+                    // Rectangular update: fold the already-solved rows
+                    // [0, i0) into block rows [i0, i1), kc factor columns
+                    // at a time. Every b[i][j] receives its
+                    // `-= l[i][t]·b[t][j]` terms one at a time in
+                    // ascending t — the unblocked per-column order — so
+                    // the result is bitwise independent of the tiling.
+                    let mut t0 = 0;
+                    while t0 < i0 {
+                        let t1 = t0.saturating_add(kc).min(i0);
+                        for i in i0..i1 {
+                            let (head, tail) = b.split_at_mut(i * c);
+                            let bi = &mut tail[j0..j1];
+                            for t in t0..t1 {
+                                let a = l[packed_idx(i, t)];
+                                let bt = &head[t * c + j0..t * c + j1];
+                                for (x, y) in bi.iter_mut().zip(bt) {
+                                    *x -= a * y;
+                                }
+                            }
+                        }
+                        t0 = t1;
+                    }
+                    // Triangular solve within the diagonal block.
+                    for i in i0..i1 {
+                        let (head, tail) = b.split_at_mut(i * c);
+                        let bi = &mut tail[j0..j1];
+                        for t in i0..i {
+                            let a = l[packed_idx(i, t)];
+                            let bt = &head[t * c + j0..t * c + j1];
+                            for (x, y) in bi.iter_mut().zip(bt) {
+                                *x -= a * y;
+                            }
+                        }
+                        let inv = l[packed_idx(i, i)];
+                        for x in bi.iter_mut() {
+                            *x /= inv;
+                        }
+                    }
+                    i0 = i1;
+                }
+                j0 = j1;
+            }
+        }
+    };
+}
+
+trsm_lower_packed_blocked_impl!(
+    /// Cache-blocked multi-RHS forward substitution (trsm): overwrite the
+    /// n×c row-major panel `b` with L⁻¹B, tiled per `spec` so the active
+    /// output block stays cache-resident (this is how 512 candidates are
+    /// scored in one pass instead of 512 independent [`solve_lower`]
+    /// calls). Per column, the operation order matches [`solve_lower`]
+    /// exactly for **any** `spec` — blocking reorders which (row, column)
+    /// pair is touched when, never the ascending-index op sequence a
+    /// single entry sees — so the output is bitwise spec-independent.
+    trsm_lower_packed_blocked,
+    f64
+);
+
+trsm_lower_packed_blocked_impl!(
+    /// f32 twin of [`trsm_lower_packed_blocked`], backing the optional
+    /// f32 scoring tier (`gp::ScoreTier::F32`). Same blocking, same
+    /// per-column ascending op order; only the arithmetic width differs.
+    trsm_lower_packed_blocked_f32,
+    f32
+);
+
+/// [`trsm_lower_packed_blocked`] at the default [`BlockSpec`] — the
+/// historical entry point every existing caller goes through.
+pub fn trsm_lower_packed(l: &[f64], n: usize, b: &mut [f64], c: usize) {
+    trsm_lower_packed_blocked(l, n, b, c, BlockSpec::default());
+}
+
+/// Cache-blocked gemm-style multiply into a caller-provided buffer:
 /// `out (m×n) = A · Bᵀ` with A m×k and B n×k, all row-major — i.e.
-/// `out[i][j] = aᵢ · bⱼ`. Tiled over B rows so the inner dot products
-/// stream from cache; no allocation.
-pub fn gemm_nt(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, out: &mut [f64]) {
+/// `out[i][j] = aᵢ · bⱼ`. Tiled per `spec` over rows, columns and depth;
+/// no allocation. Depth tiling resumes each dot product from its stored
+/// partial sum (loads/stores are exact), so every entry is the same
+/// ascending-k accumulation [`dot`] performs — bitwise spec-independent.
+pub fn gemm_nt_blocked(
+    a: &[f64],
+    m: usize,
+    b: &[f64],
+    n: usize,
+    k: usize,
+    out: &mut [f64],
+    spec: BlockSpec,
+) {
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), n * k, "B shape mismatch");
     assert_eq!(out.len(), m * n, "out shape mismatch");
-    const TILE: usize = 64;
-    for j0 in (0..n).step_by(TILE) {
-        let j1 = (j0 + TILE).min(n);
-        for i in 0..m {
-            let ar = &a[i * k..(i + 1) * k];
-            let or = &mut out[i * n..(i + 1) * n];
-            for (j, oj) in or[j0..j1].iter_mut().enumerate() {
-                let br = &b[(j0 + j) * k..(j0 + j + 1) * k];
-                *oj = dot(ar, br);
+    let mc = spec.mc.max(1);
+    let nc = spec.nc.max(1);
+    let kc = spec.kc.max(1);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = j0.saturating_add(nc).min(n);
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = i0.saturating_add(mc).min(m);
+            let mut k0 = 0;
+            loop {
+                let k1 = k0.saturating_add(kc).min(k);
+                for i in i0..i1 {
+                    let ar = &a[i * k + k0..i * k + k1];
+                    let or = &mut out[i * n + j0..i * n + j1];
+                    for (j, oj) in or.iter_mut().enumerate() {
+                        let br = &b[(j0 + j) * k + k0..(j0 + j) * k + k1];
+                        let mut acc = if k0 == 0 { 0.0 } else { *oj };
+                        for (x, y) in ar.iter().zip(br) {
+                            acc += x * y;
+                        }
+                        *oj = acc;
+                    }
+                }
+                k0 = k1;
+                if k0 >= k {
+                    break;
+                }
             }
+            i0 = i1;
         }
+        j0 = j1;
     }
+}
+
+/// [`gemm_nt_blocked`] at the default [`BlockSpec`] — the historical
+/// entry point; every `out[i][j]` is bitwise an ascending-k [`dot`].
+pub fn gemm_nt(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, out: &mut [f64]) {
+    gemm_nt_blocked(a, m, b, n, k, out, BlockSpec::default());
 }
 
 #[cfg(test)]
@@ -575,6 +736,79 @@ mod tests {
             for j in 0..n {
                 let want = dot(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
                 assert_eq!(out[i * n + j].to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_trsm_bitwise_spec_independent_awkward_shapes() {
+        // Awkward (non-multiple-of-block) shapes across several specs:
+        // blocked output must equal the naive degenerate loop bit for bit.
+        let mut rng = crate::util::Rng::new(17);
+        for (n, c) in [(1usize, 1usize), (7, 3), (23, 17), (67, 33)] {
+            let (_, mut packed) = random_spd(&mut rng, n);
+            assert!(chol_packed(&mut packed, n));
+            let panel: Vec<f64> = (0..n * c).map(|_| rng.normal()).collect();
+            let mut want = panel.clone();
+            trsm_lower_packed_blocked(&packed, n, &mut want, c, BlockSpec::naive());
+            for spec in [
+                BlockSpec { mc: 1, nc: 1, kc: 1 },
+                BlockSpec { mc: 5, nc: 7, kc: 3 },
+                BlockSpec { mc: 16, nc: 8, kc: 64 },
+                BlockSpec::default(),
+            ] {
+                let mut got = panel.clone();
+                trsm_lower_packed_blocked(&packed, n, &mut got, c, spec);
+                for (x, y) in got.iter().zip(&want) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "spec {spec:?} at n={n} c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_trsm_f32_bitwise_spec_independent() {
+        let mut rng = crate::util::Rng::new(18);
+        let (n, c) = (29usize, 13usize);
+        let (_, mut packed) = random_spd(&mut rng, n);
+        assert!(chol_packed(&mut packed, n));
+        let l32: Vec<f32> = packed.iter().map(|&v| v as f32).collect();
+        let panel: Vec<f32> = (0..n * c).map(|_| rng.normal() as f32).collect();
+        let mut want = panel.clone();
+        trsm_lower_packed_blocked_f32(&l32, n, &mut want, c, BlockSpec::naive());
+        for spec in [BlockSpec { mc: 4, nc: 5, kc: 6 }, BlockSpec::default()] {
+            let mut got = panel.clone();
+            trsm_lower_packed_blocked_f32(&l32, n, &mut got, c, spec);
+            for (x, y) in got.iter().zip(&want) {
+                assert_eq!(x.to_bits(), y.to_bits(), "f32 spec {spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_gemm_bitwise_matches_dot_awkward_shapes() {
+        let mut rng = crate::util::Rng::new(19);
+        for (m, n, k) in [(1usize, 1usize, 1usize), (13, 29, 17), (6, 70, 4), (3, 5, 0)] {
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+            for spec in [
+                BlockSpec { mc: 4, nc: 6, kc: 5 },
+                BlockSpec { mc: 1, nc: 1, kc: 1 },
+                BlockSpec::naive(),
+                BlockSpec::default(),
+            ] {
+                let mut out = vec![f64::NAN; m * n];
+                gemm_nt_blocked(&a, m, &b, n, k, &mut out, spec);
+                for i in 0..m {
+                    for j in 0..n {
+                        let want = dot(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+                        assert_eq!(
+                            out[i * n + j].to_bits(),
+                            want.to_bits(),
+                            "spec {spec:?} at ({m},{n},{k})"
+                        );
+                    }
+                }
             }
         }
     }

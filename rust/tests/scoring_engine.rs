@@ -1,0 +1,264 @@
+//! Scoring-engine pins (ISSUE 7): the properties the engine's speed
+//! rests on, end to end through the public API.
+//!
+//! - **Parallel = serial, bitwise.** The fixed contiguous candidate
+//!   partition is a pure function of (pool size, thread count) and each
+//!   worker's per-candidate operation order is the serial one, so every
+//!   thread count produces the same bits — pinned across threads
+//!   {1, 2, 4} × pools {1, 63, 512}.
+//! - **Blocking never changes results.** The cache-tiled trsm/gemm
+//!   kernels reorder *which* output element is touched *when*, never the
+//!   ascending-index operation sequence a single element receives —
+//!   pinned against the naive loops at awkward shapes.
+//! - **f32 is a ranking tier, not a model change.** On well-separated
+//!   gains the f32 tier's top-k agrees with the f64 oracle (property
+//!   test over seeds); it is opt-in, never the default.
+//! - **Multi-objective panels ride the same engine.** A K-objective
+//!   parallel panel pass matches K independent single-objective models
+//!   sharing the factor to ≤ 1e-9 (in practice bit-equal).
+//! - **Asks do not leak.** Once warmed past the conditioning window, a
+//!   `BayesOpt` ask/tell cycle never grows any engine scratch buffer.
+
+use tftune::algorithms::{BayesOpt, Tuner};
+use tftune::gp::{BlockSpec, GpHyper, IncrementalGp, ScoreTier, ScoreWorkspace};
+use tftune::history::Measurement;
+use tftune::util::linalg::{
+    chol_packed, gemm_nt, gemm_nt_blocked, packed_idx, packed_len, trsm_lower_packed,
+    trsm_lower_packed_blocked,
+};
+use tftune::util::Rng;
+
+/// A conditioned model over `n` random points in `[0,1)^d` plus a flat
+/// random pool of `c` candidates.
+fn problem(n: usize, d: usize, c: usize, seed: u64) -> (IncrementalGp, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut gp = IncrementalGp::new(GpHyper::default());
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        let y = x[0] - 0.7 * x[1 % d] + 0.1 * rng.f64();
+        assert!(gp.push(&x, y), "random factor must stay positive definite");
+    }
+    let cand: Vec<f64> = (0..c * d).map(|_| rng.f64()).collect();
+    (gp, cand)
+}
+
+#[test]
+fn parallel_panels_match_serial_bitwise() {
+    let d = 4;
+    for &c in &[1usize, 63, 512] {
+        let (mut gp, cand) = problem(48, d, c, 0x5EED ^ c as u64);
+        let mut ws_ref = ScoreWorkspace::default();
+        gp.set_score_threads(1);
+        gp.score_into(&cand, c, 1.5, 0.3, &mut ws_ref);
+
+        for &threads in &[1usize, 2, 4] {
+            gp.set_score_threads(threads);
+            let mut ws = ScoreWorkspace::default();
+            gp.score_into(&cand, c, 1.5, 0.3, &mut ws);
+            for j in 0..c {
+                assert_eq!(
+                    ws.mean[j].to_bits(),
+                    ws_ref.mean[j].to_bits(),
+                    "mean diverged at candidate {j} (pool {c}, {threads} threads)"
+                );
+                assert_eq!(
+                    ws.std[j].to_bits(),
+                    ws_ref.std[j].to_bits(),
+                    "std diverged at candidate {j} (pool {c}, {threads} threads)"
+                );
+                assert_eq!(
+                    ws.gain[j].to_bits(),
+                    ws_ref.gain[j].to_bits(),
+                    "gain diverged at candidate {j} (pool {c}, {threads} threads)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_trsm_matches_naive_at_awkward_shapes() {
+    let mut rng = Rng::new(0x7351);
+    for &(n, c) in &[(1usize, 1usize), (7, 5), (33, 17), (64, 64), (129, 3)] {
+        // A well-conditioned packed lower factor: random SPD via a
+        // diagonally dominant matrix.
+        let mut a: Vec<f64> = (0..packed_len(n)).map(|_| rng.f64()).collect();
+        for i in 0..n {
+            a[packed_idx(i, i)] += n as f64 + 1.0;
+        }
+        assert!(chol_packed(&mut a, n), "dominant matrix must factor");
+
+        let b0: Vec<f64> = (0..n * c).map(|_| rng.f64() - 0.5).collect();
+        let mut naive = b0.clone();
+        trsm_lower_packed_blocked(&a, n, &mut naive, c, BlockSpec::naive());
+
+        for spec in [
+            BlockSpec::default(),
+            BlockSpec { mc: 3, nc: 5, kc: 4 },
+            BlockSpec { mc: 1, nc: 1, kc: 1 },
+        ] {
+            let mut blocked = b0.clone();
+            trsm_lower_packed_blocked(&a, n, &mut blocked, c, spec);
+            for (i, (x, y)) in blocked.iter().zip(&naive).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "trsm {spec:?} diverged at element {i} (n={n}, c={c})"
+                );
+            }
+        }
+
+        // The default-spec wrapper is the blocked kernel, same bits.
+        let mut wrapped = b0.clone();
+        trsm_lower_packed(&a, n, &mut wrapped, c);
+        for (x, y) in wrapped.iter().zip(&naive) {
+            assert_eq!(x.to_bits(), y.to_bits(), "trsm wrapper diverged (n={n}, c={c})");
+        }
+    }
+}
+
+#[test]
+fn blocked_gemm_matches_naive_at_awkward_shapes() {
+    let mut rng = Rng::new(0x6E44);
+    for &(m, n, k) in &[(1usize, 1usize, 0usize), (5, 7, 9), (32, 64, 128), (33, 65, 129)] {
+        let a: Vec<f64> = (0..m * k).map(|_| rng.f64() - 0.5).collect();
+        let b: Vec<f64> = (0..n * k).map(|_| rng.f64() - 0.5).collect();
+        let mut naive = vec![f64::NAN; m * n];
+        gemm_nt(&a, m, &b, n, k, &mut naive);
+        for spec in [BlockSpec::default(), BlockSpec { mc: 2, nc: 3, kc: 5 }] {
+            let mut blocked = vec![f64::NAN; m * n];
+            gemm_nt_blocked(&a, m, &b, n, k, &mut blocked, spec);
+            for (i, (x, y)) in blocked.iter().zip(&naive).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "gemm {spec:?} diverged at element {i} (m={m}, n={n}, k={k})"
+                );
+            }
+        }
+    }
+}
+
+/// Property test over seeds: wherever the f64 oracle separates two gains
+/// by more than the f32 tier's error budget, the f32 tier orders them the
+/// same way — and therefore agrees on the top-k for well-separated k-th
+/// gaps. Near-ties (within the budget) are legitimately tier-dependent
+/// and excluded; the count assertion keeps the test non-vacuous.
+#[test]
+fn f32_tier_top_k_agrees_with_f64_on_separated_gains() {
+    const SEP: f64 = 1e-3;
+    const K: usize = 5;
+    let (n, d, c) = (32, 3, 64);
+    let mut separated_pools = 0;
+    for seed in 0..20u64 {
+        let (mut gp, cand) = problem(n, d, c, 0xF32 + seed);
+        assert_eq!(gp.score_tier(), ScoreTier::F64, "f64 must be the default tier");
+
+        let mut ws64 = ScoreWorkspace::default();
+        gp.score_into(&cand, c, 1.5, 0.0, &mut ws64);
+        let g64 = ws64.gain.clone();
+
+        gp.set_score_tier(ScoreTier::F32);
+        let mut ws32 = ScoreWorkspace::default();
+        gp.score_into(&cand, c, 1.5, 0.0, &mut ws32);
+        let g32 = ws32.gain.clone();
+
+        // Pairwise: separated f64 gains keep their order in f32.
+        for i in 0..c {
+            for j in 0..c {
+                if g64[i] - g64[j] > SEP {
+                    assert!(
+                        g32[i] > g32[j],
+                        "seed {seed}: f32 inverted a {:.2e}-separated pair \
+                         ({i}: {} vs {j}: {})",
+                        g64[i] - g64[j],
+                        g32[i],
+                        g32[j]
+                    );
+                }
+            }
+        }
+
+        // Top-k: when the k-th/(k+1)-th gap is wide, the sets match.
+        let mut order: Vec<usize> = (0..c).collect();
+        order.sort_by(|&i, &j| g64[j].partial_cmp(&g64[i]).unwrap());
+        if g64[order[K - 1]] - g64[order[K]] > SEP {
+            separated_pools += 1;
+            let mut order32: Vec<usize> = (0..c).collect();
+            order32.sort_by(|&i, &j| g32[j].partial_cmp(&g32[i]).unwrap());
+            let mut top64: Vec<usize> = order[..K].to_vec();
+            let mut top32: Vec<usize> = order32[..K].to_vec();
+            top64.sort_unstable();
+            top32.sort_unstable();
+            assert_eq!(top64, top32, "seed {seed}: f32 top-{K} diverged from f64");
+        }
+    }
+    assert!(
+        separated_pools >= 5,
+        "only {separated_pools} of 20 pools were separated — property test is vacuous"
+    );
+}
+
+#[test]
+fn multi_objective_parallel_panel_matches_independent_models() {
+    let (n, d, c, k_obj) = (40, 4, 129, 3);
+    let mut rng = Rng::new(0x3B0);
+    let x: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+    let targets: Vec<Vec<f64>> = (0..k_obj)
+        .map(|k| x.iter().map(|p| p[k % d] - 0.4 * p[(k + 1) % d]).collect())
+        .collect();
+    let cand: Vec<f64> = (0..c * d).map(|_| rng.f64()).collect();
+
+    // One engine, K objectives, 4-thread panel.
+    let mut multi = IncrementalGp::new(GpHyper::default());
+    for (xi, &y0) in x.iter().zip(&targets[0]) {
+        assert!(multi.push(xi, y0));
+    }
+    multi.set_score_threads(4);
+    let refs: Vec<&[f64]> = targets.iter().map(Vec::as_slice).collect();
+    let mut ws = ScoreWorkspace::default();
+    multi.score_multi_into(&cand, c, &refs, &mut ws);
+    assert_eq!(ws.n_obj, k_obj);
+
+    // K independent serial single-objective models over the same inputs.
+    for (k, yk) in targets.iter().enumerate() {
+        let mut solo = IncrementalGp::new(GpHyper::default());
+        for (xi, &yv) in x.iter().zip(yk) {
+            assert!(solo.push(xi, yv));
+        }
+        let mut ws_solo = ScoreWorkspace::default();
+        solo.score_into(&cand, c, 0.0, 0.0, &mut ws_solo);
+        for j in 0..c {
+            let dm = (ws.mean_obj[k * c + j] - ws_solo.mean[j]).abs();
+            let ds = (ws.std[j] - ws_solo.std[j]).abs();
+            assert!(dm <= 1e-9, "objective {k} mean off by {dm:.2e} at candidate {j}");
+            assert!(ds <= 1e-9, "shared std off by {ds:.2e} at candidate {j}");
+        }
+    }
+}
+
+#[test]
+fn warmed_bo_asks_do_not_grow_engine_scratch() {
+    let space = tftune::space::threading_space(64, 1024, 64);
+    let mut bo = BayesOpt::new(space, 11).with_score_threads(2);
+    let mut rng = Rng::new(5);
+    // Warm past the conditioning window (GpHyper::default().max_history)
+    // so the candidate pool, target buffers and the scoring workspace
+    // have all reached steady-state shape.
+    let window = GpHyper::default().max_history;
+    for _ in 0..window + 6 {
+        let t = bo.ask(1).pop().unwrap();
+        bo.tell(t.id, &Measurement::new(rng.f64()));
+    }
+    let caps = bo.scratch_capacities();
+    for round in 0..6 {
+        for t in bo.ask(2) {
+            bo.tell(t.id, &Measurement::new(rng.f64()));
+        }
+        assert_eq!(
+            bo.scratch_capacities(),
+            caps,
+            "ask/tell round {round} grew an engine scratch buffer"
+        );
+    }
+}

@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Bench-baseline regression guard (CI).
+
+Compares the committed BENCH_gp.json against the previous commit's copy
+(``git show HEAD^:BENCH_gp.json``) and fails if any shared bench entry's
+``mean_ns`` regressed by more than THRESHOLD. New entries (no previous
+measurement) and removed entries pass. Files marked ``"estimated": true``
+— a baseline written without hardware to measure on — are skipped on
+either side: estimates are placeholders, not numbers to gate against.
+
+Exit codes: 0 ok / skipped, 1 regression, 2 malformed input.
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+BENCH_FILE = "BENCH_gp.json"
+THRESHOLD = 0.20  # fail when mean_ns grows by more than 20%
+
+
+def load_current() -> dict | None:
+    path = Path(BENCH_FILE)
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def load_previous() -> dict | None:
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD^:{BENCH_FILE}"],
+            capture_output=True,
+            text=True,
+            check=True,
+        ).stdout
+    except subprocess.CalledProcessError:
+        # No parent commit, or the file did not exist there.
+        return None
+    return json.loads(out)
+
+
+def main() -> int:
+    cur = load_current()
+    if cur is None:
+        print(f"{BENCH_FILE} not committed; nothing to guard")
+        return 0
+    prev = load_previous()
+    if prev is None:
+        print(f"no previous {BENCH_FILE} (first baseline); nothing to compare")
+        return 0
+
+    for side, doc in (("current", cur), ("previous", prev)):
+        if doc.get("estimated", False):
+            print(f"{side} {BENCH_FILE} is marked estimated; skipping the guard")
+            return 0
+        if not isinstance(doc.get("benches"), dict):
+            print(f"{side} {BENCH_FILE} has no 'benches' object", file=sys.stderr)
+            return 2
+
+    failures = []
+    for name, prev_entry in sorted(prev["benches"].items()):
+        cur_entry = cur["benches"].get(name)
+        if cur_entry is None:
+            print(f"  {name}: removed (ok)")
+            continue
+        try:
+            prev_ns = float(prev_entry["mean_ns"])
+            cur_ns = float(cur_entry["mean_ns"])
+        except (KeyError, TypeError, ValueError):
+            print(f"{name}: malformed mean_ns", file=sys.stderr)
+            return 2
+        if prev_ns <= 0:
+            print(f"  {name}: previous mean_ns <= 0, skipped")
+            continue
+        ratio = cur_ns / prev_ns
+        marker = "REGRESSED" if ratio > 1.0 + THRESHOLD else "ok"
+        print(f"  {name}: {prev_ns:.0f} ns -> {cur_ns:.0f} ns ({ratio:.2f}x) {marker}")
+        if ratio > 1.0 + THRESHOLD:
+            failures.append((name, ratio))
+
+    if failures:
+        print(
+            f"\n{len(failures)} bench entr{'y' if len(failures) == 1 else 'ies'} "
+            f"regressed more than {THRESHOLD:.0%} vs the previous commit:",
+            file=sys.stderr,
+        )
+        for name, ratio in failures:
+            print(f"  {name}: {ratio:.2f}x", file=sys.stderr)
+        return 1
+    print("bench baseline within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
