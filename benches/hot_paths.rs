@@ -209,11 +209,12 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("\n== surrogate service: delta export + remote tell round trip ==");
-    let (r_sync_delta, r_remote_tell, r_multiobj_tell) = {
+    let (r_sync_delta, r_chunked, r_quantised, r_remote_tell, r_multiobj_tell) = {
         use tftune::server::proto::{
             encode_surrogate_response, SurrogateResponse,
         };
         use tftune::server::TargetServer;
+        use tftune::util::linalg::packed_len;
 
         // surrogate_sync_delta: the service-side cost of a Δn=4 catch-up
         // at n=64 — drain check, suffix slice, wire encode. This is what
@@ -228,7 +229,51 @@ fn main() -> anyhow::Result<()> {
         drop(authority.lock()); // drain + eager factor to n=64
         let r_sync = b.bench("gp/surrogate_sync_delta dn=4 n=64", || {
             let d = authority.export_delta(60).unwrap();
-            encode_surrogate_response(&SurrogateResponse::FactorDelta(d)).len()
+            encode_surrogate_response(&SurrogateResponse::FactorDelta {
+                delta: d,
+                pending: 0,
+                quantised: false,
+            })
+            .len()
+        });
+
+        // The protocol-v4 catch-up encodings over a 512-row authority
+        // (ISSUE 8): one bounded 64-row chunk out of a cold 512-row
+        // catch-up (the server-side export + truncate + encode a
+        // `max_rows` sync pays per response), and the full quantised
+        // transfer (f32 mantissa + exact XOR residual per factor value).
+        let big = SharedSurrogate::new(hyper);
+        let mut big_rng = Rng::new(0xB16F);
+        for _ in 0..512 {
+            let x: Vec<f64> = (0..5).map(|_| big_rng.f64()).collect();
+            big.tell(x, big_rng.f64());
+        }
+        drop(big.lock()); // drain + eager factor to n=512
+        let r_chunked = b.bench("gp/sync_factor_chunked_512 k=64", || {
+            let mut d = big.export_delta(0).unwrap();
+            let k = 64usize;
+            let pending = d.rows.len() - k;
+            d.rows.truncate(k);
+            d.extras.truncate(k);
+            d.total_n = k;
+            if let Some(f) = &mut d.factor {
+                f.truncate(packed_len(k));
+            }
+            encode_surrogate_response(&SurrogateResponse::FactorDelta {
+                delta: d,
+                pending,
+                quantised: false,
+            })
+            .len()
+        });
+        let r_quantised = b.bench("gp/sync_factor_quantised_512", || {
+            let d = big.export_delta(0).unwrap();
+            encode_surrogate_response(&SurrogateResponse::FactorDelta {
+                delta: d,
+                pending: 0,
+                quantised: true,
+            })
+            .len()
         });
 
         // remote_tell_roundtrip: one tell-obs line plus the sync that
@@ -268,7 +313,7 @@ fn main() -> anyhow::Result<()> {
             )?;
         }
         let _ = handle.join();
-        (r_sync, r_tell_rt, r_tell_mo)
+        (r_sync, r_chunked, r_quantised, r_tell_rt, r_tell_mo)
     };
 
     println!("\n== persistence plane: snapshot write + WAL replay, n=512 ==");
@@ -329,6 +374,8 @@ fn main() -> anyhow::Result<()> {
             &r_shared_tell,
             &r_shared_ask,
             &r_sync_delta,
+            &r_chunked,
+            &r_quantised,
             &r_remote_tell,
             &r_multiobj_tell,
             &r_snapshot_write,
@@ -492,7 +539,9 @@ fn bench_scoring_engine(b: &mut Bencher, rng: &mut Rng) -> [BenchResult; 5] {
 /// adds the scoring-engine panel at n=512 — `score_512_candidates_n512`
 /// serial baseline, `score_512_naive_n512` unblocked kernels,
 /// `score_512_parallel_t4` 4-thread partition, `score_512_f32` fast tier,
-/// `score_multiobj_k2_n512` K=2 panel). Keys are the bench short names.
+/// `score_multiobj_k2_n512` K=2 panel; ISSUE 8 adds the protocol-v4
+/// catch-up pair — `sync_factor_chunked_512` / `sync_factor_quantised_512`).
+/// Keys are the bench short names.
 /// `"estimated": false` marks the numbers as measured on real hardware —
 /// CI's regression guard skips files whose baseline was only estimated.
 fn write_gp_bench_json(

@@ -290,8 +290,13 @@ impl TuneConfig {
             cfg: &TuneConfig,
         ) -> Result<Box<dyn crate::algorithms::Tuner + Send>> {
             if let Some(addr) = &cfg.surrogate_addr {
-                let replica = crate::gp::RemoteSurrogate::connect(addr)
-                    .with_context(|| format!("attaching surrogate service {addr}"))?;
+                // Fingerprinted attach: a v4 fleet daemon binds (or lazily
+                // creates) the space matching this run's model, so tuners
+                // of different models against one daemon never contend;
+                // pre-v4 daemons fall back to their single default space.
+                let replica =
+                    crate::gp::RemoteSurrogate::connect_space(addr, &cfg.model.space())
+                        .with_context(|| format!("attaching surrogate service {addr}"))?;
                 bo = bo.with_shared_surrogate(replica);
             }
             if cfg.tune_lengthscale {

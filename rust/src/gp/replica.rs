@@ -66,6 +66,7 @@ use anyhow::{bail, Context, Result};
 
 use super::kernel::GpHyper;
 use super::shared::{SharedSurrogate, SurrogateGuard, SurrogateHandle};
+use crate::space::SearchSpace;
 use crate::server::proto::{
     decode_surrogate_response, encode_surrogate_request, SurrogateRequest, SurrogateResponse,
     PROTOCOL_VERSION,
@@ -106,8 +107,12 @@ impl Conn {
 
 /// Dial the service once: connect, handshake, negotiate the protocol
 /// version (min of ours and the service's; v2 is the oldest surrogate
-/// plane we speak).
-fn dial(addr: &str) -> Result<(Conn, u32)> {
+/// plane we speak). `space` — the fingerprint + dimension pair of the
+/// search space this replica conditions — targets that space on a v4
+/// fleet daemon; a typed `hello-err` (wrong space, fleet full) is a hard
+/// error, not a retry. An older daemon ignores the fingerprint and binds
+/// its default space, exactly the pre-v4 contract.
+fn dial(addr: &str, space: Option<(u64, usize)>) -> Result<(Conn, u32)> {
     let stream = TcpStream::connect(addr)
         .with_context(|| format!("connecting surrogate service {addr}"))?;
     // Line-oriented request/response: dodge Nagle/delayed-ACK stalls
@@ -115,7 +120,12 @@ fn dial(addr: &str) -> Result<(Conn, u32)> {
     stream.set_nodelay(true)?;
     let writer = stream.try_clone()?;
     let mut conn = Conn { writer, reader: BufReader::new(stream) };
-    let version = match conn.request(&SurrogateRequest::Hello { version: PROTOCOL_VERSION })? {
+    let hello = SurrogateRequest::Hello {
+        version: PROTOCOL_VERSION,
+        fingerprint: space.map(|(fp, _)| fp),
+        dim: space.map(|(_, d)| d),
+    };
+    let version = match conn.request(&hello)? {
         SurrogateResponse::HelloOk { version } => {
             anyhow::ensure!(
                 (2..=PROTOCOL_VERSION).contains(&version),
@@ -124,9 +134,18 @@ fn dial(addr: &str) -> Result<(Conn, u32)> {
             );
             version
         }
+        SurrogateResponse::HelloErr { reason } => {
+            bail!("surrogate service refused this search space: {reason}")
+        }
         SurrogateResponse::Error { message } => bail!("handshake refused: {message}"),
         other => bail!("unexpected handshake response: {other:?}"),
     };
+    if space.is_some() && version < 4 {
+        eprintln!(
+            "tftune: surrogate service {addr} speaks protocol v{version} — no search-space \
+             fingerprinting, so this replica conditions the daemon's default space"
+        );
+    }
     Ok((conn, version))
 }
 
@@ -167,10 +186,19 @@ struct LeaseState {
 /// the request paths share.
 struct Link {
     addr: String,
+    /// Fingerprint + dimension of the fleet space this replica targets
+    /// (None = the daemon's default space, the pre-v4 contract). Stored
+    /// so a redial re-handshakes into the *same* space.
+    space: Option<(u64, usize)>,
     state: Mutex<ConnState>,
     lease: Mutex<LeaseState>,
     attempts: AtomicUsize,
     base_ms: AtomicU64,
+    /// Catch-up chunk size in rows (0 = whole delta in one response).
+    chunk: AtomicUsize,
+    /// Whether catch-up factors ride the quantised-with-exact-residual
+    /// encoding (bit-identical either way; this only shrinks the wire).
+    quant: AtomicBool,
 }
 
 impl Link {
@@ -181,12 +209,24 @@ impl Link {
         )
     }
 
+    /// The `sync-factor` knobs to use right now, gated on the negotiated
+    /// version: a pre-v4 daemon would silently ignore `max_rows` (so the
+    /// chunk loop's `pending` would never arrive) — ask it for the full
+    /// delta instead.
+    fn catchup_knobs(&self) -> (Option<usize>, bool) {
+        if self.state.lock().unwrap().version < 4 {
+            return (None, false);
+        }
+        let chunk = self.chunk.load(Ordering::SeqCst);
+        (if chunk == 0 { None } else { Some(chunk) }, self.quant.load(Ordering::SeqCst))
+    }
+
     /// Re-dial and re-handshake, then re-publish the current lease: the
     /// old lease expired with the old connection (and a restarted daemon
     /// boots with an empty lease table regardless), so siblings would
     /// otherwise stop conditioning on our in-flight trials.
     fn redial(&self, st: &mut ConnState) -> Result<()> {
-        let (conn, version) = dial(&self.addr)?;
+        let (conn, version) = dial(&self.addr, self.space)?;
         st.wire = Some(conn);
         st.version = version;
         let mut ls = self.lease.lock().unwrap();
@@ -354,17 +394,38 @@ impl RemoteSurrogate {
     /// reconnect budget ([`RemoteSurrogate::with_reconnect`]) covers
     /// failures after a session is established.
     pub fn connect(addr: &str) -> Result<RemoteSurrogate> {
-        let (conn, version) = dial(addr)?;
+        RemoteSurrogate::connect_with(addr, None)
+    }
+
+    /// [`RemoteSurrogate::connect`] targeting one space of a protocol-v4
+    /// *fleet* daemon: the hello carries `space`'s fingerprint
+    /// ([`SearchSpace::fingerprint`]) and dimension, and the daemon binds
+    /// this connection to the matching factor (creating it on first
+    /// hello). A typed `hello-err` — dimension mismatch, fleet at
+    /// `--max-spaces` — surfaces as an `Err` here instead of silently
+    /// conditioning the wrong model. Pre-v4 daemons ignore the
+    /// fingerprint and serve their single space, with a warning.
+    pub fn connect_space(addr: &str, space: &SearchSpace) -> Result<RemoteSurrogate> {
+        RemoteSurrogate::connect_with(addr, Some((space.fingerprint(), space.dim())))
+    }
+
+    fn connect_with(addr: &str, space: Option<(u64, usize)>) -> Result<RemoteSurrogate> {
+        let (conn, version) = dial(addr, space)?;
         let link = Arc::new(Link {
             addr: addr.to_string(),
+            space,
             state: Mutex::new(ConnState { wire: Some(conn), version }),
             lease: Mutex::new(LeaseState::default()),
             attempts: AtomicUsize::new(DEFAULT_RECONNECT_ATTEMPTS),
             base_ms: AtomicU64::new(DEFAULT_RECONNECT_BASE.as_millis() as u64),
+            chunk: AtomicUsize::new(0),
+            quant: AtomicBool::new(false),
         });
 
-        let delta = match link.roundtrip(&SurrogateRequest::SyncFactor { from_n: 0 })? {
-            SurrogateResponse::FactorDelta(d) => d,
+        let initial =
+            SurrogateRequest::SyncFactor { from_n: 0, max_rows: None, quantise: false };
+        let (delta, pending) = match link.roundtrip(&initial)? {
+            SurrogateResponse::FactorDelta { delta, pending, .. } => (delta, pending),
             SurrogateResponse::Error { message } => bail!("initial sync refused: {message}"),
             other => bail!("unexpected sync response: {other:?}"),
         };
@@ -437,14 +498,35 @@ impl RemoteSurrogate {
             }
         });
 
-        Ok(RemoteSurrogate {
+        let replica = RemoteSurrogate {
             inner: Arc::new(Remote {
                 link,
                 mirror,
                 pending_tells: AtomicUsize::new(0),
                 warned_v2_extras: AtomicBool::new(false),
             }),
-        })
+        };
+        // The initial sync asked for the whole delta, so a conforming
+        // daemon reports nothing pending; drain defensively anyway.
+        if pending > 0 {
+            replica.sync().context("completing the initial factor sync")?;
+        }
+        Ok(replica)
+    }
+
+    /// Configure how catch-up deltas cross the wire (protocol v4 only;
+    /// pre-v4 daemons always send the full delta in one response).
+    /// `chunk_rows = Some(k)` bounds each `factor-delta` response to `k`
+    /// rows — the replica loops, resumably, until the service reports
+    /// nothing pending. `quantise` switches the packed factor suffix to
+    /// the quantised-with-exact-residual encoding: an f32 mantissa plus
+    /// the XOR residual to the exact f64 bits, smaller on the wire and
+    /// still bit-identical after import. Both default off. Applies to
+    /// every clone sharing this connection.
+    pub fn with_catchup(self, chunk_rows: Option<usize>, quantise: bool) -> RemoteSurrogate {
+        self.inner.link.chunk.store(chunk_rows.unwrap_or(0), Ordering::SeqCst);
+        self.inner.link.quant.store(quantise, Ordering::SeqCst);
+        self
     }
 
     /// Override the transparent-reconnect budget: up to `attempts`
@@ -458,26 +540,54 @@ impl RemoteSurrogate {
         self
     }
 
-    /// One catch-up round trip: ask the service for everything past the
-    /// mirror's current length and import it (factor suffix verbatim when
-    /// present). Serialised behind the connection mutex; rides the
+    /// Drop the live wire now, as if the daemon had just died: the
+    /// client socket closes and the next round trip goes through the
+    /// redial path under the configured reconnect budget. Chaos drills
+    /// (`tests/fleet_service.rs`) sever every replica of a daemon being
+    /// killed so its connection handlers unblock on EOF and the listener
+    /// port frees deterministically; production code never needs this.
+    pub fn sever(&self) {
+        self.inner.link.state.lock().unwrap().wire = None;
+    }
+
+    /// Catch up with the service: ask for everything past the mirror's
+    /// current length and import it (factor suffix verbatim when
+    /// present). With a chunked budget ([`RemoteSurrogate::with_catchup`])
+    /// this loops — each round trip imports one bounded chunk, advancing
+    /// the mirror, until the service reports nothing pending; a
+    /// mid-catch-up reconnect simply resumes from wherever the mirror
+    /// got to. Serialised behind the connection mutex; rides the
     /// reconnect budget, so a daemon restored from `--state-dir` between
     /// two asks is caught up transparently.
     fn sync(&self) -> Result<()> {
-        let from_n = self.inner.mirror.len();
-        match self.inner.link.roundtrip(&SurrogateRequest::SyncFactor { from_n })? {
-            SurrogateResponse::FactorDelta(d) => {
-                anyhow::ensure!(
-                    self.inner.mirror.import_delta(&d),
-                    "surrogate delta rejected (replica at {from_n}, delta from {})",
-                    d.from_n
-                );
-                self.inner.pending_tells.store(0, Ordering::SeqCst);
-                Ok(())
+        loop {
+            let from_n = self.inner.mirror.len();
+            let (max_rows, quantise) = self.inner.link.catchup_knobs();
+            let req = SurrogateRequest::SyncFactor { from_n, max_rows, quantise };
+            match self.inner.link.roundtrip(&req)? {
+                SurrogateResponse::FactorDelta { delta: d, pending, .. } => {
+                    anyhow::ensure!(
+                        self.inner.mirror.import_delta(&d),
+                        "surrogate delta rejected (replica at {from_n}, delta from {})",
+                        d.from_n
+                    );
+                    if pending == 0 {
+                        break;
+                    }
+                    anyhow::ensure!(
+                        self.inner.mirror.len() > from_n,
+                        "surrogate chunked sync stalled at row {from_n} with {pending} \
+                         row(s) still pending"
+                    );
+                }
+                SurrogateResponse::Error { message } => {
+                    bail!("surrogate service error: {message}")
+                }
+                other => bail!("unexpected sync response: {other:?}"),
             }
-            SurrogateResponse::Error { message } => bail!("surrogate service error: {message}"),
-            other => bail!("unexpected sync response: {other:?}"),
         }
+        self.inner.pending_tells.store(0, Ordering::SeqCst);
+        Ok(())
     }
 }
 
@@ -576,7 +686,7 @@ mod tests {
     /// the daemon can be shut down and joined deterministically) and the
     /// replica's next request goes through the redial path.
     fn sever(replica: &RemoteSurrogate) {
-        replica.inner.link.state.lock().unwrap().wire = None;
+        replica.sever();
     }
 
     #[test]
@@ -671,7 +781,11 @@ mod tests {
         let err = replica
             .inner
             .link
-            .roundtrip(&SurrogateRequest::SyncFactor { from_n: 0 })
+            .roundtrip(&SurrogateRequest::SyncFactor {
+                from_n: 0,
+                max_rows: None,
+                quantise: false,
+            })
             .unwrap_err();
         assert!(err.to_string().contains("unreachable after 0"), "{err}");
     }

@@ -398,6 +398,14 @@ impl SharedSurrogate {
         self.len() == 0
     }
 
+    /// Dimension of the rows the canonical store holds — `None` until the
+    /// first observation drains. One shared surrogate serves exactly one
+    /// search space; the fleet daemon uses this to refuse a conflicting
+    /// `hello` instead of silently dropping its rows later.
+    pub fn dim(&self) -> Option<usize> {
+        self.inner.state.lock().unwrap().dim()
+    }
+
     /// Drained + pending observations — the count the model will condition
     /// on once the queue is next drained.
     pub fn total_observations(&self) -> usize {

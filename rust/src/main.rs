@@ -120,8 +120,10 @@ COMMANDS
   serve        --model <m> [--addr 127.0.0.1:7070] [--seed 0]
   surrogate-serve  [--addr 127.0.0.1:7071] [--objectives spec]
                [--state-dir DIR] [--fsync-every 1] [--snapshot-every 30]
-               host the authoritative shared GP factor: tuner processes
-               started with --surrogate-addr condition one model
+               [--max-spaces 16] [--space-idle-secs S]
+               host the authoritative shared GP factors: tuner processes
+               started with --surrogate-addr condition the model whose
+               search-space fingerprint their hello declares
   remote-tune  --addr <host:port[,host:port...]> --model <m> --alg <a>
                [--iters 50] [--seed 0] [--parallel N] [--max-seconds S]
                [--surrogate-addr host:port] [--objectives spec]
@@ -149,6 +151,16 @@ CROSS-PROCESS SURROGATE
   --surrogate-addr <its address>: all their measurements condition one
   served GP factor, and each process's in-flight trials are leased to the
   others as constant-liar fantasies (expiring if a process dies).
+
+FLEET SERVICE
+  One daemon serves many search spaces at once: each tuner's hello
+  carries its space's fingerprint (printed by `tune`), and the daemon
+  keys an independent factor per fingerprint, creating spaces lazily up
+  to --max-spaces and answering a mismatched hello with a typed
+  hello-err. --space-idle-secs S evicts spaces idle for S seconds
+  (snapshotting them first when --state-dir is set; a later hello
+  restores the space bit-identically from its space-<fingerprint>/
+  namespace).
 
 DURABILITY
   surrogate-serve --state-dir DIR journals every tell/set-hyper to a
@@ -287,6 +299,16 @@ fn cmd_tune(args: &Args) -> Result<()> {
         cfg.surrogate.name(),
         cfg.objective.name()
     );
+    {
+        // The fleet identity this run presents to a surrogate service: a
+        // v4 daemon keys its served factor by this fingerprint.
+        let space = cfg.model.space();
+        println!(
+            "search space {:016x} ({} parameter(s))",
+            space.fingerprint(),
+            space.dim()
+        );
+    }
     let history = cfg.run()?;
     let best = history.best().context("empty history")?;
     println!(
@@ -332,6 +354,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_surrogate_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7071");
     let state_dir = args.get("state-dir").map(PathBuf::from);
+    let fsync_every = args.usize_or("fsync-every", 1)?;
+    let max_spaces = args.usize_or("max-spaces", 16)?;
+    let idle_secs = args.f64_opt("space-idle-secs")?;
+    if let Some(s) = idle_secs {
+        anyhow::ensure!(s > 0.0, "--space-idle-secs must be positive seconds");
+    }
 
     // With --state-dir the served factor is durable: recover whatever a
     // previous daemon left behind (bit-identical snapshot + WAL replay),
@@ -339,7 +367,6 @@ fn cmd_surrogate_serve(args: &Args) -> Result<()> {
     // the background, off the model lock.
     let (server, factor, persistence) = match &state_dir {
         Some(dir) => {
-            let fsync_every = args.usize_or("fsync-every", 1)?;
             let recovered = tftune::persist::recover(dir, tftune::gp::GpHyper::default())?;
             if !recovered.surrogate.is_empty() {
                 println!(
@@ -368,10 +395,29 @@ fn cmd_surrogate_serve(args: &Args) -> Result<()> {
             (server, factor, None)
         }
     };
+    // Fleet plane: every space beyond the default is keyed by the
+    // fingerprint its tuners declare, created lazily up to --max-spaces,
+    // and (with --state-dir) journaled under its own space-<fp>/
+    // namespace — the boot recovery above only covers the default space;
+    // with_fleet_options re-opens the namespaced ones.
+    let server = server.with_fleet_options(tftune::server::FleetOptions {
+        max_spaces,
+        idle_ttl: idle_secs.map(std::time::Duration::from_secs_f64),
+        state_dir: state_dir.clone(),
+        fsync_every,
+        default_hyper: tftune::gp::GpHyper::default(),
+    })?;
     println!(
         "surrogate service hosting the shared GP factor on {} (protocol v{})",
         server.local_addr()?,
         tftune::server::proto::PROTOCOL_VERSION
+    );
+    println!(
+        "fleet: up to {max_spaces} search space(s){}",
+        match idle_secs {
+            Some(s) => format!(", idle spaces evicted after {s}s"),
+            None => String::new(),
+        }
     );
     if let Some(p) = &persistence {
         let every = args.f64_opt("snapshot-every")?.unwrap_or(30.0);
@@ -482,9 +528,12 @@ fn cmd_remote_tune(args: &Args) -> Result<()> {
             );
             let mut bo = tftune::algorithms::BayesOpt::new(space.clone(), seed);
             if let Some(addr) = surrogate_addr {
-                let replica = tftune::gp::RemoteSurrogate::connect(addr)
+                let replica = tftune::gp::RemoteSurrogate::connect_space(addr, &space)
                     .with_context(|| format!("attaching surrogate service {addr}"))?;
-                println!("conditioning the shared factor served at {addr}");
+                println!(
+                    "conditioning space {:016x} of the surrogate service at {addr}",
+                    space.fingerprint()
+                );
                 bo = bo.with_shared_surrogate(replica);
             }
             if let Some(set) = &objectives {

@@ -60,7 +60,7 @@ pub mod wal;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::gp::shared::JournalEvent;
 use crate::gp::SharedSurrogate;
@@ -176,6 +176,45 @@ pub fn attach(
 /// Rebuild a surrogate from `dir` — see [`recover::recover`].
 pub fn recover(dir: &Path, default_hyper: crate::gp::GpHyper) -> Result<Recovered> {
     recover::recover(dir, default_hyper)
+}
+
+/// The state-dir namespace of one fleet space: `root/space-<16 hex>`.
+/// The daemon's *default* space journals into `root` itself (the layout
+/// every pre-fleet `--state-dir` produced), so old campaign directories
+/// keep recovering unchanged; every other fingerprint gets its own
+/// subdirectory with the same snapshot + WAL layout inside.
+pub fn space_dir(root: &Path, fingerprint: u64) -> PathBuf {
+    root.join(format!("space-{fingerprint:016x}"))
+}
+
+/// Enumerate the per-space namespaces under `root` (fleet boot
+/// recovery): every `space-<16 hex>` subdirectory, as
+/// `(fingerprint, path)` pairs in fingerprint order. A missing `root`
+/// is an empty fleet, not an error; non-matching entries are ignored.
+pub fn list_space_dirs(root: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(root) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => {
+            return Err(e).with_context(|| format!("listing state dir {}", root.display()))
+        }
+    };
+    for entry in entries {
+        let entry = entry.with_context(|| format!("listing state dir {}", root.display()))?;
+        let name = entry.file_name();
+        let Some(hex) = name.to_str().and_then(|n| n.strip_prefix("space-")) else {
+            continue;
+        };
+        if hex.len() != 16 || !entry.path().is_dir() {
+            continue;
+        }
+        if let Ok(fp) = u64::from_str_radix(hex, 16) {
+            out.push((fp, entry.path()));
+        }
+    }
+    out.sort_by_key(|(fp, _)| *fp);
+    Ok(out)
 }
 
 #[cfg(test)]

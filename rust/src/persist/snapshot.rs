@@ -32,6 +32,7 @@ use crate::gp::{SharedSurrogate, SurrogateDelta};
 use crate::server::proto::{
     f64_vec, hyper_from_json, hyper_to_json, rows_from_json, rows_to_json,
 };
+use crate::util::fnv1a64;
 use crate::util::json::{parse, Json};
 
 /// Snapshot format version this build writes (and the only one it reads).
@@ -41,17 +42,6 @@ pub const SNAPSHOT_VERSION: i64 = 1;
 /// a corrupt newest snapshot still recovers from its predecessor plus a
 /// longer WAL replay before falling all the way back to full-log replay.
 pub const SNAPSHOTS_KEPT: usize = 2;
-
-/// FNV-1a 64-bit — cheap, dependency-free corruption check (this guards
-/// against torn writes and bit rot, not adversaries).
-pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut hash = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        hash ^= b as u64;
-        hash = hash.wrapping_mul(0x1_0000_01b3);
-    }
-    hash
-}
 
 /// Path of the snapshot capturing `seq` store rows inside `dir`.
 pub fn snapshot_path(dir: &Path, seq: usize) -> PathBuf {

@@ -42,19 +42,41 @@
 //! in-flight constant-liar points, which are served back to *other*
 //! connections in their deltas and **expire when the owning connection
 //! closes** — a crashed tuner cannot leave phantom fantasies behind.
+//!
+//! # The fleet service (protocol v4)
+//!
+//! One daemon can host **many search spaces at once**: each space — keyed
+//! by [`SearchSpace::fingerprint`] — owns an independent factor, lease
+//! table and model lock, so spaces never contend with each other. A v4
+//! `hello` carrying a fingerprint binds the connection to its space,
+//! lazily creating it on first contact (recovering it from its
+//! `--state-dir` namespace when one exists); v2/v3 peers, which send no
+//! fingerprint, keep conditioning the daemon's *default* space exactly as
+//! before. A hello the fleet cannot honour — dimension conflict under an
+//! existing fingerprint, fleet at [`FleetOptions::max_spaces`] — is
+//! answered with a typed `hello-err` instead of the old silent
+//! drop-with-warning, and only that connection is affected: sibling
+//! spaces keep serving. With [`FleetOptions::idle_ttl`] set, a background
+//! sweeper evicts spaces no connection has bound for that long,
+//! snapshotting them to their state-dir namespace first (when the fleet
+//! is durable) so a later hello restores them bit-identically.
 
 pub mod proto;
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::evaluator::Evaluator;
 use crate::gp::{GpHyper, SharedSurrogate};
 use crate::space::SearchSpace;
+use crate::util::linalg::packed_len;
 use proto::{
     decode_request, decode_surrogate_request, encode_response, encode_surrogate_response,
     Request, Response, SurrogateRequest, SurrogateResponse, PROTOCOL_VERSION,
@@ -75,16 +97,95 @@ struct LeaseTable {
     entries: Vec<LeaseEntry>,
 }
 
+/// One hosted search space: an independent factor + lease table (+ its
+/// own durability journal when the fleet has a state dir). Spaces share
+/// nothing but the listener — tells into one never take another's locks.
+struct SpaceState {
+    fingerprint: u64,
+    surrogate: SharedSurrogate,
+    leases: Mutex<LeaseTable>,
+    /// Declared row dimension (0 = not yet known). Set by the first
+    /// fingerprinted hello or by recovery; a later hello declaring a
+    /// different dimension under the same fingerprint is refused.
+    dim: AtomicUsize,
+    /// Connections currently bound to this space.
+    active: AtomicUsize,
+    /// When `active` last dropped to zero — the idle clock the eviction
+    /// sweeper reads.
+    last_release: Mutex<Instant>,
+    /// Per-space journal for lazily created spaces. The *default* space's
+    /// persistence is owned by whoever attached it (e.g. `main.rs`), not
+    /// here.
+    persist: Option<crate::persist::Persistence>,
+}
+
+impl SpaceState {
+    fn new(fingerprint: u64, surrogate: SharedSurrogate, dim: usize) -> SpaceState {
+        SpaceState {
+            fingerprint,
+            surrogate,
+            leases: Mutex::new(LeaseTable::default()),
+            dim: AtomicUsize::new(dim),
+            active: AtomicUsize::new(0),
+            last_release: Mutex::new(Instant::now()),
+            persist: None,
+        }
+    }
+}
+
+/// Fleet knobs (`surrogate-serve --max-spaces / --space-idle-secs`).
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Most spaces hosted at once, the default space included. A
+    /// fingerprinted hello that would create one more gets `hello-err`.
+    pub max_spaces: usize,
+    /// Evict a space after no connection has bound it for this long
+    /// (snapshotting it first when durable). `None` — the default — never
+    /// evicts. The default space is never evicted.
+    pub idle_ttl: Option<Duration>,
+    /// Root state directory: lazily created spaces journal into
+    /// `space-<16 hex>/` namespaces under it (see
+    /// [`crate::persist::space_dir`]) and are recovered from there on
+    /// boot and on re-hello after eviction.
+    pub state_dir: Option<PathBuf>,
+    /// WAL fsync cadence for per-space journals
+    /// ([`crate::persist::PersistOptions::fsync_every`]).
+    pub fsync_every: usize,
+    /// Hyperparameters for spaces born without recoverable state.
+    pub default_hyper: GpHyper,
+}
+
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions {
+            max_spaces: 16,
+            idle_ttl: None,
+            state_dir: None,
+            fsync_every: 1,
+            default_hyper: GpHyper::default(),
+        }
+    }
+}
+
+/// The multi-space surrogate fleet (module docs).
+struct Fleet {
+    /// fingerprint -> space. The default space (bound by v2/v3 peers and
+    /// by surrogate requests that arrive before any hello) lives under
+    /// the daemon's own evaluate-plane space fingerprint.
+    spaces: Mutex<HashMap<u64, Arc<SpaceState>>>,
+    default_fp: u64,
+    opts: FleetOptions,
+}
+
 /// Shared server state.
 struct Shared {
     evaluator: Mutex<Box<dyn Evaluator + Send>>,
     space: SearchSpace,
     served: AtomicUsize,
     shutdown: AtomicBool,
-    /// The authoritative shared factor, when this daemon is a surrogate
-    /// service (module docs).
-    surrogate: Option<SharedSurrogate>,
-    leases: Mutex<LeaseTable>,
+    /// The surrogate fleet, when this daemon is a surrogate service
+    /// (module docs).
+    fleet: Option<Fleet>,
     /// Connection-id allocator (lease ownership / expiry).
     conns: AtomicU64,
 }
@@ -110,23 +211,67 @@ impl TargetServer {
                 space,
                 served: AtomicUsize::new(0),
                 shutdown: AtomicBool::new(false),
-                surrogate: None,
-                leases: Mutex::new(LeaseTable::default()),
+                fleet: None,
                 conns: AtomicU64::new(0),
             }),
         })
     }
 
     /// Host `surrogate` as the authoritative shared factor next to the
-    /// measurement daemon (module docs: the surrogate service). Must be
-    /// called before [`TargetServer::serve`]/[`TargetServer::spawn`].
-    /// Keep a clone of the handle to observe or reuse the factor after
-    /// the daemon shuts down.
+    /// measurement daemon (module docs: the surrogate service). It
+    /// becomes the fleet's *default* space — the one v2/v3 peers bind —
+    /// keyed by the daemon space's fingerprint. Must be called before
+    /// [`TargetServer::serve`]/[`TargetServer::spawn`]. Keep a clone of
+    /// the handle to observe or reuse the factor after the daemon shuts
+    /// down.
     pub fn with_surrogate(mut self, surrogate: SharedSurrogate) -> TargetServer {
-        Arc::get_mut(&mut self.shared)
-            .expect("attach the surrogate before serving")
-            .surrogate = Some(surrogate);
+        let shared = Arc::get_mut(&mut self.shared).expect("attach the surrogate before serving");
+        let default_fp = shared.space.fingerprint();
+        let dim = surrogate.dim().unwrap_or(0);
+        let mut spaces = HashMap::new();
+        spaces.insert(default_fp, Arc::new(SpaceState::new(default_fp, surrogate, dim)));
+        shared.fleet = Some(Fleet {
+            spaces: Mutex::new(spaces),
+            default_fp,
+            opts: FleetOptions::default(),
+        });
         self
+    }
+
+    /// Configure the fleet (module docs): space cap, idle eviction,
+    /// per-space durability. Call after [`TargetServer::with_surrogate`]
+    /// and before serving. When `opts.state_dir` is set, every
+    /// `space-<16 hex>/` namespace already on disk is recovered *now* —
+    /// a restarted daemon boots with its whole fleet, not just the
+    /// default space.
+    pub fn with_fleet_options(mut self, opts: FleetOptions) -> Result<TargetServer> {
+        let shared =
+            Arc::get_mut(&mut self.shared).expect("configure the fleet before serving");
+        let fleet = shared
+            .fleet
+            .as_mut()
+            .expect("attach a surrogate (with_surrogate) before configuring the fleet");
+        anyhow::ensure!(opts.max_spaces >= 1, "max_spaces must be at least 1");
+        fleet.opts = opts;
+        if let Some(root) = fleet.opts.state_dir.clone() {
+            let spaces = fleet.spaces.get_mut().unwrap();
+            for (fp, _dir) in crate::persist::list_space_dirs(&root)? {
+                if spaces.len() >= fleet.opts.max_spaces {
+                    eprintln!(
+                        "tftune: fleet at --max-spaces {}; leaving space {fp:016x} on disk \
+                         (it recovers on its next hello)",
+                        fleet.opts.max_spaces
+                    );
+                    break;
+                }
+                if !spaces.contains_key(&fp) {
+                    let sp = open_space(fp, 0, &fleet.opts)
+                        .with_context(|| format!("recovering fleet space {fp:016x}"))?;
+                    spaces.insert(fp, Arc::new(sp));
+                }
+            }
+        }
+        Ok(self)
     }
 
     /// Bind a dedicated surrogate service: a daemon that hosts the
@@ -165,8 +310,17 @@ impl TargetServer {
     }
 
     /// Serve until a shutdown request arrives. Blocking; one thread per
-    /// connection.
+    /// connection (plus the idle-space sweeper when eviction is on).
     pub fn serve(self) -> Result<usize> {
+        let sweeper = self
+            .shared
+            .fleet
+            .as_ref()
+            .and_then(|f| f.opts.idle_ttl)
+            .map(|ttl| {
+                let shared = Arc::clone(&self.shared);
+                std::thread::spawn(move || sweep_idle_spaces(&shared, ttl))
+            });
         let mut handles = Vec::new();
         for stream in self.listener.incoming() {
             if self.shared.shutdown.load(Ordering::SeqCst) {
@@ -183,6 +337,9 @@ impl TargetServer {
             }
         }
         for h in handles {
+            let _ = h.join();
+        }
+        if let Some(h) = sweeper {
             let _ = h.join();
         }
         Ok(self.shared.served.load(Ordering::SeqCst))
@@ -218,80 +375,295 @@ fn write_response(writer: &Mutex<TcpStream>, resp: &Response, shared: &Shared) -
     writeln!(w, "{line}").is_ok()
 }
 
+/// Build (or recover) the space for `fingerprint`. With a fleet state
+/// dir the space journals into its own namespace and is recovered from
+/// whatever a previous life left there; otherwise it starts fresh.
+fn open_space(fingerprint: u64, dim: usize, opts: &FleetOptions) -> Result<SpaceState> {
+    match &opts.state_dir {
+        Some(root) => {
+            let dir = crate::persist::space_dir(root, fingerprint);
+            let recovered = crate::persist::recover(&dir, opts.default_hyper)?;
+            let persist = crate::persist::attach(
+                &recovered.surrogate,
+                &dir,
+                crate::persist::PersistOptions { fsync_every: opts.fsync_every },
+            )?;
+            let dim = recovered.surrogate.dim().unwrap_or(dim);
+            let mut sp = SpaceState::new(fingerprint, recovered.surrogate, dim);
+            sp.persist = Some(persist);
+            Ok(sp)
+        }
+        None => Ok(SpaceState::new(fingerprint, SharedSurrogate::new(opts.default_hyper), dim)),
+    }
+}
+
+/// Look up `fingerprint` in the fleet — lazily creating its space — and
+/// bind it (`active` incremented under the map lock, so the sweeper can
+/// never evict a space between lookup and bind). `Err` carries the
+/// `hello-err` reason.
+fn acquire_space(
+    fleet: &Fleet,
+    fingerprint: u64,
+    dim: Option<usize>,
+) -> Result<Arc<SpaceState>, String> {
+    let mut map = fleet.spaces.lock().unwrap();
+    if let Some(sp) = map.get(&fingerprint) {
+        if let Some(d) = dim {
+            let have = sp.dim.load(Ordering::SeqCst);
+            if have != 0 && have != d {
+                return Err(format!(
+                    "space {fingerprint:016x}: declared dimension {d} != served dimension \
+                     {have} (mismatched client build, or a fingerprint collision)"
+                ));
+            }
+            if have == 0 {
+                sp.dim.store(d, Ordering::SeqCst);
+            }
+        }
+        sp.active.fetch_add(1, Ordering::SeqCst);
+        return Ok(Arc::clone(sp));
+    }
+    let Some(d) = dim else {
+        return Err(format!(
+            "unknown space {fingerprint:016x}: a fingerprinted hello must declare \"dim\" \
+             for the fleet to build its store"
+        ));
+    };
+    if map.len() >= fleet.opts.max_spaces {
+        return Err(format!(
+            "fleet is at --max-spaces {} and space {fingerprint:016x} is not hosted here",
+            fleet.opts.max_spaces
+        ));
+    }
+    let sp = match open_space(fingerprint, d, &fleet.opts) {
+        Ok(sp) => sp,
+        Err(e) => return Err(format!("space {fingerprint:016x}: {e:#}")),
+    };
+    sp.active.fetch_add(1, Ordering::SeqCst);
+    let sp = Arc::new(sp);
+    map.insert(fingerprint, Arc::clone(&sp));
+    Ok(sp)
+}
+
+/// Background sweeper: every fraction of the TTL, evict non-default
+/// spaces that have had no bound connection for `ttl` — snapshotting
+/// durable ones into their namespace first, so a later hello restores
+/// them bit-identically (pinned in `tests/fleet_service.rs`).
+fn sweep_idle_spaces(shared: &Shared, ttl: Duration) {
+    let interval = (ttl / 4).clamp(Duration::from_millis(10), Duration::from_millis(250));
+    let fleet = shared.fleet.as_ref().expect("sweeper runs only with a fleet");
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(interval);
+        let mut evicted = Vec::new();
+        {
+            let mut map = fleet.spaces.lock().unwrap();
+            let dead: Vec<u64> = map
+                .iter()
+                .filter(|(fp, sp)| {
+                    **fp != fleet.default_fp
+                        && sp.active.load(Ordering::SeqCst) == 0
+                        && sp.last_release.lock().unwrap().elapsed() >= ttl
+                })
+                .map(|(fp, _)| *fp)
+                .collect();
+            for fp in dead {
+                if let Some(sp) = map.remove(&fp) {
+                    evicted.push(sp);
+                }
+            }
+        }
+        // Snapshot off the map lock: new hellos for *other* spaces are
+        // not blocked on eviction I/O, and nobody can re-bind an evicted
+        // space (it is out of the map; a re-hello recovers it from disk).
+        for sp in evicted {
+            match &sp.persist {
+                Some(p) => match p.snapshot(&sp.surrogate) {
+                    Ok(seq) => eprintln!(
+                        "tftune: evicted idle space {:016x} (snapshot seq {seq})",
+                        sp.fingerprint
+                    ),
+                    Err(e) => eprintln!(
+                        "tftune: evicting space {:016x}: snapshot failed ({e}); the WAL \
+                         alone still recovers it",
+                        sp.fingerprint
+                    ),
+                },
+                None => eprintln!(
+                    "tftune: evicted idle space {:016x} ({} observation(s) discarded — \
+                     run with --state-dir to make the fleet durable)",
+                    sp.fingerprint,
+                    sp.surrogate.len()
+                ),
+            }
+        }
+    }
+}
+
+/// Per-connection surrogate-plane state: which fleet space this
+/// connection conditions.
+struct ConnCtx {
+    id: u64,
+    space: Option<Arc<SpaceState>>,
+}
+
+impl ConnCtx {
+    /// The space this connection is bound to, binding the *default*
+    /// space on first use — the contract every pre-v4 peer (and any
+    /// surrogate request arriving before a hello) relies on. `None` when
+    /// this daemon hosts no fleet.
+    fn space(&mut self, shared: &Shared) -> Option<Arc<SpaceState>> {
+        if self.space.is_none() {
+            let fleet = shared.fleet.as_ref()?;
+            let map = fleet.spaces.lock().unwrap();
+            let sp = map.get(&fleet.default_fp).expect("the default space is never evicted");
+            sp.active.fetch_add(1, Ordering::SeqCst);
+            self.space = Some(Arc::clone(sp));
+        }
+        self.space.clone()
+    }
+
+    /// Rebind to `sp` (hello): the old space loses this connection's
+    /// leases and its idle clock starts if we were its last binder.
+    fn bind(&mut self, sp: Arc<SpaceState>) {
+        self.release();
+        self.space = Some(sp);
+    }
+
+    /// Unbind (disconnect or re-hello): lease expiry + idle bookkeeping.
+    fn release(&mut self) {
+        if let Some(sp) = self.space.take() {
+            sp.leases.lock().unwrap().entries.retain(|e| e.conn != self.id);
+            if sp.active.fetch_sub(1, Ordering::SeqCst) == 1 {
+                *sp.last_release.lock().unwrap() = Instant::now();
+            }
+        }
+    }
+}
+
 /// Serve one surrogate-plane request (module docs: the surrogate
 /// service). Returns false when the connection writer is gone.
 fn handle_surrogate_request(
     req: SurrogateRequest,
     shared: &Shared,
-    conn_id: u64,
+    conn: &mut ConnCtx,
     writer: &Mutex<TcpStream>,
 ) -> bool {
-    let no_factor = || SurrogateResponse::Error {
-        message: "this daemon hosts no shared surrogate (start one with `surrogate-serve` \
-                  or attach it via TargetServer::with_surrogate)"
-            .to_string(),
-    };
+    const NO_FACTOR: &str = "this daemon hosts no shared surrogate (start one with \
+                             `surrogate-serve` or attach it via TargetServer::with_surrogate)";
+    let no_factor = || SurrogateResponse::Error { message: NO_FACTOR.to_string() };
     let resp = match req {
         // The handshake answers on any daemon — it reports the
         // *negotiated* version, min(client, server), so an old peer
         // keeps speaking its own protocol (single-objective tells)
-        // against a newer daemon instead of being refused.
-        SurrogateRequest::Hello { version } => {
-            SurrogateResponse::HelloOk { version: version.min(PROTOCOL_VERSION) }
+        // against a newer daemon instead of being refused. A
+        // fingerprinted hello (v4) additionally binds this connection to
+        // its fleet space, or gets a typed refusal.
+        SurrogateRequest::Hello { version, fingerprint, dim } => {
+            let negotiated = version.min(PROTOCOL_VERSION);
+            match (&shared.fleet, fingerprint) {
+                (_, None) => SurrogateResponse::HelloOk { version: negotiated },
+                (None, Some(_)) => {
+                    SurrogateResponse::HelloErr { reason: NO_FACTOR.to_string() }
+                }
+                (Some(fleet), Some(fp)) => match acquire_space(fleet, fp, dim) {
+                    Ok(sp) => {
+                        conn.bind(sp);
+                        SurrogateResponse::HelloOk { version: negotiated }
+                    }
+                    Err(reason) => SurrogateResponse::HelloErr { reason },
+                },
+            }
         }
-        SurrogateRequest::TellObs { x, y, ys } => match &shared.surrogate {
-            Some(s) => {
-                // Fire-and-forget: queue into the served factor (enqueue
-                // order across connections = arrival order here) and send
-                // no response, so tells never stall the teller. Secondary
-                // objective columns (v3) ride into the store with the row;
-                // a v2 teller simply contributes single-objective rows.
+        SurrogateRequest::TellObs { x, y, ys } => match conn.space(shared) {
+            Some(sp) => {
+                // Fire-and-forget: queue into this space's factor
+                // (enqueue order across connections = arrival order here)
+                // and send no response, so tells never stall the teller.
+                // Secondary objective columns (v3) ride into the store
+                // with the row; a v2 teller simply contributes
+                // single-objective rows. A wrong-dimension row is dropped
+                // by the store's own drain guard, never corrupting the
+                // space — fingerprinted hellos make that a can't-happen
+                // for well-built clients.
                 let mut all = Vec::with_capacity(1 + ys.len());
                 all.push(y);
                 all.extend(ys);
-                s.tell_multi(x, all);
+                sp.surrogate.tell_multi(x, all);
                 return true;
             }
             None => no_factor(),
         },
-        SurrogateRequest::SyncFactor { from_n } => match &shared.surrogate {
-            Some(s) => match s.export_delta(from_n) {
-                Some(mut d) => {
-                    // Serve every *other* connection's lease points: the
-                    // requester conditions its own in-flight trials
-                    // itself.
-                    let table = shared.leases.lock().unwrap();
-                    d.leases = table
-                        .entries
-                        .iter()
-                        .filter(|e| e.conn != conn_id)
-                        .flat_map(|e| e.points.iter().cloned())
-                        .collect();
-                    SurrogateResponse::FactorDelta(d)
-                }
-                None => SurrogateResponse::Error {
-                    message: format!(
-                        "replica claims {from_n} rows, ahead of the served factor"
-                    ),
+        SurrogateRequest::SyncFactor { from_n, max_rows, quantise } => {
+            match conn.space(shared) {
+                Some(sp) => match sp.surrogate.export_delta(from_n) {
+                    Some(mut d) => {
+                        // Chunked catch-up (v4): bound the delta to
+                        // `max_rows` rows, truncating rows/extras and the
+                        // packed factor suffix consistently and rewriting
+                        // `total_n` to the chunk end (the import contract
+                        // checks row count against it). `pending` tells
+                        // the replica how far behind it still is.
+                        let mut pending = 0;
+                        if let Some(k) = max_rows {
+                            let k = k.max(1); // a 0-row chunk would never progress
+                            if d.rows.len() > k {
+                                pending = d.rows.len() - k;
+                                d.rows.truncate(k);
+                                if !d.extras.is_empty() {
+                                    d.extras.truncate(k);
+                                }
+                                d.total_n = from_n + k;
+                                if let Some(f) = &mut d.factor {
+                                    f.truncate(packed_len(from_n + k) - packed_len(from_n));
+                                }
+                            }
+                        }
+                        if pending == 0 {
+                            // Leases ride only on the final chunk: the
+                            // requester conditions its own in-flight
+                            // trials itself, and every import replaces
+                            // the ambient lease set wholesale anyway.
+                            let table = sp.leases.lock().unwrap();
+                            d.leases = table
+                                .entries
+                                .iter()
+                                .filter(|e| e.conn != conn.id)
+                                .flat_map(|e| e.points.iter().cloned())
+                                .collect();
+                        }
+                        let quantised = quantise && d.factor.is_some();
+                        SurrogateResponse::FactorDelta { delta: d, pending, quantised }
+                    }
+                    None => SurrogateResponse::Error {
+                        message: format!(
+                            "replica claims {from_n} rows, ahead of the served factor"
+                        ),
+                    },
                 },
-            },
+                None => no_factor(),
+            }
+        }
+        SurrogateRequest::AskLease { points } => match conn.space(shared) {
+            Some(sp) => {
+                let mut table = sp.leases.lock().unwrap();
+                table.next_id += 1;
+                let id = table.next_id;
+                table.entries.push(LeaseEntry { id, conn: conn.id, points });
+                SurrogateResponse::Lease { id }
+            }
             None => no_factor(),
         },
-        SurrogateRequest::AskLease { points } => {
-            let mut table = shared.leases.lock().unwrap();
-            table.next_id += 1;
-            let id = table.next_id;
-            table.entries.push(LeaseEntry { id, conn: conn_id, points });
-            SurrogateResponse::Lease { id }
-        }
-        SurrogateRequest::RetractLease { id } => {
-            let mut table = shared.leases.lock().unwrap();
-            table.entries.retain(|e| e.id != id || e.conn != conn_id);
-            SurrogateResponse::LeaseOk { id }
-        }
-        SurrogateRequest::SetHyper { hyper } => match &shared.surrogate {
-            Some(s) => {
-                s.set_hyper(hyper);
+        SurrogateRequest::RetractLease { id } => match conn.space(shared) {
+            Some(sp) => {
+                let mut table = sp.leases.lock().unwrap();
+                table.entries.retain(|e| e.id != id || e.conn != conn.id);
+                SurrogateResponse::LeaseOk { id }
+            }
+            None => no_factor(),
+        },
+        SurrogateRequest::SetHyper { hyper } => match conn.space(shared) {
+            Some(sp) => {
+                sp.surrogate.set_hyper(hyper);
                 SurrogateResponse::HyperOk
             }
             None => no_factor(),
@@ -324,8 +696,11 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
         Err(_) => return,
     };
     // Lease scope: this connection's published constant-liar points live
-    // exactly as long as the connection (expiry on disconnect).
-    let conn_id = shared.conns.fetch_add(1, Ordering::SeqCst);
+    // exactly as long as the connection (expiry on disconnect). The
+    // surrogate plane additionally tracks which fleet space the
+    // connection is bound to (default space until a fingerprinted hello).
+    let mut conn =
+        ConnCtx { id: shared.conns.fetch_add(1, Ordering::SeqCst), space: None };
     let reader = BufReader::new(stream);
     // Scoped workers let every in-flight evaluate borrow `shared` and the
     // connection writer: the reader keeps pulling pipelined requests while
@@ -345,7 +720,7 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
                     // plane before reporting a decode error.
                     match decode_surrogate_request(&line) {
                         Ok(sreq) => {
-                            if !handle_surrogate_request(sreq, shared, conn_id, &writer) {
+                            if !handle_surrogate_request(sreq, shared, &mut conn, &writer) {
                                 break;
                             }
                         }
@@ -403,8 +778,10 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
         // closes, so their responses are flushed first.
     });
     // Lease expiry on disconnect: a replica that died mid-batch (or never
-    // retracted) stops conditioning its siblings' models right here.
-    shared.leases.lock().unwrap().entries.retain(|e| e.conn != conn_id);
+    // retracted) stops conditioning its siblings' models right here. The
+    // release also starts the bound space's idle clock when this was its
+    // last connection.
+    conn.release();
 }
 
 #[cfg(test)]
@@ -531,14 +908,14 @@ mod tests {
 
         // Handshake negotiates min(client, server): a v2 client is
         // answered at v2, a current client at the server's version.
-        match roundtrip(&mut s, &mut reader, &SurrogateRequest::Hello { version: 2 }) {
+        match roundtrip(&mut s, &mut reader, &SurrogateRequest::Hello { version: 2, fingerprint: None, dim: None }) {
             SurrogateResponse::HelloOk { version } => assert_eq!(version, 2),
             other => panic!("unexpected {other:?}"),
         }
         match roundtrip(
             &mut s,
             &mut reader,
-            &SurrogateRequest::Hello { version: PROTOCOL_VERSION },
+            &SurrogateRequest::Hello { version: PROTOCOL_VERSION, fingerprint: None, dim: None },
         ) {
             SurrogateResponse::HelloOk { version } => assert_eq!(version, PROTOCOL_VERSION),
             other => panic!("unexpected {other:?}"),
@@ -557,8 +934,8 @@ mod tests {
             )
             .unwrap();
         }
-        match roundtrip(&mut s, &mut reader, &SurrogateRequest::SyncFactor { from_n: 0 }) {
-            SurrogateResponse::FactorDelta(d) => {
+        match roundtrip(&mut s, &mut reader, &SurrogateRequest::SyncFactor { from_n: 0, max_rows: None, quantise: false }) {
+            SurrogateResponse::FactorDelta { delta: d, .. } => {
                 assert_eq!(d.total_n, 2);
                 assert_eq!(d.rows.len(), 2);
                 assert_eq!(d.rows[0].1, 1.0);
@@ -580,14 +957,14 @@ mod tests {
             SurrogateResponse::Lease { .. } => {}
             other => panic!("unexpected {other:?}"),
         }
-        match roundtrip(&mut s, &mut reader, &SurrogateRequest::SyncFactor { from_n: 2 }) {
-            SurrogateResponse::FactorDelta(d) => assert!(d.leases.is_empty()),
+        match roundtrip(&mut s, &mut reader, &SurrogateRequest::SyncFactor { from_n: 2, max_rows: None, quantise: false }) {
+            SurrogateResponse::FactorDelta { delta: d, .. } => assert!(d.leases.is_empty()),
             other => panic!("unexpected {other:?}"),
         }
         let mut s2 = TcpStream::connect(addr).unwrap();
         let mut reader2 = BufReader::new(s2.try_clone().unwrap());
-        match roundtrip(&mut s2, &mut reader2, &SurrogateRequest::SyncFactor { from_n: 0 }) {
-            SurrogateResponse::FactorDelta(d) => {
+        match roundtrip(&mut s2, &mut reader2, &SurrogateRequest::SyncFactor { from_n: 0, max_rows: None, quantise: false }) {
+            SurrogateResponse::FactorDelta { delta: d, .. } => {
                 assert_eq!(d.leases, vec![(vec![0.1, 0.1], 0.0)]);
             }
             other => panic!("unexpected {other:?}"),
@@ -599,9 +976,9 @@ mod tests {
         // Lease expiry on disconnect (poll: the server notices EOF async).
         let mut expired = false;
         for _ in 0..200 {
-            match roundtrip(&mut s2, &mut reader2, &SurrogateRequest::SyncFactor { from_n: 2 })
+            match roundtrip(&mut s2, &mut reader2, &SurrogateRequest::SyncFactor { from_n: 2, max_rows: None, quantise: false })
             {
-                SurrogateResponse::FactorDelta(d) => {
+                SurrogateResponse::FactorDelta { delta: d, .. } => {
                     if d.leases.is_empty() {
                         expired = true;
                         break;
@@ -643,7 +1020,7 @@ mod tests {
         writeln!(
             s,
             "{}",
-            proto::encode_surrogate_request(&SurrogateRequest::SyncFactor { from_n: 0 })
+            proto::encode_surrogate_request(&SurrogateRequest::SyncFactor { from_n: 0, max_rows: None, quantise: false })
         )
         .unwrap();
         let mut reader = BufReader::new(s.try_clone().unwrap());

@@ -69,6 +69,41 @@
 //! negotiates down: `hello-ok` answers `min(client, server)` versions, so
 //! a v2 peer keeps working single-objective — a v2 sender simply never
 //! writes `"ys"`, and a v2 receiver ignores the unknown key.
+//!
+//! # The fleet service (protocol v4)
+//!
+//! [`PROTOCOL_VERSION`] 4 turns the daemon into a **multi-space fleet
+//! service**: one process hosts an independent factor + lease table per
+//! search space, keyed by the space *fingerprint*
+//! ([`SearchSpace::fingerprint`] — a stable FNV-1a 64 over every
+//! parameter's name/range/step). Three wire changes:
+//!
+//! ```text
+//! -> {"type":"hello","version":4,"space":"<16 hex>","dim":<d>}
+//! <- {"type":"hello-err","reason":"..."}                typed refusal
+//! -> {"type":"sync-factor","from_n":<n>,"max_rows":<k>,"quantise":true}
+//! <- {"type":"factor-delta",...,"pending":<rows left>,
+//!     "factor_q":"<8 hex per value>","factor_r":"<hex>[.<hex>...]"}
+//! ```
+//!
+//! The fingerprint rides as a 16-digit hex *string* because JSON numbers
+//! are f64s and cannot carry every u64 exactly. A `hello` without
+//! `"space"` (every v2/v3 peer) binds the daemon's default space; a
+//! fingerprinted `hello` for the wrong space gets `hello-err` instead of
+//! the old silent drop-with-warning. `max_rows` bounds one catch-up
+//! chunk: the daemon truncates the delta to at most that many rows and
+//! reports how many remain in `"pending"` (omitted when 0), so a cold
+//! replica resumes row-by-row across chunks — and across reconnects,
+//! since every imported chunk advances its `from_n`. `quantise` switches
+//! the packed factor suffix to the **quantised-with-exact-residual**
+//! encoding: per value, `factor_q` carries the f32 quantisation as 8 hex
+//! digits and `factor_r` the XOR residual `bits(v) ^ bits((v as f32) as
+//! f64)` in variable-length hex — decode is pure bit reassembly, so the
+//! import stays *bit-identical* while a typical suffix (residuals have
+//! only the low ~29 bits set) shrinks well below the decimal `"factor"`
+//! array. Old daemons ignore both knobs and answer one full un-quantised
+//! delta with no `"pending"`, which a chunking replica treats as the
+//! final chunk.
 
 use crate::gp::{GpHyper, KernelKind, SurrogateDelta, UNBOUNDED_HISTORY};
 use crate::space::{Config, SearchSpace};
@@ -76,10 +111,12 @@ use crate::util::json::{parse, Json};
 
 /// Wire-protocol version: 1 was the implicit evaluate-only protocol, 2
 /// adds the handshake and the surrogate plane, 3 adds K-objective target
-/// columns on `tell-obs` / `factor-delta` rows. Peers negotiate the
-/// *minimum* of their versions via `hello`/`hello-ok`: a v2 peer against
-/// a v3 daemon keeps working, single-objective.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// columns on `tell-obs` / `factor-delta` rows, 4 adds the fleet service
+/// (fingerprinted `hello`, typed `hello-err`, chunked and quantised
+/// `sync-factor`). Peers negotiate the *minimum* of their versions via
+/// `hello`/`hello-ok`: a v2/v3 peer against a v4 daemon keeps working,
+/// single-space and unchunked.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// Parsed request.
 #[derive(Debug, Clone, PartialEq)]
@@ -201,8 +238,12 @@ pub fn decode_response(line: &str, space: &SearchSpace) -> Result<Response, Stri
 /// Parsed surrogate-plane request (module docs for the wire format).
 #[derive(Debug, Clone, PartialEq)]
 pub enum SurrogateRequest {
-    /// Protocol-version handshake.
-    Hello { version: u32 },
+    /// Protocol-version handshake. `fingerprint`/`dim` (v4) name the
+    /// search space this connection wants to condition
+    /// ([`SearchSpace::fingerprint`] plus its dimension, which the fleet
+    /// needs to build the space's store); `None` — every v2/v3 peer —
+    /// binds the daemon's default space.
+    Hello { version: u32, fingerprint: Option<u64>, dim: Option<usize> },
     /// Fire-and-forget observation append (no response on success).
     /// `ys` holds the secondary objective columns (v3; empty =
     /// single-objective, the only form a v2 peer sends). NaN entries
@@ -210,7 +251,10 @@ pub enum SurrogateRequest {
     /// JSON `null`.
     TellObs { x: Vec<f64>, y: f64, ys: Vec<f64> },
     /// Catch-up request: everything past the replica's `from_n` rows.
-    SyncFactor { from_n: usize },
+    /// `max_rows` (v4) bounds the answer to one resumable chunk;
+    /// `quantise` (v4) asks for the quantised-with-exact-residual factor
+    /// encoding. Both default off, which is what v2/v3 peers send.
+    SyncFactor { from_n: usize, max_rows: Option<usize>, quantise: bool },
     /// Publish this connection's in-flight `(x, lie)` points as a lease.
     AskLease { points: Vec<(Vec<f64>, f64)> },
     /// Retract a lease this connection published earlier.
@@ -223,7 +267,18 @@ pub enum SurrogateRequest {
 #[derive(Debug, Clone, PartialEq)]
 pub enum SurrogateResponse {
     HelloOk { version: u32 },
-    FactorDelta(SurrogateDelta),
+    /// Typed handshake refusal (v4): the daemon will not serve this
+    /// connection's space — wrong fingerprint for an existing dimension,
+    /// fleet at `--max-spaces`, or a malformed fingerprinted hello.
+    /// Unlike the generic `error`, receiving this means *connecting was
+    /// the mistake*, so clients surface it instead of retrying.
+    HelloErr { reason: String },
+    /// One catch-up chunk. `pending` (v4) counts the store rows still
+    /// beyond this chunk — 0 (the only value pre-v4 daemons produce)
+    /// means the replica is caught up. `quantised` records which factor
+    /// encoding rode the wire; the decoded `delta.factor` is
+    /// bit-identical either way.
+    FactorDelta { delta: SurrogateDelta, pending: usize, quantised: bool },
     Lease { id: u64 },
     LeaseOk { id: u64 },
     HyperOk,
@@ -292,6 +347,53 @@ pub(crate) fn f64_vec(j: &Json) -> Result<Vec<f64>, String> {
         .iter()
         .map(|v| v.as_f64().ok_or_else(|| "expected a number".to_string()))
         .collect()
+}
+
+/// Quantised-with-exact-residual factor encoding (v4). Per value `v`:
+/// `factor_q` appends the f32 quantisation's bits as exactly 8 hex
+/// digits, `factor_r` appends the XOR residual
+/// `bits(v) ^ bits((v as f32) as f64)` in variable-length hex,
+/// '.'-separated. Reassembly is pure bit manipulation — no float
+/// arithmetic — so NaNs, infinities and subnormals all survive and the
+/// decode is bit-identical by construction. Residuals of
+/// f32-representable magnitudes keep only the low ~29 mantissa bits, so
+/// the pair is measurably smaller than the decimal `"factor"` array.
+pub(crate) fn factor_quantise(factor: &[f64]) -> (String, String) {
+    let mut q = String::with_capacity(factor.len() * 8);
+    let mut r = String::with_capacity(factor.len() * 9);
+    for (i, &v) in factor.iter().enumerate() {
+        let qbits = (v as f32).to_bits();
+        q.push_str(&format!("{qbits:08x}"));
+        if i > 0 {
+            r.push('.');
+        }
+        r.push_str(&format!("{:x}", v.to_bits() ^ ((f32::from_bits(qbits) as f64).to_bits())));
+    }
+    (q, r)
+}
+
+pub(crate) fn factor_dequantise(q: &str, r: &str) -> Result<Vec<f64>, String> {
+    if q.is_empty() && r.is_empty() {
+        return Ok(Vec::new());
+    }
+    if q.len() % 8 != 0 {
+        return Err(format!("factor_q length {} is not a multiple of 8", q.len()));
+    }
+    let n = q.len() / 8;
+    let residuals: Vec<&str> = r.split('.').collect();
+    if residuals.len() != n {
+        return Err(format!("{n} quantised values but {} residuals", residuals.len()));
+    }
+    let mut out = Vec::with_capacity(n);
+    for (i, rs) in residuals.iter().enumerate() {
+        let qs = q.get(i * 8..i * 8 + 8).ok_or("factor_q is not ASCII hex")?;
+        let qbits = u32::from_str_radix(qs, 16)
+            .map_err(|_| format!("bad factor_q chunk '{qs}'"))?;
+        let rbits = u64::from_str_radix(rs, 16)
+            .map_err(|_| format!("bad factor_r chunk '{rs}'"))?;
+        out.push(f64::from_bits((f32::from_bits(qbits) as f64).to_bits() ^ rbits));
+    }
+    Ok(out)
 }
 
 /// `(x, value)` points under `value_key` ("y" for observation rows, "lie"
@@ -384,11 +486,19 @@ pub(crate) fn rows_from_json(j: &Json) -> Result<(Vec<(Vec<f64>, f64)>, Vec<Vec<
 
 pub fn encode_surrogate_request(req: &SurrogateRequest) -> String {
     match req {
-        SurrogateRequest::Hello { version } => Json::obj(vec![
-            ("type", "hello".into()),
-            ("version", (*version as i64).into()),
-        ])
-        .to_string(),
+        SurrogateRequest::Hello { version, fingerprint, dim } => {
+            let mut pairs = vec![
+                ("type", "hello".into()),
+                ("version", (*version as i64).into()),
+            ];
+            if let Some(fp) = fingerprint {
+                pairs.push(("space", format!("{fp:016x}").as_str().into()));
+            }
+            if let Some(d) = dim {
+                pairs.push(("dim", (*d).into()));
+            }
+            Json::obj(pairs).to_string()
+        }
         SurrogateRequest::TellObs { x, y, ys } => {
             let mut pairs = vec![
                 ("type", "tell-obs".into()),
@@ -400,11 +510,19 @@ pub fn encode_surrogate_request(req: &SurrogateRequest) -> String {
             }
             Json::obj(pairs).to_string()
         }
-        SurrogateRequest::SyncFactor { from_n } => Json::obj(vec![
-            ("type", "sync-factor".into()),
-            ("from_n", (*from_n).into()),
-        ])
-        .to_string(),
+        SurrogateRequest::SyncFactor { from_n, max_rows, quantise } => {
+            let mut pairs = vec![
+                ("type", "sync-factor".into()),
+                ("from_n", (*from_n).into()),
+            ];
+            if let Some(k) = max_rows {
+                pairs.push(("max_rows", (*k).into()));
+            }
+            if *quantise {
+                pairs.push(("quantise", Json::Bool(true)));
+            }
+            Json::obj(pairs).to_string()
+        }
         SurrogateRequest::AskLease { points } => Json::obj(vec![
             ("type", "ask-lease".into()),
             ("points", points_to_json(points, "lie")),
@@ -426,11 +544,30 @@ pub fn encode_surrogate_request(req: &SurrogateRequest) -> String {
 pub fn decode_surrogate_request(line: &str) -> Result<SurrogateRequest, String> {
     let j = parse(line).map_err(|e| e.to_string())?;
     match j.get("type").and_then(Json::as_str) {
-        Some("hello") => Ok(SurrogateRequest::Hello {
-            version: req_u64(&j, "version")?
-                .try_into()
-                .map_err(|_| "version out of range".to_string())?,
-        }),
+        Some("hello") => {
+            let fingerprint = match j.get("space") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .filter(|s| s.len() == 16)
+                        .and_then(|s| u64::from_str_radix(s, 16).ok())
+                        .ok_or_else(|| {
+                            "'space' must be a 16-digit hex fingerprint".to_string()
+                        })?,
+                ),
+            };
+            let dim = match j.get("dim") {
+                None | Some(Json::Null) => None,
+                Some(_) => Some(req_usize(&j, "dim")?),
+            };
+            Ok(SurrogateRequest::Hello {
+                version: req_u64(&j, "version")?
+                    .try_into()
+                    .map_err(|_| "version out of range".to_string())?,
+                fingerprint,
+                dim,
+            })
+        }
         Some("tell-obs") => Ok(SurrogateRequest::TellObs {
             x: f64_vec(j.req("x").map_err(|e| e.to_string())?)?,
             y: req_f64(&j, "y")?,
@@ -439,9 +576,17 @@ pub fn decode_surrogate_request(line: &str) -> Result<SurrogateRequest, String> 
                 None => Vec::new(),
             },
         }),
-        Some("sync-factor") => {
-            Ok(SurrogateRequest::SyncFactor { from_n: req_usize(&j, "from_n")? })
-        }
+        Some("sync-factor") => Ok(SurrogateRequest::SyncFactor {
+            from_n: req_usize(&j, "from_n")?,
+            max_rows: match j.get("max_rows") {
+                None | Some(Json::Null) => None,
+                Some(_) => Some(req_usize(&j, "max_rows")?),
+            },
+            quantise: match j.get("quantise") {
+                None => false,
+                Some(v) => v.as_bool().ok_or("'quantise' must be a boolean")?,
+            },
+        }),
         Some("ask-lease") => Ok(SurrogateRequest::AskLease {
             points: points_from_json(j.req("points").map_err(|e| e.to_string())?, "lie")?,
         }),
@@ -460,22 +605,34 @@ pub fn encode_surrogate_response(resp: &SurrogateResponse) -> String {
             ("version", (*version as i64).into()),
         ])
         .to_string(),
-        SurrogateResponse::FactorDelta(d) => Json::obj(vec![
-            ("type", "factor-delta".into()),
-            ("from_n", d.from_n.into()),
-            ("total_n", d.total_n.into()),
-            ("hyper", hyper_to_json(&d.hyper)),
-            ("rows", rows_to_json(&d.rows, &d.extras)),
-            (
-                "factor",
-                match &d.factor {
-                    Some(f) => Json::from_f64s(f),
-                    None => Json::Null,
-                },
-            ),
-            ("leases", points_to_json(&d.leases, "lie")),
+        SurrogateResponse::HelloErr { reason } => Json::obj(vec![
+            ("type", "hello-err".into()),
+            ("reason", reason.as_str().into()),
         ])
         .to_string(),
+        SurrogateResponse::FactorDelta { delta: d, pending, quantised } => {
+            let mut pairs = vec![
+                ("type", "factor-delta".into()),
+                ("from_n", d.from_n.into()),
+                ("total_n", d.total_n.into()),
+                ("hyper", hyper_to_json(&d.hyper)),
+                ("rows", rows_to_json(&d.rows, &d.extras)),
+            ];
+            match (&d.factor, *quantised) {
+                (Some(f), true) => {
+                    let (q, r) = factor_quantise(f);
+                    pairs.push(("factor_q", q.as_str().into()));
+                    pairs.push(("factor_r", r.as_str().into()));
+                }
+                (Some(f), false) => pairs.push(("factor", Json::from_f64s(f))),
+                (None, _) => pairs.push(("factor", Json::Null)),
+            }
+            pairs.push(("leases", points_to_json(&d.leases, "lie")));
+            if *pending > 0 {
+                pairs.push(("pending", (*pending).into()));
+            }
+            Json::obj(pairs).to_string()
+        }
         SurrogateResponse::Lease { id } => Json::obj(vec![
             ("type", "lease".into()),
             ("id", (*id as i64).into()),
@@ -505,21 +662,42 @@ pub fn decode_surrogate_response(line: &str) -> Result<SurrogateResponse, String
                 .try_into()
                 .map_err(|_| "version out of range".to_string())?,
         }),
+        Some("hello-err") => Ok(SurrogateResponse::HelloErr {
+            reason: j.get("reason").and_then(Json::as_str).unwrap_or("").to_string(),
+        }),
         Some("factor-delta") => {
-            let factor = match j.get("factor") {
-                None | Some(Json::Null) => None,
-                Some(v) => Some(f64_vec(v)?),
+            let (factor, quantised) = match (j.get("factor_q"), j.get("factor")) {
+                (Some(q), _) => {
+                    let q = q.as_str().ok_or("'factor_q' must be a hex string")?;
+                    let r = j
+                        .get("factor_r")
+                        .and_then(Json::as_str)
+                        .ok_or("'factor_q' without a 'factor_r' residual string")?;
+                    (Some(factor_dequantise(q, r)?), true)
+                }
+                (None, None | Some(Json::Null)) => (None, false),
+                (None, Some(v)) => (Some(f64_vec(v)?), false),
             };
             let (rows, extras) = rows_from_json(j.req("rows").map_err(|e| e.to_string())?)?;
-            Ok(SurrogateResponse::FactorDelta(SurrogateDelta {
-                from_n: req_usize(&j, "from_n")?,
-                total_n: req_usize(&j, "total_n")?,
-                hyper: hyper_from_json(j.req("hyper").map_err(|e| e.to_string())?)?,
-                rows,
-                extras,
-                factor,
-                leases: points_from_json(j.req("leases").map_err(|e| e.to_string())?, "lie")?,
-            }))
+            Ok(SurrogateResponse::FactorDelta {
+                delta: SurrogateDelta {
+                    from_n: req_usize(&j, "from_n")?,
+                    total_n: req_usize(&j, "total_n")?,
+                    hyper: hyper_from_json(j.req("hyper").map_err(|e| e.to_string())?)?,
+                    rows,
+                    extras,
+                    factor,
+                    leases: points_from_json(
+                        j.req("leases").map_err(|e| e.to_string())?,
+                        "lie",
+                    )?,
+                },
+                pending: match j.get("pending") {
+                    None | Some(Json::Null) => 0,
+                    Some(_) => req_usize(&j, "pending")?,
+                },
+                quantised,
+            })
         }
         Some("lease") => Ok(SurrogateResponse::Lease { id: req_u64(&j, "id")? }),
         Some("lease-ok") => Ok(SurrogateResponse::LeaseOk { id: req_u64(&j, "id")? }),
@@ -612,14 +790,31 @@ mod tests {
     fn surrogate_request_round_trip() {
         let hyper = GpHyper { lengthscale: 0.35, max_history: 32, ..GpHyper::default() };
         for req in [
-            SurrogateRequest::Hello { version: PROTOCOL_VERSION },
+            SurrogateRequest::Hello {
+                version: PROTOCOL_VERSION,
+                fingerprint: None,
+                dim: None,
+            },
+            SurrogateRequest::Hello {
+                version: PROTOCOL_VERSION,
+                fingerprint: Some(space().fingerprint()),
+                dim: Some(space().dim()),
+            },
+            // A fingerprint with the high bit set: JSON numbers are f64s,
+            // so this only survives because it rides as a hex string.
+            SurrogateRequest::Hello {
+                version: PROTOCOL_VERSION,
+                fingerprint: Some(0xdead_beef_0000_0001),
+                dim: Some(3),
+            },
             SurrogateRequest::TellObs { x: vec![0.25, 0.5, 1.0], y: -3.125, ys: Vec::new() },
             SurrogateRequest::TellObs {
                 x: vec![0.25, 0.5],
                 y: 2.0,
                 ys: vec![-1.5, 0.625],
             },
-            SurrogateRequest::SyncFactor { from_n: 17 },
+            SurrogateRequest::SyncFactor { from_n: 17, max_rows: None, quantise: false },
+            SurrogateRequest::SyncFactor { from_n: 0, max_rows: Some(64), quantise: true },
             SurrogateRequest::AskLease { points: vec![(vec![0.1, 0.9], 0.0)] },
             SurrogateRequest::AskLease { points: Vec::new() },
             SurrogateRequest::RetractLease { id: 41 },
@@ -643,8 +838,24 @@ mod tests {
         };
         for resp in [
             SurrogateResponse::HelloOk { version: PROTOCOL_VERSION },
-            SurrogateResponse::FactorDelta(delta.clone()),
-            SurrogateResponse::FactorDelta(SurrogateDelta { factor: None, ..delta }),
+            SurrogateResponse::HelloErr {
+                reason: "space 0123456789abcdef: dimension 3 != served 5".into(),
+            },
+            SurrogateResponse::FactorDelta {
+                delta: delta.clone(),
+                pending: 0,
+                quantised: false,
+            },
+            SurrogateResponse::FactorDelta {
+                delta: delta.clone(),
+                pending: 9,
+                quantised: true,
+            },
+            SurrogateResponse::FactorDelta {
+                delta: SurrogateDelta { factor: None, ..delta },
+                pending: 0,
+                quantised: false,
+            },
             SurrogateResponse::Lease { id: 7 },
             SurrogateResponse::LeaseOk { id: 7 },
             SurrogateResponse::HyperOk,
@@ -653,6 +864,58 @@ mod tests {
             let line = encode_surrogate_response(&resp);
             assert_eq!(decode_surrogate_response(&line).unwrap(), resp, "line: {line}");
         }
+    }
+
+    #[test]
+    fn prop_quantised_factor_is_bit_identical_and_smaller() {
+        // The quantised encoding must reassemble every f64 bit pattern —
+        // including specials quantisation mangles — and beat the decimal
+        // array on realistic (f32-magnitude) factor suffixes.
+        prop::check("quantised factor codec", 50, |rng| {
+            let mut factor: Vec<f64> = (0..64)
+                .map(|_| (rng.f64() - 0.5) * 10f64.powi(rng.range_i64(-6, 6) as i32))
+                .collect();
+            factor.extend([0.0, -0.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 5e-324]);
+            let (q, r) = factor_quantise(&factor);
+            let back = factor_dequantise(&q, &r).unwrap();
+            assert_eq!(back.len(), factor.len());
+            for (a, b) in factor.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} re-decoded as {b}");
+            }
+            let decimal = Json::from_f64s(&factor).to_string().len();
+            assert!(
+                q.len() + r.len() < decimal,
+                "quantised {} + {} bytes vs decimal {decimal}",
+                q.len(),
+                r.len()
+            );
+        });
+        assert_eq!(factor_dequantise("", "").unwrap(), Vec::<f64>::new());
+        assert!(factor_dequantise("0123456", "0").is_err(), "truncated factor_q");
+        assert!(factor_dequantise("3f800000", "0.0").is_err(), "residual count mismatch");
+        assert!(factor_dequantise("3f80000g", "0").is_err(), "non-hex factor_q");
+    }
+
+    #[test]
+    fn pending_zero_is_omitted_and_defaults() {
+        // Canonical form: pre-v4 daemons never write "pending", and a v4
+        // daemon with nothing left matches them byte-for-byte.
+        let resp = SurrogateResponse::FactorDelta {
+            delta: SurrogateDelta {
+                from_n: 0,
+                total_n: 0,
+                hyper: GpHyper::default(),
+                rows: Vec::new(),
+                extras: Vec::new(),
+                factor: None,
+                leases: Vec::new(),
+            },
+            pending: 0,
+            quantised: false,
+        };
+        let line = encode_surrogate_response(&resp);
+        assert!(!line.contains("pending"), "line: {line}");
+        assert_eq!(decode_surrogate_response(&line).unwrap(), resp);
     }
 
     #[test]
@@ -685,6 +948,31 @@ mod tests {
                 .is_err(),
             "a non-numeric column is a producer bug, not a NaN"
         );
+        assert!(
+            decode_surrogate_request(r#"{"type":"hello","version":4,"space":"xyz"}"#).is_err(),
+            "a malformed fingerprint must be refused, not bound to a space"
+        );
+        assert!(
+            decode_surrogate_request(r#"{"type":"hello","version":4,"space":"00000000000000001"}"#)
+                .is_err(),
+            "a 17-digit fingerprint is not a u64"
+        );
+        assert!(decode_surrogate_request(
+            r#"{"type":"sync-factor","from_n":0,"quantise":"yes"}"#
+        )
+        .is_err());
+        assert!(
+            decode_surrogate_response(
+                r#"{"type":"factor-delta","from_n":0,"total_n":0,
+                    "hyper":{"lengthscale":0.2,"signal_var":1.0,"noise_var":0.001,
+                             "kernel":"rbf"},
+                    "rows":[],"factor_q":"3f800000","leases":[]}"#
+                    .replace('\n', "")
+                    .as_str()
+            )
+            .is_err(),
+            "factor_q without factor_r must be refused"
+        );
     }
 
     #[test]
@@ -711,22 +999,35 @@ mod tests {
 
     #[test]
     fn v2_lines_still_decode_single_objective() {
-        // A v2 peer never writes "ys": the v3 decoder must accept its
+        // A v2 peer never writes "ys": the v3+ decoder must accept its
         // lines unchanged (empty extras everywhere).
         match decode_surrogate_request(r#"{"type":"tell-obs","x":[0.5,0.25],"y":1.5}"#).unwrap()
         {
             SurrogateRequest::TellObs { ys, .. } => assert!(ys.is_empty()),
             other => panic!("unexpected {other:?}"),
         }
+        // Nor does it write "space"/"dim" on hello or "max_rows" /
+        // "quantise" on sync-factor: those decode to the single-space,
+        // full-transfer defaults.
+        assert_eq!(
+            decode_surrogate_request(r#"{"type":"hello","version":2}"#).unwrap(),
+            SurrogateRequest::Hello { version: 2, fingerprint: None, dim: None }
+        );
+        assert_eq!(
+            decode_surrogate_request(r#"{"type":"sync-factor","from_n":3}"#).unwrap(),
+            SurrogateRequest::SyncFactor { from_n: 3, max_rows: None, quantise: false }
+        );
         let line = r#"{"type":"factor-delta","from_n":0,"total_n":1,
             "hyper":{"lengthscale":0.2,"signal_var":1.0,"noise_var":0.001,
                      "kernel":"rbf","max_history":64},
             "rows":[{"x":[0.5,0.5],"y":2.0}],"factor":null,"leases":[]}"#
             .replace('\n', "");
         match decode_surrogate_response(&line).unwrap() {
-            SurrogateResponse::FactorDelta(d) => {
+            SurrogateResponse::FactorDelta { delta: d, pending, quantised } => {
                 assert_eq!(d.rows.len(), 1);
                 assert!(d.extras.is_empty(), "v2 delta decodes with no extras");
+                assert_eq!(pending, 0, "no 'pending' key means nothing left");
+                assert!(!quantised);
             }
             other => panic!("unexpected {other:?}"),
         }

@@ -485,6 +485,11 @@ impl SessionGroup {
     ) -> Result<SessionGroup> {
         let mut group = SessionGroup::new();
         for (i, &seed) in seeds.iter().enumerate() {
+            // Deliberately the un-fingerprinted attach: every session in
+            // the group conditions the daemon's *default* space, whatever
+            // model it tunes — the pre-v4 contract this helper has always
+            // had. Use `RemoteSurrogate::connect_space` directly to target
+            // a per-space factor on a fleet daemon.
             let handle = RemoteSurrogate::connect(surrogate_addr)?;
             let tuner = Box::new(BayesOpt::new(space.clone(), seed).with_shared_surrogate(handle));
             group.push(TuningSession::new(tuner, make_pool(i), budget.clone()));

@@ -93,6 +93,23 @@ impl SearchSpace {
         self.params.iter().map(|p| p.n_values() as u128).product()
     }
 
+    /// Stable fingerprint of this space's *shape*: FNV-1a 64 over every
+    /// parameter's name, range and step, in declaration order. Two
+    /// processes built from the same parameter table — any build, any
+    /// machine — produce the same value; any rename, reorder, re-range or
+    /// re-step changes it. The protocol-v4 `hello` carries this so one
+    /// surrogate daemon can key an independent factor per search space
+    /// and reject tuners aimed at the wrong one (see `server/proto.rs`).
+    pub fn fingerprint(&self) -> u64 {
+        let mut canon = String::new();
+        for p in &self.params {
+            canon.push_str(&p.name);
+            canon.push('\0');
+            canon.push_str(&format!("{}\0{}\0{}\n", p.min, p.max, p.step));
+        }
+        crate::util::fnv1a64(canon.as_bytes())
+    }
+
     pub fn param(&self, name: &str) -> Option<&ParamDef> {
         self.params.iter().find(|p| p.name == name)
     }

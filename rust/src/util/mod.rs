@@ -14,3 +14,16 @@ pub mod stats;
 
 pub use json::Json;
 pub use rng::Rng;
+
+/// FNV-1a 64-bit — cheap, dependency-free stable hash. Used both as the
+/// snapshot corruption check and as the search-space fingerprint carried
+/// in the protocol-v4 `hello` (this guards against torn writes and
+/// misconfigured tuners, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x1_0000_01b3);
+    }
+    hash
+}

@@ -1,0 +1,606 @@
+//! The fleet service contract (protocol v4), pinned over real loopback
+//! TCP — one daemon, many search spaces:
+//!
+//! 1. One daemon concurrently serves three distinct spaces: interleaved
+//!    tells from two replicas per space land in the right factor, and
+//!    each space's posterior matches a serial private model fed the same
+//!    canonical order within 1e-9 — the multi-space analogue of
+//!    `tests/surrogate_service.rs`.
+//! 2. Wrong-space hellos get the *typed* `hello-err` (fleet at
+//!    `--max-spaces`, dimension mismatch, missing `dim`), surfaced as
+//!    `Err` from [`RemoteSurrogate::connect_space`] — and none of the
+//!    refusals poison the siblings that keep serving.
+//! 3. Chunked and quantised catch-up (`sync-factor` `max_rows` /
+//!    `quantise`): measured bytes bounded below the full transfer while
+//!    the imported factor stays bit-identical.
+//! 4. Idle eviction: an unbound space is snapshotted into its
+//!    `space-<16 hex>/` namespace and dropped; a re-hello restores it
+//!    bit-identically from disk.
+//! 5. Chaos drill: kill a durable fleet daemon with three active spaces
+//!    mid-campaign, restart it on the same port, and every space boots
+//!    bit-identically while the in-flight replicas redial into the
+//!    *right* spaces through the existing backoff.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use tftune::gp::{
+    GpHyper, IncrementalGp, RemoteSurrogate, ScoreWorkspace, SharedSurrogate, SurrogateDelta,
+    SurrogateHandle,
+};
+use tftune::persist::{list_snapshots, space_dir};
+use tftune::server::proto::{
+    decode_surrogate_response, encode_surrogate_request, SurrogateRequest, SurrogateResponse,
+    PROTOCOL_VERSION,
+};
+use tftune::server::{FleetOptions, TargetServer};
+use tftune::space::{threading_space, ParamDef, SearchSpace};
+use tftune::util::linalg::packed_len;
+use tftune::util::Rng;
+
+fn fleet_daemon(
+    opts: FleetOptions,
+) -> (SocketAddr, std::thread::JoinHandle<anyhow::Result<usize>>, SharedSurrogate) {
+    let (server, factor) =
+        TargetServer::bind_surrogate_only("127.0.0.1:0", GpHyper::default()).unwrap();
+    let server = server.with_fleet_options(opts).unwrap();
+    let (addr, handle) = server.spawn().unwrap();
+    (addr, handle, factor)
+}
+
+fn shutdown_daemon(addr: SocketAddr) {
+    use tftune::server::proto::{encode_request, Request};
+    let space = threading_space(64, 1024, 64);
+    if let Ok(mut s) = TcpStream::connect(addr) {
+        let _ = writeln!(s, "{}", encode_request(&Request::Shutdown, &space));
+    }
+}
+
+/// A search space per parameter-name set: distinct names give distinct
+/// fingerprints, and the name count is the dimension.
+fn space_of(names: &[&str]) -> SearchSpace {
+    SearchSpace::new(names.iter().map(|n| ParamDef::new(n, 1, 32, 1)).collect())
+}
+
+fn toy_obs(rng: &mut Rng, n: usize, d: usize) -> Vec<(Vec<f64>, f64)> {
+    (0..n)
+        .map(|_| {
+            let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+            let y = (3.0 * x[0]).sin() - 0.5 * x[d - 1];
+            (x, y)
+        })
+        .collect()
+}
+
+fn obs_key(x: &[f64], y: f64) -> (Vec<u64>, u64) {
+    (x.iter().map(|v| v.to_bits()).collect(), y.to_bits())
+}
+
+fn factor_bits(delta: &SurrogateDelta) -> Vec<u64> {
+    delta.factor.as_ref().expect("factor present").iter().map(|v| v.to_bits()).collect()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tftune_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// A raw protocol-v4 client: hand-rolled lines over its own connection,
+/// for byte measurement and for requests the replica API never sends.
+struct Raw {
+    s: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Raw {
+    fn connect(addr: SocketAddr) -> Raw {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        let r = BufReader::new(s.try_clone().unwrap());
+        Raw { s, r }
+    }
+
+    fn roundtrip_line(&mut self, req: &SurrogateRequest) -> String {
+        writeln!(self.s, "{}", encode_surrogate_request(req)).unwrap();
+        let mut line = String::new();
+        self.r.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "daemon hung up mid-request");
+        line.trim_end().to_string()
+    }
+
+    fn roundtrip(&mut self, req: &SurrogateRequest) -> SurrogateResponse {
+        let line = self.roundtrip_line(req);
+        decode_surrogate_response(&line).unwrap()
+    }
+
+    fn hello(&mut self, space: &SearchSpace) {
+        match self.roundtrip(&SurrogateRequest::Hello {
+            version: PROTOCOL_VERSION,
+            fingerprint: Some(space.fingerprint()),
+            dim: Some(space.dim()),
+        }) {
+            SurrogateResponse::HelloOk { version } => assert_eq!(version, PROTOCOL_VERSION),
+            other => panic!("fingerprinted hello refused: {other:?}"),
+        }
+    }
+
+    /// One full un-chunked, un-quantised sync; returns the delta and the
+    /// raw line (the byte-count baseline).
+    fn sync_full(&mut self) -> (SurrogateDelta, String) {
+        let line = self.roundtrip_line(&SurrogateRequest::SyncFactor {
+            from_n: 0,
+            max_rows: None,
+            quantise: false,
+        });
+        match decode_surrogate_response(&line).unwrap() {
+            SurrogateResponse::FactorDelta { delta, pending, quantised } => {
+                assert_eq!(pending, 0, "an unbounded sync is never chunked");
+                assert!(!quantised);
+                (delta, line)
+            }
+            other => panic!("unexpected sync response: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn one_daemon_serves_three_spaces_with_per_space_parity() {
+    let (addr, handle, default_factor) = fleet_daemon(FleetOptions::default());
+    let addr_s = addr.to_string();
+
+    let spaces = [
+        space_of(&["a0", "a1"]),
+        space_of(&["b0", "b1", "b2"]),
+        space_of(&["c0", "c1", "c2", "c3"]),
+    ];
+    let mut rng = Rng::new(811);
+    let per_space: Vec<Vec<(Vec<f64>, f64)>> = spaces
+        .iter()
+        .enumerate()
+        .map(|(k, sp)| toy_obs(&mut rng, 16 + 4 * k, sp.dim()))
+        .collect();
+
+    // Two replicas per space tell interleaved halves concurrently: six
+    // connections, three independent factors, one daemon. Each thread's
+    // final guard drop performs a sync round trip, which (TCP ordering)
+    // proves the daemon absorbed that connection's tells.
+    std::thread::scope(|scope| {
+        for (sp, obs) in spaces.iter().zip(&per_space) {
+            for half in 0..2 {
+                let addr = addr_s.clone();
+                let chunk: Vec<_> = obs.iter().skip(half).step_by(2).cloned().collect();
+                scope.spawn(move || {
+                    let replica = RemoteSurrogate::connect_space(&addr, sp).unwrap();
+                    for (x, y) in &chunk {
+                        replica.tell(x.clone(), *y);
+                    }
+                    drop(replica.lock());
+                });
+            }
+        }
+    });
+
+    for (sp, obs) in spaces.iter().zip(&per_space) {
+        let reader = RemoteSurrogate::connect_space(&addr_s, sp).unwrap();
+        let mut g = reader.lock();
+        let n = obs.len();
+        assert_eq!(g.len(), n, "space {:016x} lost a tell", sp.fingerprint());
+
+        // The mirrored store is a permutation of exactly this space's
+        // told set — no foreign rows, bit-exact across the wire.
+        let mut got: Vec<_> = (0..n).map(|i| obs_key(g.x(i), g.y(i))).collect();
+        let mut want: Vec<_> = obs.iter().map(|(x, y)| obs_key(x, *y)).collect();
+        got.sort();
+        want.sort();
+        assert_eq!(got, want, "space {:016x} mirrored a foreign row", sp.fingerprint());
+
+        // Posterior parity ≤1e-9 against a serial private model fed the
+        // same canonical (service-side) observation order.
+        let mut cand_rng = Rng::new(97 + sp.dim() as u64);
+        let m = 6usize;
+        let cand: Vec<f64> = (0..m * sp.dim()).map(|_| cand_rng.f64()).collect();
+        let idx = g.conditioning_set();
+        assert_eq!(idx.len(), n);
+        assert!(g.sync(&idx));
+        let y_canon: Vec<f64> = (0..n).map(|i| g.y(i)).collect();
+        g.set_targets(&y_canon);
+        let mut ws = ScoreWorkspace::default();
+        g.score_into(&cand, m, 1.5, 0.3, &mut ws);
+
+        let mut private = IncrementalGp::new(GpHyper::default());
+        for i in 0..n {
+            assert!(private.push(g.x(i), g.y(i)));
+        }
+        private.set_targets(&y_canon);
+        let mut ws_ref = ScoreWorkspace::default();
+        private.score_into(&cand, m, 1.5, 0.3, &mut ws_ref);
+
+        for j in 0..m {
+            assert!(
+                (ws.mean[j] - ws_ref.mean[j]).abs() <= 1e-9,
+                "space {:016x} mean diverged: {} vs {}",
+                sp.fingerprint(),
+                ws.mean[j],
+                ws_ref.mean[j]
+            );
+            assert!(
+                (ws.std[j] - ws_ref.std[j]).abs() <= 1e-9,
+                "space {:016x} std diverged: {} vs {}",
+                sp.fingerprint(),
+                ws.std[j],
+                ws_ref.std[j]
+            );
+        }
+    }
+
+    // Spaces share nothing: the default space never saw a row.
+    assert_eq!(default_factor.len(), 0, "a fingerprinted tell leaked into the default space");
+
+    shutdown_daemon(addr);
+    let _ = handle.join();
+}
+
+#[test]
+fn wrong_space_hello_is_refused_and_siblings_keep_serving() {
+    let (addr, handle, _factor) =
+        fleet_daemon(FleetOptions { max_spaces: 2, ..FleetOptions::default() });
+    let addr_s = addr.to_string();
+    let a = space_of(&["a0", "a1"]);
+    let b = space_of(&["b0", "b1", "b2"]);
+
+    // Slot 2 of 2: space A joins the fleet next to the default space.
+    let ra = RemoteSurrogate::connect_space(&addr_s, &a).unwrap();
+    ra.tell(vec![0.25, 0.75], 1.0);
+    drop(ra.lock());
+
+    // The fleet is full: space B gets the typed refusal, surfaced as Err
+    // by connect_space — connecting was the mistake, not a transport
+    // failure, so there is nothing to retry.
+    let err = RemoteSurrogate::connect_space(&addr_s, &b).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("refused this search space"), "{msg}");
+    assert!(msg.contains("fleet is at --max-spaces 2"), "{msg}");
+
+    // A fingerprinted hello for an unknown space without "dim" is
+    // refused too: the fleet cannot build a store of unknown dimension.
+    let mut raw = Raw::connect(addr);
+    match raw.roundtrip(&SurrogateRequest::Hello {
+        version: PROTOCOL_VERSION,
+        fingerprint: Some(0x5eed_0000_dead_0001),
+        dim: None,
+    }) {
+        SurrogateResponse::HelloErr { reason } => {
+            assert!(reason.contains("must declare \"dim\""), "{reason}")
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // Space A's fingerprint under the wrong dimension: a mismatched
+    // client build (or a fingerprint collision), typed refusal.
+    match raw.roundtrip(&SurrogateRequest::Hello {
+        version: PROTOCOL_VERSION,
+        fingerprint: Some(a.fingerprint()),
+        dim: Some(7),
+    }) {
+        SurrogateResponse::HelloErr { reason } => {
+            assert!(
+                reason.contains("declared dimension 7 != served dimension 2"),
+                "{reason}"
+            );
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    drop(raw);
+
+    // None of the refusals poisoned anything: space A keeps serving on
+    // its live connection, a fresh hello into A succeeds, and the
+    // default space still answers legacy (un-fingerprinted) peers.
+    ra.tell(vec![0.5, 0.5], 2.0);
+    assert_eq!(ra.lock().len(), 2, "space A stalled after sibling refusals");
+    let ra2 = RemoteSurrogate::connect_space(&addr_s, &a).unwrap();
+    assert_eq!(ra2.lock().len(), 2);
+    let legacy = RemoteSurrogate::connect(&addr_s).unwrap();
+    assert_eq!(legacy.lock().len(), 0, "the default space absorbed a foreign row");
+
+    drop(ra);
+    drop(ra2);
+    drop(legacy);
+    shutdown_daemon(addr);
+    let _ = handle.join();
+}
+
+#[test]
+fn chunked_and_quantised_catchup_cut_bytes_and_keep_bit_parity() {
+    let (addr, handle, authority) = fleet_daemon(FleetOptions::default());
+    let addr_s = addr.to_string();
+    let (n, d, k) = (48usize, 5usize, 16usize);
+
+    // A replica that will catch up in quantised 16-row chunks connects
+    // while the factor is still empty (its initial sync is trivially
+    // complete), so the whole store arrives through the chunk loop.
+    let replica = RemoteSurrogate::connect(&addr_s).unwrap().with_catchup(Some(k), true);
+
+    let mut rng = Rng::new(1337);
+    let obs = toy_obs(&mut rng, n, d);
+    for (x, y) in &obs {
+        authority.tell(x.clone(), *y);
+    }
+    drop(authority.lock()); // drain: the served store is now at n rows
+
+    // Byte-count baseline: one full un-quantised transfer.
+    let mut raw = Raw::connect(addr);
+    let (full, full_line) = raw.sync_full();
+    assert_eq!(full.total_n, n);
+    let bits = factor_bits(&full);
+    assert_eq!(bits.len(), packed_len(n));
+
+    // Quantised full transfer: measurably smaller, decodes bit-identical
+    // (the acceptance criterion: compressed catch-up < full transfer).
+    let quant_line = raw.roundtrip_line(&SurrogateRequest::SyncFactor {
+        from_n: 0,
+        max_rows: None,
+        quantise: true,
+    });
+    assert!(
+        quant_line.len() < full_line.len(),
+        "quantised sync ({} bytes) is not smaller than the plain one ({} bytes)",
+        quant_line.len(),
+        full_line.len()
+    );
+    match decode_surrogate_response(&quant_line).unwrap() {
+        SurrogateResponse::FactorDelta { delta, pending, quantised } => {
+            assert_eq!(pending, 0);
+            assert!(quantised, "the daemon ignored the quantise knob");
+            assert_eq!(factor_bits(&delta), bits, "quantised decode is not bit-identical");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // Chunked + quantised catch-up from zero: every chunk line is
+    // bounded well below the full transfer, the pending counts walk
+    // down, and the chunks reassemble the factor bit-identically through
+    // the same import path a replica uses.
+    let mirror = SharedSurrogate::new(GpHyper::default());
+    let mut chunk_bytes = 0usize;
+    let mut pendings = Vec::new();
+    loop {
+        let line = raw.roundtrip_line(&SurrogateRequest::SyncFactor {
+            from_n: mirror.len(),
+            max_rows: Some(k),
+            quantise: true,
+        });
+        chunk_bytes += line.len();
+        assert!(
+            line.len() < full_line.len(),
+            "chunk ({} bytes) is not bounded below the full transfer ({} bytes)",
+            line.len(),
+            full_line.len()
+        );
+        match decode_surrogate_response(&line).unwrap() {
+            SurrogateResponse::FactorDelta { delta, pending, quantised } => {
+                assert!(quantised);
+                assert!(mirror.import_delta(&delta), "chunk import rejected");
+                pendings.push(pending);
+                if pending == 0 {
+                    break;
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(pendings, vec![n - k, n - 2 * k, 0], "chunk cadence");
+    assert_eq!(mirror.len(), n);
+    let mirror_delta = mirror.export_delta(0).unwrap();
+    assert_eq!(factor_bits(&mirror_delta), bits, "chunked reassembly is not bit-identical");
+    for (i, (x, y)) in obs_key_rows(&full).iter().enumerate() {
+        assert_eq!(
+            (x.clone(), *y),
+            obs_key(&mirror_delta.rows[i].0, mirror_delta.rows[i].1),
+            "row {i} diverged across the chunked transfer"
+        );
+    }
+    // Quantisation savings beat the per-chunk envelope overhead: the
+    // whole chunked+quantised catch-up still costs fewer bytes than one
+    // plain full transfer.
+    assert!(
+        chunk_bytes < full_line.len(),
+        "chunked+quantised catch-up ({chunk_bytes} bytes) exceeds the full transfer ({} bytes)",
+        full_line.len()
+    );
+    drop(raw);
+
+    // The replica-level chunk loop: one lock() drives sync() through all
+    // three chunks and the posterior lands bit-identical to the
+    // authority's.
+    let mut cand_rng = Rng::new(1338);
+    let cand: Vec<f64> = (0..4 * d).map(|_| cand_rng.f64()).collect();
+    let (mut wa, mut wb) = (ScoreWorkspace::default(), ScoreWorkspace::default());
+    {
+        let mut ga = authority.lock();
+        let idx = ga.conditioning_set();
+        assert!(ga.sync(&idx));
+        let y: Vec<f64> = idx.iter().map(|&i| ga.y(i)).collect();
+        ga.set_targets(&y);
+        ga.score_into(&cand, 4, 1.5, 0.0, &mut wa);
+    }
+    {
+        let mut gr = replica.lock();
+        assert_eq!(gr.len(), n, "replica chunk loop stopped early");
+        let idx = gr.conditioning_set();
+        assert!(gr.sync(&idx));
+        let y: Vec<f64> = idx.iter().map(|&i| gr.y(i)).collect();
+        gr.set_targets(&y);
+        gr.score_into(&cand, 4, 1.5, 0.0, &mut wb);
+    }
+    for j in 0..4 {
+        assert_eq!(wa.mean[j].to_bits(), wb.mean[j].to_bits(), "mean bits diverged");
+        assert_eq!(wa.std[j].to_bits(), wb.std[j].to_bits(), "std bits diverged");
+    }
+
+    drop(replica);
+    shutdown_daemon(addr);
+    let _ = handle.join();
+}
+
+fn obs_key_rows(delta: &SurrogateDelta) -> Vec<(Vec<u64>, u64)> {
+    delta.rows.iter().map(|(x, y)| obs_key(x, *y)).collect()
+}
+
+#[test]
+fn idle_spaces_evict_to_disk_and_a_re_hello_restores_bit_identically() {
+    let root = tmp_dir("fleet_evict");
+    let (addr, handle, _factor) = fleet_daemon(FleetOptions {
+        idle_ttl: Some(Duration::from_millis(60)),
+        state_dir: Some(root.clone()),
+        ..FleetOptions::default()
+    });
+    let addr_s = addr.to_string();
+    let a = space_of(&["e0", "e1", "e2"]);
+
+    let mut rng = Rng::new(271);
+    let obs = toy_obs(&mut rng, 12, a.dim());
+    let ra = RemoteSurrogate::connect_space(&addr_s, &a).unwrap();
+    for (x, y) in &obs {
+        ra.tell(x.clone(), *y);
+    }
+    drop(ra.lock());
+
+    // Capture the authority factor while the space is still bound.
+    let bits_before = {
+        let mut raw = Raw::connect(addr);
+        raw.hello(&a);
+        let (d, _) = raw.sync_full();
+        assert_eq!(d.total_n, obs.len());
+        factor_bits(&d)
+    };
+    drop(ra); // last binder gone: the idle clock starts
+
+    // Eviction observable: the sweeper snapshots the space into its
+    // namespace before dropping it from memory.
+    let dir = space_dir(&root, a.fingerprint());
+    let mut snapped = false;
+    for _ in 0..2000 {
+        if !list_snapshots(&dir).unwrap().is_empty() {
+            snapped = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(snapped, "idle space was never evicted (no snapshot in {})", dir.display());
+
+    // A re-hello lazily recovers the evicted space from its namespace —
+    // same rows, same packed factor, bit for bit.
+    let mut raw = Raw::connect(addr);
+    raw.hello(&a);
+    let (d, _) = raw.sync_full();
+    assert_eq!(d.total_n, obs.len(), "recovered space lost rows");
+    assert_eq!(factor_bits(&d), bits_before, "recovered factor is not bit-identical");
+    drop(raw);
+
+    shutdown_daemon(addr);
+    let _ = handle.join();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn chaos_drill_killed_fleet_recovers_and_replicas_redial_into_their_spaces() {
+    let root = tmp_dir("fleet_chaos");
+    let (addr, handle, _f1) =
+        fleet_daemon(FleetOptions { state_dir: Some(root.clone()), ..FleetOptions::default() });
+    let addr_s = addr.to_string();
+    let spaces = [
+        space_of(&["k0", "k1"]),
+        space_of(&["m0", "m1", "m2"]),
+        space_of(&["p0", "p1", "p2", "p3"]),
+    ];
+    let mut rng = Rng::new(4242);
+
+    // Three active spaces, one in-flight replica each (generous redial
+    // budget: the drill's whole point is surviving the restart).
+    let replicas: Vec<RemoteSurrogate> = spaces
+        .iter()
+        .map(|sp| {
+            RemoteSurrogate::connect_space(&addr_s, sp)
+                .unwrap()
+                .with_reconnect(20, Duration::from_millis(10))
+        })
+        .collect();
+    let mut per_space = Vec::new();
+    for (sp, r) in spaces.iter().zip(&replicas) {
+        let obs = toy_obs(&mut rng, 6 + sp.dim(), sp.dim());
+        for (x, y) in &obs {
+            r.tell(x.clone(), *y);
+        }
+        drop(r.lock());
+        per_space.push(obs);
+    }
+    let bits_before: Vec<Vec<u64>> = spaces
+        .iter()
+        .map(|sp| {
+            let mut raw = Raw::connect(addr);
+            raw.hello(sp);
+            let (d, _) = raw.sync_full();
+            factor_bits(&d)
+        })
+        .collect();
+
+    // Kill the daemon mid-campaign. Severing each replica's wire stands
+    // in for the daemon's sockets dying with its process (in-process the
+    // handler threads would otherwise keep the port alive); the replicas
+    // themselves stay live, exactly like tuner processes outliving a
+    // crashed daemon.
+    for r in &replicas {
+        r.sever();
+    }
+    shutdown_daemon(addr);
+    let _ = handle.join();
+
+    // Restart on the same port against the same state dir: boot
+    // recovery brings the whole fleet back before the first hello.
+    let (server2, _f2) = TargetServer::bind_surrogate_only(&addr_s, GpHyper::default()).unwrap();
+    let server2 = server2
+        .with_fleet_options(FleetOptions {
+            state_dir: Some(root.clone()),
+            ..FleetOptions::default()
+        })
+        .unwrap();
+    let (_, handle2) = server2.spawn().unwrap();
+
+    // Every space recovered bit-identically — rows and packed factor.
+    for (sp, bits) in spaces.iter().zip(&bits_before) {
+        let mut raw = Raw::connect(addr);
+        raw.hello(sp);
+        let (d, _) = raw.sync_full();
+        assert_eq!(
+            &factor_bits(&d),
+            bits,
+            "space {:016x} did not recover bit-identically",
+            sp.fingerprint()
+        );
+    }
+
+    // The in-flight replicas redial through the existing backoff and
+    // land on the *right* spaces: a new row told on the dim-2 replica
+    // reaches space 0 and only space 0.
+    replicas[0].tell(vec![0.5, 0.5], 9.0);
+    assert_eq!(
+        replicas[0].lock().len(),
+        per_space[0].len() + 1,
+        "replica 0 did not catch up after its redial"
+    );
+    assert_eq!(replicas[1].lock().len(), per_space[1].len(), "replica 1 caught a foreign row");
+    assert_eq!(replicas[2].lock().len(), per_space[2].len(), "replica 2 caught a foreign row");
+    {
+        let mut raw = Raw::connect(addr);
+        raw.hello(&spaces[0]);
+        let (d, _) = raw.sync_full();
+        assert_eq!(d.total_n, per_space[0].len() + 1, "the post-restart tell was lost");
+    }
+
+    drop(replicas);
+    shutdown_daemon(addr);
+    let _ = handle2.join();
+    std::fs::remove_dir_all(&root).ok();
+}

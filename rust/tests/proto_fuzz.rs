@@ -1,0 +1,364 @@
+//! Protocol fuzz: a live fleet daemon fed hundreds of malformed frames
+//! — truncated lines, wrong handshake versions, mangled fingerprints,
+//! non-finite floats, wrong-dimension and oversized tells, nonsense
+//! knob values — from a seeded in-tree [`Rng`].
+//!
+//! The contract under test is the *blast radius*: every bad frame is a
+//! per-connection problem (an `error`/`hello-err` response, or a
+//! silently dropped fire-and-forget tell), never a daemon crash and
+//! never a corrupted sibling space. After the storm, a baseline space's
+//! factor must be bit-identical to its pre-fuzz state and a well-formed
+//! client must get normal service.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use tftune::gp::{GpHyper, RemoteSurrogate, SurrogateDelta, SurrogateHandle};
+use tftune::server::proto::{
+    decode_surrogate_response, encode_surrogate_request, SurrogateRequest, SurrogateResponse,
+    PROTOCOL_VERSION,
+};
+use tftune::server::{FleetOptions, TargetServer};
+use tftune::space::{threading_space, ParamDef, SearchSpace};
+use tftune::util::Rng;
+
+/// How long a fuzz connection waits for a response line. Generous: the
+/// daemon answers malformed frames immediately, so a timeout here means
+/// the test lost a response it was owed, which is itself a failure.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn baseline_space() -> SearchSpace {
+    SearchSpace::new(vec![
+        ParamDef::new("h0", 1, 32, 1),
+        ParamDef::new("h1", 1, 32, 1),
+        ParamDef::new("h2", 1, 32, 1),
+    ])
+}
+
+struct Fuzz {
+    s: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Fuzz {
+    fn connect(addr: SocketAddr) -> Fuzz {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        s.set_read_timeout(Some(READ_TIMEOUT)).unwrap();
+        let r = BufReader::new(s.try_clone().unwrap());
+        Fuzz { s, r }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.s, "{line}").unwrap();
+    }
+
+    /// Read one response line; the daemon owes us one, so an empty read
+    /// (EOF: the daemon hung up) or a timeout is a failed contract.
+    fn expect_response(&mut self, ctx: &str) -> SurrogateResponse {
+        let mut line = String::new();
+        self.r
+            .read_line(&mut line)
+            .unwrap_or_else(|e| panic!("no response after {ctx}: {e}"));
+        assert!(!line.is_empty(), "daemon hung up after {ctx}");
+        decode_surrogate_response(line.trim_end())
+            .unwrap_or_else(|e| panic!("undecodable response after {ctx}: {e} ({line:?})"))
+    }
+
+    fn hello(&mut self, space: &SearchSpace) {
+        self.send(&encode_surrogate_request(&SurrogateRequest::Hello {
+            version: PROTOCOL_VERSION,
+            fingerprint: Some(space.fingerprint()),
+            dim: Some(space.dim()),
+        }));
+        match self.expect_response("hello") {
+            SurrogateResponse::HelloOk { .. } => {}
+            other => panic!("baseline hello refused mid-fuzz: {other:?}"),
+        }
+    }
+
+    /// The per-iteration liveness probe: a well-formed sync on the same
+    /// connection that just sent garbage must still be answered with a
+    /// well-formed factor-delta.
+    fn probe(&mut self, ctx: &str) -> SurrogateDelta {
+        self.send(&encode_surrogate_request(&SurrogateRequest::SyncFactor {
+            from_n: 0,
+            max_rows: None,
+            quantise: false,
+        }));
+        match self.expect_response(ctx) {
+            SurrogateResponse::FactorDelta { delta, pending, .. } => {
+                assert_eq!(pending, 0, "unbounded probe sync came back chunked ({ctx})");
+                delta
+            }
+            other => panic!("probe after {ctx} got {other:?}"),
+        }
+    }
+}
+
+fn factor_bits(delta: &SurrogateDelta) -> Vec<u64> {
+    delta.factor.as_ref().expect("factor present").iter().map(|v| v.to_bits()).collect()
+}
+
+/// One malformed frame: the line to send, how many response lines it
+/// owes us (a frame that decodes as a fire-and-forget tell owes none),
+/// whether it is a hello (which may legitimately re-bind the connection
+/// to another space, so the probe must not pin the row count), and a
+/// label for failure messages.
+struct Frame {
+    line: String,
+    responses: usize,
+    rebinds: bool,
+    label: &'static str,
+}
+
+fn valid_encodings(rng: &mut Rng) -> Vec<String> {
+    vec![
+        encode_surrogate_request(&SurrogateRequest::Hello {
+            version: PROTOCOL_VERSION,
+            fingerprint: Some(rng.next_u64()),
+            dim: Some(1 + rng.index(8)),
+        }),
+        encode_surrogate_request(&SurrogateRequest::TellObs {
+            x: (0..3).map(|_| rng.f64()).collect(),
+            y: rng.f64(),
+            ys: Vec::new(),
+        }),
+        encode_surrogate_request(&SurrogateRequest::SyncFactor {
+            from_n: rng.index(4),
+            max_rows: Some(1 + rng.index(16)),
+            quantise: rng.bool(0.5),
+        }),
+        encode_surrogate_request(&SurrogateRequest::AskLease {
+            points: vec![((0..3).map(|_| rng.f64()).collect(), rng.f64())],
+        }),
+    ]
+}
+
+fn make_frame(rng: &mut Rng) -> Frame {
+    match rng.index(10) {
+        // Truncated valid frames: any strict prefix of a one-line JSON
+        // object is unbalanced, so the decoder must refuse it (one
+        // error response), never panic on it.
+        0 => {
+            let encodings = valid_encodings(rng);
+            let full = rng.choice(&encodings);
+            let cut = 1 + rng.index(full.len() - 1);
+            Frame {
+                line: full[..cut].to_string(),
+                responses: 1,
+                rebinds: false,
+                label: "truncated frame",
+            }
+        }
+        // Printable garbage that was never JSON.
+        1 => {
+            let n = 1 + rng.index(120);
+            let junk: String = (0..n)
+                .map(|_| {
+                    let c = b'!' + (rng.index(93) as u8); // '!'..='}' — printable ASCII
+                    if c == b'"' || c == b'\\' { '.' } else { c as char }
+                })
+                .collect();
+            Frame { line: junk, responses: 1, rebinds: false, label: "printable garbage" }
+        }
+        // Handshake versions the decoder must refuse: negative, beyond
+        // u32, or not a number at all.
+        2 => {
+            let v = *rng.choice(&["-1", "99999999999", "\"four\"", "3.5", "null"]);
+            Frame {
+                line: format!("{{\"type\":\"hello\",\"version\":{v}}}"),
+                responses: 1,
+                rebinds: true,
+                label: "mangled hello version",
+            }
+        }
+        // Mangled fingerprints: non-hex, wrong width, or a syntactically
+        // valid unknown fingerprint with no "dim" to build a store from.
+        3 => {
+            let fp = *rng.choice(&[
+                "\"xyz\"",
+                "\"0123456789abcdef0\"", // 17 digits
+                "\"abc\"",               // 3 digits
+                "12345",                 // not a string
+                "\"00000000deadbeef\"",  // well-formed but unknown, dim-less
+            ]);
+            Frame {
+                line: format!(
+                    "{{\"type\":\"hello\",\"version\":{PROTOCOL_VERSION},\"space\":{fp}}}"
+                ),
+                responses: 1,
+                rebinds: true,
+                label: "mangled fingerprint",
+            }
+        }
+        // Non-finite floats are not JSON: the parser must refuse the
+        // line outright rather than let a NaN into a factor.
+        4 => {
+            let bad = *rng.choice(&["NaN", "Infinity", "-Infinity", "nan"]);
+            Frame {
+                line: format!("{{\"type\":\"tell-obs\",\"x\":[0.5,{bad},0.25],\"y\":1.0}}"),
+                responses: 1,
+                rebinds: false,
+                label: "non-finite tell",
+            }
+        }
+        // Structurally valid tells of the wrong dimension (including a
+        // 2000-dim monster): they decode, so they are fire-and-forget —
+        // no response — and the drain guard drops them on the floor.
+        5 => {
+            let d = *rng.choice(&[1usize, 2, 4, 8, 40, 2000]);
+            let req = SurrogateRequest::TellObs {
+                x: (0..d).map(|_| rng.f64()).collect(),
+                y: rng.f64(),
+                ys: Vec::new(),
+            };
+            Frame {
+                line: encode_surrogate_request(&req),
+                responses: 0,
+                rebinds: false,
+                label: "wrong-dimension tell",
+            }
+        }
+        // sync-factor with hostile knobs: a from_n beyond the store is a
+        // per-connection Error; negative / non-numeric knobs are decode
+        // errors; max_rows 0 is clamped and served.
+        6 => {
+            let (body, label): (&str, &'static str) = *rng.choice(&[
+                ("\"from_n\":999999999", "sync beyond store"),
+                ("\"from_n\":-3", "negative from_n"),
+                ("\"from_n\":0,\"max_rows\":0", "zero max_rows"),
+                ("\"from_n\":0,\"quantise\":\"yes\"", "string quantise"),
+                ("\"from_n\":\"zero\"", "string from_n"),
+            ]);
+            Frame {
+                line: format!("{{\"type\":\"sync-factor\",{body}}}"),
+                responses: 1,
+                rebinds: false,
+                label,
+            }
+        }
+        // Lease/hyper frames with missing or mistyped required fields.
+        7 => {
+            let line = (*rng.choice(&[
+                "{\"type\":\"ask-lease\"}",
+                "{\"type\":\"ask-lease\",\"points\":[[0.5,1.0]]}",
+                "{\"type\":\"retract-lease\"}",
+                "{\"type\":\"retract-lease\",\"id\":\"seven\"}",
+                "{\"type\":\"set-hyper\"}",
+                "{\"type\":\"set-hyper\",\"hyper\":{\"lengthscale\":\"wide\"}}",
+            ]))
+            .to_string();
+            Frame { line, responses: 1, rebinds: false, label: "malformed lease/hyper frame" }
+        }
+        // An unknown frame type entirely.
+        8 => Frame {
+            line: format!("{{\"type\":\"frobnicate\",\"n\":{}}}", rng.index(100)),
+            responses: 1,
+            rebinds: false,
+            label: "unknown frame type",
+        },
+        // A random fingerprinted hello WITH a dim: legitimate up to the
+        // fleet cap, a typed hello-err past it — either way a decodable
+        // response and never a crash.
+        _ => {
+            let req = SurrogateRequest::Hello {
+                version: PROTOCOL_VERSION,
+                fingerprint: Some(rng.next_u64()),
+                dim: Some(1 + rng.index(6)),
+            };
+            Frame {
+                line: encode_surrogate_request(&req),
+                responses: 1,
+                rebinds: true,
+                label: "random-space hello",
+            }
+        }
+    }
+}
+
+#[test]
+fn malformed_frames_never_crash_the_daemon_or_touch_sibling_spaces() {
+    let (server, _factor) =
+        TargetServer::bind_surrogate_only("127.0.0.1:0", GpHyper::default()).unwrap();
+    let server = server.with_fleet_options(FleetOptions::default()).unwrap();
+    let (addr, handle) = server.spawn().unwrap();
+    let addr_s = addr.to_string();
+
+    // Seed the baseline space S the fuzz must not corrupt.
+    let space = baseline_space();
+    let mut rng = Rng::new(0xf022);
+    let seeded: Vec<(Vec<f64>, f64)> = (0..6)
+        .map(|_| {
+            let x: Vec<f64> = (0..space.dim()).map(|_| rng.f64()).collect();
+            let y = (3.0 * x[0]).sin() - 0.5 * x[2];
+            (x, y)
+        })
+        .collect();
+    let good = RemoteSurrogate::connect_space(&addr_s, &space).unwrap();
+    for (x, y) in &seeded {
+        good.tell(x.clone(), *y);
+    }
+    drop(good.lock()); // daemon has absorbed all six rows
+
+    let baseline_bits = {
+        let mut c = Fuzz::connect(addr);
+        c.hello(&space);
+        factor_bits(&c.probe("baseline capture"))
+    };
+
+    // The storm: each iteration is a fresh connection (so one poisoned
+    // handler can never be blamed on an earlier frame), sends one bad
+    // frame — half the time after a legitimate hello into S, putting S
+    // itself in the blast zone — collects exactly the responses it is
+    // owed, then proves the connection still serves a well-formed sync.
+    for i in 0..150 {
+        let frame = make_frame(&mut rng);
+        let mut c = Fuzz::connect(addr);
+        let in_space = rng.bool(0.5);
+        if in_space {
+            c.hello(&space);
+        }
+        c.send(&frame.line);
+        for r in 0..frame.responses {
+            // Any decodable response is in-contract; which variant is
+            // the frame's own business.
+            let _ = c.expect_response(&format!("{} (iter {i}, response {r})", frame.label));
+        }
+        let delta = c.probe(&format!("{} (iter {i})", frame.label));
+        // A hello-shaped frame may legitimately re-bind this connection
+        // to another space, so only non-rebinding frames pin the row
+        // count; the post-storm bit-identity check below covers the rest.
+        if in_space && !frame.rebinds {
+            assert_eq!(
+                delta.total_n,
+                seeded.len(),
+                "{} (iter {i}) changed the baseline space's row count",
+                frame.label
+            );
+        }
+    }
+
+    // S survived the storm bit-identically.
+    let after_bits = {
+        let mut c = Fuzz::connect(addr);
+        c.hello(&space);
+        factor_bits(&c.probe("post-fuzz capture"))
+    };
+    assert_eq!(after_bits, baseline_bits, "the fuzz storm corrupted the baseline factor");
+
+    // And a well-formed client gets normal service afterwards.
+    let good = RemoteSurrogate::connect_space(&addr_s, &space).unwrap();
+    good.tell(vec![0.5, 0.5, 0.5], 1.25);
+    assert_eq!(good.lock().len(), seeded.len() + 1, "the daemon stopped serving after the fuzz");
+    drop(good);
+
+    // Clean shutdown proves the daemon's accept loop is also intact.
+    use tftune::server::proto::{encode_request, Request};
+    let shutdown_space = threading_space(64, 1024, 64);
+    let mut s = TcpStream::connect(addr).unwrap();
+    writeln!(s, "{}", encode_request(&Request::Shutdown, &shutdown_space)).unwrap();
+    drop(s);
+    let _ = handle.join();
+}

@@ -166,7 +166,11 @@ fn replica_catchup_transfers_only_the_factor_suffix() {
     }
     let full = authority.export_delta(0).unwrap();
     assert_eq!(full.factor.as_ref().unwrap().len(), packed_len(64));
-    let full_line = encode_surrogate_response(&SurrogateResponse::FactorDelta(full));
+    let full_line = encode_surrogate_response(&SurrogateResponse::FactorDelta {
+        delta: full,
+        pending: 0,
+        quantised: false,
+    });
 
     let delta = authority.export_delta(60).unwrap();
     assert_eq!(delta.rows.len(), 4);
@@ -175,7 +179,11 @@ fn replica_catchup_transfers_only_the_factor_suffix() {
         packed_len(64) - packed_len(60),
         "catch-up must carry exactly the suffix factor rows"
     );
-    let delta_line = encode_surrogate_response(&SurrogateResponse::FactorDelta(delta.clone()));
+    let delta_line = encode_surrogate_response(&SurrogateResponse::FactorDelta {
+        delta: delta.clone(),
+        pending: 0,
+        quantised: false,
+    });
     assert!(
         delta_line.len() * 4 < full_line.len(),
         "Δn=4 catch-up ({} bytes) is not a small fraction of a full sync ({} bytes)",
@@ -399,7 +407,7 @@ fn v2_client_against_v3_server_degrades_to_single_objective() {
     use tftune::server::proto::{decode_surrogate_response, PROTOCOL_VERSION};
 
     let (addr, handle, factor) = serve_factor();
-    assert_eq!(PROTOCOL_VERSION, 3, "update this test alongside the protocol");
+    assert_eq!(PROTOCOL_VERSION, 4, "update this test alongside the protocol");
 
     // A v3 tuner contributes a two-column row first.
     factor.tell_multi(vec![0.25, 0.75], vec![1.0, -9.0]);
@@ -429,7 +437,9 @@ fn v2_client_against_v3_server_degrades_to_single_objective() {
     // v2 sync decodes the mixed store without tripping on the v3 row.
     let resp = roundtrip(&mut s, &mut reader, r#"{"type":"sync-factor","from_n":0}"#);
     match decode_surrogate_response(&resp).unwrap() {
-        SurrogateResponse::FactorDelta(d) => {
+        SurrogateResponse::FactorDelta { delta: d, pending, quantised } => {
+            assert_eq!(pending, 0, "a v2 sync is never chunked");
+            assert!(!quantised, "a v2 sync is never quantised");
             assert_eq!(d.total_n, 2, "both tells landed");
             assert_eq!(d.rows[0].1, 1.0);
             assert_eq!(d.rows[1].1, 2.0);
