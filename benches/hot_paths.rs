@@ -3,6 +3,8 @@
 //!   - simulator evaluation (L3 substrate)
 //!   - native GP fit+score vs the AOT HLO GP via PJRT (L2+L1), by history size
 //!   - shared-surrogate tell enqueue + ask under teller contention
+//!   - sharded scaling tier: routed tell + blended ask at n=20k, vs the
+//!     exact engine's extrapolated O(n²) wall
 //!   - surrogate service: factor-delta export/encode + remote tell round trip
 //!   - persistence plane: snapshot write + cold WAL replay
 //!   - BO / GA / NMS propose cost
@@ -15,7 +17,8 @@
 use tftune::algorithms::{Algorithm, BayesOpt, Tuner};
 use tftune::evaluator::{Evaluator, RemoteEvaluator, SimEvaluator};
 use tftune::gp::{
-    GpHyper, IncrementalGp, NativeGp, NativeSurrogate, ScoreWorkspace, SharedSurrogate, Surrogate,
+    GpHyper, IncrementalGp, NativeGp, NativeSurrogate, ScoreWorkspace, SharedSurrogate,
+    ShardedGp, Surrogate,
 };
 use tftune::history::{random_history, Measurement};
 use tftune::runtime::GpSurrogate;
@@ -364,6 +367,73 @@ fn main() -> anyhow::Result<()> {
         (r_snap, r_replay)
     };
 
+    println!("\n== sharded scaling tier: n=20k at cap 512 vs the exact wall ==");
+    let (r_sharded_tell, r_sharded_ask, r_exact_tell) = {
+        // The headline: a 20 000-row history, far past anything the flat
+        // O(n²)-per-tell engine can sustain. Build cost (including every
+        // KD split along the way) is paid once here; the benches measure
+        // the steady state a long campaign lives in.
+        let mut sharded = ShardedGp::new(GpHyper::default(), 512, 2);
+        let mut srng = Rng::new(0x54A2D);
+        let build_start = std::time::Instant::now();
+        for _ in 0..20_000 {
+            let x: Vec<f64> = (0..5).map(|_| srng.f64()).collect();
+            let y = x[0] - x[1];
+            assert!(sharded.push(&x, y), "random shard factors must stay positive definite");
+        }
+        println!(
+            "  built 20k rows in {:.2}s ({} shards, largest {} rows)",
+            build_start.elapsed().as_secs_f64(),
+            sharded.num_shards(),
+            sharded.max_shard_rows()
+        );
+
+        // Routed rank-1 append at n=20k: extend+retract keeps the model
+        // at steady state between iterations (same shape as
+        // gp_append_rank1 above), so this is the pure per-tell price.
+        let x_probe: Vec<f64> = (0..5).map(|_| srng.f64()).collect();
+        let r_tell = b.bench("gp/sharded_tell_n20k cap=512", || {
+            assert!(sharded.extend_fantasy(&x_probe, 0.0));
+            sharded.retract_fantasies();
+            sharded.len()
+        });
+
+        // Blended 512-candidate ask over the whole 20k-row ensemble.
+        let cand_flat: Vec<f64> = (0..512 * 5).map(|_| srng.f64()).collect();
+        let mut ws = ScoreWorkspace::default();
+        let r_ask = b.bench("gp/sharded_ask_512_n20k blend=2", || {
+            sharded.score_into(&cand_flat, 512, 1.5, 0.0, &mut ws);
+            ws.gain[0]
+        });
+
+        // The exact comparison point. A flat factor at n=20k is minutes
+        // to build and ~1.6 GB of triangle, so the exact append is
+        // measured at n=2048 and extrapolated by the O(n²) law the
+        // incremental engine provably follows (ISSUE 2).
+        let mut exact = IncrementalGp::new(GpHyper::default());
+        let mut erng = Rng::new(0xE6AC7);
+        for _ in 0..2048 {
+            let x: Vec<f64> = (0..5).map(|_| erng.f64()).collect();
+            assert!(exact.push(&x, x[0] - x[1]));
+        }
+        let r_exact = b.bench("gp/exact_tell_n2048", || {
+            assert!(exact.extend_fantasy(&x_probe, 0.0));
+            exact.retract_fantasies();
+            exact.total()
+        });
+        let scale = (20_000.0 / 2048.0) * (20_000.0 / 2048.0);
+        println!(
+            "  sharded tell {:.1} µs at n=20k vs exact append {:.1} µs at n=2048 \
+             (≈{:.0} µs extrapolated to n=20k: {:.0}× the sharded tell; \
+             acceptance floor is 50×)",
+            r_tell.mean_ns / 1e3,
+            r_exact.mean_ns / 1e3,
+            r_exact.mean_ns * scale / 1e3,
+            r_exact.mean_ns * scale / r_tell.mean_ns,
+        );
+        (r_tell, r_ask, r_exact)
+    };
+
     write_gp_bench_json(
         &[
             &r_scratch,
@@ -385,6 +455,9 @@ fn main() -> anyhow::Result<()> {
             &r_512_par,
             &r_512_f32,
             &r_512_mo,
+            &r_sharded_tell,
+            &r_sharded_ask,
+            &r_exact_tell,
         ],
         64,
         512,
@@ -540,7 +613,11 @@ fn bench_scoring_engine(b: &mut Bencher, rng: &mut Rng) -> [BenchResult; 5] {
 /// serial baseline, `score_512_naive_n512` unblocked kernels,
 /// `score_512_parallel_t4` 4-thread partition, `score_512_f32` fast tier,
 /// `score_multiobj_k2_n512` K=2 panel; ISSUE 8 adds the protocol-v4
-/// catch-up pair — `sync_factor_chunked_512` / `sync_factor_quantised_512`).
+/// catch-up pair — `sync_factor_chunked_512` / `sync_factor_quantised_512`;
+/// ISSUE 9 adds the sharded scaling tier — `sharded_tell_n20k` /
+/// `sharded_ask_512_n20k` at the default cap, with `exact_tell_n2048` as
+/// the measured point the O(n²) extrapolation — the wall the tier
+/// breaks — is anchored to).
 /// Keys are the bench short names.
 /// `"estimated": false` marks the numbers as measured on real hardware —
 /// CI's regression guard skips files whose baseline was only estimated.

@@ -229,6 +229,12 @@ impl<S: Surrogate> BayesOpt<S> {
     /// adopts the handle's hyperparameters, so attach the handle *before*
     /// kernel/window overrides and before any tuning starts.
     ///
+    /// This is also how the **sharded scaling tier** attaches: a handle
+    /// from [`SharedSurrogate::new_sharded`] routes every sync / fantasy
+    /// / scoring call into `gp::sharded`'s KD-partitioned ensemble, and
+    /// the unbounded conditioning window it carries is adopted here —
+    /// the engine itself is tier-agnostic.
+    ///
     /// An incremental engine turns eager factoring on for the whole
     /// handle (it scores through the factor); a fused-refit engine
     /// leaves the handle's setting alone, since siblings may still need

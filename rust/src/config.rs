@@ -19,13 +19,21 @@ pub enum SurrogateKind {
     Native,
     /// The AOT HLO artifact via PJRT (production path).
     Hlo,
+    /// The sharded scaling tier ([`crate::gp::ShardedGp`]): locally-exact
+    /// shards under a KD router, O(`shard_cap`²) per tell regardless of
+    /// history length. For long campaigns where the exact engine's O(n²)
+    /// append becomes the bottleneck.
+    Sharded,
 }
 
 impl SurrogateKind {
     pub fn parse(s: &str) -> Option<SurrogateKind> {
         match s.to_lowercase().as_str() {
-            "native" => Some(SurrogateKind::Native),
+            // "exact" names the flat engine in the sharded-tier docs and
+            // CLI (`--surrogate exact|sharded`); it is the same native GP.
+            "native" | "exact" => Some(SurrogateKind::Native),
             "hlo" | "pjrt" | "artifact" => Some(SurrogateKind::Hlo),
+            "sharded" => Some(SurrogateKind::Sharded),
             _ => None,
         }
     }
@@ -34,6 +42,7 @@ impl SurrogateKind {
         match self {
             SurrogateKind::Native => "native",
             SurrogateKind::Hlo => "hlo",
+            SurrogateKind::Sharded => "sharded",
         }
     }
 }
@@ -92,6 +101,17 @@ pub struct TuneConfig {
     /// (default, the pinned oracle) or `f32` (fast ranking tier; means
     /// and stds are computed in single precision and cast up). BO only.
     pub score_tier: crate::gp::ScoreTier,
+    /// Leaf capacity of the sharded surrogate tier (`--shard-cap`): a
+    /// shard splits when it exceeds this many rows, so a tell costs
+    /// O(cap²) regardless of total history. Meaningful with
+    /// `surrogate: sharded`; `shard_cap >= n` keeps a single shard,
+    /// which is bit-identical to the exact engine.
+    pub shard_cap: usize,
+    /// Blend neighbourhood of the sharded tier (`--blend-k`): each
+    /// candidate is scored by its owning shard plus this-many-minus-one
+    /// nearest shards, combined product-of-experts style. 1 = pure
+    /// routing (owner only).
+    pub blend_k: usize,
 }
 
 /// File inside a `--state-dir` holding the streamed per-trial session
@@ -120,6 +140,8 @@ impl Default for TuneConfig {
             resume: false,
             score_threads: 1,
             score_tier: crate::gp::ScoreTier::F64,
+            shard_cap: crate::gp::DEFAULT_SHARD_CAP,
+            blend_k: crate::gp::DEFAULT_BLEND_K,
         }
     }
 }
@@ -181,6 +203,8 @@ impl TuneConfig {
             ("resume", self.resume.into()),
             ("score_threads", self.score_threads.into()),
             ("score_tier", self.score_tier.name().into()),
+            ("shard_cap", self.shard_cap.into()),
+            ("blend_k", self.blend_k.into()),
         ])
     }
 
@@ -254,6 +278,14 @@ impl TuneConfig {
         if let Some(t) = j.get("score_tier").and_then(Json::as_str) {
             cfg.score_tier = crate::gp::ScoreTier::parse(t)
                 .with_context(|| format!("unknown score tier '{t}' (f64|f32)"))?;
+        }
+        if let Some(n) = j.get("shard_cap").and_then(Json::as_i64) {
+            anyhow::ensure!(n > 0, "shard_cap must be positive");
+            cfg.shard_cap = n as usize;
+        }
+        if let Some(n) = j.get("blend_k").and_then(Json::as_i64) {
+            anyhow::ensure!(n > 0, "blend_k must be positive");
+            cfg.blend_k = n as usize;
         }
         Ok(cfg)
     }
@@ -334,8 +366,36 @@ impl TuneConfig {
                 SurrogateKind::Native => {
                     finish(crate::algorithms::BayesOpt::new(space, self.seed), self)
                 }
+                SurrogateKind::Sharded => {
+                    // The sharded tier is a *local* scaling engine. A
+                    // remote factor's tier is the daemon's decision
+                    // (`surrogate-serve --surrogate sharded` /
+                    // `--max-rows-per-space`), so combining both here
+                    // would silently shadow the service's model.
+                    anyhow::ensure!(
+                        self.surrogate_addr.is_none(),
+                        "surrogate 'sharded' is a local scaling tier and cannot attach to a \
+                         surrogate service; pick the tier on the daemon instead \
+                         (surrogate-serve --surrogate sharded / --max-rows-per-space)"
+                    );
+                    let shared = crate::gp::SharedSurrogate::new_sharded(
+                        crate::gp::GpHyper::default(),
+                        self.shard_cap,
+                        self.blend_k,
+                    );
+                    finish(
+                        crate::algorithms::BayesOpt::new(space, self.seed)
+                            .with_shared_surrogate(shared),
+                        self,
+                    )
+                }
             };
         }
+        anyhow::ensure!(
+            self.surrogate != SurrogateKind::Sharded,
+            "surrogate 'sharded' applies to the BO engine only (got {})",
+            self.algorithm.name()
+        );
         anyhow::ensure!(
             self.surrogate_addr.is_none(),
             "surrogate_addr applies to the BO engine only (got {})",
@@ -556,6 +616,8 @@ mod tests {
         c.resume = true;
         c.score_threads = 4;
         c.score_tier = crate::gp::ScoreTier::F32;
+        c.shard_cap = 128;
+        c.blend_k = 3;
         let j = c.to_json();
         let c2 = TuneConfig::from_json(&j).unwrap();
         assert_eq!(c2.model, ModelId::BertFp32);
@@ -574,6 +636,8 @@ mod tests {
         assert!(c2.resume);
         assert_eq!(c2.score_threads, 4);
         assert_eq!(c2.score_tier, crate::gp::ScoreTier::F32);
+        assert_eq!(c2.shard_cap, 128);
+        assert_eq!(c2.blend_k, 3);
     }
 
     #[test]
@@ -746,6 +810,45 @@ mod tests {
         assert!(TuneConfig::from_json(&j).is_err());
         let j = parse(r#"{"score_tier":"f16"}"#).unwrap();
         assert!(TuneConfig::from_json(&j).is_err());
+        let j = parse(r#"{"shard_cap":0}"#).unwrap();
+        assert!(TuneConfig::from_json(&j).is_err());
+        let j = parse(r#"{"blend_k":0}"#).unwrap();
+        assert!(TuneConfig::from_json(&j).is_err());
+        let j = parse(r#"{"surrogate":"made-up"}"#).unwrap();
+        assert!(TuneConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn sharded_spec_builds_and_rejects_misuse() {
+        use crate::algorithms::Tuner as _;
+        // "exact" is accepted as an alias of the flat native engine.
+        assert_eq!(SurrogateKind::parse("exact"), Some(SurrogateKind::Native));
+        assert_eq!(SurrogateKind::parse("sharded"), Some(SurrogateKind::Sharded));
+
+        let c = TuneConfig {
+            surrogate: SurrogateKind::Sharded,
+            shard_cap: 64,
+            blend_k: 2,
+            ..TuneConfig::default()
+        };
+        let mut tuner = c.build_tuner().unwrap();
+        assert_eq!(tuner.name(), "bayesian-optimization");
+        assert_eq!(tuner.ask(1).len(), 1);
+
+        // Local sharded tier + remote factor attachment is contradictory.
+        let mut remote = TuneConfig { surrogate: SurrogateKind::Sharded, ..TuneConfig::default() };
+        remote.surrogate_addr = Some("127.0.0.1:7071".to_string());
+        let err = remote.build_tuner().unwrap_err();
+        assert!(err.to_string().contains("local scaling tier"), "{err}");
+
+        // Sharded is a BO-engine surrogate.
+        let ga = TuneConfig {
+            surrogate: SurrogateKind::Sharded,
+            algorithm: Algorithm::Ga,
+            ..TuneConfig::default()
+        };
+        let err = ga.build_tuner().unwrap_err();
+        assert!(err.to_string().contains("BO engine only"), "{err}");
     }
 
     #[test]

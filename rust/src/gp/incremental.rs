@@ -292,6 +292,13 @@ impl IncrementalGp {
         self.y.len()
     }
 
+    /// Entries held by the packed Cholesky factor — `packed_len(total)`.
+    /// The storage-cost probe behind the sharded tier's boundedness
+    /// tests (a flat factor grows O(n²); a sharded ensemble ~O(n·cap)).
+    pub fn factor_len(&self) -> usize {
+        self.l.len()
+    }
+
     pub fn clear(&mut self) {
         self.committed = 0;
         self.x.clear();

@@ -32,6 +32,12 @@
 //!   *correctness oracle*: the incremental model reproduces it bit-for-bit
 //!   (pinned by `rust/tests/surrogate_incremental.rs`) and the AOT HLO
 //!   artifact is validated against it (`rust/tests/artifact_gp.rs`).
+//! - [`sharded`] — [`ShardedGp`], the scaling tier: the observation
+//!   history partitioned into locally-exact shards (each one an
+//!   [`IncrementalGp`]) under a leaf-capacity KD router, blended
+//!   product-of-experts style at ask time, so a tell costs O(cap²)
+//!   regardless of total n. A single-shard configuration delegates
+//!   verbatim and is bit-identical to the exact engine.
 //! - `runtime::gp` — the AOT-compiled HLO artifact (L2 JAX graph with the
 //!   L1 Pallas RBF kernel) executed via PJRT; the production scoring path
 //!   when artifacts are built.
@@ -49,6 +55,7 @@ pub mod kernel;
 pub mod native;
 pub mod replica;
 pub mod shared;
+pub mod sharded;
 
 pub use crate::util::linalg::BlockSpec;
 pub use incremental::{IncrementalGp, ScoreTier, ScoreWorkspace};
@@ -59,6 +66,7 @@ pub use kernel::{
 pub use native::{NativeGp, Posterior};
 pub use replica::RemoteSurrogate;
 pub use shared::{SharedSurrogate, SurrogateDelta, SurrogateGuard, SurrogateHandle};
+pub use sharded::{ShardedGp, DEFAULT_BLEND_K, DEFAULT_SHARD_CAP};
 
 /// A surrogate model the BO engine can query.
 pub trait Surrogate {

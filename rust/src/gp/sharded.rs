@@ -1,0 +1,884 @@
+//! The scaling tier: a sharded surrogate whose per-tell cost is bounded
+//! by a capacity knob, no matter how long the campaign runs.
+//!
+//! The exact [`IncrementalGp`] pays O(n²) per rank-1 append and O(n²)
+//! factor storage — fine at the paper's n≈100–512 trial budgets, fatal at
+//! the n=10⁴–10⁵ histories a production fleet accumulates. [`ShardedGp`]
+//! breaks that wall by partitioning the observation history into
+//! **locally exact shards** over the unit hypercube:
+//!
+//! - **Storage**: rows live in a KD-tree of leaf shards. Each shard *is*
+//!   an [`IncrementalGp`] — the packed Cholesky, blocked kernels,
+//!   partitioned score threads and f32 ranking tier are reused verbatim,
+//!   not re-implemented. A shard that grows past `shard_cap` (default
+//!   [`DEFAULT_SHARD_CAP`]) splits on its widest dimension at the upper
+//!   median, and both children are rebuilt as fresh exact factors. A tell
+//!   therefore costs O(cap²) amortised **regardless of total n**, and the
+//!   factor footprint is Σ O(capᵢ²) ≈ O(n·cap) instead of O(n²).
+//! - **Routing**: an ask routes each candidate down the same KD-tree to
+//!   its owning shard, plus the `blend_k − 1` nearest other shards by
+//!   centroid distance.
+//! - **Blending**: the selected shards' posteriors are combined
+//!   generalised-product-of-experts style with uniform weights
+//!   `w = 1/M` over the `M = blend_k.clamp(1, shards)` experts:
+//!
+//!   ```text
+//!   1/σ²  =  Σᵢ w / σᵢ²           μ  =  σ² · Σᵢ w · μᵢ / σᵢ²
+//!   ```
+//!
+//!   Variance-weighting means a shard that is far from the candidate
+//!   (large σᵢ) contributes little — the blend degrades gracefully to
+//!   the owning shard's local posterior at the partition interior and
+//!   smooths the seams between shards.
+//!
+//! **The 1-shard ≡ exact argument.** While only one shard exists
+//! (n ≤ `shard_cap`, or `shard_cap ≥ n` by configuration), every scoring
+//! and mutation call is *delegated verbatim* to the single inner
+//! [`IncrementalGp`] — same rows in the same order, same factor, same
+//! scoring engine, and crucially the posterior is **not** round-tripped
+//! through the blend formula (`1/(1/x)` is not the identity in floating
+//! point). A single-shard `ShardedGp` is therefore bit-identical to the
+//! exact engine, which stays the oracle for parity tests
+//! (`rust/tests/sharded_surrogate.rs`). The same short-circuit applies
+//! per-candidate when the effective blend size is 1 (`blend_k = 1` with
+//! many shards): the owner's raw posterior is written through unblended.
+//!
+//! **Fantasies** (constant-liar extends) are routed like committed rows
+//! but never trigger splits and never move rows between shards; they are
+//! retracted shard-locally, so the extend → score → retract cycle of an
+//! ask leaves every factor bitwise unchanged, exactly like the flat
+//! engine. Splits only happen inside [`ShardedGp::push`], which asserts
+//! no fantasies are in place (the [`super::SharedSurrogate`] guard
+//! retracts before every drain).
+//!
+//! **Numerical contract.** Unlike the exact engine there is no global
+//! bitwise oracle once several shards exist — each shard conditions only
+//! on its local rows, so the multi-shard posterior is an *approximation*
+//! whose quality is pinned by tolerance and regret tests, not bit
+//! parity. The multi-shard scoring pass also performs O(shards · K)
+//! transient slice bookkeeping per call (unlike the flat engine's
+//! zero-alloc contract); the per-candidate numeric buffers are still
+//! reused across calls via an internal scratch.
+
+use super::incremental::{IncrementalGp, ScoreTier, ScoreWorkspace};
+use super::kernel::GpHyper;
+use super::native::Posterior;
+use crate::util::linalg::BlockSpec;
+
+/// Default leaf capacity: a shard splits when it exceeds this many
+/// committed rows. 512 matches the exact engine's comfort zone (the
+/// paper's own trial budgets) — big enough that each local model is a
+/// real GP, small enough that a tell's O(cap²) append stays ~sub-ms.
+pub const DEFAULT_SHARD_CAP: usize = 512;
+
+/// Default blend neighbourhood: each candidate is scored by its owning
+/// shard plus this-many-minus-one nearest neighbours.
+pub const DEFAULT_BLEND_K: usize = 2;
+
+/// KD-tree node over the unit hypercube. Leaves own a shard; splits
+/// route on one dimension at a threshold chosen so both sides are
+/// non-empty.
+#[derive(Debug, Clone, Copy)]
+enum Node {
+    Leaf { shard: usize },
+    Split { dim: usize, thresh: f64, lo: usize, hi: usize },
+}
+
+/// One locally-exact expert: an [`IncrementalGp`] over a contiguous
+/// region of the space, plus the bookkeeping the router needs.
+#[derive(Debug)]
+struct Shard {
+    gp: IncrementalGp,
+    /// Global row ids owned by this shard, ascending (committed only).
+    rows: Vec<usize>,
+    /// Σ of owned committed rows, per dimension — centroid = sum/len.
+    centroid_sum: Vec<f64>,
+}
+
+impl Shard {
+    fn new(hyper: GpHyper, d: usize, threads: usize, tier: ScoreTier, blocks: BlockSpec) -> Shard {
+        let mut gp = IncrementalGp::new(hyper);
+        gp.set_score_threads(threads);
+        gp.set_score_tier(tier);
+        gp.set_block_spec(blocks);
+        Shard { gp, rows: Vec::new(), centroid_sum: vec![0.0; d] }
+    }
+}
+
+/// Reused buffers for the multi-shard blend pass. All owned by the
+/// model, so repeated asks stop growing the heap once shapes are seen
+/// (modulo the documented O(shards · K) slice bookkeeping).
+#[derive(Debug, Default)]
+struct BlendScratch {
+    /// Per-shard candidate index lists for the current pass.
+    lists: Vec<Vec<usize>>,
+    /// Flat candidate sub-panel for the shard being scored.
+    panel: Vec<f64>,
+    /// Per-shard gathered targets (K × shard-rows, objective-major).
+    tg: Vec<f64>,
+    /// Workspace the shard's own scoring engine runs in.
+    ws: ScoreWorkspace,
+    /// Blended precision accumulator, one per candidate.
+    prec: Vec<f64>,
+    /// Blended weighted-mean accumulator (K × candidates).
+    acc: Vec<f64>,
+    /// Shard centroids (shards × d), rebuilt each pass.
+    cent: Vec<f64>,
+    /// (squared centroid distance, shard id) selection scratch.
+    dist: Vec<(f64, usize)>,
+    /// Selected shard ids for the current candidate.
+    sel: Vec<usize>,
+}
+
+/// A GP surrogate sharded over the unit hypercube: locally-exact
+/// [`IncrementalGp`] leaves under a KD router, blended
+/// product-of-experts style at ask time. See the module docs for the
+/// cost model and the 1-shard ≡ exact bit-parity argument.
+#[derive(Debug)]
+pub struct ShardedGp {
+    hyper: GpHyper,
+    shard_cap: usize,
+    blend_k: usize,
+    /// Feature dimension; fixed by the first appended row.
+    d: usize,
+    /// Committed (real) observations across all shards.
+    committed: usize,
+    /// Row-major (committed × d) inputs, in global tell order.
+    x: Vec<f64>,
+    /// Targets, one per row (fantasies carry their lie value).
+    y: Vec<f64>,
+    /// KD-tree arena; root at index 0.
+    nodes: Vec<Node>,
+    shards: Vec<Shard>,
+    /// Owning shard of each fantasy row, in extension order.
+    fantasy_shard: Vec<usize>,
+    threads: usize,
+    tier: ScoreTier,
+    blocks: BlockSpec,
+    scratch: BlendScratch,
+    predict_flat: Vec<f64>,
+    predict_ws: ScoreWorkspace,
+}
+
+impl ShardedGp {
+    /// Empty sharded model. `shard_cap` and `blend_k` are clamped to at
+    /// least 1; hyperparameters are shared by every shard (same
+    /// contract as the flat engine — `max_history` is a reservation
+    /// hint only, conditioning windows are the caller's business).
+    pub fn new(hyper: GpHyper, shard_cap: usize, blend_k: usize) -> ShardedGp {
+        let shard_cap = shard_cap.max(1);
+        let blend_k = blend_k.max(1);
+        ShardedGp {
+            hyper,
+            shard_cap,
+            blend_k,
+            d: 0,
+            committed: 0,
+            x: Vec::new(),
+            y: Vec::new(),
+            nodes: vec![Node::Leaf { shard: 0 }],
+            shards: vec![Shard::new(hyper, 0, 1, ScoreTier::F64, BlockSpec::default())],
+            fantasy_shard: Vec::new(),
+            threads: 1,
+            tier: ScoreTier::F64,
+            blocks: BlockSpec::default(),
+            scratch: BlendScratch::default(),
+            predict_flat: Vec::new(),
+            predict_ws: ScoreWorkspace::default(),
+        }
+    }
+
+    pub fn hyper(&self) -> GpHyper {
+        self.hyper
+    }
+
+    /// Leaf capacity: a shard splits when it exceeds this many rows.
+    pub fn shard_cap(&self) -> usize {
+        self.shard_cap
+    }
+
+    /// Blend neighbourhood size (effective size is clamped to the
+    /// current shard count at ask time).
+    pub fn blend_k(&self) -> usize {
+        self.blend_k
+    }
+
+    /// Number of leaf shards (1 until the first split).
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Largest committed row count over all shards. Bounded by
+    /// `shard_cap` except for degenerate zero-spread regions (identical
+    /// rows cannot be split and keep accumulating in one leaf).
+    pub fn max_shard_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.rows.len()).max().unwrap_or(0)
+    }
+
+    /// Total packed-factor entries across all shards — the storage that
+    /// replaces the flat engine's O(n²) triangle. Grows ~O(n · cap).
+    pub fn factor_entries(&self) -> usize {
+        self.shards.iter().map(|s| s.gp.factor_len()).sum()
+    }
+
+    /// Committed (real) observations.
+    pub fn len(&self) -> usize {
+        self.committed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.committed == 0
+    }
+
+    /// Committed + fantasy rows.
+    pub fn total(&self) -> usize {
+        self.committed + self.fantasy_shard.len()
+    }
+
+    /// Replace hyperparameters and reset (same semantics as the flat
+    /// engine: a kernel change invalidates every factor).
+    pub fn set_hyper(&mut self, hyper: GpHyper) {
+        self.hyper = hyper;
+        self.clear();
+    }
+
+    /// Drop all rows and shards, keeping knobs (cap, blend, scoring
+    /// tier/threads/blocking).
+    pub fn clear(&mut self) {
+        self.d = 0;
+        self.committed = 0;
+        self.x.clear();
+        self.y.clear();
+        self.fantasy_shard.clear();
+        self.nodes.clear();
+        self.nodes.push(Node::Leaf { shard: 0 });
+        self.shards.clear();
+        self.shards.push(Shard::new(self.hyper, 0, self.threads, self.tier, self.blocks));
+    }
+
+    pub fn score_threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Scoring worker threads, forwarded to every shard (present and
+    /// future). Bit-identical per shard for any count, same as the flat
+    /// engine.
+    pub fn set_score_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+        for sh in &mut self.shards {
+            sh.gp.set_score_threads(threads);
+        }
+    }
+
+    pub fn score_tier(&self) -> ScoreTier {
+        self.tier
+    }
+
+    /// Scoring arithmetic tier, forwarded to every shard.
+    pub fn set_score_tier(&mut self, tier: ScoreTier) {
+        self.tier = tier;
+        for sh in &mut self.shards {
+            sh.gp.set_score_tier(tier);
+        }
+    }
+
+    pub fn block_spec(&self) -> BlockSpec {
+        self.blocks
+    }
+
+    /// Cache-blocking geometry, forwarded to every shard.
+    pub fn set_block_spec(&mut self, blocks: BlockSpec) {
+        self.blocks = blocks;
+        for sh in &mut self.shards {
+            sh.gp.set_block_spec(blocks);
+        }
+    }
+
+    /// Append a committed observation: route to the owning leaf, rank-1
+    /// append on that shard's exact factor (O(shard rows²), **not**
+    /// O(n²)), split the leaf if it overflowed `shard_cap`. Returns
+    /// false (model unchanged) if the shard's factor rejects the row as
+    /// non-positive-definite.
+    pub fn push(&mut self, xr: &[f64], yv: f64) -> bool {
+        debug_assert!(
+            self.fantasy_shard.is_empty(),
+            "push with fantasies in place; retract first"
+        );
+        if self.total() == 0 {
+            assert!(!xr.is_empty(), "empty feature vector");
+            self.d = xr.len();
+        }
+        assert_eq!(xr.len(), self.d, "feature dim mismatch");
+        let (node_idx, sid) = route(&self.nodes, xr);
+        if self.shards[sid].centroid_sum.len() != self.d {
+            self.shards[sid].centroid_sum.resize(self.d, 0.0);
+        }
+        if !self.shards[sid].gp.push(xr, yv) {
+            return false;
+        }
+        let g = self.committed;
+        self.x.extend_from_slice(xr);
+        self.y.push(yv);
+        self.committed += 1;
+        self.shards[sid].rows.push(g);
+        for k in 0..self.d {
+            self.shards[sid].centroid_sum[k] += xr[k];
+        }
+        if self.shards[sid].rows.len() > self.shard_cap {
+            self.try_split(node_idx, sid);
+        }
+        true
+    }
+
+    /// Condition on an in-flight trial (constant liar), routed like a
+    /// committed row but never splitting. Dropped again by
+    /// [`ShardedGp::retract_fantasies`].
+    pub fn extend_fantasy(&mut self, xr: &[f64], lie: f64) -> bool {
+        if self.total() == 0 {
+            assert!(!xr.is_empty(), "empty feature vector");
+            self.d = xr.len();
+        }
+        assert_eq!(xr.len(), self.d, "feature dim mismatch");
+        let (_, sid) = route(&self.nodes, xr);
+        if !self.shards[sid].gp.extend_fantasy(xr, lie) {
+            return false;
+        }
+        self.y.push(lie);
+        self.fantasy_shard.push(sid);
+        true
+    }
+
+    /// Drop all fantasy rows shard-locally — each shard truncates its
+    /// factor back, which is exact (bitwise) state restoration.
+    pub fn retract_fantasies(&mut self) {
+        if self.fantasy_shard.is_empty() {
+            return;
+        }
+        for sh in &mut self.shards {
+            sh.gp.retract_fantasies();
+        }
+        self.y.truncate(self.committed);
+        self.fantasy_shard.clear();
+    }
+
+    /// Replace the targets of every current row (committed +
+    /// fantasies), in global tell order. In single-shard mode this is
+    /// forwarded verbatim (preserving the installed-target bit-parity
+    /// path); in multi-shard mode targets are gathered per shard at
+    /// scoring time.
+    pub fn set_targets(&mut self, y: &[f64]) {
+        assert_eq!(y.len(), self.total(), "target length mismatch");
+        if self.shards.len() == 1 {
+            self.shards[0].gp.set_targets(y);
+        }
+        if self.y == y {
+            return;
+        }
+        self.y.clear();
+        self.y.extend_from_slice(y);
+    }
+
+    /// Score `c` candidates (row-major c×d): single-objective posterior
+    /// + SMSego gain `(μ + acq_alpha·σ) − y_best`. One shard →
+    /// delegated verbatim (bitwise oracle); several → KD-routed gPoE
+    /// blend (module docs).
+    pub fn score_into(
+        &mut self,
+        cand: &[f64],
+        c: usize,
+        acq_alpha: f64,
+        y_best: f64,
+        ws: &mut ScoreWorkspace,
+    ) {
+        assert!(self.total() > 0, "cannot score on an empty model");
+        assert_eq!(cand.len(), c * self.d, "candidate shape mismatch");
+        if self.shards.len() == 1 {
+            self.shards[0].gp.score_into(cand, c, acq_alpha, y_best, ws);
+            return;
+        }
+        ws.mean.clear();
+        ws.mean.resize(c, 0.0);
+        ws.std.clear();
+        ws.std.resize(c, 0.0);
+        ws.gain.clear();
+        ws.gain.resize(c, 0.0);
+        let (d, committed, bk) = (self.d, self.committed, self.blend_k);
+        let ShardedGp { shards, nodes, y, fantasy_shard, scratch, .. } = self;
+        let targets: [&[f64]; 1] = [y.as_slice()];
+        blend_pass(
+            shards,
+            nodes,
+            d,
+            committed,
+            bk,
+            cand,
+            c,
+            &targets,
+            fantasy_shard,
+            scratch,
+            &mut ws.mean,
+            &mut ws.std,
+        );
+        for ((g, mu), s) in ws.gain.iter_mut().zip(ws.mean.iter()).zip(ws.std.iter()) {
+            *g = (*mu + acq_alpha * *s) - y_best;
+        }
+    }
+
+    /// Score `c` candidates against K objectives: each selected shard
+    /// runs its own one-panel multi-objective pass over gathered local
+    /// targets, and the per-objective means are blended with the shared
+    /// per-candidate variance weights (the blend weights depend only on
+    /// σ, which is objective-independent — exactly like the flat
+    /// engine's shared-std contract). `ws.gain` is resized and zeroed
+    /// for the caller's acquisition; `ws.mean` mirrors `targets[0]`.
+    pub fn score_multi_into(
+        &mut self,
+        cand: &[f64],
+        c: usize,
+        targets: &[&[f64]],
+        ws: &mut ScoreWorkspace,
+    ) {
+        assert!(self.total() > 0, "cannot score on an empty model");
+        assert_eq!(cand.len(), c * self.d, "candidate shape mismatch");
+        let k_obj = targets.len();
+        assert!(k_obj > 0, "need at least one objective");
+        for t in targets {
+            assert_eq!(t.len(), self.total(), "target length mismatch");
+        }
+        if self.shards.len() == 1 {
+            self.shards[0].gp.score_multi_into(cand, c, targets, ws);
+            return;
+        }
+        ws.n_obj = k_obj;
+        ws.mean_obj.clear();
+        ws.mean_obj.resize(k_obj * c, 0.0);
+        ws.std.clear();
+        ws.std.resize(c, 0.0);
+        ws.gain.clear();
+        ws.gain.resize(c, 0.0);
+        let (d, committed, bk) = (self.d, self.committed, self.blend_k);
+        let ShardedGp { shards, nodes, fantasy_shard, scratch, .. } = self;
+        blend_pass(
+            shards,
+            nodes,
+            d,
+            committed,
+            bk,
+            cand,
+            c,
+            targets,
+            fantasy_shard,
+            scratch,
+            &mut ws.mean_obj,
+            &mut ws.std,
+        );
+        ws.mean.clear();
+        ws.mean.extend_from_slice(&ws.mean_obj[..c]);
+    }
+
+    /// Posterior at candidate points — the convenience/test entry,
+    /// routed through the same scoring path as the hot loop.
+    pub fn predict(&mut self, cand: &[Vec<f64>]) -> Posterior {
+        if self.shards.len() == 1 {
+            return self.shards[0].gp.predict(cand);
+        }
+        let mut flat = std::mem::take(&mut self.predict_flat);
+        let mut ws = std::mem::take(&mut self.predict_ws);
+        flat.clear();
+        flat.reserve(cand.len() * self.d);
+        for row in cand {
+            assert_eq!(row.len(), self.d, "candidate dim mismatch");
+            flat.extend_from_slice(row);
+        }
+        self.score_into(&flat, cand.len(), 0.0, 0.0, &mut ws);
+        let post = Posterior { mean: ws.mean.clone(), std: ws.std.clone() };
+        self.predict_flat = flat;
+        self.predict_ws = ws;
+        post
+    }
+
+    /// Split leaf `node_idx`/`sid` on its widest dimension at the upper
+    /// median. No-op when every owned row is identical on every
+    /// dimension (zero spread — nothing separates them) or when a child
+    /// rebuild hits a non-PD factor (the oversized leaf is kept and the
+    /// split retried on the next overflow).
+    fn try_split(&mut self, node_idx: usize, sid: usize) {
+        let d = self.d;
+        let rows = &self.shards[sid].rows;
+        let mut best_dim = 0usize;
+        let mut best_spread = 0.0f64;
+        let mut best_min = 0.0f64;
+        for dim in 0..d {
+            let mut mn = f64::INFINITY;
+            let mut mx = f64::NEG_INFINITY;
+            for &g in rows {
+                let v = self.x[g * d + dim];
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            if mx - mn > best_spread {
+                best_spread = mx - mn;
+                best_dim = dim;
+                best_min = mn;
+            }
+        }
+        if !(best_spread > 0.0) {
+            return;
+        }
+        let mut vals: Vec<f64> = rows.iter().map(|&g| self.x[g * d + best_dim]).collect();
+        vals.sort_by(f64::total_cmp);
+        // Upper median, bumped above the minimum so both sides of the
+        // strict `< thresh` test are non-empty whenever spread > 0.
+        let mut thresh = vals[vals.len() / 2];
+        if thresh <= best_min {
+            thresh = vals
+                .iter()
+                .copied()
+                .find(|&v| v > best_min)
+                .expect("spread > 0 guarantees a value above the minimum");
+        }
+        let (lo_rows, hi_rows): (Vec<usize>, Vec<usize>) =
+            rows.iter().partition(|&&g| self.x[g * d + best_dim] < thresh);
+        debug_assert!(!lo_rows.is_empty() && !hi_rows.is_empty());
+        let lo_sh = build_shard(
+            &self.x, &self.y, d, &lo_rows, self.hyper, self.threads, self.tier, self.blocks,
+        );
+        let hi_sh = build_shard(
+            &self.x, &self.y, d, &hi_rows, self.hyper, self.threads, self.tier, self.blocks,
+        );
+        let (Some(lo_sh), Some(hi_sh)) = (lo_sh, hi_sh) else {
+            return;
+        };
+        self.shards[sid] = lo_sh;
+        let hi_sid = self.shards.len();
+        self.shards.push(hi_sh);
+        let lo_node = self.nodes.len();
+        self.nodes.push(Node::Leaf { shard: sid });
+        let hi_node = self.nodes.len();
+        self.nodes.push(Node::Leaf { shard: hi_sid });
+        self.nodes[node_idx] = Node::Split { dim: best_dim, thresh, lo: lo_node, hi: hi_node };
+    }
+}
+
+/// Descend the KD-tree to the leaf owning `xr`; returns (node index,
+/// shard index).
+fn route(nodes: &[Node], xr: &[f64]) -> (usize, usize) {
+    let mut idx = 0;
+    loop {
+        match nodes[idx] {
+            Node::Leaf { shard } => return (idx, shard),
+            Node::Split { dim, thresh, lo, hi } => {
+                idx = if xr[dim] < thresh { lo } else { hi };
+            }
+        }
+    }
+}
+
+/// Rebuild one child shard by re-pushing its rows (ascending global id,
+/// current targets). None if any append hits a non-PD factor.
+#[allow(clippy::too_many_arguments)]
+fn build_shard(
+    x: &[f64],
+    y: &[f64],
+    d: usize,
+    rows: &[usize],
+    hyper: GpHyper,
+    threads: usize,
+    tier: ScoreTier,
+    blocks: BlockSpec,
+) -> Option<Shard> {
+    let mut sh = Shard::new(hyper, d, threads, tier, blocks);
+    sh.rows.reserve(rows.len());
+    for &g in rows {
+        if !sh.gp.push(&x[g * d..(g + 1) * d], y[g]) {
+            return None;
+        }
+        sh.rows.push(g);
+        for k in 0..d {
+            sh.centroid_sum[k] += x[g * d + k];
+        }
+    }
+    Some(sh)
+}
+
+/// The multi-shard scoring core: route every candidate to its blend set
+/// (owner + nearest-centroid neighbours), score each shard's sub-panel
+/// through that shard's own engine over gathered local targets, and
+/// combine posteriors gPoE-style. `out_mean_obj` (K×c) and `out_std`
+/// (c) must be pre-sized by the caller. When the effective blend size
+/// is 1 the raw shard posterior is written through verbatim — no
+/// `1/(1/x)` float round-trip.
+#[allow(clippy::too_many_arguments)]
+fn blend_pass(
+    shards: &mut [Shard],
+    nodes: &[Node],
+    d: usize,
+    committed: usize,
+    blend_k: usize,
+    cand: &[f64],
+    c: usize,
+    targets: &[&[f64]],
+    fantasy_shard: &[usize],
+    scratch: &mut BlendScratch,
+    out_mean_obj: &mut [f64],
+    out_std: &mut [f64],
+) {
+    let n_sh = shards.len();
+    debug_assert!(n_sh > 1, "blend_pass requires at least two shards");
+    let k_obj = targets.len();
+    debug_assert_eq!(out_mean_obj.len(), k_obj * c);
+    debug_assert_eq!(out_std.len(), c);
+    let m_eff = blend_k.clamp(1, n_sh);
+
+    let BlendScratch { lists, panel, tg, ws, prec, acc, cent, dist, sel } = scratch;
+
+    // Shard centroids for neighbour selection (committed rows only —
+    // every shard has >= 1 once a split has happened).
+    cent.clear();
+    cent.resize(n_sh * d, 0.0);
+    for (s, sh) in shards.iter().enumerate() {
+        let inv = 1.0 / sh.rows.len() as f64;
+        for k in 0..d {
+            cent[s * d + k] = sh.centroid_sum[k] * inv;
+        }
+    }
+
+    // Blend-set selection: owner + (m_eff - 1) nearest other shards.
+    lists.resize(n_sh, Vec::new());
+    for l in lists.iter_mut() {
+        l.clear();
+    }
+    for j in 0..c {
+        let xj = &cand[j * d..(j + 1) * d];
+        let (_, owner) = route(nodes, xj);
+        sel.clear();
+        sel.push(owner);
+        if m_eff > 1 {
+            dist.clear();
+            for s in 0..n_sh {
+                if s == owner {
+                    continue;
+                }
+                let mut sq = 0.0;
+                for k in 0..d {
+                    let dv = xj[k] - cent[s * d + k];
+                    sq += dv * dv;
+                }
+                dist.push((sq, s));
+            }
+            dist.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            sel.extend(dist.iter().take(m_eff - 1).map(|&(_, s)| s));
+        }
+        for &s in sel.iter() {
+            lists[s].push(j);
+        }
+    }
+
+    if m_eff > 1 {
+        prec.clear();
+        prec.resize(c, 0.0);
+        acc.clear();
+        acc.resize(k_obj * c, 0.0);
+    }
+
+    // Score each shard's sub-panel through its own engine, gathering
+    // that shard's local targets (committed rows in ascending global
+    // order, then its fantasies in global extension order — matching
+    // the shard factor's row order exactly).
+    for sid in 0..n_sh {
+        if lists[sid].is_empty() {
+            continue;
+        }
+        let js = &lists[sid];
+        let w = js.len();
+        panel.clear();
+        for &j in js {
+            panel.extend_from_slice(&cand[j * d..(j + 1) * d]);
+        }
+        let sh = &mut shards[sid];
+        let m_s = sh.gp.total();
+        tg.clear();
+        for t in targets {
+            for &g in &sh.rows {
+                tg.push(t[g]);
+            }
+            for (fj, &fs) in fantasy_shard.iter().enumerate() {
+                if fs == sid {
+                    tg.push(t[committed + fj]);
+                }
+            }
+        }
+        debug_assert_eq!(tg.len(), k_obj * m_s);
+        let refs: Vec<&[f64]> = tg.chunks(m_s).collect();
+        sh.gp.score_multi_into(panel, w, &refs, ws);
+        if m_eff == 1 {
+            // Pure routing: the owner's posterior verbatim.
+            for (p, &j) in js.iter().enumerate() {
+                out_std[j] = ws.std[p];
+                for k in 0..k_obj {
+                    out_mean_obj[k * c + j] = ws.mean_obj[k * w + p];
+                }
+            }
+        } else {
+            let wgt = 1.0 / m_eff as f64;
+            for (p, &j) in js.iter().enumerate() {
+                let var = ws.std[p] * ws.std[p];
+                prec[j] += wgt / var;
+                for k in 0..k_obj {
+                    acc[k * c + j] += ws.mean_obj[k * w + p] * (wgt / var);
+                }
+            }
+        }
+    }
+
+    if m_eff > 1 {
+        for j in 0..c {
+            let var = 1.0 / prec[j];
+            out_std[j] = var.sqrt();
+            for k in 0..k_obj {
+                out_mean_obj[k * c + j] = var * acc[k * c + j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rowv(rng: &mut u64, d: usize) -> Vec<f64> {
+        (0..d)
+            .map(|_| {
+                *rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((*rng >> 33) as f64) / ((1u64 << 31) as f64)
+            })
+            .collect()
+    }
+
+    fn obj(x: &[f64]) -> f64 {
+        10.0 - x.iter().map(|v| (v - 0.4) * (v - 0.4)).sum::<f64>() * 10.0
+    }
+
+    #[test]
+    fn splits_partition_all_rows_and_respect_cap() {
+        let mut g = ShardedGp::new(GpHyper::default(), 16, 2);
+        let mut rng = 7u64;
+        for _ in 0..200 {
+            let x = rowv(&mut rng, 3);
+            let y = obj(&x);
+            assert!(g.push(&x, y));
+        }
+        assert!(g.num_shards() > 1, "200 rows at cap 16 must split");
+        assert!(g.max_shard_rows() <= 16);
+        // Every global row owned by exactly one shard.
+        let mut seen = vec![0usize; g.len()];
+        for sh in &g.shards {
+            assert!(!sh.rows.is_empty());
+            assert!(sh.rows.windows(2).all(|w| w[0] < w[1]), "rows ascending");
+            for &r in &sh.rows {
+                seen[r] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&n| n == 1));
+        // Routing agrees with ownership: each stored row routes to the
+        // shard that holds it.
+        for sh in 0..g.shards.len() {
+            for &r in &g.shards[sh].rows {
+                let xr = &g.x[r * 3..(r + 1) * 3];
+                assert_eq!(route(&g.nodes, xr).1, sh);
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_predict_is_bitwise_exact() {
+        let mut flat = IncrementalGp::new(GpHyper::default());
+        let mut sharded = ShardedGp::new(GpHyper::default(), 1024, 2);
+        let mut rng = 11u64;
+        for _ in 0..40 {
+            let x = rowv(&mut rng, 4);
+            let y = obj(&x);
+            assert!(flat.push(&x, y));
+            assert!(sharded.push(&x, y));
+        }
+        assert_eq!(sharded.num_shards(), 1);
+        let cand: Vec<Vec<f64>> = (0..16).map(|_| rowv(&mut rng, 4)).collect();
+        let a = flat.predict(&cand);
+        let b = sharded.predict(&cand);
+        for j in 0..cand.len() {
+            assert_eq!(a.mean[j].to_bits(), b.mean[j].to_bits());
+            assert_eq!(a.std[j].to_bits(), b.std[j].to_bits());
+        }
+    }
+
+    #[test]
+    fn multi_shard_posterior_tracks_exact_loosely() {
+        let hyper = GpHyper::default();
+        let mut exact = IncrementalGp::new(hyper);
+        let mut sharded = ShardedGp::new(hyper, 32, 2);
+        let mut rng = 3u64;
+        for _ in 0..128 {
+            let x = rowv(&mut rng, 2);
+            let y = obj(&x);
+            assert!(exact.push(&x, y));
+            assert!(sharded.push(&x, y));
+        }
+        assert!(sharded.num_shards() > 1);
+        let cand: Vec<Vec<f64>> = (0..32).map(|_| rowv(&mut rng, 2)).collect();
+        let a = exact.predict(&cand);
+        let b = sharded.predict(&cand);
+        for j in 0..cand.len() {
+            assert!(b.mean[j].is_finite() && b.std[j].is_finite() && b.std[j] > 0.0);
+            // Local experts are an approximation: loose envelope only.
+            assert!(
+                (a.mean[j] - b.mean[j]).abs() < 2.0,
+                "blend mean drifted: exact {} vs sharded {}",
+                a.mean[j],
+                b.mean[j]
+            );
+        }
+    }
+
+    #[test]
+    fn fantasy_extend_retract_restores_factors_bitwise() {
+        let mut g = ShardedGp::new(GpHyper::default(), 8, 2);
+        let mut rng = 19u64;
+        for _ in 0..40 {
+            let x = rowv(&mut rng, 2);
+            assert!(g.push(&x, obj(&x)));
+        }
+        assert!(g.num_shards() > 1);
+        let before = g.factor_entries();
+        let n = g.total();
+        let f1 = rowv(&mut rng, 2);
+        let f2 = rowv(&mut rng, 2);
+        assert!(g.extend_fantasy(&f1, 0.0));
+        assert!(g.extend_fantasy(&f2, 0.0));
+        assert_eq!(g.total(), n + 2);
+        let cand: Vec<Vec<f64>> = (0..8).map(|_| rowv(&mut rng, 2)).collect();
+        let _ = g.predict(&cand);
+        g.retract_fantasies();
+        assert_eq!(g.total(), n);
+        assert_eq!(g.factor_entries(), before);
+    }
+
+    #[test]
+    fn factor_entries_stay_linear_in_n() {
+        let cap = 16;
+        let mut g = ShardedGp::new(GpHyper::default(), cap, 2);
+        let mut rng = 23u64;
+        for _ in 0..256 {
+            let x = rowv(&mut rng, 3);
+            assert!(g.push(&x, obj(&x)));
+        }
+        // Flat engine would hold packed_len(256) = 32 896 entries; the
+        // sharded tier holds at most n·(cap+1)/...
+        let flat_entries = 256 * 257 / 2;
+        assert!(
+            g.factor_entries() < flat_entries / 4,
+            "sharded factor {} not ≪ flat {}",
+            g.factor_entries(),
+            flat_entries
+        );
+    }
+}

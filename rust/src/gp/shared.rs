@@ -107,8 +107,9 @@
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use super::incremental::{IncrementalGp, ScoreTier, ScoreWorkspace};
-use super::kernel::GpHyper;
-use crate::util::linalg::packed_len;
+use super::kernel::{GpHyper, UNBOUNDED_HISTORY};
+use super::sharded::ShardedGp;
+use crate::util::linalg::{packed_len, BlockSpec};
 
 /// Callback a replica installs to publish the guard's own fantasy points
 /// as a cross-process lease when the guard drops (module docs).
@@ -223,6 +224,152 @@ pub struct SurrogateDelta {
     pub leases: Vec<(Vec<f64>, f64)>,
 }
 
+/// The factored model behind a [`SharedSurrogate`]: either the exact
+/// [`IncrementalGp`] (the default — one flat O(n²) factor) or the
+/// sharded scaling tier ([`ShardedGp`] — locally-exact shards with
+/// O(cap²) tells). Every guard operation forwards through this enum, so
+/// the drain / sync / fantasy / scoring plumbing is engine-agnostic and
+/// the two tiers cannot drift apart structurally.
+pub(crate) enum GpEngine {
+    Exact(IncrementalGp),
+    Sharded(ShardedGp),
+}
+
+impl GpEngine {
+    fn push(&mut self, xr: &[f64], yv: f64) -> bool {
+        match self {
+            GpEngine::Exact(g) => g.push(xr, yv),
+            GpEngine::Sharded(g) => g.push(xr, yv),
+        }
+    }
+
+    fn clear(&mut self) {
+        match self {
+            GpEngine::Exact(g) => g.clear(),
+            GpEngine::Sharded(g) => g.clear(),
+        }
+    }
+
+    fn set_hyper(&mut self, hyper: GpHyper) {
+        match self {
+            GpEngine::Exact(g) => g.set_hyper(hyper),
+            GpEngine::Sharded(g) => g.set_hyper(hyper),
+        }
+    }
+
+    fn retract_fantasies(&mut self) {
+        match self {
+            GpEngine::Exact(g) => g.retract_fantasies(),
+            GpEngine::Sharded(g) => g.retract_fantasies(),
+        }
+    }
+
+    fn set_targets(&mut self, y: &[f64]) {
+        match self {
+            GpEngine::Exact(g) => g.set_targets(y),
+            GpEngine::Sharded(g) => g.set_targets(y),
+        }
+    }
+
+    fn total(&self) -> usize {
+        match self {
+            GpEngine::Exact(g) => g.total(),
+            GpEngine::Sharded(g) => g.total(),
+        }
+    }
+
+    fn extend_fantasy(&mut self, xr: &[f64], lie: f64) -> bool {
+        match self {
+            GpEngine::Exact(g) => g.extend_fantasy(xr, lie),
+            GpEngine::Sharded(g) => g.extend_fantasy(xr, lie),
+        }
+    }
+
+    fn score_into(
+        &mut self,
+        cand: &[f64],
+        c: usize,
+        acq_alpha: f64,
+        y_best: f64,
+        ws: &mut ScoreWorkspace,
+    ) {
+        match self {
+            GpEngine::Exact(g) => g.score_into(cand, c, acq_alpha, y_best, ws),
+            GpEngine::Sharded(g) => g.score_into(cand, c, acq_alpha, y_best, ws),
+        }
+    }
+
+    fn score_multi_into(
+        &mut self,
+        cand: &[f64],
+        c: usize,
+        targets: &[&[f64]],
+        ws: &mut ScoreWorkspace,
+    ) {
+        match self {
+            GpEngine::Exact(g) => g.score_multi_into(cand, c, targets, ws),
+            GpEngine::Sharded(g) => g.score_multi_into(cand, c, targets, ws),
+        }
+    }
+
+    fn score_threads(&self) -> usize {
+        match self {
+            GpEngine::Exact(g) => g.score_threads(),
+            GpEngine::Sharded(g) => g.score_threads(),
+        }
+    }
+
+    fn set_score_threads(&mut self, threads: usize) {
+        match self {
+            GpEngine::Exact(g) => g.set_score_threads(threads),
+            GpEngine::Sharded(g) => g.set_score_threads(threads),
+        }
+    }
+
+    fn score_tier(&self) -> ScoreTier {
+        match self {
+            GpEngine::Exact(g) => g.score_tier(),
+            GpEngine::Sharded(g) => g.score_tier(),
+        }
+    }
+
+    fn set_score_tier(&mut self, tier: ScoreTier) {
+        match self {
+            GpEngine::Exact(g) => g.set_score_tier(tier),
+            GpEngine::Sharded(g) => g.set_score_tier(tier),
+        }
+    }
+
+    fn set_block_spec(&mut self, blocks: BlockSpec) {
+        match self {
+            GpEngine::Exact(g) => g.set_block_spec(blocks),
+            GpEngine::Sharded(g) => g.set_block_spec(blocks),
+        }
+    }
+
+    /// The packed factor suffix a replica delta rides on. Only the flat
+    /// exact engine has one global packed factor; a sharded authority
+    /// exports rows-only deltas (replicas re-factor locally — the cost
+    /// cap is a per-daemon property, not a wire contract).
+    fn factor_suffix(&self, from: usize) -> Option<&[f64]> {
+        match self {
+            GpEngine::Exact(g) => Some(g.factor_suffix(from)),
+            GpEngine::Sharded(_) => None,
+        }
+    }
+
+    /// Append a row whose packed factor row was computed by an exact
+    /// authority. The sharded tier has no flat factor to splice into, so
+    /// it ignores `lrow` and recomputes the append locally (same rows,
+    /// same order — only the cross-process bit-parity shortcut is lost).
+    fn import_row(&mut self, xr: &[f64], yv: f64, lrow: &[f64]) -> bool {
+        match self {
+            GpEngine::Exact(g) => g.import_row(xr, yv, lrow),
+            GpEngine::Sharded(g) => g.push(xr, yv),
+        }
+    }
+}
+
 /// Model state behind the ask-side lock: the canonical observation store
 /// plus the persistent factor over (a windowed subset of) it.
 struct SharedState {
@@ -236,8 +383,8 @@ struct SharedState {
     /// Secondary objective columns per observation, aligned with
     /// `obs_x` (empty = single-objective row; NaN = degraded column).
     obs_extra: Vec<Vec<f64>>,
-    /// The persistent factored model.
-    model: IncrementalGp,
+    /// The persistent factored model (exact or sharded tier).
+    model: GpEngine,
     /// Indices into `obs_x` currently factored into `model`, in factor
     /// row order — decides between rank-1 append and rebuild on sync.
     factored: Vec<usize>,
@@ -348,7 +495,7 @@ impl SharedSurrogate {
                     obs_x: Vec::new(),
                     obs_y: Vec::new(),
                     obs_extra: Vec::new(),
-                    model: IncrementalGp::new(hyper),
+                    model: GpEngine::Exact(IncrementalGp::new(hyper)),
                     factored: Vec::new(),
                     eager: true,
                     drain_buf: Vec::new(),
@@ -359,6 +506,102 @@ impl SharedSurrogate {
                 hyper_hook: Mutex::new(None),
             }),
         }
+    }
+
+    /// A fresh, empty shared model on the **sharded scaling tier**
+    /// ([`ShardedGp`]): locally-exact shards of at most `shard_cap` rows
+    /// under a KD router, `blend_k`-expert gPoE blending at ask time, so
+    /// a tell costs O(cap²) no matter how long the campaign runs. The
+    /// conditioning window is forced to unbounded — windowing exists to
+    /// cap the exact engine's O(n²)/O(n³) costs, which is precisely what
+    /// the shards already bound; the full history stays conditioned.
+    /// An attached `BayesOpt` adopts the unbounded window through the
+    /// usual `with_shared_surrogate` hyper adoption.
+    ///
+    /// With `shard_cap >= n` exactly one shard ever exists and every
+    /// call delegates verbatim to the inner exact engine — bit-identical
+    /// to [`SharedSurrogate::new`] (pinned by
+    /// `rust/tests/sharded_surrogate.rs`).
+    pub fn new_sharded(mut hyper: GpHyper, shard_cap: usize, blend_k: usize) -> SharedSurrogate {
+        hyper.max_history = UNBOUNDED_HISTORY;
+        SharedSurrogate {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(Vec::new()),
+                state: Mutex::new(SharedState {
+                    hyper,
+                    obs_x: Vec::new(),
+                    obs_y: Vec::new(),
+                    obs_extra: Vec::new(),
+                    model: GpEngine::Sharded(ShardedGp::new(hyper, shard_cap, blend_k)),
+                    factored: Vec::new(),
+                    eager: true,
+                    drain_buf: Vec::new(),
+                    ambient: Vec::new(),
+                    journal: None,
+                }),
+                lease_hook: Mutex::new(None),
+                hyper_hook: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// Whether this handle's model is on the sharded scaling tier.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self.inner.state.lock().unwrap().model, GpEngine::Sharded(_))
+    }
+
+    /// Shard count of a sharded-tier model (1 until the first split;
+    /// `None` on the exact tier) — observability for the fleet daemon
+    /// and the scaling tests.
+    pub fn num_shards(&self) -> Option<usize> {
+        match &self.inner.state.lock().unwrap().model {
+            GpEngine::Exact(_) => None,
+            GpEngine::Sharded(g) => Some(g.num_shards()),
+        }
+    }
+
+    /// Flip this handle's model to the sharded tier in place, re-homing
+    /// every stored observation into shards. No-op if already sharded.
+    /// The conditioning window is lifted to unbounded (journaled, so
+    /// recovery replays the same decision); the factor is rebuilt by
+    /// re-pushing the store in canonical order with placeholder targets
+    /// (targets are re-standardised by every ask anyway). The fleet
+    /// daemon calls this when a space's history crosses
+    /// `--max-rows-per-space`.
+    pub fn convert_to_sharded(&self, shard_cap: usize, blend_k: usize) {
+        // Drain queued tells and retract stray fantasies first, so the
+        // rebuilt model sees the full store.
+        drop(self.lock());
+        let mut st = self.inner.state.lock().unwrap();
+        if matches!(st.model, GpEngine::Sharded(_)) {
+            return;
+        }
+        if st.hyper.max_history != UNBOUNDED_HISTORY {
+            st.hyper.max_history = UNBOUNDED_HISTORY;
+            let hyper = st.hyper;
+            if let Some(journal) = st.journal.as_mut() {
+                journal(JournalEvent::Hyper(hyper));
+            }
+        }
+        let mut sharded = ShardedGp::new(st.hyper, shard_cap, blend_k);
+        sharded.set_score_threads(st.model.score_threads());
+        sharded.set_score_tier(st.model.score_tier());
+        st.factored.clear();
+        let mut ok = true;
+        for i in 0..st.obs_x.len() {
+            if !sharded.push(&st.obs_x[i], 0.0) {
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            st.factored.extend(0..st.obs_x.len());
+        } else {
+            // Non-PD during rebuild: start empty, the next guard sync
+            // reconditions from the store.
+            sharded.clear();
+        }
+        st.model = GpEngine::Sharded(sharded);
     }
 
     /// Enqueue one observation (`x` in the unit cube, `y` the raw
@@ -502,7 +745,8 @@ impl SharedSurrogate {
         let extras: Vec<Vec<f64>> = (from_n..n).map(|i| st.obs_extra[i].clone()).collect();
         let prefix =
             st.factored.len() == n && st.factored.iter().enumerate().all(|(i, &j)| i == j);
-        let factor = if prefix { Some(st.model.factor_suffix(from_n).to_vec()) } else { None };
+        let factor =
+            if prefix { st.model.factor_suffix(from_n).map(<[f64]>::to_vec) } else { None };
         Some(SurrogateDelta {
             from_n,
             total_n: n,

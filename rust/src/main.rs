@@ -111,16 +111,19 @@ USAGE: tftune <command> [flags]
 COMMANDS
   tune         --model <m> --alg <bo|ga|nms|random|grid> [--iters 50]
                [--seed 0] [--parallel 1] [--max-seconds S]
-               [--surrogate native|hlo] [--objective throughput|latency]
+               [--surrogate native|hlo|sharded] [--objective throughput|latency]
                [--objectives spec] [--scalarize weighted:<w,..>|smsego]
                [--surrogate-addr host:port] [--tune-lengthscale]
                [--score-threads N] [--score-tier f64|f32]
+               [--shard-cap 512] [--blend-k 2]
                [--state-dir DIR] [--resume]
                [--out hist.jsonl] [--config run.json]
   serve        --model <m> [--addr 127.0.0.1:7070] [--seed 0]
   surrogate-serve  [--addr 127.0.0.1:7071] [--objectives spec]
                [--state-dir DIR] [--fsync-every 1] [--snapshot-every 30]
                [--max-spaces 16] [--space-idle-secs S]
+               [--max-rows-per-space N] [--surrogate auto|exact|sharded]
+               [--shard-cap 512] [--blend-k 2]
                host the authoritative shared GP factors: tuner processes
                started with --surrogate-addr condition the model whose
                search-space fingerprint their hello declares
@@ -145,6 +148,19 @@ SCORING ENGINE (BO only)
   proposals are bit-identical to serial for any N. --score-tier f32
   ranks candidates in single precision (faster panels, same argmax on
   well-separated gains); the default f64 tier is the pinned oracle.
+
+SCALING TIER (BO only)
+  tune --surrogate sharded swaps the flat exact GP for a KD-sharded
+  ensemble: observations split into locally-exact shards of at most
+  --shard-cap rows, so a tell costs O(cap²) no matter how long the run,
+  and each proposal blends the --blend-k nearest shards' posteriors
+  (variance-weighted product of experts). --shard-cap >= n keeps one
+  shard and is bit-identical to --surrogate native. On the daemon,
+  surrogate-serve --max-rows-per-space N caps each hosted space: at the
+  cap the space's factor converts to the sharded tier in place (the
+  default --surrogate auto), stays sharded from the first row with
+  --surrogate sharded, or refuses further tells with a typed error
+  under --surrogate exact.
 
 CROSS-PROCESS SURROGATE
   Start `surrogate-serve` once, then give every BO tuner process
@@ -259,6 +275,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
     if let Some(t) = args.opt("score-tier", "score tier", tftune::gp::ScoreTier::parse)? {
         cfg.score_tier = t;
     }
+    cfg.shard_cap = args.usize_or("shard-cap", cfg.shard_cap)?;
+    anyhow::ensure!(cfg.shard_cap >= 1, "--shard-cap must be at least 1");
+    cfg.blend_k = args.usize_or("blend-k", cfg.blend_k)?;
+    anyhow::ensure!(cfg.blend_k >= 1, "--blend-k must be at least 1");
     if let Some(spec) = args.get("objectives") {
         cfg.objectives =
             Some(tftune::ObjectiveSet::parse(spec).map_err(|e| anyhow::anyhow!(e))?);
@@ -360,6 +380,17 @@ fn cmd_surrogate_serve(args: &Args) -> Result<()> {
     if let Some(s) = idle_secs {
         anyhow::ensure!(s > 0.0, "--space-idle-secs must be positive seconds");
     }
+    let max_rows = args.opt("max-rows-per-space", "integer", |v| v.parse::<usize>().ok())?;
+    if let Some(n) = max_rows {
+        anyhow::ensure!(n >= 1, "--max-rows-per-space must be at least 1");
+    }
+    let tier = args
+        .opt("surrogate", "factor tier", tftune::server::FactorTier::parse)?
+        .unwrap_or(tftune::server::FactorTier::Auto);
+    let shard_cap = args.usize_or("shard-cap", tftune::gp::DEFAULT_SHARD_CAP)?;
+    anyhow::ensure!(shard_cap >= 1, "--shard-cap must be at least 1");
+    let blend_k = args.usize_or("blend-k", tftune::gp::DEFAULT_BLEND_K)?;
+    anyhow::ensure!(blend_k >= 1, "--blend-k must be at least 1");
 
     // With --state-dir the served factor is durable: recover whatever a
     // previous daemon left behind (bit-identical snapshot + WAL replay),
@@ -406,6 +437,10 @@ fn cmd_surrogate_serve(args: &Args) -> Result<()> {
         state_dir: state_dir.clone(),
         fsync_every,
         default_hyper: tftune::gp::GpHyper::default(),
+        max_rows_per_space: max_rows,
+        tier,
+        shard_cap,
+        blend_k,
     })?;
     println!(
         "surrogate service hosting the shared GP factor on {} (protocol v{})",
@@ -419,6 +454,20 @@ fn cmd_surrogate_serve(args: &Args) -> Result<()> {
             None => String::new(),
         }
     );
+    match (tier, max_rows) {
+        (tftune::server::FactorTier::Sharded, cap) => println!(
+            "factor tier: sharded from the first row (shard cap {shard_cap}, blend {blend_k}){}",
+            cap.map_or(String::new(), |n| format!(", row cap {n} per space")),
+        ),
+        (tftune::server::FactorTier::Exact, Some(n)) => println!(
+            "factor tier: exact, refusing tells beyond {n} row(s) per space"
+        ),
+        (tftune::server::FactorTier::Auto, Some(n)) => println!(
+            "factor tier: exact until {n} row(s) per space, then sharded \
+             (shard cap {shard_cap}, blend {blend_k})"
+        ),
+        _ => {}
+    }
     if let Some(p) = &persistence {
         let every = args.f64_opt("snapshot-every")?.unwrap_or(30.0);
         anyhow::ensure!(every > 0.0, "--snapshot-every must be positive seconds");

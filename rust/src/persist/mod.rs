@@ -52,6 +52,20 @@
 //! [`RemoteSurrogate`](crate::gp::RemoteSurrogate) mirror replicates a
 //! factor that is already journaled at its served authority; journaling
 //! it again would record the same history twice.
+//!
+//! # The sharded tier
+//!
+//! A store running the sharded scaling tier
+//! ([`SharedSurrogate::new_sharded`](crate::gp::SharedSurrogate::new_sharded))
+//! exports **rows-only** deltas — its factor is an ensemble of per-shard
+//! packed Choleskys, not one flat triangle — so its snapshots carry
+//! `"factor": null` and [`recover`](crate::persist::recover()) seeds the
+//! store through the drain path instead of a verbatim factor import. The
+//! recovered store comes back on the flat exact engine; the daemon then
+//! re-tiers it (`--surrogate sharded` at open, or `--surrogate auto` at
+//! the row cap) by re-pushing the rows in observation order, and the KD
+//! tree re-splits at the same capacities, deterministically. The journal
+//! format is unchanged — rows + hypers are tier-agnostic.
 
 pub mod recover;
 pub mod snapshot;

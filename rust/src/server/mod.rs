@@ -60,6 +60,21 @@
 //! sweeper evicts spaces no connection has bound for that long,
 //! snapshotting them to their state-dir namespace first (when the fleet
 //! is durable) so a later hello restores them bit-identically.
+//!
+//! The space map itself is an `RwLock`: hellos and rebinds to *known*
+//! spaces share a read lock (a hello storm from a large fleet no longer
+//! serialises behind one mutex), and only space creation, recovery and
+//! eviction take the write lock.
+//!
+//! With [`FleetOptions::max_rows_per_space`] the daemon also polices how
+//! big any hosted factor may grow. What happens at the cap is the
+//! [`FactorTier`] policy (`surrogate-serve --surrogate`): `Auto` (the
+//! default) converts the space's factor to the **sharded scaling tier**
+//! ([`crate::gp::ShardedGp`]) in place, so tells keep landing at O(cap²)
+//! amortised cost; `Sharded` runs every space on that tier from its
+//! first row; `Exact` pins the flat factor and answers further tells
+//! with a typed error (the connection closes; the teller redials and
+//! re-hellos).
 
 pub mod proto;
 
@@ -68,7 +83,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -133,7 +148,35 @@ impl SpaceState {
     }
 }
 
-/// Fleet knobs (`surrogate-serve --max-spaces / --space-idle-secs`).
+/// Which factor engine hosted spaces run
+/// (`surrogate-serve --surrogate auto|exact|sharded`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FactorTier {
+    /// Flat exact factor until [`FleetOptions::max_rows_per_space`], then
+    /// convert the space to the sharded tier in place. The default.
+    Auto,
+    /// Always the flat exact factor; at the row cap further tells are
+    /// refused with a typed error.
+    Exact,
+    /// The sharded scaling tier from the first row.
+    Sharded,
+}
+
+impl FactorTier {
+    /// Parse a CLI spelling. `exact`/`native` name the flat engine,
+    /// matching the `tune --surrogate` aliases.
+    pub fn parse(s: &str) -> Option<FactorTier> {
+        match s {
+            "auto" => Some(FactorTier::Auto),
+            "exact" | "native" => Some(FactorTier::Exact),
+            "sharded" => Some(FactorTier::Sharded),
+            _ => None,
+        }
+    }
+}
+
+/// Fleet knobs (`surrogate-serve --max-spaces / --space-idle-secs /
+/// --max-rows-per-space / --surrogate`).
 #[derive(Debug, Clone)]
 pub struct FleetOptions {
     /// Most spaces hosted at once, the default space included. A
@@ -153,6 +196,17 @@ pub struct FleetOptions {
     pub fsync_every: usize,
     /// Hyperparameters for spaces born without recoverable state.
     pub default_hyper: GpHyper,
+    /// Row cap per hosted space. `None` — the default — never caps. At
+    /// the cap, [`FleetOptions::tier`] decides between converting the
+    /// space to the sharded tier and refusing further tells.
+    pub max_rows_per_space: Option<usize>,
+    /// Factor-engine policy (see [`FactorTier`]).
+    pub tier: FactorTier,
+    /// Shard leaf capacity for spaces on the sharded tier
+    /// ([`crate::gp::ShardedGp`]).
+    pub shard_cap: usize,
+    /// Posterior blend breadth for spaces on the sharded tier.
+    pub blend_k: usize,
 }
 
 impl Default for FleetOptions {
@@ -163,6 +217,10 @@ impl Default for FleetOptions {
             state_dir: None,
             fsync_every: 1,
             default_hyper: GpHyper::default(),
+            max_rows_per_space: None,
+            tier: FactorTier::Auto,
+            shard_cap: crate::gp::DEFAULT_SHARD_CAP,
+            blend_k: crate::gp::DEFAULT_BLEND_K,
         }
     }
 }
@@ -171,8 +229,10 @@ impl Default for FleetOptions {
 struct Fleet {
     /// fingerprint -> space. The default space (bound by v2/v3 peers and
     /// by surrogate requests that arrive before any hello) lives under
-    /// the daemon's own evaluate-plane space fingerprint.
-    spaces: Mutex<HashMap<u64, Arc<SpaceState>>>,
+    /// the daemon's own evaluate-plane space fingerprint. Read-locked on
+    /// lookup so concurrent hellos to known spaces never queue; the
+    /// write lock guards creation, recovery and eviction only.
+    spaces: RwLock<HashMap<u64, Arc<SpaceState>>>,
     default_fp: u64,
     opts: FleetOptions,
 }
@@ -231,7 +291,7 @@ impl TargetServer {
         let mut spaces = HashMap::new();
         spaces.insert(default_fp, Arc::new(SpaceState::new(default_fp, surrogate, dim)));
         shared.fleet = Some(Fleet {
-            spaces: Mutex::new(spaces),
+            spaces: RwLock::new(spaces),
             default_fp,
             opts: FleetOptions::default(),
         });
@@ -269,6 +329,15 @@ impl TargetServer {
                         .with_context(|| format!("recovering fleet space {fp:016x}"))?;
                     spaces.insert(fp, Arc::new(sp));
                 }
+            }
+        }
+        if fleet.opts.tier == FactorTier::Sharded {
+            // Pinned sharded tier: convert every space already hosted —
+            // the default space (attached exact by with_surrogate) and
+            // anything recovery just rebuilt. Lazily created spaces are
+            // converted by open_space.
+            for sp in fleet.spaces.get_mut().unwrap().values() {
+                sp.surrogate.convert_to_sharded(fleet.opts.shard_cap, fleet.opts.blend_k);
             }
         }
         Ok(self)
@@ -379,7 +448,7 @@ fn write_response(writer: &Mutex<TcpStream>, resp: &Response, shared: &Shared) -
 /// dir the space journals into its own namespace and is recovered from
 /// whatever a previous life left there; otherwise it starts fresh.
 fn open_space(fingerprint: u64, dim: usize, opts: &FleetOptions) -> Result<SpaceState> {
-    match &opts.state_dir {
+    let sp = match &opts.state_dir {
         Some(root) => {
             let dir = crate::persist::space_dir(root, fingerprint);
             let recovered = crate::persist::recover(&dir, opts.default_hyper)?;
@@ -391,37 +460,61 @@ fn open_space(fingerprint: u64, dim: usize, opts: &FleetOptions) -> Result<Space
             let dim = recovered.surrogate.dim().unwrap_or(dim);
             let mut sp = SpaceState::new(fingerprint, recovered.surrogate, dim);
             sp.persist = Some(persist);
-            Ok(sp)
+            sp
         }
-        None => Ok(SpaceState::new(fingerprint, SharedSurrogate::new(opts.default_hyper), dim)),
+        None => SpaceState::new(fingerprint, SharedSurrogate::new(opts.default_hyper), dim),
+    };
+    if opts.tier == FactorTier::Sharded {
+        // Recovery always rebuilds the flat exact factor (snapshots are
+        // tier-agnostic row stores); a pinned sharded fleet re-tiers the
+        // space before any connection can bind it.
+        sp.surrogate.convert_to_sharded(opts.shard_cap, opts.blend_k);
     }
+    Ok(sp)
 }
 
-/// Look up `fingerprint` in the fleet — lazily creating its space — and
-/// bind it (`active` incremented under the map lock, so the sweeper can
-/// never evict a space between lookup and bind). `Err` carries the
-/// `hello-err` reason.
-fn acquire_space(
-    fleet: &Fleet,
+/// Bind an already-hosted space: dimension agreement, then `active`
+/// incremented *while the caller still holds a map guard* — the sweeper
+/// takes the write lock, so it can never evict a space between lookup
+/// and bind.
+fn bind_existing(
+    sp: &Arc<SpaceState>,
     fingerprint: u64,
     dim: Option<usize>,
 ) -> Result<Arc<SpaceState>, String> {
-    let mut map = fleet.spaces.lock().unwrap();
-    if let Some(sp) = map.get(&fingerprint) {
-        if let Some(d) = dim {
-            let have = sp.dim.load(Ordering::SeqCst);
-            if have != 0 && have != d {
+    if let Some(d) = dim {
+        // CAS, not load/store: two first-hellos racing under the shared
+        // read lock must agree on a single served dimension.
+        match sp.dim.compare_exchange(0, d, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(_) => {}
+            Err(have) if have == d => {}
+            Err(have) => {
                 return Err(format!(
                     "space {fingerprint:016x}: declared dimension {d} != served dimension \
                      {have} (mismatched client build, or a fingerprint collision)"
                 ));
             }
-            if have == 0 {
-                sp.dim.store(d, Ordering::SeqCst);
-            }
         }
-        sp.active.fetch_add(1, Ordering::SeqCst);
-        return Ok(Arc::clone(sp));
+    }
+    sp.active.fetch_add(1, Ordering::SeqCst);
+    Ok(Arc::clone(sp))
+}
+
+/// Look up `fingerprint` in the fleet — lazily creating its space — and
+/// bind it. Known spaces bind under the shared *read* lock (hello storms
+/// to distinct spaces proceed in parallel); only a miss upgrades to the
+/// write lock, double-checking the map after the upgrade. `Err` carries
+/// the `hello-err` reason.
+fn acquire_space(
+    fleet: &Fleet,
+    fingerprint: u64,
+    dim: Option<usize>,
+) -> Result<Arc<SpaceState>, String> {
+    {
+        let map = fleet.spaces.read().unwrap();
+        if let Some(sp) = map.get(&fingerprint) {
+            return bind_existing(sp, fingerprint, dim);
+        }
     }
     let Some(d) = dim else {
         return Err(format!(
@@ -429,6 +522,12 @@ fn acquire_space(
              for the fleet to build its store"
         ));
     };
+    let mut map = fleet.spaces.write().unwrap();
+    if let Some(sp) = map.get(&fingerprint) {
+        // Another hello created the space between our read miss and the
+        // write lock.
+        return bind_existing(sp, fingerprint, dim);
+    }
     if map.len() >= fleet.opts.max_spaces {
         return Err(format!(
             "fleet is at --max-spaces {} and space {fingerprint:016x} is not hosted here",
@@ -456,7 +555,10 @@ fn sweep_idle_spaces(shared: &Shared, ttl: Duration) {
         std::thread::sleep(interval);
         let mut evicted = Vec::new();
         {
-            let mut map = fleet.spaces.lock().unwrap();
+            // Write lock: eviction must be atomic with respect to
+            // acquire_space's read-locked bind (a space still in the map
+            // cannot gain a binder while we remove it).
+            let mut map = fleet.spaces.write().unwrap();
             let dead: Vec<u64> = map
                 .iter()
                 .filter(|(fp, sp)| {
@@ -514,7 +616,7 @@ impl ConnCtx {
     fn space(&mut self, shared: &Shared) -> Option<Arc<SpaceState>> {
         if self.space.is_none() {
             let fleet = shared.fleet.as_ref()?;
-            let map = fleet.spaces.lock().unwrap();
+            let map = fleet.spaces.read().unwrap();
             let sp = map.get(&fleet.default_fp).expect("the default space is never evicted");
             sp.active.fetch_add(1, Ordering::SeqCst);
             self.space = Some(Arc::clone(sp));
@@ -536,6 +638,37 @@ impl ConnCtx {
             if sp.active.fetch_sub(1, Ordering::SeqCst) == 1 {
                 *sp.last_release.lock().unwrap() = Instant::now();
             }
+        }
+    }
+}
+
+/// Row-cap policy (`--max-rows-per-space`, module docs). `None` lets the
+/// tell proceed — converting the space to the sharded tier first when
+/// the cap is reached under [`FactorTier::Auto`]; `Some(reason)` refuses
+/// it ([`FactorTier::Exact`] at the cap). Counts *total* observations
+/// (queued tells included), so a fire-and-forget storm cannot overshoot
+/// the cap by the queue depth.
+fn enforce_row_cap(opts: &FleetOptions, sp: &SpaceState) -> Option<String> {
+    let cap = opts.max_rows_per_space?;
+    if sp.surrogate.total_observations() < cap {
+        return None;
+    }
+    match opts.tier {
+        FactorTier::Exact => Some(format!(
+            "space {:016x} is at --max-rows-per-space {cap} and the factor tier is pinned \
+             exact; raise the cap or serve --surrogate sharded",
+            sp.fingerprint
+        )),
+        FactorTier::Auto | FactorTier::Sharded => {
+            if !sp.surrogate.is_sharded() {
+                sp.surrogate.convert_to_sharded(opts.shard_cap, opts.blend_k);
+                eprintln!(
+                    "tftune: space {:016x} reached {cap} row(s); factor converted to the \
+                     sharded tier (shard cap {}, blend {})",
+                    sp.fingerprint, opts.shard_cap, opts.blend_k
+                );
+            }
+            None
         }
     }
 }
@@ -576,6 +709,18 @@ fn handle_surrogate_request(
         }
         SurrogateRequest::TellObs { x, y, ys } => match conn.space(shared) {
             Some(sp) => {
+                let opts = &shared.fleet.as_ref().expect("a bound space implies a fleet").opts;
+                if let Some(message) = enforce_row_cap(opts, &sp) {
+                    // A tell is fire-and-forget, so a refusal cannot be
+                    // paired positionally: write one typed error line and
+                    // close the connection (return false). The teller's
+                    // next round trip surfaces the error and it redials.
+                    let line =
+                        encode_surrogate_response(&SurrogateResponse::Error { message });
+                    let mut w = writer.lock().unwrap();
+                    let _ = writeln!(w, "{line}");
+                    return false;
+                }
                 // Fire-and-forget: queue into this space's factor
                 // (enqueue order across connections = arrival order here)
                 // and send no response, so tells never stall the teller.

@@ -1,0 +1,343 @@
+//! Sharded-surrogate pins (ISSUE 9): the contracts the scaling tier
+//! rests on, end to end through the public API.
+//!
+//! - **One shard is the exact engine, bitwise.** With `shard_cap >= n`
+//!   the KD tree never splits and every call delegates verbatim to the
+//!   single inner `IncrementalGp` — pinned to the bit over a trajectory
+//!   that interleaves pushes, constant-liar fantasies, retractions,
+//!   target swaps, multi-objective panels and predictions.
+//! - **The blended posterior tracks the exact posterior.** Multi-shard
+//!   predictions stay close to the full exact GP (documented tolerance
+//!   at each assertion), and the blended std never undercuts the exact
+//!   std — conditioning on a *subset* of the data can only widen a GP
+//!   posterior, and the variance-weighted blend preserves that floor.
+//! - **BO quality survives sharding.** At n = 256 on the simulator, BO
+//!   driven by the sharded tier lands within 10% of exact BO's best
+//!   (mean over 3 seeds).
+//! - **Tell cost is bounded.** Far past the cap, per-tell time stays
+//!   flat and the ensemble's factor storage is O(n·cap), nowhere near
+//!   the flat engine's O(n²) triangle.
+//! - **Conversion re-tiers in place.** `convert_to_sharded` keeps the
+//!   store, splits it into shards, stays idempotent, and the handle
+//!   keeps draining tells afterwards.
+
+use std::time::{Duration, Instant};
+
+use tftune::algorithms::BayesOpt;
+use tftune::evaluator::{tune, SimEvaluator};
+use tftune::gp::{GpHyper, IncrementalGp, ScoreWorkspace, SharedSurrogate, ShardedGp};
+use tftune::server::FactorTier;
+use tftune::sim::ModelId;
+use tftune::util::linalg::packed_len;
+use tftune::util::{stats, Rng};
+
+fn random_row(rng: &mut Rng, d: usize) -> Vec<f64> {
+    (0..d).map(|_| rng.f64()).collect()
+}
+
+/// A smooth deterministic surface with strong variation over the unit
+/// cube — both engines should reconstruct it, so their posteriors are
+/// comparable candidate by candidate.
+fn surface(x: &[f64]) -> f64 {
+    let mut v = 0.0;
+    for (k, &xi) in x.iter().enumerate() {
+        let c = 0.25 + 0.4 * (k as f64 % 2.0);
+        v += (2.0 + k as f64) * (xi - c) * (xi - c);
+    }
+    3.0 - v
+}
+
+/// (a) `shard_cap >= n` keeps one shard, and one shard IS the exact
+/// engine: every output bit-identical over a pinned trajectory.
+#[test]
+fn single_shard_is_bitwise_identical_to_exact() {
+    let d = 4;
+    let c = 32;
+    let mut exact = IncrementalGp::new(GpHyper::default());
+    let mut sharded = ShardedGp::new(GpHyper::default(), 10_000, 2);
+    assert_eq!(sharded.num_shards(), 1);
+
+    let mut rng = Rng::new(0x5AD1);
+    let cand: Vec<f64> = (0..c * d).map(|_| rng.f64()).collect();
+    let mut ws_e = ScoreWorkspace::default();
+    let mut ws_s = ScoreWorkspace::default();
+
+    for step in 0..48 {
+        let x = random_row(&mut rng, d);
+        let yv = surface(&x) + 0.05 * rng.f64();
+        assert_eq!(exact.push(&x, yv), sharded.push(&x, yv), "push diverged at {step}");
+
+        if step % 5 == 3 {
+            // Constant-liar fantasies ride the same routed path.
+            let fx = random_row(&mut rng, d);
+            assert_eq!(exact.extend_fantasy(&fx, 0.25), sharded.extend_fantasy(&fx, 0.25));
+        }
+
+        exact.score_into(&cand, c, 1.5, 0.3, &mut ws_e);
+        sharded.score_into(&cand, c, 1.5, 0.3, &mut ws_s);
+        for j in 0..c {
+            assert_eq!(
+                ws_e.mean[j].to_bits(),
+                ws_s.mean[j].to_bits(),
+                "mean diverged at step {step}, candidate {j}"
+            );
+            assert_eq!(
+                ws_e.std[j].to_bits(),
+                ws_s.std[j].to_bits(),
+                "std diverged at step {step}, candidate {j}"
+            );
+            assert_eq!(
+                ws_e.gain[j].to_bits(),
+                ws_s.gain[j].to_bits(),
+                "gain diverged at step {step}, candidate {j}"
+            );
+        }
+
+        exact.retract_fantasies();
+        sharded.retract_fantasies();
+    }
+
+    // Installed-target swap (the multi-objective ask path), same bits.
+    let n = exact.total();
+    assert_eq!(sharded.total(), n);
+    let alt: Vec<f64> = (0..n).map(|i| 0.01 * i as f64 - 0.2).collect();
+    exact.set_targets(&alt);
+    sharded.set_targets(&alt);
+    exact.score_into(&cand, c, 0.0, 0.0, &mut ws_e);
+    sharded.score_into(&cand, c, 0.0, 0.0, &mut ws_s);
+    for j in 0..c {
+        assert_eq!(ws_e.mean[j].to_bits(), ws_s.mean[j].to_bits(), "post-swap mean {j}");
+    }
+
+    // K-objective panel, same bits.
+    let t2: Vec<f64> = (0..n).map(|i| (i as f64 * 0.07) - 1.0).collect();
+    let refs: Vec<&[f64]> = vec![&alt, &t2];
+    exact.score_multi_into(&cand, c, &refs, &mut ws_e);
+    sharded.score_multi_into(&cand, c, &refs, &mut ws_s);
+    assert_eq!(ws_e.n_obj, ws_s.n_obj);
+    for k in 0..2 {
+        for j in 0..c {
+            assert_eq!(
+                ws_e.mean_obj[k * c + j].to_bits(),
+                ws_s.mean_obj[k * c + j].to_bits(),
+                "objective {k} mean diverged at candidate {j}"
+            );
+        }
+    }
+
+    // Posterior entry point, same bits.
+    let pts: Vec<Vec<f64>> = (0..8).map(|_| random_row(&mut rng, d)).collect();
+    let pe = exact.predict(&pts);
+    let ps = sharded.predict(&pts);
+    for j in 0..pts.len() {
+        assert_eq!(pe.mean[j].to_bits(), ps.mean[j].to_bits(), "predict mean {j}");
+        assert_eq!(pe.std[j].to_bits(), ps.std[j].to_bits(), "predict std {j}");
+    }
+
+    assert_eq!(sharded.num_shards(), 1, "cap >= n must never split");
+}
+
+/// (b) Multi-shard posterior vs the full exact GP at n = 256.
+///
+/// Documented tolerances:
+/// - means: normalised RMSE <= 0.3 — the blended mean must track the
+///   exact posterior to well under a third of that posterior's own
+///   cross-candidate spread. A broken router or blend (near-prior or
+///   shuffled means) sits at nRMSE ≈ 1 and fails loudly; the gPoE
+///   approximation with local shards sits far below the bound.
+/// - stds: `blend >= 0.999 × exact` everywhere. Each shard conditions
+///   on a subset of the data, so its variance dominates the exact GP's
+///   (GP posterior variance is non-increasing under added data), and
+///   the variance-weighted blend cannot go below its narrowest member;
+///   the 0.1% margin absorbs floating-point noise only. Upward, a
+///   generous factor bounds gross mis-blends.
+#[test]
+fn blended_posterior_tracks_exact_posterior() {
+    let (d, n, cap) = (2usize, 256usize, 48usize);
+    let mut rng = Rng::new(0xB1E7D);
+    let mut exact = IncrementalGp::new(GpHyper::default());
+    let mut sharded = ShardedGp::new(GpHyper::default(), cap, 2);
+    for _ in 0..n {
+        let x = random_row(&mut rng, d);
+        let y = surface(&x);
+        assert!(exact.push(&x, y));
+        assert!(sharded.push(&x, y));
+    }
+    assert!(sharded.num_shards() >= 4, "{n} rows at cap {cap} must split repeatedly");
+    assert!(sharded.max_shard_rows() <= cap, "a split leaf may not exceed the cap");
+
+    let pts: Vec<Vec<f64>> = (0..96)
+        .map(|_| (0..d).map(|_| 0.05 + 0.9 * rng.f64()).collect())
+        .collect();
+    let pe = exact.predict(&pts);
+    let ps = sharded.predict(&pts);
+
+    let mean_of = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let centre = mean_of(&pe.mean);
+    let spread =
+        (mean_of(&pe.mean.iter().map(|m| (m - centre) * (m - centre)).collect::<Vec<_>>()))
+            .sqrt();
+    assert!(spread > 1e-3, "exact posterior is flat — the property test would be vacuous");
+
+    let mut sq = 0.0;
+    for j in 0..pts.len() {
+        assert!(ps.mean[j].is_finite() && ps.std[j].is_finite(), "non-finite blend at {j}");
+        assert!(ps.std[j] > 0.0, "non-positive blended std at {j}");
+        assert!(
+            ps.std[j] >= 0.999 * pe.std[j],
+            "blended std {} undercut exact {} at candidate {j}",
+            ps.std[j],
+            pe.std[j]
+        );
+        assert!(
+            ps.std[j] <= 20.0 * pe.std[j] + 1.0,
+            "blended std {} implausibly wide vs exact {} at candidate {j}",
+            ps.std[j],
+            pe.std[j]
+        );
+        let dm = ps.mean[j] - pe.mean[j];
+        sq += dm * dm;
+    }
+    let nrmse = (sq / pts.len() as f64).sqrt() / spread;
+    assert!(nrmse <= 0.3, "blended mean nRMSE {nrmse:.3} exceeds the documented 0.3");
+}
+
+/// (c) End-to-end BO on the simulator: at n = 256 the sharded tier's
+/// best-found stays within 10% of exact BO's (mean over 3 seeds). The
+/// cap of 64 forces real sharding well before the budget ends.
+#[test]
+fn sharded_bo_regret_within_ten_percent_of_exact() {
+    let model = ModelId::NcfFp32;
+    let space = model.space();
+    let mut exact_best = Vec::new();
+    let mut sharded_best = Vec::new();
+    for seed in [1u64, 2, 3] {
+        let mut bo = BayesOpt::new(space.clone(), seed).with_candidates(128);
+        let mut eval = SimEvaluator::new(model, seed);
+        let h = tune(&mut bo, &mut eval, 256).unwrap();
+        exact_best.push(h.best().unwrap().value);
+
+        let handle = SharedSurrogate::new_sharded(GpHyper::default(), 64, 2);
+        let mut bo = BayesOpt::new(space.clone(), seed)
+            .with_shared_surrogate(handle.clone())
+            .with_candidates(128);
+        let mut eval = SimEvaluator::new(model, seed);
+        let h = tune(&mut bo, &mut eval, 256).unwrap();
+        sharded_best.push(h.best().unwrap().value);
+
+        assert!(handle.is_sharded(), "the handle must stay on the sharded tier");
+        assert!(
+            handle.num_shards().unwrap_or(0) > 1,
+            "256 observations at cap 64 must have split (seed {seed})"
+        );
+    }
+    let me = stats::mean(&exact_best);
+    let ms = stats::mean(&sharded_best);
+    assert!(
+        ms >= 0.9 * me,
+        "sharded BO mean best {ms:.1} fell more than 10% below exact BO's {me:.1} \
+         (per seed: sharded {sharded_best:?} vs exact {exact_best:?})"
+    );
+}
+
+/// (d) Tell-cost boundedness far past the cap: factor storage is
+/// O(n·cap) — deterministic, the real teeth — and a late batch of tells
+/// costs about what an early batch did (loose wall-clock guard; an
+/// accidental O(n²)-per-tell engine would be ~40× slower here).
+#[test]
+fn tell_cost_stays_bounded_far_past_the_cap() {
+    let (d, cap, n) = (3usize, 32usize, 1000usize);
+    let mut gp = ShardedGp::new(GpHyper::default(), cap, 2);
+    let mut rng = Rng::new(0xB0);
+    let push_one = |gp: &mut ShardedGp, rng: &mut Rng| {
+        let x = random_row(rng, d);
+        let y = surface(&x);
+        assert!(gp.push(&x, y), "random shard factor must stay positive definite");
+    };
+
+    for _ in 0..100 {
+        push_one(&mut gp, &mut rng);
+    }
+    let t0 = Instant::now();
+    for _ in 0..100 {
+        push_one(&mut gp, &mut rng); // rows 100..200
+    }
+    let early = t0.elapsed();
+    for _ in 0..700 {
+        push_one(&mut gp, &mut rng); // rows 200..900
+    }
+    let t1 = Instant::now();
+    for _ in 0..100 {
+        push_one(&mut gp, &mut rng); // rows 900..1000
+    }
+    let late = t1.elapsed();
+
+    assert_eq!(gp.len(), n);
+    assert!(gp.max_shard_rows() <= cap, "no leaf may end past the cap on spread-y data");
+    assert!(
+        gp.num_shards() >= n / cap,
+        "{} shards cannot each hold <= {cap} of {n} rows",
+        gp.num_shards()
+    );
+    // Every shard of m <= cap rows stores m(m+1)/2 <= m(cap+1)/2 factor
+    // entries, so the ensemble is <= n(cap+1)/2 — at n = 1000, cap = 32
+    // that is 16.5k entries vs the flat triangle's 500.5k.
+    let bound = n * (cap + 1) / 2;
+    assert!(
+        gp.factor_entries() <= bound,
+        "factor holds {} entries, past the O(n·cap) bound {bound}",
+        gp.factor_entries()
+    );
+    assert!(
+        gp.factor_entries() * 8 < packed_len(n),
+        "factor ({} entries) should be at least 8× below the flat O(n²) triangle ({})",
+        gp.factor_entries(),
+        packed_len(n)
+    );
+    assert!(
+        late <= early * 8 + Duration::from_millis(20),
+        "per-tell cost grew: rows 900..1000 took {late:?} vs {early:?} for rows 100..200"
+    );
+}
+
+/// (e) `convert_to_sharded` re-tiers a live handle in place: the store
+/// survives, shards form, the call is idempotent, and tells keep
+/// draining afterwards. Also pins the daemon's tier-flag spellings.
+#[test]
+fn convert_to_sharded_re_tiers_in_place() {
+    let shared = SharedSurrogate::new(GpHyper::default());
+    let mut rng = Rng::new(7);
+    let tell_one = |shared: &SharedSurrogate, rng: &mut Rng| {
+        let x = random_row(rng, 3);
+        let y = surface(&x);
+        shared.tell(x, y);
+    };
+    for _ in 0..96 {
+        tell_one(&shared, &mut rng);
+    }
+    drop(shared.lock()); // drain into the flat factor
+    assert!(!shared.is_sharded());
+    assert_eq!(shared.num_shards(), None);
+
+    shared.convert_to_sharded(24, 2);
+    assert!(shared.is_sharded());
+    assert_eq!(shared.len(), 96, "conversion must keep every observation");
+    assert!(shared.num_shards().unwrap() > 1, "96 rows at cap 24 must split");
+
+    let before = shared.num_shards();
+    shared.convert_to_sharded(24, 2); // idempotent: second call is a no-op
+    assert_eq!(shared.num_shards(), before);
+
+    for _ in 0..32 {
+        tell_one(&shared, &mut rng);
+    }
+    drop(shared.lock());
+    assert_eq!(shared.len(), 128, "a converted store must keep draining tells");
+
+    // The surrogate-serve tier policy spellings.
+    assert_eq!(FactorTier::parse("auto"), Some(FactorTier::Auto));
+    assert_eq!(FactorTier::parse("exact"), Some(FactorTier::Exact));
+    assert_eq!(FactorTier::parse("native"), Some(FactorTier::Exact));
+    assert_eq!(FactorTier::parse("sharded"), Some(FactorTier::Sharded));
+    assert_eq!(FactorTier::parse("made-up"), None);
+}
