@@ -3,6 +3,7 @@
 //!   - simulator evaluation (L3 substrate)
 //!   - native GP fit+score vs the AOT HLO GP via PJRT (L2+L1), by history size
 //!   - shared-surrogate tell enqueue + ask under teller contention
+//!   - observability plane: instrumented tell vs the disabled-bus gate
 //!   - sharded scaling tier: routed tell + blended ask at n=20k, vs the
 //!     exact engine's extrapolated O(n²) wall
 //!   - surrogate service: factor-delta export/encode + remote tell round trip
@@ -209,6 +210,53 @@ fn main() -> anyhow::Result<()> {
             r
         });
         (r_tell, r_ask)
+    };
+
+    println!("\n== observability plane: event emit on the tell path ==");
+    let (r_event_tell, r_event_disabled) = {
+        use tftune::obs::{CountingSink, Event, EventBus};
+        let hyper = GpHyper::default();
+
+        // event_emit_tell: the shared-surrogate tell with a live event
+        // bus (counting sink attached) — the instrumented per-tell
+        // price: enqueue plus one seq allocation and one non-blocking
+        // try_send to the collector. Compare against shared_tell_enqueue
+        // to read off what instrumentation costs when someone watches.
+        let bus = EventBus::new();
+        let sink = CountingSink::default();
+        bus.attach(Box::new(sink.clone()));
+        let shared = SharedSurrogate::new(hyper);
+        shared.set_event_source(bus.source("surrogate"));
+        let row: Vec<f64> = (0..5).map(|_| rng.f64()).collect();
+        let mut told = 0u64;
+        let r_tell = b.bench("gp/event_emit_tell", || {
+            shared.tell(row.clone(), 1.0);
+            told += 1;
+            if told % 4096 == 0 {
+                shared.reset();
+            }
+            told
+        });
+        bus.flush();
+
+        // event_emit_disabled: the emit call itself on a bus with no
+        // sink. The gate is one relaxed load, so this must stay ~0 —
+        // a run that never asked for observability pays nothing.
+        let idle = EventBus::new();
+        let src = idle.source("surrogate");
+        let mut pending = 0usize;
+        let r_disabled = b.bench("gp/event_emit_disabled", || {
+            pending += 1;
+            src.emit(Event::SurrogateTell { pending });
+            pending
+        });
+        println!(
+            "  instrumented tell {:.1} ns vs disabled emit {:.1} ns (sink saw {} records)",
+            r_tell.mean_ns,
+            r_disabled.mean_ns,
+            sink.seen.load(std::sync::atomic::Ordering::Relaxed),
+        );
+        (r_tell, r_disabled)
     };
 
     println!("\n== surrogate service: delta export + remote tell round trip ==");
@@ -443,6 +491,8 @@ fn main() -> anyhow::Result<()> {
             &r_score_mo,
             &r_shared_tell,
             &r_shared_ask,
+            &r_event_tell,
+            &r_event_disabled,
             &r_sync_delta,
             &r_chunked,
             &r_quantised,
@@ -617,7 +667,9 @@ fn bench_scoring_engine(b: &mut Bencher, rng: &mut Rng) -> [BenchResult; 5] {
 /// ISSUE 9 adds the sharded scaling tier — `sharded_tell_n20k` /
 /// `sharded_ask_512_n20k` at the default cap, with `exact_tell_n2048` as
 /// the measured point the O(n²) extrapolation — the wall the tier
-/// breaks — is anchored to).
+/// breaks — is anchored to; ISSUE 10 adds the observability pair —
+/// `event_emit_tell` instrumented tell / `event_emit_disabled` the
+/// sink-less gate, which must stay ~0).
 /// Keys are the bench short names.
 /// `"estimated": false` marks the numbers as measured on real hardware —
 /// CI's regression guard skips files whose baseline was only estimated.

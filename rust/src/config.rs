@@ -112,6 +112,14 @@ pub struct TuneConfig {
     /// nearest shards, combined product-of-experts style. 1 = pure
     /// routing (owner only).
     pub blend_k: usize,
+    /// Observability event stream (`--events-file`): every structured
+    /// event the run emits — trial lifecycle, ask batches, surrogate
+    /// drains, Pareto/hypervolume advances, sync/lease traffic — is
+    /// appended to this JSONL file (see `obs`). `tftune dashboard
+    /// --events-file F` tails it live; `--report` post-processes it into
+    /// critical-path accounting. None = the plane stays disabled and the
+    /// hot paths skip event construction entirely.
+    pub events_file: Option<PathBuf>,
 }
 
 /// File inside a `--state-dir` holding the streamed per-trial session
@@ -142,6 +150,7 @@ impl Default for TuneConfig {
             score_tier: crate::gp::ScoreTier::F64,
             shard_cap: crate::gp::DEFAULT_SHARD_CAP,
             blend_k: crate::gp::DEFAULT_BLEND_K,
+            events_file: None,
         }
     }
 }
@@ -205,6 +214,13 @@ impl TuneConfig {
             ("score_tier", self.score_tier.name().into()),
             ("shard_cap", self.shard_cap.into()),
             ("blend_k", self.blend_k.into()),
+            (
+                "events_file",
+                match &self.events_file {
+                    Some(p) => p.display().to_string().into(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -287,6 +303,9 @@ impl TuneConfig {
             anyhow::ensure!(n > 0, "blend_k must be positive");
             cfg.blend_k = n as usize;
         }
+        if let Some(p) = j.get("events_file").and_then(Json::as_str) {
+            cfg.events_file = Some(PathBuf::from(p));
+        }
         Ok(cfg)
     }
 
@@ -312,6 +331,18 @@ impl TuneConfig {
     /// service attachment and the lengthscale-selection flag. `Send` so
     /// the session can be driven from a `SessionGroup` thread.
     pub fn build_tuner(&self) -> Result<Box<dyn crate::algorithms::Tuner + Send>> {
+        self.build_tuner_events(None)
+    }
+
+    /// [`TuneConfig::build_tuner`] with the observability plane attached:
+    /// when `events` is a live bus, the remote replica emits
+    /// `sync-factor`/`lease-published` under the `"replica"` source and a
+    /// local sharded factor emits `surrogate-tell`/`surrogate-drain`/
+    /// `factor-size` under `"surrogate"`.
+    pub fn build_tuner_events(
+        &self,
+        events: Option<&crate::obs::EventBus>,
+    ) -> Result<Box<dyn crate::algorithms::Tuner + Send>> {
         /// Attach the BO-only run-spec options in the required order:
         /// remote factor replica first (the engine adopts the service's
         /// hypers), then lengthscale selection (in-guard changes write
@@ -320,6 +351,7 @@ impl TuneConfig {
         fn finish<S: crate::gp::Surrogate + Send + 'static>(
             mut bo: crate::algorithms::BayesOpt<S>,
             cfg: &TuneConfig,
+            events: Option<&crate::obs::EventBus>,
         ) -> Result<Box<dyn crate::algorithms::Tuner + Send>> {
             if let Some(addr) = &cfg.surrogate_addr {
                 // Fingerprinted attach: a v4 fleet daemon binds (or lazily
@@ -329,6 +361,9 @@ impl TuneConfig {
                 let replica =
                     crate::gp::RemoteSurrogate::connect_space(addr, &cfg.model.space())
                         .with_context(|| format!("attaching surrogate service {addr}"))?;
+                if let Some(bus) = events {
+                    replica.set_event_source(bus.source("replica"));
+                }
                 bo = bo.with_shared_surrogate(replica);
             }
             if cfg.tune_lengthscale {
@@ -361,10 +396,11 @@ impl TuneConfig {
                     finish(
                         crate::algorithms::BayesOpt::with_surrogate(space, self.seed, surrogate),
                         self,
+                        events,
                     )
                 }
                 SurrogateKind::Native => {
-                    finish(crate::algorithms::BayesOpt::new(space, self.seed), self)
+                    finish(crate::algorithms::BayesOpt::new(space, self.seed), self, events)
                 }
                 SurrogateKind::Sharded => {
                     // The sharded tier is a *local* scaling engine. A
@@ -383,10 +419,14 @@ impl TuneConfig {
                         self.shard_cap,
                         self.blend_k,
                     );
+                    if let Some(bus) = events {
+                        shared.set_event_source(bus.source("surrogate"));
+                    }
                     finish(
                         crate::algorithms::BayesOpt::new(space, self.seed)
                             .with_shared_surrogate(shared),
                         self,
+                        events,
                     )
                 }
             };
@@ -444,7 +484,18 @@ impl TuneConfig {
     /// into both the engine (acquisition) and the session (history
     /// recording).
     pub fn build_session(&self) -> Result<crate::session::TuningSession> {
-        let tuner = self.build_tuner()?;
+        self.build_session_events(None)
+    }
+
+    /// [`TuneConfig::build_session`] with the observability plane
+    /// attached: the session emits trial/ask/front events under the
+    /// `"session"` source and the tuner's surrogate handles are wired per
+    /// [`TuneConfig::build_tuner_events`].
+    pub fn build_session_events(
+        &self,
+        events: Option<&crate::obs::EventBus>,
+    ) -> Result<crate::session::TuningSession> {
+        let tuner = self.build_tuner_events(events)?;
         let pool = crate::evaluator::sim_pool(
             self.model,
             self.seed,
@@ -460,6 +511,9 @@ impl TuneConfig {
         if let Some(set) = &self.objectives {
             session = session.with_objectives(set.clone());
         }
+        if let Some(bus) = events {
+            session = session.with_events(bus.source("session"));
+        }
         Ok(session)
     }
 
@@ -473,10 +527,26 @@ impl TuneConfig {
     /// fresh engine and only the *remaining* budget is spent (the
     /// returned history is prior + new, in completion order).
     pub fn run(&self) -> Result<crate::history::History> {
+        // The observability plane: one bus for the whole run, draining to
+        // the JSONL file sink. Built before the session so the tuner's
+        // surrogate handles and the session driver share it; flushed (a
+        // collector barrier) before the run returns so the file holds
+        // every emitted record.
+        let events = match &self.events_file {
+            Some(path) => {
+                let bus = crate::obs::EventBus::new();
+                bus.attach(Box::new(crate::obs::FileSink::create(path)?));
+                Some(bus)
+            }
+            None => None,
+        };
         let Some(dir) = self.state_dir.clone() else {
             anyhow::ensure!(!self.resume, "resume requires a state directory (--state-dir)");
-            let mut session = self.build_session()?;
+            let mut session = self.build_session_events(events.as_ref())?;
             let history = session.run()?;
+            if let Some(bus) = &events {
+                bus.flush();
+            }
             if let Some(path) = &self.history_out {
                 history.save(path, &self.model.space())?;
             }
@@ -505,7 +575,7 @@ impl TuneConfig {
         // every prior row (all objective columns), so its posterior
         // conditions on the full interrupted campaign before the first
         // new proposal.
-        let mut tuner = self.build_tuner()?;
+        let mut tuner = self.build_tuner_events(events.as_ref())?;
         for e in prior.iter() {
             tuner.warm_start_obs(&e.config, e.value, &e.objectives);
         }
@@ -568,7 +638,13 @@ impl TuneConfig {
         if let Some(set) = &self.objectives {
             session = session.with_objectives(set.clone());
         }
+        if let Some(bus) = &events {
+            session = session.with_events(bus.source("session"));
+        }
         let fresh = session.run()?;
+        if let Some(bus) = &events {
+            bus.flush();
+        }
 
         // prior + new, renumbered in completion order (matches the
         // journal on disk).
@@ -618,6 +694,7 @@ mod tests {
         c.score_tier = crate::gp::ScoreTier::F32;
         c.shard_cap = 128;
         c.blend_k = 3;
+        c.events_file = Some(PathBuf::from("/tmp/events.jsonl"));
         let j = c.to_json();
         let c2 = TuneConfig::from_json(&j).unwrap();
         assert_eq!(c2.model, ModelId::BertFp32);
@@ -638,6 +715,7 @@ mod tests {
         assert_eq!(c2.score_tier, crate::gp::ScoreTier::F32);
         assert_eq!(c2.shard_cap, 128);
         assert_eq!(c2.blend_k, 3);
+        assert_eq!(c2.events_file, Some(PathBuf::from("/tmp/events.jsonl")));
     }
 
     #[test]

@@ -59,13 +59,14 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::kernel::GpHyper;
 use super::shared::{SharedSurrogate, SurrogateGuard, SurrogateHandle};
+use crate::obs::{Event, EventSource};
 use crate::space::SearchSpace;
 use crate::server::proto::{
     decode_surrogate_response, encode_surrogate_request, SurrogateRequest, SurrogateResponse,
@@ -94,14 +95,18 @@ impl Conn {
         Ok(())
     }
 
-    fn request(&mut self, req: &SurrogateRequest) -> Result<SurrogateResponse> {
+    /// One round trip; the second element is the raw response line length
+    /// in bytes (newline included) — the wire cost the observability
+    /// plane attributes to `sync-factor` events.
+    fn request(&mut self, req: &SurrogateRequest) -> Result<(SurrogateResponse, usize)> {
         self.send(req)?;
         let mut line = String::new();
         let n = self.reader.read_line(&mut line)?;
         if n == 0 {
             bail!("surrogate service closed the connection");
         }
-        decode_surrogate_response(line.trim_end()).map_err(|e| anyhow::anyhow!(e))
+        let resp = decode_surrogate_response(line.trim_end()).map_err(|e| anyhow::anyhow!(e))?;
+        Ok((resp, n))
     }
 }
 
@@ -125,7 +130,7 @@ fn dial(addr: &str, space: Option<(u64, usize)>) -> Result<(Conn, u32)> {
         fingerprint: space.map(|(fp, _)| fp),
         dim: space.map(|(_, d)| d),
     };
-    let version = match conn.request(&hello)? {
+    let version = match conn.request(&hello)?.0 {
         SurrogateResponse::HelloOk { version } => {
             anyhow::ensure!(
                 (2..=PROTOCOL_VERSION).contains(&version),
@@ -199,6 +204,10 @@ struct Link {
     /// Whether catch-up factors ride the quantised-with-exact-residual
     /// encoding (bit-identical either way; this only shrinks the wire).
     quant: AtomicBool,
+    /// Observability: emits `sync-factor` / `lease-published` events once
+    /// a source is attached ([`RemoteSurrogate::set_event_source`]).
+    /// Write-once so the request hot paths read it lock-free.
+    events: OnceLock<EventSource>,
 }
 
 impl Link {
@@ -233,7 +242,7 @@ impl Link {
         ls.active = None;
         ls.last_key.clear();
         if !ls.points.is_empty() {
-            if let Ok(SurrogateResponse::Lease { id }) = st
+            if let Ok((SurrogateResponse::Lease { id }, _)) = st
                 .wire
                 .as_mut()
                 .expect("wire installed above")
@@ -244,6 +253,9 @@ impl Link {
                 // same in-flight set keeps this lease, and an *empty*
                 // drop (batch finished) still retracts it.
                 ls.last_key = lease_key(&ls.points);
+                if let Some(src) = self.events.get() {
+                    src.emit(Event::LeasePublished { id, points: ls.points.len() });
+                }
             }
         }
         Ok(())
@@ -255,6 +267,13 @@ impl Link {
     /// (decoded [`SurrogateResponse::Error`]s) are returned to the
     /// caller, never retried.
     fn roundtrip(&self, req: &SurrogateRequest) -> Result<SurrogateResponse> {
+        self.roundtrip_counted(req).map(|(resp, _)| resp)
+    }
+
+    /// [`Link::roundtrip`] that also reports the raw response line length
+    /// in bytes — the catch-up path sums these into `sync-factor` events
+    /// so the dashboard's wire-cost column reflects actual octets moved.
+    fn roundtrip_counted(&self, req: &SurrogateRequest) -> Result<(SurrogateResponse, usize)> {
         let (attempts, base) = self.backoff();
         let mut delay = base;
         let mut last_err: Option<anyhow::Error> = None;
@@ -420,6 +439,7 @@ impl RemoteSurrogate {
             base_ms: AtomicU64::new(DEFAULT_RECONNECT_BASE.as_millis() as u64),
             chunk: AtomicUsize::new(0),
             quant: AtomicBool::new(false),
+            events: OnceLock::new(),
         });
 
         let initial =
@@ -454,7 +474,12 @@ impl RemoteSurrogate {
                 match hook_link
                     .roundtrip(&SurrogateRequest::AskLease { points: points.to_vec() })
                 {
-                    Ok(SurrogateResponse::Lease { id }) => Some(id),
+                    Ok(SurrogateResponse::Lease { id }) => {
+                        if let Some(src) = hook_link.events.get() {
+                            src.emit(Event::LeasePublished { id, points: points.len() });
+                        }
+                        Some(id)
+                    }
                     // Transport hiccup past the reconnect budget: skip —
                     // disconnect expiry is the backstop for a lease that
                     // never got replaced.
@@ -540,6 +565,18 @@ impl RemoteSurrogate {
         self
     }
 
+    /// Attach an observability event source: every catch-up sync emits
+    /// one `sync-factor` event (rows imported, raw wire bytes, elapsed
+    /// nanos) and every successful lease publication — guard-drop hook
+    /// and redial re-publish alike — emits `lease-published`. A clone is
+    /// forwarded to the local mirror so its drain/factor-size events flow
+    /// under the same source name. Write-once: the first source wins and
+    /// later calls are ignored, keeping the request hot paths lock-free.
+    pub fn set_event_source(&self, src: EventSource) {
+        self.inner.mirror.set_event_source(src.clone());
+        let _ = self.inner.link.events.set(src);
+    }
+
     /// Drop the live wire now, as if the daemon had just died: the
     /// client socket closes and the next round trip goes through the
     /// redial path under the configured reconnect budget. Chaos drills
@@ -560,12 +597,17 @@ impl RemoteSurrogate {
     /// reconnect budget, so a daemon restored from `--state-dir` between
     /// two asks is caught up transparently.
     fn sync(&self) -> Result<()> {
+        let events = self.inner.link.events.get().filter(|s| s.enabled());
+        let t0 = events.map(|_| Instant::now());
+        let start_n = self.inner.mirror.len();
+        let mut wire_bytes = 0usize;
         loop {
             let from_n = self.inner.mirror.len();
             let (max_rows, quantise) = self.inner.link.catchup_knobs();
             let req = SurrogateRequest::SyncFactor { from_n, max_rows, quantise };
-            match self.inner.link.roundtrip(&req)? {
-                SurrogateResponse::FactorDelta { delta: d, pending, .. } => {
+            match self.inner.link.roundtrip_counted(&req)? {
+                (SurrogateResponse::FactorDelta { delta: d, pending, .. }, n) => {
+                    wire_bytes += n;
                     anyhow::ensure!(
                         self.inner.mirror.import_delta(&d),
                         "surrogate delta rejected (replica at {from_n}, delta from {})",
@@ -580,11 +622,18 @@ impl RemoteSurrogate {
                          row(s) still pending"
                     );
                 }
-                SurrogateResponse::Error { message } => {
+                (SurrogateResponse::Error { message }, _) => {
                     bail!("surrogate service error: {message}")
                 }
-                other => bail!("unexpected sync response: {other:?}"),
+                (other, _) => bail!("unexpected sync response: {other:?}"),
             }
+        }
+        if let (Some(src), Some(t0)) = (events, t0) {
+            src.emit(Event::SyncFactor {
+                rows: self.inner.mirror.len() - start_n,
+                bytes: wire_bytes,
+                ns: t0.elapsed().as_nanos() as u64,
+            });
         }
         self.inner.pending_tells.store(0, Ordering::SeqCst);
         Ok(())

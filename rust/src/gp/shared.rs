@@ -104,11 +104,13 @@
 //! assert!(ws.std[0] > 0.0);
 //! ```
 
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
 
 use super::incremental::{IncrementalGp, ScoreTier, ScoreWorkspace};
 use super::kernel::{GpHyper, UNBOUNDED_HISTORY};
 use super::sharded::ShardedGp;
+use crate::obs::{Event, EventSource};
 use crate::util::linalg::{packed_len, BlockSpec};
 
 /// Callback a replica installs to publish the guard's own fantasy points
@@ -464,6 +466,10 @@ struct Inner {
     /// released) when a guard changed hypers via `ensure_hyper`, so a
     /// served factor's siblings converge on one hyper.
     hyper_hook: Mutex<Option<HyperHook>>,
+    /// Observability source (`tell` enqueue depth, drain timing, factor
+    /// geometry — see [`crate::obs`]). Write-once so the tell hot path
+    /// reads it lock-free; unset (the default) costs one pointer load.
+    events: OnceLock<EventSource>,
 }
 
 /// A cloneable handle to one concurrently-shared surrogate model (module
@@ -504,6 +510,7 @@ impl SharedSurrogate {
                 }),
                 lease_hook: Mutex::new(None),
                 hyper_hook: Mutex::new(None),
+                events: OnceLock::new(),
             }),
         }
     }
@@ -541,6 +548,7 @@ impl SharedSurrogate {
                 }),
                 lease_hook: Mutex::new(None),
                 hyper_hook: Mutex::new(None),
+                events: OnceLock::new(),
             }),
         }
     }
@@ -609,7 +617,14 @@ impl SharedSurrogate {
     /// pass — the row is folded into the factor, in enqueue order, by the
     /// next [`SharedSurrogate::lock`].
     pub fn tell(&self, x: Vec<f64>, y: f64) {
-        self.inner.queue.lock().unwrap().push((x, y, Vec::new()));
+        let pending = {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.push((x, y, Vec::new()));
+            q.len()
+        };
+        if let Some(src) = self.inner.events.get() {
+            src.emit(Event::SurrogateTell { pending });
+        }
     }
 
     /// Enqueue one observation carrying K objective columns (`ys[0]`
@@ -623,7 +638,25 @@ impl SharedSurrogate {
             return;
         };
         let extra = extra.to_vec();
-        self.inner.queue.lock().unwrap().push((x, y, extra));
+        let pending = {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.push((x, y, extra));
+            q.len()
+        };
+        if let Some(src) = self.inner.events.get() {
+            src.emit(Event::SurrogateTell { pending });
+        }
+    }
+
+    /// Point this handle's emissions at an observability source (see
+    /// [`crate::obs`]): every `tell` reports the queue depth; every
+    /// [`SharedSurrogate::lock`] reports what the drain folded in and
+    /// the resulting factor geometry. Write-once — the first caller
+    /// wins, later calls are ignored — so the tell path never takes a
+    /// lock to find it. Emissions are non-blocking and near-free until
+    /// a sink attaches to the bus.
+    pub fn set_event_source(&self, src: EventSource) {
+        let _ = self.inner.events.set(src);
     }
 
     /// Observations told but not yet drained into the model.
@@ -858,6 +891,12 @@ impl SharedSurrogate {
         // order, so holding model-state while acquiring them could cycle.
         let log_lease = self.inner.lease_hook.lock().unwrap().is_some();
         let log_hyper = self.inner.hyper_hook.lock().unwrap().is_some();
+        // Drain timing for the observability plane: wall time from lock
+        // acquisition through the queue fold — the "surrogate lock"
+        // column of the critical-path report. Gated on an attached sink
+        // so the uninstrumented path never reads the clock.
+        let events = self.inner.events.get().filter(|s| s.enabled());
+        let t0 = events.map(|_| Instant::now());
         let mut state = self.inner.state.lock().unwrap();
         // Defensive: a guard dropped mid-proposal (panic) may have left
         // fantasy rows; the factor must hold committed rows only before
@@ -868,10 +907,22 @@ impl SharedSurrogate {
         // once warmed up.
         let mut pending = std::mem::take(&mut state.drain_buf);
         std::mem::swap(&mut pending, &mut *self.inner.queue.lock().unwrap());
+        let drained = pending.len();
         for (x, y, extra) in pending.drain(..) {
             state.drain_one(x, y, extra);
         }
         state.drain_buf = pending;
+        if let (Some(src), Some(t0)) = (events, t0) {
+            src.emit(Event::SurrogateDrain {
+                drained,
+                total: state.obs_x.len(),
+                wait_ns: t0.elapsed().as_nanos() as u64,
+            });
+            src.emit(Event::FactorSize {
+                rows: state.factored.len(),
+                entries: packed_len(state.factored.len()),
+            });
+        }
         SurrogateGuard {
             state: Some(state),
             hook: &self.inner.lease_hook,

@@ -250,6 +250,21 @@ impl History {
         crate::objectives::hypervolume(&self.objective_points(), ref_point)
     }
 
+    /// [`History::hypervolume`] with the reference point derived from the
+    /// history itself: the per-column minimum over all finite objective
+    /// vectors, pushed out by `margin`
+    /// (see [`crate::objectives::hv_reference`]). Deterministic in the
+    /// recorded points, so a history replayed bit-identically from an
+    /// event stream reproduces this value bit-identically — the contract
+    /// the observability plane's `hypervolume` events rely on. None when
+    /// no finite objective vector exists yet.
+    pub fn hypervolume_auto(&self, margin: f64) -> Option<f64> {
+        let points = self.objective_points();
+        let k = points.iter().map(|p| p.len()).max()?;
+        let r = crate::objectives::hv_reference(&points, k, margin)?;
+        Some(crate::objectives::hypervolume(&points, &r))
+    }
+
     /// Per-parameter sampled (min, max) over all evaluations — Table 2's
     /// raw material. None when empty.
     pub fn sampled_ranges(&self, dim: usize) -> Option<Vec<(i64, i64)>> {
@@ -512,6 +527,26 @@ mod tests {
         // (5,-1) gives 5*2=10; (1,-0.1) adds 1*(−0.1−(−1))=0.9 → 10.9.
         let hv = h.hypervolume(&[0.0, -3.0]);
         assert!((hv - 10.9).abs() < 1e-12, "hv {hv}");
+    }
+
+    #[test]
+    fn hypervolume_auto_matches_explicit_reference() {
+        let s = space();
+        let mut rng = Rng::new(10);
+        let mut h = History::new();
+        assert!(h.hypervolume_auto(0.5).is_none(), "empty history has no HV");
+        for (id, obj) in [(0u64, vec![5.0, -1.0]), (1, vec![1.0, -0.1]), (2, vec![2.0, -2.0])] {
+            let m = Measurement::new(obj[0]);
+            h.push_trial_multi(id, s.random(&mut rng), &m, obj);
+        }
+        // Reference = per-column min − margin = (1−0.5, −2−0.5) = (0.5, −2.5).
+        let want = h.hypervolume(&[0.5, -2.5]);
+        let got = h.hypervolume_auto(0.5).unwrap();
+        assert_eq!(got.to_bits(), want.to_bits());
+        // Replaying the same records through a fresh history reproduces it
+        // bit-identically — the observability plane's replay contract.
+        let h2 = History::from_jsonl(&h.to_jsonl(&s), &s).unwrap();
+        assert_eq!(h2.hypervolume_auto(0.5).unwrap().to_bits(), got.to_bits());
     }
 
     #[test]

@@ -158,6 +158,7 @@ pub mod figures;
 pub mod gp;
 pub mod history;
 pub mod objectives;
+pub mod obs;
 pub mod persist;
 pub mod runtime;
 pub mod server;

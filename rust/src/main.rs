@@ -9,6 +9,7 @@
 //!   figures         regenerate paper figures/tables (fig5 fig6 fig7 table1 all)
 //!   space           print Table 1 / search-space info
 //!   profile         per-op schedule under a configuration
+//!   dashboard       live panels / critical-path report over an event stream
 //!
 //! Flag parsing is in-tree (clap is not vendored in this offline image).
 
@@ -27,7 +28,7 @@ use tftune::sim::ModelId;
 
 /// Flags that take no value. Data-driven so adding one is a single entry
 /// here rather than a special case inside the parser.
-const BOOL_FLAGS: &[&str] = &["fine", "help", "resume", "tune-lengthscale"];
+const BOOL_FLAGS: &[&str] = &["fine", "help", "once", "report", "resume", "tune-lengthscale"];
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
 struct Args {
@@ -116,7 +117,7 @@ COMMANDS
                [--surrogate-addr host:port] [--tune-lengthscale]
                [--score-threads N] [--score-tier f64|f32]
                [--shard-cap 512] [--blend-k 2]
-               [--state-dir DIR] [--resume]
+               [--state-dir DIR] [--resume] [--events-file events.jsonl]
                [--out hist.jsonl] [--config run.json]
   serve        --model <m> [--addr 127.0.0.1:7070] [--seed 0]
   surrogate-serve  [--addr 127.0.0.1:7071] [--objectives spec]
@@ -124,6 +125,7 @@ COMMANDS
                [--max-spaces 16] [--space-idle-secs S]
                [--max-rows-per-space N] [--surrogate auto|exact|sharded]
                [--shard-cap 512] [--blend-k 2]
+               [--events-addr 127.0.0.1:7072] [--events-file events.jsonl]
                host the authoritative shared GP factors: tuner processes
                started with --surrogate-addr condition the model whose
                search-space fingerprint their hello declares
@@ -137,6 +139,8 @@ COMMANDS
   space        [--model <m>]                      (Table 1)
   profile      --model <m> [--inter 1 --intra 14 --batch 256 --blocktime 0
                --omp 24]   (per-op schedule under a configuration)
+  dashboard    --events-file events.jsonl | --events-addr host:port
+               [--refresh-ms 500] [--once] [--max-seconds S] [--report]
 
 PARALLELISM
   tune --parallel N measures N trials concurrently on N simulator
@@ -186,6 +190,18 @@ DURABILITY
   streams every completed trial to DIR/session.jsonl; add --resume to
   continue an interrupted run's remaining budget instead of starting
   cold. See ARCHITECTURE.md, section "Durability".
+
+OBSERVABILITY
+  tune --events-file P streams every session event (trial lifecycle,
+  surrogate queue drains, Pareto-front advances, sync round trips) as one
+  JSON line each; surrogate-serve --events-addr additionally publishes
+  the daemon's stream over TCP to any number of subscribers. Emission is
+  non-blocking: a slow or absent consumer never stalls a tell/ask, the
+  bus instead counts drops (reported at shutdown). `tftune dashboard`
+  renders live panels from either source; --report reads a finished
+  events file and prints the critical-path accounting (evaluator wait vs
+  surrogate lock vs wire vs acquisition). See ARCHITECTURE.md, section
+  "The observability plane".
 
 MULTI-OBJECTIVE
   --objectives declares what a BO run optimises: the primary objective
@@ -289,6 +305,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
     }
     if let Some(dir) = args.get("state-dir") {
         cfg.state_dir = Some(PathBuf::from(dir));
+    }
+    if let Some(p) = args.get("events-file") {
+        cfg.events_file = Some(PathBuf::from(p));
     }
     if args.get("resume").is_some() {
         cfg.resume = true;
@@ -442,6 +461,35 @@ fn cmd_surrogate_serve(args: &Args) -> Result<()> {
         shard_cap,
         blend_k,
     })?;
+    // Observability plane: one bus feeds every sink, and the daemon only
+    // pays for clock reads / encoding when at least one sink is attached.
+    // The publisher handle must outlive serve() — dropping it closes the
+    // accept loop and every subscriber.
+    let events = if args.get("events-file").is_some() || args.get("events-addr").is_some() {
+        Some(tftune::obs::EventBus::new())
+    } else {
+        None
+    };
+    let mut publisher = None;
+    if let Some(bus) = &events {
+        if let Some(path) = args.get("events-file") {
+            bus.attach(Box::new(tftune::obs::FileSink::create(Path::new(path))?));
+        }
+        if let Some(addr) = args.get("events-addr") {
+            let p = tftune::obs::EventPublisher::bind(addr, bus)?;
+            println!("event stream on {} (line-delimited JSON, subscribe to tail)", p.addr());
+            publisher = Some(p);
+        }
+    }
+    let server = match &events {
+        Some(bus) => {
+            if let Some(p) = &persistence {
+                p.set_event_source(bus.source("persist"));
+            }
+            server.with_events(bus.source("daemon"))
+        }
+        None => server,
+    };
     println!(
         "surrogate service hosting the shared GP factor on {} (protocol v{})",
         server.local_addr()?,
@@ -516,7 +564,53 @@ fn cmd_surrogate_serve(args: &Args) -> Result<()> {
         let seq = p.snapshot(&factor)?;
         println!("final snapshot written at seq {seq}");
     }
+    if let Some(bus) = &events {
+        bus.flush();
+        if bus.dropped() > 0 {
+            eprintln!(
+                "tftune: {} event(s) dropped by slow sinks (see --events-* docs)",
+                bus.dropped()
+            );
+        }
+    }
+    if let Some(mut p) = publisher {
+        p.stop();
+    }
     println!("surrogate service shut down");
+    Ok(())
+}
+
+fn cmd_dashboard(args: &Args) -> Result<()> {
+    use tftune::obs::dashboard::{critical_path, follow_file, follow_socket, DashOptions};
+
+    let file = args.get("events-file");
+    let addr = args.get("events-addr");
+    anyhow::ensure!(
+        file.is_some() != addr.is_some(),
+        "dashboard needs exactly one event source: --events-file PATH or --events-addr HOST:PORT"
+    );
+    if args.get("report").is_some() {
+        // Post-hoc critical-path accounting is a whole-stream computation,
+        // so it reads a finished file rather than tailing a socket.
+        let path = file.context("--report reads a completed run: use --events-file")?;
+        let records = tftune::obs::read_events_file(Path::new(path))?;
+        anyhow::ensure!(!records.is_empty(), "no events in {path}");
+        print!("{}", critical_path(&records).render());
+        return Ok(());
+    }
+    let opts = DashOptions {
+        refresh_ms: args.u64_or("refresh-ms", 500)?,
+        once: args.get("once").is_some(),
+        max_seconds: args.f64_opt("max-seconds")?,
+    };
+    let mut out = std::io::stdout();
+    match (file, addr) {
+        (Some(path), None) => follow_file(Path::new(path), &opts, &mut out)?,
+        (None, Some(addr)) => {
+            follow_socket(addr, &opts, &mut out)?;
+        }
+        _ => unreachable!("guarded by the exactly-one ensure above"),
+    }
     Ok(())
 }
 
@@ -749,6 +843,7 @@ fn main() -> Result<()> {
         Some("figures") => cmd_figures(&args),
         Some("space") => cmd_space(&args),
         Some("profile") => cmd_profile(&args),
+        Some("dashboard") => cmd_dashboard(&args),
         Some(other) => bail!("unknown command '{other}'\n\n{}", usage()),
         None => {
             println!("{}", usage());

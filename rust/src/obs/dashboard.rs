@@ -1,0 +1,672 @@
+//! The `tftune dashboard` engine: folds an event stream (recorded
+//! `--events-file` JSONL or the daemon's live `--events-addr` socket)
+//! into terminal panels — regret, Pareto hypervolume, throughput, lease
+//! churn — and post-processes a recorded stream into critical-path
+//! accounting (`--report`): where a session's wall-clock actually went,
+//! split into evaluator wait vs surrogate lock vs wire vs acquisition
+//! scoring.
+//!
+//! Everything here is a pure fold over [`EventRecord`]s, so the same
+//! code path serves the live dashboard, the offline report, and the
+//! event-accounting tests. In particular [`replay_history`] rebuilds a
+//! session's `History` from `trial-measured` events alone —
+//! bit-identically, because the records carry full configs and
+//! shortest-round-trip f64 payloads.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::{Event, EventRecord};
+use crate::history::{History, Measurement};
+
+/// The reference-point margin the session uses for its `hypervolume`
+/// events (`History::hypervolume_auto`): consumers replaying the stream
+/// must use the same value to land on the same bits.
+pub const HV_MARGIN: f64 = 0.5;
+
+/// Rebuild the session's `History` from its event stream alone: every
+/// `trial-measured` record carries the full config, value, cost and
+/// objective vector, in completion order. The result is bit-identical
+/// to the live session's history (the accounting suite pins this).
+pub fn replay_history(records: &[EventRecord]) -> History {
+    let mut h = History::new();
+    for r in records {
+        if let Event::TrialMeasured { trial, config, value, cost_s, objectives } = &r.event {
+            let m = Measurement::new(*value).with_cost_s(*cost_s);
+            h.push_trial_multi(*trial, config.clone(), &m, objectives.clone());
+        }
+    }
+    h
+}
+
+/// Running fold of an event stream into everything the panels show.
+#[derive(Debug, Default)]
+pub struct DashboardState {
+    /// Trials handed to evaluators / measurements recorded.
+    pub issued: u64,
+    pub measured: u64,
+    /// Monotone best-so-far objective curve (appended per measurement).
+    pub best_curve: Vec<f64>,
+    /// Hypervolume trace (multi-objective sessions).
+    pub hv_curve: Vec<f64>,
+    /// Size of the non-dominated front after the last advance.
+    pub front_size: usize,
+    /// Trial id of the last front advance.
+    pub front_trial: u64,
+    /// `t_ns` stamps of measurements, for the throughput window.
+    measured_at: Vec<u64>,
+    /// Lease churn counters.
+    pub leases_published: u64,
+    pub leases_expired: u64,
+    /// Wire catch-up totals.
+    pub sync_rows: u64,
+    pub sync_bytes: u64,
+    /// Surrogate totals.
+    pub tells: u64,
+    pub drains: u64,
+    pub factor_rows: usize,
+    pub factor_entries: usize,
+    /// Fleet + persistence counters.
+    pub spaces_created: u64,
+    pub spaces_evicted: u64,
+    pub snapshots: u64,
+    pub wal_records: usize,
+    /// Per-source sequence gaps observed in the stream — each gap is a
+    /// record the bus (or a stalled subscriber queue) dropped.
+    pub seq_gaps: u64,
+    /// Latest timestamp seen (nanos since the emitting bus's epoch).
+    pub last_t_ns: u64,
+    next_seq: BTreeMap<String, u64>,
+}
+
+impl DashboardState {
+    pub fn new() -> DashboardState {
+        DashboardState::default()
+    }
+
+    /// Pre-seed the per-source sequence cursors from an `obs-hello`, so
+    /// a subscriber that joins mid-stream doesn't misread the skipped
+    /// prefix as drops.
+    pub fn seed_seqs(&mut self, seqs: &[(String, u64)]) {
+        for (name, next) in seqs {
+            self.next_seq.insert(name.clone(), *next);
+        }
+    }
+
+    /// Fold one record in.
+    pub fn apply(&mut self, r: &EventRecord) {
+        let cursor = self.next_seq.entry(r.source.clone()).or_insert(r.seq);
+        if r.seq > *cursor {
+            self.seq_gaps += r.seq - *cursor;
+        }
+        *cursor = r.seq + 1;
+        self.last_t_ns = self.last_t_ns.max(r.t_ns);
+        match &r.event {
+            Event::TrialIssued { .. } => self.issued += 1,
+            Event::TrialMeasured { value, .. } => {
+                self.measured += 1;
+                self.measured_at.push(r.t_ns);
+                let best = self.best_curve.last().copied().unwrap_or(f64::NEG_INFINITY);
+                self.best_curve.push(best.max(*value));
+            }
+            Event::AskStart { .. } | Event::AskEnd { .. } => {}
+            Event::SurrogateTell { .. } => self.tells += 1,
+            Event::SurrogateDrain { .. } => self.drains += 1,
+            Event::FactorSize { rows, entries } => {
+                self.factor_rows = *rows;
+                self.factor_entries = *entries;
+            }
+            Event::FrontAdvanced { trial, front_size } => {
+                self.front_size = *front_size;
+                self.front_trial = *trial;
+            }
+            Event::Hypervolume { hv } => self.hv_curve.push(*hv),
+            Event::SyncFactor { rows, bytes, .. } => {
+                self.sync_rows += *rows as u64;
+                self.sync_bytes += *bytes as u64;
+            }
+            Event::LeasePublished { .. } => self.leases_published += 1,
+            Event::LeaseExpired { leases } => self.leases_expired += *leases as u64,
+            Event::SpaceCreated { .. } => self.spaces_created += 1,
+            Event::SpaceEvicted { .. } => self.spaces_evicted += 1,
+            Event::SnapshotWritten { .. } => self.snapshots += 1,
+            Event::WalSync { records } => self.wal_records = *records,
+        }
+    }
+
+    /// Measurements completed in the trailing `window` of stream time,
+    /// as a rate per second. 0 until two measurements exist.
+    pub fn throughput(&self, window: Duration) -> f64 {
+        let Some(&last) = self.measured_at.last() else { return 0.0 };
+        let w_ns = window.as_nanos() as u64;
+        let floor = last.saturating_sub(w_ns);
+        let n = self.measured_at.iter().rev().take_while(|&&t| t >= floor).count();
+        if n < 2 {
+            return 0.0;
+        }
+        n as f64 / (w_ns as f64 / 1e9).max(1e-9)
+    }
+
+    /// Current best objective value, if any measurement landed.
+    pub fn best(&self) -> Option<f64> {
+        self.best_curve.last().copied()
+    }
+
+    /// Render the panels as one ANSI frame (clear-screen prefix when
+    /// `live`, plain text otherwise — the latter is what `--once`
+    /// prints and what tests assert against).
+    pub fn render(&self, live: bool, dropped_hint: u64) -> String {
+        let mut s = String::new();
+        if live {
+            s.push_str("\x1b[2J\x1b[H");
+        }
+        let t_s = self.last_t_ns as f64 / 1e9;
+        s.push_str(&format!("tftune dashboard  ·  t+{t_s:.1}s\n"));
+        s.push_str(&format!(
+            "trials   issued {:>6}  measured {:>6}  throughput {:>7.2}/s\n",
+            self.issued,
+            self.measured,
+            self.throughput(Duration::from_secs(10)),
+        ));
+        match self.best() {
+            Some(b) => s.push_str(&format!(
+                "regret   best {b:<14.6} {}\n",
+                sparkline(&self.best_curve, 48)
+            )),
+            None => s.push_str("regret   (no measurements yet)\n"),
+        }
+        if let Some(&hv) = self.hv_curve.last() {
+            s.push_str(&format!(
+                "pareto   hv {hv:<16.6} front {:>4} (last advance @ trial {})\n         {}\n",
+                self.front_size,
+                self.front_trial,
+                sparkline(&self.hv_curve, 48)
+            ));
+        } else if self.front_size > 0 {
+            s.push_str(&format!(
+                "front    size {:>4} (last advance @ trial {})\n",
+                self.front_size, self.front_trial
+            ));
+        }
+        s.push_str(&format!(
+            "engine   tells {:>7}  drains {:>6}  factor {} rows / {} entries\n",
+            self.tells, self.drains, self.factor_rows, self.factor_entries
+        ));
+        s.push_str(&format!(
+            "wire     sync {:>6} rows / {} bytes   leases +{} / -{}\n",
+            self.sync_rows, self.sync_bytes, self.leases_published, self.leases_expired
+        ));
+        if self.spaces_created + self.spaces_evicted + self.snapshots > 0
+            || self.wal_records > 0
+        {
+            s.push_str(&format!(
+                "fleet    spaces +{} / -{}   snapshots {}   wal {} records\n",
+                self.spaces_created, self.spaces_evicted, self.snapshots, self.wal_records
+            ));
+        }
+        s.push_str(&format!(
+            "stream   seq gaps {}  publisher dropped {}\n",
+            self.seq_gaps, dropped_hint
+        ));
+        s
+    }
+}
+
+/// A unicode sparkline of `values`, downsampled to at most `width`.
+fn sparkline(values: &[f64], width: usize) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() || width == 0 {
+        return String::new();
+    }
+    let take_every = values.len().div_ceil(width);
+    let pts: Vec<f64> = values
+        .iter()
+        .copied()
+        .enumerate()
+        .filter(|(i, _)| i % take_every == 0 || *i == values.len() - 1)
+        .map(|(_, v)| v)
+        .collect();
+    let (lo, hi) = pts
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+    let span = (hi - lo).max(1e-300);
+    pts.iter()
+        .map(|&v| BARS[(((v - lo) / span) * 7.0).round().clamp(0.0, 7.0) as usize])
+        .collect()
+}
+
+/// Wall-clock split of a recorded session (`dashboard --report`): the
+/// four critical-path categories the ISSUE names, plus the residue.
+/// All seconds. Categories are *attributed* time: the evaluator column
+/// sums measurement costs (which overlap wall-clock under a parallel
+/// session — the report prints the parallelism ratio rather than
+/// pretending the columns partition the wall).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CriticalPath {
+    /// End-to-end stream time: max − min `t_ns` over the records.
+    pub wall_s: f64,
+    /// Σ `cost_s` over `trial-measured` — time spent inside evaluators.
+    pub evaluator_wait_s: f64,
+    /// Σ `wait_ns` over `surrogate-drain` — lock acquisition + queue
+    /// drains on the shared factor.
+    pub surrogate_lock_s: f64,
+    /// Σ `ns` over `sync-factor` — catch-up round trips on the wire.
+    pub wire_s: f64,
+    /// Σ `ns` over `ask-end`, minus lock and wire time nested inside
+    /// the asks (clamped at 0) — pure acquisition scoring.
+    pub acquisition_s: f64,
+    /// Wall minus everything attributable (clamped at 0): scheduling,
+    /// serialisation, the session loop itself.
+    pub other_s: f64,
+    pub trials: u64,
+    /// Per-source sequence gaps in the record (dropped events).
+    pub seq_gaps: u64,
+}
+
+impl CriticalPath {
+    /// The report as printable text, one category per line with its
+    /// share of the wall-clock.
+    pub fn render(&self) -> String {
+        let wall = self.wall_s.max(1e-12);
+        let pct = |v: f64| 100.0 * v / wall;
+        let mut s = String::new();
+        s.push_str(&format!(
+            "critical path · {} trials over {:.3}s wall\n",
+            self.trials, self.wall_s
+        ));
+        s.push_str(&format!(
+            "  evaluator wait      {:>10.3}s  {:>5.1}%\n",
+            self.evaluator_wait_s,
+            pct(self.evaluator_wait_s)
+        ));
+        s.push_str(&format!(
+            "  surrogate lock      {:>10.3}s  {:>5.1}%\n",
+            self.surrogate_lock_s,
+            pct(self.surrogate_lock_s)
+        ));
+        s.push_str(&format!(
+            "  wire (sync-factor)  {:>10.3}s  {:>5.1}%\n",
+            self.wire_s,
+            pct(self.wire_s)
+        ));
+        s.push_str(&format!(
+            "  acquisition scoring {:>10.3}s  {:>5.1}%\n",
+            self.acquisition_s,
+            pct(self.acquisition_s)
+        ));
+        s.push_str(&format!(
+            "  other               {:>10.3}s  {:>5.1}%\n",
+            self.other_s,
+            pct(self.other_s)
+        ));
+        if self.evaluator_wait_s > self.wall_s {
+            s.push_str(&format!(
+                "  (evaluator time exceeds wall ×{:.2}: parallel session)\n",
+                self.evaluator_wait_s / wall
+            ));
+        }
+        if self.seq_gaps > 0 {
+            s.push_str(&format!(
+                "  warning: {} dropped event(s) — times are lower bounds\n",
+                self.seq_gaps
+            ));
+        }
+        s
+    }
+}
+
+/// Post-process a recorded stream into its [`CriticalPath`] accounting.
+pub fn critical_path(records: &[EventRecord]) -> CriticalPath {
+    let mut min_t = u64::MAX;
+    let mut max_t = 0u64;
+    let mut evaluator_ns = 0.0f64;
+    let mut lock_ns = 0u64;
+    let mut wire_ns = 0u64;
+    let mut ask_ns = 0u64;
+    let mut trials = 0u64;
+    let mut state = DashboardState::new();
+    for r in records {
+        state.apply(r);
+        min_t = min_t.min(r.t_ns);
+        max_t = max_t.max(r.t_ns);
+        match &r.event {
+            Event::TrialMeasured { cost_s, .. } => {
+                trials += 1;
+                evaluator_ns += cost_s * 1e9;
+            }
+            Event::SurrogateDrain { wait_ns, .. } => lock_ns += wait_ns,
+            Event::SyncFactor { ns, .. } => wire_ns += ns,
+            Event::AskEnd { ns, .. } => ask_ns += ns,
+            _ => {}
+        }
+    }
+    let wall_s = if max_t > min_t { (max_t - min_t) as f64 / 1e9 } else { 0.0 };
+    let evaluator_wait_s = evaluator_ns / 1e9;
+    let surrogate_lock_s = lock_ns as f64 / 1e9;
+    let wire_s = wire_ns as f64 / 1e9;
+    // Drains and syncs run nested inside asks (the engine locks, and a
+    // replica catches up, on the ask path), so subtract them out of the
+    // ask total to leave pure scoring.
+    let acquisition_s = (ask_ns as f64 / 1e9 - surrogate_lock_s - wire_s).max(0.0);
+    let attributed = evaluator_wait_s + surrogate_lock_s + wire_s + acquisition_s;
+    CriticalPath {
+        wall_s,
+        evaluator_wait_s,
+        surrogate_lock_s,
+        wire_s,
+        acquisition_s,
+        other_s: (wall_s - attributed).max(0.0),
+        trials,
+        seq_gaps: state.seq_gaps,
+    }
+}
+
+/// Options for the live `dashboard` loops.
+#[derive(Debug, Clone)]
+pub struct DashOptions {
+    /// Frame interval.
+    pub refresh_ms: u64,
+    /// Render a single plain frame (no ANSI clear) and exit.
+    pub once: bool,
+    /// Stop after this much wall-clock (None = until EOF/disconnect,
+    /// or forever for a growing file).
+    pub max_seconds: Option<f64>,
+}
+
+impl Default for DashOptions {
+    fn default() -> DashOptions {
+        DashOptions { refresh_ms: 500, once: false, max_seconds: None }
+    }
+}
+
+fn deadline(opts: &DashOptions) -> Option<Instant> {
+    opts.max_seconds.map(|s| Instant::now() + Duration::from_secs_f64(s.max(0.0)))
+}
+
+/// Tail a recorded (possibly still-growing) events file into live
+/// panels on `out`. With `once`, folds what's there and prints one
+/// frame. Undecodable lines (e.g. a partial line at the write frontier)
+/// are skipped, not fatal — the next poll rereads from the same offset.
+pub fn follow_file(path: &Path, opts: &DashOptions, out: &mut dyn Write) -> Result<()> {
+    let mut state = DashboardState::new();
+    let mut offset = 0u64;
+    let stop_at = deadline(opts);
+    loop {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading events file {}", path.display()))?;
+        let tail = &text[offset.min(text.len() as u64) as usize..];
+        let mut consumed = 0usize;
+        for line in tail.split_inclusive('\n') {
+            if !line.ends_with('\n') {
+                break; // partial frontier line: retry next poll
+            }
+            consumed += line.len();
+            let trimmed = line.trim_end();
+            if trimmed.is_empty() {
+                continue;
+            }
+            if let Ok(rec) = super::decode_event_record(trimmed) {
+                state.apply(&rec);
+            }
+        }
+        offset += consumed as u64;
+        write!(out, "{}", state.render(!opts.once, 0))?;
+        out.flush().ok();
+        if opts.once {
+            return Ok(());
+        }
+        if stop_at.is_some_and(|d| Instant::now() >= d) {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(opts.refresh_ms.max(10)));
+    }
+}
+
+/// Subscribe to a live `--events-addr` publisher and render until
+/// disconnect (or `max_seconds`/`once`). Returns the folded state so
+/// callers (and tests) can inspect what was seen.
+pub fn follow_socket(
+    addr: &str,
+    opts: &DashOptions,
+    out: &mut dyn Write,
+) -> Result<DashboardState> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let mut w = stream.try_clone()?;
+    writeln!(w, "{}", crate::server::proto::encode_obs_subscribe())?;
+    let mut reader = BufReader::new(stream);
+    let mut hello_line = String::new();
+    reader.read_line(&mut hello_line)?;
+    let (dropped, seqs) = crate::server::proto::decode_obs_hello(hello_line.trim_end())
+        .map_err(|e| anyhow::anyhow!("bad obs-hello: {e}"))?;
+    let mut state = DashboardState::new();
+    state.seed_seqs(&seqs);
+    let stop_at = deadline(opts);
+    reader
+        .get_ref()
+        .set_read_timeout(Some(Duration::from_millis(opts.refresh_ms.max(10))))?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // publisher closed
+            Ok(_) => {
+                if let Ok(rec) = super::decode_event_record(line.trim_end()) {
+                    state.apply(&rec);
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e.into()),
+        }
+        write!(out, "{}", state.render(!opts.once, dropped))?;
+        out.flush().ok();
+        if opts.once {
+            break;
+        }
+        if stop_at.is_some_and(|d| Instant::now() >= d) {
+            break;
+        }
+    }
+    Ok(state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Event;
+
+    fn rec(source: &str, seq: u64, t_ns: u64, event: Event) -> EventRecord {
+        EventRecord { source: source.into(), seq, t_ns, event }
+    }
+
+    fn measured(trial: u64, value: f64, cost_s: f64) -> Event {
+        Event::TrialMeasured {
+            trial,
+            config: vec![1, 2, 3],
+            value,
+            cost_s,
+            objectives: vec![],
+        }
+    }
+
+    #[test]
+    fn state_folds_counts_and_curves() {
+        let mut s = DashboardState::new();
+        s.apply(&rec("session", 0, 10, Event::TrialIssued { trial: 0 }));
+        s.apply(&rec("session", 1, 20, measured(0, 3.0, 0.5)));
+        s.apply(&rec("session", 2, 30, Event::TrialIssued { trial: 1 }));
+        s.apply(&rec("session", 3, 40, measured(1, 1.0, 0.25)));
+        s.apply(&rec("session", 4, 50, Event::Hypervolume { hv: 2.5 }));
+        assert_eq!(s.issued, 2);
+        assert_eq!(s.measured, 2);
+        assert_eq!(s.best_curve, vec![3.0, 3.0]);
+        assert_eq!(s.hv_curve, vec![2.5]);
+        assert_eq!(s.seq_gaps, 0);
+        let frame = s.render(false, 0);
+        assert!(frame.contains("measured"), "{frame}");
+        assert!(!frame.contains('\u{1b}'), "--once frames must be ANSI-free");
+        assert!(s.render(true, 0).contains('\u{1b}'));
+    }
+
+    #[test]
+    fn seq_gaps_count_drops_and_hello_seeding_suppresses_false_gaps() {
+        let mut s = DashboardState::new();
+        s.apply(&rec("a", 0, 0, Event::SurrogateTell { pending: 1 }));
+        s.apply(&rec("a", 3, 1, Event::SurrogateTell { pending: 1 })); // 2 dropped
+        assert_eq!(s.seq_gaps, 2);
+        // A mid-stream joiner seeded from the hello sees no false gap.
+        let mut late = DashboardState::new();
+        late.seed_seqs(&[("a".to_string(), 7)]);
+        late.apply(&rec("a", 7, 2, Event::SurrogateTell { pending: 1 }));
+        assert_eq!(late.seq_gaps, 0);
+        // An unseeded mid-stream joiner starts its cursor at first-seen.
+        let mut cold = DashboardState::new();
+        cold.apply(&rec("a", 7, 2, Event::SurrogateTell { pending: 1 }));
+        assert_eq!(cold.seq_gaps, 0);
+    }
+
+    #[test]
+    fn replay_reconstructs_history_bitwise() {
+        let records = vec![
+            rec(
+                "session",
+                0,
+                5,
+                Event::TrialMeasured {
+                    trial: 2,
+                    config: vec![4, 16, 128, 0, 10],
+                    value: 0.1 + 0.2,
+                    cost_s: 1.25,
+                    objectives: vec![0.1 + 0.2, -3.5],
+                },
+            ),
+            rec(
+                "session",
+                1,
+                9,
+                Event::TrialMeasured {
+                    trial: 0,
+                    config: vec![1, 1, 64, 0, 1],
+                    value: 7.0,
+                    cost_s: 0.5,
+                    objectives: vec![7.0, -1.0],
+                },
+            ),
+        ];
+        let h = replay_history(&records);
+        assert_eq!(h.len(), 2);
+        let e = h.iter().next().unwrap();
+        assert_eq!(e.trial_id, 2);
+        assert_eq!(e.value.to_bits(), (0.1f64 + 0.2).to_bits());
+        assert_eq!(h.iter().nth(1).unwrap().trial_id, 0);
+        // And through the wire codec: encode → decode → replay is still
+        // bit-identical (shortest-round-trip f64 text).
+        let redecoded: Vec<EventRecord> = records
+            .iter()
+            .map(|r| super::super::decode_event_record(&super::super::encode_event_record(r)).unwrap())
+            .collect();
+        let h2 = replay_history(&redecoded);
+        let bits = |h: &History| -> Vec<(u64, u64, Vec<u64>)> {
+            h.iter()
+                .map(|e| {
+                    (
+                        e.trial_id,
+                        e.value.to_bits(),
+                        e.objectives.iter().map(|v| v.to_bits()).collect(),
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(bits(&h), bits(&h2));
+    }
+
+    #[test]
+    fn critical_path_attributes_and_clamps() {
+        let records = vec![
+            rec("session", 0, 0, Event::AskStart { want: 1 }),
+            rec("session", 1, 1_000_000_000, Event::AskEnd { issued: 1, ns: 1_000_000_000 }),
+            rec("surrogate", 0, 500_000_000, Event::SurrogateDrain {
+                drained: 1,
+                total: 1,
+                wait_ns: 200_000_000,
+            }),
+            rec("replica", 0, 700_000_000, Event::SyncFactor {
+                rows: 1,
+                bytes: 100,
+                ns: 300_000_000,
+            }),
+            rec("session", 2, 3_000_000_000, measured(0, 1.0, 1.5)),
+        ];
+        let cp = critical_path(&records);
+        assert!((cp.wall_s - 3.0).abs() < 1e-9);
+        assert!((cp.evaluator_wait_s - 1.5).abs() < 1e-9);
+        assert!((cp.surrogate_lock_s - 0.2).abs() < 1e-9);
+        assert!((cp.wire_s - 0.3).abs() < 1e-9);
+        // ask 1.0s minus nested 0.2 + 0.3 → 0.5 of pure scoring.
+        assert!((cp.acquisition_s - 0.5).abs() < 1e-9);
+        // wall 3.0 − attributed 2.5 → 0.5 other.
+        assert!((cp.other_s - 0.5).abs() < 1e-9);
+        assert_eq!(cp.trials, 1);
+        let text = cp.render();
+        assert!(text.contains("evaluator wait"), "{text}");
+        // Degenerate: nested time exceeding ask time clamps at zero.
+        let cp2 = critical_path(&[
+            rec("session", 0, 0, Event::AskEnd { issued: 1, ns: 10 }),
+            rec("surrogate", 0, 1, Event::SurrogateDrain { drained: 1, total: 1, wait_ns: 50 }),
+        ]);
+        assert_eq!(cp2.acquisition_s, 0.0);
+    }
+
+    #[test]
+    fn throughput_windows_recent_measurements() {
+        let mut s = DashboardState::new();
+        for i in 0..5u64 {
+            s.apply(&rec("session", i, i * 1_000_000_000, measured(i, 1.0, 0.1)));
+        }
+        // 5 measurements inside a 10s window ending at t=4s → 0.5/s.
+        let tp = s.throughput(Duration::from_secs(10));
+        assert!((tp - 0.5).abs() < 1e-9, "tp {tp}");
+        assert_eq!(s.throughput(Duration::from_nanos(1)), 0.0);
+    }
+
+    #[test]
+    fn sparkline_shapes() {
+        assert_eq!(sparkline(&[], 10), "");
+        let flat = sparkline(&[1.0, 1.0, 1.0], 10);
+        assert_eq!(flat.chars().count(), 3);
+        let ramp = sparkline(&(0..100).map(|i| i as f64).collect::<Vec<_>>(), 8);
+        assert!(ramp.chars().count() <= 9);
+        assert!(ramp.starts_with('▁'));
+        assert!(ramp.ends_with('█'));
+    }
+
+    #[test]
+    fn follow_file_once_renders_a_frame() {
+        let dir = std::env::temp_dir().join("tftune_obs_dash_once");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ev.jsonl");
+        let lines: Vec<String> = [
+            rec("session", 0, 10, Event::TrialIssued { trial: 0 }),
+            rec("session", 1, 20, measured(0, 2.0, 0.1)),
+        ]
+        .iter()
+        .map(super::super::encode_event_record)
+        .collect();
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+        let mut out = Vec::new();
+        follow_file(&path, &DashOptions { once: true, ..DashOptions::default() }, &mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("issued"), "{text}");
+        assert!(text.contains("best"), "{text}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

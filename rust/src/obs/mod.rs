@@ -1,0 +1,963 @@
+//! The live observability plane: a structured, low-overhead event stream
+//! threaded through the whole stack (ROADMAP "Live observability plane";
+//! the snailtrail lineage — typed per-event records over TCP to an online
+//! dashboard).
+//!
+//! Every layer that does interesting work emits typed [`Event`]s through
+//! an [`EventSource`] handle: the session (trial issued/measured, batch
+//! ask start/end, front advanced, hypervolume), the shared surrogate
+//! (tell enqueue, drain, factor size), the remote replica (sync-factor
+//! bytes, lease publication), the fleet daemon (space create/evict,
+//! lease churn, served sync bytes) and the persistence plane (snapshot,
+//! WAL sync). Each record carries the source name, a **monotonic
+//! per-source sequence number** and a **relative-nanos timestamp**
+//! (nanoseconds since the bus was created), so a consumer can detect
+//! drops per source and reconstruct timelines without wall-clock skew.
+//!
+//! # Backpressure and drop semantics
+//!
+//! The hot paths this plane observes (`SharedSurrogate::tell`, the BO
+//! ask loop) must never block on an observer, so the [`EventBus`] is a
+//! **bounded, non-blocking MPSC**:
+//!
+//! - With no sink attached the bus is *disabled*: [`EventSource::emit`]
+//!   is a single relaxed atomic load and returns — near-zero, pinned by
+//!   the `event_emit_disabled` bench row.
+//! - With sinks attached, `emit` allocates the record, stamps seq +
+//!   timestamp and `try_send`s it into a bounded channel. A full channel
+//!   **drops the record and increments the visible
+//!   [`EventBus::dropped`] counter** — it never blocks the emitter. The
+//!   consumed sequence number is *not* reused, so a per-source seq gap
+//!   in the stream is the drop made visible.
+//! - A dedicated collector thread drains the channel, encodes each
+//!   record to JSONL once, and fans it out to every sink. Sinks are
+//!   trusted to be fast or internally non-blocking: the bundled
+//!   [`FileSink`] writes to a local file; the TCP [`EventPublisher`]
+//!   gives every subscriber its own bounded queue + writer thread and
+//!   *drops* (counting into the same `dropped` counter) when a stalled
+//!   subscriber's queue fills. A dead subscriber detaches; it never
+//!   stalls the collector, let alone a tell.
+//!
+//! # Wire framing
+//!
+//! Events cross the wire (and land in `--events-file`) as JSON lines:
+//! `{"src":"session","seq":3,"t_ns":81234,"ev":"trial-measured",...}`.
+//! The TCP publisher (`surrogate-serve --events-addr`) speaks a minimal
+//! line protocol: the subscriber sends one `{"type":"subscribe"}` line,
+//! the publisher answers with an `obs-hello` line carrying the current
+//! per-source next-sequence map and the cumulative drop counter (so a
+//! reconnecting subscriber knows where the stream resumes), then streams
+//! event lines until either side disconnects. Malformed, oversized or
+//! hostile subscribe lines are answered with one `error` line and a
+//! close — strictly per-connection, like the surrogate protocol
+//! (`server/proto.rs`, which owns the subscribe/hello codecs).
+//!
+//! `tftune dashboard` tails either framing (socket or file) into live
+//! regret / Pareto-hypervolume / throughput / lease-churn panels, and
+//! `tftune dashboard --report` post-processes an events file into
+//! critical-path accounting ([`dashboard`]).
+
+pub mod dashboard;
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Default bound of the bus channel: deep enough that a healthy collector
+/// never backpressures a burst, small enough that a wedged one costs KBs.
+pub const DEFAULT_BUS_CAPACITY: usize = 8192;
+
+/// Default bound of each TCP subscriber's private queue.
+pub const DEFAULT_SUBSCRIBER_QUEUE: usize = 1024;
+
+/// One structured event. Field payloads are deliberately plain (ids,
+/// counts, f64 bits) so records replay deterministically: the
+/// `trial-measured` payload alone reconstructs the session's `History`
+/// bit-identically (`obs::dashboard::replay_history`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// The session handed a trial to an evaluator.
+    TrialIssued { trial: u64 },
+    /// A measurement landed and was recorded in `History` — carries
+    /// everything `History::push_trial_multi` needs for bitwise replay.
+    TrialMeasured { trial: u64, config: Vec<i64>, value: f64, cost_s: f64, objectives: Vec<f64> },
+    /// The session asked the engine for a batch (acquisition begins).
+    AskStart { want: usize },
+    /// The batch came back: `issued` trials after `ns` of engine time.
+    AskEnd { issued: usize, ns: u64 },
+    /// One observation enqueued on a shared surrogate (`pending` = queue
+    /// depth after the push).
+    SurrogateTell { pending: usize },
+    /// A guard acquisition drained the queue: `drained` new rows folded
+    /// in, `total` rows in the store, after `wait_ns` of lock + drain.
+    SurrogateDrain { drained: usize, total: usize, wait_ns: u64 },
+    /// Factor geometry after a drain: `rows` in the store, `entries`
+    /// packed triangle values currently factored.
+    FactorSize { rows: usize, entries: usize },
+    /// The non-dominated front (or the single-objective incumbent)
+    /// advanced at `trial`; the front now holds `front_size` points.
+    FrontAdvanced { trial: u64, front_size: usize },
+    /// Dominated hypervolume of the current front (multi-objective
+    /// sessions; emitted together with `FrontAdvanced`).
+    Hypervolume { hv: f64 },
+    /// One catch-up `sync-factor` completed: `rows` imported, `bytes`
+    /// crossed the wire, `ns` spent in the round trip(s).
+    SyncFactor { rows: usize, bytes: usize, ns: u64 },
+    /// A lease (in-flight constant-liar point set) was published.
+    LeasePublished { id: u64, points: usize },
+    /// `leases` leases expired (guard retract, or connection close).
+    LeaseExpired { leases: usize },
+    /// The fleet daemon created (or restored) a space.
+    SpaceCreated { fingerprint: u64, dim: usize },
+    /// The fleet daemon evicted an idle space holding `rows` rows.
+    SpaceEvicted { fingerprint: u64, rows: usize },
+    /// The persistence plane wrote snapshot `seq`.
+    SnapshotWritten { seq: usize },
+    /// The WAL fsync'd; `records` appended to the log so far.
+    WalSync { records: usize },
+}
+
+impl Event {
+    /// The wire name of this event kind (the `"ev"` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::TrialIssued { .. } => "trial-issued",
+            Event::TrialMeasured { .. } => "trial-measured",
+            Event::AskStart { .. } => "ask-start",
+            Event::AskEnd { .. } => "ask-end",
+            Event::SurrogateTell { .. } => "surrogate-tell",
+            Event::SurrogateDrain { .. } => "surrogate-drain",
+            Event::FactorSize { .. } => "factor-size",
+            Event::FrontAdvanced { .. } => "front-advanced",
+            Event::Hypervolume { .. } => "hypervolume",
+            Event::SyncFactor { .. } => "sync-factor",
+            Event::LeasePublished { .. } => "lease-published",
+            Event::LeaseExpired { .. } => "lease-expired",
+            Event::SpaceCreated { .. } => "space-created",
+            Event::SpaceEvicted { .. } => "space-evicted",
+            Event::SnapshotWritten { .. } => "snapshot-written",
+            Event::WalSync { .. } => "wal-sync",
+        }
+    }
+}
+
+/// One stamped record: which source, its monotonic per-source sequence
+/// number, nanoseconds since the bus epoch, and the event itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventRecord {
+    pub source: String,
+    pub seq: u64,
+    pub t_ns: u64,
+    pub event: Event,
+}
+
+/// Encode one record as a single JSON line (no trailing newline).
+/// f64 payloads use the same shortest-round-trip formatting as the rest
+/// of the stack, so a decode of this line is bit-exact.
+pub fn encode_event_record(r: &EventRecord) -> String {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("src", r.source.as_str().into()),
+        ("seq", Json::Num(r.seq as f64)),
+        ("t_ns", Json::Num(r.t_ns as f64)),
+        ("ev", r.event.kind().into()),
+    ];
+    match &r.event {
+        Event::TrialIssued { trial } => pairs.push(("trial", Json::Num(*trial as f64))),
+        Event::TrialMeasured { trial, config, value, cost_s, objectives } => {
+            pairs.push(("trial", Json::Num(*trial as f64)));
+            pairs.push((
+                "config",
+                Json::Arr(config.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ));
+            pairs.push(("value", Json::Num(*value)));
+            pairs.push(("cost_s", Json::Num(*cost_s)));
+            pairs.push(("objectives", Json::from_f64s(objectives)));
+        }
+        Event::AskStart { want } => pairs.push(("want", (*want).into())),
+        Event::AskEnd { issued, ns } => {
+            pairs.push(("issued", (*issued).into()));
+            pairs.push(("ns", Json::Num(*ns as f64)));
+        }
+        Event::SurrogateTell { pending } => pairs.push(("pending", (*pending).into())),
+        Event::SurrogateDrain { drained, total, wait_ns } => {
+            pairs.push(("drained", (*drained).into()));
+            pairs.push(("total", (*total).into()));
+            pairs.push(("wait_ns", Json::Num(*wait_ns as f64)));
+        }
+        Event::FactorSize { rows, entries } => {
+            pairs.push(("rows", (*rows).into()));
+            pairs.push(("entries", (*entries).into()));
+        }
+        Event::FrontAdvanced { trial, front_size } => {
+            pairs.push(("trial", Json::Num(*trial as f64)));
+            pairs.push(("front_size", (*front_size).into()));
+        }
+        Event::Hypervolume { hv } => pairs.push(("hv", Json::Num(*hv))),
+        Event::SyncFactor { rows, bytes, ns } => {
+            pairs.push(("rows", (*rows).into()));
+            pairs.push(("bytes", (*bytes).into()));
+            pairs.push(("ns", Json::Num(*ns as f64)));
+        }
+        Event::LeasePublished { id, points } => {
+            pairs.push(("id", Json::Num(*id as f64)));
+            pairs.push(("points", (*points).into()));
+        }
+        Event::LeaseExpired { leases } => pairs.push(("leases", (*leases).into())),
+        Event::SpaceCreated { fingerprint, dim } => {
+            pairs.push(("space", format!("{fingerprint:016x}").into()));
+            pairs.push(("dim", (*dim).into()));
+        }
+        Event::SpaceEvicted { fingerprint, rows } => {
+            pairs.push(("space", format!("{fingerprint:016x}").into()));
+            pairs.push(("rows", (*rows).into()));
+        }
+        Event::SnapshotWritten { seq } => pairs.push(("snapshot_seq", (*seq).into())),
+        Event::WalSync { records } => pairs.push(("records", (*records).into())),
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// Decode one event line. Unknown `"ev"` kinds are an error (the plane
+/// is versioned with the crate; a consumer must not silently misread).
+pub fn decode_event_record(line: &str) -> Result<EventRecord, String> {
+    let j = parse(line).map_err(|e| e.to_string())?;
+    let source = j
+        .get("src")
+        .and_then(Json::as_str)
+        .ok_or("missing 'src'")?
+        .to_string();
+    let seq = j.get("seq").and_then(Json::as_f64).ok_or("missing 'seq'")? as u64;
+    let t_ns = j.get("t_ns").and_then(Json::as_f64).ok_or("missing 't_ns'")? as u64;
+    let kind = j.get("ev").and_then(Json::as_str).ok_or("missing 'ev'")?;
+    let f = |k: &str| -> Result<f64, String> {
+        j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing '{k}'"))
+    };
+    let u = |k: &str| -> Result<usize, String> { f(k).map(|v| v as usize) };
+    let event = match kind {
+        "trial-issued" => Event::TrialIssued { trial: f("trial")? as u64 },
+        "trial-measured" => {
+            let config = j
+                .get("config")
+                .and_then(Json::as_arr)
+                .ok_or("missing 'config'")?
+                .iter()
+                .map(|v| v.as_i64().ok_or("non-integer config value".to_string()))
+                .collect::<Result<Vec<i64>, String>>()?;
+            let objectives = j
+                .get("objectives")
+                .and_then(Json::as_arr)
+                .ok_or("missing 'objectives'")?
+                .iter()
+                .map(|v| v.as_f64().ok_or("non-numeric objective".to_string()))
+                .collect::<Result<Vec<f64>, String>>()?;
+            Event::TrialMeasured {
+                trial: f("trial")? as u64,
+                config,
+                value: f("value")?,
+                cost_s: f("cost_s")?,
+                objectives,
+            }
+        }
+        "ask-start" => Event::AskStart { want: u("want")? },
+        "ask-end" => Event::AskEnd { issued: u("issued")?, ns: f("ns")? as u64 },
+        "surrogate-tell" => Event::SurrogateTell { pending: u("pending")? },
+        "surrogate-drain" => Event::SurrogateDrain {
+            drained: u("drained")?,
+            total: u("total")?,
+            wait_ns: f("wait_ns")? as u64,
+        },
+        "factor-size" => Event::FactorSize { rows: u("rows")?, entries: u("entries")? },
+        "front-advanced" => {
+            Event::FrontAdvanced { trial: f("trial")? as u64, front_size: u("front_size")? }
+        }
+        "hypervolume" => Event::Hypervolume { hv: f("hv")? },
+        "sync-factor" => {
+            Event::SyncFactor { rows: u("rows")?, bytes: u("bytes")?, ns: f("ns")? as u64 }
+        }
+        "lease-published" => {
+            Event::LeasePublished { id: f("id")? as u64, points: u("points")? }
+        }
+        "lease-expired" => Event::LeaseExpired { leases: u("leases")? },
+        "space-created" => Event::SpaceCreated {
+            fingerprint: decode_fingerprint(&j)?,
+            dim: u("dim")?,
+        },
+        "space-evicted" => Event::SpaceEvicted {
+            fingerprint: decode_fingerprint(&j)?,
+            rows: u("rows")?,
+        },
+        "snapshot-written" => Event::SnapshotWritten { seq: u("snapshot_seq")? },
+        "wal-sync" => Event::WalSync { records: u("records")? },
+        other => return Err(format!("unknown event kind '{other}'")),
+    };
+    Ok(EventRecord { source, seq, t_ns, event })
+}
+
+fn decode_fingerprint(j: &Json) -> Result<u64, String> {
+    let hex = j.get("space").and_then(Json::as_str).ok_or("missing 'space'")?;
+    if hex.len() != 16 {
+        return Err(format!("fingerprint '{hex}' is not 16 hex digits"));
+    }
+    u64::from_str_radix(hex, 16).map_err(|_| format!("fingerprint '{hex}' is not hex"))
+}
+
+/// Where encoded records go. Implementations must be fast or internally
+/// non-blocking: they run on the bus's single collector thread, and a
+/// sink that stalls starves every other sink (though never an emitter —
+/// the bounded channel drops instead).
+pub trait EventSink: Send {
+    /// Handle one record; `line` is its JSONL encoding without the
+    /// newline. Return `false` to detach this sink permanently.
+    fn publish(&mut self, record: &EventRecord, line: &str) -> bool;
+    /// Flush buffered output (called by [`EventBus::flush`]).
+    fn flush(&mut self) {}
+}
+
+/// Counters shared between emitters, the collector and the publisher:
+/// split from the bus body so the collector thread can observe them
+/// without keeping the channel sender (and therefore itself) alive.
+struct BusCtl {
+    /// True while at least one sink is attached.
+    enabled: AtomicBool,
+    /// Records dropped anywhere in the plane (full bus channel, or a
+    /// full subscriber queue) instead of blocking a hot path.
+    dropped: AtomicU64,
+}
+
+enum BusMsg {
+    Event(EventRecord),
+    Sink(Box<dyn EventSink>),
+    Flush(SyncSender<()>),
+}
+
+struct BusShared {
+    ctl: Arc<BusCtl>,
+    epoch: Instant,
+    tx: SyncSender<BusMsg>,
+    /// Source registry: name → its live sequence counter. `source()`
+    /// returns the *same* counter for a repeated name, so two handles to
+    /// one logical source still produce a gap-free sequence.
+    sources: Mutex<Vec<(Arc<str>, Arc<AtomicU64>)>>,
+}
+
+/// The bounded, non-blocking event bus (module docs). Cheap to clone;
+/// all clones share the channel, the sinks and the counters. The
+/// collector thread exits when the last clone (and every
+/// [`EventSource`]) drops.
+#[derive(Clone)]
+pub struct EventBus {
+    shared: Arc<BusShared>,
+}
+
+impl std::fmt::Debug for EventBus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventBus").field("dropped", &self.dropped()).finish()
+    }
+}
+
+impl EventBus {
+    /// A bus with the default channel bound.
+    pub fn new() -> EventBus {
+        EventBus::with_capacity(DEFAULT_BUS_CAPACITY)
+    }
+
+    /// A bus whose channel holds at most `capacity` undelivered records;
+    /// the excess is dropped (counted), never blocked on.
+    pub fn with_capacity(capacity: usize) -> EventBus {
+        let (tx, rx) = mpsc::sync_channel(capacity.max(1));
+        let ctl = Arc::new(BusCtl {
+            enabled: AtomicBool::new(false),
+            dropped: AtomicU64::new(0),
+        });
+        let collector_ctl = Arc::clone(&ctl);
+        std::thread::Builder::new()
+            .name("obs-collector".into())
+            .spawn(move || collect(rx, collector_ctl))
+            .expect("spawning the event-bus collector");
+        EventBus {
+            shared: Arc::new(BusShared {
+                ctl,
+                epoch: Instant::now(),
+                tx,
+                sources: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// A named emitter handle. Repeated names share one sequence
+    /// counter, so the per-source stream stays gap-free no matter how
+    /// many handles feed it.
+    pub fn source(&self, name: &str) -> EventSource {
+        let mut reg = self.shared.sources.lock().unwrap();
+        if let Some((n, seq)) = reg.iter().find(|(n, _)| n.as_ref() == name) {
+            return EventSource {
+                shared: Arc::clone(&self.shared),
+                name: Arc::clone(n),
+                seq: Arc::clone(seq),
+            };
+        }
+        let n: Arc<str> = Arc::from(name);
+        let seq = Arc::new(AtomicU64::new(0));
+        reg.push((Arc::clone(&n), Arc::clone(&seq)));
+        EventSource { shared: Arc::clone(&self.shared), name: n, seq }
+    }
+
+    /// Attach a sink; the bus is enabled from this point on. The sink
+    /// receives only records emitted after attachment.
+    pub fn attach(&self, sink: Box<dyn EventSink>) {
+        // Blocking send: attachment is rare and must not be lost.
+        let _ = self.shared.tx.send(BusMsg::Sink(sink));
+        self.shared.ctl.enabled.store(true, Ordering::SeqCst);
+    }
+
+    /// Records dropped so far anywhere in the plane (bus channel
+    /// overflow or a stalled TCP subscriber's queue).
+    pub fn dropped(&self) -> u64 {
+        self.shared.ctl.dropped.load(Ordering::SeqCst)
+    }
+
+    /// Whether any sink is attached (the emit fast-path gate).
+    pub fn enabled(&self) -> bool {
+        self.shared.ctl.enabled.load(Ordering::Relaxed)
+    }
+
+    /// The per-source *next* sequence numbers: what each source's next
+    /// record will carry. This is the resume point an `obs-hello`
+    /// advertises to a (re)connecting subscriber.
+    pub fn source_seqs(&self) -> Vec<(String, u64)> {
+        self.shared
+            .sources
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, s)| (n.to_string(), s.load(Ordering::SeqCst)))
+            .collect()
+    }
+
+    /// Barrier: returns once every record emitted before this call has
+    /// been delivered to (and flushed through) every attached sink.
+    /// For end-of-run draining and tests — never call from a hot path.
+    pub fn flush(&self) {
+        let (ack_tx, ack_rx) = mpsc::sync_channel(1);
+        if self.shared.tx.send(BusMsg::Flush(ack_tx)).is_ok() {
+            let _ = ack_rx.recv();
+        }
+    }
+}
+
+impl Default for EventBus {
+    fn default() -> EventBus {
+        EventBus::new()
+    }
+}
+
+/// A named emitter handle (cloneable; clones share the sequence
+/// counter). Emitting on a disabled bus is a single atomic load.
+#[derive(Clone)]
+pub struct EventSource {
+    shared: Arc<BusShared>,
+    name: Arc<str>,
+    seq: Arc<AtomicU64>,
+}
+
+impl std::fmt::Debug for EventSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventSource").field("name", &self.name).finish()
+    }
+}
+
+impl EventSource {
+    /// This source's name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The bus this source feeds.
+    pub fn bus(&self) -> EventBus {
+        EventBus { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Whether any sink is attached (one relaxed load) — gate for
+    /// emission-side work that is more than building a cheap event.
+    pub fn enabled(&self) -> bool {
+        self.shared.ctl.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Emit one event: non-blocking, drop-counting (module docs).
+    pub fn emit(&self, event: Event) {
+        if !self.shared.ctl.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let t_ns = self.shared.epoch.elapsed().as_nanos() as u64;
+        let record = EventRecord { source: self.name.to_string(), seq, t_ns, event };
+        match self.shared.tx.try_send(BusMsg::Event(record)) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                // The skipped seq is the drop made visible downstream.
+                self.shared.ctl.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// The collector loop: single consumer of the bus channel; owns the
+/// sinks. Exits when every sender (bus clones + sources) is gone.
+fn collect(rx: Receiver<BusMsg>, ctl: Arc<BusCtl>) {
+    let mut sinks: Vec<Box<dyn EventSink>> = Vec::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            BusMsg::Sink(sink) => sinks.push(sink),
+            BusMsg::Flush(ack) => {
+                for s in &mut sinks {
+                    s.flush();
+                }
+                let _ = ack.send(());
+            }
+            BusMsg::Event(record) => {
+                if sinks.is_empty() {
+                    continue;
+                }
+                let line = encode_event_record(&record);
+                sinks.retain_mut(|s| s.publish(&record, &line));
+                if sinks.is_empty() {
+                    // Every sink detached: flip the emit gate back off so
+                    // the hot path returns to its near-zero cost.
+                    ctl.enabled.store(false, Ordering::SeqCst);
+                }
+            }
+        }
+    }
+}
+
+/// JSONL file sink: one event line per record, flushed per record so a
+/// `tftune dashboard --events-file` tail sees events as they land.
+pub struct FileSink {
+    w: std::io::BufWriter<std::fs::File>,
+}
+
+impl FileSink {
+    /// Create (truncate) `path` and sink events into it.
+    pub fn create(path: &std::path::Path) -> Result<FileSink> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating events file {}", path.display()))?;
+        Ok(FileSink { w: std::io::BufWriter::new(f) })
+    }
+}
+
+impl EventSink for FileSink {
+    fn publish(&mut self, _record: &EventRecord, line: &str) -> bool {
+        // A failed local write detaches the sink; the run itself is
+        // never the observability plane's hostage.
+        writeln!(self.w, "{line}").and_then(|()| self.w.flush()).is_ok()
+    }
+
+    fn flush(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+/// A sink that counts records and otherwise discards them — the
+/// enabled-bus overhead baseline for benches and tests.
+#[derive(Clone, Default)]
+pub struct CountingSink {
+    /// Records seen so far.
+    pub seen: Arc<AtomicU64>,
+}
+
+impl EventSink for CountingSink {
+    fn publish(&mut self, _record: &EventRecord, _line: &str) -> bool {
+        self.seen.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+}
+
+/// How long the publisher waits for a subscriber's `subscribe` line
+/// before giving up on the connection.
+const SUBSCRIBE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// Longest subscribe line the publisher will read before calling the
+/// frame oversized and hostile.
+pub const OBS_MAX_SUBSCRIBE_LINE: usize = 64 * 1024;
+
+/// One TCP subscriber's bus-side handle: a bounded queue feeding a
+/// per-subscriber writer thread. `publish` is try_send — a stalled
+/// subscriber overflows its own queue (counted) and detaches only when
+/// its socket actually dies.
+struct SubscriberSink {
+    tx: SyncSender<String>,
+    dead: Arc<AtomicBool>,
+    ctl: Arc<BusCtl>,
+}
+
+impl EventSink for SubscriberSink {
+    fn publish(&mut self, _record: &EventRecord, line: &str) -> bool {
+        if self.dead.load(Ordering::Relaxed) {
+            return false;
+        }
+        match self.tx.try_send(line.to_string()) {
+            Ok(()) => true,
+            Err(TrySendError::Full(_)) => {
+                self.ctl.dropped.fetch_add(1, Ordering::Relaxed);
+                true // stalled, not dead: keep it attached
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        }
+    }
+}
+
+/// The daemon-side line-delimited TCP event publisher
+/// (`surrogate-serve --events-addr`). Each accepted connection performs
+/// the subscribe handshake (module docs §Wire framing) and then receives
+/// every subsequent event line through its own bounded queue + writer
+/// thread — a subscriber that stops reading stalls only itself.
+pub struct EventPublisher {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EventPublisher {
+    /// Bind `addr` and start accepting subscribers for `bus`'s stream,
+    /// with [`DEFAULT_SUBSCRIBER_QUEUE`]-deep per-subscriber queues.
+    pub fn bind(addr: &str, bus: &EventBus) -> Result<EventPublisher> {
+        EventPublisher::bind_with_queue(addr, bus, DEFAULT_SUBSCRIBER_QUEUE)
+    }
+
+    /// [`EventPublisher::bind`] with an explicit per-subscriber queue
+    /// bound (chaos tests shrink it to force overflow deterministically).
+    pub fn bind_with_queue(addr: &str, bus: &EventBus, queue: usize) -> Result<EventPublisher> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding events publisher {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let accept_bus = bus.clone();
+        let handle = std::thread::Builder::new()
+            .name("obs-publisher".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let bus = accept_bus.clone();
+                    let q = queue.max(1);
+                    std::thread::Builder::new()
+                        .name("obs-subscriber".into())
+                        .spawn(move || handle_subscriber(stream, bus, q))
+                        .ok();
+                }
+            })
+            .expect("spawning the events publisher accept loop");
+        Ok(EventPublisher { addr: local, stop, accept_handle: Some(handle) })
+    }
+
+    /// The bound address (useful with `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting subscribers and join the accept loop. Live
+    /// subscriber streams keep running until their sockets close.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EventPublisher {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One subscriber connection: handshake, then stream until death.
+/// Every failure mode is strictly per-connection.
+fn handle_subscriber(stream: TcpStream, bus: EventBus, queue: usize) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(SUBSCRIBE_TIMEOUT));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+
+    // Read the subscribe line with a hard size cap: an oversized or
+    // unterminated frame is hostile and earns an error + close.
+    let line = match read_capped_line(&stream, OBS_MAX_SUBSCRIBE_LINE) {
+        Ok(Some(line)) => line,
+        Ok(None) | Err(_) => return, // EOF/timeout before subscribing
+    };
+    if let Err(reason) = crate::server::proto::decode_obs_subscribe(line.trim_end()) {
+        let _ = writeln!(writer, "{}", crate::server::proto::encode_obs_error(&reason));
+        return;
+    }
+
+    // The hello: cumulative drop counter + per-source resume points.
+    let hello = crate::server::proto::encode_obs_hello(bus.dropped(), &bus.source_seqs());
+    if writeln!(writer, "{hello}").is_err() {
+        return;
+    }
+
+    // Attach: a bounded queue into a blocking writer thread. The writer
+    // thread is the only place a stalled socket blocks.
+    let (tx, rx) = mpsc::sync_channel::<String>(queue);
+    let dead = Arc::new(AtomicBool::new(false));
+    let sink = SubscriberSink {
+        tx,
+        dead: Arc::clone(&dead),
+        ctl: Arc::clone(&bus.shared.ctl),
+    };
+    bus.attach(Box::new(sink));
+    while let Ok(line) = rx.recv() {
+        if writeln!(writer, "{line}").is_err() {
+            dead.store(true, Ordering::SeqCst);
+            break;
+        }
+    }
+    dead.store(true, Ordering::SeqCst);
+}
+
+/// Read one `\n`-terminated line from `stream`, refusing to buffer more
+/// than `cap` bytes. `Ok(None)` = EOF before any data.
+fn read_capped_line(stream: &TcpStream, cap: usize) -> std::io::Result<Option<String>> {
+    use std::io::Read;
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    let mut reader = stream;
+    loop {
+        let n = reader.read(&mut byte)?;
+        if n == 0 {
+            return if buf.is_empty() {
+                Ok(None)
+            } else {
+                Ok(Some(String::from_utf8_lossy(&buf).into_owned()))
+            };
+        }
+        if byte[0] == b'\n' {
+            return Ok(Some(String::from_utf8_lossy(&buf).into_owned()));
+        }
+        buf.push(byte[0]);
+        if buf.len() > cap {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "subscribe line exceeds the frame cap",
+            ));
+        }
+    }
+}
+
+/// Read every event record out of a JSONL events file, in order.
+/// Undecodable lines are errors — a recorded stream is a contract.
+pub fn read_events_file(path: &std::path::Path) -> Result<Vec<EventRecord>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading events file {}", path.display()))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(
+            decode_event_record(line)
+                .map_err(|e| anyhow::anyhow!("events line {}: {e}", i + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records() -> Vec<EventRecord> {
+        vec![
+            EventRecord {
+                source: "session".into(),
+                seq: 0,
+                t_ns: 17,
+                event: Event::TrialIssued { trial: 3 },
+            },
+            EventRecord {
+                source: "session".into(),
+                seq: 1,
+                t_ns: 42,
+                event: Event::TrialMeasured {
+                    trial: 3,
+                    config: vec![8, 64, -2],
+                    value: 0.1 + 0.2, // a value with no short decimal form
+                    cost_s: 1.5e-3,
+                    objectives: vec![f64::MIN_POSITIVE, -1.25],
+                },
+            },
+            EventRecord {
+                source: "engine".into(),
+                seq: 0,
+                t_ns: 99,
+                event: Event::AskEnd { issued: 4, ns: 123_456_789 },
+            },
+            EventRecord {
+                source: "daemon".into(),
+                seq: 7,
+                t_ns: 1,
+                event: Event::SpaceCreated { fingerprint: 0xdead_beef_0123_4567, dim: 5 },
+            },
+            EventRecord {
+                source: "surrogate".into(),
+                seq: 2,
+                t_ns: 5,
+                event: Event::SurrogateDrain { drained: 3, total: 12, wait_ns: 800 },
+            },
+            EventRecord {
+                source: "persist".into(),
+                seq: 0,
+                t_ns: 6,
+                event: Event::WalSync { records: 40 },
+            },
+        ]
+    }
+
+    #[test]
+    fn record_codec_round_trips_bit_exactly() {
+        for r in sample_records() {
+            let line = encode_event_record(&r);
+            let back = decode_event_record(&line).unwrap();
+            assert_eq!(back, r, "line: {line}");
+            if let (
+                Event::TrialMeasured { value: a, .. },
+                Event::TrialMeasured { value: b, .. },
+            ) = (&r.event, &back.event)
+            {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn decoder_refuses_garbage() {
+        assert!(decode_event_record("not json").is_err());
+        assert!(decode_event_record("{}").is_err());
+        assert!(decode_event_record(r#"{"src":"s","seq":0,"t_ns":0,"ev":"mystery"}"#).is_err());
+        assert!(
+            decode_event_record(r#"{"src":"s","seq":0,"t_ns":0,"ev":"trial-issued"}"#).is_err(),
+            "trial-issued without a trial id must not decode"
+        );
+    }
+
+    #[test]
+    fn disabled_bus_emits_nothing_and_counts_nothing() {
+        let bus = EventBus::new();
+        let src = bus.source("test");
+        for _ in 0..1000 {
+            src.emit(Event::SurrogateTell { pending: 1 });
+        }
+        bus.flush();
+        assert_eq!(bus.dropped(), 0);
+        assert_eq!(
+            bus.source_seqs(),
+            vec![("test".to_string(), 0)],
+            "a disabled bus must not consume sequence numbers"
+        );
+    }
+
+    #[test]
+    fn attached_sink_sees_every_record_in_order() {
+        let bus = EventBus::new();
+        let sink = CountingSink::default();
+        let seen = Arc::clone(&sink.seen);
+        bus.attach(Box::new(sink));
+        let src = bus.source("s");
+        for i in 0..500 {
+            src.emit(Event::SurrogateTell { pending: i });
+        }
+        bus.flush();
+        assert_eq!(seen.load(Ordering::SeqCst), 500);
+        assert_eq!(bus.dropped(), 0);
+        assert_eq!(bus.source_seqs(), vec![("s".to_string(), 500)]);
+    }
+
+    #[test]
+    fn overflow_drops_and_counts_instead_of_blocking() {
+        // A 4-slot bus with a sink that blocks until released: emits
+        // beyond the bound must return immediately and count drops.
+        struct Gate(Arc<AtomicBool>);
+        impl EventSink for Gate {
+            fn publish(&mut self, _r: &EventRecord, _l: &str) -> bool {
+                while !self.0.load(Ordering::SeqCst) {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                true
+            }
+        }
+        let bus = EventBus::with_capacity(4);
+        let open = Arc::new(AtomicBool::new(false));
+        bus.attach(Box::new(Gate(Arc::clone(&open))));
+        let src = bus.source("s");
+        let start = Instant::now();
+        for i in 0..64 {
+            src.emit(Event::SurrogateTell { pending: i });
+        }
+        let elapsed = start.elapsed();
+        assert!(
+            elapsed < std::time::Duration::from_millis(500),
+            "emit blocked on a wedged sink ({elapsed:?})"
+        );
+        assert!(bus.dropped() > 0, "overflow must be counted");
+        open.store(true, Ordering::SeqCst);
+        bus.flush();
+        // Seq numbers kept advancing through the drops: the gap is the
+        // visible record of what was lost.
+        assert_eq!(bus.source_seqs(), vec![("s".to_string(), 64)]);
+    }
+
+    #[test]
+    fn same_name_shares_one_sequence() {
+        let bus = EventBus::new();
+        bus.attach(Box::new(CountingSink::default()));
+        let a = bus.source("shared");
+        let b = bus.source("shared");
+        a.emit(Event::SurrogateTell { pending: 0 });
+        b.emit(Event::SurrogateTell { pending: 1 });
+        bus.flush();
+        assert_eq!(bus.source_seqs(), vec![("shared".to_string(), 2)]);
+    }
+
+    #[test]
+    fn file_sink_round_trips_through_the_reader() {
+        let dir = std::env::temp_dir().join("tftune_obs_filesink");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("events.jsonl");
+        let bus = EventBus::new();
+        bus.attach(Box::new(FileSink::create(&path).unwrap()));
+        let src = bus.source("s");
+        let records = sample_records();
+        for r in &records {
+            src.emit(r.event.clone());
+        }
+        bus.flush();
+        let read = read_events_file(&path).unwrap();
+        assert_eq!(read.len(), records.len());
+        for (got, want) in read.iter().zip(&records) {
+            assert_eq!(got.event, want.event);
+            assert_eq!(got.source, "s");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -72,12 +72,13 @@ pub mod snapshot;
 pub mod wal;
 
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{Context, Result};
 
 use crate::gp::shared::JournalEvent;
 use crate::gp::SharedSurrogate;
+use crate::obs::{Event, EventSource};
 
 pub use recover::Recovered;
 pub use snapshot::{list_snapshots, snapshot_path, write_snapshot, SNAPSHOTS_KEPT};
@@ -106,12 +107,24 @@ impl Default for PersistOptions {
 pub struct Persistence {
     dir: PathBuf,
     writer: Arc<Mutex<WalWriter>>,
+    /// Observability: `snapshot-written` / `wal-sync` events flow through
+    /// this source once [`Persistence::set_event_source`] attaches one.
+    events: OnceLock<EventSource>,
 }
 
 impl Persistence {
     /// The state directory this journal writes into.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Attach an observability event source: every successful
+    /// [`Persistence::snapshot`] emits `snapshot-written` (the snapshot
+    /// seq) and every successful [`Persistence::sync`] emits `wal-sync`
+    /// carrying the records-appended gauge ([`WalWriter::appended`]).
+    /// Write-once: the first source wins.
+    pub fn set_event_source(&self, src: EventSource) {
+        let _ = self.events.set(src);
     }
 
     /// Capture and write one snapshot of `surrogate` (atomic, keeps the
@@ -122,12 +135,23 @@ impl Persistence {
     pub fn snapshot(&self, surrogate: &SharedSurrogate) -> Result<usize> {
         let seq = write_snapshot(surrogate, &self.dir)?;
         self.sync()?;
+        if let Some(src) = self.events.get() {
+            src.emit(Event::SnapshotWritten { seq });
+        }
         Ok(seq)
     }
 
     /// Flush and fsync the WAL now, regardless of cadence.
     pub fn sync(&self) -> Result<()> {
-        self.writer.lock().unwrap().sync()
+        let appended = {
+            let mut w = self.writer.lock().unwrap();
+            w.sync()?;
+            w.appended()
+        };
+        if let Some(src) = self.events.get() {
+            src.emit(Event::WalSync { records: appended as usize });
+        }
+        Ok(())
     }
 }
 
@@ -184,7 +208,7 @@ pub fn attach(
             JournalEvent::Hyper(h) => w.append(&WalRecord::SetHyper(h)),
         }
     });
-    Ok(Persistence { dir: dir.to_path_buf(), writer })
+    Ok(Persistence { dir: dir.to_path_buf(), writer, events: OnceLock::new() })
 }
 
 /// Rebuild a surrogate from `dir` — see [`recover::recover`].

@@ -183,6 +183,7 @@ pub struct WalWriter {
     out: BufWriter<File>,
     fsync_every: usize,
     unsynced: usize,
+    appended: u64,
     failed: bool,
 }
 
@@ -197,7 +198,20 @@ impl WalWriter {
             .create(true)
             .open(&path)
             .with_context(|| format!("opening WAL {}", path.display()))?;
-        Ok(WalWriter { out: BufWriter::new(file), fsync_every, unsynced: 0, failed: false })
+        Ok(WalWriter {
+            out: BufWriter::new(file),
+            fsync_every,
+            unsynced: 0,
+            appended: 0,
+            failed: false,
+        })
+    }
+
+    /// Records appended through this writer since it was opened (not the
+    /// on-disk total — re-opening starts the count at zero). The
+    /// observability plane reports this gauge in `wal-sync` events.
+    pub fn appended(&self) -> u64 {
+        self.appended
     }
 
     /// Append one record, honouring the fsync cadence. Best-effort: an
@@ -209,6 +223,7 @@ impl WalWriter {
             return;
         }
         let result = writeln!(self.out, "{}", record.encode()).and_then(|()| {
+            self.appended += 1;
             self.unsynced += 1;
             if self.fsync_every > 0 && self.unsynced >= self.fsync_every {
                 self.unsynced = 0;

@@ -83,13 +83,14 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::evaluator::Evaluator;
 use crate::gp::{GpHyper, SharedSurrogate};
+use crate::obs::{Event, EventSource};
 use crate::space::SearchSpace;
 use crate::util::linalg::packed_len;
 use proto::{
@@ -248,6 +249,11 @@ struct Shared {
     fleet: Option<Fleet>,
     /// Connection-id allocator (lease ownership / expiry).
     conns: AtomicU64,
+    /// Observability: daemon-side lifecycle events (space create/evict,
+    /// lease publish/expiry, served sync-factor wire cost) flow through
+    /// this source once [`TargetServer::with_events`] attaches one.
+    /// Write-once so connection handlers read it lock-free.
+    events: OnceLock<EventSource>,
 }
 
 /// A running target daemon.
@@ -273,8 +279,27 @@ impl TargetServer {
                 shutdown: AtomicBool::new(false),
                 fleet: None,
                 conns: AtomicU64::new(0),
+                events: OnceLock::new(),
             }),
         })
+    }
+
+    /// Attach an observability event source (`surrogate-serve
+    /// --events-addr` / `--events-file`): space lifecycle, lease churn
+    /// and served sync-factor wire cost are emitted through it, and every
+    /// *currently hosted* space's factor adopts a clone so its
+    /// tell/drain/factor-size events flow too — call this after
+    /// [`TargetServer::with_surrogate`] / [`TargetServer::with_fleet_options`]
+    /// and before serving. Lazily created fleet spaces pick the source up
+    /// at creation. Write-once: the first source wins.
+    pub fn with_events(self, src: EventSource) -> TargetServer {
+        if let Some(fleet) = &self.shared.fleet {
+            for sp in fleet.spaces.read().unwrap().values() {
+                sp.surrogate.set_event_source(src.clone());
+            }
+        }
+        let _ = self.shared.events.set(src);
+        self
     }
 
     /// Host `surrogate` as the authoritative shared factor next to the
@@ -509,6 +534,7 @@ fn acquire_space(
     fleet: &Fleet,
     fingerprint: u64,
     dim: Option<usize>,
+    events: Option<&EventSource>,
 ) -> Result<Arc<SpaceState>, String> {
     {
         let map = fleet.spaces.read().unwrap();
@@ -538,6 +564,10 @@ fn acquire_space(
         Ok(sp) => sp,
         Err(e) => return Err(format!("space {fingerprint:016x}: {e:#}")),
     };
+    if let Some(src) = events {
+        sp.surrogate.set_event_source(src.clone());
+        src.emit(Event::SpaceCreated { fingerprint, dim: d });
+    }
     sp.active.fetch_add(1, Ordering::SeqCst);
     let sp = Arc::new(sp);
     map.insert(fingerprint, Arc::clone(&sp));
@@ -578,6 +608,12 @@ fn sweep_idle_spaces(shared: &Shared, ttl: Duration) {
         // not blocked on eviction I/O, and nobody can re-bind an evicted
         // space (it is out of the map; a re-hello recovers it from disk).
         for sp in evicted {
+            if let Some(src) = shared.events.get() {
+                src.emit(Event::SpaceEvicted {
+                    fingerprint: sp.fingerprint,
+                    rows: sp.surrogate.len(),
+                });
+            }
             match &sp.persist {
                 Some(p) => match p.snapshot(&sp.surrogate) {
                     Ok(seq) => eprintln!(
@@ -606,6 +642,9 @@ fn sweep_idle_spaces(shared: &Shared, ttl: Duration) {
 struct ConnCtx {
     id: u64,
     space: Option<Arc<SpaceState>>,
+    /// Daemon event source (cloned from [`Shared::events`] at accept
+    /// time) — lease expiry on release/disconnect reports through it.
+    events: Option<EventSource>,
 }
 
 impl ConnCtx {
@@ -634,7 +673,17 @@ impl ConnCtx {
     /// Unbind (disconnect or re-hello): lease expiry + idle bookkeeping.
     fn release(&mut self) {
         if let Some(sp) = self.space.take() {
-            sp.leases.lock().unwrap().entries.retain(|e| e.conn != self.id);
+            let expired = {
+                let mut table = sp.leases.lock().unwrap();
+                let before = table.entries.len();
+                table.entries.retain(|e| e.conn != self.id);
+                before - table.entries.len()
+            };
+            if expired > 0 {
+                if let Some(src) = &self.events {
+                    src.emit(Event::LeaseExpired { leases: expired });
+                }
+            }
             if sp.active.fetch_sub(1, Ordering::SeqCst) == 1 {
                 *sp.last_release.lock().unwrap() = Instant::now();
             }
@@ -684,6 +733,12 @@ fn handle_surrogate_request(
     const NO_FACTOR: &str = "this daemon hosts no shared surrogate (start one with \
                              `surrogate-serve` or attach it via TargetServer::with_surrogate)";
     let no_factor = || SurrogateResponse::Error { message: NO_FACTOR.to_string() };
+    // Observability (clock read only when a source is live): a served
+    // `sync-factor` reports rows exported + raw response bytes + elapsed
+    // nanos, mirroring what the requesting replica attributes to the wire.
+    let events = shared.events.get().filter(|s| s.enabled());
+    let t0 = events.map(|_| Instant::now());
+    let mut sync_rows: Option<usize> = None;
     let resp = match req {
         // The handshake answers on any daemon — it reports the
         // *negotiated* version, min(client, server), so an old peer
@@ -698,7 +753,7 @@ fn handle_surrogate_request(
                 (None, Some(_)) => {
                     SurrogateResponse::HelloErr { reason: NO_FACTOR.to_string() }
                 }
-                (Some(fleet), Some(fp)) => match acquire_space(fleet, fp, dim) {
+                (Some(fleet), Some(fp)) => match acquire_space(fleet, fp, dim, events) {
                     Ok(sp) => {
                         conn.bind(sp);
                         SurrogateResponse::HelloOk { version: negotiated }
@@ -777,6 +832,7 @@ fn handle_surrogate_request(
                                 .collect();
                         }
                         let quantised = quantise && d.factor.is_some();
+                        sync_rows = Some(d.rows.len());
                         SurrogateResponse::FactorDelta { delta: d, pending, quantised }
                     }
                     None => SurrogateResponse::Error {
@@ -790,18 +846,34 @@ fn handle_surrogate_request(
         }
         SurrogateRequest::AskLease { points } => match conn.space(shared) {
             Some(sp) => {
-                let mut table = sp.leases.lock().unwrap();
-                table.next_id += 1;
-                let id = table.next_id;
-                table.entries.push(LeaseEntry { id, conn: conn.id, points });
+                let published = points.len();
+                let id = {
+                    let mut table = sp.leases.lock().unwrap();
+                    table.next_id += 1;
+                    let id = table.next_id;
+                    table.entries.push(LeaseEntry { id, conn: conn.id, points });
+                    id
+                };
+                if let Some(src) = events {
+                    src.emit(Event::LeasePublished { id, points: published });
+                }
                 SurrogateResponse::Lease { id }
             }
             None => no_factor(),
         },
         SurrogateRequest::RetractLease { id } => match conn.space(shared) {
             Some(sp) => {
-                let mut table = sp.leases.lock().unwrap();
-                table.entries.retain(|e| e.id != id || e.conn != conn.id);
+                let expired = {
+                    let mut table = sp.leases.lock().unwrap();
+                    let before = table.entries.len();
+                    table.entries.retain(|e| e.id != id || e.conn != conn.id);
+                    before - table.entries.len()
+                };
+                if expired > 0 {
+                    if let Some(src) = events {
+                        src.emit(Event::LeaseExpired { leases: expired });
+                    }
+                }
                 SurrogateResponse::LeaseOk { id }
             }
             None => no_factor(),
@@ -815,6 +887,15 @@ fn handle_surrogate_request(
         },
     };
     let line = encode_surrogate_response(&resp);
+    if let (Some(src), Some(t0), Some(rows)) = (events, t0, sync_rows) {
+        // +1: the newline `writeln!` appends — matches the byte count the
+        // replica reads off the wire.
+        src.emit(Event::SyncFactor {
+            rows,
+            bytes: line.len() + 1,
+            ns: t0.elapsed().as_nanos() as u64,
+        });
+    }
     let mut w = writer.lock().unwrap();
     writeln!(w, "{line}").is_ok()
 }
@@ -844,8 +925,11 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
     // exactly as long as the connection (expiry on disconnect). The
     // surrogate plane additionally tracks which fleet space the
     // connection is bound to (default space until a fingerprinted hello).
-    let mut conn =
-        ConnCtx { id: shared.conns.fetch_add(1, Ordering::SeqCst), space: None };
+    let mut conn = ConnCtx {
+        id: shared.conns.fetch_add(1, Ordering::SeqCst),
+        space: None,
+        events: shared.events.get().cloned(),
+    };
     let reader = BufReader::new(stream);
     // Scoped workers let every in-flight evaluate borrow `shared` and the
     // connection writer: the reader keeps pulling pipelined requests while

@@ -709,6 +709,80 @@ pub fn decode_surrogate_response(line: &str) -> Result<SurrogateResponse, String
     }
 }
 
+// -- the observability plane (`surrogate-serve --events-addr`) --------------
+//
+// A third, read-only plane on its *own* listener: a subscriber sends one
+// `{"type":"subscribe"}` line, the publisher answers with an `obs-hello`
+// carrying the cumulative dropped-record counter and each source's next
+// sequence number (the resume point), then streams raw event lines (see
+// `obs::encode_event_record`). Anything other than a well-formed
+// subscribe gets one `error` line and a close — per-connection, like
+// every other plane.
+
+/// The subscribe line a dashboard sends to `--events-addr`.
+pub fn encode_obs_subscribe() -> String {
+    Json::obj(vec![("type", "subscribe".into())]).to_string()
+}
+
+/// Validate a subscribe line. Strict: the only accepted frame is a JSON
+/// object whose `"type"` is `"subscribe"` — the event plane is read-only
+/// and anything else is hostile.
+pub fn decode_obs_subscribe(line: &str) -> Result<(), String> {
+    let j = parse(line).map_err(|e| e.to_string())?;
+    match j.get("type").and_then(Json::as_str) {
+        Some("subscribe") => Ok(()),
+        Some(other) => Err(format!("unknown event-plane request type {other:?}")),
+        None => Err("missing 'type'".to_string()),
+    }
+}
+
+/// The publisher's greeting: cumulative drop counter + per-source next
+/// sequence numbers, so a (re)connecting subscriber knows where the
+/// stream it is about to receive resumes.
+pub fn encode_obs_hello(dropped: u64, seqs: &[(String, u64)]) -> String {
+    Json::obj(vec![
+        ("type", "obs-hello".into()),
+        ("dropped", Json::Num(dropped as f64)),
+        (
+            "seqs",
+            Json::Obj(
+                seqs.iter()
+                    .map(|(name, next)| (name.clone(), Json::Num(*next as f64)))
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string()
+}
+
+/// Decode an `obs-hello` into `(dropped, per-source next seqs)`.
+pub fn decode_obs_hello(line: &str) -> Result<(u64, Vec<(String, u64)>), String> {
+    let j = parse(line).map_err(|e| e.to_string())?;
+    if j.get("type").and_then(Json::as_str) != Some("obs-hello") {
+        return Err("expected an obs-hello line".to_string());
+    }
+    let dropped = req_u64(&j, "dropped")?;
+    let seqs = match j.get("seqs") {
+        Some(Json::Obj(map)) => map
+            .iter()
+            .map(|(name, v)| {
+                v.as_f64()
+                    .filter(|x| *x >= 0.0)
+                    .map(|x| (name.clone(), x as u64))
+                    .ok_or_else(|| format!("seq for source '{name}' must be a number"))
+            })
+            .collect::<Result<Vec<_>, String>>()?,
+        _ => return Err("missing 'seqs' object".to_string()),
+    };
+    Ok((dropped, seqs))
+}
+
+/// One `error` line for a hostile event-plane frame (shared shape with
+/// the evaluate/surrogate planes).
+pub fn encode_obs_error(message: &str) -> String {
+    Json::obj(vec![("type", "error".into()), ("message", message.into())]).to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1073,5 +1147,21 @@ mod tests {
             let line = encode_request(&req, &s);
             assert_eq!(decode_request(&line, &s).unwrap(), req);
         });
+    }
+
+    #[test]
+    fn obs_subscribe_and_hello_round_trip() {
+        assert!(decode_obs_subscribe(&encode_obs_subscribe()).is_ok());
+        assert!(decode_obs_subscribe(r#"{"type":"evaluate"}"#).is_err());
+        assert!(decode_obs_subscribe("garbage").is_err());
+        assert!(decode_obs_subscribe("{}").is_err());
+
+        let seqs = vec![("daemon".to_string(), 42u64), ("surrogate".to_string(), 0)];
+        let line = encode_obs_hello(7, &seqs);
+        let (dropped, back) = decode_obs_hello(&line).unwrap();
+        assert_eq!(dropped, 7);
+        assert_eq!(back, seqs);
+        assert!(decode_obs_hello(r#"{"type":"hello-ok","version":4}"#).is_err());
+        assert!(decode_obs_hello(r#"{"type":"obs-hello","dropped":0}"#).is_err());
     }
 }

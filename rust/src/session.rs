@@ -50,6 +50,7 @@ use crate::evaluator::Evaluator;
 use crate::gp::{GpHyper, RemoteSurrogate, SharedSurrogate};
 use crate::history::{History, Measurement};
 use crate::objectives::ObjectiveSet;
+use crate::obs::{Event, EventSource};
 use crate::space::SearchSpace;
 
 /// Plateau stop: end the run after `window` consecutive completed trials
@@ -170,6 +171,78 @@ impl PlateauTracker {
 /// `Send` so whole sessions can run on [`SessionGroup`] threads.
 pub type TrialCallback = Box<dyn FnMut(&Trial, &Measurement) + Send>;
 
+/// The session's hook into the observability plane: one [`EventSource`]
+/// plus the incumbent tracking needed to decide when the front advanced.
+/// Every emission is non-blocking (see [`crate::obs`]) and near-free on
+/// a sink-less bus, so the tap rides the driver loop unconditionally
+/// once installed.
+struct EventTap {
+    src: EventSource,
+    /// Single-objective incumbent (front-advanced = new strict best).
+    best: f64,
+}
+
+impl EventTap {
+    fn new(src: EventSource) -> EventTap {
+        EventTap { src, best: f64::NEG_INFINITY }
+    }
+
+    /// `ask-start` before the engine call; returns the timing anchor.
+    fn ask_start(&self, want: usize) -> Instant {
+        self.src.emit(Event::AskStart { want });
+        Instant::now()
+    }
+
+    /// `ask-end` + one `trial-issued` per issued trial.
+    fn asked(&self, t0: Instant, trials: &[Trial]) {
+        self.src.emit(Event::AskEnd {
+            issued: trials.len(),
+            ns: t0.elapsed().as_nanos() as u64,
+        });
+        for t in trials {
+            self.src.emit(Event::TrialIssued { trial: t.id });
+        }
+    }
+
+    /// `trial-measured` (the full replayable payload, read back off the
+    /// just-pushed history row), then front tracking: single-objective
+    /// runs advance on a strict new best; multi-objective runs advance
+    /// when the new point is non-dominated, and every measurement
+    /// re-states the dominated hypervolume (the reference point is
+    /// history-derived, so HV can move even when the front does not —
+    /// see `History::hypervolume_auto`). Skipped entirely — including
+    /// the front recomputation — while the bus has no sink.
+    fn measured(&mut self, history: &History) {
+        if !self.src.enabled() {
+            return;
+        }
+        let e = history.last().expect("EventTap::measured before any push");
+        self.src.emit(Event::TrialMeasured {
+            trial: e.trial_id,
+            config: e.config.clone(),
+            value: e.value,
+            cost_s: e.cost_s,
+            objectives: e.objectives.clone(),
+        });
+        if e.objectives.is_empty() {
+            if e.value > self.best {
+                self.best = e.value;
+                self.src.emit(Event::FrontAdvanced { trial: e.trial_id, front_size: 1 });
+            }
+        } else {
+            let trial_id = e.trial_id;
+            let newest = e.iteration;
+            let front = history.pareto_front();
+            if front.iter().any(|f| f.iteration == newest) {
+                self.src.emit(Event::FrontAdvanced { trial: trial_id, front_size: front.len() });
+            }
+            if let Some(hv) = history.hypervolume_auto(crate::obs::dashboard::HV_MARGIN) {
+                self.src.emit(Event::Hypervolume { hv });
+            }
+        }
+    }
+}
+
 /// The tuning driver: engine + evaluator pool + budget (module docs).
 pub struct TuningSession {
     tuner: Box<dyn Tuner + Send>,
@@ -182,6 +255,8 @@ pub struct TuningSession {
     /// [`History`], so Pareto fronts and hypervolume curves are readable
     /// straight off the returned history.
     objectives: Option<ObjectiveSet>,
+    /// Observability tap (see [`crate::obs`]); None = zero overhead.
+    events: Option<EventTap>,
 }
 
 impl TuningSession {
@@ -197,7 +272,20 @@ impl TuningSession {
             on_trial: None,
             stop_reason: None,
             objectives: None,
+            events: None,
         }
+    }
+
+    /// Emit the session's lifecycle onto the observability plane:
+    /// `ask-start`/`ask-end` around every engine call, one
+    /// `trial-issued` + `trial-measured` per evaluation (the measured
+    /// payload replays into a bit-identical [`History`]), and
+    /// `front-advanced`/`hypervolume` as the incumbent or the
+    /// non-dominated front moves. All emissions are non-blocking; a
+    /// sink-less bus costs one atomic load per event.
+    pub fn with_events(mut self, source: EventSource) -> Self {
+        self.events = Some(EventTap::new(source));
+        self
     }
 
     /// Stream every completed trial through `callback`.
@@ -277,7 +365,12 @@ impl TuningSession {
             if let Some(reason) = Self::stopped(&self.budget, history.len(), start, &tracker) {
                 return Ok((history, reason));
             }
-            let Some(trial) = self.tuner.ask(1).pop() else {
+            let t0 = self.events.as_ref().map(|tap| tap.ask_start(1));
+            let batch = self.tuner.ask(1);
+            if let (Some(tap), Some(t0)) = (&self.events, t0) {
+                tap.asked(t0, &batch);
+            }
+            let Some(trial) = batch.into_iter().next() else {
                 return Ok((history, StopReason::EngineExhausted));
             };
             let m = evaluator.measure(&trial.config)?;
@@ -294,6 +387,9 @@ impl TuningSession {
                 None => Vec::new(),
             };
             history.push_trial_multi(trial.id, trial.config.clone(), &m, objectives);
+            if let Some(tap) = &mut self.events {
+                tap.measured(&history);
+            }
             if let Some(cb) = &mut self.on_trial {
                 cb(&trial, &m);
             }
@@ -308,6 +404,7 @@ impl TuningSession {
         let tuner = &mut self.tuner;
         let on_trial = &mut self.on_trial;
         let objectives = self.objectives.clone();
+        let events = &mut self.events;
         let evaluators = &mut self.evaluators;
 
         std::thread::scope(|scope| -> Result<(History, StopReason)> {
@@ -359,7 +456,12 @@ impl TuningSession {
                     .unwrap_or(usize::MAX);
                 let want = room.min(capped);
                 if want > 0 {
-                    for trial in tuner.ask(want) {
+                    let t0 = events.as_ref().map(|tap| tap.ask_start(want));
+                    let batch = tuner.ask(want);
+                    if let (Some(tap), Some(t0)) = (events.as_ref(), t0) {
+                        tap.asked(t0, &batch);
+                    }
+                    for trial in batch {
                         if work_tx.send(trial).is_ok() {
                             in_flight += 1;
                         }
@@ -392,6 +494,9 @@ impl TuningSession {
                     None => Vec::new(),
                 };
                 history.push_trial_multi(trial.id, trial.config.clone(), &m, obj_vec);
+                if let Some(tap) = events.as_mut() {
+                    tap.measured(&history);
+                }
                 if let Some(cb) = on_trial.as_mut() {
                     cb(&trial, &m);
                 }

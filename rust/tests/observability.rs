@@ -1,0 +1,688 @@
+//! The observability plane's accounting, chaos and dashboard contracts:
+//!
+//! 1. Event accounting: a tuning session with `--events-file` emits
+//!    exactly one `trial-issued` and one `trial-measured` per
+//!    evaluation, with ids matching the returned `History`, and every
+//!    per-source sequence is gap-free and monotone.
+//! 2. Bitwise replay: the events file alone reconstructs the session's
+//!    regret curve and (for a multi-objective session) its Pareto front
+//!    and dominated hypervolume bit-identically — and the session's own
+//!    `hypervolume` events carry those same bits.
+//! 3. Daemon accounting: a fleet daemon run emits space-create / lease /
+//!    sync events matching exactly the requests served.
+//! 4. Chaos: a stalled TCP subscriber, a mid-stream disconnect and a
+//!    reconnect never block tells — the posterior matches a
+//!    no-subscriber run within 1e-9 (bitwise, in fact), overflow is
+//!    visible through the `dropped` counter, and the reconnecting
+//!    subscriber resumes at the advertised sequence.
+//! 5. The dashboard renders live frames from both a file and a socket.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use tftune::algorithms::{Algorithm, BayesOpt};
+use tftune::config::TuneConfig;
+use tftune::evaluator::Evaluator;
+use tftune::gp::{GpHyper, SharedSurrogate};
+use tftune::history::Measurement;
+use tftune::obs::dashboard::{
+    follow_file, follow_socket, replay_history, DashOptions, DashboardState, HV_MARGIN,
+};
+use tftune::obs::{
+    decode_event_record, read_events_file, Event, EventBus, EventPublisher, EventRecord,
+    FileSink,
+};
+use tftune::objectives::{ObjectiveSet, Scalarization};
+use tftune::server::proto::{
+    decode_obs_hello, decode_surrogate_response, encode_obs_subscribe,
+    encode_surrogate_request, SurrogateRequest, SurrogateResponse, PROTOCOL_VERSION,
+};
+use tftune::server::{FleetOptions, TargetServer};
+use tftune::session::{Budget, TuningSession};
+use tftune::sim::ModelId;
+use tftune::space::{threading_space, Config, ParamDef, SearchSpace};
+use tftune::util::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tftune_obs_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Per-source sequences must be 0..n with no gap and no reorder — a gap
+/// is a dropped record, and none of these runs is allowed to drop.
+fn assert_gap_free(records: &[EventRecord]) {
+    let mut next: BTreeMap<&str, u64> = BTreeMap::new();
+    for r in records {
+        let cursor = next.entry(r.source.as_str()).or_insert(0);
+        assert_eq!(
+            r.seq, *cursor,
+            "source {:?} jumped to seq {} (expected {}): a record was dropped or reordered",
+            r.source, r.seq, *cursor
+        );
+        *cursor += 1;
+    }
+}
+
+/// Like [`assert_gap_free`] but order-insensitive: concurrent emitters
+/// (daemon handler threads) can interleave between taking a sequence
+/// number and enqueueing, so only completeness is deterministic there.
+fn assert_seqs_complete(records: &[EventRecord]) {
+    let mut per_source: BTreeMap<&str, Vec<u64>> = BTreeMap::new();
+    for r in records {
+        per_source.entry(r.source.as_str()).or_default().push(r.seq);
+    }
+    for (source, mut seqs) in per_source {
+        seqs.sort_unstable();
+        let want: Vec<u64> = (0..seqs.len() as u64).collect();
+        assert_eq!(seqs, want, "source {source:?} has a sequence gap or duplicate");
+    }
+}
+
+fn events_of<'a>(records: &'a [EventRecord], kind: &str) -> Vec<&'a EventRecord> {
+    records.iter().filter(|r| r.event.kind() == kind).collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1 + 2 (single-objective): session accounting and regret-curve replay.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_events_account_for_every_evaluation_and_replay_bitwise() {
+    let dir = tmp_dir("session");
+    let path = dir.join("events.jsonl");
+    let cfg = TuneConfig {
+        model: ModelId::NcfFp32,
+        algorithm: Algorithm::Bo,
+        iterations: 18,
+        seed: 5,
+        events_file: Some(path.clone()),
+        ..Default::default()
+    };
+    let history = cfg.run().unwrap();
+    assert_eq!(history.len(), 18);
+
+    let records = read_events_file(&path).unwrap();
+    assert_gap_free(&records);
+
+    // Exactly one trial-issued and one trial-measured per evaluation,
+    // and the id sets match the history's engine-assigned trial ids.
+    let issued = events_of(&records, "trial-issued");
+    let measured = events_of(&records, "trial-measured");
+    assert_eq!(issued.len(), history.len());
+    assert_eq!(measured.len(), history.len());
+    let ids = |evs: &[&EventRecord]| -> Vec<u64> {
+        let mut ids: Vec<u64> = evs
+            .iter()
+            .map(|r| match &r.event {
+                Event::TrialIssued { trial } | Event::TrialMeasured { trial, .. } => *trial,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        ids.sort_unstable();
+        ids
+    };
+    let mut want: Vec<u64> = history.iter().map(|e| e.trial_id).collect();
+    want.sort_unstable();
+    assert_eq!(ids(&issued), want, "trial-issued ids diverge from the history");
+    assert_eq!(ids(&measured), want, "trial-measured ids diverge from the history");
+
+    // The serial loop asks once per evaluation; every ask-start has its
+    // ask-end.
+    assert_eq!(events_of(&records, "ask-start").len(), events_of(&records, "ask-end").len());
+
+    // Bitwise replay: the events file alone rebuilds the history —
+    // configs, values, costs, trial ids, and therefore the regret curve.
+    let replayed = replay_history(&records);
+    assert_eq!(replayed.len(), history.len());
+    for (a, b) in replayed.iter().zip(history.iter()) {
+        assert_eq!(a.trial_id, b.trial_id);
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+        assert_eq!(a.cost_s.to_bits(), b.cost_s.to_bits());
+    }
+    let curve_bits =
+        |h: &tftune::History| -> Vec<u64> { h.best_curve().iter().map(|v| v.to_bits()).collect() };
+    assert_eq!(
+        curve_bits(&replayed),
+        curve_bits(&history),
+        "the replayed regret curve is not bit-identical"
+    );
+
+    // Single-objective front tracking: front-advanced fires exactly on
+    // the strict improvements of the best-so-far curve.
+    let curve = history.best_curve();
+    let strict_improvements = 1 + curve.windows(2).filter(|w| w[1] > w[0]).count();
+    assert_eq!(events_of(&records, "front-advanced").len(), strict_improvements);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 2 (multi-objective): Pareto front + hypervolume replay, bit for bit.
+// ---------------------------------------------------------------------------
+
+/// The synthetic bi-objective target from `tests/multi_objective.rs`:
+/// `u[0]` trades throughput against p99, the other coordinates penalise
+/// both objectives.
+struct BiObjectiveTarget {
+    space: SearchSpace,
+}
+
+impl BiObjectiveTarget {
+    fn penalty(u: &[f64]) -> f64 {
+        u[1..].iter().map(|&v| (v - 0.75) * (v - 0.75)).sum::<f64>()
+    }
+}
+
+impl Evaluator for BiObjectiveTarget {
+    fn evaluate(&mut self, config: &Config) -> anyhow::Result<f64> {
+        let u = self.space.to_unit(config);
+        Ok(10.0 * u[0] + 5.0 - 4.0 * Self::penalty(&u))
+    }
+
+    fn measure(&mut self, config: &Config) -> anyhow::Result<Measurement> {
+        let u = self.space.to_unit(config);
+        let tp = 10.0 * u[0] + 5.0 - 4.0 * Self::penalty(&u);
+        let p99 = 2.0 + 8.0 * u[0] * u[0] + 4.0 * Self::penalty(&u);
+        Ok(Measurement::new(tp).with_cost_s(0.001).with_metadata("p99", p99))
+    }
+
+    fn describe(&self) -> String {
+        "synthetic-bi-objective".into()
+    }
+}
+
+#[test]
+fn multi_objective_events_replay_front_and_hypervolume_bitwise() {
+    let dir = tmp_dir("pareto");
+    let path = dir.join("events.jsonl");
+    let space = threading_space(64, 1024, 64);
+    let set = ObjectiveSet::parse("throughput,p99:min").unwrap();
+    let bus = EventBus::new();
+    bus.attach(Box::new(FileSink::create(&path).unwrap()));
+    let tuner = Box::new(
+        BayesOpt::new(space.clone(), 23).with_objectives(set.clone(), Scalarization::Smsego),
+    );
+    let mut session = TuningSession::new(
+        tuner,
+        vec![Box::new(BiObjectiveTarget { space })],
+        Budget::evaluations(25),
+    )
+    .with_objectives(set)
+    .with_events(bus.source("session"));
+    let history = session.run().unwrap();
+    bus.flush();
+    assert_eq!(bus.dropped(), 0, "a local file sink must never drop");
+
+    let records = read_events_file(&path).unwrap();
+    assert_gap_free(&records);
+
+    // The replayed history reproduces the live Pareto front exactly.
+    let replayed = replay_history(&records);
+    let front_ids = |h: &tftune::History| -> Vec<u64> {
+        h.pareto_front().iter().map(|e| e.trial_id).collect()
+    };
+    assert_eq!(front_ids(&replayed), front_ids(&history), "replayed Pareto front diverged");
+
+    // And the dominated hypervolume, bit for bit — from the file alone.
+    let hv_live = history.hypervolume_auto(HV_MARGIN).expect("live hv");
+    let hv_replay = replayed.hypervolume_auto(HV_MARGIN).expect("replayed hv");
+    assert_eq!(hv_live.to_bits(), hv_replay.to_bits(), "replayed hypervolume is not bit-identical");
+
+    // Every measurement restated the hypervolume; the last emission
+    // carries the final value's exact bits.
+    let hv_events = events_of(&records, "hypervolume");
+    assert_eq!(hv_events.len(), history.len());
+    let Event::Hypervolume { hv } = hv_events.last().unwrap().event else { unreachable!() };
+    assert_eq!(hv.to_bits(), hv_live.to_bits(), "the hypervolume event stream drifted");
+
+    // The last front-advanced event's size matches the live front.
+    let fronts = events_of(&records, "front-advanced");
+    assert!(!fronts.is_empty(), "a 25-trial Pareto session never advanced its front");
+    let Event::FrontAdvanced { front_size, .. } = fronts.last().unwrap().event else {
+        unreachable!()
+    };
+    assert_eq!(front_size, history.pareto_front().len());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 3: daemon accounting — space lifecycle, leases, served syncs.
+// ---------------------------------------------------------------------------
+
+struct Raw {
+    s: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Raw {
+    fn connect(addr: SocketAddr) -> Raw {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let r = BufReader::new(s.try_clone().unwrap());
+        Raw { s, r }
+    }
+
+    fn send(&mut self, req: &SurrogateRequest) {
+        writeln!(self.s, "{}", encode_surrogate_request(req)).unwrap();
+    }
+
+    fn roundtrip(&mut self, req: &SurrogateRequest) -> SurrogateResponse {
+        self.send(req);
+        let mut line = String::new();
+        self.r.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "daemon hung up");
+        decode_surrogate_response(line.trim_end()).unwrap()
+    }
+
+    fn hello(&mut self, space: &SearchSpace) {
+        match self.roundtrip(&SurrogateRequest::Hello {
+            version: PROTOCOL_VERSION,
+            fingerprint: Some(space.fingerprint()),
+            dim: Some(space.dim()),
+        }) {
+            SurrogateResponse::HelloOk { .. } => {}
+            other => panic!("hello refused: {other:?}"),
+        }
+    }
+
+    /// Unbounded sync — the barrier that proves preceding tells landed.
+    fn sync(&mut self) -> usize {
+        match self.roundtrip(&SurrogateRequest::SyncFactor {
+            from_n: 0,
+            max_rows: None,
+            quantise: false,
+        }) {
+            SurrogateResponse::FactorDelta { delta, .. } => delta.total_n,
+            other => panic!("unexpected sync response: {other:?}"),
+        }
+    }
+}
+
+fn shutdown_daemon(addr: SocketAddr) {
+    use tftune::server::proto::{encode_request, Request};
+    let space = threading_space(64, 1024, 64);
+    if let Ok(mut s) = TcpStream::connect(addr) {
+        let _ = writeln!(s, "{}", encode_request(&Request::Shutdown, &space));
+    }
+}
+
+/// Poll `read_events_file` until `pred` holds (the daemon's handler
+/// threads race the test on connection-close events).
+fn wait_for_events(
+    bus: &EventBus,
+    path: &std::path::Path,
+    pred: impl Fn(&[EventRecord]) -> bool,
+) -> Vec<EventRecord> {
+    for _ in 0..2000 {
+        bus.flush();
+        let records = read_events_file(path).unwrap();
+        if pred(&records) {
+            return records;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("daemon events never reached the expected state");
+}
+
+#[test]
+fn daemon_events_match_served_requests_exactly() {
+    let dir = tmp_dir("daemon");
+    let path = dir.join("daemon_events.jsonl");
+    let bus = EventBus::new();
+    bus.attach(Box::new(FileSink::create(&path).unwrap()));
+
+    let (server, _factor) =
+        TargetServer::bind_surrogate_only("127.0.0.1:0", GpHyper::default()).unwrap();
+    let server = server
+        .with_fleet_options(FleetOptions::default())
+        .unwrap()
+        .with_events(bus.source("daemon"));
+    let (addr, handle) = server.spawn().unwrap();
+
+    let space_a = SearchSpace::new(vec![ParamDef::new("oa0", 1, 32, 1), ParamDef::new("oa1", 1, 32, 1)]);
+    let space_b = SearchSpace::new(vec![
+        ParamDef::new("ob0", 1, 32, 1),
+        ParamDef::new("ob1", 1, 32, 1),
+        ParamDef::new("ob2", 1, 32, 1),
+    ]);
+
+    let mut rng = Rng::new(31);
+    let mut c1 = Raw::connect(addr);
+    c1.hello(&space_a); // lazily creates space A
+    let n_a = 5usize;
+    for _ in 0..n_a {
+        c1.send(&SurrogateRequest::TellObs {
+            x: (0..space_a.dim()).map(|_| rng.f64()).collect(),
+            y: rng.f64(),
+            ys: Vec::new(),
+        });
+    }
+    assert_eq!(c1.sync(), n_a); // barrier + one served sync-factor
+
+    // Two leases on this connection: the first is retracted explicitly,
+    // the second expires when the connection dies.
+    let lease_points = |k: usize, rng: &mut Rng| -> Vec<(Vec<f64>, f64)> {
+        (0..k).map(|_| ((0..2).map(|_| rng.f64()).collect(), 0.0)).collect()
+    };
+    let id1 = match c1.roundtrip(&SurrogateRequest::AskLease { points: lease_points(2, &mut rng) })
+    {
+        SurrogateResponse::Lease { id } => id,
+        other => panic!("unexpected lease response: {other:?}"),
+    };
+    match c1.roundtrip(&SurrogateRequest::RetractLease { id: id1 }) {
+        SurrogateResponse::LeaseOk { .. } | SurrogateResponse::HyperOk => {}
+        other => panic!("unexpected retract response: {other:?}"),
+    }
+    match c1.roundtrip(&SurrogateRequest::AskLease { points: lease_points(1, &mut rng) }) {
+        SurrogateResponse::Lease { .. } => {}
+        other => panic!("unexpected lease response: {other:?}"),
+    }
+    drop(c1); // the unretracted lease expires on close
+
+    let mut c2 = Raw::connect(addr);
+    c2.hello(&space_b); // lazily creates space B
+    assert_eq!(c2.sync(), 0); // second served sync-factor
+    drop(c2);
+
+    // Expect 2 spaces created, 2 leases published, 2 leases expired
+    // (one retract, one connection close), 2 served syncs.
+    let records = wait_for_events(&bus, &path, |recs| {
+        let expired: usize = recs
+            .iter()
+            .filter_map(|r| match r.event {
+                Event::LeaseExpired { leases } => Some(leases),
+                _ => None,
+            })
+            .sum();
+        expired >= 2
+    });
+    shutdown_daemon(addr);
+    let _ = handle.join();
+
+    assert_seqs_complete(&records);
+    assert!(records.iter().all(|r| r.source == "daemon"));
+
+    let created: Vec<(u64, usize)> = records
+        .iter()
+        .filter_map(|r| match r.event {
+            Event::SpaceCreated { fingerprint, dim } => Some((fingerprint, dim)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        created,
+        vec![(space_a.fingerprint(), 2), (space_b.fingerprint(), 3)],
+        "space-created events diverge from the hellos served"
+    );
+
+    let published: Vec<usize> = records
+        .iter()
+        .filter_map(|r| match r.event {
+            Event::LeasePublished { points, .. } => Some(points),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(published, vec![2, 1], "lease-published events diverge from the ask-leases");
+
+    let expired: usize = records
+        .iter()
+        .filter_map(|r| match r.event {
+            Event::LeaseExpired { leases } => Some(leases),
+            _ => None,
+        })
+        .sum();
+    assert_eq!(expired, 2, "one retract + one connection close must expire 2 leases");
+
+    let syncs: Vec<usize> = records
+        .iter()
+        .filter_map(|r| match &r.event {
+            Event::SyncFactor { rows, bytes, .. } => {
+                assert!(*bytes > 0, "a served sync crossed zero wire bytes");
+                Some(*rows)
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(syncs, vec![n_a, 0], "served sync-factor events diverge from the syncs");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 4: chaos — stalled subscriber, disconnect, overflow, resume.
+// ---------------------------------------------------------------------------
+
+/// Connect a subscriber, perform the handshake, return the socket (kept
+/// open, unread — the stall) plus the decoded hello.
+fn subscribe(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>, u64, Vec<(String, u64)>) {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut w = s.try_clone().unwrap();
+    writeln!(w, "{}", encode_obs_subscribe()).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut hello = String::new();
+    r.read_line(&mut hello).unwrap();
+    let (dropped, seqs) = decode_obs_hello(hello.trim_end()).unwrap();
+    (s, r, dropped, seqs)
+}
+
+#[test]
+fn stalled_and_dying_subscribers_never_block_tells_and_reconnects_resume() {
+    let bus = EventBus::new();
+    // A 1-slot per-subscriber queue: once the stalled socket's send
+    // buffer fills, the writer thread blocks and the very next event
+    // overflows the queue into the dropped counter.
+    let publisher = EventPublisher::bind_with_queue("127.0.0.1:0", &bus, 1).unwrap();
+
+    let observed = SharedSurrogate::new(GpHyper::default());
+    observed.set_event_source(bus.source("surrogate"));
+    let clean = SharedSurrogate::new(GpHyper::default());
+
+    // Subscriber A handshakes, then never reads again: the stall.
+    let (stalled_sock, _stalled_reader, dropped0, _) = subscribe(publisher.addr());
+    assert_eq!(dropped0, 0);
+    std::thread::sleep(Duration::from_millis(50)); // let the sink attach
+
+    // Ballast: fat records (large config payloads) wedge the stalled
+    // subscriber's socket buffer far faster than surrogate-tell lines
+    // would, making the overflow deterministic.
+    let ballast = bus.source("ballast");
+    let fat = Event::TrialMeasured {
+        trial: 0,
+        config: vec![7; 8192],
+        value: 1.0,
+        cost_s: 0.0,
+        objectives: Vec::new(),
+    };
+
+    let mut rng = Rng::new(99);
+    let d = 4usize;
+    let obs: Vec<(Vec<f64>, f64)> = (0..48)
+        .map(|_| {
+            let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+            let y = (2.0 * x[0]).sin() - x[3];
+            (x, y)
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    for (i, (x, y)) in obs.iter().enumerate() {
+        observed.tell(x.clone(), *y);
+        clean.tell(x.clone(), *y);
+        ballast.emit(fat.clone());
+        if i % 8 == 7 {
+            // Drains must be as unblockable as tells.
+            drop(observed.lock());
+            drop(clean.lock());
+        }
+    }
+    for _ in 0..256 {
+        ballast.emit(fat.clone());
+    }
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(20),
+        "tells stalled behind a wedged subscriber ({elapsed:?})"
+    );
+
+    // Posterior parity with the no-subscriber run: bit-identical (a
+    // fortiori within the 1e-9 acceptance bound).
+    drop(observed.lock());
+    drop(clean.lock());
+    let bits = |s: &SharedSurrogate| -> Vec<u64> {
+        s.export_delta(0)
+            .unwrap()
+            .factor
+            .expect("factor present")
+            .iter()
+            .map(|v| v.to_bits())
+            .collect()
+    };
+    assert_eq!(
+        bits(&observed),
+        bits(&clean),
+        "an observed surrogate diverged from the unobserved baseline"
+    );
+
+    // The overflow is visible: the stalled subscriber cost drops.
+    bus.flush();
+    assert!(bus.dropped() > 0, "a 1-slot queue behind a stalled socket must drop");
+
+    // Mid-stream disconnect: kill the stalled socket, keep telling.
+    drop(stalled_sock);
+    for (x, y) in &obs[..8] {
+        observed.tell(x.clone(), *y);
+        clean.tell(x.clone(), *y);
+    }
+    drop(observed.lock());
+    drop(clean.lock());
+    assert_eq!(bits(&observed), bits(&clean), "a dying subscriber corrupted the stream source");
+
+    // Reconnect: the hello advertises the cumulative drop counter and
+    // the current per-source next sequences — the resume point.
+    let (sock_b, mut reader_b, dropped_b, seqs_b) = subscribe(publisher.addr());
+    assert!(dropped_b > 0, "the reconnect hello must carry the cumulative drop counter");
+    let advertised = seqs_b
+        .iter()
+        .find(|(name, _)| name == "surrogate")
+        .map(|(_, next)| *next)
+        .expect("the hello must list the surrogate source");
+    let current = bus
+        .source_seqs()
+        .into_iter()
+        .find(|(name, _)| name == "surrogate")
+        .map(|(_, next)| next)
+        .unwrap();
+    assert_eq!(advertised, current, "the hello's resume point is stale");
+
+    // The next surrogate record it receives resumes at (or past — the
+    // attach can race one emission) the advertised sequence, and a
+    // hello-seeded dashboard reads no false gap from the skipped prefix.
+    let mut state = DashboardState::new();
+    state.seed_seqs(&seqs_b);
+    std::thread::sleep(Duration::from_millis(50));
+    let mut resumed = None;
+    'outer: for (x, y) in obs.iter().cycle().take(50) {
+        observed.tell(x.clone(), *y);
+        bus.flush();
+        loop {
+            let mut line = String::new();
+            match reader_b.read_line(&mut line) {
+                Ok(0) => panic!("publisher hung up on the reconnected subscriber"),
+                Ok(_) => {
+                    let rec = decode_event_record(line.trim_end()).unwrap();
+                    state.apply(&rec);
+                    if rec.source == "surrogate" {
+                        resumed = Some(rec.seq);
+                        break 'outer;
+                    }
+                }
+                Err(_) => break, // timeout this round: emit again
+            }
+        }
+    }
+    let resumed = resumed.expect("the reconnected subscriber never received a surrogate record");
+    assert!(
+        resumed >= advertised,
+        "resumed at seq {resumed}, before the advertised {advertised}"
+    );
+    assert_eq!(
+        state.seq_gaps,
+        resumed - advertised,
+        "hello seeding must suppress the skipped prefix as false gaps"
+    );
+    drop(sock_b);
+    drop(publisher);
+}
+
+// ---------------------------------------------------------------------------
+// 5: the dashboard renders live from both sources.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dashboard_renders_live_from_file_and_socket() {
+    // File: one --once frame over a recorded stream.
+    let dir = tmp_dir("dash");
+    let path = dir.join("events.jsonl");
+    let cfg = TuneConfig {
+        model: ModelId::NcfFp32,
+        algorithm: Algorithm::Random,
+        iterations: 6,
+        seed: 1,
+        events_file: Some(path.clone()),
+        ..Default::default()
+    };
+    let history = cfg.run().unwrap();
+    let mut out = Vec::new();
+    follow_file(&path, &DashOptions { once: true, ..DashOptions::default() }, &mut out).unwrap();
+    let frame = String::from_utf8(out).unwrap();
+    assert!(frame.contains("tftune dashboard"), "{frame}");
+    assert!(frame.contains("measured"), "{frame}");
+    assert!(!frame.contains('\u{1b}'), "--once frames must be plain text");
+    let best = history.best().unwrap().value;
+    assert!(frame.contains(&format!("{best:.6}")), "best value missing from: {frame}");
+
+    // Socket: a live publisher feeds a bounded follow_socket session.
+    let bus = EventBus::new();
+    let publisher = EventPublisher::bind("127.0.0.1:0", &bus).unwrap();
+    let addr = publisher.addr().to_string();
+    let src = bus.source("session");
+    let feeder = std::thread::spawn(move || {
+        for i in 0..60u64 {
+            src.emit(Event::TrialIssued { trial: i });
+            src.emit(Event::TrialMeasured {
+                trial: i,
+                config: vec![1, 2],
+                value: i as f64,
+                cost_s: 0.0,
+                objectives: Vec::new(),
+            });
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    });
+    let mut out = Vec::new();
+    let state = follow_socket(
+        &addr,
+        &DashOptions { refresh_ms: 50, once: false, max_seconds: Some(1.0) },
+        &mut out,
+    )
+    .unwrap();
+    feeder.join().unwrap();
+    assert!(state.measured > 0, "the live dashboard saw no measurements over the socket");
+    assert_eq!(state.seq_gaps, 0);
+    let live = String::from_utf8(out).unwrap();
+    assert!(live.contains("tftune dashboard"), "no frame rendered");
+    assert!(live.contains('\u{1b}'), "live frames must clear the screen");
+    drop(publisher);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -9,6 +9,12 @@
 //! never a corrupted sibling space. After the storm, a baseline space's
 //! factor must be bit-identical to its pre-fuzz state and a well-formed
 //! client must get normal service.
+//!
+//! A second storm aims the same contract at the read-only event plane
+//! (`--events-addr`): hostile subscribes, truncated/oversized frames and
+//! raw binary noise each cost one typed `error` (or a silent close) on
+//! their own connection, while honest subscribers and the surrogate
+//! plane keep working, bit-for-bit.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -361,4 +367,244 @@ fn malformed_frames_never_crash_the_daemon_or_touch_sibling_spaces() {
     writeln!(s, "{}", encode_request(&Request::Shutdown, &shutdown_space)).unwrap();
     drop(s);
     let _ = handle.join();
+}
+
+// ---------------------------------------------------------------------------
+// Event-plane storm (ISSUE 10): the same blast-radius contract, aimed at
+// the `--events-addr` publisher. The event plane is read-only — the ONLY
+// frame it accepts is `{"type":"subscribe"}` — so every hostile line owes
+// exactly one typed `error` response (or, for oversized/unterminated
+// frames, a silent close), strictly per-connection. The surrogate plane
+// next door must never notice.
+// ---------------------------------------------------------------------------
+
+/// Send one hostile line to the events port and assert the contract: one
+/// decodable `error` response, then EOF. Never a crash, never a hang.
+fn expect_obs_error_then_close(events_addr: SocketAddr, line: &str, ctx: &str) {
+    let mut s = TcpStream::connect(events_addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    s.set_read_timeout(Some(READ_TIMEOUT)).unwrap();
+    writeln!(s, "{line}").unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut resp = String::new();
+    r.read_line(&mut resp).unwrap_or_else(|e| panic!("no error line after {ctx}: {e}"));
+    assert!(!resp.is_empty(), "publisher hung up without the error line after {ctx}");
+    match decode_surrogate_response(resp.trim_end()) {
+        Ok(SurrogateResponse::Error { .. }) => {}
+        other => panic!("expected an error line after {ctx}, got {other:?} ({resp:?})"),
+    }
+    // One error, then close: the publisher never streams to a hostile peer.
+    let mut rest = String::new();
+    match r.read_line(&mut rest) {
+        Ok(0) | Err(_) => {}
+        Ok(_) => panic!("publisher kept talking after the error line ({ctx}): {rest:?}"),
+    }
+}
+
+/// Subscribe properly, read the obs-hello, then prove the stream is live
+/// by emitting marker events until one arrives. Emission retries because
+/// the publisher attaches the subscriber's sink just *after* the hello —
+/// a marker sent in that window can legitimately be missed.
+fn probe_live_subscriber(events_addr: SocketAddr, bus: &tftune::obs::EventBus, ctx: &str) {
+    use tftune::obs::{decode_event_record, Event};
+    use tftune::server::proto::{decode_obs_hello, encode_obs_subscribe};
+
+    let mut s = TcpStream::connect(events_addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    s.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+    writeln!(s, "{}", encode_obs_subscribe()).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut hello = String::new();
+    r.read_line(&mut hello).unwrap_or_else(|e| panic!("no obs-hello ({ctx}): {e}"));
+    decode_obs_hello(hello.trim_end())
+        .unwrap_or_else(|e| panic!("undecodable obs-hello ({ctx}): {e} ({hello:?})"));
+
+    let marker = bus.source("fuzz-probe");
+    for attempt in 0..100u64 {
+        marker.emit(Event::TrialIssued { trial: attempt });
+        bus.flush();
+        let mut line = String::new();
+        match r.read_line(&mut line) {
+            Ok(0) => panic!("publisher hung up on a well-formed subscriber ({ctx})"),
+            Ok(_) => {
+                let rec = decode_event_record(line.trim_end())
+                    .unwrap_or_else(|e| panic!("undecodable event line ({ctx}): {e} ({line:?})"));
+                if rec.source == "fuzz-probe" {
+                    return; // the stream is live end-to-end
+                }
+                // Someone else's event (e.g. the daemon's) — also proof of life.
+                return;
+            }
+            Err(_) => continue, // timeout: marker raced the attach; re-emit
+        }
+    }
+    panic!("well-formed subscriber never received an event ({ctx})");
+}
+
+#[test]
+fn event_plane_storm_stays_per_connection_and_never_touches_the_surrogate_plane() {
+    // One bus feeds both the TCP publisher and the daemon's own events.
+    let bus = tftune::obs::EventBus::new();
+    let mut publisher = tftune::obs::EventPublisher::bind("127.0.0.1:0", &bus).unwrap();
+    let events_addr = publisher.addr();
+
+    let (server, _factor) =
+        TargetServer::bind_surrogate_only("127.0.0.1:0", GpHyper::default()).unwrap();
+    let server = server
+        .with_fleet_options(FleetOptions::default())
+        .unwrap()
+        .with_events(bus.source("daemon"));
+    let (addr, handle) = server.spawn().unwrap();
+    let addr_s = addr.to_string();
+
+    // Seed the baseline space the storm must not corrupt.
+    let space = baseline_space();
+    let mut rng = Rng::new(0x0b5e48);
+    let seeded: Vec<(Vec<f64>, f64)> = (0..6)
+        .map(|_| {
+            let x: Vec<f64> = (0..space.dim()).map(|_| rng.f64()).collect();
+            let y = (2.0 * x[1]).cos() + 0.25 * x[0];
+            (x, y)
+        })
+        .collect();
+    let good = RemoteSurrogate::connect_space(&addr_s, &space).unwrap();
+    for (x, y) in &seeded {
+        good.tell(x.clone(), *y);
+    }
+    drop(good.lock());
+    let baseline_bits = {
+        let mut c = Fuzz::connect(addr);
+        c.hello(&space);
+        factor_bits(&c.probe("event-storm baseline capture"))
+    };
+
+    // The storm. Every iteration is a fresh connection to the EVENTS
+    // port with one hostile frame; every 8th iteration a well-formed
+    // subscriber proves the plane still serves honest peers.
+    for i in 0..120 {
+        match rng.index(6) {
+            // Printable garbage that was never JSON.
+            0 => {
+                let n = 1 + rng.index(120);
+                let junk: String = (0..n)
+                    .map(|_| {
+                        let c = b'!' + (rng.index(93) as u8);
+                        if c == b'"' || c == b'\\' { '.' } else { c as char }
+                    })
+                    .collect();
+                expect_obs_error_then_close(events_addr, &junk, &format!("garbage (iter {i})"));
+            }
+            // A strict prefix of the one legitimate frame: unbalanced
+            // JSON, so the decoder must refuse it.
+            1 => {
+                let full = tftune::server::proto::encode_obs_subscribe();
+                let cut = 1 + rng.index(full.len() - 1);
+                expect_obs_error_then_close(
+                    events_addr,
+                    &full[..cut],
+                    &format!("truncated subscribe (iter {i})"),
+                );
+            }
+            // Well-formed JSON of the wrong type — including frames that
+            // are perfectly legal on the surrogate plane next door. The
+            // event plane is read-only; all of them are hostile here.
+            2 => {
+                let line = match rng.index(4) {
+                    0 => format!("{{\"type\":\"frobnicate\",\"n\":{}}}", rng.index(100)),
+                    1 => encode_surrogate_request(&SurrogateRequest::Hello {
+                        version: PROTOCOL_VERSION,
+                        fingerprint: Some(rng.next_u64()),
+                        dim: Some(3),
+                    }),
+                    2 => encode_surrogate_request(&SurrogateRequest::TellObs {
+                        x: (0..3).map(|_| rng.f64()).collect(),
+                        y: rng.f64(),
+                        ys: Vec::new(),
+                    }),
+                    _ => "{\"subscribe\":true}".to_string(),
+                };
+                expect_obs_error_then_close(
+                    events_addr,
+                    &line,
+                    &format!("wrong-plane frame (iter {i})"),
+                );
+            }
+            // An oversized, unterminated frame: past the cap the
+            // publisher calls it hostile and closes without a response.
+            3 => {
+                let mut s = TcpStream::connect(events_addr).unwrap();
+                s.set_read_timeout(Some(READ_TIMEOUT)).unwrap();
+                let blob = vec![b'a'; tftune::obs::OBS_MAX_SUBSCRIBE_LINE + 16];
+                // The publisher may close mid-write; a broken pipe here
+                // is the contract working, not a test failure.
+                let _ = s.write_all(&blob);
+                let _ = s.flush();
+                let mut r = BufReader::new(s.try_clone().unwrap());
+                let mut line = String::new();
+                match r.read_line(&mut line) {
+                    Ok(0) | Err(_) => {} // silent close, as specified
+                    Ok(_) => panic!(
+                        "publisher answered an oversized frame (iter {i}): {line:?}"
+                    ),
+                }
+            }
+            // Raw binary noise (newline-terminated so the read returns).
+            4 => {
+                let mut s = TcpStream::connect(events_addr).unwrap();
+                s.set_read_timeout(Some(READ_TIMEOUT)).unwrap();
+                let mut noise: Vec<u8> =
+                    (0..64).map(|_| (rng.index(255) as u8).wrapping_add(1)).collect();
+                noise.retain(|&b| b != b'\n');
+                noise.push(b'\n');
+                let _ = s.write_all(&noise);
+                let mut r = BufReader::new(s.try_clone().unwrap());
+                let mut line = String::new();
+                // Binary noise is either undecodable JSON (one error
+                // line) or — vanishingly — parses; never a crash/hang.
+                match r.read_line(&mut line) {
+                    Ok(0) | Err(_) => {}
+                    Ok(_) => {
+                        assert!(
+                            decode_surrogate_response(line.trim_end()).is_ok()
+                                || line.contains("obs-hello"),
+                            "publisher sent a malformed reply to binary noise (iter {i}): {line:?}"
+                        );
+                    }
+                }
+            }
+            // Connect and hang up without a word: must cost nothing.
+            _ => {
+                let s = TcpStream::connect(events_addr).unwrap();
+                drop(s);
+            }
+        }
+        if i % 8 == 7 {
+            probe_live_subscriber(events_addr, &bus, &format!("iter {i}"));
+        }
+    }
+
+    // The surrogate plane never noticed: baseline factor bit-identical,
+    // and a well-formed client still gets normal service.
+    let after_bits = {
+        let mut c = Fuzz::connect(addr);
+        c.hello(&space);
+        factor_bits(&c.probe("event-storm post capture"))
+    };
+    assert_eq!(after_bits, baseline_bits, "the event-plane storm corrupted the baseline factor");
+    let good = RemoteSurrogate::connect_space(&addr_s, &space).unwrap();
+    good.tell(vec![0.25, 0.75, 0.5], -0.5);
+    assert_eq!(
+        good.lock().len(),
+        seeded.len() + 1,
+        "the daemon stopped serving after the event-plane storm"
+    );
+    drop(good);
+
+    use tftune::server::proto::{encode_request, Request};
+    let shutdown_space = threading_space(64, 1024, 64);
+    let mut s = TcpStream::connect(addr).unwrap();
+    writeln!(s, "{}", encode_request(&Request::Shutdown, &shutdown_space)).unwrap();
+    drop(s);
+    let _ = handle.join();
+    publisher.stop();
 }

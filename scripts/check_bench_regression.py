@@ -3,10 +3,13 @@
 
 Compares the committed BENCH_gp.json against the previous commit's copy
 (``git show HEAD^:BENCH_gp.json``) and fails if any shared bench entry's
-``mean_ns`` regressed by more than THRESHOLD. New entries (no previous
-measurement) and removed entries pass. Files marked ``"estimated": true``
-— a baseline written without hardware to measure on — are skipped on
-either side: estimates are placeholders, not numbers to gate against.
+``mean_ns`` regressed by more than THRESHOLD, or if an entry present in
+the previous baseline disappeared — a vanished row usually means a bench
+was silently dropped, which is exactly the regression this guard exists
+to catch. New entries (no previous measurement) pass. Files marked
+``"estimated": true`` — a baseline written without hardware to measure
+on — are skipped on either side: estimates are placeholders, not numbers
+to gate against.
 
 Exit codes: 0 ok / skipped, 1 regression, 2 malformed input.
 """
@@ -62,10 +65,12 @@ def main() -> int:
             return 2
 
     failures = []
+    removed = []
     for name, prev_entry in sorted(prev["benches"].items()):
         cur_entry = cur["benches"].get(name)
         if cur_entry is None:
-            print(f"  {name}: removed (ok)")
+            print(f"  {name}: REMOVED from baseline")
+            removed.append(name)
             continue
         try:
             prev_ns = float(prev_entry["mean_ns"])
@@ -82,6 +87,14 @@ def main() -> int:
         if ratio > 1.0 + THRESHOLD:
             failures.append((name, ratio))
 
+    if removed:
+        print(
+            f"\n{len(removed)} bench entr{'y' if len(removed) == 1 else 'ies'} "
+            f"disappeared from {BENCH_FILE} (present in the previous commit):",
+            file=sys.stderr,
+        )
+        for name in removed:
+            print(f"  {name}", file=sys.stderr)
     if failures:
         print(
             f"\n{len(failures)} bench entr{'y' if len(failures) == 1 else 'ies'} "
@@ -90,6 +103,7 @@ def main() -> int:
         )
         for name, ratio in failures:
             print(f"  {name}: {ratio:.2f}x", file=sys.stderr)
+    if removed or failures:
         return 1
     print("bench baseline within threshold")
     return 0
